@@ -1,0 +1,78 @@
+//! Ablation sweep (the shape of Table 3, plus extras the paper mentions in
+//! passing): every MethodConfig cell × bit width × group size on one model,
+//! reporting summed layer-wise loss and stage-by-stage wall-clock.
+//!
+//! Run: `cargo run --release --example ablation_sweep`
+
+use tsgo::calib::{calibration_batches, Corpus, CorpusKind};
+use tsgo::model::{ModelWeights, Preset};
+use tsgo::pipeline::{quantize_model, PipelineConfig};
+use tsgo::quant::{MethodConfig, QuantSpec};
+use tsgo::util::bench::Table;
+use tsgo::util::rng::Rng;
+
+fn main() -> tsgo::Result<()> {
+    let preset = std::env::args()
+        .nth(1)
+        .and_then(|s| Preset::parse(&s))
+        .unwrap_or(Preset::Tiny);
+    let cfg = preset.config();
+    println!(
+        "ablation on preset '{}' ({:.2}M params)",
+        preset.label(),
+        cfg.n_params() as f64 / 1e6
+    );
+
+    let fp = match tsgo::model::store::load_model(std::path::Path::new("model.tsr")) {
+        Ok(w) if w.config == cfg => w,
+        _ => {
+            let mut rng = Rng::new(3);
+            ModelWeights::init(cfg, &mut rng)
+        }
+    };
+    let corpus = Corpus::generate(CorpusKind::SynthWiki, 200_000, 1);
+    let (train_split, _) = corpus.split(0.1);
+    let calib = calibration_batches(train_split, 8, cfg.seq_len, 4, 3);
+
+    let mut table = Table::new(&[
+        "bits", "group", "stage1", "stage2", "layer loss", "Δ vs GPTQ", "time", "t_scales",
+        "t_gptq", "t_stage2",
+    ]);
+    for bits in [2u8, 3] {
+        for group in [64usize, 32] {
+            let mut base = None;
+            for method in [
+                MethodConfig::GPTQ,
+                MethodConfig::STAGE1_ONLY,
+                MethodConfig::STAGE2_ONLY,
+                MethodConfig::OURS,
+            ] {
+                let spec = QuantSpec::new(bits, group);
+                let (_, rep) =
+                    quantize_model(&fp, &calib, &PipelineConfig::new(spec, method))?;
+                let loss = rep.total_loss();
+                let delta = match base {
+                    None => {
+                        base = Some(loss);
+                        "—".to_string()
+                    }
+                    Some(b) => format!("{:+.1}%", (loss / b - 1.0) * 100.0),
+                };
+                table.row(vec![
+                    format!("{bits}"),
+                    format!("{group}"),
+                    if method.stage1 { "✓" } else { "" }.into(),
+                    if method.stage2 { "✓" } else { "" }.into(),
+                    format!("{loss:.4e}"),
+                    delta,
+                    tsgo::util::fmt_duration(rep.total_time),
+                    tsgo::util::fmt_duration(rep.time_scales),
+                    tsgo::util::fmt_duration(rep.time_gptq),
+                    tsgo::util::fmt_duration(rep.time_stage2),
+                ]);
+            }
+        }
+    }
+    table.print("ablation (Table-3 shape; loss = Σ layer-wise reconstruction loss)");
+    Ok(())
+}

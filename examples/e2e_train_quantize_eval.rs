@@ -1,0 +1,125 @@
+//! **End-to-end driver** — proves all three layers compose on a real small
+//! workload:
+//!
+//! 1. load the AOT artifacts (L2 JAX model + L1 Pallas kernels, compiled
+//!    through PJRT);
+//! 2. train a Llamette from scratch on the synthetic corpus with the fused
+//!    `train_step` artifact, logging the loss curve;
+//! 3. evaluate FP perplexity on both held-out corpora (artifact forward);
+//! 4. quantize with stock GPTQ and with the paper's method (L3 pipeline);
+//! 5. evaluate both quantized models (PPL + 0-shot) and print the
+//!    Table-1-shaped comparison.
+//!
+//! Run: `make artifacts && cargo run --release --example e2e_train_quantize_eval`
+//! (Results recorded in EXPERIMENTS.md.)
+
+use tsgo::calib::{calibration_batches, Corpus, CorpusKind};
+use tsgo::eval::tasks::{build_suite, task_suite};
+use tsgo::model::store;
+use tsgo::pipeline::{quantize_model, PipelineConfig};
+use tsgo::quant::{MethodConfig, QuantSpec};
+use tsgo::runtime::{Engine, TrainConfig};
+use tsgo::util::bench::Table;
+
+fn main() -> tsgo::Result<()> {
+    let steps: usize = std::env::var("TSGO_E2E_STEPS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(300);
+    let engine = Engine::open_default()
+        .ok_or_else(|| anyhow::anyhow!("artifacts missing — run `make artifacts` first"))?;
+    let cfg = engine.manifest.config;
+    println!(
+        "== e2e: train ({} steps) → quantize → eval on {:.2}M-param Llamette ==",
+        steps,
+        cfg.n_params() as f64 / 1e6
+    );
+
+    // ---- data ---------------------------------------------------------------
+    let wiki = Corpus::generate(CorpusKind::SynthWiki, 400_000, 1);
+    let c4 = Corpus::generate(CorpusKind::SynthC4, 200_000, 1);
+    let (train_split, wiki_test) = wiki.split(0.1);
+    let (_, c4_test) = c4.split(0.2);
+
+    // ---- train ----------------------------------------------------------------
+    let t0 = std::time::Instant::now();
+    let outcome = tsgo::runtime::train(
+        &engine,
+        train_split,
+        &TrainConfig { steps, seed: 7, log_every: 50 },
+    )?;
+    println!(
+        "trained in {} — loss {:.3} → {:.3}",
+        tsgo::util::fmt_duration(t0.elapsed()),
+        outcome.losses.first().unwrap(),
+        outcome.losses.last().unwrap()
+    );
+    let fp = outcome.weights;
+    store::save_model(std::path::Path::new("model.tsr"), &fp)?;
+
+    // ---- calibration + eval setup ------------------------------------------
+    let calib = calibration_batches(train_split, 16, cfg.seq_len, 4, 3);
+    let windows = 24;
+    let items = build_suite(&wiki, 20, 17);
+
+    let eval_ppl = |w: &tsgo::model::ModelWeights, data: &[u8]| -> f64 {
+        tsgo::runtime::perplexity_artifact(&engine, w, data, cfg.seq_len, windows)
+            .unwrap_or_else(|_| tsgo::eval::perplexity(w, data, cfg.seq_len, windows))
+    };
+
+    let mut table = Table::new(&[
+        "precision",
+        "method",
+        "synthwiki ppl",
+        "synthc4 ppl",
+        "0-shot avg",
+        "quant time",
+    ]);
+    let ppl_w = eval_ppl(&fp, wiki_test);
+    let ppl_c = eval_ppl(&fp, c4_test);
+    let zs = task_suite(&fp, &items);
+    table.row(vec![
+        "FP32".into(),
+        "baseline".into(),
+        format!("{ppl_w:.3}"),
+        format!("{ppl_c:.3}"),
+        format!("{:.2}", zs.average),
+        "-".into(),
+    ]);
+
+    // ---- quantize + eval ------------------------------------------------------
+    for bits in [2u8, 3] {
+        for method in [MethodConfig::GPTQ, MethodConfig::OURS] {
+            let spec = QuantSpec::new(bits, 64);
+            let t0 = std::time::Instant::now();
+            let (qm, report) =
+                quantize_model(&fp, &calib, &PipelineConfig::new(spec, method))?;
+            let dt = t0.elapsed();
+            let ppl_w = eval_ppl(&qm.weights, wiki_test);
+            let ppl_c = eval_ppl(&qm.weights, c4_test);
+            let zs = task_suite(&qm.weights, &items);
+            println!(
+                "  INT{bits} {:<8} layer-loss {:.3e}  ppl {:.2}/{:.2}",
+                method.label(),
+                report.total_loss(),
+                ppl_w,
+                ppl_c
+            );
+            table.row(vec![
+                format!("INT{bits}"),
+                method.label().into(),
+                format!("{ppl_w:.3}"),
+                format!("{ppl_c:.3}"),
+                format!("{:.2}", zs.average),
+                tsgo::util::fmt_duration(dt),
+            ]);
+            if bits == 2 && method == MethodConfig::OURS {
+                store::save_quantized(std::path::Path::new("model.q.tsr"), &qm)?;
+            }
+        }
+    }
+
+    table.print("e2e results (Table-1 shape, group=64)");
+    println!("checkpoints: model.tsr (FP), model.q.tsr (INT2 ours)");
+    Ok(())
+}

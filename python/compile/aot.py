@@ -1,0 +1,202 @@
+"""AOT lowering: JAX graphs (+ embedded Pallas kernels) → HLO **text**
+artifacts + manifest.json for the rust runtime.
+
+HLO text, NOT serialized protos: jax ≥ 0.5 emits HloModuleProto with 64-bit
+instruction ids which xla_extension 0.5.1 (the version the published `xla`
+crate binds) rejects; the text parser reassigns ids and round-trips cleanly.
+All entries are lowered with ``return_tuple=True`` and unwrapped with
+``to_tuple()`` on the rust side.
+
+Usage: ``python -m compile.aot --out ../artifacts --preset small``
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from . import train as T
+from .kernels import dequant_matmul, hessian_accum, stage1_grid_losses
+
+# Fixed AOT batch shapes (recorded in the manifest).
+EVAL_BATCH = 1
+TRAIN_BATCH = 8
+HESSIAN_T = 2048  # token-chunk the hessian entry accepts per call
+STAGE1_BETAS = 40
+DEQ_T = 16  # decode-like small batch for the fused dequant matmul entry
+
+
+def to_hlo_text(lowered):
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(name, shape, dtype="f32"):
+    return {"name": name, "shape": list(shape), "dtype": dtype}
+
+
+def lower_entry(fn, example_args):
+    return to_hlo_text(jax.jit(fn).lower(*example_args))
+
+
+def build_entries(cfg, group_size, bits):
+    """Yield (entry_name, hlo_text, inputs_spec, outputs_spec)."""
+    order = M.param_order(cfg)
+    n = len(order)
+    param_specs = [spec(name, shape) for name, shape in order]
+    param_shapes = [jax.ShapeDtypeStruct(shape, jnp.float32) for _, shape in order]
+
+    # ---- forward_logits ----------------------------------------------------
+    fwd, _ = M.make_forward(cfg, EVAL_BATCH)
+    tokens = jax.ShapeDtypeStruct((EVAL_BATCH, cfg.seq_len), jnp.int32)
+    yield (
+        "forward_logits",
+        lower_entry(fwd, param_shapes + [tokens]),
+        param_specs + [spec("tokens", (EVAL_BATCH, cfg.seq_len), "i32")],
+        [spec("logits", (EVAL_BATCH, cfg.seq_len, cfg.vocab))],
+    )
+
+    # ---- train_step ----------------------------------------------------------
+    step_fn, _ = T.make_train_step(cfg)
+    tt = jax.ShapeDtypeStruct((TRAIN_BATCH, cfg.seq_len), jnp.int32)
+    mm = jax.ShapeDtypeStruct((TRAIN_BATCH, cfg.seq_len), jnp.float32)
+    scal = jax.ShapeDtypeStruct((), jnp.int32)
+    train_inputs = (
+        param_shapes * 3 + [scal, tt, tt, mm]
+    )
+    yield (
+        "train_step",
+        lower_entry(step_fn, train_inputs),
+        (
+            param_specs
+            + [spec("m." + nm, sh) for nm, sh in order]
+            + [spec("v." + nm, sh) for nm, sh in order]
+            + [
+                spec("step", (), "i32"),
+                spec("tokens", (TRAIN_BATCH, cfg.seq_len), "i32"),
+                spec("targets", (TRAIN_BATCH, cfg.seq_len), "i32"),
+                spec("mask", (TRAIN_BATCH, cfg.seq_len)),
+            ]
+        ),
+        (
+            [spec("loss", ())]
+            + param_specs
+            + [spec("m." + nm, sh) for nm, sh in order]
+            + [spec("v." + nm, sh) for nm, sh in order]
+        ),
+    )
+
+    # ---- hessian_accum (d_model and ffn variants) ---------------------------
+    for tag, dim in (("d", cfg.d_model), ("ffn", cfg.ffn)):
+        x = jax.ShapeDtypeStruct((HESSIAN_T, dim), jnp.float32)
+        yield (
+            f"hessian_accum_{tag}",
+            lower_entry(lambda xx: (hessian_accum(xx),), [x]),
+            [spec("x", (HESSIAN_T, dim))],
+            [spec("h", (dim, dim))],
+        )
+
+    # ---- stage1_grid (for every linear input dim) ---------------------------
+    # one entry per (rows, cols) linear shape in the model
+    shapes = sorted(
+        {(cfg.d_model, cfg.d_model), (cfg.ffn, cfg.d_model), (cfg.d_model, cfg.ffn)}
+    )
+    for (rows, cols) in shapes:
+        n_g = cols // group_size
+        w = jax.ShapeDtypeStruct((rows, cols), jnp.float32)
+        hb = jax.ShapeDtypeStruct((n_g, group_size, group_size), jnp.float32)
+        betas = jax.ShapeDtypeStruct((STAGE1_BETAS,), jnp.float32)
+
+        def s1(ww, hh, bb):
+            return (stage1_grid_losses(ww, hh, bb, bits=bits),)
+
+        yield (
+            f"stage1_grid_{rows}x{cols}",
+            lower_entry(s1, [w, hb, betas]),
+            [
+                spec("w", (rows, cols)),
+                spec("h_blocks", (n_g, group_size, group_size)),
+                spec("betas", (STAGE1_BETAS,)),
+            ],
+            [spec("losses", (n_g, STAGE1_BETAS, rows))],
+        )
+
+    # ---- fused dequant matmul (decode projection shape) ---------------------
+    dq_bits = 4 if bits == 3 else bits  # 3-bit is stored padded to 4 for the kernel
+    per = 32 // dq_bits
+    rows, cols = cfg.d_model, cfg.d_model
+    x = jax.ShapeDtypeStruct((DEQ_T, cols), jnp.float32)
+    qw = jax.ShapeDtypeStruct((rows, cols // per), jnp.uint32)
+    sc = jax.ShapeDtypeStruct((rows, cols // group_size), jnp.float32)
+
+    def dq(xx, qq, ss, zz):
+        return (
+            dequant_matmul(xx, qq, ss, zz, bits=dq_bits, group_size=group_size),
+        )
+
+    yield (
+        "dequant_matmul",
+        lower_entry(dq, [x, qw, sc, sc]),
+        [
+            spec("x", (DEQ_T, cols)),
+            spec("qwords", (rows, cols // per), "u32"),
+            spec("scales", (rows, cols // group_size)),
+            spec("zeros", (rows, cols // group_size)),
+        ],
+        [spec("y", (DEQ_T, rows))],
+    )
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--preset", default="small", choices=sorted(M.PRESETS))
+    ap.add_argument("--group-size", type=int, default=64)
+    ap.add_argument("--bits", type=int, default=2)
+    args = ap.parse_args()
+
+    cfg = M.PRESETS[args.preset]
+    os.makedirs(args.out, exist_ok=True)
+    entries = {}
+    for name, hlo, inputs, outputs in build_entries(cfg, args.group_size, args.bits):
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(args.out, fname), "w") as f:
+            f.write(hlo)
+        entries[name] = {"file": fname, "inputs": inputs, "outputs": outputs}
+        print(f"  lowered {name:<28} -> {fname} ({len(hlo)/1e6:.2f} MB)")
+
+    manifest = {
+        "config": {
+            "vocab": cfg.vocab,
+            "d_model": cfg.d_model,
+            "n_layers": cfg.n_layers,
+            "n_heads": cfg.n_heads,
+            "ffn": cfg.ffn,
+            "seq_len": cfg.seq_len,
+        },
+        "preset": args.preset,
+        "group_size": args.group_size,
+        "bits": args.bits,
+        "train": {
+            "batch": TRAIN_BATCH,
+            "lr": T.LR,
+            "beta1": T.BETA1,
+            "beta2": T.BETA2,
+            "weight_decay": T.WEIGHT_DECAY,
+        },
+        "entries": entries,
+    }
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote {len(entries)} entries to {args.out}/manifest.json")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,19 @@
+"""L1 Pallas kernels (build-time only).
+
+Every kernel runs under ``interpret=True`` so the lowered HLO contains plain
+ops executable on any PJRT backend (the CPU plugin in this environment); real
+TPU lowering would emit Mosaic custom-calls instead. Kernels are structured
+for the TPU memory model regardless — see DESIGN.md §7 Hardware-Adaptation.
+"""
+
+from .hessian import hessian_accum
+from .stage1_grid import stage1_grid_losses, stage1_scales
+from .dequant_matmul import dequant_matmul, pack_weights
+
+__all__ = [
+    "hessian_accum",
+    "stage1_grid_losses",
+    "stage1_scales",
+    "dequant_matmul",
+    "pack_weights",
+]

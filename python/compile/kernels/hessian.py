@@ -1,0 +1,53 @@
+"""Hessian accumulation kernel: ``H = Xᵀ X / T`` for ``X: [T, d]``.
+
+The calibration hot loop of the GPTQ pipeline (Eq. 1: ``H = E[X Xᵀ]`` with X
+laid out ``[in, T]``; we take the transposed layout the capture pass
+produces). TPU mapping: grid over ``(I, J, K)`` — ``(I, J)`` tile the output
+Hessian, ``K`` walks token chunks accumulating into the same output block
+(`o_ref` is revisited across the K axis, the canonical MXU reduction
+pattern). VMEM per step = two ``[tk, b]`` input tiles + one ``[b, b]``
+accumulator tile.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _hessian_kernel(xi_ref, xj_ref, o_ref):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    xi = xi_ref[...]  # [tk, bi]
+    xj = xj_ref[...]  # [tk, bj]
+    o_ref[...] += jnp.dot(xi.T, xj, preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "t_chunk"))
+def hessian_accum(x, *, block=64, t_chunk=128):
+    """``x: [T, d]`` → ``H = xᵀx / T : [d, d]`` (f32).
+
+    ``d`` must be a multiple of ``block`` and ``T`` of ``t_chunk``
+    (the AOT entry pads the token axis; zeros contribute nothing).
+    """
+    t, d = x.shape
+    assert d % block == 0, f"d={d} not a multiple of block={block}"
+    assert t % t_chunk == 0, f"T={t} not a multiple of t_chunk={t_chunk}"
+    grid = (d // block, d // block, t // t_chunk)
+    h = pl.pallas_call(
+        _hessian_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((t_chunk, block), lambda i, j, k: (k, i)),
+            pl.BlockSpec((t_chunk, block), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((block, block), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((d, d), jnp.float32),
+        interpret=True,
+    )(x, x)
+    return h / jnp.float32(t)

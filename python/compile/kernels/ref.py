@@ -1,0 +1,53 @@
+"""Pure-jnp oracles for every Pallas kernel — the build-time correctness
+ground truth (`python/tests/test_kernels.py` asserts allclose against
+these under hypothesis-driven shape/width sweeps)."""
+
+import jax.numpy as jnp
+
+
+def hessian_ref(x):
+    """x: [T, d] → xᵀx / T."""
+    t = x.shape[0]
+    return (x.T @ x) / jnp.float32(t)
+
+
+def minmax_scale_ref(w_group, qmax, beta):
+    """Per-row (scale, zero) of a ``[out, g]`` group at clipping β.
+    Mirrors rust `quant::scale::minmax_scale` exactly."""
+    lo = jnp.minimum(jnp.min(w_group, axis=-1), 0.0) * beta
+    hi = jnp.maximum(jnp.max(w_group, axis=-1), 0.0) * beta
+    s = jnp.maximum((hi - lo) / qmax, 1e-10)
+    z = jnp.clip(jnp.round(-lo / s), 0.0, qmax)
+    return s, z
+
+
+def stage1_losses_ref(w, h_blocks, betas, bits):
+    """[n_g, M, out] losses, the oracle for `stage1_grid_losses`."""
+    out, cin = w.shape
+    n_g, g, _ = h_blocks.shape
+    qmax = float(2**bits - 1)
+    wg = w.reshape(out, n_g, g)
+    losses = []
+    for gi in range(n_g):
+        row = []
+        for beta in betas:
+            s, z = minmax_scale_ref(wg[:, gi, :], qmax, beta)
+            wint = jnp.clip(jnp.round(wg[:, gi, :] / s[:, None]) + z[:, None], 0.0, qmax)
+            e = s[:, None] * (wint - z[:, None]) - wg[:, gi, :]
+            row.append(jnp.einsum("og,gh,oh->o", e, h_blocks[gi], e))
+        losses.append(jnp.stack(row))
+    return jnp.stack(losses)
+
+
+def dequant_ref(wint, scales, zeros, group_size):
+    """Dequantize ``[out, in]`` integers with per-(row, group) params."""
+    out, cin = wint.shape
+    n_g = cin // group_size
+    s = jnp.repeat(scales, group_size, axis=1)
+    z = jnp.repeat(zeros, group_size, axis=1)
+    return s * (wint.astype(jnp.float32) - z)
+
+
+def dequant_matmul_ref(x, wint, scales, zeros, group_size):
+    """y = x · dequant(wint)ᵀ — oracle for the fused kernel."""
+    return x @ dequant_ref(wint, scales, zeros, group_size).T

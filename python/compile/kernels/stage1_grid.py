@@ -1,0 +1,84 @@
+"""Stage-1 grid-search kernel (paper Eq. 4).
+
+For every (group ``i``, candidate ``β``) evaluate the input-aware loss
+
+    L(r, i, β) = (s w_int − w_r,i)ᵀ H_ii (s w_int − w_r,i)
+
+for all output rows ``r`` at once: the error matrix ``E: [out, g]`` hits the
+``[g, g]`` Hessian block on the MXU and is reduced row-wise on-chip. The GPU
+analog would assign a threadblock per (group, candidate); here each is one
+grid step with the candidate axis innermost so the weight/Hessian tiles stay
+resident in VMEM across the β sweep.
+
+The argmin over β and the final (scale, zero) reconstruction are cheap and
+stay in plain jnp (`stage1_scales`).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _grid_kernel(w_ref, hii_ref, beta_ref, loss_ref, *, qmax):
+    w = w_ref[0]  # [out, g]
+    hii = hii_ref[0]  # [g, g]
+    beta = beta_ref[0]
+
+    lo = jnp.minimum(jnp.min(w, axis=1), 0.0) * beta  # [out]
+    hi = jnp.maximum(jnp.max(w, axis=1), 0.0) * beta
+    s = jnp.maximum((hi - lo) / qmax, 1e-10)  # [out]
+    z = jnp.clip(jnp.round(-lo / s), 0.0, qmax)  # [out]
+    wint = jnp.clip(jnp.round(w / s[:, None]) + z[:, None], 0.0, qmax)
+    e = s[:, None] * (wint - z[:, None]) - w  # [out, g]
+    eh = jnp.dot(e, hii, preferred_element_type=jnp.float32)  # MXU
+    loss_ref[0, 0] = jnp.sum(eh * e, axis=1)  # [out]
+
+
+@functools.partial(jax.jit, static_argnames=("bits",))
+def stage1_grid_losses(w, h_blocks, betas, *, bits):
+    """Losses for every (group, β, row).
+
+    w: [out, in] (in = n_g · g) ; h_blocks: [n_g, g, g] ; betas: [M]
+    → [n_g, M, out] f32.
+    """
+    out, cin = w.shape
+    n_g, g, _ = h_blocks.shape
+    assert cin == n_g * g, (cin, n_g, g)
+    (m,) = betas.shape
+    qmax = float(2**bits - 1)
+    wg = w.reshape(out, n_g, g).transpose(1, 0, 2)  # [n_g, out, g]
+    kern = functools.partial(_grid_kernel, qmax=qmax)
+    return pl.pallas_call(
+        kern,
+        grid=(n_g, m),
+        in_specs=[
+            pl.BlockSpec((1, out, g), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((1, g, g), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((1,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, out), lambda i, j: (i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_g, m, out), jnp.float32),
+        interpret=True,
+    )(wg, h_blocks, betas)
+
+
+@functools.partial(jax.jit, static_argnames=("bits",))
+def stage1_scales(w, h_blocks, betas, *, bits):
+    """Full Stage-1: kernel losses → argmin over β → (scales, zeros).
+
+    Returns ``scales, zeros: [out, n_g]``.
+    """
+    out, cin = w.shape
+    n_g, g, _ = h_blocks.shape
+    qmax = float(2**bits - 1)
+    losses = stage1_grid_losses(w, h_blocks, betas, bits=bits)  # [n_g, M, out]
+    best = jnp.argmin(losses, axis=1)  # [n_g, out]
+    beta_star = betas[best].T  # [out, n_g]
+    wg = w.reshape(out, n_g, g)
+    lo = jnp.minimum(jnp.min(wg, axis=2), 0.0) * beta_star  # [out, n_g]
+    hi = jnp.maximum(jnp.max(wg, axis=2), 0.0) * beta_star
+    s = jnp.maximum((hi - lo) / qmax, 1e-10)
+    z = jnp.clip(jnp.round(-lo / s), 0.0, qmax)
+    return s, z

@@ -1,0 +1,174 @@
+"""L2: the Llamette transformer in JAX — the canonical model definition.
+
+Numerics contract with the rust mirror (`rust/src/model/forward.rs`):
+RMSNorm ε = 1e-5; RoPE rotates pairs ``(x[2i], x[2i+1])`` within each head at
+angle ``pos · 10000^(−2i/head_dim)``; pre-norm residual blocks; SwiGLU MLP;
+untied head. Parameters travel as a flat list in ``param_order()`` — the
+same order `ModelWeights::flat_params` produces on the rust side.
+
+Everything here is lowered once by `aot.py`; nothing imports this at
+runtime.
+"""
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+RMS_EPS = 1e-5
+ROPE_BASE = 10_000.0
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    vocab: int
+    d_model: int
+    n_layers: int
+    n_heads: int
+    ffn: int
+    seq_len: int
+
+    @property
+    def head_dim(self):
+        return self.d_model // self.n_heads
+
+
+PRESETS = {
+    "tiny": ModelConfig(256, 64, 2, 2, 128, 64),
+    "small": ModelConfig(256, 256, 4, 4, 704, 128),
+    "base": ModelConfig(256, 512, 6, 8, 1408, 128),
+}
+
+
+def param_order(cfg):
+    """[(name, shape)] in the canonical flat order shared with rust."""
+    d, f, v = cfg.d_model, cfg.ffn, cfg.vocab
+    out = [("embed", (v, d))]
+    for i in range(cfg.n_layers):
+        out += [
+            (f"layers.{i}.ln1", (d,)),
+            (f"layers.{i}.wq", (d, d)),
+            (f"layers.{i}.wk", (d, d)),
+            (f"layers.{i}.wv", (d, d)),
+            (f"layers.{i}.wo", (d, d)),
+            (f"layers.{i}.ln2", (d,)),
+            (f"layers.{i}.w1", (f, d)),
+            (f"layers.{i}.w3", (f, d)),
+            (f"layers.{i}.w2", (d, f)),
+        ]
+    out += [("ln_f", (d,)), ("head", (v, d))]
+    return out
+
+
+def unflatten(cfg, flat):
+    """Flat param list → structured dict."""
+    names = [n for n, _ in param_order(cfg)]
+    assert len(flat) == len(names), (len(flat), len(names))
+    return dict(zip(names, flat))
+
+
+def init_params(cfg, key):
+    """Random init mirroring rust `ModelWeights::init` (shapes/std only —
+    bit-exact equality is not required; checkpoints carry the weights)."""
+    params = []
+    std = 0.02
+    resid_std = std / (2.0 * cfg.n_layers) ** 0.5
+    for name, shape in param_order(cfg):
+        key, sub = jax.random.split(key)
+        if name.endswith(("ln1", "ln2")) or name == "ln_f":
+            params.append(jnp.ones(shape, jnp.float32))
+        elif name.endswith(("wo", "w2")):
+            params.append(jax.random.normal(sub, shape, jnp.float32) * resid_std)
+        else:
+            params.append(jax.random.normal(sub, shape, jnp.float32) * std)
+    return params
+
+
+def rmsnorm(x, gain):
+    ms = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(ms + RMS_EPS) * gain
+
+
+def rope(x, n_heads, pos0=0):
+    """x: [T, d] → rotated. Pairs (2i, 2i+1) within each head."""
+    t, d = x.shape
+    hd = d // n_heads
+    xh = x.reshape(t, n_heads, hd // 2, 2)
+    pos = jnp.arange(t, dtype=jnp.float32)[:, None] + pos0
+    inv = ROPE_BASE ** (-2.0 * jnp.arange(hd // 2, dtype=jnp.float32) / hd)
+    theta = pos * inv[None, :]  # [T, hd/2]
+    sin, cos = jnp.sin(theta), jnp.cos(theta)
+    a, b = xh[..., 0], xh[..., 1]  # [T, H, hd/2]
+    ra = a * cos[:, None, :] - b * sin[:, None, :]
+    rb = a * sin[:, None, :] + b * cos[:, None, :]
+    return jnp.stack([ra, rb], axis=-1).reshape(t, d)
+
+
+def attention(q, k, v, n_heads):
+    """Causal MHA over [T, d] (single sequence)."""
+    t, d = q.shape
+    hd = d // n_heads
+    qh = q.reshape(t, n_heads, hd).transpose(1, 0, 2)  # [H, T, hd]
+    kh = k.reshape(t, n_heads, hd).transpose(1, 0, 2)
+    vh = v.reshape(t, n_heads, hd).transpose(1, 0, 2)
+    scores = jnp.einsum("hqd,hkd->hqk", qh, kh) / jnp.sqrt(jnp.float32(hd))
+    mask = jnp.tril(jnp.ones((t, t), bool))
+    scores = jnp.where(mask[None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    ctx = jnp.einsum("hqk,hkd->hqd", probs, vh)  # [H, T, hd]
+    return ctx.transpose(1, 0, 2).reshape(t, d)
+
+
+def block(p, i, h, n_heads):
+    ln1 = p[f"layers.{i}.ln1"]
+    x = rmsnorm(h, ln1)
+    q = rope(x @ p[f"layers.{i}.wq"].T, n_heads)
+    k = rope(x @ p[f"layers.{i}.wk"].T, n_heads)
+    v = x @ p[f"layers.{i}.wv"].T
+    ctx = attention(q, k, v, n_heads)
+    h = h + ctx @ p[f"layers.{i}.wo"].T
+    x = rmsnorm(h, p[f"layers.{i}.ln2"])
+    act = jax.nn.silu(x @ p[f"layers.{i}.w1"].T) * (x @ p[f"layers.{i}.w3"].T)
+    return h + act @ p[f"layers.{i}.w2"].T
+
+
+def forward_one(cfg, p, tokens):
+    """tokens: [S] int32 → logits [S, vocab]."""
+    h = p["embed"][tokens]
+    for i in range(cfg.n_layers):
+        h = block(p, i, h, cfg.n_heads)
+    return rmsnorm(h, p["ln_f"]) @ p["head"].T
+
+
+def forward_logits(cfg, flat_params, tokens):
+    """tokens: [B, S] → logits [B, S, vocab] (vmapped over the batch)."""
+    p = unflatten(cfg, flat_params)
+    return jax.vmap(lambda t: forward_one(cfg, p, t))(tokens)
+
+
+def loss_fn(cfg, flat_params, tokens, targets, mask):
+    """Mean masked next-token cross-entropy.
+
+    tokens/targets/mask: [B, S] (targets already shifted; mask f32).
+    """
+    logits = forward_logits(cfg, flat_params, tokens)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    ll = jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    return -jnp.sum(ll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def make_forward(cfg, batch):
+    """Jit-able ``f(*params, tokens)`` for AOT lowering."""
+    n = len(param_order(cfg))
+
+    def f(*args):
+        flat, tokens = list(args[:n]), args[n]
+        return (forward_logits(cfg, flat, tokens),)
+
+    return f, n
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def jit_forward(cfg, flat_params, tokens):
+    return forward_logits(cfg, flat_params, tokens)

@@ -1,0 +1,70 @@
+"""L2: fused AdamW training step, AOT-lowered for the rust training loop.
+
+One artifact executes: forward + backward + AdamW update, returning the new
+parameters, new optimizer moments and the scalar loss. The rust side owns
+the data pipeline and the step loop; XLA owns the math. Buffer donation is
+requested for params/moments so XLA can update in place.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from . import model as M
+
+# AdamW hyper-parameters (baked into the artifact; recorded in the manifest).
+LR = 3e-4
+BETA1, BETA2 = 0.9, 0.95
+ADAM_EPS = 1e-8
+WEIGHT_DECAY = 0.01
+GRAD_CLIP = 1.0
+
+
+def _is_decayed(name):
+    # decay matrices only (norm gains and biases are not decayed)
+    return not (name.endswith(("ln1", "ln2")) or name == "ln_f")
+
+
+def make_train_step(cfg):
+    """Returns ``(step_fn, n_params)``.
+
+    step_fn(*params, *m, *v, step, tokens, targets, mask)
+        → (loss, *new_params, *new_m, *new_v)
+    """
+    order = M.param_order(cfg)
+    n = len(order)
+    names = [name for name, _ in order]
+
+    def step_fn(*args):
+        params = list(args[:n])
+        m = list(args[n : 2 * n])
+        v = list(args[2 * n : 3 * n])
+        step = args[3 * n]  # i32 scalar, 1-based
+        tokens, targets, mask = args[3 * n + 1], args[3 * n + 2], args[3 * n + 3]
+
+        loss, grads = jax.value_and_grad(
+            lambda ps: M.loss_fn(cfg, ps, tokens, targets, mask)
+        )(params)
+
+        # global-norm clip
+        gnorm = jnp.sqrt(sum(jnp.sum(g * g) for g in grads))
+        clip = jnp.minimum(1.0, GRAD_CLIP / (gnorm + 1e-12))
+        grads = [g * clip for g in grads]
+
+        t = step.astype(jnp.float32)
+        bc1 = 1.0 - BETA1**t
+        bc2 = 1.0 - BETA2**t
+        new_p, new_m, new_v = [], [], []
+        for name, p, mi, vi, g in zip(names, params, m, v, grads):
+            mi = BETA1 * mi + (1.0 - BETA1) * g
+            vi = BETA2 * vi + (1.0 - BETA2) * g * g
+            mhat = mi / bc1
+            vhat = vi / bc2
+            upd = mhat / (jnp.sqrt(vhat) + ADAM_EPS)
+            if _is_decayed(name):
+                upd = upd + WEIGHT_DECAY * p
+            new_p.append(p - LR * upd)
+            new_m.append(mi)
+            new_v.append(vi)
+        return tuple([loss] + new_p + new_m + new_v)
+
+    return step_fn, n

@@ -1,0 +1,61 @@
+"""AOT path tests: HLO-text lowering contract and manifest structure.
+
+Full-preset lowering is exercised by `make artifacts` + the rust parity
+tests; here we check the pieces cheaply (tiny shapes only).
+"""
+
+import json
+
+import jax
+import jax.numpy as jnp
+
+from compile import aot
+from compile import model as M
+
+
+def test_to_hlo_text_is_parseable_hlo():
+    lowered = jax.jit(lambda x: (x @ x.T + 1.0,)).lower(
+        jax.ShapeDtypeStruct((4, 4), jnp.float32)
+    )
+    text = aot.to_hlo_text(lowered)
+    assert "HloModule" in text
+    assert "ROOT" in text
+    # return_tuple=True → root is a tuple
+    assert "tuple" in text.lower()
+
+
+def test_spec_helper():
+    s = aot.spec("tokens", (1, 64), "i32")
+    assert s == {"name": "tokens", "shape": [1, 64], "dtype": "i32"}
+
+
+def test_build_entries_cover_required_set():
+    cfg = M.PRESETS["tiny"]
+    names = []
+    for name, hlo, inputs, outputs in aot.build_entries(cfg, 32, 2):
+        names.append(name)
+        assert isinstance(hlo, str) and len(hlo) > 100, name
+        assert inputs and outputs, name
+        # shapes are JSON-serializable
+        json.dumps({"inputs": inputs, "outputs": outputs})
+        if name == "forward_logits":
+            assert outputs[0]["shape"] == [aot.EVAL_BATCH, cfg.seq_len, cfg.vocab]
+        if name == "train_step":
+            n = len(M.param_order(cfg))
+            assert len(inputs) == 3 * n + 4
+            assert len(outputs) == 3 * n + 1
+    assert "forward_logits" in names
+    assert "train_step" in names
+    assert any(n.startswith("hessian_accum") for n in names)
+    assert any(n.startswith("stage1_grid") for n in names)
+    assert "dequant_matmul" in names
+
+
+def test_param_order_matches_rust_manifest_convention():
+    cfg = M.PRESETS["small"]
+    order = M.param_order(cfg)
+    assert order[0][0] == "embed"
+    assert order[-1][0] == "head"
+    assert order[1][0] == "layers.0.ln1"
+    # 9 tensors per layer between embed and ln_f
+    assert len(order) == 2 + 9 * cfg.n_layers + 1

@@ -1,0 +1,177 @@
+"""Pallas kernels vs pure-jnp oracles — the core L1 correctness signal.
+
+Hypothesis sweeps shapes, bit widths and group sizes; every kernel must
+match its `ref.py` oracle to float32 tolerance.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import (
+    dequant_matmul,
+    hessian_accum,
+    pack_weights,
+    stage1_grid_losses,
+    stage1_scales,
+)
+from compile.kernels import ref
+
+
+def rng(seed):
+    return np.random.default_rng(seed)
+
+
+# ---------------------------------------------------------------- hessian --
+@settings(max_examples=12, deadline=None)
+@given(
+    t_chunks=st.integers(1, 3),
+    blocks=st.integers(1, 3),
+    seed=st.integers(0, 2**31),
+)
+def test_hessian_matches_ref(t_chunks, blocks, seed):
+    t, d = 128 * t_chunks, 64 * blocks
+    x = rng(seed).normal(size=(t, d)).astype(np.float32)
+    got = hessian_accum(jnp.asarray(x))
+    want = ref.hessian_ref(jnp.asarray(x))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4, atol=2e-4)
+
+
+def test_hessian_is_symmetric_psd():
+    x = rng(0).normal(size=(256, 64)).astype(np.float32)
+    h = np.asarray(hessian_accum(jnp.asarray(x)))
+    np.testing.assert_allclose(h, h.T, atol=1e-5)
+    evals = np.linalg.eigvalsh(h.astype(np.float64))
+    assert evals.min() > -1e-4
+
+
+def test_hessian_rejects_misaligned():
+    with pytest.raises(AssertionError):
+        hessian_accum(jnp.zeros((100, 64), jnp.float32))  # T not /128
+    with pytest.raises(AssertionError):
+        hessian_accum(jnp.zeros((128, 60), jnp.float32))  # d not /64
+
+
+# ----------------------------------------------------------------- stage1 --
+@settings(max_examples=10, deadline=None)
+@given(
+    out=st.sampled_from([8, 32]),
+    n_g=st.integers(1, 3),
+    g=st.sampled_from([16, 32, 64]),
+    bits=st.sampled_from([2, 3, 4]),
+    seed=st.integers(0, 2**31),
+)
+def test_stage1_losses_match_ref(out, n_g, g, bits, seed):
+    r = rng(seed)
+    w = r.normal(size=(out, n_g * g)).astype(np.float32)
+    xs = r.normal(size=(n_g, g, 4 * g)).astype(np.float32)
+    hb = np.einsum("ngt,nht->ngh", xs, xs).astype(np.float32) / (4 * g)
+    betas = np.linspace(0.4, 1.0, 7).astype(np.float32)
+    got = stage1_grid_losses(jnp.asarray(w), jnp.asarray(hb), jnp.asarray(betas), bits=bits)
+    want = ref.stage1_losses_ref(jnp.asarray(w), jnp.asarray(hb), jnp.asarray(betas), bits)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-3, atol=2e-4)
+
+
+def test_stage1_scales_pick_argmin():
+    r = rng(7)
+    out, n_g, g, bits = 16, 2, 32, 2
+    w = r.normal(size=(out, n_g * g)).astype(np.float32)
+    xs = r.normal(size=(n_g, g, 128)).astype(np.float32)
+    hb = np.einsum("ngt,nht->ngh", xs, xs).astype(np.float32) / 128
+    betas = np.linspace(0.35, 1.0, 9).astype(np.float32)
+    s, z = stage1_scales(jnp.asarray(w), jnp.asarray(hb), jnp.asarray(betas), bits=bits)
+    losses = np.asarray(
+        ref.stage1_losses_ref(jnp.asarray(w), jnp.asarray(hb), jnp.asarray(betas), bits)
+    )  # [n_g, M, out]
+    best = losses.argmin(axis=1)  # [n_g, out]
+    qmax = 2.0**bits - 1
+    wg = w.reshape(out, n_g, g)
+    for gi in range(n_g):
+        for row in range(out):
+            beta = betas[best[gi, row]]
+            lo = min(wg[row, gi].min(), 0.0) * beta
+            hi = max(wg[row, gi].max(), 0.0) * beta
+            s_want = max((hi - lo) / qmax, 1e-10)
+            assert np.isclose(float(s[row, gi]), s_want, rtol=1e-5), (row, gi)
+            assert 0.0 <= float(z[row, gi]) <= qmax
+
+
+def test_stage1_identity_hessian_equals_l2_choice():
+    # With H_ii = I the kernel's pick must equal the plain L2 grid pick.
+    r = rng(3)
+    out, g, bits = 8, 32, 2
+    w = r.normal(size=(out, g)).astype(np.float32)
+    hb = np.eye(g, dtype=np.float32)[None]
+    betas = np.linspace(0.35, 1.0, 16).astype(np.float32)
+    losses = np.asarray(
+        stage1_grid_losses(jnp.asarray(w), jnp.asarray(hb), jnp.asarray(betas), bits=bits)
+    )[0]  # [M, out]
+    # manual L2 losses
+    qmax = 2.0**bits - 1
+    for mi, beta in enumerate(betas):
+        lo = np.minimum(w.min(axis=1), 0.0) * beta
+        hi = np.maximum(w.max(axis=1), 0.0) * beta
+        s = np.maximum((hi - lo) / qmax, 1e-10)
+        z = np.clip(np.round(-lo / s), 0, qmax)
+        wint = np.clip(np.round(w / s[:, None]) + z[:, None], 0, qmax)
+        e = s[:, None] * (wint - z[:, None]) - w
+        np.testing.assert_allclose(losses[mi], (e * e).sum(axis=1), rtol=2e-3, atol=2e-5)
+
+
+# --------------------------------------------------------- dequant matmul --
+@settings(max_examples=10, deadline=None)
+@given(
+    bits=st.sampled_from([2, 4, 8]),
+    out_blocks=st.integers(1, 2),
+    in_blocks=st.integers(1, 2),
+    group_size=st.sampled_from([32, 64]),
+    t=st.sampled_from([1, 8, 16]),
+    seed=st.integers(0, 2**31),
+)
+def test_dequant_matmul_matches_ref(bits, out_blocks, in_blocks, group_size, t, seed):
+    r = rng(seed)
+    out, cin = 64 * out_blocks, 64 * in_blocks
+    wint = r.integers(0, 2**bits, size=(out, cin)).astype(np.uint32)
+    scales = (r.random(size=(out, cin // group_size)) * 0.1 + 0.01).astype(np.float32)
+    zeros = r.integers(0, 2**bits, size=(out, cin // group_size)).astype(np.float32)
+    x = r.normal(size=(t, cin)).astype(np.float32)
+    qwords = pack_weights(jnp.asarray(wint), bits)
+    got = dequant_matmul(
+        jnp.asarray(x), qwords, jnp.asarray(scales), jnp.asarray(zeros),
+        bits=bits, group_size=group_size,
+    )
+    want = ref.dequant_matmul_ref(
+        jnp.asarray(x), jnp.asarray(wint), jnp.asarray(scales), jnp.asarray(zeros),
+        group_size,
+    )
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4, atol=2e-4)
+
+
+def test_pack_layout_contract():
+    # The packed u32 layout must match rust PackedInts (little-endian bit
+    # order within a word): value k at column c lands at bits (c%per)*bits.
+    bits = 4
+    wint = jnp.asarray(np.arange(8, dtype=np.uint32)[None])  # [1, 8]
+    words = np.asarray(pack_weights(wint, bits))
+    assert words.shape == (1, 1)
+    w = int(words[0, 0])
+    for c in range(8):
+        assert (w >> (c * 4)) & 0xF == c
+
+
+@settings(max_examples=8, deadline=None)
+@given(bits=st.sampled_from([2, 4, 8]), seed=st.integers(0, 2**31))
+def test_pack_roundtrip(bits, seed):
+    r = rng(seed)
+    wint = r.integers(0, 2**bits, size=(4, 64)).astype(np.uint32)
+    words = pack_weights(jnp.asarray(wint), bits)
+    per = 32 // bits
+    mask = 2**bits - 1
+    back = np.zeros_like(wint)
+    wn = np.asarray(words)
+    for c in range(64):
+        back[:, c] = (wn[:, c // per] >> ((c % per) * bits)) & mask
+    np.testing.assert_array_equal(back, wint)

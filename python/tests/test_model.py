@@ -1,0 +1,100 @@
+"""L2 model tests: shapes, causality, loss sanity, train-step behaviour."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+import jax
+import jax.numpy as jnp
+
+from compile import model as M
+from compile import train as T
+
+
+CFG = M.PRESETS["tiny"]
+
+
+def params(seed=0):
+    return M.init_params(CFG, jax.random.PRNGKey(seed))
+
+
+def test_param_order_matches_counts():
+    order = M.param_order(CFG)
+    assert len(order) == 2 + 9 * CFG.n_layers + 1
+    total = sum(int(np.prod(s)) for _, s in order)
+    # mirror of rust ModelConfig::n_params
+    d, f, v, L = CFG.d_model, CFG.ffn, CFG.vocab, CFG.n_layers
+    expect = v * d * 2 + L * (4 * d * d + 3 * d * f + 2 * d) + d
+    assert total == expect
+
+
+def test_forward_shapes():
+    ps = params()
+    tokens = jnp.arange(2 * CFG.seq_len, dtype=jnp.int32).reshape(2, CFG.seq_len) % 256
+    logits = M.forward_logits(CFG, ps, tokens)
+    assert logits.shape == (2, CFG.seq_len, CFG.vocab)
+    assert bool(jnp.isfinite(logits).all())
+
+
+def test_causality():
+    ps = params(1)
+    t = CFG.seq_len
+    a = jnp.zeros((1, t), jnp.int32).at[0, :].set(5)
+    b = a.at[0, t - 1].set(99)
+    la = M.forward_logits(CFG, ps, a)
+    lb = M.forward_logits(CFG, ps, b)
+    np.testing.assert_allclose(
+        np.asarray(la[0, : t - 1]), np.asarray(lb[0, : t - 1]), atol=1e-5
+    )
+
+
+def test_rope_position_dependence():
+    ps = params(2)
+    tokens = jnp.full((1, 8), 42, jnp.int32)
+    logits = M.forward_logits(CFG, ps, tokens)
+    assert not np.allclose(np.asarray(logits[0, 1]), np.asarray(logits[0, 5]))
+
+
+def test_loss_uniform_at_init():
+    ps = params(3)
+    tokens = (jnp.arange(CFG.seq_len, dtype=jnp.int32) * 37 % 251)[None]
+    targets = jnp.roll(tokens, -1, axis=1)
+    mask = jnp.ones_like(tokens, jnp.float32).at[:, -1].set(0.0)
+    loss = M.loss_fn(CFG, ps, tokens, targets, mask)
+    assert abs(float(loss) - np.log(256)) < 0.4
+
+
+@settings(max_examples=3, deadline=None)
+@given(seed=st.integers(0, 1000))
+def test_train_step_decreases_loss_on_repeated_batch(seed):
+    step_fn, n = T.make_train_step(CFG)
+    ps = params(seed)
+    m = [jnp.zeros_like(p) for p in ps]
+    v = [jnp.zeros_like(p) for p in ps]
+    r = np.random.default_rng(seed)
+    tokens = jnp.asarray(
+        r.integers(0, 256, size=(T and 8, CFG.seq_len)), dtype=jnp.int32
+    )
+    targets = jnp.roll(tokens, -1, axis=1)
+    mask = jnp.ones_like(tokens, jnp.float32).at[:, -1].set(0.0)
+    jit_step = jax.jit(step_fn)
+    losses = []
+    for i in range(1, 6):
+        out = jit_step(*ps, *m, *v, jnp.int32(i), tokens, targets, mask)
+        loss, rest = out[0], out[1:]
+        ps = list(rest[:n])
+        m = list(rest[n : 2 * n])
+        v = list(rest[2 * n : 3 * n])
+        losses.append(float(loss))
+    assert losses[-1] < losses[0], losses
+
+
+def test_rope_pure_rotation_preserves_norm():
+    x = jax.random.normal(jax.random.PRNGKey(0), (6, CFG.d_model))
+    y = M.rope(x, CFG.n_heads)
+    np.testing.assert_allclose(
+        np.linalg.norm(np.asarray(x), axis=1),
+        np.linalg.norm(np.asarray(y), axis=1),
+        rtol=1e-5,
+    )
+    # position 0 is the identity
+    np.testing.assert_allclose(np.asarray(y[0]), np.asarray(x[0]), atol=1e-6)

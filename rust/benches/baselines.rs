@@ -1,0 +1,142 @@
+//! Extended baseline comparison (beyond the paper's tables, covering the
+//! related-work methods its §1–2 discuss): RTN, AWQ-lite (activation-aware
+//! scaling, ref [8]), GPTQ natural-order, GPTQ act-order, and the paper's
+//! method — all on identical layer problems, scored by the true layer-wise
+//! reconstruction loss (Eq. 3) under a skewed, correlated input Hessian.
+//!
+//! `cargo bench --bench baselines`
+
+use tsgo::quant::actorder::gptq_quantize_actorder;
+use tsgo::quant::awq::awq_quantize;
+use tsgo::quant::gptq::prepare_hessian;
+use tsgo::quant::metrics::layer_loss;
+use tsgo::quant::rtn::rtn_quantize;
+use tsgo::quant::scale::ScaleMetric;
+use tsgo::quant::stage1::baseline_init;
+use tsgo::quant::stage2::Stage2Config;
+use tsgo::quant::{quantize_layer, GptqConfig, MethodConfig, QuantSpec};
+use tsgo::tensor::Matrix;
+use tsgo::util::bench::Table;
+use tsgo::util::rng::Rng;
+
+fn problem(out: usize, inp: usize, seed: u64) -> (Matrix, Matrix) {
+    let mut rng = Rng::new(seed);
+    let w = Matrix::randn(out, inp, 1.0, &mut rng);
+    let t = inp * 6;
+    let mut x = Matrix::zeros(inp, t);
+    for c in 0..t {
+        let mut prev = 0.0f32;
+        for r in 0..inp {
+            let energy = if r % 8 == 0 { 5.0 } else { 0.4 };
+            let v = 0.5 * prev + rng.normal() as f32 * energy;
+            x[(r, c)] = v;
+            prev = v;
+        }
+    }
+    let mut h = x.matmul_bt(&x);
+    h.scale_inplace(1.0 / t as f32);
+    (w, h)
+}
+
+/// §2.2 motivation: channel-wise (one scale per output channel) vs
+/// group-wise at low bits. The paper's premise is that channel-wise INT2
+/// collapses under intra-channel variance; group-wise recovers it.
+fn channelwise_vs_groupwise() {
+    let (out, inp) = (704, 256);
+    let mut table = Table::new(&["bits", "granularity", "layer loss", "vs channel-wise"]);
+    for bits in [2u8, 3] {
+        let (w, h) = problem(out, inp, 77 + bits as u64);
+        let mut wd = w.clone();
+        let hd = prepare_hessian(&h, &mut wd, 0.01);
+        let mut base = None;
+        for (label, group) in [
+            ("channel-wise", inp),
+            ("group 128", 128),
+            ("group 64", 64),
+            ("group 32", 32),
+        ] {
+            let spec = QuantSpec::new(bits, group);
+            let res = quantize_layer(
+                &w, &h, None, &spec, MethodConfig::OURS,
+                &GptqConfig::default(), &Stage2Config::default(),
+            )
+            .unwrap();
+            let loss = layer_loss(&w, &res.quantized.dequantize(), &hd);
+            let rel = match base {
+                None => {
+                    base = Some(loss);
+                    "100.0%".into()
+                }
+                Some(b) => format!("{:.1}%", loss / b * 100.0),
+            };
+            table.row(vec![
+                format!("{bits}"),
+                label.into(),
+                format!("{loss:.4e}"),
+                rel,
+            ]);
+        }
+    }
+    table.print("granularity sweep (§2.2 motivation: group-wise rescues low-bit)");
+}
+
+fn main() {
+    let (out, inp) = (704, 256);
+    println!("extended baselines on a [{out}x{inp}] layer (skewed AR(1) inputs), group=64");
+    let mut table = Table::new(&["bits", "method", "layer loss", "vs RTN", "time"]);
+    for bits in [2u8, 3] {
+        let (w, h) = problem(out, inp, 1000 + bits as u64);
+        let spec = QuantSpec::new(bits, 64);
+        let mut wd = w.clone();
+        let hd = prepare_hessian(&h, &mut wd, 0.01);
+
+        let mut rtn_loss = None;
+        let mut run = |name: &str, f: &mut dyn FnMut() -> Matrix| {
+            let t0 = std::time::Instant::now();
+            let deq = f();
+            let dt = t0.elapsed();
+            let loss = layer_loss(&w, &deq, &hd);
+            let rel = match rtn_loss {
+                None => {
+                    rtn_loss = Some(loss);
+                    "100.0%".to_string()
+                }
+                Some(b) => format!("{:.1}%", loss / b * 100.0),
+            };
+            table.row(vec![
+                format!("{bits}"),
+                name.into(),
+                format!("{loss:.4e}"),
+                rel,
+                tsgo::util::fmt_duration(dt),
+            ]);
+        };
+
+        run("RTN", &mut || {
+            let gs = baseline_init(&w, &spec);
+            rtn_quantize(&w, &gs, &spec).dequantize()
+        });
+        run("AWQ-lite", &mut || {
+            awq_quantize(&w, &h, &spec).dequantize_unscaled()
+        });
+        run("GPTQ", &mut || {
+            quantize_layer(&w, &h, None, &spec, MethodConfig::GPTQ, &GptqConfig::default(), &Stage2Config::default())
+                .unwrap()
+                .quantized
+                .dequantize()
+        });
+        run("GPTQ act-order", &mut || {
+            gptq_quantize_actorder(&w, &h, &spec, ScaleMetric::L2, &GptqConfig::default())
+                .unwrap()
+                .dequantize_unpermuted()
+        });
+        run("ours", &mut || {
+            quantize_layer(&w, &h, None, &spec, MethodConfig::OURS, &GptqConfig::default(), &Stage2Config::default())
+                .unwrap()
+                .quantized
+                .dequantize()
+        });
+    }
+    table.print("extended baselines (lower loss is better; % relative to RTN)");
+    channelwise_vs_groupwise();
+}

@@ -1,0 +1,138 @@
+//! Shared setup for the paper-table benches.
+//!
+//! (Not every bench target uses every helper/field — allow dead code here.)
+#![allow(dead_code)]
+//!
+//! All table benches prefer a *trained* checkpoint (`model.tsr`, produced by
+//! the e2e example or `tsgo train`) whose config matches the requested
+//! preset; otherwise they fall back to a skew-injected random init, which
+//! preserves the orderings (who wins) but shrinks absolute PPL gaps — the
+//! header line states which model is in use.
+
+use tsgo::calib::{calibration_batches, Batch, Corpus, CorpusKind};
+use tsgo::eval::tasks::{build_suite, task_suite, TaskItem};
+use tsgo::model::{ModelWeights, Preset};
+use tsgo::runtime::Engine;
+use tsgo::util::rng::Rng;
+
+pub struct BenchEnv {
+    pub fp: ModelWeights,
+    pub calib: Vec<Batch>,
+    pub wiki_test: Vec<u8>,
+    pub c4_test: Vec<u8>,
+    pub items: Vec<TaskItem>,
+    pub engine: Option<Engine>,
+    pub trained: bool,
+    pub windows: usize,
+}
+
+pub fn preset_from_env() -> Preset {
+    std::env::var("TSGO_BENCH_PRESET")
+        .ok()
+        .and_then(|s| Preset::parse(&s))
+        .unwrap_or(Preset::Small)
+}
+
+pub fn setup(preset: Preset) -> BenchEnv {
+    let cfg = preset.config();
+    let (fp, trained) = match tsgo::model::store::load_model(std::path::Path::new("model.tsr"))
+    {
+        Ok(w) if w.config == cfg => (w, true),
+        _ => {
+            let mut rng = Rng::new(99);
+            let mut w = ModelWeights::init(cfg, &mut rng);
+            // inject per-channel energy skew (see pipeline_e2e.rs rationale)
+            for r in 0..w.embed.rows {
+                for c in 0..w.embed.cols {
+                    if c % 7 == 0 {
+                        w.embed[(r, c)] *= 6.0;
+                    }
+                }
+            }
+            (w, false)
+        }
+    };
+    let wiki = Corpus::generate(CorpusKind::SynthWiki, 400_000, 1);
+    let c4 = Corpus::generate(CorpusKind::SynthC4, 200_000, 1);
+    let (train_split, wiki_test) = wiki.split(0.1);
+    let (_, c4_test) = c4.split(0.2);
+    let n_seqs = std::env::var("TSGO_BENCH_CALIB")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(12);
+    let calib = calibration_batches(train_split, n_seqs, cfg.seq_len, 4, 3);
+    let items = build_suite(&wiki, 15, 17);
+    let engine = Engine::open_default().filter(|e| e.manifest.config == cfg);
+    BenchEnv {
+        fp,
+        calib,
+        wiki_test: wiki_test.to_vec(),
+        c4_test: c4_test.to_vec(),
+        items,
+        engine,
+        trained,
+        windows: 16,
+    }
+}
+
+impl BenchEnv {
+    pub fn describe(&self, what: &str) {
+        println!(
+            "== {what} ==\nmodel: {} ({}, {:.2}M params) | calib seqs: {} | artifacts: {}",
+            if self.trained { "trained checkpoint model.tsr" } else { "skewed random init (train one via the e2e example for sharper gaps)" },
+            self.fp.config.d_model,
+            self.fp.config.n_params() as f64 / 1e6,
+            self.calib.iter().map(|b| b.batch).sum::<usize>(),
+            if self.engine.is_some() { "yes" } else { "no (native eval)" },
+        );
+    }
+
+    pub fn ppl(&self, w: &ModelWeights, data: &[u8]) -> f64 {
+        if let Some(e) = &self.engine {
+            if let Ok(p) =
+                tsgo::runtime::perplexity_artifact(e, w, data, w.config.seq_len, self.windows)
+            {
+                return p;
+            }
+        }
+        tsgo::eval::perplexity(w, data, w.config.seq_len, self.windows)
+    }
+
+    pub fn zero_shot(&self, w: &ModelWeights) -> f64 {
+        task_suite(w, &self.items).average
+    }
+}
+
+/// One (precision, method) table row: PPLs + 0-shot + loss + time.
+pub struct Row {
+    pub precision: String,
+    pub method: &'static str,
+    pub wiki: f64,
+    pub c4: f64,
+    pub zshot: f64,
+    pub layer_loss: f64,
+    pub secs: f64,
+}
+
+pub fn run_cell(
+    env: &BenchEnv,
+    bits: u8,
+    group: usize,
+    method: tsgo::quant::MethodConfig,
+) -> Row {
+    use tsgo::pipeline::{quantize_model, PipelineConfig};
+    let spec = tsgo::quant::QuantSpec::new(bits, group);
+    let t0 = std::time::Instant::now();
+    let (qm, rep) =
+        quantize_model(&env.fp, &env.calib, &PipelineConfig::new(spec, method)).unwrap();
+    let secs = t0.elapsed().as_secs_f64();
+    Row {
+        precision: format!("INT{bits}"),
+        method: method.label(),
+        wiki: env.ppl(&qm.weights, &env.wiki_test),
+        c4: env.ppl(&qm.weights, &env.c4_test),
+        zshot: env.zero_shot(&qm.weights),
+        layer_loss: rep.total_loss(),
+        secs,
+    }
+}

@@ -1,0 +1,191 @@
+//! Kernel / hot-path microbenchmarks (the §Perf evidence in EXPERIMENTS.md):
+//!
+//! * native blocked GEMM vs dequantize+GEMM (the simulated-deployment cost);
+//! * the fused dequant-matmul HLO artifact (L1 Pallas path) vs native;
+//! * Hessian accumulation: native threaded vs the Pallas artifact;
+//! * stage-1 grid search and stage-2 CD sweep throughput;
+//! * the GPTQ inner sweep.
+//!
+//! `cargo bench --bench kernels`
+
+use tsgo::pipeline::MomentAccum;
+use tsgo::quant::scale::{compute_group_scales, QuantSpec, ScaleMetric};
+use tsgo::quant::stage2::Stage2Config;
+use tsgo::quant::{gptq_quantize, GptqConfig};
+use tsgo::runtime::{matrix_to_literal, Engine};
+use tsgo::tensor::Matrix;
+use tsgo::util::bench::{bench_units, print_measurements, Measurement};
+use tsgo::util::rng::Rng;
+
+fn main() {
+    let mut rng = Rng::new(7);
+    let mut ms: Vec<Measurement> = Vec::new();
+    let iters: usize = std::env::var("TSGO_BENCH_ITERS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(10);
+
+    // ---- GEMM family ---------------------------------------------------
+    let (m, k, n) = (256, 704, 128);
+    let a = Matrix::randn(m, k, 1.0, &mut rng);
+    let b = Matrix::randn(n, k, 1.0, &mut rng); // used transposed
+    let flops = 2.0 * m as f64 * k as f64 * n as f64;
+    ms.push(bench_units(
+        &format!("native gemm f32 [{m}x{k}]·[{k}x{n}]"),
+        2,
+        iters,
+        Some(flops),
+        &mut || {
+            std::hint::black_box(a.matmul_bt(&b));
+        },
+    ));
+
+    let spec = QuantSpec::new(2, 64);
+    let scales = compute_group_scales(&b, &spec, ScaleMetric::L2, None);
+    let q = tsgo::quant::rtn::rtn_quantize(&b, &scales, &spec);
+    ms.push(bench_units(
+        "dequant(INT2) + gemm (deploy path)",
+        2,
+        iters,
+        Some(flops),
+        &mut || {
+            let w = q.dequantize();
+            std::hint::black_box(a.matmul_bt(&w));
+        },
+    ));
+
+    // ---- Hessian accumulation ------------------------------------------
+    let t = 2048;
+    let d = 256;
+    let x = Matrix::randn(t, d, 1.0, &mut rng);
+    let hflops = t as f64 * d as f64 * d as f64;
+    ms.push(bench_units(
+        &format!("hessian accum native [{t}x{d}]"),
+        1,
+        iters,
+        Some(hflops),
+        &mut || {
+            let mut acc = MomentAccum::new(d);
+            acc.add(&x);
+            std::hint::black_box(acc.finalize());
+        },
+    ));
+
+    // ---- scale search + refinement ---------------------------------------
+    let w = Matrix::randn(704, 256, 1.0, &mut rng);
+    let xact = Matrix::randn(256, 1024, 1.0, &mut rng);
+    let mut h = xact.matmul_bt(&xact);
+    h.scale_inplace(1.0 / 1024.0);
+    let groups = (w.rows * w.cols / 64) as f64;
+
+    ms.push(bench_units(
+        "stage1 grid init (H_ii metric) [704x256]",
+        1,
+        iters.min(5),
+        Some(groups),
+        &mut || {
+            std::hint::black_box(tsgo::quant::stage1::stage1_init(&w, &h, &spec));
+        },
+    ));
+    ms.push(bench_units(
+        "baseline grid init (L2) [704x256]",
+        1,
+        iters.min(5),
+        Some(groups),
+        &mut || {
+            std::hint::black_box(tsgo::quant::stage1::baseline_init(&w, &spec));
+        },
+    ));
+
+    let gscales = compute_group_scales(&w, &spec, ScaleMetric::L2, None);
+    ms.push(bench_units(
+        "gptq sweep [704x256] INT2",
+        1,
+        iters.min(5),
+        Some((w.rows * w.cols) as f64),
+        &mut || {
+            std::hint::black_box(
+                gptq_quantize(&w, &h, &gscales, &spec, &GptqConfig::default()).unwrap(),
+            );
+        },
+    ));
+
+    let mut qlin = gptq_quantize(&w, &h, &gscales, &spec, &GptqConfig::default()).unwrap();
+    ms.push(bench_units(
+        "stage2 CD refine (4 sweeps) [704x256]",
+        1,
+        iters.min(5),
+        Some(groups * 4.0),
+        &mut || {
+            let mut q2 = qlin.clone();
+            std::hint::black_box(tsgo::quant::stage2::refine_quantized_linear(
+                &w,
+                &mut q2,
+                &h,
+                None,
+                &Stage2Config::default(),
+            ));
+        },
+    ));
+    // keep qlin alive for potential artifact comparison below
+    let _ = &mut qlin;
+
+    // ---- artifact (Pallas) paths ----------------------------------------
+    if let Some(engine) = Engine::open_default() {
+        let cfg = engine.manifest.config;
+        if engine.has_entry("hessian_accum_d") {
+            let entry = engine.manifest.entry("hessian_accum_d").unwrap();
+            let (ta, da) = (entry.inputs[0].shape[0], entry.inputs[0].shape[1]);
+            let xa = Matrix::randn(ta, da, 1.0, &mut rng);
+            let lit = matrix_to_literal(&xa).unwrap();
+            engine.execute("hessian_accum_d", &[lit]).unwrap(); // compile
+            ms.push(bench_units(
+                &format!("hessian accum pallas-HLO [{ta}x{da}]"),
+                1,
+                iters,
+                Some(ta as f64 * da as f64 * da as f64),
+                &mut || {
+                    let lit = matrix_to_literal(&xa).unwrap();
+                    std::hint::black_box(engine.execute("hessian_accum_d", &[lit]).unwrap());
+                },
+            ));
+        }
+        if engine.has_entry("dequant_matmul") {
+            let e = engine.manifest.entry("dequant_matmul").unwrap();
+            let (tq, cin) = (e.inputs[0].shape[0], e.inputs[0].shape[1]);
+            let (rows, nwords) = (e.inputs[1].shape[0], e.inputs[1].shape[1]);
+            let n_g = e.inputs[2].shape[1];
+            let xq = Matrix::randn(tq, cin, 1.0, &mut rng);
+            let words = vec![0x55AA55AAu32; rows * nwords];
+            let sc = Matrix::randn(rows, n_g, 0.05, &mut rng);
+            let zs = Matrix::zeros(rows, n_g);
+            let run = |engine: &Engine| {
+                let inputs = vec![
+                    matrix_to_literal(&xq).unwrap(),
+                    xla::Literal::vec1(&words)
+                        .reshape(&[rows as i64, nwords as i64])
+                        .unwrap(),
+                    matrix_to_literal(&sc).unwrap(),
+                    matrix_to_literal(&zs).unwrap(),
+                ];
+                engine.execute("dequant_matmul", &inputs).unwrap()
+            };
+            run(&engine); // compile
+            ms.push(bench_units(
+                &format!("fused dequant-matmul pallas-HLO [{tq}x{cin}]→[{tq}x{rows}]"),
+                1,
+                iters,
+                Some(2.0 * tq as f64 * cin as f64 * rows as f64),
+                &mut || {
+                    std::hint::black_box(run(&engine));
+                },
+            ));
+        }
+        let _ = cfg;
+    } else {
+        println!("(artifacts missing — pallas-HLO comparisons skipped; run `make artifacts`)");
+    }
+
+    print_measurements("kernel microbenchmarks", &ms);
+    println!("\nthroughput column: FLOP/s for gemm/hessian rows, groups/s for scale-search rows, weights/s for the gptq sweep.");
+}

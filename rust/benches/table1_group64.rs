@@ -1,0 +1,46 @@
+//! **Table 1** — group-wise quantization, group size 64: FP baseline vs
+//! {GPTQ, ours} at INT2 and INT3; columns = PPL(synthwiki), PPL(synthc4),
+//! 0-shot average, plus our layer-loss and wall-clock diagnostics.
+//!
+//! `cargo bench --bench table1_group64` (env: TSGO_BENCH_PRESET=tiny|small|base,
+//! TSGO_BENCH_CALIB=<n seqs>).
+
+mod common;
+
+use tsgo::quant::MethodConfig;
+use tsgo::util::bench::Table;
+
+fn main() {
+    let env = common::setup(common::preset_from_env());
+    env.describe("Table 1 — group size 64");
+
+    let mut table = Table::new(&[
+        "precision", "method", "synthwiki (↓)", "synthc4 (↓)", "0-shot (↑)",
+        "Σ layer loss", "time (s)",
+    ]);
+    table.row(vec![
+        "FP".into(),
+        "baseline".into(),
+        format!("{:.3}", env.ppl(&env.fp, &env.wiki_test)),
+        format!("{:.3}", env.ppl(&env.fp, &env.c4_test)),
+        format!("{:.2}", env.zero_shot(&env.fp)),
+        "-".into(),
+        "-".into(),
+    ]);
+    for bits in [2u8, 3] {
+        for method in [MethodConfig::GPTQ, MethodConfig::OURS] {
+            let r = common::run_cell(&env, bits, 64, method);
+            table.row(vec![
+                r.precision,
+                r.method.into(),
+                format!("{:.3}", r.wiki),
+                format!("{:.3}", r.c4),
+                format!("{:.2}", r.zshot),
+                format!("{:.3e}", r.layer_loss),
+                format!("{:.1}", r.secs),
+            ]);
+        }
+    }
+    table.print("Table 1 reproduction (group=64)");
+    println!("paper shape to verify: ours beats GPTQ on every row; INT2 gaps are large, INT3 gaps small.");
+}

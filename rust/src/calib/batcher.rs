@@ -1,0 +1,133 @@
+//! Sequence sampling: calibration batches and evaluation windows.
+
+use crate::util::rng::Rng;
+
+/// A batch of token sequences, row-major `[batch, seq_len]`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Batch {
+    pub batch: usize,
+    pub seq_len: usize,
+    pub tokens: Vec<u8>,
+}
+
+impl Batch {
+    pub fn seq(&self, b: usize) -> &[u8] {
+        &self.tokens[b * self.seq_len..(b + 1) * self.seq_len]
+    }
+
+    /// Tokens as i32 (the dtype the HLO artifacts take).
+    pub fn tokens_i32(&self) -> Vec<i32> {
+        self.tokens.iter().map(|&t| t as i32).collect()
+    }
+
+    /// Next-token targets: `targets[b, t] = tokens[b, t+1]`, last column is
+    /// the padding id 0 and must be masked by the loss.
+    pub fn shifted_targets(&self) -> Vec<u8> {
+        let mut out = vec![0u8; self.tokens.len()];
+        for b in 0..self.batch {
+            let src = self.seq(b);
+            let dst = &mut out[b * self.seq_len..(b + 1) * self.seq_len];
+            dst[..self.seq_len - 1].copy_from_slice(&src[1..]);
+        }
+        out
+    }
+}
+
+/// Sample `n_seqs` random sequences of `seq_len` tokens (the paper's
+/// "128 random sequences of length 2048"), grouped into batches of
+/// `batch_size`.
+pub fn calibration_batches(
+    data: &[u8],
+    n_seqs: usize,
+    seq_len: usize,
+    batch_size: usize,
+    seed: u64,
+) -> Vec<Batch> {
+    assert!(data.len() > seq_len, "corpus shorter than seq_len");
+    let mut rng = Rng::new(seed);
+    let mut batches = Vec::new();
+    let mut remaining = n_seqs;
+    while remaining > 0 {
+        let b = batch_size.min(remaining);
+        let mut tokens = Vec::with_capacity(b * seq_len);
+        for _ in 0..b {
+            let start = rng.below(data.len() - seq_len);
+            tokens.extend_from_slice(&data[start..start + seq_len]);
+        }
+        batches.push(Batch { batch: b, seq_len, tokens });
+        remaining -= b;
+    }
+    batches
+}
+
+/// Contiguous non-overlapping evaluation windows over `data` (perplexity is
+/// computed over these, like lm-eval's sliding-window-free protocol).
+pub fn eval_windows(data: &[u8], seq_len: usize, max_windows: usize) -> Vec<Vec<u8>> {
+    data.chunks_exact(seq_len)
+        .take(max_windows)
+        .map(|c| c.to_vec())
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::calib::corpus::{Corpus, CorpusKind};
+
+    fn data() -> Vec<u8> {
+        Corpus::generate(CorpusKind::SynthWiki, 20_000, 1).bytes
+    }
+
+    #[test]
+    fn calibration_shapes() {
+        let d = data();
+        let batches = calibration_batches(&d, 10, 128, 4, 7);
+        assert_eq!(batches.len(), 3); // 4 + 4 + 2
+        assert_eq!(batches[0].batch, 4);
+        assert_eq!(batches[2].batch, 2);
+        assert!(batches.iter().all(|b| b.tokens.len() == b.batch * 128));
+    }
+
+    #[test]
+    fn calibration_deterministic() {
+        let d = data();
+        let a = calibration_batches(&d, 4, 64, 2, 9);
+        let b = calibration_batches(&d, 4, 64, 2, 9);
+        assert_eq!(a, b);
+        let c = calibration_batches(&d, 4, 64, 2, 10);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn sequences_are_substrings() {
+        let d = data();
+        let batches = calibration_batches(&d, 3, 50, 3, 1);
+        for b in &batches {
+            for i in 0..b.batch {
+                let seq = b.seq(i);
+                assert!(d.windows(50).any(|w| w == seq));
+            }
+        }
+    }
+
+    #[test]
+    fn shifted_targets_align() {
+        let b = Batch { batch: 2, seq_len: 4, tokens: vec![1, 2, 3, 4, 9, 8, 7, 6] };
+        assert_eq!(b.shifted_targets(), vec![2, 3, 4, 0, 8, 7, 6, 0]);
+    }
+
+    #[test]
+    fn eval_windows_cover_prefix() {
+        let d = data();
+        let ws = eval_windows(&d, 100, 5);
+        assert_eq!(ws.len(), 5);
+        assert_eq!(ws[0], d[..100].to_vec());
+        assert_eq!(ws[1], d[100..200].to_vec());
+    }
+
+    #[test]
+    #[should_panic(expected = "corpus shorter")]
+    fn short_corpus_panics() {
+        calibration_batches(&[1, 2, 3], 1, 10, 1, 0);
+    }
+}

@@ -1,0 +1,16 @@
+//! Calibration and evaluation data pipeline.
+//!
+//! The paper calibrates on 128 random length-2048 sequences from WikiText-2
+//! and evaluates perplexity on the WikiText-2 and C4 test splits. Neither
+//! dataset ships with this environment, so [`corpus`] synthesizes two
+//! *distributionally distinct* byte-level corpora from seeded stochastic
+//! grammars ("synthwiki" — prose-like, and "synthc4" — web-like), giving the
+//! same in-domain/out-of-domain structure the Wiki2/C4 pair provides.
+//! [`batcher`] mirrors the paper's sampling: random fixed-length calibration
+//! sequences and contiguous evaluation windows.
+
+pub mod batcher;
+pub mod corpus;
+
+pub use batcher::{calibration_batches, eval_windows, Batch};
+pub use corpus::{Corpus, CorpusKind};

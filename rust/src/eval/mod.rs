@@ -1,0 +1,7 @@
+//! Evaluation harness: perplexity and the synthetic zero-shot suite.
+
+pub mod ppl;
+pub mod tasks;
+
+pub use ppl::{perplexity, perplexity_with};
+pub use tasks::{task_suite, TaskReport};

@@ -1,0 +1,295 @@
+//! Synthetic zero-shot task suite — the "0-shot avg" column of Tables 1–2.
+//!
+//! The paper averages 8 multiple-choice commonsense benchmarks scored by
+//! (length-normalized) log-likelihood. We build the same *measurement* on
+//! the synthetic corpora: four task families whose ground truth comes from
+//! the corpus generator's regularities, scored exactly like lm-eval-harness
+//! (pick the choice with the highest per-byte log-likelihood under the
+//! model). Quantization that damages the model's learned structure shows up
+//! as accuracy loss here even when PPL shifts are subtle.
+//!
+//! Families:
+//! * **cloze** — real corpus continuation vs corrupted continuations;
+//! * **copy** — `A B A B A _` pattern completion vs wrong token;
+//! * **case** — sentence-initial capitalization convention;
+//! * **odd-one-out** — in-distribution word vs cross-corpus word.
+
+use crate::calib::corpus::{Corpus, CorpusKind};
+use crate::model::ModelWeights;
+use crate::tensor::Matrix;
+use crate::util::rng::Rng;
+
+/// One multiple-choice item: shared prompt, k choices, index of the answer.
+#[derive(Clone, Debug)]
+pub struct TaskItem {
+    pub prompt: Vec<u8>,
+    pub choices: Vec<Vec<u8>>,
+    pub answer: usize,
+    pub family: &'static str,
+}
+
+/// Per-family and aggregate accuracy.
+#[derive(Clone, Debug)]
+pub struct TaskReport {
+    pub per_family: Vec<(String, f64, usize)>,
+    pub average: f64,
+}
+
+/// Build the full suite from a corpus (deterministic in seed).
+pub fn build_suite(corpus: &Corpus, n_per_family: usize, seed: u64) -> Vec<TaskItem> {
+    let mut rng = Rng::new(seed);
+    let mut items = Vec::new();
+    let data = &corpus.bytes;
+
+    // -- cloze: true continuation vs byte-shuffled continuation -------------
+    for _ in 0..n_per_family {
+        let plen = 24 + rng.below(16);
+        let clen = 8;
+        let start = rng.below(data.len() - plen - clen - 1);
+        let prompt = data[start..start + plen].to_vec();
+        let truth = data[start + plen..start + plen + clen].to_vec();
+        let mut corrupt = truth.clone();
+        // shuffle until different
+        loop {
+            rng.shuffle(&mut corrupt);
+            if corrupt != truth {
+                break;
+            }
+        }
+        let mut corrupt2 = truth.clone();
+        for b in corrupt2.iter_mut() {
+            *b = b.wrapping_add(13) & 0x7f;
+        }
+        let answer = rng.below(3);
+        let mut choices = vec![corrupt, corrupt2];
+        choices.insert(answer, truth);
+        items.push(TaskItem { prompt, choices, answer, family: "cloze" });
+    }
+
+    // -- copy: repeated bigram pattern ---------------------------------------
+    for _ in 0..n_per_family {
+        let a = data[rng.below(data.len())];
+        let mut b = data[rng.below(data.len())];
+        if b == a {
+            b = b.wrapping_add(1);
+        }
+        let mut prompt = Vec::new();
+        for _ in 0..4 {
+            prompt.push(a);
+            prompt.push(b);
+        }
+        prompt.push(a);
+        let wrong = a; // repeating `a` breaks the alternation
+        let answer = rng.below(2);
+        let mut choices = vec![vec![wrong]];
+        choices.insert(answer, vec![b]);
+        items.push(TaskItem { prompt, choices, answer, family: "copy" });
+    }
+
+    // -- case: sentence starts are capitalized -------------------------------
+    for _ in 0..n_per_family {
+        // find a ". " boundary
+        let mut idx = None;
+        for _ in 0..200 {
+            let i = rng.below(data.len() - 40);
+            if data[i] == b'.' && data[i + 1] == b' ' && data[i + 2].is_ascii_uppercase() {
+                idx = Some(i);
+                break;
+            }
+        }
+        let Some(i) = idx else { continue };
+        let pstart = i.saturating_sub(20);
+        let prompt = data[pstart..i + 2].to_vec();
+        let upper = data[i + 2];
+        let lower = upper.to_ascii_lowercase();
+        let answer = rng.below(2);
+        let mut choices = vec![vec![lower]];
+        choices.insert(answer, vec![upper]);
+        items.push(TaskItem { prompt, choices, answer, family: "case" });
+    }
+
+    // -- odd-one-out: in-distribution continuation vs other-corpus bytes -----
+    let other = Corpus::generate(
+        match corpus.kind {
+            CorpusKind::SynthWiki => CorpusKind::SynthC4,
+            CorpusKind::SynthC4 => CorpusKind::SynthWiki,
+        },
+        data.len().min(50_000),
+        seed ^ 0xABCD,
+    );
+    for _ in 0..n_per_family {
+        let plen = 32;
+        let clen = 10;
+        let start = rng.below(data.len() - plen - clen - 1);
+        let prompt = data[start..start + plen].to_vec();
+        let truth = data[start + plen..start + plen + clen].to_vec();
+        let ostart = rng.below(other.bytes.len() - clen - 1);
+        let foreign = other.bytes[ostart..ostart + clen].to_vec();
+        if foreign == truth {
+            continue;
+        }
+        let answer = rng.below(2);
+        let mut choices = vec![foreign];
+        choices.insert(answer, truth);
+        items.push(TaskItem { prompt, choices, answer, family: "odd1out" });
+    }
+
+    items
+}
+
+/// Length-normalized log-likelihood of `continuation` given `prompt`.
+fn choice_score(logits_fn: &mut dyn FnMut(&[u8]) -> Matrix, prompt: &[u8], cont: &[u8]) -> f64 {
+    let mut seq = prompt.to_vec();
+    seq.extend_from_slice(cont);
+    let logits = logits_fn(&seq);
+    let mut ll = 0.0f64;
+    for (k, &target) in cont.iter().enumerate() {
+        let t = prompt.len() + k - 1; // logits at position t predict t+1
+        let row = logits.row(t);
+        let maxv = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let lse: f64 =
+            row.iter().map(|v| ((v - maxv) as f64).exp()).sum::<f64>().ln() + maxv as f64;
+        ll += row[target as usize] as f64 - lse;
+    }
+    ll / cont.len() as f64
+}
+
+/// Score the suite with an arbitrary logits function.
+pub fn task_suite_with(
+    items: &[TaskItem],
+    mut logits_fn: impl FnMut(&[u8]) -> Matrix,
+) -> TaskReport {
+    let mut per: std::collections::BTreeMap<&'static str, (usize, usize)> =
+        std::collections::BTreeMap::new();
+    for item in items {
+        let scores: Vec<f64> = item
+            .choices
+            .iter()
+            .map(|c| choice_score(&mut logits_fn, &item.prompt, c))
+            .collect();
+        let pick = scores
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(i, _)| i)
+            .unwrap();
+        let e = per.entry(item.family).or_insert((0, 0));
+        e.1 += 1;
+        if pick == item.answer {
+            e.0 += 1;
+        }
+    }
+    let per_family: Vec<(String, f64, usize)> = per
+        .iter()
+        .map(|(f, (c, n))| (f.to_string(), *c as f64 / *n as f64 * 100.0, *n))
+        .collect();
+    let average = if per_family.is_empty() {
+        0.0
+    } else {
+        per_family.iter().map(|(_, a, _)| a).sum::<f64>() / per_family.len() as f64
+    };
+    TaskReport { per_family, average }
+}
+
+/// Score the suite with a model's native forward (parallel over items).
+pub fn task_suite(w: &ModelWeights, items: &[TaskItem]) -> TaskReport {
+    // Parallelize by scoring items concurrently; reuse task_suite_with for
+    // the aggregation by pre-computing picks.
+    let picks: Vec<(usize, &'static str, bool)> =
+        crate::util::threadpool::parallel_map_items(items, |item| {
+            let mut f = |t: &[u8]| crate::model::forward_logits(w, t);
+            let scores: Vec<f64> = item
+                .choices
+                .iter()
+                .map(|c| choice_score(&mut f, &item.prompt, c))
+                .collect();
+            let pick = scores
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .map(|(i, _)| i)
+                .unwrap();
+            (pick, item.family, pick == item.answer)
+        });
+    let mut per: std::collections::BTreeMap<&'static str, (usize, usize)> =
+        std::collections::BTreeMap::new();
+    for (_, family, correct) in picks {
+        let e = per.entry(family).or_insert((0, 0));
+        e.1 += 1;
+        if correct {
+            e.0 += 1;
+        }
+    }
+    let per_family: Vec<(String, f64, usize)> = per
+        .iter()
+        .map(|(f, (c, n))| (f.to_string(), *c as f64 / *n as f64 * 100.0, *n))
+        .collect();
+    let average = if per_family.is_empty() {
+        0.0
+    } else {
+        per_family.iter().map(|(_, a, _)| a).sum::<f64>() / per_family.len() as f64
+    };
+    TaskReport { per_family, average }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::Preset;
+
+    fn corpus() -> Corpus {
+        Corpus::generate(CorpusKind::SynthWiki, 60_000, 1)
+    }
+
+    #[test]
+    fn suite_is_deterministic_and_balanced() {
+        let c = corpus();
+        let a = build_suite(&c, 10, 7);
+        let b = build_suite(&c, 10, 7);
+        assert_eq!(a.len(), b.len());
+        assert!(a.len() >= 30, "should have ≥3 full families, got {}", a.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.prompt, y.prompt);
+            assert_eq!(x.answer, y.answer);
+        }
+        // answers aren't always index 0
+        assert!(a.iter().any(|i| i.answer != 0));
+    }
+
+    #[test]
+    fn oracle_scorer_gets_full_marks() {
+        // A scorer that assigns probability 1 to exactly the corpus bytes
+        // should ace cloze/copy/case. Build oracle from a bigram table of
+        // the corpus itself... simpler: peek at the right answer by giving
+        // the true choice bytes high logits through a closure with state.
+        let c = corpus();
+        let items = build_suite(&c, 6, 3);
+        // Oracle: for each sequence, logits that put mass on the actual next
+        // byte of that very sequence (teacher forcing) — perfect LL for the
+        // true continuation, garbage for corrupted ones only if they differ.
+        let rep = task_suite_with(&items, |seq| {
+            let mut logits = Matrix::zeros(seq.len(), 256);
+            for t in 0..seq.len() - 1 {
+                logits[(t, seq[t + 1] as usize)] = 30.0;
+            }
+            logits
+        });
+        // teacher-forcing oracle scores every choice equally (it "predicts"
+        // whatever it sees), so this is a *metric plumbing* test: it must run
+        // all families and produce finite numbers.
+        assert!(rep.average.is_finite());
+        assert!(!rep.per_family.is_empty());
+    }
+
+    #[test]
+    fn random_model_near_chance() {
+        let mut rng = crate::util::rng::Rng::new(5);
+        let w = crate::model::ModelWeights::init(Preset::Tiny.config(), &mut rng);
+        let c = corpus();
+        let items = build_suite(&c, 8, 11);
+        let rep = task_suite(&w, &items);
+        // chance is 33% (cloze) / 50% (others); random init should land well
+        // below 90 and above 10.
+        assert!((10.0..90.0).contains(&rep.average), "avg={}", rep.average);
+    }
+}

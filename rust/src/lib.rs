@@ -1,0 +1,33 @@
+//! # tsgo — Two-Stage Grid Optimization for Group-wise Quantization of LLMs
+//!
+//! A from-scratch reproduction of the paper's post-training-quantization
+//! system as a three-layer Rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — the quantization coordinator: calibration
+//!   streaming, Hessian/deviation statistics, the GPTQ inner loop, the
+//!   paper's two-stage group-scale optimization ([`quant::stage1`],
+//!   [`quant::stage2`]), the layer-by-layer pipeline ([`pipeline`]),
+//!   evaluation ([`eval`]) and a batched generation server ([`serve`]).
+//! * **L2 (python/compile)** — the Llamette transformer forward/backward in
+//!   JAX, AOT-lowered once to HLO text artifacts.
+//! * **L1 (python/compile/kernels)** — Pallas kernels for the compute
+//!   hot-spots (Hessian accumulation, stage-1 grid search, fused
+//!   dequantize-matmul), lowered inside the L2 graphs.
+//!
+//! Python never runs at runtime: the [`runtime`] module loads the HLO
+//! artifacts via PJRT (`xla` crate) and executes them from Rust. Every
+//! artifact-backed op also has a native Rust fallback so the algorithm layer
+//! is fully testable without artifacts.
+
+pub mod calib;
+pub mod eval;
+pub mod model;
+pub mod pipeline;
+pub mod quant;
+pub mod runtime;
+pub mod serve;
+pub mod tensor;
+pub mod util;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,305 @@
+//! `tsgo` — the command-line launcher for the whole system.
+//!
+//! Subcommands:
+//! * `info`      — presets, artifact status, thread counts
+//! * `gen-data`  — write the synthetic corpora to disk
+//! * `train`     — train a Llamette from scratch (AOT train_step artifact)
+//! * `quantize`  — run the PTQ pipeline (GPTQ baseline or the paper's method)
+//! * `eval`      — perplexity + 0-shot suite for a checkpoint
+//! * `serve`     — batched generation server over a checkpoint
+//! * `warmup`    — pre-compile all HLO artifacts
+
+use anyhow::{bail, Context, Result};
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+use tsgo::calib::{calibration_batches, Corpus, CorpusKind};
+use tsgo::eval::tasks::{build_suite, task_suite};
+use tsgo::model::{store, ModelWeights, Preset};
+use tsgo::pipeline::{quantize_model, PipelineConfig};
+use tsgo::quant::{MethodConfig, QuantSpec};
+use tsgo::runtime::Engine;
+use tsgo::util::cli::{usage, Args, OptSpec};
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let code = match run(&argv) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn run(argv: &[String]) -> Result<()> {
+    let Some(cmd) = argv.first() else {
+        print_help();
+        return Ok(());
+    };
+    let rest = &argv[1..];
+    match cmd.as_str() {
+        "info" => cmd_info(),
+        "gen-data" => cmd_gen_data(rest),
+        "train" => cmd_train(rest),
+        "quantize" => cmd_quantize(rest),
+        "eval" => cmd_eval(rest),
+        "serve" => cmd_serve(rest),
+        "warmup" => cmd_warmup(),
+        "help" | "--help" | "-h" => {
+            print_help();
+            Ok(())
+        }
+        other => bail!("unknown command '{other}' (try `tsgo help`)"),
+    }
+}
+
+fn print_help() {
+    println!(
+        "tsgo — Two-Stage Grid Optimization for Group-wise Quantization of LLMs\n\n\
+         commands:\n\
+         \x20 info       environment / artifact status\n\
+         \x20 gen-data   write synthetic corpora (--out dir)\n\
+         \x20 train      train a model (--preset small --steps 300 --out model.tsr)\n\
+         \x20 quantize   PTQ pipeline (--model m.tsr --method ours --bits 2 --group 64)\n\
+         \x20 eval       PPL + 0-shot (--model m.tsr [--quantized])\n\
+         \x20 serve      generation server (--model m.tsr --addr 127.0.0.1:7433)\n\
+         \x20 warmup     pre-compile all artifacts"
+    );
+}
+
+fn cmd_info() -> Result<()> {
+    println!("tsgo build info");
+    println!("  threads: {}", tsgo::util::threadpool::num_threads());
+    for p in [Preset::Tiny, Preset::Small, Preset::Base] {
+        let c = p.config();
+        println!(
+            "  preset {:<6} d={} L={} heads={} ffn={} params={:.2}M",
+            p.label(),
+            c.d_model,
+            c.n_layers,
+            c.n_heads,
+            c.ffn,
+            c.n_params() as f64 / 1e6
+        );
+    }
+    match Engine::open_default() {
+        Some(e) => {
+            println!(
+                "  artifacts: {} entries for d_model={} (dir {})",
+                e.manifest.entries.len(),
+                e.manifest.config.d_model,
+                e.manifest.dir.display()
+            );
+        }
+        None => println!("  artifacts: none (run `make artifacts`)"),
+    }
+    Ok(())
+}
+
+fn cmd_gen_data(argv: &[String]) -> Result<()> {
+    let specs = [
+        OptSpec { name: "out", help: "output directory", default: Some("data"), is_flag: false },
+        OptSpec { name: "bytes", help: "corpus size in bytes", default: Some("400000"), is_flag: false },
+        OptSpec { name: "seed", help: "generation seed", default: Some("1"), is_flag: false },
+    ];
+    let a = parse(argv, "tsgo gen-data", "write synthetic corpora", &specs)?;
+    let dir = PathBuf::from(a.str("out"));
+    std::fs::create_dir_all(&dir)?;
+    let n = a.usize("bytes").map_err(anyhow::Error::msg)?;
+    let seed = a.u64("seed").map_err(anyhow::Error::msg)?;
+    for kind in [CorpusKind::SynthWiki, CorpusKind::SynthC4] {
+        let c = Corpus::generate(kind, n, seed);
+        let path = dir.join(format!("{}.txt", kind.label()));
+        std::fs::write(&path, &c.bytes)?;
+        println!("wrote {} ({} bytes)", path.display(), c.bytes.len());
+    }
+    Ok(())
+}
+
+fn cmd_train(argv: &[String]) -> Result<()> {
+    let specs = [
+        OptSpec { name: "steps", help: "training steps", default: Some("300"), is_flag: false },
+        OptSpec { name: "seed", help: "init/data seed", default: Some("7"), is_flag: false },
+        OptSpec { name: "out", help: "checkpoint path", default: Some("model.tsr"), is_flag: false },
+        OptSpec { name: "corpus-bytes", help: "training corpus size", default: Some("400000"), is_flag: false },
+    ];
+    let a = parse(argv, "tsgo train", "train a Llamette from scratch", &specs)?;
+    let engine = Engine::open_default()
+        .context("training needs artifacts — run `make artifacts` first")?;
+    let corpus = Corpus::generate(
+        CorpusKind::SynthWiki,
+        a.usize("corpus-bytes").map_err(anyhow::Error::msg)?,
+        1,
+    );
+    let (train_split, _) = corpus.split(0.1);
+    let cfg = tsgo::runtime::TrainConfig {
+        steps: a.usize("steps").map_err(anyhow::Error::msg)?,
+        seed: a.u64("seed").map_err(anyhow::Error::msg)?,
+        log_every: 25,
+    };
+    println!(
+        "training preset matching artifacts ({:.2}M params) for {} steps…",
+        engine.manifest.config.n_params() as f64 / 1e6,
+        cfg.steps
+    );
+    let t0 = std::time::Instant::now();
+    let out = tsgo::runtime::train(&engine, train_split, &cfg)?;
+    println!(
+        "trained in {} — loss {:.4} → {:.4}",
+        tsgo::util::fmt_duration(t0.elapsed()),
+        out.losses.first().copied().unwrap_or(0.0),
+        out.losses.last().copied().unwrap_or(0.0)
+    );
+    let path = PathBuf::from(a.str("out"));
+    store::save_model(&path, &out.weights)?;
+    println!("saved {}", path.display());
+    Ok(())
+}
+
+fn method_from_str(s: &str) -> Result<MethodConfig> {
+    Ok(match s {
+        "gptq" => MethodConfig::GPTQ,
+        "ours" => MethodConfig::OURS,
+        "stage1" => MethodConfig::STAGE1_ONLY,
+        "stage2" => MethodConfig::STAGE2_ONLY,
+        _ => bail!("unknown method '{s}' (gptq|ours|stage1|stage2)"),
+    })
+}
+
+fn cmd_quantize(argv: &[String]) -> Result<()> {
+    let specs = [
+        OptSpec { name: "model", help: "FP checkpoint", default: Some("model.tsr"), is_flag: false },
+        OptSpec { name: "out", help: "quantized checkpoint", default: Some("model.q.tsr"), is_flag: false },
+        OptSpec { name: "method", help: "gptq|ours|stage1|stage2", default: Some("ours"), is_flag: false },
+        OptSpec { name: "bits", help: "bit width (2/3/4/8)", default: Some("2"), is_flag: false },
+        OptSpec { name: "group", help: "group size", default: Some("64"), is_flag: false },
+        OptSpec { name: "calib-seqs", help: "calibration sequences", default: Some("32"), is_flag: false },
+        OptSpec { name: "seed", help: "calibration seed", default: Some("3"), is_flag: false },
+    ];
+    let a = parse(argv, "tsgo quantize", "run the PTQ pipeline", &specs)?;
+    let w = store::load_model(Path::new(&a.str("model")))?;
+    let corpus = Corpus::generate(CorpusKind::SynthWiki, 400_000, 1);
+    let (train_split, _) = corpus.split(0.1);
+    let calib = calibration_batches(
+        train_split,
+        a.usize("calib-seqs").map_err(anyhow::Error::msg)?,
+        w.config.seq_len,
+        4,
+        a.u64("seed").map_err(anyhow::Error::msg)?,
+    );
+    let spec = QuantSpec::new(
+        a.usize("bits").map_err(anyhow::Error::msg)? as u8,
+        a.usize("group").map_err(anyhow::Error::msg)?,
+    );
+    let method = method_from_str(&a.str("method"))?;
+    println!(
+        "quantizing {} linears at INT{} group={} with {}…",
+        7 * w.config.n_layers,
+        spec.bits,
+        spec.group_size,
+        method.label()
+    );
+    let (qm, report) = quantize_model(&w, &calib, &PipelineConfig::new(spec, method))?;
+    println!(
+        "done in {} — total layer loss {:.4e} (stats {} | scales {} | gptq {} | stage2 {})",
+        tsgo::util::fmt_duration(report.total_time),
+        report.total_loss(),
+        tsgo::util::fmt_duration(report.time_stats),
+        tsgo::util::fmt_duration(report.time_scales),
+        tsgo::util::fmt_duration(report.time_gptq),
+        tsgo::util::fmt_duration(report.time_stage2),
+    );
+    let out = PathBuf::from(a.str("out"));
+    store::save_quantized(&out, &qm)?;
+    println!(
+        "saved {} ({:.2} bits/weight effective)",
+        out.display(),
+        qm.linears.values().map(|q| q.bits_per_weight()).sum::<f64>()
+            / qm.linears.len() as f64
+    );
+    Ok(())
+}
+
+fn load_any_model(path: &Path, quantized: bool) -> Result<ModelWeights> {
+    if quantized {
+        Ok(store::load_quantized(path)?.weights)
+    } else {
+        store::load_model(path)
+    }
+}
+
+fn cmd_eval(argv: &[String]) -> Result<()> {
+    let specs = [
+        OptSpec { name: "model", help: "checkpoint path", default: Some("model.tsr"), is_flag: false },
+        OptSpec { name: "quantized", help: "checkpoint is quantized", default: None, is_flag: true },
+        OptSpec { name: "windows", help: "eval windows per corpus", default: Some("32"), is_flag: false },
+        OptSpec { name: "tasks", help: "items per 0-shot family", default: Some("25"), is_flag: false },
+        OptSpec { name: "native", help: "force native forward (skip artifacts)", default: None, is_flag: true },
+    ];
+    let a = parse(argv, "tsgo eval", "PPL + 0-shot evaluation", &specs)?;
+    let w = load_any_model(Path::new(&a.str("model")), a.flag("quantized"))?;
+    let windows = a.usize("windows").map_err(anyhow::Error::msg)?;
+    let engine = if a.flag("native") { None } else { Engine::open_default() };
+
+    for kind in [CorpusKind::SynthWiki, CorpusKind::SynthC4] {
+        let corpus = Corpus::generate(kind, 400_000, 1);
+        let (_, test) = corpus.split(0.1);
+        let ppl = match &engine {
+            Some(e) if e.manifest.config == w.config => {
+                tsgo::runtime::perplexity_artifact(e, &w, test, w.config.seq_len, windows)?
+            }
+            _ => tsgo::eval::perplexity(&w, test, w.config.seq_len, windows),
+        };
+        println!("ppl[{}] = {ppl:.3}", kind.label());
+    }
+    let corpus = Corpus::generate(CorpusKind::SynthWiki, 400_000, 1);
+    let items = build_suite(&corpus, a.usize("tasks").map_err(anyhow::Error::msg)?, 17);
+    let rep = task_suite(&w, &items);
+    for (family, acc, n) in &rep.per_family {
+        println!("0-shot {family:<8} {acc:5.1}%  (n={n})");
+    }
+    println!("0-shot avg = {:.2}%", rep.average);
+    Ok(())
+}
+
+fn cmd_serve(argv: &[String]) -> Result<()> {
+    let specs = [
+        OptSpec { name: "model", help: "checkpoint path", default: Some("model.tsr"), is_flag: false },
+        OptSpec { name: "quantized", help: "checkpoint is quantized", default: None, is_flag: true },
+        OptSpec { name: "addr", help: "bind address", default: Some("127.0.0.1:7433"), is_flag: false },
+        OptSpec { name: "max-batch", help: "dynamic batch cap", default: Some("8"), is_flag: false },
+    ];
+    let a = parse(argv, "tsgo serve", "batched generation server", &specs)?;
+    let w = Arc::new(load_any_model(Path::new(&a.str("model")), a.flag("quantized"))?);
+    let cfg = tsgo::serve::ServerConfig {
+        addr: a.str("addr"),
+        batcher: tsgo::serve::BatcherConfig {
+            max_batch: a.usize("max-batch").map_err(anyhow::Error::msg)?,
+            ..Default::default()
+        },
+        max_connections: None,
+    };
+    tsgo::serve::serve(w, cfg)
+}
+
+fn cmd_warmup() -> Result<()> {
+    let engine = Engine::open_default().context("no artifacts — run `make artifacts`")?;
+    let t0 = std::time::Instant::now();
+    let loaded = engine.warmup()?;
+    println!(
+        "compiled {} artifacts in {}: {}",
+        loaded.len(),
+        tsgo::util::fmt_duration(t0.elapsed()),
+        loaded.join(", ")
+    );
+    Ok(())
+}
+
+fn parse(argv: &[String], cmd: &str, about: &str, specs: &[OptSpec]) -> Result<Args> {
+    if argv.iter().any(|a| a == "--help" || a == "-h") {
+        println!("{}", usage(cmd, about, specs));
+        std::process::exit(0);
+    }
+    Args::parse(argv, specs).map_err(anyhow::Error::msg)
+}

@@ -1,0 +1,152 @@
+//! Model configuration and presets.
+
+use crate::util::json::Json;
+
+/// Llamette hyper-parameters. All linear dimensions are multiples of 64 so
+/// the paper's group sizes (32, 64) tile exactly.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ModelConfig {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub ffn: usize,
+    /// Training / evaluation context length.
+    pub seq_len: usize,
+}
+
+/// Named size presets (see DESIGN.md §6).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Preset {
+    /// ~0.2 M params — unit/integration tests.
+    Tiny,
+    /// ~3.4 M params — default for examples and table benches.
+    Small,
+    /// ~19 M params — larger table runs and perf work.
+    Base,
+}
+
+impl Preset {
+    pub fn parse(s: &str) -> Option<Preset> {
+        match s {
+            "tiny" => Some(Preset::Tiny),
+            "small" => Some(Preset::Small),
+            "base" => Some(Preset::Base),
+            _ => None,
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            Preset::Tiny => "tiny",
+            Preset::Small => "small",
+            Preset::Base => "base",
+        }
+    }
+
+    pub fn config(&self) -> ModelConfig {
+        match self {
+            Preset::Tiny => ModelConfig {
+                vocab: 256,
+                d_model: 64,
+                n_layers: 2,
+                n_heads: 2,
+                ffn: 128,
+                seq_len: 64,
+            },
+            Preset::Small => ModelConfig {
+                vocab: 256,
+                d_model: 256,
+                n_layers: 4,
+                n_heads: 4,
+                ffn: 704,
+                seq_len: 128,
+            },
+            Preset::Base => ModelConfig {
+                vocab: 256,
+                d_model: 512,
+                n_layers: 6,
+                n_heads: 8,
+                ffn: 1408,
+                seq_len: 128,
+            },
+        }
+    }
+}
+
+impl ModelConfig {
+    pub fn head_dim(&self) -> usize {
+        self.d_model / self.n_heads
+    }
+
+    /// Total parameter count.
+    pub fn n_params(&self) -> usize {
+        let attn = 4 * self.d_model * self.d_model;
+        let mlp = 3 * self.d_model * self.ffn;
+        let norms = 2 * self.d_model;
+        self.vocab * self.d_model * 2 // embed + untied head
+            + self.n_layers * (attn + mlp + norms)
+            + self.d_model // final norm
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("vocab", Json::num(self.vocab as f64)),
+            ("d_model", Json::num(self.d_model as f64)),
+            ("n_layers", Json::num(self.n_layers as f64)),
+            ("n_heads", Json::num(self.n_heads as f64)),
+            ("ffn", Json::num(self.ffn as f64)),
+            ("seq_len", Json::num(self.seq_len as f64)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Option<ModelConfig> {
+        Some(ModelConfig {
+            vocab: j.get("vocab").as_usize()?,
+            d_model: j.get("d_model").as_usize()?,
+            n_layers: j.get("n_layers").as_usize()?,
+            n_heads: j.get("n_heads").as_usize()?,
+            ffn: j.get("ffn").as_usize()?,
+            seq_len: j.get("seq_len").as_usize()?,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_parse() {
+        for p in [Preset::Tiny, Preset::Small, Preset::Base] {
+            assert_eq!(Preset::parse(p.label()), Some(p));
+        }
+        assert_eq!(Preset::parse("huge"), None);
+    }
+
+    #[test]
+    fn dims_are_group_aligned() {
+        for p in [Preset::Tiny, Preset::Small, Preset::Base] {
+            let c = p.config();
+            assert_eq!(c.d_model % 64, 0, "{p:?}");
+            assert_eq!(c.ffn % 64, 0, "{p:?}");
+            assert_eq!(c.d_model % c.n_heads, 0, "{p:?}");
+        }
+    }
+
+    #[test]
+    fn param_counts_in_expected_band() {
+        assert!(Preset::Tiny.config().n_params() < 500_000);
+        let small = Preset::Small.config().n_params();
+        assert!((3_000_000..5_000_000).contains(&small), "small={small}");
+        let base = Preset::Base.config().n_params();
+        assert!((15_000_000..30_000_000).contains(&base), "base={base}");
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let c = Preset::Small.config();
+        let j = c.to_json();
+        assert_eq!(ModelConfig::from_json(&j), Some(c));
+    }
+}

@@ -1,0 +1,425 @@
+//! Native Rust forward pass (mirror of `python/compile/model.py`).
+//!
+//! Three entry points:
+//! * [`forward_logits`] — full-sequence logits, used as the runtime fallback
+//!   for perplexity evaluation and by tests that cross-check the HLO
+//!   artifact;
+//! * [`forward_captures`] — the same pass but recording the inputs of every
+//!   linear projection (what the quantization pipeline accumulates
+//!   Hessians from);
+//! * [`DecodeState`] — incremental KV-cached decoding for the serve path.
+//!
+//! Numerics must match the JAX model: RMSNorm ε = 1e-5, rotary embeddings
+//! over pairs `(x[2i], x[2i+1])` with base 10000, pre-norm residual blocks.
+
+use super::weights::{LayerWeights, ModelWeights};
+use crate::tensor::Matrix;
+
+const RMS_EPS: f32 = 1e-5;
+const ROPE_BASE: f32 = 10_000.0;
+
+/// RMSNorm over the last axis of `[T, d]`.
+fn rmsnorm(x: &Matrix, gain: &[f32]) -> Matrix {
+    let mut out = Matrix::zeros(x.rows, x.cols);
+    for t in 0..x.rows {
+        let row = x.row(t);
+        let ms: f64 =
+            row.iter().map(|v| (*v as f64) * (*v as f64)).sum::<f64>() / x.cols as f64;
+        let inv = 1.0 / (ms + RMS_EPS as f64).sqrt() as f32;
+        let orow = out.row_mut(t);
+        for c in 0..x.cols {
+            orow[c] = row[c] * inv * gain[c];
+        }
+    }
+    out
+}
+
+/// Apply rotary embeddings in place to `[T, d]` laid out as heads of
+/// `head_dim`, rotating pairs `(2i, 2i+1)` at angle `pos · base^(−2i/hd)`.
+fn rope_inplace(x: &mut Matrix, n_heads: usize, pos_offset: usize) {
+    let d = x.cols;
+    let hd = d / n_heads;
+    for t in 0..x.rows {
+        let pos = (pos_offset + t) as f32;
+        let row = x.row_mut(t);
+        for h in 0..n_heads {
+            let base = h * hd;
+            for i in 0..hd / 2 {
+                let theta = pos / ROPE_BASE.powf(2.0 * i as f32 / hd as f32);
+                let (sin, cos) = theta.sin_cos();
+                let a = row[base + 2 * i];
+                let b = row[base + 2 * i + 1];
+                row[base + 2 * i] = a * cos - b * sin;
+                row[base + 2 * i + 1] = a * sin + b * cos;
+            }
+        }
+    }
+}
+
+/// Causal multi-head attention over full sequences.
+/// `q, k, v` are `[T, d]`; returns the pre-`wo` context `[T, d]`.
+fn attention(q: &Matrix, k: &Matrix, v: &Matrix, n_heads: usize) -> Matrix {
+    let t_len = q.rows;
+    let d = q.cols;
+    let hd = d / n_heads;
+    let scale = 1.0 / (hd as f32).sqrt();
+    let mut ctx = Matrix::zeros(t_len, d);
+    for h in 0..n_heads {
+        let base = h * hd;
+        for tq in 0..t_len {
+            // scores over keys 0..=tq
+            let qrow = &q.row(tq)[base..base + hd];
+            let mut scores = Vec::with_capacity(tq + 1);
+            let mut maxs = f32::NEG_INFINITY;
+            for tk in 0..=tq {
+                let krow = &k.row(tk)[base..base + hd];
+                let s = crate::tensor::matrix::dot(qrow, krow) * scale;
+                maxs = maxs.max(s);
+                scores.push(s);
+            }
+            let mut denom = 0.0f32;
+            for s in scores.iter_mut() {
+                *s = (*s - maxs).exp();
+                denom += *s;
+            }
+            let crow = ctx.row_mut(tq);
+            for (tk, p) in scores.iter().enumerate() {
+                let w = p / denom;
+                let vrow = &v.row(tk)[base..base + hd];
+                for i in 0..hd {
+                    crow[base + i] += w * vrow[i];
+                }
+            }
+        }
+    }
+    ctx
+}
+
+fn silu(x: f32) -> f32 {
+    x / (1.0 + (-x).exp())
+}
+
+/// Inputs of every linear projection in one block, laid out `[T, in]`.
+/// These are the `X` matrices the paper's Hessians `E[XXᵀ]` are built from.
+#[derive(Clone, Debug)]
+pub struct LayerCaptures {
+    /// Input to wq/wk/wv (post-ln1).
+    pub x_attn: Matrix,
+    /// Input to wo (attention context).
+    pub x_wo: Matrix,
+    /// Input to w1/w3 (post-ln2).
+    pub x_mlp: Matrix,
+    /// Input to w2 (SwiGLU activations).
+    pub x_w2: Matrix,
+}
+
+/// One block. Returns the new hidden state; optionally records captures.
+/// Public so the quantization pipeline can advance per-layer running
+/// hidden states (O(L) total blocks instead of O(L²) full forwards).
+pub fn block_forward(
+    l: &LayerWeights,
+    h: &Matrix,
+    n_heads: usize,
+    captures: Option<&mut LayerCaptures>,
+) -> Matrix {
+    let x_attn = rmsnorm(h, &l.ln1);
+    let mut q = x_attn.matmul_bt(&l.wq);
+    let mut k = x_attn.matmul_bt(&l.wk);
+    let v = x_attn.matmul_bt(&l.wv);
+    rope_inplace(&mut q, n_heads, 0);
+    rope_inplace(&mut k, n_heads, 0);
+    let ctx = attention(&q, &k, &v, n_heads);
+    let attn_out = ctx.matmul_bt(&l.wo);
+    let mut h1 = h.clone();
+    h1.add_inplace(&attn_out);
+
+    let x_mlp = rmsnorm(&h1, &l.ln2);
+    let gate = x_mlp.matmul_bt(&l.w1);
+    let up = x_mlp.matmul_bt(&l.w3);
+    let mut act = Matrix::zeros(gate.rows, gate.cols);
+    for i in 0..gate.data.len() {
+        act.data[i] = silu(gate.data[i]) * up.data[i];
+    }
+    let down = act.matmul_bt(&l.w2);
+    let mut h2 = h1;
+    h2.add_inplace(&down);
+
+    if let Some(cap) = captures {
+        *cap = LayerCaptures { x_attn, x_wo: ctx, x_mlp, x_w2: act };
+    }
+    h2
+}
+
+pub fn embed_tokens(w: &ModelWeights, tokens: &[u8]) -> Matrix {
+    let d = w.config.d_model;
+    let mut h = Matrix::zeros(tokens.len(), d);
+    for (t, &tok) in tokens.iter().enumerate() {
+        h.row_mut(t).copy_from_slice(w.embed.row(tok as usize));
+    }
+    h
+}
+
+/// Full-sequence forward: `tokens` → logits `[T, vocab]`.
+pub fn forward_logits(w: &ModelWeights, tokens: &[u8]) -> Matrix {
+    let mut h = embed_tokens(w, tokens);
+    for l in &w.layers {
+        h = block_forward(l, &h, w.config.n_heads, None);
+    }
+    let f = rmsnorm(&h, &w.ln_f);
+    f.matmul_bt(&w.head)
+}
+
+/// Forward with per-layer linear-input capture (for Hessian accumulation).
+pub fn forward_captures(w: &ModelWeights, tokens: &[u8]) -> (Matrix, Vec<LayerCaptures>) {
+    let mut h = embed_tokens(w, tokens);
+    let mut caps = Vec::with_capacity(w.layers.len());
+    for l in &w.layers {
+        let mut c = LayerCaptures {
+            x_attn: Matrix::zeros(0, 0),
+            x_wo: Matrix::zeros(0, 0),
+            x_mlp: Matrix::zeros(0, 0),
+            x_w2: Matrix::zeros(0, 0),
+        };
+        h = block_forward(l, &h, w.config.n_heads, Some(&mut c));
+        caps.push(c);
+    }
+    let f = rmsnorm(&h, &w.ln_f);
+    (f.matmul_bt(&w.head), caps)
+}
+
+/// Mean cross-entropy of next-token prediction over a sequence.
+pub fn sequence_nll(w: &ModelWeights, tokens: &[u8]) -> f64 {
+    let logits = forward_logits(w, tokens);
+    let mut total = 0.0f64;
+    let n = tokens.len() - 1;
+    for t in 0..n {
+        let row = logits.row(t);
+        let target = tokens[t + 1] as usize;
+        let maxv = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let lse: f64 = row.iter().map(|v| ((v - maxv) as f64).exp()).sum::<f64>().ln()
+            + maxv as f64;
+        total += lse - row[target] as f64;
+    }
+    total / n as f64
+}
+
+/// Incremental KV-cached decoding state for one sequence (serve path).
+pub struct DecodeState<'a> {
+    weights: &'a ModelWeights,
+    /// Per layer: cached K and V, `[t_so_far, d]`.
+    kcache: Vec<Matrix>,
+    vcache: Vec<Matrix>,
+    pub pos: usize,
+}
+
+impl<'a> DecodeState<'a> {
+    pub fn new(weights: &'a ModelWeights) -> DecodeState<'a> {
+        let n = weights.config.n_layers;
+        DecodeState {
+            weights,
+            kcache: (0..n).map(|_| Matrix::zeros(0, weights.config.d_model)).collect(),
+            vcache: (0..n).map(|_| Matrix::zeros(0, weights.config.d_model)).collect(),
+            pos: 0,
+        }
+    }
+
+    /// Feed one token; returns the logits for the next position.
+    pub fn step(&mut self, token: u8) -> Vec<f32> {
+        let w = self.weights;
+        let cfg = &w.config;
+        let d = cfg.d_model;
+        let n_heads = cfg.n_heads;
+        let hd = cfg.head_dim();
+        let scale = 1.0 / (hd as f32).sqrt();
+
+        let mut h: Vec<f32> = w.embed.row(token as usize).to_vec();
+        for (li, l) in w.layers.iter().enumerate() {
+            let hx = Matrix::from_vec(1, d, h.clone());
+            let xa = rmsnorm(&hx, &l.ln1);
+            let mut q = xa.matmul_bt(&l.wq);
+            let mut k = xa.matmul_bt(&l.wk);
+            let v = xa.matmul_bt(&l.wv);
+            rope_inplace(&mut q, n_heads, self.pos);
+            rope_inplace(&mut k, n_heads, self.pos);
+
+            // append to cache
+            let kc = &mut self.kcache[li];
+            let vc = &mut self.vcache[li];
+            let mut knew = Matrix::zeros(kc.rows + 1, d);
+            knew.set_slice(0, 0, kc);
+            knew.set_slice(kc.rows, 0, &k);
+            *kc = knew;
+            let mut vnew = Matrix::zeros(vc.rows + 1, d);
+            vnew.set_slice(0, 0, vc);
+            vnew.set_slice(vc.rows, 0, &v);
+            *vc = vnew;
+
+            // attention against the cache
+            let t_len = kc.rows;
+            let mut ctx = Matrix::zeros(1, d);
+            for hh in 0..n_heads {
+                let base = hh * hd;
+                let qrow = &q.row(0)[base..base + hd];
+                let mut scores = Vec::with_capacity(t_len);
+                let mut maxs = f32::NEG_INFINITY;
+                for tk in 0..t_len {
+                    let s =
+                        crate::tensor::matrix::dot(qrow, &kc.row(tk)[base..base + hd]) * scale;
+                    maxs = maxs.max(s);
+                    scores.push(s);
+                }
+                let mut denom = 0.0;
+                for s in scores.iter_mut() {
+                    *s = (*s - maxs).exp();
+                    denom += *s;
+                }
+                let crow = ctx.row_mut(0);
+                for (tk, p) in scores.iter().enumerate() {
+                    let wgt = p / denom;
+                    let vrow = &vc.row(tk)[base..base + hd];
+                    for i in 0..hd {
+                        crow[base + i] += wgt * vrow[i];
+                    }
+                }
+            }
+            let attn_out = ctx.matmul_bt(&l.wo);
+            for (hv, a) in h.iter_mut().zip(&attn_out.data) {
+                *hv += *a;
+            }
+
+            let hx = Matrix::from_vec(1, d, h.clone());
+            let xm = rmsnorm(&hx, &l.ln2);
+            let gate = xm.matmul_bt(&l.w1);
+            let up = xm.matmul_bt(&l.w3);
+            let mut act = Matrix::zeros(1, cfg.ffn);
+            for i in 0..cfg.ffn {
+                act.data[i] = silu(gate.data[i]) * up.data[i];
+            }
+            let down = act.matmul_bt(&l.w2);
+            for (hv, a) in h.iter_mut().zip(&down.data) {
+                *hv += *a;
+            }
+        }
+        self.pos += 1;
+        let hx = Matrix::from_vec(1, d, h);
+        let f = rmsnorm(&hx, &w.ln_f);
+        f.matmul_bt(&w.head).data
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::config::Preset;
+    use crate::util::rng::Rng;
+
+    fn tiny_model(seed: u64) -> ModelWeights {
+        let mut rng = Rng::new(seed);
+        ModelWeights::init(Preset::Tiny.config(), &mut rng)
+    }
+
+    #[test]
+    fn logits_shape() {
+        let w = tiny_model(1);
+        let tokens: Vec<u8> = (0..10).collect();
+        let l = forward_logits(&w, &tokens);
+        assert_eq!((l.rows, l.cols), (10, 256));
+        assert!(l.data.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn causality() {
+        // Changing a future token must not change past logits.
+        let w = tiny_model(2);
+        let a: Vec<u8> = vec![5, 6, 7, 8, 9, 10];
+        let mut b = a.clone();
+        b[5] = 99;
+        let la = forward_logits(&w, &a);
+        let lb = forward_logits(&w, &b);
+        for t in 0..5 {
+            for c in 0..la.cols {
+                assert!(
+                    (la[(t, c)] - lb[(t, c)]).abs() < 1e-5,
+                    "position {t} leaked future info"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn position_matters() {
+        // RoPE: the same token at different positions gives different logits.
+        let w = tiny_model(3);
+        let l = forward_logits(&w, &[42, 42, 42, 42]);
+        let r0: Vec<f32> = l.row(1).to_vec();
+        let r1: Vec<f32> = l.row(3).to_vec();
+        let diff: f32 = r0.iter().zip(&r1).map(|(a, b)| (a - b).abs()).sum();
+        // a freshly initialized model is nearly position-invariant, so the
+        // difference is small — but RoPE must make it strictly nonzero.
+        assert!(diff > 1e-6, "rope seems inert (diff={diff})");
+    }
+
+    #[test]
+    fn captures_shapes() {
+        let w = tiny_model(4);
+        let cfg = w.config;
+        let tokens: Vec<u8> = (0..12).collect();
+        let (logits, caps) = forward_captures(&w, &tokens);
+        assert_eq!(caps.len(), cfg.n_layers);
+        for c in &caps {
+            assert_eq!((c.x_attn.rows, c.x_attn.cols), (12, cfg.d_model));
+            assert_eq!((c.x_wo.rows, c.x_wo.cols), (12, cfg.d_model));
+            assert_eq!((c.x_mlp.rows, c.x_mlp.cols), (12, cfg.d_model));
+            assert_eq!((c.x_w2.rows, c.x_w2.cols), (12, cfg.ffn));
+        }
+        // capture pass must not change the logits
+        let plain = forward_logits(&w, &tokens);
+        assert!(logits.max_abs_diff(&plain) < 1e-6);
+    }
+
+    #[test]
+    fn capture_reconstructs_linear_outputs() {
+        // x_w2 @ w2ᵀ must equal the MLP residual contribution; check via
+        // directly recomputing one layer output from captures.
+        let w = tiny_model(5);
+        let tokens: Vec<u8> = (3..15).collect();
+        let (_, caps) = forward_captures(&w, &tokens);
+        let c = &caps[0];
+        let l = &w.layers[0];
+        // q from capture equals wq applied to x_attn (pre-rope)
+        let q = c.x_attn.matmul_bt(&l.wq);
+        assert_eq!((q.rows, q.cols), (12, w.config.d_model));
+        // finite + nonzero
+        assert!(q.frob2() > 0.0);
+        let down = c.x_w2.matmul_bt(&l.w2);
+        assert!(down.frob2() > 0.0);
+    }
+
+    #[test]
+    fn kv_decode_matches_full_forward() {
+        let w = tiny_model(6);
+        let tokens: Vec<u8> = vec![10, 20, 30, 40, 50, 60, 70];
+        let full = forward_logits(&w, &tokens);
+        let mut st = DecodeState::new(&w);
+        for (t, &tok) in tokens.iter().enumerate() {
+            let step_logits = st.step(tok);
+            let frow = full.row(t);
+            let maxdiff = step_logits
+                .iter()
+                .zip(frow)
+                .map(|(a, b)| (a - b).abs())
+                .fold(0.0f32, f32::max);
+            assert!(maxdiff < 1e-4, "pos {t}: maxdiff {maxdiff}");
+        }
+    }
+
+    #[test]
+    fn nll_near_uniform_for_random_init() {
+        // A freshly initialized model should predict ~uniform over 256 bytes.
+        let w = tiny_model(7);
+        let tokens: Vec<u8> = (0..32).map(|i| (i * 37 % 251) as u8).collect();
+        let nll = sequence_nll(&w, &tokens);
+        let uniform = (256f64).ln();
+        assert!((nll - uniform).abs() < 0.35, "nll={nll} vs ln256={uniform}");
+    }
+}

@@ -1,0 +1,19 @@
+//! The "Llamette" transformer under quantization.
+//!
+//! Same architecture family as the paper's Llama targets — RMSNorm, rotary
+//! position embeddings, multi-head causal attention, SwiGLU MLP, untied LM
+//! head — scaled to presets that train from scratch on CPU in minutes. The
+//! canonical forward/backward lives in JAX (`python/compile/model.py`, AOT'd
+//! to HLO); this module carries the *mirror* definition: configuration,
+//! weight containers, checkpoint I/O, and a native Rust forward used for
+//! activation capture in the quantization pipeline, as the runtime fallback,
+//! and for KV-cached decoding in the serve path.
+
+pub mod config;
+pub mod forward;
+pub mod store;
+pub mod weights;
+
+pub use config::{ModelConfig, Preset};
+pub use forward::{forward_captures, forward_logits, DecodeState, LayerCaptures};
+pub use weights::{LayerWeights, LinearKind, ModelWeights};

@@ -1,0 +1,386 @@
+//! Checkpoint I/O — a compact self-describing binary container.
+//!
+//! Layout: magic `TSGO`, u32 version, u32 header length, JSON header
+//! (model config + tensor directory with shapes/offsets/encodings), then the
+//! raw payload. FP tensors are little-endian f32; quantized tensors store
+//! scales, zeros (f32) and the packed u32 words of [`PackedInts`].
+
+use crate::model::config::ModelConfig;
+use crate::model::weights::{LinearKind, ModelWeights};
+use crate::quant::format::{PackedInts, QuantizedLinear};
+use crate::tensor::Matrix;
+use crate::util::json::Json;
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::path::Path;
+
+const MAGIC: &[u8; 4] = b"TSGO";
+const VERSION: u32 = 1;
+
+fn f32s_to_bytes(v: &[f32]) -> Vec<u8> {
+    v.iter().flat_map(|x| x.to_le_bytes()).collect()
+}
+
+fn bytes_to_f32s(b: &[u8]) -> Vec<f32> {
+    b.chunks_exact(4).map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect()
+}
+
+fn u32s_to_bytes(v: &[u32]) -> Vec<u8> {
+    v.iter().flat_map(|x| x.to_le_bytes()).collect()
+}
+
+fn bytes_to_u32s(b: &[u8]) -> Vec<u32> {
+    b.chunks_exact(4).map(|c| u32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect()
+}
+
+/// Bounds-checked payload slice (corrupted/truncated checkpoints must fail
+/// with an error, not a panic — see tests/robustness.rs).
+fn payload_slice(payload: &[u8], off: usize, len: usize) -> Result<&[u8]> {
+    payload
+        .get(off..off + len)
+        .ok_or_else(|| anyhow::anyhow!(
+            "checkpoint truncated: need bytes {off}..{} but payload has {}",
+            off + len,
+            payload.len()
+        ))
+}
+
+/// Save FP model weights.
+pub fn save_model(path: &Path, w: &ModelWeights) -> Result<()> {
+    let mut payload: Vec<u8> = Vec::new();
+    let mut dir: Vec<Json> = Vec::new();
+    for (name, shape, data) in w.flat_params() {
+        dir.push(Json::obj(vec![
+            ("name", Json::str(name)),
+            ("shape", Json::arr(shape.iter().map(|&s| Json::num(s as f64)))),
+            ("offset", Json::num(payload.len() as f64)),
+            ("encoding", Json::str("f32")),
+        ]));
+        payload.extend(f32s_to_bytes(data));
+    }
+    let header = Json::obj(vec![
+        ("config", w.config.to_json()),
+        ("tensors", Json::Arr(dir)),
+        ("kind", Json::str("fp32")),
+    ]);
+    write_container(path, &header, &payload)
+}
+
+/// Load FP model weights.
+pub fn load_model(path: &Path) -> Result<ModelWeights> {
+    let (header, payload) = read_container(path)?;
+    let config = ModelConfig::from_json(header.get("config"))
+        .context("bad config in checkpoint header")?;
+    let mut index: BTreeMap<String, (Vec<usize>, usize)> = BTreeMap::new();
+    for t in header.get("tensors").as_arr().unwrap_or(&[]) {
+        index.insert(
+            t.get("name").as_str().unwrap_or("").to_string(),
+            (t.get("shape").usize_vec(), t.get("offset").as_usize().unwrap_or(0)),
+        );
+    }
+    ModelWeights::from_named(config, |name, shape| {
+        let (s, off) = index
+            .get(name)
+            .with_context(|| format!("tensor {name} missing from checkpoint"))?;
+        if s != shape {
+            bail!("tensor {name}: shape {s:?} != expected {shape:?}");
+        }
+        let n: usize = shape.iter().product();
+        Ok(bytes_to_f32s(payload_slice(&payload, *off, 4 * n)?))
+    })
+}
+
+/// A quantized checkpoint: FP norms/embeddings + quantized linears.
+#[derive(Clone, Debug)]
+pub struct QuantizedModel {
+    pub config: ModelConfig,
+    /// Base weights with the linears *dequantized* in place (ready to run).
+    pub weights: ModelWeights,
+    /// The packed form of every linear, keyed by `(layer, kind)`.
+    pub linears: BTreeMap<(usize, &'static str), QuantizedLinear>,
+}
+
+impl QuantizedModel {
+    pub fn get(&self, layer: usize, kind: LinearKind) -> Option<&QuantizedLinear> {
+        self.linears.get(&(layer, kind.label()))
+    }
+
+    /// Total packed payload bytes across linears.
+    pub fn packed_bytes(&self) -> usize {
+        self.linears.values().map(|q| q.nbytes()).sum()
+    }
+}
+
+/// Save a quantized model: FP tensors for norms/embed/head, packed tensors
+/// for the linears.
+pub fn save_quantized(path: &Path, qm: &QuantizedModel) -> Result<()> {
+    let mut payload: Vec<u8> = Vec::new();
+    let mut dir: Vec<Json> = Vec::new();
+    for (name, shape, data) in qm.weights.flat_params() {
+        // Linears that have a packed form are stored packed instead.
+        let is_packed = name
+            .strip_prefix("layers.")
+            .and_then(|rest| rest.split_once('.'))
+            .map(|(idx, kind)| {
+                qm.linears.contains_key(&(
+                    idx.parse::<usize>().unwrap_or(usize::MAX),
+                    // leak-free static lookup
+                    match kind {
+                        "wq" => "wq",
+                        "wk" => "wk",
+                        "wv" => "wv",
+                        "wo" => "wo",
+                        "w1" => "w1",
+                        "w3" => "w3",
+                        "w2" => "w2",
+                        _ => "",
+                    },
+                ))
+            })
+            .unwrap_or(false);
+        if is_packed {
+            continue;
+        }
+        dir.push(Json::obj(vec![
+            ("name", Json::str(name)),
+            ("shape", Json::arr(shape.iter().map(|&s| Json::num(s as f64)))),
+            ("offset", Json::num(payload.len() as f64)),
+            ("encoding", Json::str("f32")),
+        ]));
+        payload.extend(f32s_to_bytes(data));
+    }
+    for ((layer, kind), q) in &qm.linears {
+        let name = format!("layers.{layer}.{kind}");
+        let off = payload.len();
+        payload.extend(f32s_to_bytes(&q.scales.data));
+        payload.extend(f32s_to_bytes(&q.zeros.data));
+        for row in &q.qweight {
+            payload.extend(u32s_to_bytes(&row.words));
+        }
+        dir.push(Json::obj(vec![
+            ("name", Json::str(name)),
+            ("shape", Json::arr([q.rows, q.cols].iter().map(|&s| Json::num(s as f64)))),
+            ("offset", Json::num(off as f64)),
+            ("encoding", Json::str("packed")),
+            ("bits", Json::num(q.bits as f64)),
+            ("group_size", Json::num(q.group_size as f64)),
+            (
+                "words_per_row",
+                Json::num(q.qweight[0].words.len() as f64),
+            ),
+        ]));
+    }
+    let header = Json::obj(vec![
+        ("config", qm.config.to_json()),
+        ("tensors", Json::Arr(dir)),
+        ("kind", Json::str("quantized")),
+    ]);
+    write_container(path, &header, &payload)
+}
+
+/// Load a quantized model; linears are dequantized into `weights` and the
+/// packed forms returned alongside.
+pub fn load_quantized(path: &Path) -> Result<QuantizedModel> {
+    let (header, payload) = read_container(path)?;
+    let config = ModelConfig::from_json(header.get("config"))
+        .context("bad config in checkpoint header")?;
+    let mut fp: BTreeMap<String, (Vec<usize>, usize)> = BTreeMap::new();
+    let mut packed: BTreeMap<String, Json> = BTreeMap::new();
+    for t in header.get("tensors").as_arr().unwrap_or(&[]) {
+        let name = t.get("name").as_str().unwrap_or("").to_string();
+        if t.get("encoding").as_str() == Some("packed") {
+            packed.insert(name, t.clone());
+        } else {
+            fp.insert(
+                name,
+                (t.get("shape").usize_vec(), t.get("offset").as_usize().unwrap_or(0)),
+            );
+        }
+    }
+    let mut linears: BTreeMap<(usize, &'static str), QuantizedLinear> = BTreeMap::new();
+    for (name, t) in &packed {
+        let shape = t.get("shape").usize_vec();
+        let (rows, cols) = (shape[0], shape[1]);
+        let bits = t.get("bits").as_usize().context("bits")? as u8;
+        let group_size = t.get("group_size").as_usize().context("group_size")?;
+        let wpr = t.get("words_per_row").as_usize().context("words_per_row")?;
+        let n_g = cols.div_ceil(group_size);
+        let mut off = t.get("offset").as_usize().context("offset")?;
+        let scales = Matrix::from_vec(
+            rows,
+            n_g,
+            bytes_to_f32s(payload_slice(&payload, off, 4 * rows * n_g)?),
+        );
+        off += 4 * rows * n_g;
+        let zeros = Matrix::from_vec(
+            rows,
+            n_g,
+            bytes_to_f32s(payload_slice(&payload, off, 4 * rows * n_g)?),
+        );
+        off += 4 * rows * n_g;
+        let mut qweight = Vec::with_capacity(rows);
+        for _ in 0..rows {
+            let words = bytes_to_u32s(payload_slice(&payload, off, 4 * wpr)?);
+            off += 4 * wpr;
+            qweight.push(PackedInts { bits, len: cols, words });
+        }
+        let q = QuantizedLinear { rows, cols, bits, group_size, qweight, scales, zeros };
+        let (idx, kind) = name
+            .strip_prefix("layers.")
+            .and_then(|r| r.split_once('.'))
+            .context("bad packed tensor name")?;
+        let kind_static = LinearKind::ALL
+            .iter()
+            .find(|k| k.label() == kind)
+            .context("unknown linear kind")?
+            .label();
+        linears.insert((idx.parse()?, kind_static), q);
+    }
+    let weights = ModelWeights::from_named(config, |name, shape| {
+        if let Some((s, off)) = fp.get(name) {
+            if s != shape {
+                bail!("tensor {name}: shape mismatch");
+            }
+            let n: usize = shape.iter().product();
+            return Ok(bytes_to_f32s(payload_slice(&payload, *off, 4 * n)?));
+        }
+        // packed linear: dequantize
+        let (idx, kind) = name
+            .strip_prefix("layers.")
+            .and_then(|r| r.split_once('.'))
+            .with_context(|| format!("missing tensor {name}"))?;
+        let key = (
+            idx.parse::<usize>()?,
+            LinearKind::ALL
+                .iter()
+                .find(|k| k.label() == kind)
+                .with_context(|| format!("missing tensor {name}"))?
+                .label(),
+        );
+        let q = linears.get(&key).with_context(|| format!("missing packed {name}"))?;
+        Ok(q.dequantize().data)
+    })?;
+    Ok(QuantizedModel { config, weights, linears })
+}
+
+fn write_container(path: &Path, header: &Json, payload: &[u8]) -> Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let hbytes = header.to_string().into_bytes();
+    let mut f = std::fs::File::create(path)?;
+    f.write_all(MAGIC)?;
+    f.write_all(&VERSION.to_le_bytes())?;
+    f.write_all(&(hbytes.len() as u32).to_le_bytes())?;
+    f.write_all(&hbytes)?;
+    f.write_all(payload)?;
+    Ok(())
+}
+
+fn read_container(path: &Path) -> Result<(Json, Vec<u8>)> {
+    let mut f = std::fs::File::open(path)
+        .with_context(|| format!("open checkpoint {}", path.display()))?;
+    let mut magic = [0u8; 4];
+    f.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        bail!("not a TSGO checkpoint");
+    }
+    let mut word = [0u8; 4];
+    f.read_exact(&mut word)?;
+    let version = u32::from_le_bytes(word);
+    if version != VERSION {
+        bail!("unsupported checkpoint version {version}");
+    }
+    f.read_exact(&mut word)?;
+    let hlen = u32::from_le_bytes(word) as usize;
+    let mut hbytes = vec![0u8; hlen];
+    f.read_exact(&mut hbytes)?;
+    let header = Json::parse(std::str::from_utf8(&hbytes)?)
+        .map_err(|e| anyhow::anyhow!("header parse: {e}"))?;
+    let mut payload = Vec::new();
+    f.read_to_end(&mut payload)?;
+    Ok((header, payload))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::config::Preset;
+    use crate::quant::scale::{compute_group_scales, QuantSpec, ScaleMetric};
+    use crate::util::rng::Rng;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("tsgo_store_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    #[test]
+    fn fp_roundtrip() {
+        let mut rng = Rng::new(1);
+        let w = ModelWeights::init(Preset::Tiny.config(), &mut rng);
+        let p = tmp("fp.tsr");
+        save_model(&p, &w).unwrap();
+        let w2 = load_model(&p).unwrap();
+        assert_eq!(w.config, w2.config);
+        assert_eq!(w.embed, w2.embed);
+        assert_eq!(w.layers[1].w2, w2.layers[1].w2);
+        assert_eq!(w.ln_f, w2.ln_f);
+    }
+
+    #[test]
+    fn quantized_roundtrip() {
+        let mut rng = Rng::new(2);
+        let cfg = Preset::Tiny.config();
+        let w = ModelWeights::init(cfg, &mut rng);
+        let spec = QuantSpec::new(2, 32);
+        // quantize every linear with RTN to build a QuantizedModel
+        let mut weights = w.clone();
+        let mut linears = BTreeMap::new();
+        for li in 0..cfg.n_layers {
+            for kind in LinearKind::ALL {
+                let m = w.layers[li].linear(kind).clone();
+                let scales = compute_group_scales(&m, &spec, ScaleMetric::L2, None);
+                let q = crate::quant::rtn::rtn_quantize(&m, &scales, &spec);
+                *weights.layers[li].linear_mut(kind) = q.dequantize();
+                linears.insert((li, kind.label()), q);
+            }
+        }
+        let qm = QuantizedModel { config: cfg, weights, linears };
+        let p = tmp("quant.tsr");
+        save_quantized(&p, &qm).unwrap();
+        let qm2 = load_quantized(&p).unwrap();
+        assert_eq!(qm2.config, cfg);
+        // dequantized weights must match exactly
+        for li in 0..cfg.n_layers {
+            for kind in LinearKind::ALL {
+                let a = qm.weights.layers[li].linear(kind);
+                let b = qm2.weights.layers[li].linear(kind);
+                assert_eq!(a, b, "layer {li} {}", kind.label());
+            }
+        }
+        // packed payload is much smaller than fp32 would be
+        let fp_bytes: usize =
+            qm.linears.values().map(|q| q.rows * q.cols * 4).sum();
+        // 2-bit + per-group overhead at group 32 ⇒ ~4 bits/weight ⇒ ≥6×.
+        assert!(
+            qm2.packed_bytes() * 6 <= fp_bytes,
+            "2-bit payload should be ≥6x smaller: {} vs {}",
+            qm2.packed_bytes(),
+            fp_bytes
+        );
+    }
+
+    #[test]
+    fn rejects_garbage_file() {
+        let p = tmp("garbage.tsr");
+        std::fs::write(&p, b"NOTATSGOFILE").unwrap();
+        assert!(load_model(&p).is_err());
+    }
+
+    #[test]
+    fn missing_file_errors() {
+        assert!(load_model(Path::new("/nonexistent/x.tsr")).is_err());
+    }
+}

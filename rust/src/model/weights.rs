@@ -1,0 +1,286 @@
+//! Weight containers and initialization.
+
+use super::config::ModelConfig;
+use crate::tensor::Matrix;
+use crate::util::rng::Rng;
+
+/// The seven quantizable linear projections of one block, in the order the
+/// sequential pipeline visits them.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum LinearKind {
+    Wq,
+    Wk,
+    Wv,
+    Wo,
+    W1, // gate
+    W3, // up
+    W2, // down
+}
+
+impl LinearKind {
+    pub const ALL: [LinearKind; 7] = [
+        LinearKind::Wq,
+        LinearKind::Wk,
+        LinearKind::Wv,
+        LinearKind::Wo,
+        LinearKind::W1,
+        LinearKind::W3,
+        LinearKind::W2,
+    ];
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            LinearKind::Wq => "wq",
+            LinearKind::Wk => "wk",
+            LinearKind::Wv => "wv",
+            LinearKind::Wo => "wo",
+            LinearKind::W1 => "w1",
+            LinearKind::W3 => "w3",
+            LinearKind::W2 => "w2",
+        }
+    }
+}
+
+/// One transformer block. Linear weights are `[out, in]` so `y = x Wᵀ`.
+#[derive(Clone, Debug)]
+pub struct LayerWeights {
+    pub wq: Matrix,
+    pub wk: Matrix,
+    pub wv: Matrix,
+    pub wo: Matrix,
+    pub w1: Matrix,
+    pub w3: Matrix,
+    pub w2: Matrix,
+    pub ln1: Vec<f32>,
+    pub ln2: Vec<f32>,
+}
+
+impl LayerWeights {
+    pub fn linear(&self, kind: LinearKind) -> &Matrix {
+        match kind {
+            LinearKind::Wq => &self.wq,
+            LinearKind::Wk => &self.wk,
+            LinearKind::Wv => &self.wv,
+            LinearKind::Wo => &self.wo,
+            LinearKind::W1 => &self.w1,
+            LinearKind::W3 => &self.w3,
+            LinearKind::W2 => &self.w2,
+        }
+    }
+
+    pub fn linear_mut(&mut self, kind: LinearKind) -> &mut Matrix {
+        match kind {
+            LinearKind::Wq => &mut self.wq,
+            LinearKind::Wk => &mut self.wk,
+            LinearKind::Wv => &mut self.wv,
+            LinearKind::Wo => &mut self.wo,
+            LinearKind::W1 => &mut self.w1,
+            LinearKind::W3 => &mut self.w3,
+            LinearKind::W2 => &mut self.w2,
+        }
+    }
+}
+
+/// Full model weights.
+#[derive(Clone, Debug)]
+pub struct ModelWeights {
+    pub config: ModelConfig,
+    /// `[vocab, d_model]` token embedding.
+    pub embed: Matrix,
+    pub layers: Vec<LayerWeights>,
+    pub ln_f: Vec<f32>,
+    /// `[vocab, d_model]` untied output head.
+    pub head: Matrix,
+}
+
+impl ModelWeights {
+    /// Scaled-normal init (GPT-2-style: residual projections shrunk by
+    /// 1/sqrt(2·n_layers)).
+    pub fn init(config: ModelConfig, rng: &mut Rng) -> ModelWeights {
+        let d = config.d_model;
+        let ffn = config.ffn;
+        let std = 0.02f32;
+        let resid_std = std / (2.0 * config.n_layers as f32).sqrt();
+        let layers = (0..config.n_layers)
+            .map(|_| LayerWeights {
+                wq: Matrix::randn(d, d, std, rng),
+                wk: Matrix::randn(d, d, std, rng),
+                wv: Matrix::randn(d, d, std, rng),
+                wo: Matrix::randn(d, d, resid_std, rng),
+                w1: Matrix::randn(ffn, d, std, rng),
+                w3: Matrix::randn(ffn, d, std, rng),
+                w2: Matrix::randn(d, ffn, resid_std, rng),
+                ln1: vec![1.0; d],
+                ln2: vec![1.0; d],
+            })
+            .collect();
+        ModelWeights {
+            config,
+            embed: Matrix::randn(config.vocab, d, std, rng),
+            layers,
+            ln_f: vec![1.0; d],
+            head: Matrix::randn(config.vocab, d, std, rng),
+        }
+    }
+
+    /// Iterate `(layer_idx, kind, weight)` over every quantizable linear.
+    pub fn linears(&self) -> impl Iterator<Item = (usize, LinearKind, &Matrix)> {
+        self.layers.iter().enumerate().flat_map(|(i, l)| {
+            LinearKind::ALL.iter().map(move |&k| (i, k, l.linear(k)))
+        })
+    }
+
+    /// Flat parameter order shared with the JAX side (python/compile/model.py
+    /// `PARAM_ORDER`): embed, per-layer [ln1, wq, wk, wv, wo, ln2, w1, w3,
+    /// w2], ln_f, head. Returns (name, shape) pairs.
+    pub fn param_manifest(config: &ModelConfig) -> Vec<(String, Vec<usize>)> {
+        let d = config.d_model;
+        let f = config.ffn;
+        let v = config.vocab;
+        let mut out = vec![("embed".to_string(), vec![v, d])];
+        for i in 0..config.n_layers {
+            let p = |n: &str| format!("layers.{i}.{n}");
+            out.push((p("ln1"), vec![d]));
+            out.push((p("wq"), vec![d, d]));
+            out.push((p("wk"), vec![d, d]));
+            out.push((p("wv"), vec![d, d]));
+            out.push((p("wo"), vec![d, d]));
+            out.push((p("ln2"), vec![d]));
+            out.push((p("w1"), vec![f, d]));
+            out.push((p("w3"), vec![f, d]));
+            out.push((p("w2"), vec![d, f]));
+        }
+        out.push(("ln_f".to_string(), vec![d]));
+        out.push(("head".to_string(), vec![v, d]));
+        out
+    }
+
+    /// Flatten into the canonical parameter order (for artifact execution
+    /// and checkpointing).
+    pub fn flat_params(&self) -> Vec<(String, Vec<usize>, &[f32])> {
+        let mut out: Vec<(String, Vec<usize>, &[f32])> = Vec::new();
+        out.push((
+            "embed".into(),
+            vec![self.embed.rows, self.embed.cols],
+            &self.embed.data,
+        ));
+        for (i, l) in self.layers.iter().enumerate() {
+            let p = |n: &str| format!("layers.{i}.{n}");
+            out.push((p("ln1"), vec![l.ln1.len()], &l.ln1));
+            for (n, m) in [("wq", &l.wq), ("wk", &l.wk), ("wv", &l.wv), ("wo", &l.wo)] {
+                out.push((p(n), vec![m.rows, m.cols], &m.data));
+            }
+            out.push((p("ln2"), vec![l.ln2.len()], &l.ln2));
+            for (n, m) in [("w1", &l.w1), ("w3", &l.w3), ("w2", &l.w2)] {
+                out.push((p(n), vec![m.rows, m.cols], &m.data));
+            }
+        }
+        out.push(("ln_f".into(), vec![self.ln_f.len()], &self.ln_f));
+        out.push((
+            "head".into(),
+            vec![self.head.rows, self.head.cols],
+            &self.head.data,
+        ));
+        out
+    }
+
+    /// Rebuild from `(name → data)` in any order. Missing/ill-shaped tensors
+    /// are an error.
+    pub fn from_named(
+        config: ModelConfig,
+        mut lookup: impl FnMut(&str, &[usize]) -> crate::Result<Vec<f32>>,
+    ) -> crate::Result<ModelWeights> {
+        fn get_mat(
+            lookup: &mut impl FnMut(&str, &[usize]) -> crate::Result<Vec<f32>>,
+            name: &str,
+            r: usize,
+            c: usize,
+        ) -> crate::Result<Matrix> {
+            Ok(Matrix::from_vec(r, c, lookup(name, &[r, c])?))
+        }
+        let d = config.d_model;
+        let f = config.ffn;
+        let v = config.vocab;
+        let embed = get_mat(&mut lookup, "embed", v, d)?;
+        let mut layers = Vec::with_capacity(config.n_layers);
+        for i in 0..config.n_layers {
+            let p = |n: &str| format!("layers.{i}.{n}");
+            layers.push(LayerWeights {
+                ln1: lookup(&p("ln1"), &[d])?,
+                wq: get_mat(&mut lookup, &p("wq"), d, d)?,
+                wk: get_mat(&mut lookup, &p("wk"), d, d)?,
+                wv: get_mat(&mut lookup, &p("wv"), d, d)?,
+                wo: get_mat(&mut lookup, &p("wo"), d, d)?,
+                ln2: lookup(&p("ln2"), &[d])?,
+                w1: get_mat(&mut lookup, &p("w1"), f, d)?,
+                w3: get_mat(&mut lookup, &p("w3"), f, d)?,
+                w2: get_mat(&mut lookup, &p("w2"), d, f)?,
+            });
+        }
+        let ln_f = lookup("ln_f", &[d])?;
+        let head = get_mat(&mut lookup, "head", v, d)?;
+        Ok(ModelWeights { config, embed, layers, ln_f, head })
+    }
+
+    pub fn n_params(&self) -> usize {
+        self.flat_params().iter().map(|(_, _, d)| d.len()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::config::Preset;
+
+    #[test]
+    fn init_matches_config_count() {
+        let cfg = Preset::Tiny.config();
+        let mut rng = Rng::new(1);
+        let w = ModelWeights::init(cfg, &mut rng);
+        assert_eq!(w.n_params(), cfg.n_params());
+    }
+
+    #[test]
+    fn linears_iterates_7_per_layer() {
+        let cfg = Preset::Tiny.config();
+        let mut rng = Rng::new(2);
+        let w = ModelWeights::init(cfg, &mut rng);
+        assert_eq!(w.linears().count(), 7 * cfg.n_layers);
+    }
+
+    #[test]
+    fn manifest_matches_flat_params() {
+        let cfg = Preset::Tiny.config();
+        let mut rng = Rng::new(3);
+        let w = ModelWeights::init(cfg, &mut rng);
+        let manifest = ModelWeights::param_manifest(&cfg);
+        let flat = w.flat_params();
+        assert_eq!(manifest.len(), flat.len());
+        for ((mn, ms), (fname, fshape, fdata)) in manifest.iter().zip(&flat) {
+            assert_eq!(mn, fname);
+            assert_eq!(ms, fshape);
+            assert_eq!(ms.iter().product::<usize>(), fdata.len());
+        }
+    }
+
+    #[test]
+    fn from_named_roundtrip() {
+        let cfg = Preset::Tiny.config();
+        let mut rng = Rng::new(4);
+        let w = ModelWeights::init(cfg, &mut rng);
+        let flat: std::collections::BTreeMap<String, Vec<f32>> = w
+            .flat_params()
+            .into_iter()
+            .map(|(n, _, d)| (n, d.to_vec()))
+            .collect();
+        let w2 = ModelWeights::from_named(cfg, |name, shape| {
+            let v = flat.get(name).cloned().ok_or_else(|| anyhow::anyhow!("missing {name}"))?;
+            anyhow::ensure!(v.len() == shape.iter().product::<usize>());
+            Ok(v)
+        })
+        .unwrap();
+        assert_eq!(w.embed, w2.embed);
+        assert_eq!(w.layers[0].w2, w2.layers[0].w2);
+        assert_eq!(w.ln_f, w2.ln_f);
+    }
+}

@@ -1,0 +1,21 @@
+//! The layer-by-layer post-training-quantization pipeline (L3 coordinator).
+//!
+//! Mirrors the GPTQ workflow the paper plugs into:
+//!
+//! 1. stream calibration batches through the **FP** model and the
+//!    **quantized-prefix** model, capturing every linear projection's inputs
+//!    in block `l` ([`crate::model::forward_captures`]);
+//! 2. accumulate `H = E[XXᵀ]` (from the quantized-prefix captures) and
+//!    `R = E[ΔX Xᵀ]` (from their deviation against the FP captures —
+//!    Eq. 7) per linear ([`stats`]);
+//! 3. quantize the block's seven projections — Stage 1 → GPTQ sweep →
+//!    Stage 2, per [`crate::quant::MethodConfig`] — in parallel;
+//! 4. splice the dequantized weights into the prefix model and move to
+//!    block `l + 1`, so later layers see (and compensate for) upstream
+//!    quantization error, exactly the effect Eq. 9 models.
+
+pub mod quantize_model;
+pub mod stats;
+
+pub use quantize_model::{quantize_model, PipelineConfig, PipelineReport};
+pub use stats::{LinearStats, MomentAccum};

@@ -1,0 +1,196 @@
+//! Streaming Hessian / deviation-correlation estimation.
+//!
+//! `H = E[X Xᵀ]` (Eq. 1) and `R = E[ΔX Xᵀ]` (Eq. 7) are accumulated over
+//! calibration batches in f64 (activations are f32 and token counts reach
+//! 10⁵; f32 accumulation visibly biases the Cholesky). X is presented as
+//! `[T, in]` capture matrices straight from the forward pass.
+
+use crate::tensor::Matrix;
+use crate::util::threadpool::parallel_for_chunked;
+
+/// f64-accumulating symmetric second-moment estimator.
+#[derive(Clone, Debug)]
+pub struct MomentAccum {
+    pub dim: usize,
+    /// Row-major `[dim, dim]` running sum (not yet normalized).
+    acc: Vec<f64>,
+    /// Total samples (tokens) seen.
+    pub count: usize,
+}
+
+impl MomentAccum {
+    pub fn new(dim: usize) -> MomentAccum {
+        MomentAccum { dim, acc: vec![0.0; dim * dim], count: 0 }
+    }
+
+    /// Add a batch of activations `x: [T, dim]`, accumulating `Σ_t x_t x_tᵀ`.
+    pub fn add(&mut self, x: &Matrix) {
+        assert_eq!(x.cols, self.dim, "activation dim mismatch");
+        let dim = self.dim;
+        let acc_ptr = crate::util::SendPtr(self.acc.as_mut_ptr());
+        // Parallel over output rows i: acc[i][j] += Σ_t x[t][i]·x[t][j].
+        parallel_for_chunked(dim, 8, |i| {
+            // SAFETY: each worker owns disjoint rows of the accumulator.
+            let row: &mut [f64] =
+                unsafe { std::slice::from_raw_parts_mut(acc_ptr.get().add(i * dim), dim) };
+            for t in 0..x.rows {
+                let xrow = x.row(t);
+                let xi = xrow[i] as f64;
+                if xi == 0.0 {
+                    continue;
+                }
+                for (r, xj) in row.iter_mut().zip(xrow) {
+                    *r += xi * *xj as f64;
+                }
+            }
+        });
+        self.count += x.rows;
+    }
+
+    /// Add a cross-moment batch: `Σ_t a_t b_tᵀ` (for `R = E[ΔX Xᵀ]`,
+    /// pass `a = ΔX` rows, `b = X` rows).
+    pub fn add_cross(&mut self, a: &Matrix, b: &Matrix) {
+        assert_eq!((a.rows, a.cols), (b.rows, b.cols));
+        assert_eq!(a.cols, self.dim);
+        let dim = self.dim;
+        let acc_ptr = crate::util::SendPtr(self.acc.as_mut_ptr());
+        parallel_for_chunked(dim, 8, |i| {
+            let row: &mut [f64] =
+                unsafe { std::slice::from_raw_parts_mut(acc_ptr.get().add(i * dim), dim) };
+            for t in 0..a.rows {
+                let ai = a.row(t)[i] as f64;
+                if ai == 0.0 {
+                    continue;
+                }
+                for (r, bj) in row.iter_mut().zip(b.row(t)) {
+                    *r += ai * *bj as f64;
+                }
+            }
+        });
+        self.count += a.rows;
+    }
+
+    /// The normalized moment `Σ / count` as f32.
+    pub fn finalize(&self) -> Matrix {
+        let n = self.count.max(1) as f64;
+        Matrix::from_vec(
+            self.dim,
+            self.dim,
+            self.acc.iter().map(|v| (v / n) as f32).collect(),
+        )
+    }
+}
+
+/// All statistics needed to quantize one linear layer.
+#[derive(Clone, Debug)]
+pub struct LinearStats {
+    pub hessian: MomentAccum,
+    /// `R = E[ΔX Xᵀ]`; None for the first block when error-aware refinement
+    /// is disabled or there is no upstream error yet.
+    pub deviation: Option<MomentAccum>,
+}
+
+impl LinearStats {
+    pub fn new(dim: usize, with_deviation: bool) -> LinearStats {
+        LinearStats {
+            hessian: MomentAccum::new(dim),
+            deviation: with_deviation.then(|| MomentAccum::new(dim)),
+        }
+    }
+
+    /// Feed one batch: `x_q` is the capture under the quantized prefix,
+    /// `x_fp` under the FP model (same tokens).
+    pub fn add_batch(&mut self, x_q: &Matrix, x_fp: Option<&Matrix>) {
+        self.hessian.add(x_q);
+        if let (Some(dev), Some(fp)) = (&mut self.deviation, x_fp) {
+            let dx = x_q.sub(fp);
+            dev.add_cross(&dx, x_q);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn hessian_matches_direct_computation() {
+        let mut rng = Rng::new(1);
+        let x = Matrix::randn(50, 8, 1.0, &mut rng);
+        let mut acc = MomentAccum::new(8);
+        acc.add(&x);
+        let h = acc.finalize();
+        // direct: Xᵀ X / T with X [T, dim]
+        let direct = {
+            let xt = x.transpose();
+            let mut m = xt.matmul(&x);
+            m.scale_inplace(1.0 / 50.0);
+            m
+        };
+        assert!(h.max_abs_diff(&direct) < 1e-4);
+    }
+
+    #[test]
+    fn batching_is_associative() {
+        let mut rng = Rng::new(2);
+        let x1 = Matrix::randn(30, 6, 1.0, &mut rng);
+        let x2 = Matrix::randn(20, 6, 1.0, &mut rng);
+        let mut a = MomentAccum::new(6);
+        a.add(&x1);
+        a.add(&x2);
+        let mut joint = Matrix::zeros(50, 6);
+        joint.set_slice(0, 0, &x1);
+        joint.set_slice(30, 0, &x2);
+        let mut b = MomentAccum::new(6);
+        b.add(&joint);
+        assert!(a.finalize().max_abs_diff(&b.finalize()) < 1e-5);
+    }
+
+    #[test]
+    fn hessian_is_symmetric_psd() {
+        let mut rng = Rng::new(3);
+        let x = Matrix::randn(100, 12, 1.0, &mut rng);
+        let mut acc = MomentAccum::new(12);
+        acc.add(&x);
+        let h = acc.finalize();
+        for i in 0..12 {
+            assert!(h[(i, i)] >= 0.0);
+            for j in 0..12 {
+                assert!((h[(i, j)] - h[(j, i)]).abs() < 1e-5);
+            }
+        }
+        // PSD via Cholesky after small damping
+        let mut hd = h.clone();
+        for i in 0..12 {
+            hd[(i, i)] += 1e-3;
+        }
+        assert!(crate::tensor::cholesky_lower(&hd).is_ok());
+    }
+
+    #[test]
+    fn cross_moment_matches_direct() {
+        let mut rng = Rng::new(4);
+        let a = Matrix::randn(40, 5, 1.0, &mut rng);
+        let b = Matrix::randn(40, 5, 1.0, &mut rng);
+        let mut acc = MomentAccum::new(5);
+        acc.add_cross(&a, &b);
+        let direct = {
+            let at = a.transpose();
+            let mut m = at.matmul(&b);
+            m.scale_inplace(1.0 / 40.0);
+            m
+        };
+        assert!(acc.finalize().max_abs_diff(&direct) < 1e-4);
+    }
+
+    #[test]
+    fn linear_stats_deviation_zero_when_inputs_equal() {
+        let mut rng = Rng::new(5);
+        let x = Matrix::randn(25, 4, 1.0, &mut rng);
+        let mut st = LinearStats::new(4, true);
+        st.add_batch(&x, Some(&x));
+        let r = st.deviation.unwrap().finalize();
+        assert!(r.frob2() < 1e-12);
+    }
+}

@@ -1,0 +1,212 @@
+//! Activation-order (act-order / `desc_act`) extension of the GPTQ sweep.
+//!
+//! GPTQ's optional refinement (and a common production setting in
+//! GPTQ-for-LLaMa / AutoGPTQ): quantize columns in order of decreasing
+//! Hessian diagonal, so the columns that matter most are fixed early, while
+//! later (low-energy) columns absorb the compensation error. Implemented as
+//! a column permutation of `(W, H)` before the standard sweep and an inverse
+//! permutation of the resulting integers.
+//!
+//! With group-wise scales the permutation changes group membership — groups
+//! are formed over the *permuted* columns (AutoGPTQ's `desc_act=True`
+//! behaviour with `group_size`). Scales must therefore be computed on the
+//! permuted weights; this module owns that bookkeeping and returns a
+//! [`PermutedQuant`] carrying the inverse map the deployment side needs
+//! (it changes the dequant gather order, which is why act-order kernels are
+//! slower in practice — the trade-off the paper's Table settings avoid by
+//! keeping natural order).
+
+use super::format::QuantizedLinear;
+use super::gptq::{gptq_sweep, GptqConfig};
+use super::scale::{compute_group_scales, QuantSpec, ScaleMetric};
+use crate::tensor::{cholesky_inverse_upper, Matrix};
+use anyhow::Result;
+
+/// Result of an act-order quantization: the quantized layer lives in
+/// *permuted* column space; `perm[j]` is the original column of permuted
+/// column `j`, `inv[c]` the permuted position of original column `c`.
+#[derive(Clone, Debug)]
+pub struct PermutedQuant {
+    pub quantized: QuantizedLinear,
+    pub perm: Vec<usize>,
+    pub inv: Vec<usize>,
+}
+
+impl PermutedQuant {
+    /// Dequantize back into the ORIGINAL column order.
+    pub fn dequantize_unpermuted(&self) -> Matrix {
+        let q = self.quantized.dequantize();
+        let mut out = Matrix::zeros(q.rows, q.cols);
+        for r in 0..q.rows {
+            let src = q.row(r);
+            let dst = out.row_mut(r);
+            for (j, &orig) in self.perm.iter().enumerate() {
+                dst[orig] = src[j];
+            }
+        }
+        out
+    }
+}
+
+/// Sort columns by descending damped-Hessian diagonal.
+pub fn act_order_permutation(h: &Matrix) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..h.rows).collect();
+    idx.sort_by(|&a, &b| {
+        h[(b, b)]
+            .partial_cmp(&h[(a, a)])
+            .unwrap_or(std::cmp::Ordering::Equal)
+    });
+    idx
+}
+
+fn permute_columns(m: &Matrix, perm: &[usize]) -> Matrix {
+    let mut out = Matrix::zeros(m.rows, m.cols);
+    for r in 0..m.rows {
+        let src = m.row(r);
+        let dst = out.row_mut(r);
+        for (j, &p) in perm.iter().enumerate() {
+            dst[j] = src[p];
+        }
+    }
+    out
+}
+
+fn permute_sym(h: &Matrix, perm: &[usize]) -> Matrix {
+    let n = h.rows;
+    let mut out = Matrix::zeros(n, n);
+    for (i, &pi) in perm.iter().enumerate() {
+        for (j, &pj) in perm.iter().enumerate() {
+            out[(i, j)] = h[(pi, pj)];
+        }
+    }
+    out
+}
+
+/// GPTQ with act-order: permute → scales (L2 or stage-1 metric) → sweep.
+pub fn gptq_quantize_actorder(
+    w: &Matrix,
+    h: &Matrix,
+    spec: &QuantSpec,
+    metric: ScaleMetric,
+    cfg: &GptqConfig,
+) -> Result<PermutedQuant> {
+    let mut wwork = w.clone();
+    let hd = super::gptq::prepare_hessian(h, &mut wwork, cfg.percdamp);
+    let perm = act_order_permutation(&hd);
+    let mut inv = vec![0usize; perm.len()];
+    for (j, &p) in perm.iter().enumerate() {
+        inv[p] = j;
+    }
+    let wp = permute_columns(&wwork, &perm);
+    let hp = permute_sym(&hd, &perm);
+    let hess_opt = matches!(metric, ScaleMetric::HessianBlock).then_some(&hp);
+    let scales = compute_group_scales(&wp, spec, metric, hess_opt);
+    let u = cholesky_inverse_upper(&hp)?;
+    let quantized = gptq_sweep(&wp, &u, &scales, spec, cfg);
+    Ok(PermutedQuant { quantized, perm, inv })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::gptq::{gptq_quantize, prepare_hessian};
+    use crate::quant::metrics::layer_loss;
+    use crate::util::rng::Rng;
+
+    fn skewed_problem(out: usize, inp: usize, seed: u64) -> (Matrix, Matrix) {
+        let mut rng = Rng::new(seed);
+        let w = Matrix::randn(out, inp, 1.0, &mut rng);
+        let t = inp * 6;
+        let mut x = Matrix::zeros(inp, t);
+        for r in 0..inp {
+            let energy = if r % 5 == 0 { 5.0 } else { 0.4 };
+            for c in 0..t {
+                x[(r, c)] = rng.normal() as f32 * energy;
+            }
+        }
+        let mut h = x.matmul_bt(&x);
+        h.scale_inplace(1.0 / t as f32);
+        (w, h)
+    }
+
+    #[test]
+    fn permutation_sorts_diagonal() {
+        let (_, h) = skewed_problem(4, 32, 1);
+        let perm = act_order_permutation(&h);
+        for win in perm.windows(2) {
+            assert!(h[(win[0], win[0])] >= h[(win[1], win[1])]);
+        }
+        // valid permutation
+        let mut sorted = perm.clone();
+        sorted.sort();
+        assert_eq!(sorted, (0..32).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn unpermuted_dequant_restores_column_order() {
+        let (w, h) = skewed_problem(8, 32, 2);
+        let spec = QuantSpec::new(4, 16);
+        let pq = gptq_quantize_actorder(&w, &h, &spec, ScaleMetric::L2, &GptqConfig::default())
+            .unwrap();
+        let deq = pq.dequantize_unpermuted();
+        // at 4 bits the dequantized weights should be close to W columnwise
+        // in ORIGINAL order — a shuffled result would show huge error.
+        let mse = crate::quant::metrics::weight_mse(&w, &deq);
+        assert!(mse < 0.05, "mse={mse} (column order likely wrong)");
+    }
+
+    #[test]
+    fn actorder_competitive_with_natural_order_at_low_bits() {
+        let (w, h) = skewed_problem(24, 64, 3);
+        let spec = QuantSpec::new(2, 16);
+        let mut wd = w.clone();
+        let hd = prepare_hessian(&h, &mut wd, 0.01);
+
+        let natural = {
+            let scales = compute_group_scales(&w, &spec, ScaleMetric::L2, None);
+            let q = gptq_quantize(&w, &h, &scales, &spec, &GptqConfig::default()).unwrap();
+            layer_loss(&w, &q.dequantize(), &hd)
+        };
+        let actord = {
+            let pq = gptq_quantize_actorder(&w, &h, &spec, ScaleMetric::L2, &GptqConfig::default())
+                .unwrap();
+            layer_loss(&w, &pq.dequantize_unpermuted(), &hd)
+        };
+        // On strongly skewed H act-order should not be dramatically worse
+        // and is typically better; assert within 1.2x either way plus print
+        // the direction for the ablation bench to pick up.
+        println!("natural={natural:.4e} actorder={actord:.4e}");
+        assert!(actord < natural * 1.2, "act-order catastrophically worse");
+    }
+
+    #[test]
+    fn actorder_composes_with_stage2() {
+        // stage2 refinement applies unchanged in permuted space.
+        let (w, h) = skewed_problem(8, 32, 4);
+        let spec = QuantSpec::new(2, 16);
+        let mut wd = w.clone();
+        let hd = prepare_hessian(&h, &mut wd, 0.01);
+        let perm_h = {
+            let pq =
+                gptq_quantize_actorder(&w, &h, &spec, ScaleMetric::HessianBlock, &GptqConfig::default())
+                    .unwrap();
+            // refine in permuted space against permuted W, H
+            let perm = pq.perm.clone();
+            let wp = super::permute_columns(&wd, &perm);
+            let hp = super::permute_sym(&hd, &perm);
+            let mut q = pq.quantized.clone();
+            let before = layer_loss(&wp, &q.dequantize(), &hp);
+            crate::quant::stage2::refine_quantized_linear(
+                &wp,
+                &mut q,
+                &hp,
+                None,
+                &crate::quant::stage2::Stage2Config::default(),
+            );
+            let after = layer_loss(&wp, &q.dequantize(), &hp);
+            assert!(after <= before * 1.0001, "stage2 broke in permuted space");
+            after
+        };
+        assert!(perm_h.is_finite());
+    }
+}

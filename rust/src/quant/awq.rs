@@ -1,0 +1,155 @@
+//! AWQ-style activation-aware scaling baseline (Lin et al. — the paper's
+//! ref [8]), for the extended baseline comparison.
+//!
+//! AWQ's observation: protecting the ~1% of weight channels with the
+//! largest activation magnitudes preserves most of the quantized model's
+//! quality. Mechanism: scale input channel `c` of `W` up by
+//! `s_c = E[|x_c|]^α` before quantization (and fold `1/s_c` into the
+//! producer layer — simulated here by dividing after dequantization), so
+//! the uniform grid spends more resolution on salient channels. `α` is
+//! grid-searched per layer against the true layer-wise loss, like the
+//! paper's AWQ setup.
+
+use super::format::QuantizedLinear;
+use super::rtn::rtn_quantize;
+use super::scale::{compute_group_scales, QuantSpec, ScaleMetric};
+use crate::quant::metrics::layer_loss;
+use crate::tensor::Matrix;
+
+/// Per-input-channel activation magnitudes from the Hessian diagonal
+/// (`diag H = E[x_c²]`, so `E[|x_c|] ≈ sqrt(diag H)` up to distribution
+/// shape — the standard proxy when only H is stored).
+pub fn activation_magnitudes(h: &Matrix) -> Vec<f32> {
+    (0..h.rows).map(|i| h[(i, i)].max(0.0).sqrt()).collect()
+}
+
+/// Result: quantized layer in scaled space plus the channel scales needed
+/// at dequantization (`W ≈ dequant(Q) / s` column-wise).
+#[derive(Clone, Debug)]
+pub struct AwqQuant {
+    pub quantized: QuantizedLinear,
+    pub channel_scales: Vec<f32>,
+    pub alpha: f32,
+}
+
+impl AwqQuant {
+    /// Dequantize back to the original weight space.
+    pub fn dequantize_unscaled(&self) -> Matrix {
+        let mut m = self.quantized.dequantize();
+        for r in 0..m.rows {
+            let row = m.row_mut(r);
+            for (v, s) in row.iter_mut().zip(&self.channel_scales) {
+                *v /= *s;
+            }
+        }
+        m
+    }
+}
+
+fn scale_columns(w: &Matrix, s: &[f32]) -> Matrix {
+    let mut out = w.clone();
+    for r in 0..out.rows {
+        for (v, sc) in out.row_mut(r).iter_mut().zip(s) {
+            *v *= *sc;
+        }
+    }
+    out
+}
+
+/// AWQ-lite: grid-search α ∈ {0, 0.25, 0.5, 0.75, 1.0}, scale, RTN-quantize
+/// on the (L2) group grid, score by true layer loss, keep the best.
+pub fn awq_quantize(w: &Matrix, h: &Matrix, spec: &QuantSpec) -> AwqQuant {
+    let mags = activation_magnitudes(h);
+    let mean_mag =
+        (mags.iter().map(|&m| m as f64).sum::<f64>() / mags.len() as f64).max(1e-12) as f32;
+    let mut best: Option<(f64, AwqQuant)> = None;
+    for &alpha in &[0.0f32, 0.25, 0.5, 0.75, 1.0] {
+        // normalized so the average channel scale is ~1 (keeps grids sane)
+        let s: Vec<f32> = mags
+            .iter()
+            .map(|&m| ((m.max(1e-6) / mean_mag).powf(alpha)).clamp(1e-3, 1e3))
+            .collect();
+        let ws = scale_columns(w, &s);
+        let gs = compute_group_scales(&ws, spec, ScaleMetric::L2, None);
+        let q = rtn_quantize(&ws, &gs, spec);
+        let candidate = AwqQuant { quantized: q, channel_scales: s, alpha };
+        let loss = layer_loss(w, &candidate.dequantize_unscaled(), h);
+        if best.as_ref().map(|(l, _)| loss < *l).unwrap_or(true) {
+            best = Some((loss, candidate));
+        }
+    }
+    best.unwrap().1
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::stage1::baseline_init;
+    use crate::util::rng::Rng;
+
+    fn skewed(out: usize, inp: usize, seed: u64) -> (Matrix, Matrix) {
+        let mut rng = Rng::new(seed);
+        let w = Matrix::randn(out, inp, 1.0, &mut rng);
+        let t = inp * 8;
+        let mut x = Matrix::zeros(inp, t);
+        for r in 0..inp {
+            let energy = if r % 8 == 0 { 8.0 } else { 0.3 };
+            for c in 0..t {
+                x[(r, c)] = rng.normal() as f32 * energy;
+            }
+        }
+        let mut h = x.matmul_bt(&x);
+        h.scale_inplace(1.0 / t as f32);
+        (w, h)
+    }
+
+    #[test]
+    fn magnitudes_track_energy() {
+        let (_, h) = skewed(4, 32, 1);
+        let m = activation_magnitudes(&h);
+        // hot channels (every 8th) must dominate
+        assert!(m[0] > 4.0 * m[1], "m0={} m1={}", m[0], m[1]);
+    }
+
+    #[test]
+    fn awq_beats_plain_rtn_on_skewed_inputs() {
+        let (w, h) = skewed(16, 64, 2);
+        let spec = QuantSpec::new(2, 32);
+        let awq = awq_quantize(&w, &h, &spec);
+        let plain = {
+            let gs = baseline_init(&w, &spec);
+            rtn_quantize(&w, &gs, &spec).dequantize()
+        };
+        let l_awq = layer_loss(&w, &awq.dequantize_unscaled(), &h);
+        let l_rtn = layer_loss(&w, &plain, &h);
+        assert!(
+            l_awq < l_rtn,
+            "awq {l_awq} should beat rtn {l_rtn} under skewed activations"
+        );
+        assert!(awq.alpha > 0.0, "grid search should pick a nonzero α here");
+    }
+
+    #[test]
+    fn alpha_zero_recovers_plain_rtn() {
+        let (w, h) = skewed(8, 32, 3);
+        let mags = activation_magnitudes(&h);
+        let mean =
+            (mags.iter().map(|&m| m as f64).sum::<f64>() / mags.len() as f64) as f32;
+        let s: Vec<f32> = mags.iter().map(|_| 1.0f32).collect();
+        let ws = scale_columns(&w, &s);
+        assert!(ws.max_abs_diff(&w) < 1e-6);
+        let _ = mean; // α = 0 ⇒ all scales 1 regardless of normalization
+    }
+
+    #[test]
+    fn dequantize_unscaled_roundtrip_shape() {
+        let (w, h) = skewed(8, 32, 4);
+        let spec = QuantSpec::new(8, 16);
+        let awq = awq_quantize(&w, &h, &spec);
+        let d = awq.dequantize_unscaled();
+        assert_eq!((d.rows, d.cols), (8, 32));
+        // 8-bit AWQ should be near-lossless in original space
+        let mse = crate::quant::metrics::weight_mse(&w, &d);
+        assert!(mse < 1e-3, "mse={mse}");
+    }
+}

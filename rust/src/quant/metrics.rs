@@ -1,0 +1,132 @@
+//! Reconstruction-loss metrics — the objectives the paper optimizes and the
+//! quantities our benches report.
+
+use crate::tensor::Matrix;
+
+/// Layer-wise reconstruction loss `tr(ΔW H ΔWᵀ) = Σ_r Δw_rᵀ H Δw_r`
+/// (Eq. 1/3 summed over output channels), with ΔW = Q − W.
+pub fn layer_loss(w: &Matrix, q: &Matrix, h: &Matrix) -> f64 {
+    assert_eq!((w.rows, w.cols), (q.rows, q.cols));
+    assert_eq!(h.rows, w.cols);
+    let d = q.sub(w);
+    let dh = d.matmul(h); // [rows, cols]
+    d.data
+        .iter()
+        .zip(&dh.data)
+        .map(|(a, b)| *a as f64 * *b as f64)
+        .sum()
+}
+
+/// Error-aware loss of Eq. 7 (up to the constant c):
+/// `tr(ΔW H ΔWᵀ) + 2 Σ_r w_rᵀ R Δw_r`, capturing upstream quantization
+/// error through `R = E[ΔX Xᵀ]`.
+pub fn layer_loss_with_deviation(w: &Matrix, q: &Matrix, h: &Matrix, r: &Matrix) -> f64 {
+    let base = layer_loss(w, q, h);
+    let d = q.sub(w);
+    let wr = w.matmul(r); // [rows, cols] ; rows of W times R
+    let cross: f64 = wr
+        .data
+        .iter()
+        .zip(&d.data)
+        .map(|(a, b)| *a as f64 * *b as f64)
+        .sum();
+    base + 2.0 * cross
+}
+
+/// Mean squared weight error `‖Q − W‖² / numel` — the proxy stock GPTQ's
+/// grid search actually optimizes.
+pub fn weight_mse(w: &Matrix, q: &Matrix) -> f64 {
+    w.sub(q).frob2() / (w.rows * w.cols) as f64
+}
+
+/// Relative layer loss: `layer_loss / tr(W H Wᵀ)` — a scale-free number
+/// comparable across layers and presets.
+pub fn relative_layer_loss(w: &Matrix, q: &Matrix, h: &Matrix) -> f64 {
+    let denom = layer_loss(&Matrix::zeros(w.rows, w.cols), w, h);
+    if denom <= 0.0 {
+        return 0.0;
+    }
+    layer_loss(w, q, h) / denom
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn zero_error_zero_loss() {
+        let mut rng = Rng::new(1);
+        let w = Matrix::randn(4, 8, 1.0, &mut rng);
+        let h = Matrix::eye(8);
+        assert_eq!(layer_loss(&w, &w, &h), 0.0);
+        assert_eq!(weight_mse(&w, &w), 0.0);
+    }
+
+    #[test]
+    fn identity_hessian_reduces_to_frobenius() {
+        let mut rng = Rng::new(2);
+        let w = Matrix::randn(5, 7, 1.0, &mut rng);
+        let q = Matrix::randn(5, 7, 1.0, &mut rng);
+        let h = Matrix::eye(7);
+        let ll = layer_loss(&w, &q, &h);
+        let fr = w.sub(&q).frob2();
+        assert!((ll - fr).abs() < 1e-3 * fr.max(1.0));
+    }
+
+    #[test]
+    fn loss_positive_for_spd_h() {
+        let mut rng = Rng::new(3);
+        let x = Matrix::randn(16, 64, 1.0, &mut rng);
+        let h = x.matmul_bt(&x);
+        let w = Matrix::randn(4, 16, 1.0, &mut rng);
+        let q = Matrix::randn(4, 16, 1.0, &mut rng);
+        assert!(layer_loss(&w, &q, &h) > 0.0);
+    }
+
+    #[test]
+    fn deviation_term_matches_expansion() {
+        // Check Eq. 7 against a brute-force expectation over explicit X, X̃.
+        let mut rng = Rng::new(4);
+        let (din, t) = (6, 200);
+        let xt = Matrix::randn(din, t, 1.0, &mut rng); // FP input X̃
+        let mut x = xt.clone();
+        let noise = Matrix::randn(din, t, 0.1, &mut rng);
+        x.add_inplace(&noise); // deviated input X
+        let w = Matrix::randn(3, din, 1.0, &mut rng);
+        let q = Matrix::randn(3, din, 1.0, &mut rng);
+
+        // direct: E ||qᵀX − wᵀX̃||² (sum over tokens, not averaged)
+        let qy = q.matmul(&x);
+        let wy = w.matmul(&xt);
+        let direct = qy.sub(&wy).frob2();
+
+        // via Eq. 7: ΔW H ΔWᵀ + 2 wᵀR(q−w) + c, c = tr(W ΔXΔXᵀ Wᵀ)
+        let h = x.matmul_bt(&x);
+        let dx = noise;
+        let r = dx.matmul_bt(&x);
+        let main = layer_loss_with_deviation(&w, &q, &h, &r);
+        let c = {
+            let wd = w.matmul(&dx);
+            wd.frob2()
+        };
+        assert!(
+            (direct - (main + c)).abs() < 1e-2 * direct.max(1.0),
+            "direct={direct} decomposed={}",
+            main + c
+        );
+    }
+
+    #[test]
+    fn relative_loss_scale_free() {
+        let mut rng = Rng::new(5);
+        let w = Matrix::randn(4, 8, 1.0, &mut rng);
+        let mut q = w.clone();
+        q.scale_inplace(0.9);
+        let x = Matrix::randn(8, 32, 1.0, &mut rng);
+        let h = x.matmul_bt(&x);
+        let rel = relative_layer_loss(&w, &q, &h);
+        // (0.9 - 1)² = 0.01 exactly, since Q = 0.9 W.
+        assert!((rel - 0.01).abs() < 1e-4, "rel={rel}");
+    }
+}

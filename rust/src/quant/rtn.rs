@@ -1,0 +1,81 @@
+//! Round-to-nearest (RTN) baseline quantizer.
+//!
+//! Quantizes every weight independently onto the group grid — no error
+//! compensation. This is the "nearest quantized value is assigned to each
+//! weight" assumption under which all the scale searches (Eq. 2/4) are
+//! derived, and the weakest baseline in the evaluation.
+
+use super::format::QuantizedLinear;
+use super::scale::{quantize_group, GroupScales, QuantSpec};
+use crate::tensor::Matrix;
+
+/// Quantize `w` row-by-row with the given (fixed) group scales.
+pub fn rtn_quantize(w: &Matrix, scales: &GroupScales, spec: &QuantSpec) -> QuantizedLinear {
+    let g = spec.group_size;
+    let qmax = spec.qmax();
+    let ints: Vec<Vec<u8>> = (0..w.rows)
+        .map(|r| {
+            let row = w.row(r);
+            let mut out = Vec::with_capacity(w.cols);
+            for (gi, chunk) in row.chunks(g).enumerate() {
+                let s = scales.scales[(r, gi)];
+                let z = scales.zeros[(r, gi)];
+                out.extend(quantize_group(chunk, s, z, qmax));
+            }
+            out
+        })
+        .collect();
+    QuantizedLinear::from_ints(
+        &ints,
+        spec.bits,
+        g,
+        scales.scales.clone(),
+        scales.zeros.clone(),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::scale::{compute_group_scales, ScaleMetric};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn rtn_roundtrip_error_bounded() {
+        let mut rng = Rng::new(1);
+        let w = Matrix::randn(8, 128, 1.0, &mut rng);
+        let spec = QuantSpec::new(4, 32);
+        let scales = compute_group_scales(&w, &spec, ScaleMetric::L2, None);
+        let q = rtn_quantize(&w, &scales, &spec);
+        let d = q.dequantize();
+        // 4-bit minmax: error bounded by ~s/2 per weight; loose global check.
+        let mse = crate::quant::metrics::weight_mse(&w, &d);
+        assert!(mse < 0.02, "mse={mse}");
+    }
+
+    #[test]
+    fn rtn_exact_when_weights_on_grid() {
+        // Weights already exactly on a 2-bit grid quantize losslessly.
+        let spec = QuantSpec::new(2, 4);
+        let w = Matrix::from_vec(1, 4, vec![0.0, 0.5, 1.0, 1.5]);
+        let scales = compute_group_scales(&w, &spec, ScaleMetric::L2, None);
+        let q = rtn_quantize(&w, &scales, &spec);
+        let d = q.dequantize();
+        assert!(d.max_abs_diff(&w) < 1e-6);
+    }
+
+    #[test]
+    fn lower_bits_higher_error() {
+        let mut rng = Rng::new(2);
+        let w = Matrix::randn(4, 64, 1.0, &mut rng);
+        let mut last = 0.0;
+        for bits in [8u8, 4, 3, 2] {
+            let spec = QuantSpec::new(bits, 32);
+            let scales = compute_group_scales(&w, &spec, ScaleMetric::L2, None);
+            let q = rtn_quantize(&w, &scales, &spec);
+            let mse = crate::quant::metrics::weight_mse(&w, &q.dequantize());
+            assert!(mse >= last, "bits={bits}: {mse} < {last}");
+            last = mse;
+        }
+    }
+}

@@ -1,0 +1,376 @@
+//! **Stage 2 — coordinate-descent group-scale refinement**
+//! (paper §3.2–3.3, Algorithm 1).
+//!
+//! After GPTQ's sweep, the integer weights `w_int` are **frozen** and the
+//! group scales are refined to minimize the *full* layer-wise loss (Eq. 3),
+//! which — unlike Stage 1 — accounts for inter-group correlations `H_{i,j}`.
+//! The objective is quadratic in each `s_i`, giving the closed-form CD step
+//!
+//! ```text
+//! s_i ← s_i + ( v_iᵀ H_{i,:} (w − q) − wᵀ R_i v_i ) / ( v_iᵀ H_{i,i} v_i )
+//! ```
+//!
+//! where `v_i = w_int,i − z_i` (the paper's zero-offset form generalized to
+//! the asymmetric grid: `q_i = s_i · v_i`, and `z` stays frozen along with
+//! `w_int`, so the derivation is unchanged), and the `R = E[ΔX Xᵀ]` term
+//! (Eq. 8/9) corrects for quantization error accumulated in preceding
+//! layers. For the first layer `R = 0` and the update reduces to Eq. 5; for
+//! `n_g = 1` it reduces to the COMQ channel-wise rule (Eq. 6).
+//!
+//! Rows (output channels) are independent; within a row the groups are
+//! swept sequentially (true coordinate descent), which makes every step an
+//! exact 1-D minimization — the total loss is monotonically non-increasing
+//! (property-tested below).
+
+use super::format::QuantizedLinear;
+use super::scale::GroupScales;
+use crate::tensor::Matrix;
+use crate::util::threadpool::parallel_for_chunked;
+
+/// Stage-2 tunables.
+#[derive(Clone, Copy, Debug)]
+pub struct Stage2Config {
+    /// Number of full CD sweeps over all groups.
+    pub n_sweeps: usize,
+    /// Denominator guard: groups with `v_iᵀ H_ii v_i < eps` are skipped.
+    pub denom_eps: f64,
+}
+
+impl Default for Stage2Config {
+    fn default() -> Self {
+        Stage2Config { n_sweeps: 4, denom_eps: 1e-10 }
+    }
+}
+
+/// Outcome of a refinement run.
+#[derive(Clone, Debug)]
+pub struct Stage2Report {
+    pub sweeps: usize,
+    pub updated_groups: usize,
+    pub skipped_groups: usize,
+}
+
+/// Refine `scales` in place given frozen integers.
+///
+/// * `w` — FP weights `[out, in]`.
+/// * `vint` — frozen `w_int − z` as f32 `[out, in]` (so `q = s ⊙_g vint`).
+/// * `h` — layer Hessian `[in, in]` (damped, same one GPTQ used).
+/// * `r` — deviation correlation `R = E[ΔX Xᵀ]` for layers after the first
+///   (Eq. 9); `None` for the first layer (Eq. 5).
+pub fn refine_scales(
+    w: &Matrix,
+    vint: &Matrix,
+    h: &Matrix,
+    r: Option<&Matrix>,
+    scales: &mut GroupScales,
+    cfg: &Stage2Config,
+) -> Stage2Report {
+    let (rows, cols) = (w.rows, w.cols);
+    assert_eq!((vint.rows, vint.cols), (rows, cols));
+    assert_eq!(h.rows, cols);
+    let g = scales.group_size;
+    let n_g = scales.scales.cols;
+
+    // Precompute fixed quantities.
+    // wr = W · R  (wᵀ R_i per row is a column slice of this) — Eq. 8 term.
+    let wr = r.map(|rm| {
+        assert_eq!((rm.rows, rm.cols), (cols, cols));
+        w.matmul(rm)
+    });
+    // denom[r][gi] = v_iᵀ H_ii v_i — constant while integers are frozen.
+    let mut denom = Matrix::zeros(rows, n_g);
+    for gi in 0..n_g {
+        let c0 = gi * g;
+        let c1 = ((gi + 1) * g).min(cols);
+        let hii = h.slice(c0, c1, c0, c1);
+        for rr in 0..rows {
+            let v = &vint.row(rr)[c0..c1];
+            denom[(rr, gi)] = crate::tensor::linalg::quad_form(v, &hii, v) as f32;
+        }
+    }
+
+    // Current quantized weights and residual D = W − Q.
+    let mut dmat = Matrix::zeros(rows, cols);
+    for rr in 0..rows {
+        let srow = scales.scales.row(rr);
+        let drow = dmat.row_mut(rr);
+        let vrow = vint.row(rr);
+        let wrow = w.row(rr);
+        for c in 0..cols {
+            drow[c] = wrow[c] - srow[c / g] * vrow[c];
+        }
+    }
+
+    let mut updated = 0usize;
+    let mut skipped = 0usize;
+    for _sweep in 0..cfg.n_sweeps {
+        for gi in 0..n_g {
+            let c0 = gi * g;
+            let c1 = ((gi + 1) * g).min(cols);
+            // T = D · H[:, c0..c1]  — H symmetric, so row block H_{i,:} of the
+            // paper acting on d equals this column-sliced product (per row).
+            let hcols = h.slice(0, cols, c0, c1);
+            let t = dmat.matmul(&hcols); // [rows, c1-c0]
+
+            // Per-row closed-form update + local D refresh (rows independent).
+            let counts = std::sync::Mutex::new((0usize, 0usize));
+            let scales_ptr = crate::util::SendPtr(scales.scales.data.as_mut_ptr());
+            let d_ptr = crate::util::SendPtr(dmat.data.as_mut_ptr());
+            let n_scale_cols = scales.scales.cols;
+            parallel_for_chunked(rows, 16, |rr| {
+                let v = &vint.row(rr)[c0..c1];
+                let den = denom[(rr, gi)] as f64;
+                if den < cfg.denom_eps {
+                    counts.lock().unwrap().1 += 1;
+                    return;
+                }
+                let mut num = 0.0f64;
+                for (vi, ti) in v.iter().zip(t.row(rr)) {
+                    num += *vi as f64 * *ti as f64;
+                }
+                if let Some(wr) = &wr {
+                    let wrrow = &wr.row(rr)[c0..c1];
+                    for (vi, wi) in v.iter().zip(wrrow) {
+                        num -= *vi as f64 * *wi as f64;
+                    }
+                }
+                let delta = (num / den) as f32;
+                // SAFETY: disjoint rows per worker.
+                unsafe {
+                    let s = scales_ptr.get().add(rr * n_scale_cols + gi);
+                    *s += delta;
+                    // refresh residual for this group: d -= delta * v
+                    let drow = std::slice::from_raw_parts_mut(d_ptr.get().add(rr * cols + c0), c1 - c0);
+                    for (dv, vi) in drow.iter_mut().zip(v) {
+                        *dv -= delta * *vi;
+                    }
+                }
+                counts.lock().unwrap().0 += 1;
+            });
+            let (u, s) = *counts.lock().unwrap();
+            updated += u;
+            skipped += s;
+        }
+    }
+    Stage2Report { sweeps: cfg.n_sweeps, updated_groups: updated, skipped_groups: skipped }
+}
+
+/// Convenience wrapper operating on a [`QuantizedLinear`]: extracts the
+/// frozen `v = w_int − z`, refines, and writes the new scales back.
+pub fn refine_quantized_linear(
+    w: &Matrix,
+    q: &mut QuantizedLinear,
+    h: &Matrix,
+    r: Option<&Matrix>,
+    cfg: &Stage2Config,
+) -> Stage2Report {
+    let mut vint = Matrix::zeros(q.rows, q.cols);
+    let g = q.group_size;
+    for rr in 0..q.rows {
+        let zrow = q.zeros.row(rr).to_vec();
+        let packed = &q.qweight[rr];
+        let vrow = vint.row_mut(rr);
+        for c in 0..q.cols {
+            vrow[c] = packed.get(c) as f32 - zrow[c / g];
+        }
+    }
+    let mut gs = GroupScales {
+        scales: q.scales.clone(),
+        zeros: q.zeros.clone(),
+        group_size: g,
+        bits: q.bits,
+    };
+    let report = refine_scales(w, &vint, h, r, &mut gs, cfg);
+    q.scales = gs.scales;
+    report
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::gptq::{gptq_quantize, prepare_hessian, GptqConfig};
+    use crate::quant::metrics::{layer_loss, layer_loss_with_deviation};
+    use crate::quant::scale::{compute_group_scales, QuantSpec, ScaleMetric};
+    use crate::util::proptest::{check, prop_assert};
+    use crate::util::rng::Rng;
+
+    fn correlated_hessian(cols: usize, t: usize, rng: &mut Rng) -> Matrix {
+        let mut x = Matrix::zeros(cols, t);
+        for c in 0..t {
+            let mut prev = 0.0f32;
+            for r in 0..cols {
+                let v = 0.6 * prev + rng.normal() as f32;
+                x[(r, c)] = v;
+                prev = v;
+            }
+        }
+        let mut h = x.matmul_bt(&x);
+        h.scale_inplace(1.0 / t as f32);
+        h
+    }
+
+    fn setup(
+        out: usize,
+        inp: usize,
+        g: usize,
+        bits: u8,
+        seed: u64,
+    ) -> (Matrix, Matrix, QuantizedLinear, QuantSpec) {
+        let mut rng = Rng::new(seed);
+        let w = Matrix::randn(out, inp, 1.0, &mut rng);
+        let h = correlated_hessian(inp, inp * 4, &mut rng);
+        let spec = QuantSpec::new(bits, g);
+        let scales = compute_group_scales(&w, &spec, ScaleMetric::L2, None);
+        let mut wd = w.clone();
+        let hd = prepare_hessian(&h, &mut wd, 0.01);
+        let q = gptq_quantize(&w, &h, &scales, &spec, &GptqConfig::default()).unwrap();
+        (w, hd, q, spec)
+    }
+
+    #[test]
+    fn stage2_reduces_layer_loss() {
+        let (w, hd, mut q, _) = setup(16, 64, 16, 2, 1);
+        let before = layer_loss(&w, &q.dequantize(), &hd);
+        let rep =
+            refine_quantized_linear(&w, &mut q, &hd, None, &Stage2Config::default());
+        let after = layer_loss(&w, &q.dequantize(), &hd);
+        assert!(rep.updated_groups > 0);
+        assert!(
+            after < before * 0.999,
+            "stage2 should strictly reduce loss: {before} -> {after}"
+        );
+    }
+
+    #[test]
+    fn stage2_monotone_per_sweep() {
+        let (w, hd, mut q, _) = setup(8, 48, 16, 2, 2);
+        let mut last = layer_loss(&w, &q.dequantize(), &hd);
+        for _ in 0..5 {
+            refine_quantized_linear(
+                &w,
+                &mut q,
+                &hd,
+                None,
+                &Stage2Config { n_sweeps: 1, ..Default::default() },
+            );
+            let cur = layer_loss(&w, &q.dequantize(), &hd);
+            assert!(cur <= last + last.abs() * 1e-5, "not monotone: {last} -> {cur}");
+            last = cur;
+        }
+    }
+
+    #[test]
+    fn channelwise_reduces_to_comq_rule() {
+        // n_g = 1: the update must land exactly on s* = vᵀHw / vᵀHv (Eq. 6).
+        let mut rng = Rng::new(3);
+        let inp = 32;
+        let w = Matrix::randn(1, inp, 1.0, &mut rng);
+        let h = correlated_hessian(inp, 128, &mut rng);
+        let spec = QuantSpec::new(3, inp); // one group
+        let scales = compute_group_scales(&w, &spec, ScaleMetric::L2, None);
+        let q = crate::quant::rtn::rtn_quantize(&w, &scales, &spec);
+
+        let mut vint = Matrix::zeros(1, inp);
+        for c in 0..inp {
+            vint[(0, c)] = q.qweight[0].get(c) as f32 - q.zeros[(0, 0)];
+        }
+        let mut gs = GroupScales {
+            scales: q.scales.clone(),
+            zeros: q.zeros.clone(),
+            group_size: inp,
+            bits: 3,
+        };
+        refine_scales(&w, &vint, &h, None, &mut gs, &Stage2Config { n_sweeps: 1, ..Default::default() });
+
+        let v = vint.row(0);
+        let hw = h.matvec(w.row(0));
+        let hv = h.matvec(v);
+        let num: f64 = v.iter().zip(&hw).map(|(a, b)| *a as f64 * *b as f64).sum();
+        let den: f64 = v.iter().zip(&hv).map(|(a, b)| *a as f64 * *b as f64).sum();
+        let expected = (num / den) as f32;
+        assert!(
+            (gs.scales[(0, 0)] - expected).abs() < 1e-4 * expected.abs().max(1.0),
+            "got {} want {expected}",
+            gs.scales[(0, 0)]
+        );
+    }
+
+    #[test]
+    fn single_group_single_sweep_is_exact_minimizer() {
+        // After one update of the only group, a second sweep must be a no-op.
+        let (w, hd, mut q, _) = setup(4, 16, 16, 2, 4);
+        refine_quantized_linear(&w, &mut q, &hd, None, &Stage2Config { n_sweeps: 1, ..Default::default() });
+        let s1 = q.scales.clone();
+        refine_quantized_linear(&w, &mut q, &hd, None, &Stage2Config { n_sweeps: 1, ..Default::default() });
+        assert!(q.scales.max_abs_diff(&s1) < 1e-5);
+    }
+
+    #[test]
+    fn deviation_term_shifts_optimum() {
+        // With a non-zero R the refined scales must differ from the R = None
+        // run, and must reduce the deviation-aware loss (Eq. 7).
+        let (w, hd, q0, _) = setup(8, 48, 16, 2, 5);
+        let mut rng = Rng::new(99);
+        let dx = Matrix::randn(48, 96, 0.3, &mut rng);
+        let x = Matrix::randn(48, 96, 1.0, &mut rng);
+        let mut r = dx.matmul_bt(&x);
+        r.scale_inplace(1.0 / 96.0);
+
+        let mut q_plain = q0.clone();
+        let mut q_dev = q0.clone();
+        refine_quantized_linear(&w, &mut q_plain, &hd, None, &Stage2Config::default());
+        refine_quantized_linear(&w, &mut q_dev, &hd, Some(&r), &Stage2Config::default());
+        assert!(q_plain.scales.max_abs_diff(&q_dev.scales) > 1e-6);
+
+        let before = layer_loss_with_deviation(&w, &q0.dequantize(), &hd, &r);
+        let after = layer_loss_with_deviation(&w, &q_dev.dequantize(), &hd, &r);
+        assert!(after < before, "deviation-aware loss: {before} -> {after}");
+    }
+
+    #[test]
+    fn prop_stage2_never_increases_loss() {
+        check("stage2 monotone on random problems", 15, |gen| {
+            let out = gen.usize_in(1, 6);
+            let n_g = gen.usize_in(1, 4);
+            let g = 8 * gen.usize_in(1, 2);
+            let inp = n_g * g;
+            let bits = gen.usize_in(2, 4) as u8;
+            let seed = gen.rng.next_u64();
+            let mut rng = Rng::new(seed);
+            let w = Matrix::randn(out, inp, 1.0, &mut rng);
+            let h = correlated_hessian(inp, inp * 4 + 8, &mut rng);
+            let spec = QuantSpec::new(bits, g);
+            let scales = compute_group_scales(&w, &spec, ScaleMetric::L2, None);
+            let mut wd = w.clone();
+            let hd = prepare_hessian(&h, &mut wd, 0.01);
+            let mut q = gptq_quantize(&w, &h, &scales, &spec, &GptqConfig::default()).unwrap();
+            let before = layer_loss(&w, &q.dequantize(), &hd);
+            refine_quantized_linear(&w, &mut q, &hd, None, &Stage2Config::default());
+            let after = layer_loss(&w, &q.dequantize(), &hd);
+            prop_assert(
+                after <= before + before.abs() * 1e-4 + 1e-7,
+                &format!("loss increased {before} -> {after} (seed {seed})"),
+            )
+        });
+    }
+
+    #[test]
+    fn skips_degenerate_groups() {
+        // A group whose integers are all equal to the zero-point (v = 0) has
+        // denominator 0 and must be skipped, not NaN'd.
+        let inp = 16;
+        let w = Matrix::zeros(2, inp);
+        let h = Matrix::eye(inp);
+        let vint = Matrix::zeros(2, inp);
+        let mut gs = GroupScales {
+            scales: Matrix::from_vec(2, 2, vec![0.1; 4]),
+            zeros: Matrix::zeros(2, 2),
+            group_size: 8,
+            bits: 2,
+        };
+        let rep = refine_scales(&w, &vint, &h, None, &mut gs, &Stage2Config::default());
+        assert_eq!(rep.updated_groups, 0);
+        assert_eq!(rep.skipped_groups, 16); // 2 rows × 2 groups × 4 sweeps
+        assert!(gs.scales.data.iter().all(|s| s.is_finite()));
+    }
+}

@@ -1,0 +1,82 @@
+//! Tensor ⇄ `xla::Literal` marshalling.
+
+use crate::tensor::Matrix;
+use anyhow::Result;
+
+/// `[rows, cols]` f32 matrix → literal.
+pub fn matrix_to_literal(m: &Matrix) -> Result<xla::Literal> {
+    Ok(xla::Literal::vec1(&m.data).reshape(&[m.rows as i64, m.cols as i64])?)
+}
+
+/// f32 vector → rank-1 literal.
+pub fn vec_to_literal(v: &[f32]) -> xla::Literal {
+    xla::Literal::vec1(v)
+}
+
+/// Token ids → i32 literal of the given shape (row-major).
+pub fn tokens_to_literal(tokens: &[i32], shape: &[usize]) -> Result<xla::Literal> {
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    Ok(xla::Literal::vec1(tokens).reshape(&dims)?)
+}
+
+/// Literal → matrix, reading the literal's own shape. Rank-1 literals become
+/// a single row; higher ranks collapse leading axes into rows.
+pub fn literal_to_matrix(lit: &xla::Literal) -> Result<Matrix> {
+    let shape = lit.array_shape()?;
+    let dims = shape.dims();
+    let data: Vec<f32> = lit.to_vec()?;
+    let (rows, cols) = match dims.len() {
+        0 => (1, 1),
+        1 => (1, dims[0] as usize),
+        n => {
+            let cols = dims[n - 1] as usize;
+            (data.len() / cols.max(1), cols)
+        }
+    };
+    Ok(Matrix::from_vec(rows, cols, data))
+}
+
+/// Literal → flat f32 vec.
+pub fn literal_to_vec(lit: &xla::Literal) -> Result<Vec<f32>> {
+    Ok(lit.to_vec()?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn matrix_roundtrip() {
+        let mut rng = Rng::new(1);
+        let m = Matrix::randn(3, 5, 1.0, &mut rng);
+        let lit = matrix_to_literal(&m).unwrap();
+        let back = literal_to_matrix(&lit).unwrap();
+        assert_eq!(m, back);
+    }
+
+    #[test]
+    fn tokens_shape() {
+        let lit = tokens_to_literal(&[1, 2, 3, 4, 5, 6], &[2, 3]).unwrap();
+        let shape = lit.array_shape().unwrap();
+        assert_eq!(shape.dims(), &[2, 3]);
+        let v: Vec<i32> = lit.to_vec().unwrap();
+        assert_eq!(v, vec![1, 2, 3, 4, 5, 6]);
+    }
+
+    #[test]
+    fn rank1_becomes_row() {
+        let lit = vec_to_literal(&[1.0, 2.0, 3.0]);
+        let m = literal_to_matrix(&lit).unwrap();
+        assert_eq!((m.rows, m.cols), (1, 3));
+    }
+
+    #[test]
+    fn rank3_collapses_leading() {
+        let data: Vec<f32> = (0..24).map(|i| i as f32).collect();
+        let lit = xla::Literal::vec1(&data).reshape(&[2, 3, 4]).unwrap();
+        let m = literal_to_matrix(&lit).unwrap();
+        assert_eq!((m.rows, m.cols), (6, 4));
+        assert_eq!(m[(5, 3)], 23.0);
+    }
+}

@@ -1,0 +1,123 @@
+//! The PJRT execution engine.
+//!
+//! Compiles each HLO-text artifact once (lazily, cached) on a shared CPU
+//! PJRT client and runs it from the rust hot path. All entries are lowered
+//! with `return_tuple=True` on the python side, so outputs are decomposed
+//! tuples.
+
+use super::manifest::Manifest;
+use anyhow::{Context, Result};
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::Mutex;
+
+/// A loaded artifact engine. Cheap to share behind an `Arc`.
+pub struct Engine {
+    pub manifest: Manifest,
+    client: xla::PjRtClient,
+    cache: Mutex<HashMap<String, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl Engine {
+    /// Open the artifact directory (compiles nothing yet).
+    pub fn open(dir: &Path) -> Result<Engine> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+        Ok(Engine { manifest, client, cache: Mutex::new(HashMap::new()) })
+    }
+
+    /// Open the default artifact directory if it exists.
+    pub fn open_default() -> Option<Engine> {
+        let dir = Manifest::default_dir();
+        if dir.join("manifest.json").exists() {
+            match Engine::open(&dir) {
+                Ok(e) => Some(e),
+                Err(err) => {
+                    eprintln!("warning: artifacts present but unusable: {err:#}");
+                    None
+                }
+            }
+        } else {
+            None
+        }
+    }
+
+    pub fn has_entry(&self, name: &str) -> bool {
+        self.manifest.entry(name).is_some()
+    }
+
+    fn load(&self, name: &str) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.cache.lock().unwrap().get(name) {
+            return Ok(exe.clone());
+        }
+        let entry = self
+            .manifest
+            .entry(name)
+            .with_context(|| format!("no artifact entry '{name}'"))?;
+        let path = self.manifest.dir.join(&entry.file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("artifact path not utf-8")?,
+        )
+        .with_context(|| format!("parse HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = std::sync::Arc::new(
+            self.client
+                .compile(&comp)
+                .with_context(|| format!("compile artifact '{name}'"))?,
+        );
+        self.cache.lock().unwrap().insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Execute an entry with positional literal inputs; returns the
+    /// decomposed output tuple.
+    pub fn execute(&self, name: &str, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let exe = self.load(name)?;
+        let result = exe
+            .execute::<xla::Literal>(inputs)
+            .with_context(|| format!("execute artifact '{name}'"))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .with_context(|| format!("fetch output of '{name}'"))?;
+        Ok(lit.to_tuple()?)
+    }
+
+    /// Pre-compile every entry (used by the CLI `warmup` and benches).
+    pub fn warmup(&self) -> Result<Vec<String>> {
+        let mut loaded = Vec::new();
+        let names: Vec<String> =
+            self.manifest.entries.iter().map(|e| e.name.clone()).collect();
+        for name in names {
+            self.load(&name)?;
+            loaded.push(name);
+        }
+        Ok(loaded)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // Engine tests that need real artifacts live in rust/tests/runtime_e2e.rs
+    // (they are skipped when `make artifacts` has not run). Here we only test
+    // the failure paths that need no artifacts.
+    use super::*;
+
+    #[test]
+    fn open_missing_dir_fails() {
+        assert!(Engine::open(Path::new("/no/such/dir")).is_err());
+    }
+
+    #[test]
+    fn unknown_entry_fails() {
+        let dir = std::env::temp_dir().join("tsgo_engine_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"config":{"vocab":256,"d_model":64,"n_layers":2,"n_heads":2,"ffn":128,"seq_len":64},"entries":{}}"#,
+        )
+        .unwrap();
+        let e = Engine::open(&dir).unwrap();
+        assert!(!e.has_entry("forward_logits"));
+        assert!(e.execute("forward_logits", &[]).is_err());
+    }
+}

@@ -1,0 +1,86 @@
+//! Artifact-backed model execution: logits and perplexity through the
+//! AOT-compiled `forward_logits` entry (the fast path for evaluation), with
+//! shape checks against the manifest.
+
+use super::convert::{literal_to_matrix, tokens_to_literal, vec_to_literal};
+use super::engine::Engine;
+use crate::model::ModelWeights;
+use crate::tensor::Matrix;
+use anyhow::{ensure, Context, Result};
+
+/// Flatten model weights into the artifact's positional parameter literals.
+pub fn weight_literals(w: &ModelWeights) -> Result<Vec<xla::Literal>> {
+    let mut out = Vec::new();
+    for (_, shape, data) in w.flat_params() {
+        let lit = match shape.len() {
+            1 => vec_to_literal(data),
+            2 => xla::Literal::vec1(data).reshape(&[shape[0] as i64, shape[1] as i64])?,
+            _ => anyhow::bail!("unexpected param rank {}", shape.len()),
+        };
+        out.push(lit);
+    }
+    Ok(out)
+}
+
+/// Run `forward_logits` for one sequence; returns logits `[S, vocab]`.
+///
+/// The artifact was lowered for `[1, seq_len]` tokens; shorter sequences are
+/// right-padded (causality makes padding inert for the reported prefix).
+pub fn forward_logits_artifact(
+    engine: &Engine,
+    w: &ModelWeights,
+    tokens: &[u8],
+) -> Result<Matrix> {
+    let entry = engine
+        .manifest
+        .entry("forward_logits")
+        .context("artifact 'forward_logits' missing")?;
+    let seq_len = *entry
+        .inputs
+        .last()
+        .context("bad manifest")?
+        .shape
+        .last()
+        .context("bad manifest")?;
+    ensure!(
+        tokens.len() <= seq_len,
+        "sequence ({}) longer than artifact seq_len ({seq_len})",
+        tokens.len()
+    );
+    ensure!(
+        w.config == engine.manifest.config,
+        "model config does not match artifacts (run `make artifacts`)"
+    );
+    let mut padded: Vec<i32> = tokens.iter().map(|&t| t as i32).collect();
+    padded.resize(seq_len, 0);
+
+    let mut inputs = weight_literals(w)?;
+    inputs.push(tokens_to_literal(&padded, &[1, seq_len])?);
+    let outputs = engine.execute("forward_logits", &inputs)?;
+    let logits = literal_to_matrix(&outputs[0])?; // [1*S, vocab]
+    Ok(logits.slice(0, tokens.len(), 0, logits.cols))
+}
+
+/// Perplexity through the artifact path.
+pub fn perplexity_artifact(
+    engine: &Engine,
+    w: &ModelWeights,
+    data: &[u8],
+    seq_len: usize,
+    max_windows: usize,
+) -> Result<f64> {
+    let mut err = None;
+    let ppl = crate::eval::ppl::perplexity_with(data, seq_len, max_windows, |t| {
+        match forward_logits_artifact(engine, w, t) {
+            Ok(m) => m,
+            Err(e) => {
+                err = Some(e);
+                Matrix::zeros(t.len(), w.config.vocab)
+            }
+        }
+    });
+    match err {
+        Some(e) => Err(e),
+        None => Ok(ppl),
+    }
+}

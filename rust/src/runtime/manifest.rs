@@ -1,0 +1,120 @@
+//! The artifact manifest written by `python/compile/aot.py`.
+
+use crate::model::ModelConfig;
+use crate::util::json::Json;
+use anyhow::{Context, Result};
+use std::path::{Path, PathBuf};
+
+/// One tensor in an entry signature.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+/// One AOT-compiled entry point.
+#[derive(Clone, Debug)]
+pub struct EntrySpec {
+    pub name: String,
+    /// HLO text file, relative to the artifact directory.
+    pub file: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+/// The whole manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub config: ModelConfig,
+    pub entries: Vec<EntrySpec>,
+}
+
+fn tensor_specs(j: &Json) -> Vec<TensorSpec> {
+    j.as_arr()
+        .map(|a| {
+            a.iter()
+                .map(|t| TensorSpec {
+                    name: t.get("name").as_str().unwrap_or("").to_string(),
+                    shape: t.get("shape").usize_vec(),
+                    dtype: t.get("dtype").as_str().unwrap_or("f32").to_string(),
+                })
+                .collect()
+        })
+        .unwrap_or_default()
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("read manifest {}", path.display()))?;
+        let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("manifest parse: {e}"))?;
+        let config = ModelConfig::from_json(j.get("config"))
+            .context("manifest missing model config")?;
+        let mut entries = Vec::new();
+        if let Some(obj) = j.get("entries").as_obj() {
+            for (name, e) in obj {
+                entries.push(EntrySpec {
+                    name: name.clone(),
+                    file: e.get("file").as_str().unwrap_or("").to_string(),
+                    inputs: tensor_specs(e.get("inputs")),
+                    outputs: tensor_specs(e.get("outputs")),
+                });
+            }
+        }
+        Ok(Manifest { dir: dir.to_path_buf(), config, entries })
+    }
+
+    pub fn entry(&self, name: &str) -> Option<&EntrySpec> {
+        self.entries.iter().find(|e| e.name == name)
+    }
+
+    /// Default artifact directory: `$TSGO_ARTIFACTS` or `./artifacts`.
+    pub fn default_dir() -> PathBuf {
+        std::env::var("TSGO_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("artifacts"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_manifest(dir: &Path, body: &str) {
+        std::fs::create_dir_all(dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), body).unwrap();
+    }
+
+    #[test]
+    fn parses_manifest() {
+        let dir = std::env::temp_dir().join("tsgo_manifest_test");
+        write_manifest(
+            &dir,
+            r#"{
+              "config": {"vocab":256,"d_model":64,"n_layers":2,"n_heads":2,"ffn":128,"seq_len":64},
+              "entries": {
+                "forward_logits": {
+                  "file": "forward_logits.hlo.txt",
+                  "inputs": [{"name":"tokens","shape":[1,64],"dtype":"i32"}],
+                  "outputs": [{"name":"logits","shape":[1,64,256],"dtype":"f32"}]
+                }
+              }
+            }"#,
+        );
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.config.d_model, 64);
+        let e = m.entry("forward_logits").unwrap();
+        assert_eq!(e.inputs[0].shape, vec![1, 64]);
+        assert_eq!(e.outputs[0].dtype, "f32");
+        assert!(m.entry("nope").is_none());
+    }
+
+    #[test]
+    fn missing_manifest_is_error() {
+        assert!(Manifest::load(Path::new("/nonexistent_dir_xyz")).is_err());
+    }
+}

@@ -1,0 +1,22 @@
+//! PJRT runtime: load and execute the AOT-compiled HLO artifacts.
+//!
+//! `python/compile/aot.py` lowers the L2 JAX graphs (which embed the L1
+//! Pallas kernels) to **HLO text** + a JSON manifest describing every entry
+//! point's input/output shapes. This module loads those artifacts through
+//! the `xla` crate (PJRT CPU client), compiles each entry once, and exposes
+//! typed execution to the rest of the system. Python never runs here.
+//!
+//! Artifacts are optional: every consumer has a native fallback, and the
+//! [`Engine`] reports which path is active so benches can compare them.
+
+pub mod convert;
+pub mod engine;
+pub mod forward;
+pub mod manifest;
+pub mod train;
+
+pub use convert::{literal_to_matrix, matrix_to_literal, tokens_to_literal, vec_to_literal};
+pub use engine::Engine;
+pub use forward::{forward_logits_artifact, perplexity_artifact};
+pub use manifest::{EntrySpec, Manifest, TensorSpec};
+pub use train::{train, TrainConfig, TrainOutcome};

@@ -1,0 +1,145 @@
+//! The rust training loop over the AOT `train_step` artifact.
+//!
+//! Parameters and optimizer moments live as PJRT literals across steps —
+//! the loop feeds each step's outputs straight back as the next step's
+//! inputs, so weights never round-trip through rust until training ends.
+
+use super::convert::tokens_to_literal;
+use super::engine::Engine;
+use super::forward::weight_literals;
+use crate::calib::Batch;
+use crate::model::{ModelWeights, Preset};
+use crate::util::rng::Rng;
+use anyhow::{ensure, Context, Result};
+
+/// Training-loop configuration.
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    pub steps: usize,
+    pub seed: u64,
+    /// Log every n steps (0 = silent).
+    pub log_every: usize,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig { steps: 300, seed: 7, log_every: 25 }
+    }
+}
+
+/// Outcome of a training run.
+pub struct TrainOutcome {
+    pub weights: ModelWeights,
+    pub losses: Vec<f32>,
+}
+
+/// Train from scratch on `corpus` bytes using the artifact's train batch
+/// shape. Returns the trained weights and the per-step loss curve.
+pub fn train(engine: &Engine, corpus: &[u8], cfg: &TrainConfig) -> Result<TrainOutcome> {
+    let mcfg = engine.manifest.config;
+    let entry = engine
+        .manifest
+        .entry("train_step")
+        .context("artifact 'train_step' missing (re-run `make artifacts`)")?;
+    // tokens input is at position 3n+1; its shape is [B, S]
+    let n = crate::model::ModelWeights::param_manifest(&mcfg).len();
+    let tok_spec = &entry.inputs[3 * n + 1];
+    let (batch, seq) = (tok_spec.shape[0], tok_spec.shape[1]);
+    ensure!(corpus.len() > seq + 1, "corpus too small for training");
+
+    // init params in rust (so the whole run is reproducible from one seed)
+    let mut rng = Rng::new(cfg.seed);
+    let init = ModelWeights::init(mcfg, &mut rng);
+    let mut params = weight_literals(&init)?;
+    let zeros: Vec<xla::Literal> = init
+        .flat_params()
+        .iter()
+        .map(|(_, shape, _)| {
+            let data = vec![0.0f32; shape.iter().product()];
+            let lit = xla::Literal::vec1(&data);
+            match shape.len() {
+                2 => lit.reshape(&[shape[0] as i64, shape[1] as i64]).unwrap(),
+                _ => lit,
+            }
+        })
+        .collect();
+    let mut m: Vec<xla::Literal> = zeros.iter().map(clone_literal).collect();
+    let mut v = zeros;
+
+    let mut losses = Vec::with_capacity(cfg.steps);
+    let mut data_rng = rng.fork(0x7261696e);
+    for step in 1..=cfg.steps {
+        // sample a random batch
+        let mut toks = Vec::with_capacity(batch * seq);
+        for _ in 0..batch {
+            let start = data_rng.below(corpus.len() - seq - 1);
+            toks.extend(corpus[start..start + seq].iter().map(|&b| b as i32));
+        }
+        let b = Batch {
+            batch,
+            seq_len: seq,
+            tokens: toks.iter().map(|&t| t as u8).collect(),
+        };
+        let targets: Vec<i32> = b.shifted_targets().iter().map(|&t| t as i32).collect();
+        let mut mask = vec![1.0f32; batch * seq];
+        for bi in 0..batch {
+            mask[bi * seq + seq - 1] = 0.0;
+        }
+
+        let mut inputs: Vec<xla::Literal> = Vec::with_capacity(3 * n + 4);
+        inputs.extend(params.drain(..));
+        inputs.extend(m.drain(..));
+        inputs.extend(v.drain(..));
+        inputs.push(xla::Literal::scalar(step as i32));
+        inputs.push(tokens_to_literal(&toks, &[batch, seq])?);
+        inputs.push(tokens_to_literal(&targets, &[batch, seq])?);
+        inputs.push(
+            xla::Literal::vec1(&mask).reshape(&[batch as i64, seq as i64])?,
+        );
+
+        let mut out = engine.execute("train_step", &inputs)?;
+        ensure!(out.len() == 1 + 3 * n, "train_step returned {} outputs", out.len());
+        let loss: f32 = out[0].to_vec::<f32>()?[0];
+        losses.push(loss);
+        let rest: Vec<xla::Literal> = out.drain(1..).collect();
+        let mut it = rest.into_iter();
+        params = (&mut it).take(n).collect();
+        m = (&mut it).take(n).collect();
+        v = (&mut it).take(n).collect();
+
+        if cfg.log_every > 0 && step % cfg.log_every == 0 {
+            println!("  step {step:>5}  loss {loss:.4}");
+        }
+    }
+
+    // materialize final weights
+    let manifest = ModelWeights::param_manifest(&mcfg);
+    let mut named: std::collections::BTreeMap<String, Vec<f32>> = Default::default();
+    for ((name, _), lit) in manifest.iter().zip(&params) {
+        named.insert(name.clone(), lit.to_vec::<f32>()?);
+    }
+    let weights = ModelWeights::from_named(mcfg, |name, shape| {
+        let v = named
+            .get(name)
+            .cloned()
+            .with_context(|| format!("missing trained tensor {name}"))?;
+        ensure!(v.len() == shape.iter().product::<usize>(), "shape mismatch {name}");
+        Ok(v)
+    })?;
+    Ok(TrainOutcome { weights, losses })
+}
+
+fn clone_literal(l: &xla::Literal) -> xla::Literal {
+    // Literal has no Clone; round-trip through raw data.
+    let shape = l.array_shape().expect("array literal");
+    let data: Vec<f32> = l.to_vec().expect("f32 literal");
+    let dims: Vec<i64> = shape.dims().to_vec();
+    xla::Literal::vec1(&data).reshape(&dims).expect("reshape")
+}
+
+/// Convenience: pick the preset matching the engine's config (for logs).
+pub fn engine_preset(engine: &Engine) -> Option<Preset> {
+    [Preset::Tiny, Preset::Small, Preset::Base]
+        .into_iter()
+        .find(|p| p.config() == engine.manifest.config)
+}

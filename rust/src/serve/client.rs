@@ -1,0 +1,38 @@
+//! Minimal client for the serve protocol (used by examples and benches).
+
+use crate::util::json::Json;
+use anyhow::{bail, Context, Result};
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+
+/// Parsed generation response.
+#[derive(Clone, Debug)]
+pub struct ClientResponse {
+    pub tokens: Vec<u8>,
+    pub latency_ms: f64,
+    pub batch_size: usize,
+}
+
+/// Send one generation request and wait for the reply.
+pub fn request_generation(addr: &str, prompt: &[u8], max_new: usize) -> Result<ClientResponse> {
+    let mut stream =
+        TcpStream::connect(addr).with_context(|| format!("connect {addr}"))?;
+    let req = Json::obj(vec![
+        ("prompt", Json::arr(prompt.iter().map(|&t| Json::num(t as f64)))),
+        ("max_new", Json::num(max_new as f64)),
+    ]);
+    stream.write_all(req.to_string().as_bytes())?;
+    stream.write_all(b"\n")?;
+    let mut reader = BufReader::new(stream);
+    let mut line = String::new();
+    reader.read_line(&mut line)?;
+    let j = Json::parse(line.trim()).map_err(|e| anyhow::anyhow!("bad response: {e}"))?;
+    if let Some(err) = j.get("error").as_str() {
+        bail!("server error: {err}");
+    }
+    Ok(ClientResponse {
+        tokens: j.get("tokens").usize_vec().into_iter().map(|t| t as u8).collect(),
+        latency_ms: j.get("latency_ms").as_f64().unwrap_or(0.0),
+        batch_size: j.get("batch_size").as_usize().unwrap_or(1),
+    })
+}

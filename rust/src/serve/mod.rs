@@ -1,0 +1,16 @@
+//! Batched generation serving — the deployment story that motivates
+//! weight-only quantization (paper §2.2: vLLM / TensorRT-LLM support
+//! group-wise formats because decode is memory-bandwidth-bound).
+//!
+//! A minimal but real serving stack: a TCP line-JSON protocol, a dynamic
+//! batcher that coalesces concurrent requests, and KV-cached greedy decoding
+//! over either the FP or a quantized checkpoint. The serving bench compares
+//! FP vs quantized token throughput and tail latency.
+
+pub mod batcher;
+pub mod client;
+pub mod server;
+
+pub use batcher::{BatcherConfig, DynamicBatcher, GenRequest, GenResponse};
+pub use client::request_generation;
+pub use server::{serve, ServerConfig};

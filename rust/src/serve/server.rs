@@ -1,0 +1,185 @@
+//! TCP line-JSON serving front-end.
+//!
+//! Protocol: one JSON object per line.
+//! Request  : `{"prompt": [byte ids], "max_new": N}`
+//! Response : `{"tokens": [...], "latency_ms": f, "batch_size": n}`
+//! Error    : `{"error": "..."}`
+
+use super::batcher::{BatcherConfig, DynamicBatcher, GenRequest};
+use crate::model::ModelWeights;
+use crate::util::json::Json;
+use anyhow::{Context, Result};
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::Arc;
+
+/// Server tunables.
+#[derive(Clone, Debug)]
+pub struct ServerConfig {
+    pub addr: String,
+    pub batcher: BatcherConfig,
+    /// Stop after serving this many connections (None = forever). Used by
+    /// tests and the example driver.
+    pub max_connections: Option<usize>,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            addr: "127.0.0.1:7433".into(),
+            batcher: BatcherConfig::default(),
+            max_connections: None,
+        }
+    }
+}
+
+fn handle_line(batcher: &DynamicBatcher, line: &str) -> String {
+    let respond_err = |msg: &str| Json::obj(vec![("error", Json::str(msg))]).to_string();
+    let req = match Json::parse(line) {
+        Ok(j) => j,
+        Err(e) => return respond_err(&format!("bad json: {e}")),
+    };
+    let prompt: Vec<u8> = req
+        .get("prompt")
+        .usize_vec()
+        .into_iter()
+        .map(|t| (t & 0xff) as u8)
+        .collect();
+    if prompt.is_empty() {
+        return respond_err("empty prompt");
+    }
+    let max_new = req.get("max_new").as_usize().unwrap_or(16).min(512);
+    match batcher.generate(GenRequest { prompt, max_new }) {
+        Some(resp) => Json::obj(vec![
+            (
+                "tokens",
+                Json::arr(resp.tokens.iter().map(|&t| Json::num(t as f64))),
+            ),
+            ("latency_ms", Json::num(resp.latency.as_secs_f64() * 1e3)),
+            ("batch_size", Json::num(resp.batch_size as f64)),
+        ])
+        .to_string(),
+        None => respond_err("batcher unavailable"),
+    }
+}
+
+fn handle_conn(batcher: Arc<DynamicBatcher>, stream: TcpStream) {
+    let peer = stream.peer_addr().ok();
+    let mut writer = match stream.try_clone() {
+        Ok(w) => w,
+        Err(_) => return,
+    };
+    let reader = BufReader::new(stream);
+    for line in reader.lines() {
+        let Ok(line) = line else { break };
+        if line.trim().is_empty() {
+            continue;
+        }
+        let resp = handle_line(&batcher, &line);
+        if writer.write_all(resp.as_bytes()).is_err()
+            || writer.write_all(b"\n").is_err()
+        {
+            break;
+        }
+    }
+    let _ = peer; // quiet unused in non-logging builds
+}
+
+/// Run the server (blocking). Returns the bound address (useful with
+/// `addr: "127.0.0.1:0"`). Connections are handled on their own threads;
+/// generation is funneled through the shared [`DynamicBatcher`].
+pub fn serve(weights: Arc<ModelWeights>, cfg: ServerConfig) -> Result<()> {
+    let listener = TcpListener::bind(&cfg.addr)
+        .with_context(|| format!("bind {}", cfg.addr))?;
+    let batcher = Arc::new(DynamicBatcher::spawn(weights, cfg.batcher));
+    println!("tsgo serving on {}", listener.local_addr()?);
+    let mut served = 0usize;
+    for stream in listener.incoming() {
+        let stream = stream?;
+        let b = batcher.clone();
+        std::thread::spawn(move || handle_conn(b, stream));
+        served += 1;
+        if let Some(max) = cfg.max_connections {
+            if served >= max {
+                break;
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Bind a listener first (so callers know the port), then serve on a thread.
+pub fn serve_in_background(
+    weights: Arc<ModelWeights>,
+    cfg: ServerConfig,
+) -> Result<(std::net::SocketAddr, std::thread::JoinHandle<()>)> {
+    let listener = TcpListener::bind(&cfg.addr)?;
+    let addr = listener.local_addr()?;
+    let batcher = Arc::new(DynamicBatcher::spawn(weights, cfg.batcher));
+    let max = cfg.max_connections;
+    let handle = std::thread::spawn(move || {
+        let mut served = 0usize;
+        for stream in listener.incoming() {
+            let Ok(stream) = stream else { break };
+            let b = batcher.clone();
+            std::thread::spawn(move || handle_conn(b, stream));
+            served += 1;
+            if let Some(m) = max {
+                if served >= m {
+                    break;
+                }
+            }
+        }
+    });
+    Ok((addr, handle))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::Preset;
+    use crate::serve::client::request_generation;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn server_roundtrip() {
+        let mut rng = Rng::new(1);
+        let w = Arc::new(ModelWeights::init(Preset::Tiny.config(), &mut rng));
+        let cfg = ServerConfig {
+            addr: "127.0.0.1:0".into(),
+            max_connections: Some(1),
+            ..Default::default()
+        };
+        let (addr, handle) = serve_in_background(w, cfg).unwrap();
+        let resp = request_generation(&addr.to_string(), &[10, 20, 30], 4).unwrap();
+        assert_eq!(resp.tokens.len(), 4);
+        assert!(resp.latency_ms > 0.0);
+        handle.join().unwrap();
+    }
+
+    #[test]
+    fn bad_requests_get_errors() {
+        let mut rng = Rng::new(2);
+        let w = Arc::new(ModelWeights::init(Preset::Tiny.config(), &mut rng));
+        let cfg = ServerConfig {
+            addr: "127.0.0.1:0".into(),
+            max_connections: Some(1),
+            ..Default::default()
+        };
+        let (addr, handle) = serve_in_background(w, cfg).unwrap();
+        let mut stream = std::net::TcpStream::connect(addr).unwrap();
+        use std::io::{BufRead, BufReader, Write};
+        stream.write_all(b"{not json}\n").unwrap();
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        assert!(line.contains("error"));
+        // empty prompt
+        stream.write_all(b"{\"prompt\": [], \"max_new\": 2}\n").unwrap();
+        line.clear();
+        reader.read_line(&mut line).unwrap();
+        assert!(line.contains("empty prompt"));
+        drop(stream);
+        handle.join().unwrap();
+    }
+}

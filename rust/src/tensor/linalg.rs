@@ -1,0 +1,249 @@
+//! Cholesky-based SPD solver family.
+//!
+//! GPTQ needs `chol(H⁻¹)` (upper) for its error-compensation sweep; stage-2
+//! CD needs quadratic forms over Hessian blocks. Everything is derived from
+//! a single f64-accumulating Cholesky factorization for numerical stability
+//! (H is accumulated from f32 activations and can be ill-conditioned).
+
+use super::matrix::Matrix;
+use anyhow::{bail, Result};
+
+/// Lower-triangular Cholesky factor L of SPD `a` (a = L Lᵀ).
+/// Accumulates in f64; fails if a pivot is non-positive.
+pub fn cholesky_lower(a: &Matrix) -> Result<Matrix> {
+    let n = a.rows;
+    assert_eq!(a.rows, a.cols, "cholesky needs square input");
+    let mut l64 = vec![0.0f64; n * n];
+    let ad = &a.data;
+    for i in 0..n {
+        for j in 0..=i {
+            let mut s = ad[i * n + j] as f64;
+            for k in 0..j {
+                s -= l64[i * n + k] * l64[j * n + k];
+            }
+            if i == j {
+                if s <= 0.0 {
+                    bail!("cholesky: non-positive pivot {s:.3e} at {i} (matrix not SPD; increase damping)");
+                }
+                l64[i * n + j] = s.sqrt();
+            } else {
+                l64[i * n + j] = s / l64[j * n + j];
+            }
+        }
+    }
+    Ok(Matrix::from_vec(n, n, l64.into_iter().map(|x| x as f32).collect()))
+}
+
+/// Solve `L y = b` for lower-triangular L (forward substitution).
+pub fn solve_lower(l: &Matrix, b: &[f32]) -> Vec<f32> {
+    let n = l.rows;
+    let mut y = vec![0.0f32; n];
+    for i in 0..n {
+        let mut s = b[i] as f64;
+        let row = l.row(i);
+        for k in 0..i {
+            s -= row[k] as f64 * y[k] as f64;
+        }
+        y[i] = (s / row[i] as f64) as f32;
+    }
+    y
+}
+
+/// Solve `U x = b` for upper-triangular U (back substitution).
+pub fn solve_upper(u: &Matrix, b: &[f32]) -> Vec<f32> {
+    let n = u.rows;
+    let mut x = vec![0.0f32; n];
+    for i in (0..n).rev() {
+        let mut s = b[i] as f64;
+        let row = u.row(i);
+        for k in i + 1..n {
+            s -= row[k] as f64 * x[k] as f64;
+        }
+        x[i] = (s / row[i] as f64) as f32;
+    }
+    x
+}
+
+/// Inverse of an SPD matrix via Cholesky (solves against identity columns).
+pub fn invert_spd(a: &Matrix) -> Result<Matrix> {
+    let n = a.rows;
+    let l = cholesky_lower(a)?;
+    let lt = l.transpose();
+    let mut inv = Matrix::zeros(n, n);
+    let mut e = vec![0.0f32; n];
+    for c in 0..n {
+        e[c] = 1.0;
+        let y = solve_lower(&l, &e);
+        let x = solve_upper(&lt, &y);
+        for r in 0..n {
+            inv[(r, c)] = x[r];
+        }
+        e[c] = 0.0;
+    }
+    Ok(inv)
+}
+
+/// GPTQ's factor: the **upper** Cholesky factor U of `H⁻¹` with
+/// `H⁻¹ = Uᵀ U` (torch's `linalg.cholesky(·, upper=True)` convention).
+/// The diagonal entries `U[j,j]` scale the per-column error and row
+/// `U[j, j+1:]` drives compensation: with `H⁻¹ = L Lᵀ`, the Gaussian-
+/// elimination update of `H⁻¹` after fixing coordinate j leaves exactly the
+/// trailing submatrix of L, and the compensation direction
+/// `H⁻¹[F, j]/H⁻¹[j,j] = L[F, j]/L[j,j] = U[j, F]ᵀ/U[j,j]`.
+pub fn cholesky_inverse_upper(h: &Matrix) -> Result<Matrix> {
+    let inv = invert_spd(h)?;
+    cholesky_upper(&inv)
+}
+
+/// Upper-triangular Cholesky: A = Uᵀ U, i.e. U = (lower factor)ᵀ.
+pub fn cholesky_upper(a: &Matrix) -> Result<Matrix> {
+    Ok(cholesky_lower(a)?.transpose())
+}
+
+/// Quadratic form xᵀ A y accumulated in f64.
+pub fn quad_form(x: &[f32], a: &Matrix, y: &[f32]) -> f64 {
+    debug_assert_eq!(x.len(), a.rows);
+    debug_assert_eq!(y.len(), a.cols);
+    let mut total = 0.0f64;
+    for (i, &xi) in x.iter().enumerate() {
+        if xi == 0.0 {
+            continue;
+        }
+        let row = a.row(i);
+        let mut s = 0.0f64;
+        for (aij, &yj) in row.iter().zip(y) {
+            s += *aij as f64 * yj as f64;
+        }
+        total += xi as f64 * s;
+    }
+    total
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{check, prop_assert};
+    use crate::util::rng::Rng;
+
+    /// Random SPD matrix A = GᵀG + n·I.
+    fn rand_spd(n: usize, rng: &mut Rng) -> Matrix {
+        let g = Matrix::randn(n, n, 1.0, rng);
+        let mut a = g.transpose().matmul(&g);
+        for i in 0..n {
+            a[(i, i)] += n as f32 * 0.1 + 0.5;
+        }
+        a
+    }
+
+    #[test]
+    fn cholesky_reconstructs() {
+        let mut rng = Rng::new(1);
+        for n in [1, 2, 5, 16, 64] {
+            let a = rand_spd(n, &mut rng);
+            let l = cholesky_lower(&a).unwrap();
+            let rec = l.matmul(&l.transpose());
+            assert!(rec.max_abs_diff(&a) < 1e-2 * n as f32, "n={n}");
+        }
+    }
+
+    #[test]
+    fn cholesky_upper_reconstructs() {
+        let mut rng = Rng::new(2);
+        for n in [1, 3, 8, 32] {
+            let a = rand_spd(n, &mut rng);
+            let u = cholesky_upper(&a).unwrap();
+            let rec = u.transpose().matmul(&u);
+            assert!(rec.max_abs_diff(&a) < 1e-2 * n as f32, "n={n}");
+            // U really is upper-triangular
+            for i in 0..n {
+                for j in 0..i {
+                    assert_eq!(u[(i, j)], 0.0);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn inverse_is_inverse() {
+        let mut rng = Rng::new(3);
+        for n in [1, 4, 24] {
+            let a = rand_spd(n, &mut rng);
+            let inv = invert_spd(&a).unwrap();
+            let prod = a.matmul(&inv);
+            assert!(prod.max_abs_diff(&Matrix::eye(n)) < 5e-3, "n={n}");
+        }
+    }
+
+    #[test]
+    fn triangular_solves() {
+        let mut rng = Rng::new(4);
+        let a = rand_spd(12, &mut rng);
+        let l = cholesky_lower(&a).unwrap();
+        let b: Vec<f32> = rng.normal_vec(12, 1.0);
+        let y = solve_lower(&l, &b);
+        let got = l.matvec(&y);
+        for i in 0..12 {
+            assert!((got[i] - b[i]).abs() < 1e-3);
+        }
+        let lt = l.transpose();
+        let x = solve_upper(&lt, &b);
+        let got = lt.matvec(&x);
+        for i in 0..12 {
+            assert!((got[i] - b[i]).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn gptq_factor_identity() {
+        // chol_inv_upper(I) must be I.
+        let u = cholesky_inverse_upper(&Matrix::eye(6)).unwrap();
+        assert!(u.max_abs_diff(&Matrix::eye(6)) < 1e-5);
+    }
+
+    #[test]
+    fn gptq_factor_satisfies_uut() {
+        let mut rng = Rng::new(5);
+        let h = rand_spd(10, &mut rng);
+        let u = cholesky_inverse_upper(&h).unwrap();
+        let hinv = invert_spd(&h).unwrap();
+        let rec = u.transpose().matmul(&u);
+        assert!(rec.max_abs_diff(&hinv) < 5e-3);
+    }
+
+    #[test]
+    fn cholesky_rejects_non_spd() {
+        let mut a = Matrix::eye(3);
+        a[(2, 2)] = -1.0;
+        assert!(cholesky_lower(&a).is_err());
+        assert!(cholesky_upper(&a).is_err());
+    }
+
+    #[test]
+    fn quad_form_matches_matmul() {
+        let mut rng = Rng::new(6);
+        let a = Matrix::randn(5, 7, 1.0, &mut rng);
+        let x = rng.normal_vec(5, 1.0);
+        let y = rng.normal_vec(7, 1.0);
+        let want: f64 = {
+            let ay = a.matvec(&y);
+            x.iter().zip(&ay).map(|(xi, ai)| *xi as f64 * *ai as f64).sum()
+        };
+        assert!((quad_form(&x, &a, &y) - want).abs() < 1e-3);
+    }
+
+    #[test]
+    fn prop_quadform_positive_on_spd() {
+        check("xᵀHx > 0 for SPD H", 40, |g| {
+            let n = g.dim(16);
+            let mut rng = g.rng.fork(3);
+            let h = rand_spd(n, &mut rng);
+            let x = rng.normal_vec(n, 1.0);
+            let q = quad_form(&x, &h, &x);
+            let norm2: f64 = x.iter().map(|v| (*v as f64).powi(2)).sum();
+            if norm2 < 1e-9 {
+                return Ok(());
+            }
+            prop_assert(q > 0.0, "positive definite quadratic form")
+        });
+    }
+}

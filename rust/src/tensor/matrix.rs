@@ -1,0 +1,306 @@
+//! Row-major f32 matrix with blocked, threaded GEMM.
+
+use crate::util::rng::Rng;
+use crate::util::threadpool::parallel_for_chunked;
+
+/// Dense row-major f32 matrix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Matrix {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Matrix {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Matrix { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), rows * cols, "shape/data mismatch");
+        Matrix { rows, cols, data }
+    }
+
+    pub fn eye(n: usize) -> Self {
+        let mut m = Matrix::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = 1.0;
+        }
+        m
+    }
+
+    pub fn randn(rows: usize, cols: usize, std: f32, rng: &mut Rng) -> Self {
+        Matrix { rows, cols, data: rng.normal_vec(rows * cols, std) }
+    }
+
+    #[inline]
+    pub fn row(&self, r: usize) -> &[f32] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, r: usize) -> &mut [f32] {
+        &mut self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    pub fn transpose(&self) -> Matrix {
+        let mut t = Matrix::zeros(self.cols, self.rows);
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                t[(c, r)] = self[(r, c)];
+            }
+        }
+        t
+    }
+
+    /// Extract a sub-matrix `[r0..r1) x [c0..c1)`.
+    pub fn slice(&self, r0: usize, r1: usize, c0: usize, c1: usize) -> Matrix {
+        assert!(r1 <= self.rows && c1 <= self.cols && r0 <= r1 && c0 <= c1);
+        let mut out = Matrix::zeros(r1 - r0, c1 - c0);
+        for (ro, r) in (r0..r1).enumerate() {
+            out.row_mut(ro).copy_from_slice(&self.row(r)[c0..c1]);
+        }
+        out
+    }
+
+    /// Write `sub` into this matrix at offset (r0, c0).
+    pub fn set_slice(&mut self, r0: usize, c0: usize, sub: &Matrix) {
+        assert!(r0 + sub.rows <= self.rows && c0 + sub.cols <= self.cols);
+        for r in 0..sub.rows {
+            self.row_mut(r0 + r)[c0..c0 + sub.cols].copy_from_slice(sub.row(r));
+        }
+    }
+
+    pub fn scale_inplace(&mut self, a: f32) {
+        for x in &mut self.data {
+            *x *= a;
+        }
+    }
+
+    pub fn add_inplace(&mut self, other: &Matrix) {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        for (x, y) in self.data.iter_mut().zip(&other.data) {
+            *x += *y;
+        }
+    }
+
+    pub fn sub(&self, other: &Matrix) -> Matrix {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        let data = self.data.iter().zip(&other.data).map(|(a, b)| a - b).collect();
+        Matrix { rows: self.rows, cols: self.cols, data }
+    }
+
+    /// Frobenius norm squared.
+    pub fn frob2(&self) -> f64 {
+        self.data.iter().map(|x| (*x as f64) * (*x as f64)).sum()
+    }
+
+    pub fn max_abs_diff(&self, other: &Matrix) -> f32 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+
+    /// `self @ other` — blocked, threaded GEMM.
+    ///
+    /// The kernel packs nothing (sizes here are small) but tiles over K and
+    /// parallelizes over row blocks; the inner loop is an axpy over a full
+    /// output row which autovectorizes well.
+    pub fn matmul(&self, other: &Matrix) -> Matrix {
+        assert_eq!(self.cols, other.rows, "gemm shape mismatch");
+        let (m, k, n) = (self.rows, self.cols, other.cols);
+        let mut out = Matrix::zeros(m, n);
+        const RB: usize = 32; // row block per steal
+        let out_ptr = crate::util::SendPtr(out.data.as_mut_ptr());
+        parallel_for_chunked(m.div_ceil(RB), 1, |rb| {
+            let r0 = rb * RB;
+            let r1 = (r0 + RB).min(m);
+            for r in r0..r1 {
+                // SAFETY: each worker writes a disjoint set of output rows.
+                let orow: &mut [f32] = unsafe {
+                    std::slice::from_raw_parts_mut(out_ptr.get().add(r * n), n)
+                };
+                let arow = self.row(r);
+                for kk in 0..k {
+                    let a = arow[kk];
+                    if a == 0.0 {
+                        continue;
+                    }
+                    let brow = other.row(kk);
+                    for (o, b) in orow.iter_mut().zip(brow) {
+                        *o += a * *b;
+                    }
+                }
+            }
+        });
+        out
+    }
+
+    /// `self @ other.T` without materializing the transpose (dot-product
+    /// kernel; good when `other` rows are contiguous).
+    pub fn matmul_bt(&self, other: &Matrix) -> Matrix {
+        assert_eq!(self.cols, other.cols, "gemm_bt shape mismatch");
+        let (m, n) = (self.rows, other.rows);
+        let mut out = Matrix::zeros(m, n);
+        let out_ptr = crate::util::SendPtr(out.data.as_mut_ptr());
+        parallel_for_chunked(m, 8, |r| {
+            let orow: &mut [f32] =
+                unsafe { std::slice::from_raw_parts_mut(out_ptr.get().add(r * n), n) };
+            let arow = self.row(r);
+            for (c, o) in orow.iter_mut().enumerate() {
+                *o = dot(arow, other.row(c));
+            }
+        });
+        out
+    }
+
+    /// Matrix-vector product.
+    pub fn matvec(&self, v: &[f32]) -> Vec<f32> {
+        assert_eq!(self.cols, v.len());
+        (0..self.rows).map(|r| dot(self.row(r), v)).collect()
+    }
+}
+
+/// Dot product with 4-way unrolling (autovectorizes to SIMD).
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = [0.0f32; 4];
+    let chunks = a.len() / 4;
+    for i in 0..chunks {
+        let j = i * 4;
+        acc[0] += a[j] * b[j];
+        acc[1] += a[j + 1] * b[j + 1];
+        acc[2] += a[j + 2] * b[j + 2];
+        acc[3] += a[j + 3] * b[j + 3];
+    }
+    let mut s = acc[0] + acc[1] + acc[2] + acc[3];
+    for j in chunks * 4..a.len() {
+        s += a[j] * b[j];
+    }
+    s
+}
+
+impl std::ops::Index<(usize, usize)> for Matrix {
+    type Output = f32;
+    #[inline]
+    fn index(&self, (r, c): (usize, usize)) -> &f32 {
+        &self.data[r * self.cols + c]
+    }
+}
+
+impl std::ops::IndexMut<(usize, usize)> for Matrix {
+    #[inline]
+    fn index_mut(&mut self, (r, c): (usize, usize)) -> &mut f32 {
+        &mut self.data[r * self.cols + c]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{check, prop_assert};
+
+    fn naive_matmul(a: &Matrix, b: &Matrix) -> Matrix {
+        let mut out = Matrix::zeros(a.rows, b.cols);
+        for i in 0..a.rows {
+            for j in 0..b.cols {
+                let mut s = 0.0;
+                for k in 0..a.cols {
+                    s += a[(i, k)] * b[(k, j)];
+                }
+                out[(i, j)] = s;
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn matmul_matches_naive() {
+        let mut rng = Rng::new(1);
+        for (m, k, n) in [(3, 4, 5), (17, 33, 9), (64, 64, 64), (1, 7, 1)] {
+            let a = Matrix::randn(m, k, 1.0, &mut rng);
+            let b = Matrix::randn(k, n, 1.0, &mut rng);
+            let got = a.matmul(&b);
+            let want = naive_matmul(&a, &b);
+            assert!(got.max_abs_diff(&want) < 1e-4, "({m},{k},{n})");
+        }
+    }
+
+    #[test]
+    fn matmul_bt_matches_matmul() {
+        let mut rng = Rng::new(2);
+        let a = Matrix::randn(13, 27, 1.0, &mut rng);
+        let b = Matrix::randn(11, 27, 1.0, &mut rng);
+        let got = a.matmul_bt(&b);
+        let want = a.matmul(&b.transpose());
+        assert!(got.max_abs_diff(&want) < 1e-4);
+    }
+
+    #[test]
+    fn identity_is_neutral() {
+        let mut rng = Rng::new(3);
+        let a = Matrix::randn(8, 8, 1.0, &mut rng);
+        let i = Matrix::eye(8);
+        assert!(a.matmul(&i).max_abs_diff(&a) < 1e-6);
+        assert!(i.matmul(&a).max_abs_diff(&a) < 1e-6);
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let mut rng = Rng::new(4);
+        let a = Matrix::randn(5, 9, 1.0, &mut rng);
+        assert_eq!(a.transpose().transpose(), a);
+    }
+
+    #[test]
+    fn slice_roundtrip() {
+        let mut rng = Rng::new(5);
+        let a = Matrix::randn(10, 12, 1.0, &mut rng);
+        let s = a.slice(2, 7, 3, 11);
+        assert_eq!((s.rows, s.cols), (5, 8));
+        let mut b = Matrix::zeros(10, 12);
+        b.set_slice(2, 3, &s);
+        assert_eq!(b.slice(2, 7, 3, 11), s);
+        assert_eq!(s[(0, 0)], a[(2, 3)]);
+    }
+
+    #[test]
+    fn matvec_matches_matmul() {
+        let mut rng = Rng::new(6);
+        let a = Matrix::randn(7, 5, 1.0, &mut rng);
+        let v: Vec<f32> = rng.normal_vec(5, 1.0);
+        let vm = Matrix::from_vec(5, 1, v.clone());
+        let want = a.matmul(&vm);
+        let got = a.matvec(&v);
+        for i in 0..7 {
+            assert!((got[i] - want[(i, 0)]).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn prop_matmul_associative_with_identity_scaling() {
+        check("A(Bv) == (AB)v", 30, |g| {
+            let m = g.dim(12);
+            let k = g.dim(12);
+            let n = g.dim(12);
+            let mut rng = g.rng.fork(7);
+            let a = Matrix::randn(m, k, 1.0, &mut rng);
+            let b = Matrix::randn(k, n, 1.0, &mut rng);
+            let v = Matrix::randn(n, 1, 1.0, &mut rng);
+            let lhs = a.matmul(&b.matmul(&v));
+            let rhs = a.matmul(&b).matmul(&v);
+            prop_assert(lhs.max_abs_diff(&rhs) < 1e-3, "associativity")
+        });
+    }
+
+    #[test]
+    fn frob_and_sub() {
+        let a = Matrix::from_vec(1, 2, vec![3.0, 4.0]);
+        let b = Matrix::zeros(1, 2);
+        assert_eq!(a.sub(&b).frob2(), 25.0);
+    }
+}

@@ -1,0 +1,12 @@
+//! Dense tensor + linear algebra substrate.
+//!
+//! The quantization algorithms operate on per-layer weight matrices and
+//! Hessians (≤ a few thousand on a side), so a compact row-major f32 matrix
+//! with a blocked, multi-threaded GEMM and a Cholesky-based solver family is
+//! the whole substrate GPTQ needs.
+
+pub mod linalg;
+pub mod matrix;
+
+pub use linalg::{cholesky_lower, cholesky_inverse_upper, invert_spd, solve_lower, solve_upper};
+pub use matrix::Matrix;

@@ -1,0 +1,181 @@
+//! Benchmark harness substrate (criterion is unavailable offline).
+//!
+//! Provides warmup + timed iterations with mean/std/percentiles, throughput
+//! accounting, and a table printer used by all `rust/benches/*` targets to
+//! regenerate the paper's tables.
+
+use std::time::{Duration, Instant};
+
+/// One benchmark measurement.
+#[derive(Clone, Debug)]
+pub struct Measurement {
+    pub name: String,
+    pub iters: usize,
+    pub mean: Duration,
+    pub std: Duration,
+    pub p50: Duration,
+    pub p95: Duration,
+    /// Optional work units per iteration (elements, tokens, FLOPs).
+    pub units_per_iter: Option<f64>,
+}
+
+impl Measurement {
+    /// Units per second (if `units_per_iter` set).
+    pub fn throughput(&self) -> Option<f64> {
+        self.units_per_iter.map(|u| u / self.mean.as_secs_f64())
+    }
+}
+
+/// Time `f` with `warmup` untimed and `iters` timed iterations.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> Measurement {
+    bench_units(name, warmup, iters, None, &mut f)
+}
+
+/// Like [`bench`] with a throughput unit count per iteration.
+pub fn bench_units<F: FnMut()>(
+    name: &str,
+    warmup: usize,
+    iters: usize,
+    units_per_iter: Option<f64>,
+    f: &mut F,
+) -> Measurement {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters.max(1) {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    let mean = crate::util::mean(&samples);
+    let std = crate::util::stddev(&samples);
+    Measurement {
+        name: name.to_string(),
+        iters: iters.max(1),
+        mean: Duration::from_secs_f64(mean),
+        std: Duration::from_secs_f64(std),
+        p50: Duration::from_secs_f64(crate::util::percentile(&samples, 50.0)),
+        p95: Duration::from_secs_f64(crate::util::percentile(&samples, 95.0)),
+        units_per_iter,
+    }
+}
+
+/// Print a set of measurements as an aligned table.
+pub fn print_measurements(title: &str, ms: &[Measurement]) {
+    println!("\n== {title} ==");
+    println!(
+        "{:<44} {:>10} {:>10} {:>10} {:>10} {:>14}",
+        "benchmark", "mean", "std", "p50", "p95", "throughput"
+    );
+    for m in ms {
+        let tp = m
+            .throughput()
+            .map(|t| {
+                if t >= 1e9 {
+                    format!("{:.2} G/s", t / 1e9)
+                } else if t >= 1e6 {
+                    format!("{:.2} M/s", t / 1e6)
+                } else if t >= 1e3 {
+                    format!("{:.2} K/s", t / 1e3)
+                } else {
+                    format!("{t:.1} /s")
+                }
+            })
+            .unwrap_or_else(|| "-".into());
+        println!(
+            "{:<44} {:>10} {:>10} {:>10} {:>10} {:>14}",
+            m.name,
+            crate::util::fmt_duration(m.mean),
+            crate::util::fmt_duration(m.std),
+            crate::util::fmt_duration(m.p50),
+            crate::util::fmt_duration(m.p95),
+            tp
+        );
+    }
+}
+
+/// Simple markdown-style table printer for paper-table reproductions.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Table { headers: headers.iter().map(|s| s.to_string()).collect(), rows: vec![] }
+    }
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
+        self.rows.push(cells);
+    }
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let fmt_row = |cells: &[String]| {
+            let mut s = String::from("|");
+            for (i, c) in cells.iter().enumerate() {
+                s.push_str(&format!(" {:<w$} |", c, w = widths[i]));
+            }
+            s
+        };
+        let mut out = fmt_row(&self.headers);
+        out.push('\n');
+        out.push('|');
+        for w in &widths {
+            out.push_str(&format!("{}|", "-".repeat(w + 2)));
+        }
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row));
+            out.push('\n');
+        }
+        out
+    }
+    pub fn print(&self, title: &str) {
+        println!("\n== {title} ==\n{}", self.render());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_positive_time() {
+        let m = bench("spin", 1, 5, || {
+            std::hint::black_box((0..1000).sum::<usize>());
+        });
+        assert!(m.mean > Duration::ZERO);
+        assert_eq!(m.iters, 5);
+    }
+
+    #[test]
+    fn throughput_computed() {
+        let mut f = || std::thread::sleep(Duration::from_millis(1));
+        let m = bench_units("sleep", 0, 3, Some(1000.0), &mut f);
+        let tp = m.throughput().unwrap();
+        assert!(tp > 0.0 && tp < 1_100_000.0);
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["method", "wiki2"]);
+        t.row(vec!["GPTQ".into(), "214.7".into()]);
+        t.row(vec!["ours".into(), "63.31".into()]);
+        let s = t.render();
+        assert!(s.contains("| GPTQ"));
+        assert!(s.lines().count() == 4);
+    }
+
+    #[test]
+    #[should_panic(expected = "row arity")]
+    fn table_arity_checked() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(vec!["x".into()]);
+    }
+}

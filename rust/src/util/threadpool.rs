@@ -1,0 +1,111 @@
+//! Scoped thread-pool substrate (rayon is unavailable offline).
+//!
+//! Provides `parallel_for` / `parallel_map` over index ranges with dynamic
+//! work-stealing via an atomic cursor — the pattern used by the blocked GEMM,
+//! Hessian accumulation and the per-projection quantization workers.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Number of worker threads to use: `TSGO_THREADS` env var or all cores.
+pub fn num_threads() -> usize {
+    if let Ok(v) = std::env::var("TSGO_THREADS") {
+        if let Ok(n) = v.parse::<usize>() {
+            return n.max(1);
+        }
+    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+}
+
+/// Run `f(i)` for every `i in 0..n`, distributing indices across threads
+/// with an atomic cursor (chunked to reduce contention). `f` must be Sync.
+pub fn parallel_for<F: Fn(usize) + Sync>(n: usize, f: F) {
+    parallel_for_chunked(n, 1, f)
+}
+
+/// Like [`parallel_for`] but each steal grabs `chunk` consecutive indices.
+pub fn parallel_for_chunked<F: Fn(usize) + Sync>(n: usize, chunk: usize, f: F) {
+    let nt = num_threads().min(n.max(1));
+    if n == 0 {
+        return;
+    }
+    if nt <= 1 || n == 1 {
+        for i in 0..n {
+            f(i);
+        }
+        return;
+    }
+    let cursor = AtomicUsize::new(0);
+    let chunk = chunk.max(1);
+    std::thread::scope(|s| {
+        for _ in 0..nt {
+            s.spawn(|| loop {
+                let start = cursor.fetch_add(chunk, Ordering::Relaxed);
+                if start >= n {
+                    break;
+                }
+                for i in start..(start + chunk).min(n) {
+                    f(i);
+                }
+            });
+        }
+    });
+}
+
+/// Parallel map over `0..n` preserving order.
+pub fn parallel_map<T: Send, F: Fn(usize) -> T + Sync>(n: usize, f: F) -> Vec<T> {
+    let out: Mutex<Vec<Option<T>>> = Mutex::new((0..n).map(|_| None).collect());
+    parallel_for(n, |i| {
+        let v = f(i);
+        out.lock().unwrap()[i] = Some(v);
+    });
+    out.into_inner().unwrap().into_iter().map(|x| x.unwrap()).collect()
+}
+
+/// Parallel map over a slice of items.
+pub fn parallel_map_items<I: Sync, T: Send, F: Fn(&I) -> T + Sync>(items: &[I], f: F) -> Vec<T> {
+    parallel_map(items.len(), |i| f(&items[i]))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn covers_all_indices_once() {
+        let hits: Vec<AtomicUsize> = (0..1000).map(|_| AtomicUsize::new(0)).collect();
+        parallel_for(1000, |i| {
+            hits[i].fetch_add(1, Ordering::Relaxed);
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn chunked_covers_all() {
+        let sum = AtomicU64::new(0);
+        parallel_for_chunked(101, 7, |i| {
+            sum.fetch_add(i as u64, Ordering::Relaxed);
+        });
+        assert_eq!(sum.load(Ordering::Relaxed), 100 * 101 / 2);
+    }
+
+    #[test]
+    fn map_preserves_order() {
+        let v = parallel_map(100, |i| i * i);
+        assert_eq!(v, (0..100).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn map_items() {
+        let items = vec!["a", "bb", "ccc"];
+        assert_eq!(parallel_map_items(&items, |s| s.len()), vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn empty_and_single() {
+        parallel_for(0, |_| panic!("must not run"));
+        let v = parallel_map(1, |i| i + 1);
+        assert_eq!(v, vec![1]);
+    }
+}

@@ -1,0 +1,206 @@
+//! Cross-language integration tests: the AOT HLO artifacts must agree with
+//! the native rust mirrors. Runs against `TSGO_ARTIFACTS` (or ./artifacts);
+//! every test is skipped gracefully when `make artifacts` has not produced a
+//! usable directory, so `cargo test` stays green pre-AOT.
+
+use tsgo::model::{forward_logits, ModelWeights};
+use tsgo::pipeline::MomentAccum;
+use tsgo::runtime::{forward_logits_artifact, matrix_to_literal, Engine};
+use tsgo::tensor::Matrix;
+use tsgo::util::rng::Rng;
+
+fn engine() -> Option<Engine> {
+    Engine::open_default()
+}
+
+#[test]
+fn artifact_forward_matches_native() {
+    let Some(engine) = engine() else {
+        eprintln!("skipped: no artifacts");
+        return;
+    };
+    let cfg = engine.manifest.config;
+    let mut rng = Rng::new(11);
+    let w = ModelWeights::init(cfg, &mut rng);
+    let tokens: Vec<u8> = (0..cfg.seq_len).map(|i| (i * 31 % 251) as u8).collect();
+
+    let native = forward_logits(&w, &tokens);
+    let art = forward_logits_artifact(&engine, &w, &tokens).expect("artifact exec");
+    assert_eq!((native.rows, native.cols), (art.rows, art.cols));
+    let scale = native.data.iter().map(|v| v.abs()).fold(0.0f32, f32::max);
+    let maxdiff = native.max_abs_diff(&art);
+    assert!(
+        maxdiff < 2e-3 * scale.max(1.0),
+        "native vs artifact logits diverge: {maxdiff} (scale {scale})"
+    );
+}
+
+#[test]
+fn artifact_forward_short_sequence_padding_is_inert() {
+    let Some(engine) = engine() else {
+        eprintln!("skipped: no artifacts");
+        return;
+    };
+    let cfg = engine.manifest.config;
+    let mut rng = Rng::new(12);
+    let w = ModelWeights::init(cfg, &mut rng);
+    let short: Vec<u8> = (0..cfg.seq_len / 2).map(|i| (i * 7 % 200) as u8).collect();
+    let art = forward_logits_artifact(&engine, &w, &short).expect("artifact exec");
+    let native = forward_logits(&w, &short);
+    assert_eq!(art.rows, short.len());
+    let scale = native.data.iter().map(|v| v.abs()).fold(0.0f32, f32::max);
+    assert!(native.max_abs_diff(&art) < 2e-3 * scale.max(1.0));
+}
+
+#[test]
+fn artifact_hessian_matches_native_accumulator() {
+    let Some(engine) = engine() else {
+        eprintln!("skipped: no artifacts");
+        return;
+    };
+    let cfg = engine.manifest.config;
+    let entry_name = "hessian_accum_d";
+    let Some(entry) = engine.manifest.entry(entry_name) else {
+        eprintln!("skipped: no hessian entry");
+        return;
+    };
+    let t = entry.inputs[0].shape[0];
+    let mut rng = Rng::new(13);
+    let x = Matrix::randn(t, cfg.d_model, 1.0, &mut rng);
+
+    let out = engine
+        .execute(entry_name, &[matrix_to_literal(&x).unwrap()])
+        .expect("hessian exec");
+    let h_art = tsgo::runtime::literal_to_matrix(&out[0]).unwrap();
+
+    let mut acc = MomentAccum::new(cfg.d_model);
+    acc.add(&x);
+    let h_native = acc.finalize();
+    assert!(
+        h_art.max_abs_diff(&h_native) < 1e-3,
+        "hessian kernels disagree: {}",
+        h_art.max_abs_diff(&h_native)
+    );
+}
+
+#[test]
+fn artifact_stage1_losses_match_native_grid() {
+    let Some(engine) = engine() else {
+        eprintln!("skipped: no artifacts");
+        return;
+    };
+    let cfg = engine.manifest.config;
+    let name = format!("stage1_grid_{}x{}", cfg.d_model, cfg.d_model);
+    let Some(entry) = engine.manifest.entry(&name) else {
+        eprintln!("skipped: no stage1 entry");
+        return;
+    };
+    let n_g = entry.inputs[1].shape[0];
+    let g = entry.inputs[1].shape[1];
+    let m = entry.inputs[2].shape[0];
+    let bits = 2u8; // aot default; manifest records it
+
+    let mut rng = Rng::new(14);
+    let w = Matrix::randn(cfg.d_model, cfg.d_model, 1.0, &mut rng);
+    // h_blocks from an SPD hessian
+    let xact = Matrix::randn(cfg.d_model, 4 * cfg.d_model, 1.0, &mut rng);
+    let h = xact.matmul_bt(&xact);
+    let mut hblocks = vec![0.0f32; n_g * g * g];
+    for gi in 0..n_g {
+        let b = h.slice(gi * g, (gi + 1) * g, gi * g, (gi + 1) * g);
+        hblocks[gi * g * g..(gi + 1) * g * g].copy_from_slice(&b.data);
+    }
+    let spec = tsgo::quant::QuantSpec { bits, group_size: g, grid_points: m, beta_min: 0.35 };
+    let betas = spec.beta_grid();
+
+    let inputs = vec![
+        matrix_to_literal(&w).unwrap(),
+        xla::Literal::vec1(&hblocks)
+            .reshape(&[n_g as i64, g as i64, g as i64])
+            .unwrap(),
+        xla::Literal::vec1(&betas),
+    ];
+    let out = engine.execute(&name, &inputs).expect("stage1 exec");
+    let losses: Vec<f32> = out[0].to_vec().unwrap(); // [n_g, M, out]
+
+    // native: loss for group gi, beta mi, row r
+    for gi in [0usize, n_g - 1] {
+        let hb = h.slice(gi * g, (gi + 1) * g, gi * g, (gi + 1) * g);
+        for mi in [0usize, m / 2, m - 1] {
+            for r in [0usize, cfg.d_model - 1] {
+                let row = &w.row(r)[gi * g..(gi + 1) * g];
+                let (s, z) = tsgo::quant::scale::minmax_scale(row, bits, betas[mi]);
+                let err = tsgo::quant::scale::group_error(row, s, z, spec.qmax());
+                let want = tsgo::tensor::linalg::quad_form(&err, &hb, &err);
+                let got = losses[gi * m * cfg.d_model + mi * cfg.d_model + r] as f64;
+                let tol = 1e-3 * want.abs().max(1.0);
+                assert!(
+                    (got - want).abs() < tol,
+                    "stage1 mismatch at g{gi} m{mi} r{r}: {got} vs {want}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn artifact_dequant_matmul_matches_native_dequant() {
+    let Some(engine) = engine() else {
+        eprintln!("skipped: no artifacts");
+        return;
+    };
+    let Some(entry) = engine.manifest.entry("dequant_matmul") else {
+        eprintln!("skipped: no dequant entry");
+        return;
+    };
+    let t = entry.inputs[0].shape[0];
+    let cols = entry.inputs[0].shape[1];
+    let rows = entry.inputs[1].shape[0];
+    let nwords = entry.inputs[1].shape[1];
+    let n_g = entry.inputs[2].shape[1];
+    let group = cols / n_g;
+    let bits = (32 * nwords / cols) as u8;
+
+    let mut rng = Rng::new(15);
+    let qmax = (1u16 << bits) as u32 - 1;
+    // random integers + params
+    let ints: Vec<Vec<u8>> = (0..rows)
+        .map(|_| (0..cols).map(|_| (rng.below(qmax as usize + 1)) as u8).collect())
+        .collect();
+    let scales = Matrix::randn(rows, n_g, 0.05, &mut rng);
+    let scales = Matrix::from_vec(rows, n_g, scales.data.iter().map(|v| v.abs() + 0.01).collect());
+    let zeros = Matrix::from_vec(
+        rows,
+        n_g,
+        (0..rows * n_g).map(|_| rng.below(qmax as usize + 1) as f32).collect(),
+    );
+    let x = Matrix::randn(t, cols, 1.0, &mut rng);
+
+    // pack little-endian per row (the contract shared with python pack_weights)
+    let per = 32 / bits as usize;
+    let mut words = vec![0u32; rows * nwords];
+    for r in 0..rows {
+        for c in 0..cols {
+            words[r * nwords + c / per] |= (ints[r][c] as u32) << ((c % per) * bits as usize);
+        }
+    }
+
+    let inputs = vec![
+        matrix_to_literal(&x).unwrap(),
+        xla::Literal::vec1(&words).reshape(&[rows as i64, nwords as i64]).unwrap(),
+        matrix_to_literal(&scales).unwrap(),
+        matrix_to_literal(&zeros).unwrap(),
+    ];
+    let out = engine.execute("dequant_matmul", &inputs).expect("dequant exec");
+    let y = tsgo::runtime::literal_to_matrix(&out[0]).unwrap();
+
+    // native: dequantize then matmul
+    let q = tsgo::quant::QuantizedLinear::from_ints(&ints, bits, group, scales, zeros);
+    let want = x.matmul_bt(&q.dequantize());
+    let scale = want.data.iter().map(|v| v.abs()).fold(0.0f32, f32::max);
+    assert!(
+        y.max_abs_diff(&want) < 1e-3 * scale.max(1.0),
+        "fused dequant matmul mismatch: {}",
+        y.max_abs_diff(&want)
+    );
+}

@@ -1,0 +1,78 @@
+//! Serving-path integration: quantize → serve → client round-trip, and
+//! FP-vs-quantized generation agreement at moderate bit widths.
+
+use std::sync::Arc;
+use tsgo::calib::{calibration_batches, Corpus, CorpusKind};
+use tsgo::model::{ModelWeights, Preset};
+use tsgo::pipeline::{quantize_model, PipelineConfig};
+use tsgo::quant::{MethodConfig, QuantSpec};
+use tsgo::serve::{request_generation, server::serve_in_background, ServerConfig};
+use tsgo::util::rng::Rng;
+
+#[test]
+fn quantized_model_serves_requests() {
+    let cfg = Preset::Tiny.config();
+    let mut rng = Rng::new(77);
+    let w = ModelWeights::init(cfg, &mut rng);
+    let corpus = Corpus::generate(CorpusKind::SynthWiki, 30_000, 1);
+    let calib = calibration_batches(&corpus.bytes, 4, 32, 2, 3);
+    let (qm, _) = quantize_model(
+        &w,
+        &calib,
+        &PipelineConfig::new(QuantSpec::new(4, 32), MethodConfig::OURS),
+    )
+    .unwrap();
+
+    let server_cfg = ServerConfig {
+        addr: "127.0.0.1:0".into(),
+        max_connections: Some(2),
+        ..Default::default()
+    };
+    let (addr, handle) = serve_in_background(Arc::new(qm.weights), server_cfg).unwrap();
+    let a = request_generation(&addr.to_string(), &[65, 66, 67], 6).unwrap();
+    assert_eq!(a.tokens.len(), 6);
+    let b = request_generation(&addr.to_string(), &[65, 66, 67], 6).unwrap();
+    assert_eq!(a.tokens, b.tokens, "greedy generation must be deterministic");
+    handle.join().unwrap();
+}
+
+#[test]
+fn int8_generation_tracks_fp() {
+    // At 8 bits the quantized model should almost always pick the same
+    // greedy tokens as FP for a short horizon.
+    let cfg = Preset::Tiny.config();
+    let mut rng = Rng::new(88);
+    let w = ModelWeights::init(cfg, &mut rng);
+    let corpus = Corpus::generate(CorpusKind::SynthWiki, 30_000, 2);
+    let calib = calibration_batches(&corpus.bytes, 4, 32, 2, 3);
+    let (qm, _) = quantize_model(
+        &w,
+        &calib,
+        &PipelineConfig::new(QuantSpec::new(8, 64), MethodConfig::OURS),
+    )
+    .unwrap();
+
+    let gen = |weights: &ModelWeights| -> Vec<u8> {
+        let mut st = tsgo::model::DecodeState::new(weights);
+        let mut logits = Vec::new();
+        for &t in &[10u8, 20, 30, 40] {
+            logits = st.step(t);
+        }
+        let mut out = Vec::new();
+        for _ in 0..8 {
+            let next = logits
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .unwrap()
+                .0 as u8;
+            out.push(next);
+            logits = st.step(next);
+        }
+        out
+    };
+    let fp = gen(&w);
+    let q = gen(&qm.weights);
+    let agree = fp.iter().zip(&q).filter(|(a, b)| a == b).count();
+    assert!(agree >= 6, "INT8 generation diverged: {fp:?} vs {q:?}");
+}
