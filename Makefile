@@ -1,0 +1,20 @@
+# Repo-level entry points. `make check` is the tier-1 gate
+# (build + tests + formatting).
+
+.PHONY: check build test fmt artifacts
+
+check:
+	bash ci.sh
+
+build:
+	cd rust && cargo build --release
+
+test:
+	cd rust && cargo test -q
+
+fmt:
+	cd rust && cargo fmt --check
+
+# AOT-lower the L2/L1 JAX + Pallas graphs to HLO artifacts for the runtime.
+artifacts:
+	cd python/compile && python3 aot.py --out ../../artifacts

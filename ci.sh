@@ -1,0 +1,16 @@
+#!/usr/bin/env bash
+# Tier-1 verification: build, tests, formatting — the command `make check`
+# runs and CI should run. Requires a Rust toolchain (rustup.rs) and the
+# crates.io deps in rust/Cargo.toml; see CHANGES.md for the current
+# pass-set triage when no toolchain is available.
+set -euo pipefail
+cd "$(dirname "$0")/rust"
+
+if ! command -v cargo >/dev/null 2>&1; then
+    echo "error: cargo not found — install a Rust toolchain (https://rustup.rs)" >&2
+    exit 1
+fi
+
+cargo build --release
+cargo test -q
+cargo fmt --check

@@ -1,5 +1,5 @@
 //! Ablation sweep (the shape of Table 3, plus extras the paper mentions in
-//! passing): every MethodConfig cell × bit width × group size on one model,
+//! passing): every TwoStage ablation cell × bit width × group size on one model,
 //! reporting summed layer-wise loss and stage-by-stage wall-clock.
 //!
 //! Run: `cargo run --release --example ablation_sweep`
@@ -7,7 +7,7 @@
 use tsgo::calib::{calibration_batches, Corpus, CorpusKind};
 use tsgo::model::{ModelWeights, Preset};
 use tsgo::pipeline::{quantize_model, PipelineConfig};
-use tsgo::quant::{MethodConfig, QuantSpec};
+use tsgo::quant::QuantSpec;
 use tsgo::util::bench::Table;
 use tsgo::util::rng::Rng;
 
@@ -41,11 +41,11 @@ fn main() -> tsgo::Result<()> {
     for bits in [2u8, 3] {
         for group in [64usize, 32] {
             let mut base = None;
-            for method in [
-                MethodConfig::GPTQ,
-                MethodConfig::STAGE1_ONLY,
-                MethodConfig::STAGE2_ONLY,
-                MethodConfig::OURS,
+            for (method, s1, s2) in [
+                ("gptq", "", ""),
+                ("stage1", "\u{2713}", ""),
+                ("stage2", "", "\u{2713}"),
+                ("ours", "\u{2713}", "\u{2713}"),
             ] {
                 let spec = QuantSpec::new(bits, group);
                 let (_, rep) =
@@ -61,8 +61,8 @@ fn main() -> tsgo::Result<()> {
                 table.row(vec![
                     format!("{bits}"),
                     format!("{group}"),
-                    if method.stage1 { "✓" } else { "" }.into(),
-                    if method.stage2 { "✓" } else { "" }.into(),
+                    s1.into(),
+                    s2.into(),
                     format!("{loss:.4e}"),
                     delta,
                     tsgo::util::fmt_duration(rep.total_time),

@@ -17,7 +17,7 @@ use tsgo::calib::{calibration_batches, Corpus, CorpusKind};
 use tsgo::eval::tasks::{build_suite, task_suite};
 use tsgo::model::store;
 use tsgo::pipeline::{quantize_model, PipelineConfig};
-use tsgo::quant::{MethodConfig, QuantSpec};
+use tsgo::quant::QuantSpec;
 use tsgo::runtime::{Engine, TrainConfig};
 use tsgo::util::bench::Table;
 
@@ -89,7 +89,7 @@ fn main() -> tsgo::Result<()> {
 
     // ---- quantize + eval ------------------------------------------------------
     for bits in [2u8, 3] {
-        for method in [MethodConfig::GPTQ, MethodConfig::OURS] {
+        for method in ["gptq", "ours"] {
             let spec = QuantSpec::new(bits, 64);
             let t0 = std::time::Instant::now();
             let (qm, report) =
@@ -100,20 +100,20 @@ fn main() -> tsgo::Result<()> {
             let zs = task_suite(&qm.weights, &items);
             println!(
                 "  INT{bits} {:<8} layer-loss {:.3e}  ppl {:.2}/{:.2}",
-                method.label(),
+                method,
                 report.total_loss(),
                 ppl_w,
                 ppl_c
             );
             table.row(vec![
                 format!("INT{bits}"),
-                method.label().into(),
+                method.into(),
                 format!("{ppl_w:.3}"),
                 format!("{ppl_c:.3}"),
                 format!("{:.2}", zs.average),
                 tsgo::util::fmt_duration(dt),
             ]);
-            if bits == 2 && method == MethodConfig::OURS {
+            if bits == 2 && method == "ours" {
                 store::save_quantized(std::path::Path::new("model.q.tsr"), &qm)?;
             }
         }

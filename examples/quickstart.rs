@@ -3,8 +3,7 @@
 //!
 //! Run: `cargo run --release --example quickstart`
 
-use tsgo::quant::stage2::Stage2Config;
-use tsgo::quant::{quantize_layer, GptqConfig, MethodConfig, QuantSpec};
+use tsgo::quant::{resolve_quantizer, QuantContext, QuantSpec};
 use tsgo::tensor::Matrix;
 use tsgo::util::rng::Rng;
 
@@ -31,22 +30,11 @@ fn main() -> tsgo::Result<()> {
     println!("quantizing a [{out_dim}x{in_dim}] layer, INT2, group=64\n");
     println!("{:<10} {:>14} {:>14} {:>10}", "method", "layer loss", "vs GPTQ", "time");
     let mut base = None;
-    for method in [
-        MethodConfig::GPTQ,
-        MethodConfig::STAGE1_ONLY,
-        MethodConfig::STAGE2_ONLY,
-        MethodConfig::OURS,
-    ] {
+    let ctx = QuantContext::default();
+    for method in ["gptq", "stage1", "stage2", "ours"] {
+        let quantizer = resolve_quantizer(method).expect("registered quantizer");
         let t0 = std::time::Instant::now();
-        let res = quantize_layer(
-            &w,
-            &h,
-            None,
-            &QuantSpec::new(2, 64),
-            method,
-            &GptqConfig::default(),
-            &Stage2Config::default(),
-        )?;
+        let res = quantizer.quantize(&w, &h, None, &QuantSpec::new(2, 64), &ctx)?;
         let dt = t0.elapsed();
         let rel = base.map(|b: f64| res.layer_loss / b).unwrap_or(1.0);
         if base.is_none() {
@@ -54,7 +42,7 @@ fn main() -> tsgo::Result<()> {
         }
         println!(
             "{:<10} {:>14.4e} {:>13.1}% {:>10}",
-            method.label(),
+            method,
             res.layer_loss,
             rel * 100.0,
             tsgo::util::fmt_duration(dt)

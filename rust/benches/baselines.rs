@@ -1,20 +1,16 @@
 //! Extended baseline comparison (beyond the paper's tables, covering the
 //! related-work methods its §1–2 discuss): RTN, AWQ-lite (activation-aware
 //! scaling, ref [8]), GPTQ natural-order, GPTQ act-order, and the paper's
-//! method — all on identical layer problems, scored by the true layer-wise
-//! reconstruction loss (Eq. 3) under a skewed, correlated input Hessian.
+//! method — every row through the same [`tsgo::quant::LayerQuantizer`]
+//! trait path the pipeline/CLI use, on identical layer problems, scored by
+//! the true layer-wise reconstruction loss (Eq. 3) under a skewed,
+//! correlated input Hessian.
 //!
 //! `cargo bench --bench baselines`
 
-use tsgo::quant::actorder::gptq_quantize_actorder;
-use tsgo::quant::awq::awq_quantize;
 use tsgo::quant::gptq::prepare_hessian;
 use tsgo::quant::metrics::layer_loss;
-use tsgo::quant::rtn::rtn_quantize;
-use tsgo::quant::scale::ScaleMetric;
-use tsgo::quant::stage1::baseline_init;
-use tsgo::quant::stage2::Stage2Config;
-use tsgo::quant::{quantize_layer, GptqConfig, MethodConfig, QuantSpec};
+use tsgo::quant::{resolve_quantizer, QuantContext, QuantSpec};
 use tsgo::tensor::Matrix;
 use tsgo::util::bench::Table;
 use tsgo::util::rng::Rng;
@@ -43,6 +39,8 @@ fn problem(out: usize, inp: usize, seed: u64) -> (Matrix, Matrix) {
 /// collapses under intra-channel variance; group-wise recovers it.
 fn channelwise_vs_groupwise() {
     let (out, inp) = (704, 256);
+    let ours = resolve_quantizer("ours").unwrap();
+    let ctx = QuantContext::default();
     let mut table = Table::new(&["bits", "granularity", "layer loss", "vs channel-wise"]);
     for bits in [2u8, 3] {
         let (w, h) = problem(out, inp, 77 + bits as u64);
@@ -56,11 +54,7 @@ fn channelwise_vs_groupwise() {
             ("group 32", 32),
         ] {
             let spec = QuantSpec::new(bits, group);
-            let res = quantize_layer(
-                &w, &h, None, &spec, MethodConfig::OURS,
-                &GptqConfig::default(), &Stage2Config::default(),
-            )
-            .unwrap();
+            let res = ours.quantize(&w, &h, None, &spec, &ctx).unwrap();
             let loss = layer_loss(&w, &res.quantized.dequantize(), &hd);
             let rel = match base {
                 None => {
@@ -83,6 +77,7 @@ fn channelwise_vs_groupwise() {
 fn main() {
     let (out, inp) = (704, 256);
     println!("extended baselines on a [{out}x{inp}] layer (skewed AR(1) inputs), group=64");
+    let ctx = QuantContext::default();
     let mut table = Table::new(&["bits", "method", "layer loss", "vs RTN", "time"]);
     for bits in [2u8, 3] {
         let (w, h) = problem(out, inp, 1000 + bits as u64);
@@ -91,11 +86,13 @@ fn main() {
         let hd = prepare_hessian(&h, &mut wd, 0.01);
 
         let mut rtn_loss = None;
-        let mut run = |name: &str, f: &mut dyn FnMut() -> Matrix| {
+        // first name must stay "rtn": the relative column is vs that row
+        for name in ["rtn", "awq", "gptq", "actorder", "ours"] {
+            let quantizer = resolve_quantizer(name).unwrap();
             let t0 = std::time::Instant::now();
-            let deq = f();
+            let res = quantizer.quantize(&w, &h, None, &spec, &ctx).unwrap();
             let dt = t0.elapsed();
-            let loss = layer_loss(&w, &deq, &hd);
+            let loss = layer_loss(&w, &res.quantized.dequantize(), &hd);
             let rel = match rtn_loss {
                 None => {
                     rtn_loss = Some(loss);
@@ -110,32 +107,7 @@ fn main() {
                 rel,
                 tsgo::util::fmt_duration(dt),
             ]);
-        };
-
-        run("RTN", &mut || {
-            let gs = baseline_init(&w, &spec);
-            rtn_quantize(&w, &gs, &spec).dequantize()
-        });
-        run("AWQ-lite", &mut || {
-            awq_quantize(&w, &h, &spec).dequantize_unscaled()
-        });
-        run("GPTQ", &mut || {
-            quantize_layer(&w, &h, None, &spec, MethodConfig::GPTQ, &GptqConfig::default(), &Stage2Config::default())
-                .unwrap()
-                .quantized
-                .dequantize()
-        });
-        run("GPTQ act-order", &mut || {
-            gptq_quantize_actorder(&w, &h, &spec, ScaleMetric::L2, &GptqConfig::default())
-                .unwrap()
-                .dequantize_unpermuted()
-        });
-        run("ours", &mut || {
-            quantize_layer(&w, &h, None, &spec, MethodConfig::OURS, &GptqConfig::default(), &Stage2Config::default())
-                .unwrap()
-                .quantized
-                .dequantize()
-        });
+        }
     }
     table.print("extended baselines (lower loss is better; % relative to RTN)");
     channelwise_vs_groupwise();

@@ -114,12 +114,9 @@ pub struct Row {
     pub secs: f64,
 }
 
-pub fn run_cell(
-    env: &BenchEnv,
-    bits: u8,
-    group: usize,
-    method: tsgo::quant::MethodConfig,
-) -> Row {
+/// Run one table cell: the whole pipeline with the named registered
+/// quantizer (any of `tsgo::quant::QUANTIZER_NAMES`) at a uniform spec.
+pub fn run_cell(env: &BenchEnv, bits: u8, group: usize, method: &'static str) -> Row {
     use tsgo::pipeline::{quantize_model, PipelineConfig};
     let spec = tsgo::quant::QuantSpec::new(bits, group);
     let t0 = std::time::Instant::now();
@@ -128,7 +125,7 @@ pub fn run_cell(
     let secs = t0.elapsed().as_secs_f64();
     Row {
         precision: format!("INT{bits}"),
-        method: method.label(),
+        method,
         wiki: env.ppl(&qm.weights, &env.wiki_test),
         c4: env.ppl(&qm.weights, &env.c4_test),
         zshot: env.zero_shot(&qm.weights),

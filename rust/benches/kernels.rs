@@ -11,7 +11,7 @@
 use tsgo::pipeline::MomentAccum;
 use tsgo::quant::scale::{compute_group_scales, QuantSpec, ScaleMetric};
 use tsgo::quant::stage2::Stage2Config;
-use tsgo::quant::{gptq_quantize, GptqConfig};
+use tsgo::quant::{gptq_quantize, resolve_quantizer, GptqConfig, QuantContext, QUANTIZER_NAMES};
 use tsgo::runtime::{matrix_to_literal, Engine};
 use tsgo::tensor::Matrix;
 use tsgo::util::bench::{bench_units, print_measurements, Measurement};
@@ -129,6 +129,23 @@ fn main() {
     ));
     // keep qlin alive for potential artifact comparison below
     let _ = &mut qlin;
+
+    // ---- unified trait path ----------------------------------------------
+    // Whole-layer quantization throughput for every registered quantizer —
+    // the same entry point the pipeline, CLI and serving path use.
+    let ctx = QuantContext::default();
+    for name in QUANTIZER_NAMES {
+        let quantizer = resolve_quantizer(name).unwrap();
+        ms.push(bench_units(
+            &format!("layer-quantize '{name}' [704x256] INT2 (trait path)"),
+            1,
+            iters.min(3),
+            Some((w.rows * w.cols) as f64),
+            &mut || {
+                std::hint::black_box(quantizer.quantize(&w, &h, None, &spec, &ctx).unwrap());
+            },
+        ));
+    }
 
     // ---- artifact (Pallas) paths ----------------------------------------
     if let Some(engine) = Engine::open_default() {

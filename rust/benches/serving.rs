@@ -9,7 +9,7 @@ use std::sync::Arc;
 use tsgo::calib::{calibration_batches, Corpus, CorpusKind};
 use tsgo::model::{ModelWeights, Preset};
 use tsgo::pipeline::{quantize_model, PipelineConfig};
-use tsgo::quant::{MethodConfig, QuantSpec};
+use tsgo::quant::QuantSpec;
 use tsgo::serve::server::serve_in_background;
 use tsgo::serve::{request_generation, BatcherConfig, ServerConfig};
 use tsgo::util::bench::Table;
@@ -65,7 +65,7 @@ fn main() {
     let (qm, _) = quantize_model(
         &fp,
         &calib,
-        &PipelineConfig::new(QuantSpec::new(2, 64), MethodConfig::OURS),
+        &PipelineConfig::new(QuantSpec::new(2, 64), "ours"),
     )
     .unwrap();
     let fp_mb = (fp.config.n_params() * 4) as f64 / 1e6;

@@ -7,7 +7,6 @@
 
 mod common;
 
-use tsgo::quant::MethodConfig;
 use tsgo::util::bench::Table;
 
 fn main() {
@@ -28,7 +27,7 @@ fn main() {
         "-".into(),
     ]);
     for bits in [2u8, 3] {
-        for method in [MethodConfig::GPTQ, MethodConfig::OURS] {
+        for method in ["gptq", "ours"] {
             let r = common::run_cell(&env, bits, 64, method);
             table.row(vec![
                 r.precision,

@@ -6,7 +6,6 @@
 
 mod common;
 
-use tsgo::quant::MethodConfig;
 use tsgo::util::bench::Table;
 
 fn main() {
@@ -29,7 +28,7 @@ fn main() {
     let mut improved = 0usize;
     let mut cells = 0usize;
     for bits in [2u8, 3] {
-        for method in [MethodConfig::GPTQ, MethodConfig::OURS] {
+        for method in ["gptq", "ours"] {
             let r32 = common::run_cell(&env, bits, 32, method);
             let r64 = common::run_cell(&env, bits, 64, method);
             cells += 1;

@@ -7,7 +7,6 @@
 
 mod common;
 
-use tsgo::quant::MethodConfig;
 use tsgo::util::bench::Table;
 
 fn main() {
@@ -19,11 +18,12 @@ fn main() {
         "time (s)", "time vs GPTQ",
     ]);
     let mut base_time = None;
-    for method in [
-        MethodConfig::GPTQ,
-        MethodConfig::STAGE1_ONLY,
-        MethodConfig::STAGE2_ONLY,
-        MethodConfig::OURS,
+    // the four TwoStage registry cells, in Table-3 row order
+    for (method, s1, s2) in [
+        ("gptq", "", ""),
+        ("stage1", "✓", ""),
+        ("stage2", "", "✓"),
+        ("ours", "✓", "✓"),
     ] {
         let r = common::run_cell(&env, 2, 64, method);
         let rel = match base_time {
@@ -34,8 +34,8 @@ fn main() {
             Some(b) => format!("{:.2}×", r.secs / b),
         };
         table.row(vec![
-            if method.stage1 { "✓" } else { "" }.into(),
-            if method.stage2 { "✓" } else { "" }.into(),
+            s1.into(),
+            s2.into(),
             format!("{:.3}", r.wiki),
             format!("{:.3}", r.c4),
             format!("{:.3e}", r.layer_loss),

@@ -16,7 +16,7 @@ use tsgo::calib::{calibration_batches, Corpus, CorpusKind};
 use tsgo::eval::tasks::{build_suite, task_suite};
 use tsgo::model::{store, ModelWeights, Preset};
 use tsgo::pipeline::{quantize_model, PipelineConfig};
-use tsgo::quant::{MethodConfig, QuantSpec};
+use tsgo::quant::QuantPlan;
 use tsgo::runtime::Engine;
 use tsgo::util::cli::{usage, Args, OptSpec};
 
@@ -61,7 +61,10 @@ fn print_help() {
          \x20 info       environment / artifact status\n\
          \x20 gen-data   write synthetic corpora (--out dir)\n\
          \x20 train      train a model (--preset small --steps 300 --out model.tsr)\n\
-         \x20 quantize   PTQ pipeline (--model m.tsr --method ours --bits 2 --group 64)\n\
+         \x20 quantize   PTQ pipeline (--model m.tsr --method ours --bits 2 --group 64);\n\
+         \x20            --method takes any registered quantizer (rtn|awq|actorder|gptq|\n\
+         \x20            stage1|stage2|ours) or a per-layer plan string such as\n\
+         \x20            'ours:bits=2,group=64;wv,wo=bits4;l0=awq'\n\
          \x20 eval       PPL + 0-shot (--model m.tsr [--quantized])\n\
          \x20 serve      generation server (--model m.tsr --addr 127.0.0.1:7433)\n\
          \x20 warmup     pre-compile all artifacts"
@@ -157,23 +160,19 @@ fn cmd_train(argv: &[String]) -> Result<()> {
     Ok(())
 }
 
-fn method_from_str(s: &str) -> Result<MethodConfig> {
-    Ok(match s {
-        "gptq" => MethodConfig::GPTQ,
-        "ours" => MethodConfig::OURS,
-        "stage1" => MethodConfig::STAGE1_ONLY,
-        "stage2" => MethodConfig::STAGE2_ONLY,
-        _ => bail!("unknown method '{s}' (gptq|ours|stage1|stage2)"),
-    })
-}
-
 fn cmd_quantize(argv: &[String]) -> Result<()> {
     let specs = [
         OptSpec { name: "model", help: "FP checkpoint", default: Some("model.tsr"), is_flag: false },
         OptSpec { name: "out", help: "quantized checkpoint", default: Some("model.q.tsr"), is_flag: false },
-        OptSpec { name: "method", help: "gptq|ours|stage1|stage2", default: Some("ours"), is_flag: false },
-        OptSpec { name: "bits", help: "bit width (2/3/4/8)", default: Some("2"), is_flag: false },
-        OptSpec { name: "group", help: "group size", default: Some("64"), is_flag: false },
+        OptSpec {
+            name: "method",
+            help: "quantizer (rtn|awq|actorder|gptq|stage1|stage2|ours) or plan string, \
+                   e.g. 'ours:bits=2,group=64;wv,wo=bits4;l0=awq'",
+            default: Some("ours"),
+            is_flag: false,
+        },
+        OptSpec { name: "bits", help: "default bit width (1-8)", default: Some("2"), is_flag: false },
+        OptSpec { name: "group", help: "default group size", default: Some("64"), is_flag: false },
         OptSpec { name: "calib-seqs", help: "calibration sequences", default: Some("32"), is_flag: false },
         OptSpec { name: "seed", help: "calibration seed", default: Some("3"), is_flag: false },
     ];
@@ -188,19 +187,14 @@ fn cmd_quantize(argv: &[String]) -> Result<()> {
         4,
         a.u64("seed").map_err(anyhow::Error::msg)?,
     );
-    let spec = QuantSpec::new(
+    let plan = QuantPlan::parse_with_defaults(
+        &a.str("method"),
         a.usize("bits").map_err(anyhow::Error::msg)? as u8,
         a.usize("group").map_err(anyhow::Error::msg)?,
-    );
-    let method = method_from_str(&a.str("method"))?;
-    println!(
-        "quantizing {} linears at INT{} group={} with {}…",
-        7 * w.config.n_layers,
-        spec.bits,
-        spec.group_size,
-        method.label()
-    );
-    let (qm, report) = quantize_model(&w, &calib, &PipelineConfig::new(spec, method))?;
+    )
+    .context("bad --method")?;
+    println!("quantizing {} linears with plan {plan}…", 7 * w.config.n_layers);
+    let (qm, report) = quantize_model(&w, &calib, &PipelineConfig::from_plan(plan))?;
     println!(
         "done in {} — total layer loss {:.4e} (stats {} | scales {} | gptq {} | stage2 {})",
         tsgo::util::fmt_duration(report.total_time),
@@ -210,13 +204,19 @@ fn cmd_quantize(argv: &[String]) -> Result<()> {
         tsgo::util::fmt_duration(report.time_gptq),
         tsgo::util::fmt_duration(report.time_stage2),
     );
+    for (label, n, loss) in report.method_summary() {
+        println!("  {label:<20} {n:>3} linears  Σ layer loss {loss:.4e}");
+    }
     let out = PathBuf::from(a.str("out"));
     store::save_quantized(&out, &qm)?;
+    // Element-weighted effective bit width: a uniform average over linears
+    // would let small layers skew the number under mixed-precision plans.
+    let total_elems: usize = qm.linears.values().map(|q| q.rows * q.cols).sum();
+    let total_bits: f64 = qm.linears.values().map(|q| q.nbytes() as f64 * 8.0).sum();
     println!(
         "saved {} ({:.2} bits/weight effective)",
         out.display(),
-        qm.linears.values().map(|q| q.bits_per_weight()).sum::<f64>()
-            / qm.linears.len() as f64
+        total_bits / total_elems.max(1) as f64
     );
     Ok(())
 }

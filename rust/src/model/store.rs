@@ -16,7 +16,12 @@ use std::io::{Read, Write};
 use std::path::Path;
 
 const MAGIC: &[u8; 4] = b"TSGO";
-const VERSION: u32 = 1;
+/// v1: fp32 + packed tensors. v2 (this code): packed tensors may carry an
+/// act-order `perm` and AWQ `channel_scales` after the qweight rows. v1
+/// files remain readable; v2 is written so v1-only readers reject (rather
+/// than scramble) act-order/AWQ checkpoints.
+const VERSION: u32 = 2;
+const MIN_VERSION: u32 = 1;
 
 fn f32s_to_bytes(v: &[f32]) -> Vec<u8> {
     v.iter().flat_map(|x| x.to_le_bytes()).collect()
@@ -92,6 +97,9 @@ pub fn load_model(path: &Path) -> Result<ModelWeights> {
 }
 
 /// A quantized checkpoint: FP norms/embeddings + quantized linears.
+/// Each linear carries its own bits/group (and optional act-order
+/// permutation / AWQ channel scales), so heterogeneous mixed-precision
+/// plans round-trip through save/load and the runtime/serve paths.
 #[derive(Clone, Debug)]
 pub struct QuantizedModel {
     pub config: ModelConfig,
@@ -99,6 +107,9 @@ pub struct QuantizedModel {
     pub weights: ModelWeights,
     /// The packed form of every linear, keyed by `(layer, kind)`.
     pub linears: BTreeMap<(usize, &'static str), QuantizedLinear>,
+    /// Provenance: registered quantizer name per linear (may be missing for
+    /// checkpoints written before it was recorded).
+    pub quantizers: BTreeMap<(usize, &'static str), String>,
 }
 
 impl QuantizedModel {
@@ -158,6 +169,19 @@ pub fn save_quantized(path: &Path, qm: &QuantizedModel) -> Result<()> {
         for row in &q.qweight {
             payload.extend(u32s_to_bytes(&row.words));
         }
+        // Optional act-order permutation / AWQ channel divisors follow the
+        // packed rows; boolean header fields say whether they are present.
+        if let Some(p) = &q.perm {
+            payload.extend(u32s_to_bytes(p));
+        }
+        if let Some(cs) = &q.channel_scales {
+            payload.extend(f32s_to_bytes(cs));
+        }
+        let quantizer = qm
+            .quantizers
+            .get(&(*layer, *kind))
+            .cloned()
+            .unwrap_or_default();
         dir.push(Json::obj(vec![
             ("name", Json::str(name)),
             ("shape", Json::arr([q.rows, q.cols].iter().map(|&s| Json::num(s as f64)))),
@@ -169,6 +193,9 @@ pub fn save_quantized(path: &Path, qm: &QuantizedModel) -> Result<()> {
                 "words_per_row",
                 Json::num(q.qweight[0].words.len() as f64),
             ),
+            ("perm", Json::Bool(q.perm.is_some())),
+            ("channel_scales", Json::Bool(q.channel_scales.is_some())),
+            ("quantizer", Json::str(quantizer)),
         ]));
     }
     let header = Json::obj(vec![
@@ -199,6 +226,7 @@ pub fn load_quantized(path: &Path) -> Result<QuantizedModel> {
         }
     }
     let mut linears: BTreeMap<(usize, &'static str), QuantizedLinear> = BTreeMap::new();
+    let mut quantizers: BTreeMap<(usize, &'static str), String> = BTreeMap::new();
     for (name, t) in &packed {
         let shape = t.get("shape").usize_vec();
         let (rows, cols) = (shape[0], shape[1]);
@@ -225,7 +253,38 @@ pub fn load_quantized(path: &Path) -> Result<QuantizedModel> {
             off += 4 * wpr;
             qweight.push(PackedInts { bits, len: cols, words });
         }
-        let q = QuantizedLinear { rows, cols, bits, group_size, qweight, scales, zeros };
+        let perm = if t.get("perm").as_bool().unwrap_or(false) {
+            let p = bytes_to_u32s(payload_slice(&payload, off, 4 * cols)?);
+            off += 4 * cols;
+            // A bad entry would index out of bounds at dequantization —
+            // corrupted checkpoints must fail here with an Err, not panic.
+            if p.iter().any(|&v| v as usize >= cols) {
+                bail!("tensor {name}: perm entry out of range (cols = {cols})");
+            }
+            Some(p)
+        } else {
+            None
+        };
+        let channel_scales = if t.get("channel_scales").as_bool().unwrap_or(false) {
+            let cs = bytes_to_f32s(payload_slice(&payload, off, 4 * cols)?);
+            if cs.iter().any(|v| !v.is_finite() || *v == 0.0) {
+                bail!("tensor {name}: non-finite or zero channel scale");
+            }
+            Some(cs)
+        } else {
+            None
+        };
+        let q = QuantizedLinear {
+            rows,
+            cols,
+            bits,
+            group_size,
+            qweight,
+            scales,
+            zeros,
+            perm,
+            channel_scales,
+        };
         let (idx, kind) = name
             .strip_prefix("layers.")
             .and_then(|r| r.split_once('.'))
@@ -235,7 +294,13 @@ pub fn load_quantized(path: &Path) -> Result<QuantizedModel> {
             .find(|k| k.label() == kind)
             .context("unknown linear kind")?
             .label();
-        linears.insert((idx.parse()?, kind_static), q);
+        let idx: usize = idx.parse()?;
+        if let Some(qname) = t.get("quantizer").as_str() {
+            if !qname.is_empty() {
+                quantizers.insert((idx, kind_static), qname.to_string());
+            }
+        }
+        linears.insert((idx, kind_static), q);
     }
     let weights = ModelWeights::from_named(config, |name, shape| {
         if let Some((s, off)) = fp.get(name) {
@@ -261,7 +326,7 @@ pub fn load_quantized(path: &Path) -> Result<QuantizedModel> {
         let q = linears.get(&key).with_context(|| format!("missing packed {name}"))?;
         Ok(q.dequantize().data)
     })?;
-    Ok(QuantizedModel { config, weights, linears })
+    Ok(QuantizedModel { config, weights, linears, quantizers })
 }
 
 fn write_container(path: &Path, header: &Json, payload: &[u8]) -> Result<()> {
@@ -289,8 +354,8 @@ fn read_container(path: &Path) -> Result<(Json, Vec<u8>)> {
     let mut word = [0u8; 4];
     f.read_exact(&mut word)?;
     let version = u32::from_le_bytes(word);
-    if version != VERSION {
-        bail!("unsupported checkpoint version {version}");
+    if !(MIN_VERSION..=VERSION).contains(&version) {
+        bail!("unsupported checkpoint version {version} (supported: {MIN_VERSION}..={VERSION})");
     }
     f.read_exact(&mut word)?;
     let hlen = u32::from_le_bytes(word) as usize;
@@ -338,6 +403,7 @@ mod tests {
         // quantize every linear with RTN to build a QuantizedModel
         let mut weights = w.clone();
         let mut linears = BTreeMap::new();
+        let mut quantizers = BTreeMap::new();
         for li in 0..cfg.n_layers {
             for kind in LinearKind::ALL {
                 let m = w.layers[li].linear(kind).clone();
@@ -345,13 +411,15 @@ mod tests {
                 let q = crate::quant::rtn::rtn_quantize(&m, &scales, &spec);
                 *weights.layers[li].linear_mut(kind) = q.dequantize();
                 linears.insert((li, kind.label()), q);
+                quantizers.insert((li, kind.label()), "rtn".to_string());
             }
         }
-        let qm = QuantizedModel { config: cfg, weights, linears };
+        let qm = QuantizedModel { config: cfg, weights, linears, quantizers };
         let p = tmp("quant.tsr");
         save_quantized(&p, &qm).unwrap();
         let qm2 = load_quantized(&p).unwrap();
         assert_eq!(qm2.config, cfg);
+        assert_eq!(qm2.quantizers, qm.quantizers, "quantizer provenance must round-trip");
         // dequantized weights must match exactly
         for li in 0..cfg.n_layers {
             for kind in LinearKind::ALL {
@@ -370,6 +438,115 @@ mod tests {
             qm2.packed_bytes(),
             fp_bytes
         );
+    }
+
+    #[test]
+    fn heterogeneous_checkpoint_roundtrips_perm_and_channel_scales() {
+        // Mixed bits/methods in one checkpoint: wq via act-order (perm),
+        // w1 via AWQ (channel scales), everything else plain RTN at a
+        // different bit width — all must round-trip exactly.
+        let mut rng = Rng::new(7);
+        let cfg = Preset::Tiny.config();
+        let w = ModelWeights::init(cfg, &mut rng);
+        let mut weights = w.clone();
+        let mut linears = BTreeMap::new();
+        let mut quantizers = BTreeMap::new();
+        for li in 0..cfg.n_layers {
+            for kind in LinearKind::ALL {
+                let m = w.layers[li].linear(kind).clone();
+                let x = Matrix::randn(m.cols, 2 * m.cols, 1.0, &mut rng);
+                let h = x.matmul_bt(&x);
+                let (q, name) = match kind {
+                    LinearKind::Wq => {
+                        let spec = QuantSpec::new(4, 32);
+                        let pq = crate::quant::actorder::gptq_quantize_actorder(
+                            &m,
+                            &h,
+                            &spec,
+                            ScaleMetric::L2,
+                            &crate::quant::GptqConfig::default(),
+                        )
+                        .unwrap();
+                        (pq.into_quantized_linear(), "actorder")
+                    }
+                    LinearKind::W1 => {
+                        let spec = QuantSpec::new(4, 32);
+                        let aq = crate::quant::awq::awq_quantize(&m, &h, &spec);
+                        (aq.into_quantized_linear(), "awq")
+                    }
+                    _ => {
+                        let spec = QuantSpec::new(2, 32);
+                        let scales = compute_group_scales(&m, &spec, ScaleMetric::L2, None);
+                        (crate::quant::rtn::rtn_quantize(&m, &scales, &spec), "rtn")
+                    }
+                };
+                *weights.layers[li].linear_mut(kind) = q.dequantize();
+                linears.insert((li, kind.label()), q);
+                quantizers.insert((li, kind.label()), name.to_string());
+            }
+        }
+        let qm = QuantizedModel { config: cfg, weights, linears, quantizers };
+        let p = tmp("hetero.tsr");
+        save_quantized(&p, &qm).unwrap();
+        let qm2 = load_quantized(&p).unwrap();
+        for li in 0..cfg.n_layers {
+            // per-linear spec + metadata survive
+            let wq = &qm2.linears[&(li, "wq")];
+            assert_eq!(wq.bits, 4);
+            assert!(wq.perm.is_some(), "act-order perm must round-trip");
+            let w1 = &qm2.linears[&(li, "w1")];
+            assert!(w1.channel_scales.is_some(), "awq channel scales must round-trip");
+            assert_eq!(qm2.linears[&(li, "wo")].bits, 2);
+            // dequantized weights identical
+            for kind in LinearKind::ALL {
+                assert_eq!(
+                    qm.weights.layers[li].linear(kind),
+                    qm2.weights.layers[li].linear(kind),
+                    "layer {li} {}",
+                    kind.label()
+                );
+            }
+        }
+        assert_eq!(qm2.quantizers, qm.quantizers);
+    }
+
+    #[test]
+    fn corrupted_perm_and_channel_scales_error_not_panic() {
+        let mut rng = Rng::new(9);
+        let cfg = Preset::Tiny.config();
+        let w = ModelWeights::init(cfg, &mut rng);
+        let spec = QuantSpec::new(2, 32);
+        let build = |mangle: &dyn Fn(&mut crate::quant::QuantizedLinear)| {
+            let mut weights = w.clone();
+            let mut linears = BTreeMap::new();
+            for li in 0..cfg.n_layers {
+                for kind in LinearKind::ALL {
+                    let m = w.layers[li].linear(kind).clone();
+                    let scales = compute_group_scales(&m, &spec, ScaleMetric::L2, None);
+                    let mut q = crate::quant::rtn::rtn_quantize(&m, &scales, &spec);
+                    // splice dense weights first: the mangled metadata is
+                    // meant to be caught by load, not dequantized here
+                    *weights.layers[li].linear_mut(kind) = q.dequantize();
+                    if li == 0 && kind == LinearKind::Wq {
+                        mangle(&mut q);
+                    }
+                    linears.insert((li, kind.label()), q);
+                }
+            }
+            QuantizedModel { config: cfg, weights, linears, quantizers: BTreeMap::new() }
+        };
+        // out-of-range perm entry
+        let qm = build(&|q| q.perm = Some(vec![q.cols as u32; q.cols]));
+        let p = tmp("bad_perm.tsr");
+        save_quantized(&p, &qm).unwrap();
+        let err = load_quantized(&p).unwrap_err().to_string();
+        assert!(err.contains("perm entry out of range"), "{err}");
+        // zero channel divisor
+        let qm = build(&|q| q.channel_scales = Some(vec![0.0; q.cols]));
+        let p = tmp("bad_cs.tsr");
+        save_quantized(&p, &qm).unwrap();
+        let err = load_quantized(&p).unwrap_err().to_string();
+        assert!(err.contains("channel scale"), "{err}");
     }
 
     #[test]

@@ -8,8 +8,11 @@
 //! 2. accumulate `H = E[XXᵀ]` (from the quantized-prefix captures) and
 //!    `R = E[ΔX Xᵀ]` (from their deviation against the FP captures —
 //!    Eq. 7) per linear ([`stats`]);
-//! 3. quantize the block's seven projections — Stage 1 → GPTQ sweep →
-//!    Stage 2, per [`crate::quant::MethodConfig`] — in parallel;
+//! 3. quantize the block's seven projections in parallel, each routed
+//!    through the [`crate::quant::LayerQuantizer`] + spec its
+//!    [`crate::quant::QuantPlan`] rule selects (uniform plans reproduce the
+//!    paper's Stage 1 → GPTQ sweep → Stage 2; mixed plans give
+//!    per-layer methods and mixed precision);
 //! 4. splice the dequantized weights into the prefix model and move to
 //!    block `l + 1`, so later layers see (and compensate for) upstream
 //!    quantization error, exactly the effect Eq. 9 models.
@@ -17,5 +20,5 @@
 pub mod quantize_model;
 pub mod stats;
 
-pub use quantize_model::{quantize_model, PipelineConfig, PipelineReport};
+pub use quantize_model::{quantize_model, LinearReport, PipelineConfig, PipelineReport};
 pub use stats::{LinearStats, MomentAccum};

@@ -4,20 +4,20 @@ use super::stats::LinearStats;
 use crate::calib::Batch;
 use crate::model::store::QuantizedModel;
 use crate::model::{LinearKind, ModelWeights};
-use crate::quant::stage2::Stage2Config;
-use crate::quant::{quantize_layer, GptqConfig, MethodConfig, QuantSpec};
+use crate::quant::{LayerQuantizer, QuantContext, QuantPlan, QuantSpec};
 use crate::tensor::Matrix;
 use anyhow::Result;
 use std::collections::BTreeMap;
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 /// Pipeline-level configuration.
 #[derive(Clone, Debug)]
 pub struct PipelineConfig {
-    pub spec: QuantSpec,
-    pub method: MethodConfig,
-    pub gptq: GptqConfig,
-    pub stage2: Stage2Config,
+    /// Which quantizer + spec handles each `(layer, kind)`.
+    pub plan: QuantPlan,
+    /// Shared algorithm tunables (GPTQ damping/block size, stage-2 sweeps).
+    pub ctx: QuantContext,
     /// Use the error-aware update (Eq. 9) for blocks after the first.
     pub error_aware: bool,
     /// Quantize the block's 7 projections concurrently.
@@ -25,12 +25,15 @@ pub struct PipelineConfig {
 }
 
 impl PipelineConfig {
-    pub fn new(spec: QuantSpec, method: MethodConfig) -> PipelineConfig {
+    /// Uniform run: every linear through the named quantizer at `spec`.
+    pub fn new(spec: QuantSpec, quantizer: &str) -> PipelineConfig {
+        PipelineConfig::from_plan(QuantPlan::uniform(quantizer, spec))
+    }
+
+    pub fn from_plan(plan: QuantPlan) -> PipelineConfig {
         PipelineConfig {
-            spec,
-            method,
-            gptq: GptqConfig::default(),
-            stage2: Stage2Config::default(),
+            plan,
+            ctx: QuantContext::default(),
             error_aware: true,
             parallel_projections: true,
         }
@@ -47,11 +50,16 @@ fn empty_caps() -> crate::model::forward::LayerCaptures {
     }
 }
 
-/// Per-linear outcome recorded for reports/benches.
+/// Per-linear outcome recorded for reports/benches: which quantizer + spec
+/// handled the linear, and the losses it achieved.
 #[derive(Clone, Debug)]
 pub struct LinearReport {
     pub layer: usize,
     pub kind: LinearKind,
+    /// Registered name of the quantizer that produced this linear.
+    pub quantizer: &'static str,
+    pub bits: u8,
+    pub group_size: usize,
     pub layer_loss: f64,
     pub loss_before_stage2: f64,
 }
@@ -72,9 +80,29 @@ impl PipelineReport {
     pub fn total_loss(&self) -> f64 {
         self.linears.iter().map(|l| l.layer_loss).sum()
     }
+
+    /// Roll-up per `(quantizer, bits, group)` cell, in first-seen order:
+    /// `(label, n linears, Σ layer loss)` — the per-rule summary the CLI
+    /// prints and benches use for per-method columns.
+    pub fn method_summary(&self) -> Vec<(String, usize, f64)> {
+        let mut out: Vec<(String, usize, f64)> = Vec::new();
+        for l in &self.linears {
+            let label = format!("{} INT{} g{}", l.quantizer, l.bits, l.group_size);
+            match out.iter_mut().find(|(s, _, _)| *s == label) {
+                Some(e) => {
+                    e.1 += 1;
+                    e.2 += l.layer_loss;
+                }
+                None => out.push((label, 1, l.layer_loss)),
+            }
+        }
+        out
+    }
 }
 
-/// Quantize every linear in the model, sequentially over blocks.
+/// Quantize every linear in the model, sequentially over blocks, routing
+/// each `(layer, kind)` through the quantizer + spec its [`QuantPlan`] rule
+/// selects.
 ///
 /// `calib` supplies token batches; captures are taken with the native
 /// forward (identical math to the AOT'd JAX model — asserted by the
@@ -89,16 +117,30 @@ pub fn quantize_model(
     let t_start = Instant::now();
     let n_layers = fp.config.n_layers;
     let n_heads = fp.config.n_heads;
+    cfg.plan.validate()?;
+    // Resolve the full assignment table up front so plan errors surface
+    // before any work, and `with_dev` reflects what will actually run.
+    let assignments: Vec<Vec<(Arc<dyn LayerQuantizer>, QuantSpec)>> = (0..n_layers)
+        .map(|li| {
+            LinearKind::ALL
+                .iter()
+                .map(|&k| cfg.plan.resolve(li, k))
+                .collect::<Result<Vec<_>>>()
+        })
+        .collect::<Result<Vec<_>>>()?;
+
     let mut prefix = fp.clone(); // quantized-prefix model, updated in place
     let mut linears: BTreeMap<(usize, &'static str), crate::quant::QuantizedLinear> =
         BTreeMap::new();
+    let mut quantizers: BTreeMap<(usize, &'static str), String> = BTreeMap::new();
     let mut reports = Vec::new();
     let mut time_stats = Duration::ZERO;
     let mut time_scales = Duration::ZERO;
     let mut time_gptq = Duration::ZERO;
     let mut time_stage2 = Duration::ZERO;
 
-    let with_dev = cfg.error_aware && cfg.method.stage2;
+    let with_dev =
+        cfg.error_aware && assignments.iter().flatten().any(|(q, _)| q.wants_deviation());
 
     // Running hidden states per calibration sequence: `h_q` flows through
     // the quantized prefix, `h_fp` through the FP model. Advancing them one
@@ -155,20 +197,42 @@ pub fn quantize_model(
         // -- 3. quantize the seven projections ------------------------------
         // The first block sees FP inputs exactly (R = 0 → Eq. 5).
         let use_r = layer > 0;
-        let jobs: Vec<(LinearKind, &Matrix, &Matrix, Option<&Matrix>)> = vec![
-            (LinearKind::Wq, &prefix.layers[layer].wq, &h_attn, r_attn.as_ref()),
-            (LinearKind::Wk, &prefix.layers[layer].wk, &h_attn, r_attn.as_ref()),
-            (LinearKind::Wv, &prefix.layers[layer].wv, &h_attn, r_attn.as_ref()),
-            (LinearKind::Wo, &prefix.layers[layer].wo, &h_wo, r_wo.as_ref()),
-            (LinearKind::W1, &prefix.layers[layer].w1, &h_mlp, r_mlp.as_ref()),
-            (LinearKind::W3, &prefix.layers[layer].w3, &h_mlp, r_mlp.as_ref()),
-            (LinearKind::W2, &prefix.layers[layer].w2, &h_w2, r_w2.as_ref()),
-        ];
+        let jobs: Vec<(
+            LinearKind,
+            &Matrix,
+            &Matrix,
+            Option<&Matrix>,
+            Arc<dyn LayerQuantizer>,
+            QuantSpec,
+        )> = LinearKind::ALL
+            .iter()
+            .enumerate()
+            .map(|(i, &kind)| {
+                let (w, h, r): (&Matrix, &Matrix, Option<&Matrix>) = match kind {
+                    LinearKind::Wq => (&prefix.layers[layer].wq, &h_attn, r_attn.as_ref()),
+                    LinearKind::Wk => (&prefix.layers[layer].wk, &h_attn, r_attn.as_ref()),
+                    LinearKind::Wv => (&prefix.layers[layer].wv, &h_attn, r_attn.as_ref()),
+                    LinearKind::Wo => (&prefix.layers[layer].wo, &h_wo, r_wo.as_ref()),
+                    LinearKind::W1 => (&prefix.layers[layer].w1, &h_mlp, r_mlp.as_ref()),
+                    LinearKind::W3 => (&prefix.layers[layer].w3, &h_mlp, r_mlp.as_ref()),
+                    LinearKind::W2 => (&prefix.layers[layer].w2, &h_w2, r_w2.as_ref()),
+                };
+                let (q, spec) = &assignments[layer][i];
+                (kind, w, h, r, q.clone(), *spec)
+            })
+            .collect();
 
-        let run_job = |(kind, w, h, r): &(LinearKind, &Matrix, &Matrix, Option<&Matrix>)| {
+        let run_job = |(kind, w, h, r, q, spec): &(
+            LinearKind,
+            &Matrix,
+            &Matrix,
+            Option<&Matrix>,
+            Arc<dyn LayerQuantizer>,
+            QuantSpec,
+        )| {
             let r_eff = if use_r { *r } else { None };
-            quantize_layer(w, h, r_eff, &cfg.spec, cfg.method, &cfg.gptq, &cfg.stage2)
-                .map(|res| (*kind, res))
+            q.quantize(w, h, r_eff, spec, &cfg.ctx)
+                .map(|res| (*kind, q.name(), *spec, res))
         };
         let results: Vec<_> = if cfg.parallel_projections {
             crate::util::threadpool::parallel_map_items(&jobs, run_job)
@@ -177,18 +241,22 @@ pub fn quantize_model(
         };
 
         for res in results {
-            let (kind, r) = res?;
+            let (kind, qname, spec, r) = res?;
             time_scales += r.time_scales;
             time_gptq += r.time_gptq;
             time_stage2 += r.time_stage2;
             reports.push(LinearReport {
                 layer,
                 kind,
+                quantizer: qname,
+                bits: spec.bits,
+                group_size: spec.group_size,
                 layer_loss: r.layer_loss,
                 loss_before_stage2: r.loss_before_stage2,
             });
             // -- 4. splice dequantized weights into the prefix model --------
             *prefix.layers[layer].linear_mut(kind) = r.quantized.dequantize();
+            quantizers.insert((layer, kind.label()), qname.to_string());
             linears.insert((layer, kind.label()), r.quantized);
         }
 
@@ -214,7 +282,10 @@ pub fn quantize_model(
         time_gptq,
         time_stage2,
     };
-    Ok((QuantizedModel { config: fp.config, weights: prefix, linears }, report))
+    Ok((
+        QuantizedModel { config: fp.config, weights: prefix, linears, quantizers },
+        report,
+    ))
 }
 
 #[cfg(test)]
@@ -236,10 +307,11 @@ mod tests {
     #[test]
     fn pipeline_quantizes_all_linears() {
         let (w, calib) = setup();
-        let cfg = PipelineConfig::new(QuantSpec::new(3, 32), MethodConfig::GPTQ);
+        let cfg = PipelineConfig::new(QuantSpec::new(3, 32), "gptq");
         let (qm, report) = quantize_model(&w, &calib, &cfg).unwrap();
         assert_eq!(qm.linears.len(), 7 * w.config.n_layers);
         assert_eq!(report.linears.len(), 7 * w.config.n_layers);
+        assert!(report.linears.iter().all(|l| l.quantizer == "gptq" && l.bits == 3));
         assert!(report.total_loss().is_finite());
         // spliced weights differ from FP but are close at 3 bits
         for li in 0..w.config.n_layers {
@@ -255,18 +327,10 @@ mod tests {
     fn ours_beats_gptq_on_total_loss() {
         let (w, calib) = setup();
         let spec = QuantSpec::new(2, 32);
-        let (_, rep_gptq) = quantize_model(
-            &w,
-            &calib,
-            &PipelineConfig::new(spec, MethodConfig::GPTQ),
-        )
-        .unwrap();
-        let (_, rep_ours) = quantize_model(
-            &w,
-            &calib,
-            &PipelineConfig::new(spec, MethodConfig::OURS),
-        )
-        .unwrap();
+        let (_, rep_gptq) =
+            quantize_model(&w, &calib, &PipelineConfig::new(spec, "gptq")).unwrap();
+        let (_, rep_ours) =
+            quantize_model(&w, &calib, &PipelineConfig::new(spec, "ours")).unwrap();
         assert!(
             rep_ours.total_loss() < rep_gptq.total_loss(),
             "ours {} should beat gptq {}",
@@ -279,7 +343,7 @@ mod tests {
     fn parallel_and_serial_agree() {
         let (w, calib) = setup();
         let spec = QuantSpec::new(2, 32);
-        let mut cfg = PipelineConfig::new(spec, MethodConfig::OURS);
+        let mut cfg = PipelineConfig::new(spec, "ours");
         cfg.parallel_projections = true;
         let (qa, _) = quantize_model(&w, &calib, &cfg).unwrap();
         cfg.parallel_projections = false;
@@ -288,5 +352,40 @@ mod tests {
             let b = &qb.linears[k];
             assert!(a.scales.max_abs_diff(&b.scales) < 1e-6, "{k:?}");
         }
+    }
+
+    #[test]
+    fn plan_routes_quantizer_and_bits_per_linear() {
+        let (w, calib) = setup();
+        let plan = QuantPlan::parse_with_defaults("gptq:bits=4,group=32;wv,wo=bits2;l0=rtn", 4, 32)
+            .unwrap();
+        let (qm, report) =
+            quantize_model(&w, &calib, &PipelineConfig::from_plan(plan)).unwrap();
+        for ((layer, kind), q) in &qm.linears {
+            let want_bits = if *kind == "wv" || *kind == "wo" { 2 } else { 4 };
+            assert_eq!(q.bits, want_bits, "layer {layer} {kind}");
+            let want_q = if *layer == 0 { "rtn" } else { "gptq" };
+            assert_eq!(qm.quantizers[&(*layer, *kind)], want_q, "layer {layer} {kind}");
+        }
+        // report carries the same routing, and the rollup sees every cell
+        assert!(report
+            .linears
+            .iter()
+            .all(|l| (l.quantizer == "rtn") == (l.layer == 0)));
+        let summary = report.method_summary();
+        assert!(summary.len() >= 3, "expected ≥3 method cells, got {summary:?}");
+        let n: usize = summary.iter().map(|(_, c, _)| c).sum();
+        assert_eq!(n, 7 * w.config.n_layers);
+    }
+
+    #[test]
+    fn bad_plan_fails_before_any_work() {
+        let (w, calib) = setup();
+        let mut plan = QuantPlan::uniform("ours", QuantSpec::new(2, 32));
+        plan.quantizer = "bogus".into();
+        let err = quantize_model(&w, &calib, &PipelineConfig::from_plan(plan))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("unknown quantizer"), "{err}");
     }
 }

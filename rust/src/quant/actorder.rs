@@ -46,6 +46,16 @@ impl PermutedQuant {
         }
         out
     }
+
+    /// Lossless conversion into the unified [`QuantizedLinear`]: the
+    /// permutation becomes the layer's `perm` gather, so `.dequantize()`
+    /// lands bit-for-bit on [`Self::dequantize_unpermuted`] (original
+    /// column order) and the layer round-trips through checkpoints.
+    pub fn into_quantized_linear(self) -> QuantizedLinear {
+        let mut q = self.quantized;
+        q.perm = Some(self.perm.iter().map(|&p| p as u32).collect());
+        q
+    }
 }
 
 /// Sort columns by descending damped-Hessian diagonal.
@@ -153,6 +163,18 @@ mod tests {
         // in ORIGINAL order — a shuffled result would show huge error.
         let mse = crate::quant::metrics::weight_mse(&w, &deq);
         assert!(mse < 0.05, "mse={mse} (column order likely wrong)");
+    }
+
+    #[test]
+    fn conversion_to_quantized_linear_is_lossless() {
+        let (w, h) = skewed_problem(8, 32, 7);
+        let spec = QuantSpec::new(4, 16);
+        let pq = gptq_quantize_actorder(&w, &h, &spec, ScaleMetric::L2, &GptqConfig::default())
+            .unwrap();
+        let reference = pq.dequantize_unpermuted();
+        let unified = pq.into_quantized_linear();
+        assert!(unified.perm.is_some());
+        assert_eq!(unified.dequantize().max_abs_diff(&reference), 0.0);
     }
 
     #[test]

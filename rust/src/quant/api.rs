@@ -1,0 +1,419 @@
+//! The unified quantization API: the [`LayerQuantizer`] trait and its
+//! registry.
+//!
+//! Every quantization algorithm in the system — the paper's two-stage method,
+//! the stock GPTQ baseline, and the related-work baselines (RTN, AWQ-lite,
+//! act-order GPTQ) — implements the same contract: weight matrix + Hessian
+//! (+ optional upstream-error matrix) + [`QuantSpec`] in, a unified
+//! [`LayerQuantResult`] carrying a [`QuantizedLinear`] and phase timings out.
+//! The pipeline, CLI, benches and serving path are all written against this
+//! trait, so adding an algorithm (or composing them per layer via
+//! [`super::plan::QuantPlan`]) never touches the orchestration code.
+//!
+//! Registered names (see [`resolve_quantizer`]):
+//!
+//! | name       | implementation                                     |
+//! |------------|----------------------------------------------------|
+//! | `rtn`      | round-to-nearest on the L2 grid ([`Rtn`])          |
+//! | `awq`      | activation-aware channel scaling ([`Awq`])         |
+//! | `actorder` | GPTQ with descending-diagonal column permutation   |
+//! | `gptq`     | stock GPTQ ([`TwoStage::GPTQ`])                    |
+//! | `stage1`   | paper's Stage 1 only ([`TwoStage::STAGE1_ONLY`])   |
+//! | `stage2`   | paper's Stage 2 only ([`TwoStage::STAGE2_ONLY`])   |
+//! | `ours`     | the full two-stage method ([`TwoStage::OURS`])     |
+
+use super::format::QuantizedLinear;
+use super::gptq::{self, GptqConfig};
+use super::metrics;
+use super::scale::{QuantSpec, ScaleMetric};
+use super::stage2::Stage2Config;
+use super::{actorder, awq, rtn, stage1, stage2};
+use crate::tensor::Matrix;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Shared tunables every quantizer may consult (damping, lazy-batch block
+/// size, CD sweep count). One context serves a whole pipeline run.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct QuantContext {
+    pub gptq: GptqConfig,
+    pub stage2: Stage2Config,
+}
+
+/// Everything measured while quantizing one linear layer.
+#[derive(Clone, Debug)]
+pub struct LayerQuantResult {
+    pub quantized: QuantizedLinear,
+    /// Layer-wise reconstruction loss (Eq. 3) on the damped Hessian.
+    pub layer_loss: f64,
+    /// Same, before stage 2 ran (equal to `layer_loss` for quantizers
+    /// without a refinement phase).
+    pub loss_before_stage2: f64,
+    /// Wall-clock per phase (zero for phases a quantizer does not have).
+    pub time_scales: Duration,
+    pub time_gptq: Duration,
+    pub time_stage2: Duration,
+}
+
+/// One quantization algorithm for a single linear layer.
+///
+/// `w` is the FP weight matrix `[out, in]`, `h` the raw accumulated Hessian
+/// `E[XXᵀ]` (damping is applied inside each implementation so every method
+/// scores its loss on the same damped matrix), and `r` the optional
+/// upstream-deviation correlation `R = E[ΔX Xᵀ]` (Eq. 9) — quantizers that
+/// cannot use it must ignore it.
+pub trait LayerQuantizer: Send + Sync {
+    /// The registered name (`rtn`, `awq`, `actorder`, `gptq`, `stage1`,
+    /// `stage2`, `ours`).
+    fn name(&self) -> &'static str;
+
+    /// Whether this quantizer consumes the upstream-error matrix `r`; the
+    /// pipeline only pays for deviation statistics when some assigned
+    /// quantizer wants them.
+    fn wants_deviation(&self) -> bool {
+        false
+    }
+
+    /// Quantize one layer end-to-end.
+    fn quantize(
+        &self,
+        w: &Matrix,
+        h: &Matrix,
+        r: Option<&Matrix>,
+        spec: &QuantSpec,
+        ctx: &QuantContext,
+    ) -> crate::Result<LayerQuantResult>;
+}
+
+/// All registered quantizer names, in presentation order.
+pub const QUANTIZER_NAMES: [&str; 7] =
+    ["rtn", "awq", "actorder", "gptq", "stage1", "stage2", "ours"];
+
+/// Look up a quantizer by registered name.
+pub fn resolve_quantizer(name: &str) -> Option<Arc<dyn LayerQuantizer>> {
+    match name {
+        "rtn" => Some(Arc::new(Rtn)),
+        "awq" => Some(Arc::new(Awq)),
+        "actorder" => Some(Arc::new(ActOrderGptq)),
+        "gptq" => Some(Arc::new(TwoStage::GPTQ)),
+        "stage1" => Some(Arc::new(TwoStage::STAGE1_ONLY)),
+        "stage2" => Some(Arc::new(TwoStage::STAGE2_ONLY)),
+        "ours" => Some(Arc::new(TwoStage::OURS)),
+        _ => None,
+    }
+}
+
+/// `a|b|c` list of registered names for error messages and help text.
+pub fn quantizer_names() -> String {
+    QUANTIZER_NAMES.join("|")
+}
+
+/// Damped Hessian for loss scoring, without touching any weights (the
+/// dead-column zeroing of [`gptq::prepare_hessian`] is a no-op on an empty
+/// weight matrix, and the damped matrix itself does not depend on `w`).
+/// Quantizers that also need the dead-column-zeroed working weights
+/// (Rtn, TwoStage) call `prepare_hessian` on their own clone instead.
+fn damped_hessian(h: &Matrix, ctx: &QuantContext) -> Matrix {
+    let mut no_weights = Matrix::zeros(0, 0);
+    gptq::prepare_hessian(h, &mut no_weights, ctx.gptq.percdamp)
+}
+
+/// Round-to-nearest baseline: L2 grid scales, independent per-weight
+/// rounding, no error compensation.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Rtn;
+
+impl LayerQuantizer for Rtn {
+    fn name(&self) -> &'static str {
+        "rtn"
+    }
+
+    fn quantize(
+        &self,
+        w: &Matrix,
+        h: &Matrix,
+        _r: Option<&Matrix>,
+        spec: &QuantSpec,
+        ctx: &QuantContext,
+    ) -> crate::Result<LayerQuantResult> {
+        let mut wwork = w.clone();
+        let hd = gptq::prepare_hessian(h, &mut wwork, ctx.gptq.percdamp);
+        let t0 = Instant::now();
+        let scales = stage1::baseline_init(&wwork, spec);
+        let time_scales = t0.elapsed();
+        let t1 = Instant::now();
+        let quantized = rtn::rtn_quantize(&wwork, &scales, spec);
+        let time_gptq = t1.elapsed();
+        let layer_loss = metrics::layer_loss(w, &quantized.dequantize(), &hd);
+        Ok(LayerQuantResult {
+            quantized,
+            layer_loss,
+            loss_before_stage2: layer_loss,
+            time_scales,
+            time_gptq,
+            time_stage2: Duration::ZERO,
+        })
+    }
+}
+
+/// AWQ-lite baseline: per-input-channel scaling by activation magnitude
+/// (α grid-searched against the true layer loss), RTN on the scaled grid.
+/// The channel divisors ride along inside the returned [`QuantizedLinear`]
+/// (`channel_scales`), so the result dequantizes — and round-trips through
+/// checkpoints — losslessly.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Awq;
+
+impl LayerQuantizer for Awq {
+    fn name(&self) -> &'static str {
+        "awq"
+    }
+
+    fn quantize(
+        &self,
+        w: &Matrix,
+        h: &Matrix,
+        _r: Option<&Matrix>,
+        spec: &QuantSpec,
+        ctx: &QuantContext,
+    ) -> crate::Result<LayerQuantResult> {
+        let t0 = Instant::now();
+        let result = awq::awq_quantize(w, h, spec);
+        let time_scales = t0.elapsed();
+        let quantized = result.into_quantized_linear();
+        let hd = damped_hessian(h, ctx);
+        let layer_loss = metrics::layer_loss(w, &quantized.dequantize(), &hd);
+        Ok(LayerQuantResult {
+            quantized,
+            layer_loss,
+            loss_before_stage2: layer_loss,
+            time_scales,
+            time_gptq: Duration::ZERO,
+            time_stage2: Duration::ZERO,
+        })
+    }
+}
+
+/// GPTQ with act-order (`desc_act`) column permutation. The permutation
+/// rides along inside the returned [`QuantizedLinear`] (`perm`), so the
+/// result dequantizes — and round-trips through checkpoints — losslessly in
+/// the original column order.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ActOrderGptq;
+
+impl LayerQuantizer for ActOrderGptq {
+    fn name(&self) -> &'static str {
+        "actorder"
+    }
+
+    fn quantize(
+        &self,
+        w: &Matrix,
+        h: &Matrix,
+        _r: Option<&Matrix>,
+        spec: &QuantSpec,
+        ctx: &QuantContext,
+    ) -> crate::Result<LayerQuantResult> {
+        let t0 = Instant::now();
+        let pq = actorder::gptq_quantize_actorder(w, h, spec, ScaleMetric::L2, &ctx.gptq)?;
+        let time_gptq = t0.elapsed();
+        let quantized = pq.into_quantized_linear();
+        let hd = damped_hessian(h, ctx);
+        let layer_loss = metrics::layer_loss(w, &quantized.dequantize(), &hd);
+        Ok(LayerQuantResult {
+            quantized,
+            layer_loss,
+            loss_before_stage2: layer_loss,
+            time_scales: Duration::ZERO,
+            time_gptq,
+            time_stage2: Duration::ZERO,
+        })
+    }
+}
+
+/// The GPTQ family with the paper's two optional stages around the sweep:
+///
+/// 1. group scales — stock L2 grid, or Stage-1 input-aware grid (Eq. 4);
+/// 2. the GPTQ compensated sweep with those scales frozen;
+/// 3. optional Stage-2 CD refinement of the scales (error-aware via `r`).
+///
+/// The four on/off combinations are the Table-3 ablation cells; both-off is
+/// the stock GPTQ baseline and both-on is the paper's method.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TwoStage {
+    /// Stage 1: input-aware (H_ii-weighted) grid init instead of L2 grid.
+    pub stage1: bool,
+    /// Stage 2: CD refinement of scales after the GPTQ sweep.
+    pub stage2: bool,
+}
+
+impl TwoStage {
+    /// Stock GPTQ baseline.
+    pub const GPTQ: TwoStage = TwoStage { stage1: false, stage2: false };
+    /// The paper's full method.
+    pub const OURS: TwoStage = TwoStage { stage1: true, stage2: true };
+    /// Ablation rows of Table 3.
+    pub const STAGE1_ONLY: TwoStage = TwoStage { stage1: true, stage2: false };
+    pub const STAGE2_ONLY: TwoStage = TwoStage { stage1: false, stage2: true };
+}
+
+impl LayerQuantizer for TwoStage {
+    fn name(&self) -> &'static str {
+        match (self.stage1, self.stage2) {
+            (false, false) => "gptq",
+            (true, false) => "stage1",
+            (false, true) => "stage2",
+            (true, true) => "ours",
+        }
+    }
+
+    fn wants_deviation(&self) -> bool {
+        self.stage2
+    }
+
+    fn quantize(
+        &self,
+        w: &Matrix,
+        h: &Matrix,
+        r: Option<&Matrix>,
+        spec: &QuantSpec,
+        ctx: &QuantContext,
+    ) -> crate::Result<LayerQuantResult> {
+        let mut wwork = w.clone();
+        let hd = gptq::prepare_hessian(h, &mut wwork, ctx.gptq.percdamp);
+
+        let t0 = Instant::now();
+        let scales = if self.stage1 {
+            stage1::stage1_init(&wwork, &hd, spec)
+        } else {
+            stage1::baseline_init(&wwork, spec)
+        };
+        let time_scales = t0.elapsed();
+
+        let t1 = Instant::now();
+        let u = crate::tensor::cholesky_inverse_upper(&hd)?;
+        let mut quantized = gptq::gptq_sweep(&wwork, &u, &scales, spec, &ctx.gptq);
+        let time_gptq = t1.elapsed();
+
+        let loss_before_stage2 = metrics::layer_loss(w, &quantized.dequantize(), &hd);
+
+        let t2 = Instant::now();
+        if self.stage2 {
+            stage2::refine_quantized_linear(w, &mut quantized, &hd, r, &ctx.stage2);
+        }
+        let time_stage2 = t2.elapsed();
+
+        let layer_loss = if self.stage2 {
+            metrics::layer_loss(w, &quantized.dequantize(), &hd)
+        } else {
+            loss_before_stage2
+        };
+
+        Ok(LayerQuantResult {
+            quantized,
+            layer_loss,
+            loss_before_stage2,
+            time_scales,
+            time_gptq,
+            time_stage2,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn correlated_problem(out: usize, inp: usize, seed: u64) -> (Matrix, Matrix) {
+        let mut rng = Rng::new(seed);
+        let w = Matrix::randn(out, inp, 1.0, &mut rng);
+        let t = inp * 6;
+        let mut x = Matrix::zeros(inp, t);
+        for c in 0..t {
+            let mut prev = 0.0f32;
+            for r in 0..inp {
+                let energy = if r % 8 == 0 { 5.0 } else { 0.4 };
+                let v = 0.5 * prev + rng.normal() as f32 * energy;
+                x[(r, c)] = v;
+                prev = v;
+            }
+        }
+        let mut h = x.matmul_bt(&x);
+        h.scale_inplace(1.0 / t as f32);
+        (w, h)
+    }
+
+    #[test]
+    fn registry_resolves_every_name_consistently() {
+        for name in QUANTIZER_NAMES {
+            let q = resolve_quantizer(name).unwrap_or_else(|| panic!("{name} missing"));
+            assert_eq!(q.name(), name, "registered name must match trait name");
+        }
+        assert!(resolve_quantizer("nope").is_none());
+        assert!(quantizer_names().contains("actorder"));
+    }
+
+    #[test]
+    fn every_quantizer_returns_finite_result() {
+        let (w, h) = correlated_problem(8, 64, 1);
+        let spec = QuantSpec::new(2, 32);
+        let ctx = QuantContext::default();
+        for name in QUANTIZER_NAMES {
+            let q = resolve_quantizer(name).unwrap();
+            let res = q.quantize(&w, &h, None, &spec, &ctx).unwrap();
+            assert!(res.layer_loss.is_finite() && res.layer_loss >= 0.0, "{name}");
+            let d = res.quantized.dequantize();
+            assert_eq!((d.rows, d.cols), (8, 64), "{name}");
+            assert!(d.data.iter().all(|v| v.is_finite()), "{name}");
+        }
+    }
+
+    #[test]
+    fn trait_gptq_matches_direct_sweep() {
+        // The trait path must be the same algorithm as calling the stages
+        // directly — identical integers for the stock-GPTQ config.
+        let (w, h) = correlated_problem(6, 48, 2);
+        let spec = QuantSpec::new(3, 16);
+        let ctx = QuantContext::default();
+        let via_trait = TwoStage::GPTQ.quantize(&w, &h, None, &spec, &ctx).unwrap();
+        let direct = {
+            let mut wwork = w.clone();
+            let hd = gptq::prepare_hessian(&h, &mut wwork, ctx.gptq.percdamp);
+            let scales = stage1::baseline_init(&wwork, &spec);
+            let u = crate::tensor::cholesky_inverse_upper(&hd).unwrap();
+            gptq::gptq_sweep(&wwork, &u, &scales, &spec, &ctx.gptq)
+        };
+        for r in 0..w.rows {
+            assert_eq!(
+                via_trait.quantized.qweight[r].unpack(),
+                direct.qweight[r].unpack(),
+                "row {r}"
+            );
+        }
+    }
+
+    #[test]
+    fn ours_beats_gptq_through_the_trait() {
+        let (w, h) = correlated_problem(16, 64, 3);
+        let spec = QuantSpec::new(2, 32);
+        let ctx = QuantContext::default();
+        let gptq_loss = TwoStage::GPTQ.quantize(&w, &h, None, &spec, &ctx).unwrap().layer_loss;
+        let ours_loss = TwoStage::OURS.quantize(&w, &h, None, &spec, &ctx).unwrap().layer_loss;
+        assert!(
+            ours_loss < gptq_loss,
+            "ours {ours_loss} should beat gptq {gptq_loss}"
+        );
+    }
+
+    #[test]
+    fn deviation_flag_only_on_stage2() {
+        assert!(!Rtn.wants_deviation());
+        assert!(!Awq.wants_deviation());
+        assert!(!ActOrderGptq.wants_deviation());
+        assert!(!TwoStage::GPTQ.wants_deviation());
+        assert!(!TwoStage::STAGE1_ONLY.wants_deviation());
+        assert!(TwoStage::STAGE2_ONLY.wants_deviation());
+        assert!(TwoStage::OURS.wants_deviation());
+    }
+}

@@ -44,6 +44,15 @@ impl AwqQuant {
         }
         m
     }
+
+    /// Lossless conversion into the unified [`QuantizedLinear`]: the channel
+    /// scales become the layer's `channel_scales` divisors, so
+    /// `.dequantize()` lands bit-for-bit on [`Self::dequantize_unscaled`].
+    pub fn into_quantized_linear(self) -> QuantizedLinear {
+        let mut q = self.quantized;
+        q.channel_scales = Some(self.channel_scales);
+        q
+    }
 }
 
 fn scale_columns(w: &Matrix, s: &[f32]) -> Matrix {
@@ -139,6 +148,17 @@ mod tests {
         let ws = scale_columns(&w, &s);
         assert!(ws.max_abs_diff(&w) < 1e-6);
         let _ = mean; // α = 0 ⇒ all scales 1 regardless of normalization
+    }
+
+    #[test]
+    fn conversion_to_quantized_linear_is_lossless() {
+        let (w, h) = skewed(8, 32, 5);
+        let spec = QuantSpec::new(2, 16);
+        let awq = awq_quantize(&w, &h, &spec);
+        let reference = awq.dequantize_unscaled();
+        let unified = awq.into_quantized_linear();
+        assert!(unified.channel_scales.is_some());
+        assert_eq!(unified.dequantize().max_abs_diff(&reference), 0.0);
     }
 
     #[test]

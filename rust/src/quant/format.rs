@@ -80,6 +80,17 @@ impl PackedInts {
 /// A fully quantized linear layer: packed integers + per-(row, group)
 /// scales/zero-points. Rows are output channels; grouping runs along the
 /// input dimension, exactly as in the paper's Fig. 1.
+///
+/// Two optional pieces of deployment metadata let every registered
+/// quantizer express its output losslessly in this one type (the same
+/// extensions real formats carry — AutoGPTQ's `g_idx`, AWQ's folded
+/// scales):
+///
+/// * `perm` — act-order column gather: stored column `j` is original
+///   column `perm[j]`; groups run over the *stored* (permuted) order.
+/// * `channel_scales` — AWQ per-input-channel divisors applied after the
+///   grid dequant (`W ≈ dequant(Q) / s` column-wise), indexed by stored
+///   column.
 #[derive(Clone, Debug)]
 pub struct QuantizedLinear {
     pub rows: usize,
@@ -92,6 +103,11 @@ pub struct QuantizedLinear {
     pub scales: Matrix,
     /// `[rows, n_groups]` integer zero-points (stored as f32).
     pub zeros: Matrix,
+    /// Act-order gather: original column of stored column `j` (None =
+    /// natural order).
+    pub perm: Option<Vec<u32>>,
+    /// AWQ channel divisors (None = no channel scaling).
+    pub channel_scales: Option<Vec<f32>>,
 }
 
 impl QuantizedLinear {
@@ -114,18 +130,37 @@ impl QuantizedLinear {
         assert_eq!(scales.cols, cols.div_ceil(group_size));
         assert_eq!((zeros.rows, zeros.cols), (scales.rows, scales.cols));
         let qweight = ints.iter().map(|row| PackedInts::pack(row, bits)).collect();
-        QuantizedLinear { rows, cols, bits, group_size, qweight, scales, zeros }
+        QuantizedLinear {
+            rows,
+            cols,
+            bits,
+            group_size,
+            qweight,
+            scales,
+            zeros,
+            perm: None,
+            channel_scales: None,
+        }
     }
 
-    /// Dequantize one row into `out`.
+    /// Dequantize one row into `out` (original column order: the act-order
+    /// gather and AWQ channel divisors, when present, are applied here).
     pub fn dequant_row_into(&self, r: usize, out: &mut [f32]) {
         let g = self.group_size;
         let srow = self.scales.row(r);
         let zrow = self.zeros.row(r);
         let q = &self.qweight[r];
-        for c in 0..self.cols {
-            let gi = c / g;
-            out[c] = srow[gi] * (q.get(c) as f32 - zrow[gi]);
+        for j in 0..self.cols {
+            let gi = j / g;
+            let mut v = srow[gi] * (q.get(j) as f32 - zrow[gi]);
+            if let Some(cs) = &self.channel_scales {
+                v /= cs[j];
+            }
+            let dst = match &self.perm {
+                Some(p) => p[j] as usize,
+                None => j,
+            };
+            out[dst] = v;
         }
     }
 
@@ -141,11 +176,13 @@ impl QuantizedLinear {
         m
     }
 
-    /// Total payload bytes (packed ints + scales + zeros), for the
-    /// compression-ratio report.
+    /// Total payload bytes (packed ints + scales + zeros + optional
+    /// permutation / channel scales), for the compression-ratio report.
     pub fn nbytes(&self) -> usize {
         self.qweight.iter().map(|p| p.nbytes()).sum::<usize>()
             + (self.scales.data.len() + self.zeros.data.len()) * 4
+            + self.perm.as_ref().map_or(0, |p| p.len() * 4)
+            + self.channel_scales.as_ref().map_or(0, |c| c.len() * 4)
     }
 
     /// Effective bits per weight including scale/zero overhead.
@@ -204,6 +241,26 @@ mod tests {
         assert_eq!(d.row(0), &[-0.5, 0.0, 0.0, 1.0]);
         // row1: s=2,z=0 -> 6,4 ; s=0.25,z=1 -> 0, -0.25
         assert_eq!(d.row(1), &[6.0, 4.0, 0.0, -0.25]);
+    }
+
+    #[test]
+    fn perm_and_channel_scales_change_dequant() {
+        // 1 row, 4 cols, group=2, 2 bits; s=1, z=0 → dequant == ints.
+        let ints = vec![vec![0u8, 1, 2, 3]];
+        let scales = Matrix::from_vec(1, 2, vec![1.0, 1.0]);
+        let zeros = Matrix::from_vec(1, 2, vec![0.0, 0.0]);
+        let mut q = QuantizedLinear::from_ints(&ints, 2, 2, scales, zeros);
+        assert_eq!(q.dequantize().row(0), &[0.0, 1.0, 2.0, 3.0]);
+        let plain_bytes = q.nbytes();
+
+        // reversal gather: stored column j goes to original column 3-j
+        q.perm = Some(vec![3, 2, 1, 0]);
+        assert_eq!(q.dequantize().row(0), &[3.0, 2.0, 1.0, 0.0]);
+
+        // channel divisors apply per stored column, before the gather
+        q.channel_scales = Some(vec![1.0, 1.0, 2.0, 4.0]);
+        assert_eq!(q.dequantize().row(0), &[0.75, 1.0, 1.0, 0.0]);
+        assert_eq!(q.nbytes(), plain_bytes + 4 * 4 + 4 * 4);
     }
 
     #[test]

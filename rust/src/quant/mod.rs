@@ -1,10 +1,31 @@
-//! The paper's algorithm and its baselines.
+//! The paper's algorithm and its baselines, behind one unified API.
 //!
-//! * [`format`] — grouped, bit-packed integer weight storage (INT2/3/4/8).
+//! Every algorithm implements the [`LayerQuantizer`] trait (weight matrix +
+//! Hessian + optional upstream-error matrix + [`QuantSpec`] in, a
+//! [`LayerQuantResult`] carrying a [`QuantizedLinear`] and phase timings
+//! out) and is registered by name — `rtn`, `awq`, `actorder`, `gptq`,
+//! `stage1`, `stage2`, `ours` — via [`resolve_quantizer`]. A [`QuantPlan`]
+//! maps `(layer, kind)` patterns to a quantizer + spec, making
+//! mixed-precision and mixed-method runs first-class: the string
+//! `ours:bits=2,group=64;wv,wo=bits4;l0=awq` (or the equivalent
+//! [`PlanRule`] builder calls) quantizes everything 2-bit with the paper's
+//! method except 4-bit `wv`/`wo` and AWQ for layer 0.
+//!
+//! Module map:
+//!
+//! * [`api`] — the [`LayerQuantizer`] trait, its implementations
+//!   ([`Rtn`], [`Awq`], [`ActOrderGptq`], [`TwoStage`]) and the registry.
+//! * [`plan`] — [`QuantPlan`]: per-layer quantizer/spec rules + the plan
+//!   string grammar.
+//! * [`format`] — grouped, bit-packed integer weight storage (INT2/3/4/8),
+//!   with optional act-order permutation and AWQ channel divisors so every
+//!   method's output round-trips losslessly through one type.
 //! * [`scale`] — uniform affine quantization primitives + β-grid search
 //!   under either the L2 metric (stock GPTQ) or the `H_ii` metric
 //!   (the paper's Stage 1).
-//! * [`rtn`] — round-to-nearest baseline.
+//! * [`rtn`] — round-to-nearest inner loop.
+//! * [`awq`] — activation-aware channel scaling (AWQ-lite) inner loop.
+//! * [`actorder`] — act-order (`desc_act`) permutation around the sweep.
 //! * [`gptq`] — the GPTQ inner loop (Hessian-compensated sequential
 //!   quantization) shared by the baseline and the proposed method.
 //! * [`stage1`] — input-aware group-scale initialization (Eq. 4).
@@ -14,118 +35,22 @@
 //!   reported by benches.
 
 pub mod actorder;
+pub mod api;
 pub mod awq;
 pub mod format;
 pub mod gptq;
 pub mod metrics;
+pub mod plan;
 pub mod rtn;
 pub mod scale;
 pub mod stage1;
 pub mod stage2;
 
+pub use api::{
+    quantizer_names, resolve_quantizer, ActOrderGptq, Awq, LayerQuantResult, LayerQuantizer,
+    QuantContext, Rtn, TwoStage, QUANTIZER_NAMES,
+};
 pub use format::{PackedInts, QuantizedLinear};
 pub use gptq::{gptq_quantize, GptqConfig};
-pub use scale::{GroupScales, ScaleMetric, QuantSpec};
-
-/// Which scale strategy to use around the GPTQ inner loop — selects between
-/// the stock baseline and the paper's method (and the ablation cells of
-/// Table 3).
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub struct MethodConfig {
-    /// Stage 1: input-aware (H_ii-weighted) grid init instead of L2 grid.
-    pub stage1: bool,
-    /// Stage 2: CD refinement of scales after the GPTQ sweep.
-    pub stage2: bool,
-}
-
-/// Everything measured while quantizing one linear layer.
-#[derive(Clone, Debug)]
-pub struct LayerQuantResult {
-    pub quantized: QuantizedLinear,
-    /// Layer-wise reconstruction loss (Eq. 3) on the damped Hessian.
-    pub layer_loss: f64,
-    /// Same, before stage 2 ran (equal to `layer_loss` if stage2 is off).
-    pub loss_before_stage2: f64,
-    /// Wall-clock per phase.
-    pub time_scales: std::time::Duration,
-    pub time_gptq: std::time::Duration,
-    pub time_stage2: std::time::Duration,
-}
-
-/// Quantize one linear layer end-to-end per the paper:
-///
-/// 1. group scales — stock L2 grid (baseline) or Stage-1 input-aware grid;
-/// 2. the GPTQ compensated sweep with those scales frozen;
-/// 3. optional Stage-2 CD refinement of the scales (error-aware via `r`).
-///
-/// `h` is the raw accumulated Hessian `E[XXᵀ]`; damping is applied here so
-/// both the sweep and the refinement use the same damped matrix (as in the
-/// paper, where stage 2 reuses GPTQ's Hessian).
-pub fn quantize_layer(
-    w: &crate::tensor::Matrix,
-    h: &crate::tensor::Matrix,
-    r: Option<&crate::tensor::Matrix>,
-    spec: &QuantSpec,
-    method: MethodConfig,
-    gptq_cfg: &GptqConfig,
-    stage2_cfg: &stage2::Stage2Config,
-) -> crate::Result<LayerQuantResult> {
-    use std::time::Instant;
-    let mut wwork = w.clone();
-    let hd = gptq::prepare_hessian(h, &mut wwork, gptq_cfg.percdamp);
-
-    let t0 = Instant::now();
-    let scales = if method.stage1 {
-        stage1::stage1_init(&wwork, &hd, spec)
-    } else {
-        stage1::baseline_init(&wwork, spec)
-    };
-    let time_scales = t0.elapsed();
-
-    let t1 = Instant::now();
-    let u = crate::tensor::cholesky_inverse_upper(&hd)?;
-    let mut quantized = gptq::gptq_sweep(&wwork, &u, &scales, spec, gptq_cfg);
-    let time_gptq = t1.elapsed();
-
-    let loss_before_stage2 = metrics::layer_loss(w, &quantized.dequantize(), &hd);
-
-    let t2 = Instant::now();
-    if method.stage2 {
-        stage2::refine_quantized_linear(w, &mut quantized, &hd, r, stage2_cfg);
-    }
-    let time_stage2 = t2.elapsed();
-
-    let layer_loss = if method.stage2 {
-        metrics::layer_loss(w, &quantized.dequantize(), &hd)
-    } else {
-        loss_before_stage2
-    };
-
-    Ok(LayerQuantResult {
-        quantized,
-        layer_loss,
-        loss_before_stage2,
-        time_scales,
-        time_gptq,
-        time_stage2,
-    })
-}
-
-impl MethodConfig {
-    /// Stock GPTQ baseline.
-    pub const GPTQ: MethodConfig = MethodConfig { stage1: false, stage2: false };
-    /// The paper's full method.
-    pub const OURS: MethodConfig = MethodConfig { stage1: true, stage2: true };
-    /// Ablation rows of Table 3.
-    pub const STAGE1_ONLY: MethodConfig = MethodConfig { stage1: true, stage2: false };
-    pub const STAGE2_ONLY: MethodConfig = MethodConfig { stage1: false, stage2: true };
-
-    pub fn label(&self) -> &'static str {
-        match (self.stage1, self.stage2) {
-            (false, false) => "GPTQ",
-            (true, false) => "ours(s1)",
-            (false, true) => "ours(s2)",
-            (true, true) => "ours",
-        }
-    }
-}
+pub use plan::{PlanRule, QuantPlan, SpecPatch};
+pub use scale::{GroupScales, QuantSpec, ScaleMetric};

@@ -1,0 +1,523 @@
+//! [`QuantPlan`] — per-layer quantizer/spec assignment.
+//!
+//! A plan is a default `(quantizer, bits, group)` plus an ordered list of
+//! rules. Each rule selects `(layer, kind)` pairs and patches the quantizer
+//! and/or the spec; rules apply in order, later rules override earlier ones,
+//! so mixed-precision runs ("4-bit `wv`/`wo`, 2-bit everything else, AWQ for
+//! layer 0") are first-class.
+//!
+//! ## String grammar
+//!
+//! ```text
+//! plan    := head (';' rule)*
+//! head    := NAME [':' opt (',' opt)*]       opt  := 'bits=' N | 'group=' N
+//! rule    := sel (',' sel)* '=' act ('+' act)*
+//! sel     := 'l' N            -- layer index
+//!          | 'wq'|'wk'|'wv'|'wo'|'w1'|'w2'|'w3'
+//!          | '*'              -- every linear
+//! act     := NAME | 'bits' N | 'group' N
+//! ```
+//!
+//! Example: `ours:bits=2,group=64;wv,wo=bits4;l0=awq` quantizes everything
+//! 2-bit with the paper's method, except `wv`/`wo` at 4 bits and all of
+//! layer 0 with AWQ. Within one rule, layer selectors and kind selectors
+//! combine with AND (`l0,wv=rtn` is layer 0's `wv` only); listing several
+//! selectors of the same axis unions them.
+
+use super::api::{quantizer_names, resolve_quantizer, LayerQuantizer};
+use super::scale::QuantSpec;
+use crate::model::LinearKind;
+use anyhow::{anyhow, bail};
+use std::fmt;
+use std::sync::Arc;
+
+/// Optional overrides a rule applies to the effective [`QuantSpec`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct SpecPatch {
+    pub bits: Option<u8>,
+    pub group: Option<usize>,
+}
+
+impl SpecPatch {
+    pub fn is_empty(&self) -> bool {
+        self.bits.is_none() && self.group.is_none()
+    }
+}
+
+/// One plan rule: a `(layer, kind)` selector plus the patch it applies.
+/// Empty `layers`/`kinds` match every layer/kind respectively.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct PlanRule {
+    pub layers: Vec<usize>,
+    pub kinds: Vec<LinearKind>,
+    pub quantizer: Option<String>,
+    pub patch: SpecPatch,
+}
+
+impl PlanRule {
+    /// A rule matching every linear; narrow it with the builder methods.
+    pub fn any() -> PlanRule {
+        PlanRule::default()
+    }
+
+    pub fn layer(mut self, layer: usize) -> PlanRule {
+        self.layers.push(layer);
+        self
+    }
+
+    pub fn kind(mut self, kind: LinearKind) -> PlanRule {
+        self.kinds.push(kind);
+        self
+    }
+
+    pub fn quantizer(mut self, name: &str) -> PlanRule {
+        self.quantizer = Some(name.to_string());
+        self
+    }
+
+    pub fn bits(mut self, bits: u8) -> PlanRule {
+        self.patch.bits = Some(bits);
+        self
+    }
+
+    pub fn group(mut self, group: usize) -> PlanRule {
+        self.patch.group = Some(group);
+        self
+    }
+
+    /// Does this rule apply to `(layer, kind)`?
+    pub fn matches(&self, layer: usize, kind: LinearKind) -> bool {
+        (self.layers.is_empty() || self.layers.contains(&layer))
+            && (self.kinds.is_empty() || self.kinds.contains(&kind))
+    }
+}
+
+/// An ordered per-layer quantization plan. See the module docs for the
+/// string grammar; build programmatically with [`QuantPlan::uniform`] +
+/// [`QuantPlan::with_rule`].
+#[derive(Clone, Debug, PartialEq)]
+pub struct QuantPlan {
+    /// Default quantizer name (must be registered).
+    pub quantizer: String,
+    /// Default bit width.
+    pub bits: u8,
+    /// Default group size.
+    pub group: usize,
+    pub rules: Vec<PlanRule>,
+}
+
+fn kind_from_label(s: &str) -> Option<LinearKind> {
+    LinearKind::ALL.iter().copied().find(|k| k.label() == s)
+}
+
+fn parse_bits(v: &str) -> crate::Result<u8> {
+    let b: u8 = v
+        .parse()
+        .map_err(|_| anyhow!("bits must be an integer in 1..=8, got '{v}'"))?;
+    if !(1..=8).contains(&b) {
+        bail!("bits must be in 1..=8, got {b}");
+    }
+    Ok(b)
+}
+
+fn parse_group(v: &str) -> crate::Result<usize> {
+    let g: usize = v
+        .parse()
+        .map_err(|_| anyhow!("group must be a positive integer, got '{v}'"))?;
+    if g == 0 {
+        bail!("group must be > 0");
+    }
+    Ok(g)
+}
+
+impl QuantPlan {
+    /// Uniform plan: one quantizer + spec for every linear. (The effective
+    /// spec is re-derived as `QuantSpec::new(bits, group)` at resolve time,
+    /// so custom `grid_points`/`beta_min` tweaks do not carry through a
+    /// plan — they are per-call knobs, not plan state.)
+    pub fn uniform(quantizer: &str, spec: QuantSpec) -> QuantPlan {
+        QuantPlan {
+            quantizer: quantizer.to_string(),
+            bits: spec.bits,
+            group: spec.group_size,
+            rules: Vec::new(),
+        }
+    }
+
+    /// Append a rule (builder style). Rules apply in insertion order; later
+    /// rules override earlier ones where both match.
+    pub fn with_rule(mut self, rule: PlanRule) -> QuantPlan {
+        self.rules.push(rule);
+        self
+    }
+
+    /// Parse a plan string with `bits`/`group` falling back to the given
+    /// defaults when the head clause does not set them.
+    pub fn parse_with_defaults(
+        s: &str,
+        default_bits: u8,
+        default_group: usize,
+    ) -> crate::Result<QuantPlan> {
+        let s = s.trim();
+        if s.is_empty() {
+            bail!("empty plan string (expected e.g. 'ours' or 'ours:bits=2,group=64;wv,wo=bits4')");
+        }
+        let mut clauses = s.split(';');
+        let head = clauses.next().unwrap().trim();
+        let (name, opts) = match head.split_once(':') {
+            Some((n, o)) => (n.trim(), Some(o)),
+            None => (head, None),
+        };
+        if resolve_quantizer(name).is_none() {
+            bail!("unknown quantizer '{name}' (available: {})", quantizer_names());
+        }
+        let mut plan = QuantPlan {
+            quantizer: name.to_string(),
+            bits: default_bits,
+            group: default_group,
+            rules: Vec::new(),
+        };
+        if let Some(opts) = opts {
+            for kv in opts.split(',') {
+                let kv = kv.trim();
+                let (k, v) = kv.split_once('=').ok_or_else(|| {
+                    anyhow!("plan option '{kv}' must be key=value (bits=N or group=N)")
+                })?;
+                match k.trim() {
+                    "bits" => plan.bits = parse_bits(v.trim())?,
+                    "group" => plan.group = parse_group(v.trim())?,
+                    other => bail!("unknown plan option '{other}' (expected bits or group)"),
+                }
+            }
+        }
+        for (ri, clause) in clauses.enumerate() {
+            let clause = clause.trim();
+            if clause.is_empty() {
+                continue; // tolerate a trailing ';'
+            }
+            let (sel, act) = clause.split_once('=').ok_or_else(|| {
+                anyhow!(
+                    "rule {} ('{clause}') must be selector=action, e.g. 'wv,wo=bits4' or 'l0=awq'",
+                    ri + 1
+                )
+            })?;
+            let mut rule = PlanRule::any();
+            for atom in sel.split(',') {
+                let atom = atom.trim();
+                if atom.is_empty() {
+                    bail!("rule {}: empty selector atom", ri + 1);
+                }
+                if atom == "*" {
+                    continue; // matches everything
+                } else if let Some(kind) = kind_from_label(atom) {
+                    rule.kinds.push(kind);
+                } else if let Some(rest) = atom.strip_prefix('l') {
+                    let idx: usize = rest.parse().map_err(|_| {
+                        anyhow!("rule {}: bad layer selector '{atom}' (use l<N>, e.g. l0)", ri + 1)
+                    })?;
+                    rule.layers.push(idx);
+                } else {
+                    bail!(
+                        "rule {}: unknown selector '{atom}' (use wq|wk|wv|wo|w1|w2|w3, l<N> or *)",
+                        ri + 1
+                    );
+                }
+            }
+            for atom in act.split('+') {
+                let atom = atom.trim();
+                if atom.is_empty() {
+                    bail!("rule {}: empty action atom", ri + 1);
+                }
+                if resolve_quantizer(atom).is_some() {
+                    rule.quantizer = Some(atom.to_string());
+                } else if let Some(v) = atom.strip_prefix("bits") {
+                    rule.patch.bits = Some(parse_bits(v.trim_start_matches('='))?);
+                } else if let Some(v) = atom.strip_prefix("group") {
+                    rule.patch.group = Some(parse_group(v.trim_start_matches('='))?);
+                } else {
+                    bail!(
+                        "rule {}: unknown action '{atom}' (use a quantizer name [{}], bits<N> or group<N>)",
+                        ri + 1,
+                        quantizer_names()
+                    );
+                }
+            }
+            if rule.quantizer.is_none() && rule.patch.is_empty() {
+                bail!("rule {} has no action", ri + 1);
+            }
+            plan.rules.push(rule);
+        }
+        plan.validate()?;
+        Ok(plan)
+    }
+
+    /// Parse with the repo-default INT2 / group-64 spec as fallback.
+    pub fn parse(s: &str) -> crate::Result<QuantPlan> {
+        Self::parse_with_defaults(s, 2, 64)
+    }
+
+    /// Check every referenced quantizer name and spec value; called by
+    /// [`Self::parse_with_defaults`] and by the pipeline before a run, so
+    /// hand-built plans fail fast too.
+    pub fn validate(&self) -> crate::Result<()> {
+        let check_name = |name: &str| -> crate::Result<()> {
+            if resolve_quantizer(name).is_none() {
+                bail!("unknown quantizer '{name}' (available: {})", quantizer_names());
+            }
+            Ok(())
+        };
+        check_name(&self.quantizer)?;
+        if !(1..=8).contains(&self.bits) {
+            bail!("bits must be in 1..=8, got {}", self.bits);
+        }
+        if self.group == 0 {
+            bail!("group must be > 0");
+        }
+        for (ri, rule) in self.rules.iter().enumerate() {
+            if let Some(name) = &rule.quantizer {
+                check_name(name)?;
+            }
+            if let Some(b) = rule.patch.bits {
+                if !(1..=8).contains(&b) {
+                    bail!("rule {}: bits must be in 1..=8, got {b}", ri + 1);
+                }
+            }
+            if rule.patch.group == Some(0) {
+                bail!("rule {}: group must be > 0", ri + 1);
+            }
+            if rule.quantizer.is_none() && rule.patch.is_empty() {
+                bail!("rule {} has no action", ri + 1);
+            }
+        }
+        Ok(())
+    }
+
+    /// The effective `(quantizer, spec)` for one linear.
+    pub fn resolve(
+        &self,
+        layer: usize,
+        kind: LinearKind,
+    ) -> crate::Result<(Arc<dyn LayerQuantizer>, QuantSpec)> {
+        let mut name = self.quantizer.as_str();
+        let mut bits = self.bits;
+        let mut group = self.group;
+        for rule in &self.rules {
+            if rule.matches(layer, kind) {
+                if let Some(q) = &rule.quantizer {
+                    name = q;
+                }
+                if let Some(b) = rule.patch.bits {
+                    bits = b;
+                }
+                if let Some(g) = rule.patch.group {
+                    group = g;
+                }
+            }
+        }
+        let q = resolve_quantizer(name)
+            .ok_or_else(|| anyhow!("unknown quantizer '{name}' (available: {})", quantizer_names()))?;
+        Ok((q, QuantSpec::new(bits, group)))
+    }
+
+    /// True when no rule ever overrides the defaults.
+    pub fn is_uniform(&self) -> bool {
+        self.rules.is_empty()
+    }
+}
+
+impl fmt::Display for QuantPlan {
+    /// Canonical plan string; `parse(display(p)) == p` (property-tested).
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:bits={},group={}", self.quantizer, self.bits, self.group)?;
+        for rule in &self.rules {
+            write!(f, ";")?;
+            let mut first = true;
+            let mut sep = |f: &mut fmt::Formatter<'_>| -> fmt::Result {
+                if !first {
+                    write!(f, ",")?;
+                }
+                first = false;
+                Ok(())
+            };
+            if rule.layers.is_empty() && rule.kinds.is_empty() {
+                write!(f, "*")?;
+            } else {
+                for l in &rule.layers {
+                    sep(f)?;
+                    write!(f, "l{l}")?;
+                }
+                for k in &rule.kinds {
+                    sep(f)?;
+                    write!(f, "{}", k.label())?;
+                }
+            }
+            write!(f, "=")?;
+            let mut first_act = true;
+            if let Some(q) = &rule.quantizer {
+                write!(f, "{q}")?;
+                first_act = false;
+            }
+            if let Some(b) = rule.patch.bits {
+                if !first_act {
+                    write!(f, "+")?;
+                }
+                write!(f, "bits{b}")?;
+                first_act = false;
+            }
+            if let Some(g) = rule.patch.group {
+                if !first_act {
+                    write!(f, "+")?;
+                }
+                write!(f, "group{g}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::api::QUANTIZER_NAMES;
+    use crate::util::proptest::{check, prop_assert};
+
+    #[test]
+    fn bare_name_is_a_valid_plan() {
+        let p = QuantPlan::parse_with_defaults("ours", 2, 64).unwrap();
+        assert_eq!(p.quantizer, "ours");
+        assert_eq!((p.bits, p.group), (2, 64));
+        assert!(p.is_uniform());
+    }
+
+    #[test]
+    fn head_options_override_defaults() {
+        let p = QuantPlan::parse_with_defaults("gptq:bits=4,group=32", 2, 64).unwrap();
+        assert_eq!((p.bits, p.group), (4, 32));
+    }
+
+    #[test]
+    fn issue_example_parses_and_resolves() {
+        let p = QuantPlan::parse("ours:bits=2,group=64;wv,wo=bits4;l0=awq").unwrap();
+        assert_eq!(p.rules.len(), 2);
+        // wv at layer 3: 4 bits, ours
+        let (q, spec) = p.resolve(3, LinearKind::Wv).unwrap();
+        assert_eq!(q.name(), "ours");
+        assert_eq!((spec.bits, spec.group_size), (4, 64));
+        // w1 at layer 3: default 2-bit ours
+        let (q, spec) = p.resolve(3, LinearKind::W1).unwrap();
+        assert_eq!(q.name(), "ours");
+        assert_eq!(spec.bits, 2);
+        // layer 0 wv: awq (later rule) at 4 bits (earlier rule)
+        let (q, spec) = p.resolve(0, LinearKind::Wv).unwrap();
+        assert_eq!(q.name(), "awq");
+        assert_eq!(spec.bits, 4);
+    }
+
+    #[test]
+    fn and_semantics_within_a_rule() {
+        let p = QuantPlan::parse("gptq:bits=2,group=64;l1,wo=rtn").unwrap();
+        assert_eq!(p.resolve(1, LinearKind::Wo).unwrap().0.name(), "rtn");
+        assert_eq!(p.resolve(1, LinearKind::Wq).unwrap().0.name(), "gptq");
+        assert_eq!(p.resolve(0, LinearKind::Wo).unwrap().0.name(), "gptq");
+    }
+
+    #[test]
+    fn star_selector_matches_everything() {
+        let p = QuantPlan::parse("gptq:bits=4,group=64;*=bits3").unwrap();
+        assert_eq!(p.resolve(5, LinearKind::W2).unwrap().1.bits, 3);
+    }
+
+    #[test]
+    fn builder_matches_string_form() {
+        let built = QuantPlan::uniform("ours", QuantSpec::new(2, 64))
+            .with_rule(PlanRule::any().kind(LinearKind::Wv).kind(LinearKind::Wo).bits(4))
+            .with_rule(PlanRule::any().layer(0).quantizer("awq"));
+        let parsed = QuantPlan::parse("ours:bits=2,group=64;wv,wo=bits4;l0=awq").unwrap();
+        assert_eq!(built, parsed);
+    }
+
+    #[test]
+    fn bad_strings_give_actionable_errors() {
+        let cases: [(&str, &str); 8] = [
+            ("", "empty plan"),
+            ("frobnicate", "unknown quantizer"),
+            ("ours:bits=12", "bits must be in 1..=8"),
+            ("ours:speed=9", "unknown plan option"),
+            ("ours;wv", "selector=action"),
+            ("ours;zz=bits4", "unknown selector"),
+            ("ours;wv=frobnicate", "unknown action"),
+            ("ours;lx=rtn", "bad layer selector"),
+        ];
+        for (s, want) in cases {
+            let err = QuantPlan::parse(s).unwrap_err().to_string();
+            assert!(err.contains(want), "'{s}' → '{err}' (wanted '{want}')");
+        }
+    }
+
+    #[test]
+    fn mixed_plan_reports_non_uniform() {
+        let p = QuantPlan::parse("ours;wv=bits4").unwrap();
+        assert!(!p.is_uniform());
+    }
+
+    #[test]
+    fn validate_rejects_hand_built_garbage() {
+        let mut p = QuantPlan::uniform("ours", QuantSpec::new(2, 64));
+        p.quantizer = "nope".into();
+        assert!(p.validate().is_err());
+        let p2 = QuantPlan::uniform("ours", QuantSpec::new(2, 64))
+            .with_rule(PlanRule::any().kind(LinearKind::Wq));
+        assert!(p2.validate().is_err(), "no-op rule must be rejected");
+    }
+
+    #[test]
+    fn prop_display_parse_roundtrip() {
+        check("plan display→parse is identity", 80, |g| {
+            let quantizer = QUANTIZER_NAMES[g.usize_in(0, QUANTIZER_NAMES.len() - 1)];
+            let bits = g.usize_in(1, 8) as u8;
+            let group = [16, 32, 64, 128][g.usize_in(0, 3)];
+            let mut plan = QuantPlan::uniform(quantizer, QuantSpec::new(bits, group));
+            let n_rules = g.usize_in(0, 3);
+            for _ in 0..n_rules {
+                let mut rule = PlanRule::any();
+                for _ in 0..g.usize_in(0, 2) {
+                    rule = rule.layer(g.usize_in(0, 5));
+                }
+                for _ in 0..g.usize_in(0, 2) {
+                    let k = LinearKind::ALL[g.usize_in(0, 6)];
+                    rule = rule.kind(k);
+                }
+                // at least one action, chosen from quantizer/bits/group
+                match g.usize_in(0, 2) {
+                    0 => {
+                        rule = rule
+                            .quantizer(QUANTIZER_NAMES[g.usize_in(0, QUANTIZER_NAMES.len() - 1)]);
+                    }
+                    1 => rule = rule.bits(g.usize_in(1, 8) as u8),
+                    _ => rule = rule.group([16, 32, 64][g.usize_in(0, 2)]),
+                }
+                if g.bool() {
+                    rule = rule.bits(g.usize_in(1, 8) as u8);
+                }
+                plan = plan.with_rule(rule);
+            }
+            let s = plan.to_string();
+            let reparsed = QuantPlan::parse_with_defaults(&s, plan.bits, plan.group)
+                .map_err(|e| format!("'{s}' failed to reparse: {e}"))?;
+            prop_assert(reparsed == plan, &format!("roundtrip mismatch for '{s}'"))
+        });
+    }
+
+    #[test]
+    fn display_is_canonical_fixed_point() {
+        // display(parse(s)) is already canonical: parsing it again changes
+        // nothing, including for shorthand inputs.
+        for s in ["ours", "rtn:group=32", "ours;wv,wo=bits4;l0=awq+group32"] {
+            let p1 = QuantPlan::parse(s).unwrap();
+            let canon = p1.to_string();
+            let p2 = QuantPlan::parse(&canon).unwrap();
+            assert_eq!(p1, p2, "{s}");
+            assert_eq!(canon, p2.to_string(), "{s}");
+        }
+    }
+}

@@ -39,12 +39,22 @@ fn handle_line(batcher: &DynamicBatcher, line: &str) -> String {
         Ok(j) => j,
         Err(e) => return respond_err(&format!("bad json: {e}")),
     };
-    let prompt: Vec<u8> = req
-        .get("prompt")
-        .usize_vec()
-        .into_iter()
-        .map(|t| (t & 0xff) as u8)
-        .collect();
+    let Some(arr) = req.get("prompt").as_arr() else {
+        return respond_err("prompt must be an array of token ids");
+    };
+    // Token ids are byte values; anything else is a client error, not
+    // something to silently truncate.
+    let mut prompt: Vec<u8> = Vec::with_capacity(arr.len());
+    for (i, tok) in arr.iter().enumerate() {
+        match tok.as_f64() {
+            Some(v) if v.fract() == 0.0 && (0.0..=255.0).contains(&v) => prompt.push(v as u8),
+            _ => {
+                return respond_err(&format!(
+                    "prompt[{i}] = {tok} is out of range (token ids are integers 0-255)"
+                ))
+            }
+        }
+    }
     if prompt.is_empty() {
         return respond_err("empty prompt");
     }
@@ -179,6 +189,46 @@ mod tests {
         line.clear();
         reader.read_line(&mut line).unwrap();
         assert!(line.contains("empty prompt"));
+        drop(stream);
+        handle.join().unwrap();
+    }
+
+    #[test]
+    fn out_of_range_tokens_get_errors() {
+        // Regression: ids > 255 used to be silently truncated (`t & 0xff`),
+        // mangling the prompt; they must be rejected with a JSON error.
+        let mut rng = Rng::new(3);
+        let w = Arc::new(ModelWeights::init(Preset::Tiny.config(), &mut rng));
+        let cfg = ServerConfig {
+            addr: "127.0.0.1:0".into(),
+            max_connections: Some(1),
+            ..Default::default()
+        };
+        let (addr, handle) = serve_in_background(w, cfg).unwrap();
+        let mut stream = std::net::TcpStream::connect(addr).unwrap();
+        use std::io::{BufRead, BufReader, Write};
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        let mut line = String::new();
+        for bad in [
+            "{\"prompt\": [10, 300, 20], \"max_new\": 2}\n",
+            "{\"prompt\": [1.5], \"max_new\": 2}\n",
+            "{\"prompt\": [-1], \"max_new\": 2}\n",
+            "{\"prompt\": \"abc\", \"max_new\": 2}\n",
+        ] {
+            stream.write_all(bad.as_bytes()).unwrap();
+            line.clear();
+            reader.read_line(&mut line).unwrap();
+            assert!(line.contains("error"), "{bad} → {line}");
+            assert!(
+                line.contains("out of range") || line.contains("array of token ids"),
+                "{bad} → {line}"
+            );
+        }
+        // a valid request on the same connection still works
+        stream.write_all(b"{\"prompt\": [10, 255, 0], \"max_new\": 3}\n").unwrap();
+        line.clear();
+        reader.read_line(&mut line).unwrap();
+        assert!(line.contains("tokens"), "{line}");
         drop(stream);
         handle.join().unwrap();
     }

@@ -5,7 +5,7 @@
 use tsgo::calib::{calibration_batches, Corpus, CorpusKind};
 use tsgo::model::{store, ModelWeights, Preset};
 use tsgo::pipeline::{quantize_model, PipelineConfig};
-use tsgo::quant::{MethodConfig, QuantSpec};
+use tsgo::quant::QuantSpec;
 use tsgo::util::rng::Rng;
 
 fn setup() -> (ModelWeights, Vec<tsgo::calib::Batch>) {
@@ -35,14 +35,14 @@ fn ablation_ordering_matches_table3() {
     //   GPTQ > stage1-only, GPTQ > stage2-only, full ours is best or tied.
     let (w, calib) = setup();
     let spec = QuantSpec::new(2, 32);
-    let loss = |method: MethodConfig| {
+    let loss = |method: &str| {
         let (_, rep) = quantize_model(&w, &calib, &PipelineConfig::new(spec, method)).unwrap();
         rep.total_loss()
     };
-    let l_gptq = loss(MethodConfig::GPTQ);
-    let l_s1 = loss(MethodConfig::STAGE1_ONLY);
-    let l_s2 = loss(MethodConfig::STAGE2_ONLY);
-    let l_ours = loss(MethodConfig::OURS);
+    let l_gptq = loss("gptq");
+    let l_s1 = loss("stage1");
+    let l_s2 = loss("stage2");
+    let l_ours = loss("ours");
 
     println!("gptq={l_gptq:.4e} s1={l_s1:.4e} s2={l_s2:.4e} ours={l_ours:.4e}");
     assert!(l_s1 < l_gptq, "stage1 should improve on GPTQ: {l_s1} vs {l_gptq}");
@@ -60,13 +60,13 @@ fn int3_losses_below_int2() {
     let l2 = {
         let spec = QuantSpec::new(2, 32);
         let (_, rep) =
-            quantize_model(&w, &calib, &PipelineConfig::new(spec, MethodConfig::OURS)).unwrap();
+            quantize_model(&w, &calib, &PipelineConfig::new(spec, "ours")).unwrap();
         rep.total_loss()
     };
     let l3 = {
         let spec = QuantSpec::new(3, 32);
         let (_, rep) =
-            quantize_model(&w, &calib, &PipelineConfig::new(spec, MethodConfig::OURS)).unwrap();
+            quantize_model(&w, &calib, &PipelineConfig::new(spec, "ours")).unwrap();
         rep.total_loss()
     };
     assert!(l3 < l2, "INT3 must reconstruct better than INT2: {l3} vs {l2}");
@@ -79,7 +79,7 @@ fn smaller_groups_help() {
     let loss_at = |g: usize| {
         let spec = QuantSpec::new(2, g);
         let (_, rep) =
-            quantize_model(&w, &calib, &PipelineConfig::new(spec, MethodConfig::OURS)).unwrap();
+            quantize_model(&w, &calib, &PipelineConfig::new(spec, "ours")).unwrap();
         rep.total_loss()
     };
     let g64 = loss_at(64);
@@ -92,7 +92,7 @@ fn quantized_checkpoint_roundtrip_preserves_eval() {
     let (w, calib) = setup();
     let spec = QuantSpec::new(3, 32);
     let (qm, _) =
-        quantize_model(&w, &calib, &PipelineConfig::new(spec, MethodConfig::OURS)).unwrap();
+        quantize_model(&w, &calib, &PipelineConfig::new(spec, "ours")).unwrap();
 
     let dir = std::env::temp_dir().join("tsgo_pipeline_e2e");
     std::fs::create_dir_all(&dir).unwrap();
@@ -113,7 +113,7 @@ fn error_aware_refinement_helps_downstream_loss() {
     // the error-aware run on the *deviation-aware* objective it optimizes.
     let (w, calib) = setup();
     let spec = QuantSpec::new(2, 32);
-    let mut cfg = PipelineConfig::new(spec, MethodConfig::OURS);
+    let mut cfg = PipelineConfig::new(spec, "ours");
     let (_, rep_aware) = quantize_model(&w, &calib, &cfg).unwrap();
     cfg.error_aware = false;
     let (_, rep_plain) = quantize_model(&w, &calib, &cfg).unwrap();

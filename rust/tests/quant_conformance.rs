@@ -1,0 +1,187 @@
+//! Conformance suite for the unified quantization API: every registered
+//! [`tsgo::quant::LayerQuantizer`] runs through one shared battery —
+//! single-layer invariants (dequant shape/finiteness, ints in range,
+//! pack/unpack round-trip), whole-model pipeline coverage, checkpoint
+//! round-trips that preserve each linear's spec, and the mixed-precision
+//! `QuantPlan` end-to-end path (quantize → save → reload → eval).
+
+use tsgo::calib::{calibration_batches, Batch, Corpus, CorpusKind};
+use tsgo::model::{store, LinearKind, ModelWeights, Preset};
+use tsgo::pipeline::{quantize_model, PipelineConfig};
+use tsgo::quant::{resolve_quantizer, QuantContext, QuantPlan, QuantSpec, QUANTIZER_NAMES};
+use tsgo::tensor::Matrix;
+use tsgo::util::rng::Rng;
+
+fn layer_problem(out: usize, inp: usize, seed: u64) -> (Matrix, Matrix) {
+    let mut rng = Rng::new(seed);
+    let w = Matrix::randn(out, inp, 1.0, &mut rng);
+    let t = inp * 6;
+    let mut x = Matrix::zeros(inp, t);
+    for c in 0..t {
+        let mut prev = 0.0f32;
+        for r in 0..inp {
+            let energy = if r % 7 == 0 { 4.0 } else { 0.5 };
+            let v = 0.6 * prev + rng.normal() as f32 * energy;
+            x[(r, c)] = v;
+            prev = v;
+        }
+    }
+    let mut h = x.matmul_bt(&x);
+    h.scale_inplace(1.0 / t as f32);
+    (w, h)
+}
+
+fn model_setup() -> (ModelWeights, Vec<Batch>) {
+    let cfg = Preset::Tiny.config();
+    let mut rng = Rng::new(4242);
+    let w = ModelWeights::init(cfg, &mut rng);
+    let corpus = Corpus::generate(CorpusKind::SynthWiki, 30_000, 1);
+    let calib = calibration_batches(&corpus.bytes, 4, 32, 2, 3);
+    (w, calib)
+}
+
+fn tmp(name: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join("tsgo_conformance");
+    std::fs::create_dir_all(&dir).unwrap();
+    dir.join(name)
+}
+
+#[test]
+fn every_registered_quantizer_passes_the_layer_battery() {
+    let (w, h) = layer_problem(12, 64, 1);
+    let ctx = QuantContext::default();
+    for name in QUANTIZER_NAMES {
+        let quantizer =
+            resolve_quantizer(name).unwrap_or_else(|| panic!("'{name}' not registered"));
+        assert_eq!(quantizer.name(), name);
+        for bits in [2u8, 4] {
+            let spec = QuantSpec::new(bits, 32);
+            let res = quantizer
+                .quantize(&w, &h, None, &spec, &ctx)
+                .unwrap_or_else(|e| panic!("{name} bits={bits}: {e}"));
+            // losses are finite and ordered
+            assert!(res.layer_loss.is_finite() && res.layer_loss >= 0.0, "{name}");
+            assert!(res.loss_before_stage2.is_finite(), "{name}");
+            // dequant shape + finiteness
+            let d = res.quantized.dequantize();
+            assert_eq!((d.rows, d.cols), (w.rows, w.cols), "{name}");
+            assert!(d.data.iter().all(|v| v.is_finite()), "{name} bits={bits}");
+            // spec recorded on the artifact
+            assert_eq!(res.quantized.bits, bits, "{name}");
+            assert_eq!(res.quantized.group_size, 32, "{name}");
+            // ints in range + pack/unpack round-trip
+            let qmax = (1u32 << bits) - 1;
+            for r in 0..res.quantized.rows {
+                let ints = res.quantized.qweight[r].unpack();
+                assert_eq!(ints.len(), w.cols, "{name} row {r}");
+                assert!(
+                    ints.iter().all(|&v| (v as u32) <= qmax),
+                    "{name} bits={bits} row {r}: int out of range"
+                );
+                let repacked = tsgo::quant::PackedInts::pack(&ints, bits);
+                assert_eq!(repacked, res.quantized.qweight[r], "{name} row {r}");
+            }
+        }
+    }
+}
+
+#[test]
+fn every_registered_quantizer_runs_the_pipeline_and_roundtrips() {
+    let (w, calib) = model_setup();
+    let tokens: Vec<u8> = (0..24).map(|i| (i * 13 % 251) as u8).collect();
+    for name in QUANTIZER_NAMES {
+        let cfg = PipelineConfig::new(QuantSpec::new(4, 32), name);
+        let (qm, report) = quantize_model(&w, &calib, &cfg)
+            .unwrap_or_else(|e| panic!("{name}: pipeline failed: {e}"));
+        assert_eq!(qm.linears.len(), 7 * w.config.n_layers, "{name}");
+        assert!(report.total_loss().is_finite(), "{name}");
+        assert!(report.linears.iter().all(|l| l.quantizer == name), "{name}");
+        assert!(
+            qm.quantizers.values().all(|q| q == name),
+            "{name}: provenance mismatch"
+        );
+
+        // checkpoint round-trip preserves the per-linear spec and weights
+        let path = tmp(&format!("conf_{name}.tsr"));
+        store::save_quantized(&path, &qm).unwrap();
+        let qm2 = store::load_quantized(&path).unwrap();
+        assert_eq!(qm2.quantizers, qm.quantizers, "{name}");
+        for li in 0..w.config.n_layers {
+            for kind in LinearKind::ALL {
+                let a = &qm.linears[&(li, kind.label())];
+                let b = &qm2.linears[&(li, kind.label())];
+                assert_eq!((a.bits, a.group_size), (b.bits, b.group_size), "{name}");
+                assert_eq!(a.perm, b.perm, "{name} perm");
+                assert_eq!(a.channel_scales, b.channel_scales, "{name} channel scales");
+                assert_eq!(
+                    qm.weights.layers[li].linear(kind),
+                    qm2.weights.layers[li].linear(kind),
+                    "{name} layer {li} {}",
+                    kind.label()
+                );
+            }
+        }
+
+        // the reloaded model runs
+        let logits = tsgo::model::forward_logits(&qm2.weights, &tokens);
+        assert!(
+            logits.data.iter().all(|v| v.is_finite()),
+            "{name}: non-finite logits after reload"
+        );
+    }
+}
+
+#[test]
+fn mixed_precision_plan_quantizes_saves_reloads_and_evals() {
+    // The acceptance scenario: two bit-widths (and three quantizers) in one
+    // model, end-to-end through quantize → save → load → eval.
+    let (w, calib) = model_setup();
+    let plan =
+        QuantPlan::parse_with_defaults("ours:bits=4,group=32;wv,wo=bits2;l0=awq", 4, 32).unwrap();
+    let (qm, report) =
+        quantize_model(&w, &calib, &PipelineConfig::from_plan(plan.clone())).unwrap();
+
+    // both bit-widths actually present
+    let bits: std::collections::BTreeSet<u8> = qm.linears.values().map(|q| q.bits).collect();
+    assert_eq!(bits.into_iter().collect::<Vec<_>>(), vec![2, 4]);
+    for ((layer, kind), q) in &qm.linears {
+        let want_bits = if *kind == "wv" || *kind == "wo" { 2 } else { 4 };
+        assert_eq!(q.bits, want_bits, "layer {layer} {kind}");
+        let want_q = if *layer == 0 { "awq" } else { "ours" };
+        assert_eq!(&qm.quantizers[&(*layer, *kind)], want_q, "layer {layer} {kind}");
+    }
+    // the report sees the same routing (for per-method bench columns)
+    assert!(report.method_summary().len() >= 3);
+
+    // save → reload: heterogeneous specs survive, dense weights identical
+    let path = tmp("mixed.tsr");
+    store::save_quantized(&path, &qm).unwrap();
+    let qm2 = store::load_quantized(&path).unwrap();
+    assert_eq!(qm2.quantizers, qm.quantizers);
+    for ((layer, kind), q) in &qm.linears {
+        let q2 = &qm2.linears[&(*layer, *kind)];
+        assert_eq!((q.bits, q.group_size), (q2.bits, q2.group_size), "layer {layer} {kind}");
+    }
+    let tokens: Vec<u8> = (0..32).map(|i| (i * 11 % 251) as u8).collect();
+    let a = tsgo::model::forward_logits(&qm.weights, &tokens);
+    let b = tsgo::model::forward_logits(&qm2.weights, &tokens);
+    assert!(a.max_abs_diff(&b) < 1e-6, "reload changed the model");
+
+    // evals end-to-end on the reloaded heterogeneous checkpoint
+    let corpus = Corpus::generate(CorpusKind::SynthWiki, 30_000, 2);
+    let ppl = tsgo::eval::perplexity(&qm2.weights, &corpus.bytes, 32, 4);
+    assert!(ppl.is_finite() && ppl > 0.0, "ppl = {ppl}");
+}
+
+#[test]
+fn plan_resolution_is_visible_in_reports() {
+    // A layer-targeted rule shows up in LinearReport rows exactly where the
+    // plan says it should.
+    let (w, calib) = model_setup();
+    let plan = QuantPlan::parse_with_defaults("gptq:bits=4,group=32;l1=rtn", 4, 32).unwrap();
+    let (_, report) = quantize_model(&w, &calib, &PipelineConfig::from_plan(plan)).unwrap();
+    for l in &report.linears {
+        let want = if l.layer == 1 { "rtn" } else { "gptq" };
+        assert_eq!(l.quantizer, want, "layer {} {:?}", l.layer, l.kind);
+    }
+}

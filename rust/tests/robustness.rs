@@ -5,8 +5,7 @@
 
 use tsgo::model::{store, ModelWeights, Preset};
 use tsgo::quant::scale::{compute_group_scales, QuantSpec, ScaleMetric};
-use tsgo::quant::stage2::Stage2Config;
-use tsgo::quant::{quantize_layer, GptqConfig, MethodConfig};
+use tsgo::quant::{resolve_quantizer, GptqConfig, QuantContext};
 use tsgo::tensor::Matrix;
 use tsgo::util::json::Json;
 use tsgo::util::proptest::{check, prop_assert};
@@ -82,11 +81,10 @@ fn quantize_layer_survives_degenerate_inputs() {
         }),
     ];
     for (i, (w, h)) in cases.iter().enumerate() {
-        let res = quantize_layer(
-            w, h, None, &spec, MethodConfig::OURS,
-            &GptqConfig::default(), &Stage2Config::default(),
-        )
-        .unwrap_or_else(|e| panic!("case {i}: {e}"));
+        let res = resolve_quantizer("ours")
+            .unwrap()
+            .quantize(w, h, None, &spec, &QuantContext::default())
+            .unwrap_or_else(|e| panic!("case {i}: {e}"));
         assert!(res.layer_loss.is_finite(), "case {i}");
         assert!(
             res.quantized.scales.data.iter().all(|s| s.is_finite()),
@@ -191,11 +189,10 @@ fn prop_quantize_layer_loss_nonnegative_and_bounded_by_rtn() {
         let mut h = x.matmul_bt(&x);
         h.scale_inplace(1.0 / 128.0);
         let spec = QuantSpec::new(2, 16);
-        let res = quantize_layer(
-            &w, &h, None, &spec, MethodConfig::OURS,
-            &GptqConfig::default(), &Stage2Config::default(),
-        )
-        .map_err(|e| e.to_string())?;
+        let res = resolve_quantizer("ours")
+            .unwrap()
+            .quantize(&w, &h, None, &spec, &QuantContext::default())
+            .map_err(|e| e.to_string())?;
         let mut wd = w.clone();
         let hd = tsgo::quant::gptq::prepare_hessian(&h, &mut wd, 0.01);
         let rtn = {

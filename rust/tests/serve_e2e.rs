@@ -5,7 +5,7 @@ use std::sync::Arc;
 use tsgo::calib::{calibration_batches, Corpus, CorpusKind};
 use tsgo::model::{ModelWeights, Preset};
 use tsgo::pipeline::{quantize_model, PipelineConfig};
-use tsgo::quant::{MethodConfig, QuantSpec};
+use tsgo::quant::QuantSpec;
 use tsgo::serve::{request_generation, server::serve_in_background, ServerConfig};
 use tsgo::util::rng::Rng;
 
@@ -19,7 +19,7 @@ fn quantized_model_serves_requests() {
     let (qm, _) = quantize_model(
         &w,
         &calib,
-        &PipelineConfig::new(QuantSpec::new(4, 32), MethodConfig::OURS),
+        &PipelineConfig::new(QuantSpec::new(4, 32), "ours"),
     )
     .unwrap();
 
@@ -48,7 +48,7 @@ fn int8_generation_tracks_fp() {
     let (qm, _) = quantize_model(
         &w,
         &calib,
-        &PipelineConfig::new(QuantSpec::new(8, 64), MethodConfig::OURS),
+        &PipelineConfig::new(QuantSpec::new(8, 64), "ours"),
     )
     .unwrap();
 
