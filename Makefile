@@ -1,7 +1,7 @@
 # Repo-level entry points. `make check` is the tier-1 gate
 # (build + tests + formatting).
 
-.PHONY: check build test fmt artifacts
+.PHONY: check build test fmt clippy artifacts
 
 check:
 	bash ci.sh
@@ -14,6 +14,9 @@ test:
 
 fmt:
 	cd rust && cargo fmt --check
+
+clippy:
+	cd rust && cargo clippy -q -- -D warnings
 
 # AOT-lower the L2/L1 JAX + Pallas graphs to HLO artifacts for the runtime.
 artifacts:

@@ -14,3 +14,6 @@ fi
 cargo build --release
 cargo test -q
 cargo fmt --check
+# Lint gate: warnings are errors. `|| true` is NOT acceptable here — a
+# clippy regression must fail CI.
+cargo clippy -q -- -D warnings

@@ -6,14 +6,19 @@
 
 use std::sync::Arc;
 use tsgo::calib::{calibration_batches, Corpus, CorpusKind};
-use tsgo::model::{ModelWeights, Preset};
+use tsgo::model::{ExecModel, ModelExec, ModelWeights, Preset};
 use tsgo::pipeline::{quantize_model, PipelineConfig};
 use tsgo::quant::QuantSpec;
 use tsgo::serve::server::serve_in_background;
 use tsgo::serve::{request_generation, BatcherConfig, ServerConfig};
 use tsgo::util::rng::Rng;
 
-fn drive(label: &str, weights: Arc<ModelWeights>, n_clients: usize, max_new: usize) {
+fn drive<M: ModelExec + Send + Sync + 'static>(
+    label: &str,
+    weights: Arc<M>,
+    n_clients: usize,
+    max_new: usize,
+) {
     let cfg = ServerConfig {
         addr: "127.0.0.1:0".into(),
         batcher: BatcherConfig::default(),
@@ -74,8 +79,14 @@ fn main() -> tsgo::Result<()> {
     println!("weights: {fp_mb:.1} MB fp32 → {packed_mb:.1} MB packed\n");
 
     let clients = 8;
+    let packed = ExecModel::from_quantized(&qm);
+    let lin_fp_bytes: usize = qm.linears.values().map(|q| q.rows * q.cols * 4).sum();
+    let byte_ratio = lin_fp_bytes as f64 / packed.linear_weight_bytes() as f64;
     drive("FP32", Arc::new(fp), clients, 32);
     drive("INT2", Arc::new(qm.weights), clients, 32);
-    println!("\n(dequantized execution — memory savings are the deployment win;\n the fused dequant-matmul kernel path is benchmarked in `cargo bench --bench kernels`)");
+    drive("INT2-pack", Arc::new(packed), clients, 32);
+    println!(
+        "\n(INT2 dequantizes at load; INT2-pack executes the packed ints through the\n fused group-wise dequant kernels — `tsgo serve --packed` — touching {byte_ratio:.1}×\n fewer weight bytes per token; kernel numbers: `cargo bench --bench packed_gemv`)"
+    );
     Ok(())
 }

@@ -1,0 +1,162 @@
+//! Packed execution microbenchmarks: the fused group-wise dequant GEMV/GEMM
+//! against the dense f32 path it replaces.
+//!
+//! Three views, each with a bytes-touched column (the memory-bandwidth
+//! story that motivates weight-only quantization — paper §2.2):
+//!
+//! * single-token GEMV (the decode hot loop) per bit width;
+//! * prefill GEMM (T = 64) per bit width;
+//! * end-to-end KV-cached decode tokens/s, dense [`ExecModel`] vs packed.
+//!
+//! `cargo bench --bench packed_gemv`
+
+use tsgo::model::{DecodeState, ExecModel, ModelWeights, Preset};
+use tsgo::quant::rtn::rtn_quantize;
+use tsgo::quant::scale::{compute_group_scales, QuantSpec, ScaleMetric};
+use tsgo::quant::QuantizedLinear;
+use tsgo::tensor::Matrix;
+use tsgo::util::bench::{bench_units, print_measurements, Measurement, Table};
+use tsgo::util::rng::Rng;
+use std::collections::BTreeMap;
+
+fn quantize(w: &Matrix, bits: u8, group: usize) -> QuantizedLinear {
+    let spec = QuantSpec::new(bits, group);
+    let scales = compute_group_scales(w, &spec, ScaleMetric::L2, None);
+    rtn_quantize(w, &scales, &spec)
+}
+
+fn main() {
+    let mut rng = Rng::new(13);
+    let iters: usize = std::env::var("TSGO_BENCH_ITERS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(20);
+
+    // A w2-shaped linear: [out, in] = [256, 704] at group 64.
+    let (out_dim, in_dim, group) = (256usize, 704usize, 64usize);
+    let w = Matrix::randn(out_dim, in_dim, 1.0, &mut rng);
+    let x1 = Matrix::randn(1, in_dim, 1.0, &mut rng);
+    let xt = Matrix::randn(64, in_dim, 1.0, &mut rng);
+
+    let mut ms: Vec<Measurement> = Vec::new();
+    let mut bytes = Table::new(&["path", "weight bytes", "vs dense", "bits/weight"]);
+    let dense_bytes = out_dim * in_dim * 4;
+    bytes.row(vec!["dense f32".into(), format!("{dense_bytes}"), "1.00x".into(), "32.00".into()]);
+
+    ms.push(bench_units("gemv dense f32", 3, iters, Some(1.0), &mut || {
+        std::hint::black_box(x1.matmul_bt(&w));
+    }));
+    ms.push(bench_units("gemm[64] dense f32", 1, iters, Some(64.0), &mut || {
+        std::hint::black_box(xt.matmul_bt(&w));
+    }));
+
+    for bits in [2u8, 3, 4, 8] {
+        let q = quantize(&w, bits, group);
+        bytes.row(vec![
+            format!("packed INT{bits} g{group}"),
+            format!("{}", q.nbytes()),
+            format!("{:.2}x", dense_bytes as f64 / q.nbytes() as f64),
+            format!("{:.2}", q.bits_per_weight()),
+        ]);
+        ms.push(bench_units(
+            &format!("gemv packed INT{bits} (fused dequant)"),
+            3,
+            iters,
+            Some(1.0),
+            &mut || {
+                std::hint::black_box(q.forward(&x1));
+            },
+        ));
+        ms.push(bench_units(
+            &format!("gemv dequant(INT{bits}) + dense (old deploy path)"),
+            1,
+            iters.min(10),
+            Some(1.0),
+            &mut || {
+                let d = q.dequantize();
+                std::hint::black_box(x1.matmul_bt(&d));
+            },
+        ));
+        ms.push(bench_units(
+            &format!("gemm[64] packed INT{bits} (fused dequant)"),
+            1,
+            iters,
+            Some(64.0),
+            &mut || {
+                std::hint::black_box(q.forward(&xt));
+            },
+        ));
+    }
+
+    // -- end-to-end decode: dense ExecModel vs packed ExecModel -------------
+    let cfg = Preset::Tiny.config();
+    let fp = ModelWeights::init(cfg, &mut rng);
+    let spec = QuantSpec::new(2, 64);
+    let mut weights = fp.clone();
+    let mut linears = BTreeMap::new();
+    for (li, kind, m) in fp.linears() {
+        let scales = compute_group_scales(m, &spec, ScaleMetric::L2, None);
+        let q = rtn_quantize(m, &scales, &spec);
+        *weights.layers[li].linear_mut(kind) = q.dequantize();
+        linears.insert((li, kind.label()), q);
+    }
+    let qm = tsgo::model::store::QuantizedModel {
+        config: cfg,
+        weights,
+        linears,
+        quantizers: BTreeMap::new(),
+    };
+    let packed = ExecModel::from_quantized(&qm);
+    let dense = ExecModel::from_dense(qm.weights.clone());
+    let decode_tokens = 24usize;
+    let run_decode = |m: &ExecModel| {
+        let mut st = DecodeState::new(m);
+        let mut logits = st.step(65);
+        for _ in 1..decode_tokens {
+            let next = tsgo::serve::argmax_token(&logits).unwrap();
+            logits = st.step(next);
+        }
+        logits
+    };
+    ms.push(bench_units(
+        &format!("decode {decode_tokens} tok · dense exec (tiny)"),
+        1,
+        iters.min(10),
+        Some(decode_tokens as f64),
+        &mut || {
+            std::hint::black_box(run_decode(&dense));
+        },
+    ));
+    ms.push(bench_units(
+        &format!("decode {decode_tokens} tok · packed INT2 exec (tiny)"),
+        1,
+        iters.min(10),
+        Some(decode_tokens as f64),
+        &mut || {
+            std::hint::black_box(run_decode(&packed));
+        },
+    ));
+    bytes.row(vec![
+        "tiny model linears, dense".into(),
+        format!("{}", dense.linear_weight_bytes()),
+        "1.00x".into(),
+        "32.00".into(),
+    ]);
+    bytes.row(vec![
+        "tiny model linears, packed INT2 g64".into(),
+        format!("{}", packed.linear_weight_bytes()),
+        format!(
+            "{:.2}x",
+            dense.linear_weight_bytes() as f64 / packed.linear_weight_bytes() as f64
+        ),
+        format!(
+            "{:.2}",
+            packed.linear_weight_bytes() as f64 * 8.0
+                / (dense.linear_weight_bytes() / 4) as f64
+        ),
+    ]);
+
+    print_measurements("packed dequant GEMV / GEMM vs dense", &ms);
+    bytes.print("weight bytes touched per full application");
+    println!("\nthroughput column: activation rows (tokens) per second.");
+}

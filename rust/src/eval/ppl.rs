@@ -6,7 +6,7 @@
 //! and the AOT HLO artifact.
 
 use crate::calib::batcher::eval_windows;
-use crate::model::{forward_logits, ModelWeights};
+use crate::model::{forward_logits, ModelExec};
 use crate::tensor::Matrix;
 
 /// Mean NLL of a window given its logits `[T, vocab]`.
@@ -40,12 +40,14 @@ pub fn perplexity_with(
     (nll / windows.len() as f64).exp()
 }
 
-/// Perplexity of a model (native forward, parallel over windows).
-pub fn perplexity(w: &ModelWeights, data: &[u8], seq_len: usize, max_windows: usize) -> f64 {
+/// Perplexity of a model (native forward, parallel over windows). Generic
+/// over the execution representation — `tsgo eval --packed` runs exactly
+/// this on an [`crate::model::ExecModel`] with fused dequant GEMMs.
+pub fn perplexity<M: ModelExec>(m: &M, data: &[u8], seq_len: usize, max_windows: usize) -> f64 {
     let windows = eval_windows(data, seq_len, max_windows);
     assert!(!windows.is_empty(), "no evaluation windows");
     let nlls = crate::util::threadpool::parallel_map_items(&windows, |win| {
-        window_nll(&forward_logits(w, win), win)
+        window_nll(&forward_logits(m, win), win)
     });
     (nlls.iter().sum::<f64>() / nlls.len() as f64).exp()
 }

@@ -15,7 +15,7 @@
 //! * **odd-one-out** — in-distribution word vs cross-corpus word.
 
 use crate::calib::corpus::{Corpus, CorpusKind};
-use crate::model::ModelWeights;
+use crate::model::ModelExec;
 use crate::tensor::Matrix;
 use crate::util::rng::Rng;
 
@@ -191,13 +191,14 @@ pub fn task_suite_with(
     TaskReport { per_family, average }
 }
 
-/// Score the suite with a model's native forward (parallel over items).
-pub fn task_suite(w: &ModelWeights, items: &[TaskItem]) -> TaskReport {
+/// Score the suite with a model's native forward (parallel over items),
+/// generic over the execution representation (dense or packed).
+pub fn task_suite<M: ModelExec>(m: &M, items: &[TaskItem]) -> TaskReport {
     // Parallelize by scoring items concurrently; reuse task_suite_with for
     // the aggregation by pre-computing picks.
     let picks: Vec<(usize, &'static str, bool)> =
         crate::util::threadpool::parallel_map_items(items, |item| {
-            let mut f = |t: &[u8]| crate::model::forward_logits(w, t);
+            let mut f = |t: &[u8]| crate::model::forward_logits(m, t);
             let scores: Vec<f64> = item
                 .choices
                 .iter()

@@ -14,7 +14,7 @@ use std::path::{Path, PathBuf};
 use std::sync::Arc;
 use tsgo::calib::{calibration_batches, Corpus, CorpusKind};
 use tsgo::eval::tasks::{build_suite, task_suite};
-use tsgo::model::{store, ModelWeights, Preset};
+use tsgo::model::{store, ModelExec, ModelWeights, Preset};
 use tsgo::pipeline::{quantize_model, PipelineConfig};
 use tsgo::quant::QuantPlan;
 use tsgo::runtime::Engine;
@@ -65,8 +65,11 @@ fn print_help() {
          \x20            --method takes any registered quantizer (rtn|awq|actorder|gptq|\n\
          \x20            stage1|stage2|ours) or a per-layer plan string such as\n\
          \x20            'ours:bits=2,group=64;wv,wo=bits4;l0=awq'\n\
-         \x20 eval       PPL + 0-shot (--model m.tsr [--quantized])\n\
-         \x20 serve      generation server (--model m.tsr --addr 127.0.0.1:7433)\n\
+         \x20 eval       PPL + 0-shot (--model m.tsr [--quantized | --packed])\n\
+         \x20 serve      generation server (--model m.tsr --addr 127.0.0.1:7433\n\
+         \x20            [--quantized | --packed]); --packed executes the packed\n\
+         \x20            ints through the fused dequant kernels, never\n\
+         \x20            materializing dense weights\n\
          \x20 warmup     pre-compile all artifacts"
     );
 }
@@ -229,33 +232,25 @@ fn load_any_model(path: &Path, quantized: bool) -> Result<ModelWeights> {
     }
 }
 
-fn cmd_eval(argv: &[String]) -> Result<()> {
-    let specs = [
-        OptSpec { name: "model", help: "checkpoint path", default: Some("model.tsr"), is_flag: false },
-        OptSpec { name: "quantized", help: "checkpoint is quantized", default: None, is_flag: true },
-        OptSpec { name: "windows", help: "eval windows per corpus", default: Some("32"), is_flag: false },
-        OptSpec { name: "tasks", help: "items per 0-shot family", default: Some("25"), is_flag: false },
-        OptSpec { name: "native", help: "force native forward (skip artifacts)", default: None, is_flag: true },
-    ];
-    let a = parse(argv, "tsgo eval", "PPL + 0-shot evaluation", &specs)?;
-    let w = load_any_model(Path::new(&a.str("model")), a.flag("quantized"))?;
-    let windows = a.usize("windows").map_err(anyhow::Error::msg)?;
-    let engine = if a.flag("native") { None } else { Engine::open_default() };
-
+/// PPL + 0-shot report, generic over the execution representation (dense
+/// f32 or packed fused-dequant) with a pluggable per-corpus PPL backend
+/// (native forward vs AOT artifact) — one copy of the reporting code for
+/// every eval mode.
+fn run_eval_report<M: ModelExec>(
+    m: &M,
+    windows: usize,
+    n_tasks: usize,
+    ppl_fn: &mut dyn FnMut(&M, &[u8], usize) -> Result<f64>,
+) -> Result<()> {
     for kind in [CorpusKind::SynthWiki, CorpusKind::SynthC4] {
         let corpus = Corpus::generate(kind, 400_000, 1);
         let (_, test) = corpus.split(0.1);
-        let ppl = match &engine {
-            Some(e) if e.manifest.config == w.config => {
-                tsgo::runtime::perplexity_artifact(e, &w, test, w.config.seq_len, windows)?
-            }
-            _ => tsgo::eval::perplexity(&w, test, w.config.seq_len, windows),
-        };
+        let ppl = ppl_fn(m, test, windows)?;
         println!("ppl[{}] = {ppl:.3}", kind.label());
     }
     let corpus = Corpus::generate(CorpusKind::SynthWiki, 400_000, 1);
-    let items = build_suite(&corpus, a.usize("tasks").map_err(anyhow::Error::msg)?, 17);
-    let rep = task_suite(&w, &items);
+    let items = build_suite(&corpus, n_tasks, 17);
+    let rep = task_suite(m, &items);
     for (family, acc, n) in &rep.per_family {
         println!("0-shot {family:<8} {acc:5.1}%  (n={n})");
     }
@@ -263,15 +258,53 @@ fn cmd_eval(argv: &[String]) -> Result<()> {
     Ok(())
 }
 
+fn native_ppl<M: ModelExec>(m: &M, test: &[u8], windows: usize) -> Result<f64> {
+    Ok(tsgo::eval::perplexity(m, test, m.config().seq_len, windows))
+}
+
+fn cmd_eval(argv: &[String]) -> Result<()> {
+    let specs = [
+        OptSpec { name: "model", help: "checkpoint path", default: Some("model.tsr"), is_flag: false },
+        OptSpec { name: "quantized", help: "checkpoint is quantized (dequantize at load)", default: None, is_flag: true },
+        OptSpec { name: "packed", help: "execute the packed ints directly (fused dequant kernels)", default: None, is_flag: true },
+        OptSpec { name: "windows", help: "eval windows per corpus", default: Some("32"), is_flag: false },
+        OptSpec { name: "tasks", help: "items per 0-shot family", default: Some("25"), is_flag: false },
+        OptSpec { name: "native", help: "force native forward (skip artifacts)", default: None, is_flag: true },
+    ];
+    let a = parse(argv, "tsgo eval", "PPL + 0-shot evaluation", &specs)?;
+    let windows = a.usize("windows").map_err(anyhow::Error::msg)?;
+    let n_tasks = a.usize("tasks").map_err(anyhow::Error::msg)?;
+    if a.flag("packed") {
+        let em = store::load_quantized_packed(Path::new(&a.str("model")))?;
+        println!(
+            "packed execution: {}/{} linears packed ({:.2} MB linear weights)",
+            em.packed_linears(),
+            em.total_linears(),
+            em.linear_weight_bytes() as f64 / 1e6
+        );
+        return run_eval_report(&em, windows, n_tasks, &mut native_ppl);
+    }
+    let w = load_any_model(Path::new(&a.str("model")), a.flag("quantized"))?;
+    let engine = if a.flag("native") { None } else { Engine::open_default() };
+    match &engine {
+        Some(e) if e.manifest.config == w.config => {
+            run_eval_report(&w, windows, n_tasks, &mut |m, test, wnd| {
+                tsgo::runtime::perplexity_artifact(e, m, test, m.config().seq_len, wnd)
+            })
+        }
+        _ => run_eval_report(&w, windows, n_tasks, &mut native_ppl),
+    }
+}
+
 fn cmd_serve(argv: &[String]) -> Result<()> {
     let specs = [
         OptSpec { name: "model", help: "checkpoint path", default: Some("model.tsr"), is_flag: false },
-        OptSpec { name: "quantized", help: "checkpoint is quantized", default: None, is_flag: true },
+        OptSpec { name: "quantized", help: "checkpoint is quantized (dequantize at load)", default: None, is_flag: true },
+        OptSpec { name: "packed", help: "execute the packed ints directly (fused dequant kernels)", default: None, is_flag: true },
         OptSpec { name: "addr", help: "bind address", default: Some("127.0.0.1:7433"), is_flag: false },
         OptSpec { name: "max-batch", help: "dynamic batch cap", default: Some("8"), is_flag: false },
     ];
     let a = parse(argv, "tsgo serve", "batched generation server", &specs)?;
-    let w = Arc::new(load_any_model(Path::new(&a.str("model")), a.flag("quantized"))?);
     let cfg = tsgo::serve::ServerConfig {
         addr: a.str("addr"),
         batcher: tsgo::serve::BatcherConfig {
@@ -280,6 +313,18 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         },
         max_connections: None,
     };
+    if a.flag("packed") {
+        let em = store::load_quantized_packed(Path::new(&a.str("model")))?;
+        println!(
+            "packed execution: {}/{} linears packed ({:.2} MB linear weights vs {:.2} MB dense)",
+            em.packed_linears(),
+            em.total_linears(),
+            em.linear_weight_bytes() as f64 / 1e6,
+            em.dense_linear_bytes() as f64 / 1e6
+        );
+        return tsgo::serve::serve(Arc::new(em), cfg);
+    }
+    let w = Arc::new(load_any_model(Path::new(&a.str("model")), a.flag("quantized"))?);
     tsgo::serve::serve(w, cfg)
 }
 

@@ -1,0 +1,273 @@
+//! [`ExecModel`] — the deployable model: FP norms/embedding/head plus one
+//! [`LinearOp`] per projection, dense or packed per linear.
+//!
+//! This is what `tsgo serve --packed` / `eval --packed` run: quantized
+//! checkpoints execute through the fused dequant kernels without ever
+//! materializing a dense weight matrix, and mixed checkpoints (some linears
+//! packed, some f32) work per-projection. Built either from dense
+//! [`ModelWeights`] or from a [`QuantizedModel`]'s packed linears.
+
+use super::config::ModelConfig;
+use super::linear::{BlockLinears, LinearOp, ModelExec};
+use super::store::QuantizedModel;
+use super::weights::{LayerWeights, LinearKind, ModelWeights};
+use crate::tensor::Matrix;
+
+/// One block, each projection in its deployed representation.
+#[derive(Clone, Debug)]
+pub struct ExecLayer {
+    pub wq: LinearOp,
+    pub wk: LinearOp,
+    pub wv: LinearOp,
+    pub wo: LinearOp,
+    pub w1: LinearOp,
+    pub w3: LinearOp,
+    pub w2: LinearOp,
+    pub ln1: Vec<f32>,
+    pub ln2: Vec<f32>,
+}
+
+impl ExecLayer {
+    pub fn op(&self, kind: LinearKind) -> &LinearOp {
+        match kind {
+            LinearKind::Wq => &self.wq,
+            LinearKind::Wk => &self.wk,
+            LinearKind::Wv => &self.wv,
+            LinearKind::Wo => &self.wo,
+            LinearKind::W1 => &self.w1,
+            LinearKind::W3 => &self.w3,
+            LinearKind::W2 => &self.w2,
+        }
+    }
+
+    pub fn op_mut(&mut self, kind: LinearKind) -> &mut LinearOp {
+        match kind {
+            LinearKind::Wq => &mut self.wq,
+            LinearKind::Wk => &mut self.wk,
+            LinearKind::Wv => &mut self.wv,
+            LinearKind::Wo => &mut self.wo,
+            LinearKind::W1 => &mut self.w1,
+            LinearKind::W3 => &mut self.w3,
+            LinearKind::W2 => &mut self.w2,
+        }
+    }
+
+    fn from_dense(l: LayerWeights) -> ExecLayer {
+        ExecLayer {
+            wq: LinearOp::Dense(l.wq),
+            wk: LinearOp::Dense(l.wk),
+            wv: LinearOp::Dense(l.wv),
+            wo: LinearOp::Dense(l.wo),
+            w1: LinearOp::Dense(l.w1),
+            w3: LinearOp::Dense(l.w3),
+            w2: LinearOp::Dense(l.w2),
+            ln1: l.ln1,
+            ln2: l.ln2,
+        }
+    }
+}
+
+impl BlockLinears for ExecLayer {
+    fn ln1(&self) -> &[f32] {
+        &self.ln1
+    }
+
+    fn ln2(&self) -> &[f32] {
+        &self.ln2
+    }
+
+    fn apply(&self, kind: LinearKind, x: &Matrix) -> Matrix {
+        self.op(kind).forward(x)
+    }
+}
+
+/// A whole executable model (see module docs).
+#[derive(Clone, Debug)]
+pub struct ExecModel {
+    pub config: ModelConfig,
+    /// `[vocab, d_model]` token embedding (always FP).
+    pub embed: Matrix,
+    pub layers: Vec<ExecLayer>,
+    pub ln_f: Vec<f32>,
+    /// `[vocab, d_model]` untied output head (always FP).
+    pub head: Matrix,
+}
+
+impl ExecModel {
+    /// Wrap dense weights — every projection a [`LinearOp::Dense`]. Moves
+    /// the matrices; no copies.
+    pub fn from_dense(w: ModelWeights) -> ExecModel {
+        ExecModel {
+            config: w.config,
+            embed: w.embed,
+            layers: w.layers.into_iter().map(ExecLayer::from_dense).collect(),
+            ln_f: w.ln_f,
+            head: w.head,
+        }
+    }
+
+    /// Build the packed execution form of a quantized model: every linear
+    /// with a packed form runs [`LinearOp::Packed`]; norms/embedding/head
+    /// come from the FP side. The dense (dequantized) linears in
+    /// `qm.weights` are *not* used.
+    pub fn from_quantized(qm: &QuantizedModel) -> ExecModel {
+        let layers = qm
+            .weights
+            .layers
+            .iter()
+            .enumerate()
+            .map(|(li, l)| {
+                let pick = |kind: LinearKind| -> LinearOp {
+                    match qm.get(li, kind) {
+                        Some(q) => LinearOp::Packed(q.clone()),
+                        None => LinearOp::Dense(l.linear(kind).clone()),
+                    }
+                };
+                ExecLayer {
+                    wq: pick(LinearKind::Wq),
+                    wk: pick(LinearKind::Wk),
+                    wv: pick(LinearKind::Wv),
+                    wo: pick(LinearKind::Wo),
+                    w1: pick(LinearKind::W1),
+                    w3: pick(LinearKind::W3),
+                    w2: pick(LinearKind::W2),
+                    ln1: l.ln1.clone(),
+                    ln2: l.ln2.clone(),
+                }
+            })
+            .collect();
+        ExecModel {
+            config: qm.config,
+            embed: qm.weights.embed.clone(),
+            layers,
+            ln_f: qm.weights.ln_f.clone(),
+            head: qm.weights.head.clone(),
+        }
+    }
+
+    /// How many of the model's linears execute packed.
+    pub fn packed_linears(&self) -> usize {
+        self.layers
+            .iter()
+            .flat_map(|l| LinearKind::ALL.iter().map(|&k| l.op(k)))
+            .filter(|op| op.is_packed())
+            .count()
+    }
+
+    /// Total number of linears (packed + dense).
+    pub fn total_linears(&self) -> usize {
+        self.layers.len() * LinearKind::ALL.len()
+    }
+
+    /// f32 bytes the same linears would occupy dense — the denominator of
+    /// the packed bytes-touched ratio, derived from the actual layer shapes
+    /// rather than re-assuming them.
+    pub fn dense_linear_bytes(&self) -> usize {
+        self.layers
+            .iter()
+            .flat_map(|l| LinearKind::ALL.iter().map(|&k| l.op(k)))
+            .map(|op| op.out_dim() * op.in_dim() * 4)
+            .sum()
+    }
+
+    /// Weight bytes read by one full token step across all linears — the
+    /// bytes-touched column of the packed-GEMV bench (embedding/head are FP
+    /// in both representations and excluded).
+    pub fn linear_weight_bytes(&self) -> usize {
+        self.layers
+            .iter()
+            .flat_map(|l| LinearKind::ALL.iter().map(|&k| l.op(k)))
+            .map(|op| op.weight_bytes())
+            .sum()
+    }
+}
+
+impl ModelExec for ExecModel {
+    type Layer = ExecLayer;
+
+    fn config(&self) -> &ModelConfig {
+        &self.config
+    }
+
+    fn embed_row(&self, token: u8) -> &[f32] {
+        self.embed.row(token as usize)
+    }
+
+    fn layers(&self) -> &[ExecLayer] {
+        &self.layers
+    }
+
+    fn ln_f(&self) -> &[f32] {
+        &self.ln_f
+    }
+
+    fn apply_head(&self, x: &Matrix) -> Matrix {
+        x.matmul_bt(&self.head)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::config::Preset;
+    use crate::model::forward_logits;
+    use crate::quant::scale::{compute_group_scales, QuantSpec, ScaleMetric};
+    use crate::util::rng::Rng;
+    use std::collections::BTreeMap;
+
+    fn quantized_tiny(seed: u64, bits: u8) -> (ModelWeights, QuantizedModel) {
+        let cfg = Preset::Tiny.config();
+        let mut rng = Rng::new(seed);
+        let w = ModelWeights::init(cfg, &mut rng);
+        let spec = QuantSpec::new(bits, 32);
+        let mut weights = w.clone();
+        let mut linears = BTreeMap::new();
+        for li in 0..cfg.n_layers {
+            for kind in LinearKind::ALL {
+                let m = w.layers[li].linear(kind).clone();
+                let scales = compute_group_scales(&m, &spec, ScaleMetric::L2, None);
+                let q = crate::quant::rtn::rtn_quantize(&m, &scales, &spec);
+                *weights.layers[li].linear_mut(kind) = q.dequantize();
+                linears.insert((li, kind.label()), q);
+            }
+        }
+        (
+            w,
+            QuantizedModel { config: cfg, weights, linears, quantizers: BTreeMap::new() },
+        )
+    }
+
+    #[test]
+    fn dense_wrap_preserves_logits() {
+        let cfg = Preset::Tiny.config();
+        let mut rng = Rng::new(3);
+        let w = ModelWeights::init(cfg, &mut rng);
+        let tokens: Vec<u8> = (0..8).collect();
+        let want = forward_logits(&w, &tokens);
+        let em = ExecModel::from_dense(w);
+        assert_eq!(em.packed_linears(), 0);
+        let got = forward_logits(&em, &tokens);
+        assert!(got.max_abs_diff(&want) < 1e-6);
+    }
+
+    #[test]
+    fn packed_exec_matches_dequantized_dense() {
+        // The tentpole end-to-end equivalence at model level: running the
+        // packed ints through the fused kernels == running the dequantized
+        // dense weights.
+        let (_, qm) = quantized_tiny(4, 4);
+        let em = ExecModel::from_quantized(&qm);
+        assert_eq!(em.packed_linears(), 7 * qm.config.n_layers);
+        let dense_bytes = ExecModel::from_dense(qm.weights.clone()).linear_weight_bytes();
+        assert!(em.linear_weight_bytes() * 4 < dense_bytes);
+        let tokens: Vec<u8> = (0..12).map(|i| i * 19).collect();
+        let dense = forward_logits(&qm.weights, &tokens);
+        let packed = forward_logits(&em, &tokens);
+        let scale = dense.data.iter().fold(1.0f32, |m, v| m.max(v.abs()));
+        assert!(
+            packed.max_abs_diff(&dense) < 1e-3 * scale,
+            "diff {}",
+            packed.max_abs_diff(&dense)
+        );
+    }
+}

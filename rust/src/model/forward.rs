@@ -9,10 +9,16 @@
 //!   Hessians from);
 //! * [`DecodeState`] — incremental KV-cached decoding for the serve path.
 //!
+//! All three are generic over the [`ModelExec`] / [`BlockLinears`]
+//! execution traits, so the identical code path runs dense f32 weights
+//! ([`ModelWeights`]) or packed group-quantized ints through the fused
+//! dequant kernels ([`super::ExecModel`]).
+//!
 //! Numerics must match the JAX model: RMSNorm ε = 1e-5, rotary embeddings
 //! over pairs `(x[2i], x[2i+1])` with base 10000, pre-norm residual blocks.
 
-use super::weights::{LayerWeights, ModelWeights};
+use super::linear::{BlockLinears, ModelExec};
+use super::weights::{LinearKind, ModelWeights};
 use crate::tensor::Matrix;
 
 const RMS_EPS: f32 = 1e-5;
@@ -113,34 +119,35 @@ pub struct LayerCaptures {
     pub x_w2: Matrix,
 }
 
-/// One block. Returns the new hidden state; optionally records captures.
-/// Public so the quantization pipeline can advance per-layer running
-/// hidden states (O(L) total blocks instead of O(L²) full forwards).
-pub fn block_forward(
-    l: &LayerWeights,
+/// One block over any representation. Returns the new hidden state;
+/// optionally records captures. Public so the quantization pipeline can
+/// advance per-layer running hidden states (O(L) total blocks instead of
+/// O(L²) full forwards).
+pub fn block_forward<L: BlockLinears + ?Sized>(
+    l: &L,
     h: &Matrix,
     n_heads: usize,
     captures: Option<&mut LayerCaptures>,
 ) -> Matrix {
-    let x_attn = rmsnorm(h, &l.ln1);
-    let mut q = x_attn.matmul_bt(&l.wq);
-    let mut k = x_attn.matmul_bt(&l.wk);
-    let v = x_attn.matmul_bt(&l.wv);
+    let x_attn = rmsnorm(h, l.ln1());
+    let mut q = l.apply(LinearKind::Wq, &x_attn);
+    let mut k = l.apply(LinearKind::Wk, &x_attn);
+    let v = l.apply(LinearKind::Wv, &x_attn);
     rope_inplace(&mut q, n_heads, 0);
     rope_inplace(&mut k, n_heads, 0);
     let ctx = attention(&q, &k, &v, n_heads);
-    let attn_out = ctx.matmul_bt(&l.wo);
+    let attn_out = l.apply(LinearKind::Wo, &ctx);
     let mut h1 = h.clone();
     h1.add_inplace(&attn_out);
 
-    let x_mlp = rmsnorm(&h1, &l.ln2);
-    let gate = x_mlp.matmul_bt(&l.w1);
-    let up = x_mlp.matmul_bt(&l.w3);
+    let x_mlp = rmsnorm(&h1, l.ln2());
+    let gate = l.apply(LinearKind::W1, &x_mlp);
+    let up = l.apply(LinearKind::W3, &x_mlp);
     let mut act = Matrix::zeros(gate.rows, gate.cols);
     for i in 0..gate.data.len() {
         act.data[i] = silu(gate.data[i]) * up.data[i];
     }
-    let down = act.matmul_bt(&l.w2);
+    let down = l.apply(LinearKind::W2, &act);
     let mut h2 = h1;
     h2.add_inplace(&down);
 
@@ -150,23 +157,24 @@ pub fn block_forward(
     h2
 }
 
-pub fn embed_tokens(w: &ModelWeights, tokens: &[u8]) -> Matrix {
-    let d = w.config.d_model;
+pub fn embed_tokens<M: ModelExec>(m: &M, tokens: &[u8]) -> Matrix {
+    let d = m.config().d_model;
     let mut h = Matrix::zeros(tokens.len(), d);
     for (t, &tok) in tokens.iter().enumerate() {
-        h.row_mut(t).copy_from_slice(w.embed.row(tok as usize));
+        h.row_mut(t).copy_from_slice(m.embed_row(tok));
     }
     h
 }
 
 /// Full-sequence forward: `tokens` → logits `[T, vocab]`.
-pub fn forward_logits(w: &ModelWeights, tokens: &[u8]) -> Matrix {
-    let mut h = embed_tokens(w, tokens);
-    for l in &w.layers {
-        h = block_forward(l, &h, w.config.n_heads, None);
+pub fn forward_logits<M: ModelExec>(m: &M, tokens: &[u8]) -> Matrix {
+    let mut h = embed_tokens(m, tokens);
+    let n_heads = m.config().n_heads;
+    for l in m.layers() {
+        h = block_forward(l, &h, n_heads, None);
     }
-    let f = rmsnorm(&h, &w.ln_f);
-    f.matmul_bt(&w.head)
+    let f = rmsnorm(&h, m.ln_f());
+    m.apply_head(&f)
 }
 
 /// Forward with per-layer linear-input capture (for Hessian accumulation).
@@ -188,8 +196,8 @@ pub fn forward_captures(w: &ModelWeights, tokens: &[u8]) -> (Matrix, Vec<LayerCa
 }
 
 /// Mean cross-entropy of next-token prediction over a sequence.
-pub fn sequence_nll(w: &ModelWeights, tokens: &[u8]) -> f64 {
-    let logits = forward_logits(w, tokens);
+pub fn sequence_nll<M: ModelExec>(m: &M, tokens: &[u8]) -> f64 {
+    let logits = forward_logits(m, tokens);
     let mut total = 0.0f64;
     let n = tokens.len() - 1;
     for t in 0..n {
@@ -203,42 +211,46 @@ pub fn sequence_nll(w: &ModelWeights, tokens: &[u8]) -> f64 {
     total / n as f64
 }
 
-/// Incremental KV-cached decoding state for one sequence (serve path).
-pub struct DecodeState<'a> {
-    weights: &'a ModelWeights,
+/// Incremental KV-cached decoding state for one sequence (serve path),
+/// generic over the execution representation — the packed serve path runs
+/// exactly this code with fused dequant GEMVs behind [`BlockLinears`].
+pub struct DecodeState<'a, M: ModelExec> {
+    model: &'a M,
     /// Per layer: cached K and V, `[t_so_far, d]`.
     kcache: Vec<Matrix>,
     vcache: Vec<Matrix>,
     pub pos: usize,
 }
 
-impl<'a> DecodeState<'a> {
-    pub fn new(weights: &'a ModelWeights) -> DecodeState<'a> {
-        let n = weights.config.n_layers;
+impl<'a, M: ModelExec> DecodeState<'a, M> {
+    pub fn new(model: &'a M) -> DecodeState<'a, M> {
+        let cfg = model.config();
+        let n = cfg.n_layers;
         DecodeState {
-            weights,
-            kcache: (0..n).map(|_| Matrix::zeros(0, weights.config.d_model)).collect(),
-            vcache: (0..n).map(|_| Matrix::zeros(0, weights.config.d_model)).collect(),
+            model,
+            kcache: (0..n).map(|_| Matrix::zeros(0, cfg.d_model)).collect(),
+            vcache: (0..n).map(|_| Matrix::zeros(0, cfg.d_model)).collect(),
             pos: 0,
         }
     }
 
     /// Feed one token; returns the logits for the next position.
     pub fn step(&mut self, token: u8) -> Vec<f32> {
-        let w = self.weights;
-        let cfg = &w.config;
+        let m = self.model;
+        let cfg = m.config();
         let d = cfg.d_model;
+        let ffn = cfg.ffn;
         let n_heads = cfg.n_heads;
         let hd = cfg.head_dim();
         let scale = 1.0 / (hd as f32).sqrt();
 
-        let mut h: Vec<f32> = w.embed.row(token as usize).to_vec();
-        for (li, l) in w.layers.iter().enumerate() {
+        let mut h: Vec<f32> = m.embed_row(token).to_vec();
+        for (li, l) in m.layers().iter().enumerate() {
             let hx = Matrix::from_vec(1, d, h.clone());
-            let xa = rmsnorm(&hx, &l.ln1);
-            let mut q = xa.matmul_bt(&l.wq);
-            let mut k = xa.matmul_bt(&l.wk);
-            let v = xa.matmul_bt(&l.wv);
+            let xa = rmsnorm(&hx, l.ln1());
+            let mut q = l.apply(LinearKind::Wq, &xa);
+            let mut k = l.apply(LinearKind::Wk, &xa);
+            let v = l.apply(LinearKind::Wv, &xa);
             rope_inplace(&mut q, n_heads, self.pos);
             rope_inplace(&mut k, n_heads, self.pos);
 
@@ -282,28 +294,28 @@ impl<'a> DecodeState<'a> {
                     }
                 }
             }
-            let attn_out = ctx.matmul_bt(&l.wo);
+            let attn_out = l.apply(LinearKind::Wo, &ctx);
             for (hv, a) in h.iter_mut().zip(&attn_out.data) {
                 *hv += *a;
             }
 
             let hx = Matrix::from_vec(1, d, h.clone());
-            let xm = rmsnorm(&hx, &l.ln2);
-            let gate = xm.matmul_bt(&l.w1);
-            let up = xm.matmul_bt(&l.w3);
-            let mut act = Matrix::zeros(1, cfg.ffn);
-            for i in 0..cfg.ffn {
+            let xm = rmsnorm(&hx, l.ln2());
+            let gate = l.apply(LinearKind::W1, &xm);
+            let up = l.apply(LinearKind::W3, &xm);
+            let mut act = Matrix::zeros(1, ffn);
+            for i in 0..ffn {
                 act.data[i] = silu(gate.data[i]) * up.data[i];
             }
-            let down = act.matmul_bt(&l.w2);
+            let down = l.apply(LinearKind::W2, &act);
             for (hv, a) in h.iter_mut().zip(&down.data) {
                 *hv += *a;
             }
         }
         self.pos += 1;
         let hx = Matrix::from_vec(1, d, h);
-        let f = rmsnorm(&hx, &w.ln_f);
-        f.matmul_bt(&w.head).data
+        let f = rmsnorm(&hx, m.ln_f());
+        m.apply_head(&f).data
     }
 }
 

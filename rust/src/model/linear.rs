@@ -1,0 +1,151 @@
+//! The execution interface every model backend plugs into.
+//!
+//! [`LinearOp`] is one linear projection in whichever representation it is
+//! deployed — dense f32 or packed group-quantized ints executed by the
+//! fused dequant kernels. [`BlockLinears`] / [`ModelExec`] abstract one
+//! transformer block / a whole model over that choice, so the forward pass,
+//! KV-cached decoding, the serve batcher and the eval harness are written
+//! once and run on either representation (and later backends — SIMD unpack,
+//! sharded layers — slot in behind the same two traits).
+
+use super::config::ModelConfig;
+use super::weights::{LayerWeights, LinearKind, ModelWeights};
+use crate::quant::format::QuantizedLinear;
+use crate::tensor::Matrix;
+
+/// One linear projection (`y = x Wᵀ`), dense or packed.
+#[derive(Clone, Debug)]
+pub enum LinearOp {
+    /// Dense f32 `[out, in]` weights.
+    Dense(Matrix),
+    /// Packed group-quantized weights executed by the fused dequant GEMV.
+    Packed(QuantizedLinear),
+}
+
+impl LinearOp {
+    /// Output dimension (rows of W).
+    pub fn out_dim(&self) -> usize {
+        match self {
+            LinearOp::Dense(w) => w.rows,
+            LinearOp::Packed(q) => q.rows,
+        }
+    }
+
+    /// Input dimension (cols of W).
+    pub fn in_dim(&self) -> usize {
+        match self {
+            LinearOp::Dense(w) => w.cols,
+            LinearOp::Packed(q) => q.cols,
+        }
+    }
+
+    pub fn is_packed(&self) -> bool {
+        matches!(self, LinearOp::Packed(_))
+    }
+
+    /// `x @ Wᵀ` — dense GEMM or fused group-wise dequant GEMM.
+    pub fn forward(&self, x: &Matrix) -> Matrix {
+        match self {
+            LinearOp::Dense(w) => x.matmul_bt(w),
+            LinearOp::Packed(q) => q.forward(x),
+        }
+    }
+
+    /// Weight bytes read per full application — the memory-bandwidth number
+    /// the packed path exists to shrink.
+    pub fn weight_bytes(&self) -> usize {
+        match self {
+            LinearOp::Dense(w) => w.data.len() * 4,
+            LinearOp::Packed(q) => q.nbytes(),
+        }
+    }
+}
+
+/// One transformer block's quantizable pieces, representation-agnostic.
+pub trait BlockLinears: Sync {
+    fn ln1(&self) -> &[f32];
+    fn ln2(&self) -> &[f32];
+    /// Apply projection `kind`: `x @ W_kindᵀ`.
+    fn apply(&self, kind: LinearKind, x: &Matrix) -> Matrix;
+}
+
+impl BlockLinears for LayerWeights {
+    fn ln1(&self) -> &[f32] {
+        &self.ln1
+    }
+
+    fn ln2(&self) -> &[f32] {
+        &self.ln2
+    }
+
+    fn apply(&self, kind: LinearKind, x: &Matrix) -> Matrix {
+        x.matmul_bt(self.linear(kind))
+    }
+}
+
+/// A whole executable model: embedding + blocks + final norm + LM head.
+/// Implemented by the dense [`ModelWeights`] and the packed-capable
+/// [`super::ExecModel`]; the forward pass, [`super::DecodeState`], the
+/// serve batcher and eval are generic over it.
+pub trait ModelExec: Sync {
+    type Layer: BlockLinears;
+
+    fn config(&self) -> &ModelConfig;
+    /// Embedding row for one token id.
+    fn embed_row(&self, token: u8) -> &[f32];
+    fn layers(&self) -> &[Self::Layer];
+    fn ln_f(&self) -> &[f32];
+    /// LM head: `x @ W_headᵀ` → `[T, vocab]`.
+    fn apply_head(&self, x: &Matrix) -> Matrix;
+}
+
+impl ModelExec for ModelWeights {
+    type Layer = LayerWeights;
+
+    fn config(&self) -> &ModelConfig {
+        &self.config
+    }
+
+    fn embed_row(&self, token: u8) -> &[f32] {
+        self.embed.row(token as usize)
+    }
+
+    fn layers(&self) -> &[LayerWeights] {
+        &self.layers
+    }
+
+    fn ln_f(&self) -> &[f32] {
+        &self.ln_f
+    }
+
+    fn apply_head(&self, x: &Matrix) -> Matrix {
+        x.matmul_bt(&self.head)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::rtn::rtn_quantize;
+    use crate::quant::scale::{compute_group_scales, QuantSpec, ScaleMetric};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn dense_and_packed_ops_agree() {
+        let mut rng = Rng::new(1);
+        let w = Matrix::randn(24, 32, 1.0, &mut rng);
+        let spec = QuantSpec::new(8, 16);
+        let scales = compute_group_scales(&w, &spec, ScaleMetric::L2, None);
+        let q = rtn_quantize(&w, &scales, &spec);
+        let dense = LinearOp::Dense(q.dequantize());
+        let packed = LinearOp::Packed(q);
+        assert_eq!(dense.out_dim(), packed.out_dim());
+        assert_eq!(dense.in_dim(), packed.in_dim());
+        assert!(!dense.is_packed() && packed.is_packed());
+        assert!(packed.weight_bytes() < dense.weight_bytes());
+        let x = Matrix::randn(3, 32, 1.0, &mut rng);
+        let a = dense.forward(&x);
+        let b = packed.forward(&x);
+        assert!(a.max_abs_diff(&b) < 1e-4, "diff {}", a.max_abs_diff(&b));
+    }
+}

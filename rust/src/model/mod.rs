@@ -8,12 +8,21 @@
 //! weight containers, checkpoint I/O, and a native Rust forward used for
 //! activation capture in the quantization pipeline, as the runtime fallback,
 //! and for KV-cached decoding in the serve path.
+//!
+//! Execution is representation-generic: [`linear`] defines the
+//! [`LinearOp`]/[`BlockLinears`]/[`ModelExec`] interface, [`exec`] the
+//! deployable [`ExecModel`] that runs packed quantized linears through the
+//! fused dequant kernels — the `--packed` serve/eval path.
 
 pub mod config;
+pub mod exec;
 pub mod forward;
+pub mod linear;
 pub mod store;
 pub mod weights;
 
 pub use config::{ModelConfig, Preset};
+pub use exec::{ExecLayer, ExecModel};
 pub use forward::{forward_captures, forward_logits, DecodeState, LayerCaptures};
+pub use linear::{BlockLinears, LinearOp, ModelExec};
 pub use weights::{LayerWeights, LinearKind, ModelWeights};

@@ -6,6 +6,8 @@
 //! scales, zeros (f32) and the packed u32 words of [`PackedInts`].
 
 use crate::model::config::ModelConfig;
+use crate::model::exec::{ExecLayer, ExecModel};
+use crate::model::linear::LinearOp;
 use crate::model::weights::{LinearKind, ModelWeights};
 use crate::quant::format::{PackedInts, QuantizedLinear};
 use crate::tensor::Matrix;
@@ -206,9 +208,36 @@ pub fn save_quantized(path: &Path, qm: &QuantizedModel) -> Result<()> {
     write_container(path, &header, &payload)
 }
 
-/// Load a quantized model; linears are dequantized into `weights` and the
-/// packed forms returned alongside.
-pub fn load_quantized(path: &Path) -> Result<QuantizedModel> {
+/// Everything parsed out of a quantized container, before choosing an
+/// execution representation (dequantized [`ModelWeights`] vs packed
+/// [`ExecModel`]). Every packed linear has passed
+/// [`QuantizedLinear::validate`]: truncated packed payloads, non-bijective
+/// perms and zero / non-finite channel scales are corrupt-checkpoint errors
+/// here, never a panic or NaN weights downstream.
+struct QuantizedParts {
+    config: ModelConfig,
+    fp: BTreeMap<String, (Vec<usize>, usize)>,
+    linears: BTreeMap<(usize, &'static str), QuantizedLinear>,
+    quantizers: BTreeMap<(usize, &'static str), String>,
+    payload: Vec<u8>,
+}
+
+impl QuantizedParts {
+    /// Fetch + shape-check one FP tensor from the payload.
+    fn fp_tensor(&self, name: &str, shape: &[usize]) -> Result<Vec<f32>> {
+        let (s, off) = self
+            .fp
+            .get(name)
+            .with_context(|| format!("tensor {name} missing from checkpoint"))?;
+        if s != shape {
+            bail!("tensor {name}: shape {s:?} != expected {shape:?}");
+        }
+        let n: usize = shape.iter().product();
+        Ok(bytes_to_f32s(payload_slice(&self.payload, *off, 4 * n)?))
+    }
+}
+
+fn read_quantized_parts(path: &Path) -> Result<QuantizedParts> {
     let (header, payload) = read_container(path)?;
     let config = ModelConfig::from_json(header.get("config"))
         .context("bad config in checkpoint header")?;
@@ -229,10 +258,24 @@ pub fn load_quantized(path: &Path) -> Result<QuantizedModel> {
     let mut quantizers: BTreeMap<(usize, &'static str), String> = BTreeMap::new();
     for (name, t) in &packed {
         let shape = t.get("shape").usize_vec();
+        if shape.len() != 2 {
+            bail!("tensor {name}: packed tensors must be 2-D, got {shape:?}");
+        }
         let (rows, cols) = (shape[0], shape[1]);
         let bits = t.get("bits").as_usize().context("bits")? as u8;
         let group_size = t.get("group_size").as_usize().context("group_size")?;
+        if !matches!(bits, 1..=8) || group_size == 0 || rows == 0 || cols == 0 {
+            bail!("tensor {name}: bad packed geometry (bits {bits}, group {group_size}, [{rows}, {cols}])");
+        }
         let wpr = t.get("words_per_row").as_usize().context("words_per_row")?;
+        // A short word count would make `get`/`unpack` read out of bounds —
+        // reject the checkpoint as corrupt instead.
+        if wpr != PackedInts::words_needed(cols, bits) {
+            bail!(
+                "tensor {name}: corrupt packed payload (words_per_row {wpr} != {} for {cols} cols at {bits} bits)",
+                PackedInts::words_needed(cols, bits)
+            );
+        }
         let n_g = cols.div_ceil(group_size);
         let mut off = t.get("offset").as_usize().context("offset")?;
         let scales = Matrix::from_vec(
@@ -256,21 +299,12 @@ pub fn load_quantized(path: &Path) -> Result<QuantizedModel> {
         let perm = if t.get("perm").as_bool().unwrap_or(false) {
             let p = bytes_to_u32s(payload_slice(&payload, off, 4 * cols)?);
             off += 4 * cols;
-            // A bad entry would index out of bounds at dequantization —
-            // corrupted checkpoints must fail here with an Err, not panic.
-            if p.iter().any(|&v| v as usize >= cols) {
-                bail!("tensor {name}: perm entry out of range (cols = {cols})");
-            }
             Some(p)
         } else {
             None
         };
         let channel_scales = if t.get("channel_scales").as_bool().unwrap_or(false) {
-            let cs = bytes_to_f32s(payload_slice(&payload, off, 4 * cols)?);
-            if cs.iter().any(|v| !v.is_finite() || *v == 0.0) {
-                bail!("tensor {name}: non-finite or zero channel scale");
-            }
-            Some(cs)
+            Some(bytes_to_f32s(payload_slice(&payload, off, 4 * cols)?))
         } else {
             None
         };
@@ -285,6 +319,7 @@ pub fn load_quantized(path: &Path) -> Result<QuantizedModel> {
             perm,
             channel_scales,
         };
+        q.validate().map_err(|e| anyhow::anyhow!("tensor {name}: {e}"))?;
         let (idx, kind) = name
             .strip_prefix("layers.")
             .and_then(|r| r.split_once('.'))
@@ -302,13 +337,16 @@ pub fn load_quantized(path: &Path) -> Result<QuantizedModel> {
         }
         linears.insert((idx, kind_static), q);
     }
-    let weights = ModelWeights::from_named(config, |name, shape| {
-        if let Some((s, off)) = fp.get(name) {
-            if s != shape {
-                bail!("tensor {name}: shape mismatch");
-            }
-            let n: usize = shape.iter().product();
-            return Ok(bytes_to_f32s(payload_slice(&payload, *off, 4 * n)?));
+    Ok(QuantizedParts { config, fp, linears, quantizers, payload })
+}
+
+/// Load a quantized model; linears are dequantized into `weights` and the
+/// packed forms returned alongside.
+pub fn load_quantized(path: &Path) -> Result<QuantizedModel> {
+    let parts = read_quantized_parts(path)?;
+    let weights = ModelWeights::from_named(parts.config, |name, shape| {
+        if parts.fp.contains_key(name) {
+            return parts.fp_tensor(name, shape);
         }
         // packed linear: dequantize
         let (idx, kind) = name
@@ -323,10 +361,65 @@ pub fn load_quantized(path: &Path) -> Result<QuantizedModel> {
                 .with_context(|| format!("missing tensor {name}"))?
                 .label(),
         );
-        let q = linears.get(&key).with_context(|| format!("missing packed {name}"))?;
+        let q = parts.linears.get(&key).with_context(|| format!("missing packed {name}"))?;
+        if (q.rows, q.cols) != (shape[0], shape[1]) {
+            bail!("tensor {name}: packed shape [{}, {}] != expected {shape:?}", q.rows, q.cols);
+        }
         Ok(q.dequantize().data)
     })?;
-    Ok(QuantizedModel { config, weights, linears, quantizers })
+    Ok(QuantizedModel {
+        config: parts.config,
+        weights,
+        linears: parts.linears,
+        quantizers: parts.quantizers,
+    })
+}
+
+/// Load a quantized checkpoint for *packed execution*: every packed linear
+/// becomes a [`LinearOp::Packed`] running the fused dequant kernels — no
+/// dense weight matrix is ever materialized for them. Linears stored f32
+/// (mixed checkpoints) run dense; norms/embedding/head are always FP.
+pub fn load_quantized_packed(path: &Path) -> Result<ExecModel> {
+    let mut parts = read_quantized_parts(path)?;
+    let cfg = parts.config;
+    let (d, f, v) = (cfg.d_model, cfg.ffn, cfg.vocab);
+    let mat = |parts: &QuantizedParts, name: &str, r: usize, c: usize| -> Result<Matrix> {
+        Ok(Matrix::from_vec(r, c, parts.fp_tensor(name, &[r, c])?))
+    };
+    let embed = mat(&parts, "embed", v, d)?;
+    let mut layers = Vec::with_capacity(cfg.n_layers);
+    for i in 0..cfg.n_layers {
+        let p = |n: &str| format!("layers.{i}.{n}");
+        let mut op = |kind: LinearKind, r: usize, c: usize| -> Result<LinearOp> {
+            match parts.linears.remove(&(i, kind.label())) {
+                Some(q) => {
+                    if (q.rows, q.cols) != (r, c) {
+                        bail!(
+                            "tensor {}: packed shape [{}, {}] != expected [{r}, {c}]",
+                            p(kind.label()),
+                            q.rows,
+                            q.cols
+                        );
+                    }
+                    Ok(LinearOp::Packed(q))
+                }
+                None => Ok(LinearOp::Dense(mat(&parts, &p(kind.label()), r, c)?)),
+            }
+        };
+        let wq = op(LinearKind::Wq, d, d)?;
+        let wk = op(LinearKind::Wk, d, d)?;
+        let wv = op(LinearKind::Wv, d, d)?;
+        let wo = op(LinearKind::Wo, d, d)?;
+        let w1 = op(LinearKind::W1, f, d)?;
+        let w3 = op(LinearKind::W3, f, d)?;
+        let w2 = op(LinearKind::W2, d, f)?;
+        let ln1 = parts.fp_tensor(&p("ln1"), &[d])?;
+        let ln2 = parts.fp_tensor(&p("ln2"), &[d])?;
+        layers.push(ExecLayer { wq, wk, wv, wo, w1, w3, w2, ln1, ln2 });
+    }
+    let ln_f = parts.fp_tensor("ln_f", &[d])?;
+    let head = mat(&parts, "head", v, d)?;
+    Ok(ExecModel { config: cfg, embed, layers, ln_f, head })
 }
 
 fn write_container(path: &Path, header: &Json, payload: &[u8]) -> Result<()> {
@@ -547,6 +640,56 @@ mod tests {
         save_quantized(&p, &qm).unwrap();
         let err = load_quantized(&p).unwrap_err().to_string();
         assert!(err.contains("channel scale"), "{err}");
+        // truncated packed words (words_per_row no longer covers cols·bits):
+        // both load paths must reject it as corrupt, not panic in get/unpack
+        let qm = build(&|q| {
+            for row in &mut q.qweight {
+                row.words.pop();
+            }
+        });
+        let p = tmp("bad_words.tsr");
+        save_quantized(&p, &qm).unwrap();
+        let err = load_quantized(&p).unwrap_err().to_string();
+        assert!(err.contains("corrupt packed payload"), "{err}");
+        let err = load_quantized_packed(&p).unwrap_err().to_string();
+        assert!(err.contains("corrupt packed payload"), "{err}");
+    }
+
+    #[test]
+    fn packed_load_matches_dense_dequant_load() {
+        // The --packed load path must produce the same model function as the
+        // dequantize-at-load path, without materializing dense linears.
+        let mut rng = Rng::new(21);
+        let cfg = Preset::Tiny.config();
+        let w = ModelWeights::init(cfg, &mut rng);
+        let spec = QuantSpec::new(4, 32);
+        let mut weights = w.clone();
+        let mut linears = BTreeMap::new();
+        for li in 0..cfg.n_layers {
+            for kind in LinearKind::ALL {
+                let m = w.layers[li].linear(kind).clone();
+                let scales = compute_group_scales(&m, &spec, ScaleMetric::L2, None);
+                let q = crate::quant::rtn::rtn_quantize(&m, &scales, &spec);
+                *weights.layers[li].linear_mut(kind) = q.dequantize();
+                linears.insert((li, kind.label()), q);
+            }
+        }
+        let qm = QuantizedModel { config: cfg, weights, linears, quantizers: BTreeMap::new() };
+        let p = tmp("packed_exec.tsr");
+        save_quantized(&p, &qm).unwrap();
+
+        let dense = load_quantized(&p).unwrap();
+        let packed = load_quantized_packed(&p).unwrap();
+        assert_eq!(packed.packed_linears(), 7 * cfg.n_layers);
+        let tokens: Vec<u8> = (0..10).map(|i| i * 23).collect();
+        let a = crate::model::forward_logits(&dense.weights, &tokens);
+        let b = crate::model::forward_logits(&packed, &tokens);
+        let scale = a.data.iter().fold(1.0f32, |m, v| m.max(v.abs()));
+        assert!(
+            a.max_abs_diff(&b) < 1e-3 * scale,
+            "packed exec diverged: {}",
+            a.max_abs_diff(&b)
+        );
     }
 
     #[test]

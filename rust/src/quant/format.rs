@@ -1,81 +1,21 @@
-//! Grouped, bit-packed integer weight storage.
+//! Grouped, bit-packed quantized-linear format — storage *and* execution.
 //!
 //! Weight-only quantization's deployment story (the paper §2.2: "supported
 //! by major LLM inference frameworks such as vLLM and TensorRT-LLM") needs a
 //! real packed format: integers are packed along the input dimension into
-//! `u32` words (little-endian bit order, values may straddle word
-//! boundaries for 3-bit), with one `(scale, zero)` pair per `(row, group)`.
-//! The same packed layout is what the L1 Pallas dequant-matmul kernel
-//! unpacks in VMEM.
+//! `u32` words ([`PackedInts`], little-endian bit order, values may straddle
+//! word boundaries for 3-bit), with one `(scale, zero)` pair per
+//! `(row, group)`. The same packed layout is what the L1 Pallas
+//! dequant-matmul kernel unpacks in VMEM; [`QuantizedLinear::forward`] is
+//! its CPU mirror — a fused group-wise dequant GEMV/GEMM over the packed
+//! words (`tensor::packed`), so serve/eval execute quantized checkpoints
+//! without ever materializing a dense weight matrix.
 
+use crate::tensor::packed::{group_sums, packed_row_dot};
 use crate::tensor::Matrix;
+use anyhow::{bail, Result};
 
-/// Bit-packed unsigned integers (2/3/4/8 bits per value).
-#[derive(Clone, Debug, PartialEq)]
-pub struct PackedInts {
-    pub bits: u8,
-    pub len: usize,
-    pub words: Vec<u32>,
-}
-
-impl PackedInts {
-    /// Pack `vals` (each < 2^bits) into a little-endian bit stream.
-    pub fn pack(vals: &[u8], bits: u8) -> PackedInts {
-        assert!(matches!(bits, 1..=8), "bits must be 1..=8");
-        let total_bits = vals.len() * bits as usize;
-        let mut words = vec![0u32; total_bits.div_ceil(32)];
-        for (i, &v) in vals.iter().enumerate() {
-            debug_assert!((v as u32) < (1u32 << bits), "value {v} out of range for {bits} bits");
-            let bit = i * bits as usize;
-            let word = bit / 32;
-            let off = bit % 32;
-            words[word] |= (v as u32) << off;
-            let spill = off + bits as usize;
-            if spill > 32 {
-                words[word + 1] |= (v as u32) >> (32 - off);
-            }
-        }
-        PackedInts { bits, len: vals.len(), words }
-    }
-
-    /// Unpack back to bytes.
-    pub fn unpack(&self) -> Vec<u8> {
-        let bits = self.bits as usize;
-        let mask = if bits == 32 { u32::MAX } else { (1u32 << bits) - 1 };
-        (0..self.len)
-            .map(|i| {
-                let bit = i * bits;
-                let word = bit / 32;
-                let off = bit % 32;
-                let mut v = self.words[word] >> off;
-                if off + bits > 32 {
-                    v |= self.words[word + 1] << (32 - off);
-                }
-                (v & mask) as u8
-            })
-            .collect()
-    }
-
-    #[inline]
-    pub fn get(&self, i: usize) -> u8 {
-        debug_assert!(i < self.len);
-        let bits = self.bits as usize;
-        let mask = (1u32 << bits) - 1;
-        let bit = i * bits;
-        let word = bit / 32;
-        let off = bit % 32;
-        let mut v = self.words[word] >> off;
-        if off + bits > 32 && word + 1 < self.words.len() {
-            v |= self.words[word + 1] << (32 - off);
-        }
-        (v & mask) as u8
-    }
-
-    /// Size in bytes of the packed payload.
-    pub fn nbytes(&self) -> usize {
-        self.words.len() * 4
-    }
-}
+pub use crate::tensor::packed::PackedInts;
 
 /// A fully quantized linear layer: packed integers + per-(row, group)
 /// scales/zero-points. Rows are output channels; grouping runs along the
@@ -143,6 +83,75 @@ impl QuantizedLinear {
         }
     }
 
+    /// Structural integrity check — the one gate every deserialized linear
+    /// must pass before any decode path touches it. Rejects truncated packed
+    /// payloads (where `get`/`unpack` would otherwise panic), shape-mismatched
+    /// scales/zeros, non-bijective `perm`, and zero / non-finite
+    /// `channel_scales` (which would turn `dequant_row_into`'s division into
+    /// inf/NaN weights).
+    pub fn validate(&self) -> Result<()> {
+        if !matches!(self.bits, 1..=8) {
+            bail!("bits {} out of range 1..=8", self.bits);
+        }
+        if self.group_size == 0 {
+            bail!("group_size must be positive");
+        }
+        let n_g = self.n_groups();
+        if self.qweight.len() != self.rows {
+            bail!("{} packed rows != {} rows", self.qweight.len(), self.rows);
+        }
+        let need = PackedInts::words_needed(self.cols, self.bits);
+        for (r, q) in self.qweight.iter().enumerate() {
+            if q.bits != self.bits || q.len != self.cols {
+                bail!("row {r}: packed layout ({} bits, {} vals) != ({}, {})",
+                    q.bits, q.len, self.bits, self.cols);
+            }
+            if q.words.len() < need {
+                bail!("row {r}: packed payload truncated ({} words < {need} needed)",
+                    q.words.len());
+            }
+        }
+        if (self.scales.rows, self.scales.cols) != (self.rows, n_g) {
+            bail!("scales shape [{}, {}] != [{}, {n_g}]",
+                self.scales.rows, self.scales.cols, self.rows);
+        }
+        if (self.zeros.rows, self.zeros.cols) != (self.rows, n_g) {
+            bail!("zeros shape [{}, {}] != [{}, {n_g}]",
+                self.zeros.rows, self.zeros.cols, self.rows);
+        }
+        if self.scales.data.iter().any(|v| !v.is_finite()) {
+            bail!("non-finite scale");
+        }
+        if self.zeros.data.iter().any(|v| !v.is_finite()) {
+            bail!("non-finite zero-point");
+        }
+        if let Some(p) = &self.perm {
+            if p.len() != self.cols {
+                bail!("perm length {} != {} cols", p.len(), self.cols);
+            }
+            // must be a bijection: a repeated destination would leave some
+            // original column silently unwritten at dequantization
+            let mut seen = vec![false; self.cols];
+            for &v in p {
+                if v as usize >= self.cols {
+                    bail!("perm entry out of range (cols = {})", self.cols);
+                }
+                if std::mem::replace(&mut seen[v as usize], true) {
+                    bail!("perm entry {v} duplicated (not a permutation)");
+                }
+            }
+        }
+        if let Some(cs) = &self.channel_scales {
+            if cs.len() != self.cols {
+                bail!("channel_scales length {} != {} cols", cs.len(), self.cols);
+            }
+            if cs.iter().any(|v| !v.is_finite() || *v == 0.0) {
+                bail!("non-finite or zero channel scale");
+            }
+        }
+        Ok(())
+    }
+
     /// Dequantize one row into `out` (original column order: the act-order
     /// gather and AWQ channel divisors, when present, are applied here).
     pub fn dequant_row_into(&self, r: usize, out: &mut [f32]) {
@@ -176,8 +185,76 @@ impl QuantizedLinear {
         m
     }
 
+    /// Fold one activation row (original column order) into *stored* order
+    /// with the AWQ channel divisors applied, and fill the per-group sums
+    /// the fused kernel shares across output rows:
+    /// `xf[j] = x[perm[j]] / cs[j]`, `gsum[g] = Σ_{j∈g} xf[j]`.
+    pub fn fold_activation(&self, x: &[f32], xf: &mut [f32], gsum: &mut [f32]) {
+        debug_assert_eq!(x.len(), self.cols);
+        match (&self.perm, &self.channel_scales) {
+            (None, None) => xf.copy_from_slice(x),
+            (Some(p), None) => {
+                for (f, &src) in xf.iter_mut().zip(p) {
+                    *f = x[src as usize];
+                }
+            }
+            (None, Some(cs)) => {
+                for ((f, &xv), &c) in xf.iter_mut().zip(x).zip(cs) {
+                    *f = xv / c;
+                }
+            }
+            (Some(p), Some(cs)) => {
+                for ((f, &src), &c) in xf.iter_mut().zip(p).zip(cs) {
+                    *f = x[src as usize] / c;
+                }
+            }
+        }
+        group_sums(xf, self.group_size, gsum);
+    }
+
+    /// Fused GEMV: `out[r] = Σ_c W[r, c] · x[c]` computed directly from the
+    /// packed words. `xf`/`gsum` come from [`QuantizedLinear::fold_activation`].
+    pub fn gemv_into(&self, xf: &[f32], gsum: &[f32], out: &mut [f32]) {
+        debug_assert_eq!(out.len(), self.rows);
+        for (r, o) in out.iter_mut().enumerate() {
+            *o = packed_row_dot(
+                &self.qweight[r].words,
+                self.bits,
+                self.cols,
+                self.group_size,
+                self.scales.row(r),
+                self.zeros.row(r),
+                xf,
+                gsum,
+            );
+        }
+    }
+
+    /// Fused dequant GEMM: `x @ Wᵀ` (`[T, cols] → [T, rows]`) straight from
+    /// the packed words — numerically the dequantized matmul, reading
+    /// `bits/32` of its weight bytes. Parallel over activation rows, the
+    /// same split as the dense `matmul_bt`.
+    pub fn forward(&self, x: &Matrix) -> Matrix {
+        assert_eq!(x.cols, self.cols, "packed gemm shape mismatch");
+        let n_g = self.n_groups();
+        let mut out = Matrix::zeros(x.rows, self.rows);
+        let out_ptr = crate::util::SendPtr(out.data.as_mut_ptr());
+        crate::util::threadpool::parallel_for_chunked(x.rows, 4, |t| {
+            let mut xf = vec![0.0f32; self.cols];
+            let mut gsum = vec![0.0f32; n_g];
+            self.fold_activation(x.row(t), &mut xf, &mut gsum);
+            // SAFETY: each worker writes a disjoint output row.
+            let orow: &mut [f32] = unsafe {
+                std::slice::from_raw_parts_mut(out_ptr.get().add(t * self.rows), self.rows)
+            };
+            self.gemv_into(&xf, &gsum, orow);
+        });
+        out
+    }
+
     /// Total payload bytes (packed ints + scales + zeros + optional
-    /// permutation / channel scales), for the compression-ratio report.
+    /// permutation / channel scales), for the compression-ratio report and
+    /// the bytes-touched-per-token column of the packed-GEMV bench.
     pub fn nbytes(&self) -> usize {
         self.qweight.iter().map(|p| p.nbytes()).sum::<usize>()
             + (self.scales.data.len() + self.zeros.data.len()) * 4
@@ -195,39 +272,6 @@ impl QuantizedLinear {
 mod tests {
     use super::*;
     use crate::util::proptest::{check, prop_assert};
-
-    #[test]
-    fn pack_roundtrip_all_widths() {
-        for bits in [1u8, 2, 3, 4, 5, 8] {
-            let max = 1u32 << bits;
-            let vals: Vec<u8> = (0..1000u32).map(|i| ((i * 7 + 3) % max) as u8).collect();
-            let p = PackedInts::pack(&vals, bits);
-            assert_eq!(p.unpack(), vals, "bits={bits}");
-            for (i, &v) in vals.iter().enumerate() {
-                assert_eq!(p.get(i), v, "bits={bits} i={i}");
-            }
-        }
-    }
-
-    #[test]
-    fn pack_density() {
-        // 3-bit: 1000 values -> 3000 bits -> 94 words.
-        let p = PackedInts::pack(&vec![5u8; 1000], 3);
-        assert_eq!(p.words.len(), 94);
-        assert_eq!(p.nbytes(), 376);
-    }
-
-    #[test]
-    fn prop_pack_roundtrip() {
-        check("pack/unpack roundtrip", 60, |g| {
-            let bits = g.usize_in(1, 8) as u8;
-            let n = g.usize_in(1, 300);
-            let vals: Vec<u8> =
-                (0..n).map(|_| g.usize_in(0, (1usize << bits) - 1) as u8).collect();
-            let p = PackedInts::pack(&vals, bits);
-            prop_assert(p.unpack() == vals, "roundtrip")
-        });
-    }
 
     #[test]
     fn quantized_linear_dequant() {
@@ -274,5 +318,102 @@ mod tests {
         let bpw = q.bits_per_weight();
         // 2 bits + (2 groups * 8 bytes) / 128 weights = 2 + 1 = 3 bits.
         assert!((bpw - 3.0).abs() < 0.01, "bpw={bpw}");
+    }
+
+    /// Random quantized linear over the full metadata space: any bit width,
+    /// ragged tail group, optional act-order perm, optional channel scales.
+    fn random_linear(g: &mut crate::util::proptest::Gen) -> QuantizedLinear {
+        let bits = [2u8, 3, 4, 8][g.usize_in(0, 3)];
+        let group = [8usize, 16, 32][g.usize_in(0, 2)];
+        let rows = g.usize_in(1, 6);
+        let cols = g.usize_in(1, 3) * group + g.usize_in(0, group - 1);
+        let n_g = cols.div_ceil(group);
+        let max = 1usize << bits;
+        let mut rng = g.rng.fork(17);
+        let ints: Vec<Vec<u8>> = (0..rows)
+            .map(|_| (0..cols).map(|_| (rng.next_u64() as usize % max) as u8).collect())
+            .collect();
+        let scales = Matrix::from_vec(
+            rows,
+            n_g,
+            (0..rows * n_g).map(|_| 0.01 + rng.normal().abs() as f32).collect(),
+        );
+        let zeros = Matrix::from_vec(
+            rows,
+            n_g,
+            (0..rows * n_g).map(|_| (rng.next_u64() % max as u64) as f32).collect(),
+        );
+        let mut q = QuantizedLinear::from_ints(&ints, bits, group, scales, zeros);
+        if g.bool() {
+            let mut p: Vec<u32> = (0..cols as u32).collect();
+            rng.shuffle(&mut p);
+            q.perm = Some(p);
+        }
+        if g.bool() {
+            q.channel_scales =
+                Some((0..cols).map(|_| 0.5 + rng.normal().abs() as f32).collect());
+        }
+        q
+    }
+
+    #[test]
+    fn prop_fused_forward_matches_dense_dequant_matmul() {
+        // The tentpole equivalence: packed execution ≡ dequantize-then-GEMM,
+        // across bit widths (incl. 3-bit word straddling), ragged tail
+        // groups, act-order perms and AWQ channel scales.
+        check("packed forward == dequant + matmul_bt", 50, |g| {
+            let q = random_linear(g);
+            let t = g.usize_in(1, 5);
+            let mut rng = g.rng.fork(23);
+            let x = Matrix::randn(t, q.cols, 1.0, &mut rng);
+            let fused = q.forward(&x);
+            let dense = x.matmul_bt(&q.dequantize());
+            let scale = dense.data.iter().fold(1.0f32, |m, v| m.max(v.abs()));
+            prop_assert(
+                fused.max_abs_diff(&dense) <= 2e-4 * scale,
+                &format!(
+                    "bits={} group={} cols={} perm={} cs={}: diff {}",
+                    q.bits,
+                    q.group_size,
+                    q.cols,
+                    q.perm.is_some(),
+                    q.channel_scales.is_some(),
+                    fused.max_abs_diff(&dense)
+                ),
+            )
+        });
+    }
+
+    #[test]
+    fn validate_accepts_good_and_rejects_corrupt() {
+        let ints = vec![vec![1u8, 2, 3, 0], vec![0, 1, 2, 3]];
+        let scales = Matrix::from_vec(2, 2, vec![1.0; 4]);
+        let zeros = Matrix::zeros(2, 2);
+        let good = QuantizedLinear::from_ints(&ints, 2, 2, scales, zeros);
+        good.validate().unwrap();
+
+        let mut truncated = good.clone();
+        truncated.qweight[1].words.clear();
+        assert!(truncated.validate().unwrap_err().to_string().contains("truncated"));
+
+        let mut bad_perm = good.clone();
+        bad_perm.perm = Some(vec![4, 0, 1, 2]);
+        assert!(bad_perm.validate().unwrap_err().to_string().contains("out of range"));
+
+        let mut dup_perm = good.clone();
+        dup_perm.perm = Some(vec![0, 0, 1, 2]);
+        assert!(dup_perm.validate().unwrap_err().to_string().contains("duplicated"));
+
+        let mut bad_cs = good.clone();
+        bad_cs.channel_scales = Some(vec![1.0, 0.0, 1.0, 1.0]);
+        assert!(bad_cs.validate().unwrap_err().to_string().contains("channel scale"));
+
+        let mut bad_scale = good.clone();
+        bad_scale.scales[(1, 0)] = f32::NAN;
+        assert!(bad_scale.validate().unwrap_err().to_string().contains("non-finite scale"));
+
+        let mut bad_shape = good;
+        bad_shape.scales = Matrix::zeros(2, 3);
+        assert!(bad_shape.validate().is_err());
     }
 }

@@ -157,6 +157,25 @@ pub fn refine_scales(
 
 /// Convenience wrapper operating on a [`QuantizedLinear`]: extracts the
 /// frozen `v = w_int − z`, refines, and writes the new scales back.
+///
+/// `vint` lives in *stored* column order (that is what the packed integers
+/// are), while `w`/`h`/`r` arrive in *original* order. When the linear
+/// carries an act-order `perm` or AWQ `channel_scales`, the whole problem
+/// is therefore transformed into stored coordinates before the CD sweep —
+/// refining against the original-order `w`/`h` would produce plausibly-wrong
+/// scales (each group's update would be computed against the wrong columns).
+///
+/// With `P` the stored→original gather and `C = diag(channel_scales)`, the
+/// dequantized weights are `Q̂ = (S∘V) C⁻¹ Pᵀ`, so the loss
+/// `tr(ΔW H ΔWᵀ) + 2 tr(W R ΔWᵀ)` becomes, in stored coordinates,
+///
+/// ```text
+/// W″ = W P C          w″[r,j] = w[r, perm[j]] · cs[j]
+/// H″ = C⁻¹ Pᵀ H P C⁻¹  h″[i,j] = h[perm[i], perm[j]] / (cs[i]·cs[j])
+/// R″ = C⁻¹ Pᵀ R P C⁻¹  (same gather/scaling as H)
+/// ```
+///
+/// and `refine_scales(W″, V, H″, R″)` is exactly the original objective.
 pub fn refine_quantized_linear(
     w: &Matrix,
     q: &mut QuantizedLinear,
@@ -180,9 +199,59 @@ pub fn refine_quantized_linear(
         group_size: g,
         bits: q.bits,
     };
-    let report = refine_scales(w, &vint, h, r, &mut gs, cfg);
+    let report = if q.perm.is_none() && q.channel_scales.is_none() {
+        refine_scales(w, &vint, h, r, &mut gs, cfg)
+    } else {
+        let (wg, hg, rg) = to_stored_coords(w, h, r, q);
+        refine_scales(&wg, &vint, &hg, rg.as_ref(), &mut gs, cfg)
+    };
     q.scales = gs.scales;
     report
+}
+
+/// Gather `w`/`h`/`r` into stored column order with the AWQ channel
+/// divisors folded in (see [`refine_quantized_linear`]).
+fn to_stored_coords(
+    w: &Matrix,
+    h: &Matrix,
+    r: Option<&Matrix>,
+    q: &QuantizedLinear,
+) -> (Matrix, Matrix, Option<Matrix>) {
+    let cols = q.cols;
+    let orig = |j: usize| -> usize {
+        match &q.perm {
+            Some(p) => p[j] as usize,
+            None => j,
+        }
+    };
+    let cs = |j: usize| -> f32 {
+        match &q.channel_scales {
+            Some(c) => c[j],
+            None => 1.0,
+        }
+    };
+    let mut wg = Matrix::zeros(w.rows, cols);
+    for rr in 0..w.rows {
+        let src = w.row(rr);
+        let dst = wg.row_mut(rr);
+        for (j, d) in dst.iter_mut().enumerate() {
+            *d = src[orig(j)] * cs(j);
+        }
+    }
+    let gather_sym = |m: &Matrix| -> Matrix {
+        let mut out = Matrix::zeros(cols, cols);
+        for i in 0..cols {
+            let oi = orig(i);
+            let ci = cs(i);
+            let src = m.row(oi);
+            let dst = out.row_mut(i);
+            for (j, d) in dst.iter_mut().enumerate() {
+                *d = src[orig(j)] / (ci * cs(j));
+            }
+        }
+        out
+    };
+    (wg, gather_sym(h), r.map(gather_sym))
 }
 
 #[cfg(test)]
@@ -352,6 +421,71 @@ mod tests {
                 &format!("loss increased {before} -> {after} (seed {seed})"),
             )
         });
+    }
+
+    #[test]
+    fn identity_perm_and_unit_channel_scales_match_plain_refine() {
+        // The stored-coordinate transform must be exactly a no-op for
+        // trivial metadata.
+        let (w, hd, q0, _) = setup(8, 48, 16, 2, 11);
+        let mut q_plain = q0.clone();
+        let mut q_meta = q0.clone();
+        q_meta.perm = Some((0..q_meta.cols as u32).collect());
+        q_meta.channel_scales = Some(vec![1.0; q_meta.cols]);
+        refine_quantized_linear(&w, &mut q_plain, &hd, None, &Stage2Config::default());
+        refine_quantized_linear(&w, &mut q_meta, &hd, None, &Stage2Config::default());
+        assert!(q_plain.scales.max_abs_diff(&q_meta.scales) < 1e-5);
+    }
+
+    #[test]
+    fn refines_actorder_output_in_correct_column_order() {
+        // Regression: refining an act-order linear used to build `vint` in
+        // stored order against `w`/`h` in original order, producing
+        // plausibly-wrong scales. The gathered transform must strictly
+        // reduce the *original-order* layer loss.
+        let mut rng = Rng::new(31);
+        let w = Matrix::randn(12, 64, 1.0, &mut rng);
+        let h = correlated_hessian(64, 256, &mut rng);
+        let spec = QuantSpec::new(2, 16);
+        let mut wd = w.clone();
+        let hd = prepare_hessian(&h, &mut wd, 0.01);
+        let mut q = crate::quant::actorder::gptq_quantize_actorder(
+            &w,
+            &h,
+            &spec,
+            crate::quant::scale::ScaleMetric::L2,
+            &GptqConfig::default(),
+        )
+        .unwrap()
+        .into_quantized_linear();
+        assert!(q.perm.is_some(), "actorder must set perm");
+        let before = layer_loss(&w, &q.dequantize(), &hd);
+        let rep = refine_quantized_linear(&w, &mut q, &hd, None, &Stage2Config::default());
+        let after = layer_loss(&w, &q.dequantize(), &hd);
+        assert!(rep.updated_groups > 0);
+        assert!(
+            after < before * 0.9999,
+            "stage2 on act-order output must reduce loss: {before} -> {after}"
+        );
+    }
+
+    #[test]
+    fn refines_awq_output_through_channel_scales() {
+        let mut rng = Rng::new(32);
+        let w = Matrix::randn(10, 64, 1.0, &mut rng);
+        let h = correlated_hessian(64, 256, &mut rng);
+        let spec = QuantSpec::new(3, 16);
+        let mut wd = w.clone();
+        let hd = prepare_hessian(&h, &mut wd, 0.01);
+        let mut q = crate::quant::awq::awq_quantize(&w, &hd, &spec).into_quantized_linear();
+        assert!(q.channel_scales.is_some(), "awq must set channel_scales");
+        let before = layer_loss(&w, &q.dequantize(), &hd);
+        refine_quantized_linear(&w, &mut q, &hd, None, &Stage2Config::default());
+        let after = layer_loss(&w, &q.dequantize(), &hd);
+        assert!(
+            after <= before * (1.0 + 1e-6),
+            "stage2 on AWQ output must not increase loss: {before} -> {after}"
+        );
     }
 
     #[test]

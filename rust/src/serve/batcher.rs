@@ -5,8 +5,13 @@
 //! decodes the whole batch in lock-step, one token per step, with the
 //! per-sequence KV caches advancing in parallel worker threads. This is the
 //! same continuous-batching shape vLLM's router uses, reduced to its core.
+//!
+//! The worker is generic over [`ModelExec`], so the same batcher drives
+//! dense f32 weights and the packed fused-dequant execution path
+//! (`tsgo serve --packed`).
 
-use crate::model::{DecodeState, ModelWeights};
+use crate::model::{DecodeState, ModelExec};
+use anyhow::{anyhow, Result};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
@@ -43,7 +48,7 @@ impl Default for BatcherConfig {
 struct Pending {
     req: GenRequest,
     enqueued: Instant,
-    reply: Sender<GenResponse>,
+    reply: Sender<Result<GenResponse, String>>,
 }
 
 /// A shared handle: submit requests, a background thread serves them.
@@ -52,24 +57,29 @@ pub struct DynamicBatcher {
 }
 
 impl DynamicBatcher {
-    /// Spawn the batching worker over the given weights.
-    pub fn spawn(weights: Arc<ModelWeights>, cfg: BatcherConfig) -> DynamicBatcher {
+    /// Spawn the batching worker over the given model (dense or packed).
+    pub fn spawn<M: ModelExec + Send + Sync + 'static>(
+        model: Arc<M>,
+        cfg: BatcherConfig,
+    ) -> DynamicBatcher {
         let (tx, rx) = channel::<Pending>();
-        std::thread::spawn(move || worker_loop(weights, cfg, rx));
+        std::thread::spawn(move || worker_loop(model, cfg, rx));
         DynamicBatcher { queue: tx }
     }
 
-    /// Submit a request; blocks until the response is ready.
-    pub fn generate(&self, req: GenRequest) -> Option<GenResponse> {
+    /// Submit a request; blocks until the response is ready. Decode
+    /// failures (e.g. a greedy token outside the byte range) come back as
+    /// errors, never as silently-mangled tokens.
+    pub fn generate(&self, req: GenRequest) -> Result<GenResponse> {
         let (tx, rx) = channel();
         self.queue
             .send(Pending { req, enqueued: Instant::now(), reply: tx })
-            .ok()?;
-        rx.recv().ok()
+            .map_err(|_| anyhow!("batcher unavailable"))?;
+        rx.recv().map_err(|_| anyhow!("batcher unavailable"))?.map_err(|e| anyhow!(e))
     }
 }
 
-fn worker_loop(weights: Arc<ModelWeights>, cfg: BatcherConfig, rx: Receiver<Pending>) {
+fn worker_loop<M: ModelExec>(model: Arc<M>, cfg: BatcherConfig, rx: Receiver<Pending>) {
     loop {
         // block for the first request, then soak up stragglers
         let first = match rx.recv() {
@@ -88,30 +98,34 @@ fn worker_loop(weights: Arc<ModelWeights>, cfg: BatcherConfig, rx: Receiver<Pend
                 Err(_) => break,
             }
         }
-        run_batch(&weights, batch);
+        run_batch(model.as_ref(), batch);
     }
 }
 
-fn run_batch(weights: &ModelWeights, batch: Vec<Pending>) {
+fn run_batch<M: ModelExec>(model: &M, batch: Vec<Pending>) {
     let bs = batch.len();
     // Decode all sequences in lock-step; each sequence owns a KV cache and
     // advances on a worker thread per step (threads scale with batch).
-    let results: Vec<(Vec<u8>, Instant, Sender<GenResponse>)> = {
+    type Decoded = (Result<Vec<u8>, String>, Instant, Sender<Result<GenResponse, String>>);
+    let results: Vec<Decoded> = {
         let outputs = Mutex::new(Vec::with_capacity(bs));
         crate::util::threadpool::parallel_for(bs, |i| {
             let p = &batch[i];
-            let mut st = DecodeState::new(weights);
-            let mut logits = Vec::new();
-            for &t in &p.req.prompt {
-                logits = st.step(t);
-            }
-            let mut out = Vec::with_capacity(p.req.max_new);
-            for _ in 0..p.req.max_new {
-                let next = argmax(&logits);
-                out.push(next);
-                logits = st.step(next);
-            }
-            outputs.lock().unwrap().push((i, out));
+            let decode = || -> Result<Vec<u8>, String> {
+                let mut st = DecodeState::new(model);
+                let mut logits = Vec::new();
+                for &t in &p.req.prompt {
+                    logits = st.step(t);
+                }
+                let mut out = Vec::with_capacity(p.req.max_new);
+                for _ in 0..p.req.max_new {
+                    let next = argmax_token(&logits)?;
+                    out.push(next);
+                    logits = st.step(next);
+                }
+                Ok(out)
+            };
+            outputs.lock().unwrap().push((i, decode()));
         });
         let mut v = outputs.into_inner().unwrap();
         v.sort_by_key(|(i, _)| *i);
@@ -121,30 +135,46 @@ fn run_batch(weights: &ModelWeights, batch: Vec<Pending>) {
             .collect()
     };
     for (tokens, enqueued, reply) in results {
-        let _ = reply.send(GenResponse {
+        let _ = reply.send(tokens.map(|tokens| GenResponse {
             tokens,
             latency: enqueued.elapsed(),
             batch_size: bs,
-        });
+        }));
     }
 }
 
-fn argmax(v: &[f32]) -> u8 {
+/// Greedy argmax with a checked conversion to the byte token type: empty
+/// or non-finite logits and indices beyond 255 are errors, not a
+/// `best as u8` truncation that would silently alias token ids for
+/// vocabularies larger than 256. For vocab ≤ 256 this is byte-exact greedy
+/// decode (first maximum wins). Public so tests/benches decode with the
+/// exact server semantics instead of re-implementing the cast.
+pub fn argmax_token(v: &[f32]) -> Result<u8, String> {
     let mut best = 0usize;
     let mut bv = f32::NEG_INFINITY;
+    if v.is_empty() {
+        return Err("empty logits (no prompt token was decoded)".into());
+    }
     for (i, &x) in v.iter().enumerate() {
         if x > bv {
             bv = x;
             best = i;
         }
     }
-    best as u8
+    // All-NaN (or all -inf) logits leave `best` at 0 — that is corrupt
+    // model output, not a real greedy pick.
+    if !bv.is_finite() {
+        return Err("non-finite logits (model produced NaN/inf)".into());
+    }
+    u8::try_from(best).map_err(|_| {
+        format!("greedy token id {best} exceeds the byte token range (vocab > 256)")
+    })
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::model::Preset;
+    use crate::model::{ModelWeights, Preset};
     use crate::util::rng::Rng;
 
     fn model() -> Arc<ModelWeights> {
@@ -200,7 +230,7 @@ mod tests {
     fn batched_matches_unbatched_tokens() {
         let m = model();
         // direct decode
-        let mut st = DecodeState::new(&m);
+        let mut st = DecodeState::new(m.as_ref());
         let prompt = [7u8, 9, 11];
         let mut logits = Vec::new();
         for &t in &prompt {
@@ -208,7 +238,7 @@ mod tests {
         }
         let mut expect = Vec::new();
         for _ in 0..4 {
-            let next = super::argmax(&logits);
+            let next = super::argmax_token(&logits).unwrap();
             expect.push(next);
             logits = st.step(next);
         }
@@ -216,5 +246,21 @@ mod tests {
         let b = DynamicBatcher::spawn(m.clone(), BatcherConfig::default());
         let r = b.generate(GenRequest { prompt: prompt.to_vec(), max_new: 4 }).unwrap();
         assert_eq!(r.tokens, expect);
+    }
+
+    #[test]
+    fn argmax_is_checked_not_truncating() {
+        // Regression: `best as u8` used to alias id 300 → 44 for vocab > 256
+        // and return token 0 for empty logits.
+        assert!(super::argmax_token(&[]).is_err());
+        let mut logits = vec![0.0f32; 300];
+        logits[299] = 10.0;
+        let err = super::argmax_token(&logits).unwrap_err();
+        assert!(err.contains("299"), "{err}");
+        logits[42] = 20.0;
+        assert_eq!(super::argmax_token(&logits).unwrap(), 42);
+        // all-NaN logits must be an error, not a silent token 0
+        let err = super::argmax_token(&[f32::NAN, f32::NAN]).unwrap_err();
+        assert!(err.contains("non-finite"), "{err}");
     }
 }

@@ -11,6 +11,6 @@ pub mod batcher;
 pub mod client;
 pub mod server;
 
-pub use batcher::{BatcherConfig, DynamicBatcher, GenRequest, GenResponse};
+pub use batcher::{argmax_token, BatcherConfig, DynamicBatcher, GenRequest, GenResponse};
 pub use client::request_generation;
 pub use server::{serve, ServerConfig};

@@ -6,7 +6,7 @@
 //! Error    : `{"error": "..."}`
 
 use super::batcher::{BatcherConfig, DynamicBatcher, GenRequest};
-use crate::model::ModelWeights;
+use crate::model::ModelExec;
 use crate::util::json::Json;
 use anyhow::{Context, Result};
 use std::io::{BufRead, BufReader, Write};
@@ -60,7 +60,7 @@ fn handle_line(batcher: &DynamicBatcher, line: &str) -> String {
     }
     let max_new = req.get("max_new").as_usize().unwrap_or(16).min(512);
     match batcher.generate(GenRequest { prompt, max_new }) {
-        Some(resp) => Json::obj(vec![
+        Ok(resp) => Json::obj(vec![
             (
                 "tokens",
                 Json::arr(resp.tokens.iter().map(|&t| Json::num(t as f64))),
@@ -69,7 +69,7 @@ fn handle_line(batcher: &DynamicBatcher, line: &str) -> String {
             ("batch_size", Json::num(resp.batch_size as f64)),
         ])
         .to_string(),
-        None => respond_err("batcher unavailable"),
+        Err(e) => respond_err(&e.to_string()),
     }
 }
 
@@ -97,11 +97,16 @@ fn handle_conn(batcher: Arc<DynamicBatcher>, stream: TcpStream) {
 
 /// Run the server (blocking). Returns the bound address (useful with
 /// `addr: "127.0.0.1:0"`). Connections are handled on their own threads;
-/// generation is funneled through the shared [`DynamicBatcher`].
-pub fn serve(weights: Arc<ModelWeights>, cfg: ServerConfig) -> Result<()> {
+/// generation is funneled through the shared [`DynamicBatcher`]. Generic
+/// over the execution representation: dense [`crate::model::ModelWeights`]
+/// or the packed [`crate::model::ExecModel`] (`tsgo serve --packed`).
+pub fn serve<M: ModelExec + Send + Sync + 'static>(
+    model: Arc<M>,
+    cfg: ServerConfig,
+) -> Result<()> {
     let listener = TcpListener::bind(&cfg.addr)
         .with_context(|| format!("bind {}", cfg.addr))?;
-    let batcher = Arc::new(DynamicBatcher::spawn(weights, cfg.batcher));
+    let batcher = Arc::new(DynamicBatcher::spawn(model, cfg.batcher));
     println!("tsgo serving on {}", listener.local_addr()?);
     let mut served = 0usize;
     for stream in listener.incoming() {
@@ -119,13 +124,13 @@ pub fn serve(weights: Arc<ModelWeights>, cfg: ServerConfig) -> Result<()> {
 }
 
 /// Bind a listener first (so callers know the port), then serve on a thread.
-pub fn serve_in_background(
-    weights: Arc<ModelWeights>,
+pub fn serve_in_background<M: ModelExec + Send + Sync + 'static>(
+    model: Arc<M>,
     cfg: ServerConfig,
 ) -> Result<(std::net::SocketAddr, std::thread::JoinHandle<()>)> {
     let listener = TcpListener::bind(&cfg.addr)?;
     let addr = listener.local_addr()?;
-    let batcher = Arc::new(DynamicBatcher::spawn(weights, cfg.batcher));
+    let batcher = Arc::new(DynamicBatcher::spawn(model, cfg.batcher));
     let max = cfg.max_connections;
     let handle = std::thread::spawn(move || {
         let mut served = 0usize;
@@ -147,7 +152,7 @@ pub fn serve_in_background(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::model::Preset;
+    use crate::model::{ModelWeights, Preset};
     use crate::serve::client::request_generation;
     use crate::util::rng::Rng;
 

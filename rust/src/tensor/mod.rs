@@ -3,10 +3,14 @@
 //! The quantization algorithms operate on per-layer weight matrices and
 //! Hessians (≤ a few thousand on a side), so a compact row-major f32 matrix
 //! with a blocked, multi-threaded GEMM and a Cholesky-based solver family is
-//! the whole substrate GPTQ needs.
+//! the whole substrate GPTQ needs. [`packed`] adds the deployment half:
+//! bit-packed integer storage and the fused group-wise dequant GEMV kernels
+//! the packed execution path runs on.
 
 pub mod linalg;
 pub mod matrix;
+pub mod packed;
 
 pub use linalg::{cholesky_lower, cholesky_inverse_upper, invert_spd, solve_lower, solve_upper};
 pub use matrix::Matrix;
+pub use packed::PackedInts;

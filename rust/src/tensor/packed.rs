@@ -1,0 +1,330 @@
+//! Bit-packed integer storage + fused group-wise dequant kernels.
+//!
+//! [`PackedInts`] is the storage primitive every quantized linear uses:
+//! integers packed along the input dimension into `u32` words
+//! (little-endian bit order, values may straddle word boundaries for
+//! 3-bit). The kernels below are the *execution* half of the format — the
+//! CPU mirror of the L1 Pallas dequant-matmul: they compute group-wise
+//! dequant × activation dot products straight from the packed words,
+//! unpacking in-register, so serving and eval never materialize a dense
+//! weight row.
+//!
+//! The group-wise affine dequant `w_j = s_g (q_j − z_g)` factors out of the
+//! dot product per group:
+//!
+//! ```text
+//! Σ_{j∈g} s_g (q_j − z_g) x_j  =  s_g ( Σ_{j∈g} q_j x_j  −  z_g Σ_{j∈g} x_j )
+//! ```
+//!
+//! so the kernel needs one integer dot per `(row, group)` plus per-group
+//! activation sums that are computed **once per activation row and shared
+//! across every output row** — the same decomposition the fused VMEM kernel
+//! uses, and the reason the packed path touches `bits/32` of the bytes the
+//! dense f32 path reads.
+
+/// Bit-packed unsigned integers (1–8 bits per value).
+#[derive(Clone, Debug, PartialEq)]
+pub struct PackedInts {
+    pub bits: u8,
+    pub len: usize,
+    pub words: Vec<u32>,
+}
+
+impl PackedInts {
+    /// Number of `u32` words needed to hold `len` values at `bits` width —
+    /// the invariant `words.len()` must satisfy for `get`/`unpack`/the
+    /// kernels to be defined. Checkpoint loaders validate against this.
+    #[inline]
+    pub fn words_needed(len: usize, bits: u8) -> usize {
+        (len * bits as usize).div_ceil(32)
+    }
+
+    /// Pack `vals` (each < 2^bits) into a little-endian bit stream.
+    pub fn pack(vals: &[u8], bits: u8) -> PackedInts {
+        assert!(matches!(bits, 1..=8), "bits must be 1..=8");
+        let mut words = vec![0u32; Self::words_needed(vals.len(), bits)];
+        for (i, &v) in vals.iter().enumerate() {
+            debug_assert!((v as u32) < (1u32 << bits), "value {v} out of range for {bits} bits");
+            let bit = i * bits as usize;
+            let word = bit / 32;
+            let off = bit % 32;
+            words[word] |= (v as u32) << off;
+            let spill = off + bits as usize;
+            if spill > 32 {
+                words[word + 1] |= (v as u32) >> (32 - off);
+            }
+        }
+        PackedInts { bits, len: vals.len(), words }
+    }
+
+    /// `true` iff `words` holds enough words for `len` values — the
+    /// invariant `pack` establishes and deserialized payloads must satisfy.
+    #[inline]
+    pub fn is_complete(&self) -> bool {
+        self.words.len() >= Self::words_needed(self.len, self.bits)
+    }
+
+    /// Unpack back to bytes. Panics on a truncated `words` vec (`get`
+    /// rejects identically); checkpoint loads surface that as an `Err`
+    /// before any decode path can reach it.
+    pub fn unpack(&self) -> Vec<u8> {
+        assert!(self.is_complete(), "truncated PackedInts: {} words < {} needed",
+            self.words.len(), Self::words_needed(self.len, self.bits));
+        let bits = self.bits as usize;
+        let mask = (1u32 << bits) - 1;
+        (0..self.len)
+            .map(|i| {
+                let bit = i * bits;
+                let word = bit / 32;
+                let off = bit % 32;
+                let mut v = self.words[word] >> off;
+                if off + bits > 32 {
+                    v |= self.words[word + 1] << (32 - off);
+                }
+                (v & mask) as u8
+            })
+            .collect()
+    }
+
+    /// Random access. Panics on a truncated `words` vec — consistently with
+    /// [`PackedInts::unpack`], instead of silently dropping straddling high
+    /// bits the way an unchecked read would.
+    #[inline]
+    pub fn get(&self, i: usize) -> u8 {
+        debug_assert!(i < self.len);
+        assert!(self.is_complete(), "truncated PackedInts: {} words < {} needed",
+            self.words.len(), Self::words_needed(self.len, self.bits));
+        let bits = self.bits as usize;
+        let mask = (1u32 << bits) - 1;
+        let bit = i * bits;
+        let word = bit / 32;
+        let off = bit % 32;
+        let mut v = self.words[word] >> off;
+        if off + bits > 32 {
+            v |= self.words[word + 1] << (32 - off);
+        }
+        (v & mask) as u8
+    }
+
+    /// Size in bytes of the packed payload.
+    pub fn nbytes(&self) -> usize {
+        self.words.len() * 4
+    }
+}
+
+/// Integer × activation dot over columns `c0..c1` of a packed row:
+/// `Σ_{j∈[c0,c1)} q_j x[j]`, unpacking in-register.
+///
+/// Two paths: a word-at-a-time loop when values never straddle word
+/// boundaries and the span starts word-aligned (bits ∈ {1,2,4,8} with
+/// aligned groups — the common deployment shapes), and a streaming 64-bit
+/// bit-buffer for everything else (3-bit, ragged starts).
+#[inline]
+pub fn dot_span(words: &[u32], bits: u8, c0: usize, c1: usize, x: &[f32]) -> f32 {
+    debug_assert!(c1 <= x.len());
+    if c0 >= c1 {
+        return 0.0;
+    }
+    let b = bits as usize;
+    let mask = (1u32 << bits) - 1;
+    if 32 % b == 0 && (c0 * b) % 32 == 0 {
+        // Aligned path: each word holds 32/bits whole values.
+        let vpw = 32 / b;
+        let mut acc = 0.0f32;
+        let mut j = c0;
+        let mut wi = c0 * b / 32;
+        while j < c1 {
+            let mut w = words[wi];
+            wi += 1;
+            let n = vpw.min(c1 - j);
+            for _ in 0..n {
+                acc += (w & mask) as f32 * x[j];
+                w >>= bits;
+                j += 1;
+            }
+        }
+        acc
+    } else {
+        // Streaming path: keep unconsumed bits in a u64 buffer (≤ 39 bits
+        // live at any point since bits ≤ 8), refill one word at a time.
+        let bit0 = c0 * b;
+        let mut wi = bit0 / 32;
+        let off = bit0 % 32;
+        let mut buf = (words[wi] >> off) as u64;
+        let mut have = 32 - off;
+        wi += 1;
+        let mut acc = 0.0f32;
+        for xj in &x[c0..c1] {
+            if have < b {
+                buf |= (words[wi] as u64) << have;
+                wi += 1;
+                have += 32;
+            }
+            acc += ((buf as u32) & mask) as f32 * xj;
+            buf >>= b;
+            have -= b;
+        }
+        acc
+    }
+}
+
+/// Fused group-wise dequant GEMV for one packed row:
+/// `y = Σ_g s[g] · ( Σ_{j∈g} q_j x[j] − z[g] · gsum[g] )`.
+///
+/// `x` is the activation in *stored* column order (act-order gather and AWQ
+/// channel divisors already folded in — see `QuantizedLinear::fold_activation`)
+/// and `gsum[g] = Σ_{j∈g} x[j]` is precomputed once per activation row and
+/// shared across all output rows.
+#[inline]
+pub fn packed_row_dot(
+    words: &[u32],
+    bits: u8,
+    cols: usize,
+    group_size: usize,
+    scales: &[f32],
+    zeros: &[f32],
+    x: &[f32],
+    gsum: &[f32],
+) -> f32 {
+    let n_g = cols.div_ceil(group_size);
+    debug_assert!(scales.len() >= n_g && zeros.len() >= n_g && gsum.len() >= n_g);
+    debug_assert!(words.len() >= PackedInts::words_needed(cols, bits));
+    let mut y = 0.0f32;
+    for g in 0..n_g {
+        let c0 = g * group_size;
+        let c1 = (c0 + group_size).min(cols);
+        let qdot = dot_span(words, bits, c0, c1, x);
+        y += scales[g] * (qdot - zeros[g] * gsum[g]);
+    }
+    y
+}
+
+/// Per-group activation sums `gsum[g] = Σ_{j∈g} x[j]` (the shared zero-point
+/// term of [`packed_row_dot`]).
+#[inline]
+pub fn group_sums(x: &[f32], group_size: usize, gsum: &mut [f32]) {
+    for (g, chunk) in x.chunks(group_size).enumerate() {
+        gsum[g] = chunk.iter().sum();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{check, prop_assert};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn pack_roundtrip_all_widths() {
+        for bits in [1u8, 2, 3, 4, 5, 8] {
+            let max = 1u32 << bits;
+            let vals: Vec<u8> = (0..1000u32).map(|i| ((i * 7 + 3) % max) as u8).collect();
+            let p = PackedInts::pack(&vals, bits);
+            assert_eq!(p.unpack(), vals, "bits={bits}");
+            for (i, &v) in vals.iter().enumerate() {
+                assert_eq!(p.get(i), v, "bits={bits} i={i}");
+            }
+        }
+    }
+
+    #[test]
+    fn pack_density() {
+        // 3-bit: 1000 values -> 3000 bits -> 94 words.
+        let p = PackedInts::pack(&vec![5u8; 1000], 3);
+        assert_eq!(p.words.len(), 94);
+        assert_eq!(p.nbytes(), 376);
+        assert_eq!(PackedInts::words_needed(1000, 3), 94);
+    }
+
+    #[test]
+    fn prop_pack_roundtrip() {
+        check("pack/unpack roundtrip", 60, |g| {
+            let bits = g.usize_in(1, 8) as u8;
+            let n = g.usize_in(1, 300);
+            let vals: Vec<u8> =
+                (0..n).map(|_| g.usize_in(0, (1usize << bits) - 1) as u8).collect();
+            let p = PackedInts::pack(&vals, bits);
+            prop_assert(p.unpack() == vals, "roundtrip")
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "truncated PackedInts")]
+    fn unpack_rejects_truncated_words() {
+        let mut p = PackedInts::pack(&[7u8; 33], 3); // 99 bits -> 4 words
+        p.words.pop();
+        let _ = p.unpack();
+    }
+
+    #[test]
+    #[should_panic(expected = "truncated PackedInts")]
+    fn get_rejects_truncated_words() {
+        // Regression: `get` used to silently drop the straddling high bits
+        // of the last value when the words vec was short, while `unpack`
+        // panicked — they must reject identically.
+        let mut p = PackedInts::pack(&[7u8; 33], 3);
+        p.words.pop();
+        let _ = p.get(0);
+    }
+
+    fn reference_dot(vals: &[u8], c0: usize, c1: usize, x: &[f32]) -> f32 {
+        vals[c0..c1].iter().zip(&x[c0..c1]).map(|(&q, &v)| q as f32 * v).sum()
+    }
+
+    #[test]
+    fn dot_span_matches_reference_all_widths() {
+        let mut rng = Rng::new(11);
+        for bits in [1u8, 2, 3, 4, 5, 8] {
+            let n = 130; // odd size: exercises ragged ends
+            let max = 1usize << bits;
+            let vals: Vec<u8> = (0..n).map(|i| ((i * 13 + 5) % max) as u8).collect();
+            let x: Vec<f32> = rng.normal_vec(n, 1.0);
+            let p = PackedInts::pack(&vals, bits);
+            for (c0, c1) in [(0, n), (0, 64), (64, n), (7, 93), (33, 34), (5, 5)] {
+                let got = dot_span(&p.words, bits, c0, c1, &x);
+                let want = reference_dot(&vals, c0, c1, &x);
+                assert!(
+                    (got - want).abs() <= 1e-3 * want.abs().max(1.0),
+                    "bits={bits} span=({c0},{c1}): {got} vs {want}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn prop_packed_row_dot_matches_scalar_dequant() {
+        check("fused row dot == scalar dequant dot", 40, |g| {
+            let bits = [2u8, 3, 4, 8][g.usize_in(0, 3)];
+            let group = [8usize, 16, 32][g.usize_in(0, 2)];
+            // non-multiple cols exercise the ragged tail group
+            let cols = g.usize_in(1, 5) * group + g.usize_in(0, group - 1);
+            let n_g = cols.div_ceil(group);
+            let max = 1usize << bits;
+            let mut rng = g.rng.fork(3);
+            let vals: Vec<u8> = (0..cols).map(|_| (rng.next_u64() as usize % max) as u8).collect();
+            let x: Vec<f32> = rng.normal_vec(cols, 1.0);
+            let scales: Vec<f32> = (0..n_g).map(|_| 0.01 + rng.normal().abs() as f32).collect();
+            let zeros: Vec<f32> =
+                (0..n_g).map(|_| (rng.next_u64() % max as u64) as f32).collect();
+            let p = PackedInts::pack(&vals, bits);
+            let mut gsum = vec![0.0f32; n_g];
+            group_sums(&x, group, &mut gsum);
+            let got = packed_row_dot(&p.words, bits, cols, group, &scales, &zeros, &x, &gsum);
+            let want: f32 = (0..cols)
+                .map(|j| scales[j / group] * (vals[j] as f32 - zeros[j / group]) * x[j])
+                .sum();
+            prop_assert(
+                (got - want).abs() <= 1e-3 * want.abs().max(1.0),
+                &format!("bits={bits} group={group} cols={cols}: {got} vs {want}"),
+            )
+        });
+    }
+
+    #[test]
+    fn group_sums_ragged_tail() {
+        let x = [1.0f32, 2.0, 3.0, 4.0, 5.0];
+        let mut gsum = [0.0f32; 3];
+        group_sums(&x, 2, &mut gsum);
+        assert_eq!(gsum, [3.0, 7.0, 5.0]);
+    }
+}
