@@ -1,7 +1,7 @@
 # Repo-level entry points. `make check` is the tier-1 gate
 # (build + tests + formatting).
 
-.PHONY: check build test fmt clippy artifacts
+.PHONY: check build test fmt clippy bench-json artifacts
 
 check:
 	bash ci.sh
@@ -17,6 +17,11 @@ fmt:
 
 clippy:
 	cd rust && cargo clippy -q -- -D warnings
+
+# Run the packed-GEMV benchmark and drop its machine-readable baseline
+# (tokens/s, GB/s, scalar-vs-SIMD speedup per bit width) at the repo root.
+bench-json:
+	cd rust && TSGO_BENCH_JSON=../BENCH_packed_gemv.json cargo bench --bench packed_gemv
 
 # AOT-lower the L2/L1 JAX + Pallas graphs to HLO artifacts for the runtime.
 artifacts:

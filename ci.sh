@@ -14,6 +14,9 @@ fi
 cargo build --release
 cargo test -q
 cargo fmt --check
+# All bench targets must keep compiling (they are plain main() binaries and
+# easy to break silently since nothing else links them).
+cargo bench --no-run
 # Lint gate: warnings are errors. `|| true` is NOT acceptable here — a
 # clippy regression must fail CI.
 cargo clippy -q -- -D warnings

@@ -80,8 +80,8 @@ fn main() -> tsgo::Result<()> {
 
     let clients = 8;
     let packed = ExecModel::from_quantized(&qm);
-    let lin_fp_bytes: usize = qm.linears.values().map(|q| q.rows * q.cols * 4).sum();
-    let byte_ratio = lin_fp_bytes as f64 / packed.linear_weight_bytes() as f64;
+    let byte_ratio =
+        packed.dense_linear_bytes() as f64 / packed.linear_weight_bytes() as f64;
     drive("FP32", Arc::new(fp), clients, 32);
     drive("INT2", Arc::new(qm.weights), clients, 32);
     drive("INT2-pack", Arc::new(packed), clients, 32);

@@ -1,23 +1,34 @@
 //! Packed execution microbenchmarks: the fused group-wise dequant GEMV/GEMM
-//! against the dense f32 path it replaces.
+//! against the dense f32 path it replaces, and the dispatched SIMD kernels
+//! against the forced-scalar reference.
 //!
-//! Three views, each with a bytes-touched column (the memory-bandwidth
-//! story that motivates weight-only quantization — paper §2.2):
+//! Views, each with a bytes-touched column (the memory-bandwidth story that
+//! motivates weight-only quantization — paper §2.2):
 //!
-//! * single-token GEMV (the decode hot loop) per bit width;
-//! * prefill GEMM (T = 64) per bit width;
+//! * single-token GEMV (the decode hot loop) per bit width, forced-scalar
+//!   vs dispatched — the per-kernel speedup table;
+//! * prefill GEMM scaling with batch size (the two-level blocking means
+//!   throughput keeps climbing past the activation row count);
 //! * end-to-end KV-cached decode tokens/s, dense [`ExecModel`] vs packed.
 //!
-//! `cargo bench --bench packed_gemv`
+//! Besides the human-readable tables, the run emits a machine-readable
+//! baseline to `BENCH_packed_gemv.json` (override with `TSGO_BENCH_JSON`)
+//! so the repo carries a perf trajectory across PRs: tokens/s, GB/s and
+//! scalar-vs-dispatched speedup per bit width, plus the GEMM batch sweep.
+//!
+//! `cargo bench --bench packed_gemv` (or `make bench-json` from the repo
+//! root, which drops the JSON next to this README).
 
+use std::collections::BTreeMap;
 use tsgo::model::{DecodeState, ExecModel, ModelWeights, Preset};
 use tsgo::quant::rtn::rtn_quantize;
 use tsgo::quant::scale::{compute_group_scales, QuantSpec, ScaleMetric};
 use tsgo::quant::QuantizedLinear;
+use tsgo::tensor::kernels::{self, ForcedKernel};
 use tsgo::tensor::Matrix;
 use tsgo::util::bench::{bench_units, print_measurements, Measurement, Table};
+use tsgo::util::json::Json;
 use tsgo::util::rng::Rng;
-use std::collections::BTreeMap;
 
 fn quantize(w: &Matrix, bits: u8, group: usize) -> QuantizedLinear {
     let spec = QuantSpec::new(bits, group);
@@ -36,20 +47,20 @@ fn main() {
     let (out_dim, in_dim, group) = (256usize, 704usize, 64usize);
     let w = Matrix::randn(out_dim, in_dim, 1.0, &mut rng);
     let x1 = Matrix::randn(1, in_dim, 1.0, &mut rng);
-    let xt = Matrix::randn(64, in_dim, 1.0, &mut rng);
 
     let mut ms: Vec<Measurement> = Vec::new();
     let mut bytes = Table::new(&["path", "weight bytes", "vs dense", "bits/weight"]);
     let dense_bytes = out_dim * in_dim * 4;
     bytes.row(vec!["dense f32".into(), format!("{dense_bytes}"), "1.00x".into(), "32.00".into()]);
 
-    ms.push(bench_units("gemv dense f32", 3, iters, Some(1.0), &mut || {
+    let m_dense_gemv = bench_units("gemv dense f32", 3, iters, Some(1.0), &mut || {
         std::hint::black_box(x1.matmul_bt(&w));
-    }));
-    ms.push(bench_units("gemm[64] dense f32", 1, iters, Some(64.0), &mut || {
-        std::hint::black_box(xt.matmul_bt(&w));
-    }));
+    });
+    ms.push(m_dense_gemv.clone());
 
+    // -- per-bit-width GEMV: forced-scalar vs dispatched kernels ------------
+    let mut speed = Table::new(&["kernel", "scalar tok/s", "dispatched tok/s", "speedup", "GB/s"]);
+    let mut gemv_json: Vec<Json> = Vec::new();
     for bits in [2u8, 3, 4, 8] {
         let q = quantize(&w, bits, group);
         bytes.row(vec![
@@ -58,15 +69,29 @@ fn main() {
             format!("{:.2}x", dense_bytes as f64 / q.nbytes() as f64),
             format!("{:.2}", q.bits_per_weight()),
         ]);
-        ms.push(bench_units(
-            &format!("gemv packed INT{bits} (fused dequant)"),
+        kernels::set_forced(ForcedKernel::Scalar);
+        let m_scalar = bench_units(
+            &format!("gemv packed INT{bits} · forced scalar"),
             3,
             iters,
             Some(1.0),
             &mut || {
                 std::hint::black_box(q.forward(&x1));
             },
-        ));
+        );
+        kernels::set_forced(ForcedKernel::Best);
+        let m_disp = bench_units(
+            &format!("gemv packed INT{bits} · dispatched"),
+            3,
+            iters,
+            Some(1.0),
+            &mut || {
+                std::hint::black_box(q.forward(&x1));
+            },
+        );
+        kernels::set_forced(ForcedKernel::Auto);
+        ms.push(m_scalar.clone());
+        ms.push(m_disp.clone());
         ms.push(bench_units(
             &format!("gemv dequant(INT{bits}) + dense (old deploy path)"),
             1,
@@ -77,15 +102,80 @@ fn main() {
                 std::hint::black_box(x1.matmul_bt(&d));
             },
         ));
-        ms.push(bench_units(
-            &format!("gemm[64] packed INT{bits} (fused dequant)"),
-            1,
-            iters,
-            Some(64.0),
-            &mut || {
-                std::hint::black_box(q.forward(&xt));
-            },
-        ));
+        let scalar_tps = m_scalar.throughput().unwrap_or(0.0);
+        let disp_tps = m_disp.throughput().unwrap_or(0.0);
+        let speedup = m_scalar.mean.as_secs_f64() / m_disp.mean.as_secs_f64().max(1e-12);
+        let gbs = q.nbytes() as f64 / m_disp.mean.as_secs_f64().max(1e-12) / 1e9;
+        speed.row(vec![
+            format!("INT{bits}"),
+            format!("{scalar_tps:.1}"),
+            format!("{disp_tps:.1}"),
+            format!("{speedup:.2}x"),
+            format!("{gbs:.2}"),
+        ]);
+        gemv_json.push(Json::obj(vec![
+            ("bits", Json::num(bits as f64)),
+            ("weight_bytes", Json::num(q.nbytes() as f64)),
+            ("scalar_tokens_per_s", Json::num(scalar_tps)),
+            ("dispatched_tokens_per_s", Json::num(disp_tps)),
+            ("speedup", Json::num(speedup)),
+            ("dispatched_gb_per_s", Json::num(gbs)),
+        ]));
+    }
+
+    // -- GEMM scaling with batch size (beyond the activation row count) -----
+    // Pin the dispatched table explicitly so the JSON baseline records what
+    // actually ran even under TSGO_FORCE_SCALAR=1.
+    kernels::set_forced(ForcedKernel::Best);
+    let mut scaling = Table::new(&["kernel", "batch", "tok/s", "vs dense"]);
+    let mut scaling_json: Vec<Json> = Vec::new();
+    let batches = [1usize, 8, 32, 128];
+    let xts: Vec<Matrix> =
+        batches.iter().map(|&t| Matrix::randn(t, in_dim, 1.0, &mut rng)).collect();
+    // one dense baseline per batch size, shared across every bit width
+    let dense_gemm: Vec<Measurement> = batches
+        .iter()
+        .zip(&xts)
+        .map(|(&t, xt)| {
+            bench_units(
+                &format!("gemm[{t}] dense f32"),
+                1,
+                iters.min(10),
+                Some(t as f64),
+                &mut || {
+                    std::hint::black_box(xt.matmul_bt(&w));
+                },
+            )
+        })
+        .collect();
+    ms.extend(dense_gemm.iter().cloned());
+    for bits in [2u8, 4] {
+        let q = quantize(&w, bits, group);
+        for ((&t, xt), m_d) in batches.iter().zip(&xts).zip(&dense_gemm) {
+            let m_p = bench_units(
+                &format!("gemm[{t}] packed INT{bits} · dispatched"),
+                1,
+                iters.min(10),
+                Some(t as f64),
+                &mut || {
+                    std::hint::black_box(q.forward(xt));
+                },
+            );
+            let tps = m_p.throughput().unwrap_or(0.0);
+            let vs_dense = m_d.mean.as_secs_f64() / m_p.mean.as_secs_f64().max(1e-12);
+            scaling.row(vec![
+                format!("INT{bits}"),
+                format!("{t}"),
+                format!("{tps:.1}"),
+                format!("{vs_dense:.2}x"),
+            ]);
+            scaling_json.push(Json::obj(vec![
+                ("bits", Json::num(bits as f64)),
+                ("batch", Json::num(t as f64)),
+                ("tokens_per_s", Json::num(tps)),
+                ("speedup_vs_dense", Json::num(vs_dense)),
+            ]));
+        }
     }
 
     // -- end-to-end decode: dense ExecModel vs packed ExecModel -------------
@@ -118,7 +208,7 @@ fn main() {
         }
         logits
     };
-    ms.push(bench_units(
+    let m_decode_dense = bench_units(
         &format!("decode {decode_tokens} tok · dense exec (tiny)"),
         1,
         iters.min(10),
@@ -126,8 +216,8 @@ fn main() {
         &mut || {
             std::hint::black_box(run_decode(&dense));
         },
-    ));
-    ms.push(bench_units(
+    );
+    let m_decode_packed = bench_units(
         &format!("decode {decode_tokens} tok · packed INT2 exec (tiny)"),
         1,
         iters.min(10),
@@ -135,7 +225,13 @@ fn main() {
         &mut || {
             std::hint::black_box(run_decode(&packed));
         },
-    ));
+    );
+    // capture provenance BEFORE restoring Auto: the scaling + decode
+    // sections above ran under the pinned Best table.
+    let dispatch_under_test = packed.kernel_dispatch();
+    kernels::set_forced(ForcedKernel::Auto);
+    ms.push(m_decode_dense.clone());
+    ms.push(m_decode_packed.clone());
     bytes.row(vec![
         "tiny model linears, dense".into(),
         format!("{}", dense.linear_weight_bytes()),
@@ -157,6 +253,59 @@ fn main() {
     ]);
 
     print_measurements("packed dequant GEMV / GEMM vs dense", &ms);
+    speed.print(&format!(
+        "scalar vs dispatched ({}) — single-token GEMV per bit width",
+        kernels::best_table().name
+    ));
+    scaling.print("packed GEMM scaling with batch size (two-level blocking)");
     bytes.print("weight bytes touched per full application");
     println!("\nthroughput column: activation rows (tokens) per second.");
+    println!("kernel dispatch under test: {dispatch_under_test}");
+
+    // -- machine-readable baseline ------------------------------------------
+    let report = Json::obj(vec![
+        ("bench", Json::str("packed_gemv")),
+        ("schema", Json::num(1.0)),
+        ("threads", Json::num(tsgo::util::threadpool::num_threads() as f64)),
+        ("kernel_table", Json::str(kernels::best_table().name)),
+        (
+            "shape",
+            Json::obj(vec![
+                ("out", Json::num(out_dim as f64)),
+                ("in", Json::num(in_dim as f64)),
+                ("group", Json::num(group as f64)),
+            ]),
+        ),
+        (
+            "dense",
+            Json::obj(vec![
+                ("weight_bytes", Json::num(dense_bytes as f64)),
+                (
+                    "gemv_tokens_per_s",
+                    Json::num(m_dense_gemv.throughput().unwrap_or(0.0)),
+                ),
+            ]),
+        ),
+        ("gemv", Json::arr(gemv_json)),
+        ("gemm_scaling", Json::arr(scaling_json)),
+        (
+            "decode",
+            Json::obj(vec![
+                (
+                    "dense_tokens_per_s",
+                    Json::num(m_decode_dense.throughput().unwrap_or(0.0)),
+                ),
+                (
+                    "packed_int2_tokens_per_s",
+                    Json::num(m_decode_packed.throughput().unwrap_or(0.0)),
+                ),
+            ]),
+        ),
+    ]);
+    let out_path = std::env::var("TSGO_BENCH_JSON")
+        .unwrap_or_else(|_| "BENCH_packed_gemv.json".to_string());
+    match std::fs::write(&out_path, format!("{report}\n")) {
+        Ok(()) => println!("wrote {out_path}"),
+        Err(e) => eprintln!("warning: could not write {out_path}: {e}"),
+    }
 }

@@ -79,7 +79,7 @@ fn main() {
         "weights", "clients", "tok/s", "p50 ms", "p95 ms", "max batch",
     ]);
     let packed = Arc::new(ExecModel::from_quantized(&qm));
-    let lin_fp_bytes: usize = qm.linears.values().map(|q| q.rows * q.cols * 4).sum();
+    let lin_fp_bytes = packed.dense_linear_bytes();
     let fp = Arc::new(fp);
     let q = Arc::new(qm.weights);
     let max_new = 24;

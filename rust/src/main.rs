@@ -7,6 +7,7 @@
 //! * `quantize`  — run the PTQ pipeline (GPTQ baseline or the paper's method)
 //! * `eval`      — perplexity + 0-shot suite for a checkpoint
 //! * `serve`     — batched generation server over a checkpoint
+//! * `kernels`   — the runtime-selected dequant kernel dispatch table
 //! * `warmup`    — pre-compile all HLO artifacts
 
 use anyhow::{bail, Context, Result};
@@ -45,6 +46,7 @@ fn run(argv: &[String]) -> Result<()> {
         "quantize" => cmd_quantize(rest),
         "eval" => cmd_eval(rest),
         "serve" => cmd_serve(rest),
+        "kernels" => cmd_kernels(),
         "warmup" => cmd_warmup(),
         "help" | "--help" | "-h" => {
             print_help();
@@ -70,6 +72,8 @@ fn print_help() {
          \x20            [--quantized | --packed]); --packed executes the packed\n\
          \x20            ints through the fused dequant kernels, never\n\
          \x20            materializing dense weights\n\
+         \x20 kernels    print the dequant kernel dispatch table (CPU features,\n\
+         \x20            per-bit-width kernel selection, forcing state)\n\
          \x20 warmup     pre-compile all artifacts"
     );
 }
@@ -282,6 +286,7 @@ fn cmd_eval(argv: &[String]) -> Result<()> {
             em.total_linears(),
             em.linear_weight_bytes() as f64 / 1e6
         );
+        println!("kernels: {}", em.kernel_dispatch());
         return run_eval_report(&em, windows, n_tasks, &mut native_ppl);
     }
     let w = load_any_model(Path::new(&a.str("model")), a.flag("quantized"))?;
@@ -322,10 +327,33 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
             em.linear_weight_bytes() as f64 / 1e6,
             em.dense_linear_bytes() as f64 / 1e6
         );
+        println!("kernels: {}", em.kernel_dispatch());
         return tsgo::serve::serve(Arc::new(em), cfg);
     }
     let w = Arc::new(load_any_model(Path::new(&a.str("model")), a.flag("quantized"))?);
     tsgo::serve::serve(w, cfg)
+}
+
+fn cmd_kernels() -> Result<()> {
+    let info = tsgo::tensor::kernels::dispatch_info();
+    println!("dequant kernel dispatch");
+    println!("  arch: {}", std::env::consts::ARCH);
+    for (feat, have) in &info.cpu_features {
+        println!("  cpu {feat}: {}", if *have { "yes" } else { "no" });
+    }
+    println!("  threads: {}", tsgo::util::threadpool::num_threads());
+    println!(
+        "  best table: {} | active: {}{}",
+        info.best,
+        info.active,
+        if info.forced_scalar { " (TSGO_FORCE_SCALAR / forced)" } else { "" }
+    );
+    println!("  {:<6} {:<16} {:<16}", "bits", "scalar", "active");
+    for (bits, scalar, active) in &info.rows {
+        println!("  {:<6} {:<16} {:<16}", bits, scalar, active);
+    }
+    println!("\nforce the portable path with TSGO_FORCE_SCALAR=1 (bit-identical\nto the SIMD kernels by construction; see ROADMAP.md).");
+    Ok(())
 }
 
 fn cmd_warmup() -> Result<()> {

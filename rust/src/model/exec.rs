@@ -180,6 +180,34 @@ impl ExecModel {
             .map(|op| op.weight_bytes())
             .sum()
     }
+
+    /// One-line dequant-kernel dispatch summary for this model's packed
+    /// linears under the currently active kernel table, e.g.
+    /// `"avx2 [INT2→avx2-srlv, INT4→avx2-srlv]"` — printed by the serve/eval
+    /// `--packed` banners and `tsgo kernels` so a deployment log always
+    /// records which unpack paths actually ran.
+    pub fn kernel_dispatch(&self) -> String {
+        let table = crate::tensor::kernels::active_table();
+        let mut widths: Vec<u8> = self
+            .layers
+            .iter()
+            .flat_map(|l| LinearKind::ALL.iter().map(|&k| l.op(k)))
+            .filter_map(|op| match op {
+                LinearOp::Packed(q) => Some(q.bits),
+                LinearOp::Dense(_) => None,
+            })
+            .collect();
+        widths.sort_unstable();
+        widths.dedup();
+        if widths.is_empty() {
+            return format!("{} [no packed linears]", table.name);
+        }
+        let per_width: Vec<String> = widths
+            .iter()
+            .map(|&b| format!("INT{b}→{}", table.labels[b as usize]))
+            .collect();
+        format!("{} [{}]", table.name, per_width.join(", "))
+    }
 }
 
 impl ModelExec for ExecModel {
@@ -248,6 +276,16 @@ mod tests {
         assert_eq!(em.packed_linears(), 0);
         let got = forward_logits(&em, &tokens);
         assert!(got.max_abs_diff(&want) < 1e-6);
+    }
+
+    #[test]
+    fn kernel_dispatch_names_packed_widths() {
+        let (_, qm) = quantized_tiny(6, 2);
+        let em = ExecModel::from_quantized(&qm);
+        let s = em.kernel_dispatch();
+        assert!(s.contains("INT2"), "{s}");
+        let dense = ExecModel::from_dense(qm.weights.clone());
+        assert!(dense.kernel_dispatch().contains("no packed linears"));
     }
 
     #[test]

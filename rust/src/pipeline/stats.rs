@@ -6,7 +6,7 @@
 //! `[T, in]` capture matrices straight from the forward pass.
 
 use crate::tensor::Matrix;
-use crate::util::threadpool::parallel_for_chunked;
+use crate::util::threadpool::parallel_for_auto;
 
 /// f64-accumulating symmetric second-moment estimator.
 #[derive(Clone, Debug)]
@@ -29,7 +29,7 @@ impl MomentAccum {
         let dim = self.dim;
         let acc_ptr = crate::util::SendPtr(self.acc.as_mut_ptr());
         // Parallel over output rows i: acc[i][j] += Σ_t x[t][i]·x[t][j].
-        parallel_for_chunked(dim, 8, |i| {
+        parallel_for_auto(dim, |i| {
             // SAFETY: each worker owns disjoint rows of the accumulator.
             let row: &mut [f64] =
                 unsafe { std::slice::from_raw_parts_mut(acc_ptr.get().add(i * dim), dim) };
@@ -54,7 +54,7 @@ impl MomentAccum {
         assert_eq!(a.cols, self.dim);
         let dim = self.dim;
         let acc_ptr = crate::util::SendPtr(self.acc.as_mut_ptr());
-        parallel_for_chunked(dim, 8, |i| {
+        parallel_for_auto(dim, |i| {
             let row: &mut [f64] =
                 unsafe { std::slice::from_raw_parts_mut(acc_ptr.get().add(i * dim), dim) };
             for t in 0..a.rows {

@@ -17,6 +17,18 @@ use anyhow::{bail, Result};
 
 pub use crate::tensor::packed::PackedInts;
 
+/// Output-weight rows per packed-GEMM work item. One tile's packed rows +
+/// scales/zeros fit comfortably in L2 at every supported width.
+const ROW_TILE: usize = 64;
+/// Activation rows per packed-GEMM work item: how many times each fetched
+/// packed weight row is reused before moving on.
+const ACT_BLOCK: usize = 8;
+/// Below this many weight elements, a single-token GEMV runs serially on
+/// the calling thread: the scoped spawn/join of a parallel region (tens of
+/// µs) costs more than the dot products it would split. Above it, decode
+/// parallelizes across row tiles.
+const PAR_GEMV_MIN_ELEMS: usize = 1 << 20;
+
 /// A fully quantized linear layer: packed integers + per-(row, group)
 /// scales/zero-points. Rows are output channels; grouping runs along the
 /// input dimension, exactly as in the paper's Fig. 1.
@@ -230,24 +242,103 @@ impl QuantizedLinear {
         }
     }
 
+    /// Fused GEMV from a raw activation row (original column order): fold +
+    /// group sums + dot, with the working buffers checked out of the shared
+    /// scratch pool — steady-state decode allocates nothing per token.
+    pub fn gemv(&self, x: &[f32], out: &mut [f32]) {
+        let mut xf = crate::util::scratch::take_f32(self.cols);
+        let mut gsum = crate::util::scratch::take_f32(self.n_groups());
+        self.fold_activation(x, &mut xf, &mut gsum);
+        self.gemv_into(&xf, &gsum, out);
+    }
+
     /// Fused dequant GEMM: `x @ Wᵀ` (`[T, cols] → [T, rows]`) straight from
     /// the packed words — numerically the dequantized matmul, reading
-    /// `bits/32` of its weight bytes. Parallel over activation rows, the
-    /// same split as the dense `matmul_bt`.
+    /// `bits/32` of its weight bytes.
+    ///
+    /// Two-level blocking instead of the old rows-only split: activations
+    /// are folded **once** per row up front (shared by every output-row
+    /// tile), then work items are output-row tiles × activation blocks. A
+    /// tile's packed weight rows stay cache-hot across its `ACT_BLOCK`
+    /// activation rows, and the item count is
+    /// `⌈rows/ROW_TILE⌉ · ⌈T/ACT_BLOCK⌉`, so prefill batches keep every
+    /// core busy well past the activation row count — and single-token
+    /// decode (`T = 1`) parallelizes across row tiles instead of running on
+    /// one thread. Working buffers come from the scratch pool; nothing is
+    /// allocated per call except the output.
     pub fn forward(&self, x: &Matrix) -> Matrix {
         assert_eq!(x.cols, self.cols, "packed gemm shape mismatch");
+        let t_rows = x.rows;
         let n_g = self.n_groups();
-        let mut out = Matrix::zeros(x.rows, self.rows);
+        let mut out = Matrix::zeros(t_rows, self.rows);
+        if t_rows == 0 {
+            return out;
+        }
+        if t_rows == 1
+            && (self.rows <= ROW_TILE || self.rows * self.cols < PAR_GEMV_MIN_ELEMS)
+        {
+            // Single-token decode on a single tile (the tiled path would be
+            // serial anyway) or on a linear too small to amortize a thread
+            // spawn: go straight through the pooled GEMV on the calling
+            // thread (same kernels, same fold — minus the staging).
+            self.gemv(x.row(0), out.row_mut(0));
+            return out;
+        }
+        let mut xf_all = crate::util::scratch::take_f32(t_rows * self.cols);
+        let mut gs_all = crate::util::scratch::take_f32(t_rows * n_g);
+        // Stage 1: fold every activation row once (act-order gather, AWQ
+        // divisors, per-group sums) — computed once per tile column and
+        // reused by every output-row tile.
+        {
+            let xf_ptr = crate::util::SendPtr(xf_all.as_mut_ptr());
+            let gs_ptr = crate::util::SendPtr(gs_all.as_mut_ptr());
+            crate::util::threadpool::parallel_for_auto(t_rows, |ti| {
+                // SAFETY: disjoint per-activation-row slices.
+                let (xf, gs) = unsafe {
+                    (
+                        std::slice::from_raw_parts_mut(
+                            xf_ptr.get().add(ti * self.cols),
+                            self.cols,
+                        ),
+                        std::slice::from_raw_parts_mut(gs_ptr.get().add(ti * n_g), n_g),
+                    )
+                };
+                self.fold_activation(x.row(ti), xf, gs);
+            });
+        }
+        // Stage 2: output-row tiles × activation blocks.
+        let n_rt = self.rows.div_ceil(ROW_TILE);
+        let n_tb = t_rows.div_ceil(ACT_BLOCK);
         let out_ptr = crate::util::SendPtr(out.data.as_mut_ptr());
-        crate::util::threadpool::parallel_for_chunked(x.rows, 4, |t| {
-            let mut xf = vec![0.0f32; self.cols];
-            let mut gsum = vec![0.0f32; n_g];
-            self.fold_activation(x.row(t), &mut xf, &mut gsum);
-            // SAFETY: each worker writes a disjoint output row.
-            let orow: &mut [f32] = unsafe {
-                std::slice::from_raw_parts_mut(out_ptr.get().add(t * self.rows), self.rows)
-            };
-            self.gemv_into(&xf, &gsum, orow);
+        let (xf_all, gs_all) = (&*xf_all, &*gs_all);
+        crate::util::threadpool::parallel_for_auto(n_rt * n_tb, |item| {
+            // row tile varies slowest so consecutive steals by one worker
+            // revisit the same packed rows while they are still hot.
+            let (rt, tb) = (item / n_tb, item % n_tb);
+            let (r0, r1) = (rt * ROW_TILE, (rt * ROW_TILE + ROW_TILE).min(self.rows));
+            let (t0, t1) = (tb * ACT_BLOCK, (tb * ACT_BLOCK + ACT_BLOCK).min(t_rows));
+            for r in r0..r1 {
+                let words = &self.qweight[r].words;
+                let srow = self.scales.row(r);
+                let zrow = self.zeros.row(r);
+                for ti in t0..t1 {
+                    let xf = &xf_all[ti * self.cols..(ti + 1) * self.cols];
+                    let gs = &gs_all[ti * n_g..(ti + 1) * n_g];
+                    let y = packed_row_dot(
+                        words,
+                        self.bits,
+                        self.cols,
+                        self.group_size,
+                        srow,
+                        zrow,
+                        xf,
+                        gs,
+                    );
+                    // SAFETY: each work item owns the disjoint output
+                    // rectangle [t0,t1) × [r0,r1).
+                    unsafe { *out_ptr.get().add(ti * self.rows + r) = y };
+                }
+            }
         });
         out
     }
@@ -380,6 +471,65 @@ mod tests {
                     q.channel_scales.is_some(),
                     fused.max_abs_diff(&dense)
                 ),
+            )
+        });
+    }
+
+    #[test]
+    fn tiled_forward_crosses_tile_boundaries() {
+        // Shapes that exercise ragged edges of BOTH blocking levels: more
+        // output rows than ROW_TILE (plus a ragged tail tile) and more
+        // activation rows than ACT_BLOCK (plus a ragged tail block).
+        let mut rng = crate::util::rng::Rng::new(77);
+        let rows = ROW_TILE * 2 + 3;
+        let cols = 96;
+        let ints: Vec<Vec<u8>> = (0..rows)
+            .map(|_| (0..cols).map(|_| (rng.next_u64() % 16) as u8).collect())
+            .collect();
+        let n_g = cols / 32;
+        let scales = Matrix::from_vec(
+            rows,
+            n_g,
+            (0..rows * n_g).map(|_| 0.01 + rng.normal().abs() as f32).collect(),
+        );
+        let zeros = Matrix::from_vec(
+            rows,
+            n_g,
+            (0..rows * n_g).map(|_| (rng.next_u64() % 16) as f32).collect(),
+        );
+        let q = QuantizedLinear::from_ints(&ints, 4, 32, scales, zeros);
+        let x = Matrix::randn(ACT_BLOCK * 2 + 5, cols, 1.0, &mut rng);
+        let fused = q.forward(&x);
+        let dense = x.matmul_bt(&q.dequantize());
+        let scale = dense.data.iter().fold(1.0f32, |m, v| m.max(v.abs()));
+        assert!(
+            fused.max_abs_diff(&dense) <= 2e-4 * scale,
+            "diff {}",
+            fused.max_abs_diff(&dense)
+        );
+    }
+
+    #[test]
+    fn pooled_gemv_matches_dense_reference() {
+        // `gemv` is the T = 1 fast path `forward` routes through for
+        // single-tile linears — check it against the independent
+        // dequantize-then-matmul reference, not against forward itself.
+        check("gemv == dequant + matmul", 25, |g| {
+            let q = random_linear(g);
+            let mut rng = g.rng.fork(41);
+            let x = Matrix::randn(1, q.cols, 1.0, &mut rng);
+            let mut out = vec![0.0f32; q.rows];
+            q.gemv(x.row(0), &mut out);
+            let want = x.matmul_bt(&q.dequantize());
+            let scale = want.row(0).iter().fold(1.0f32, |m, v| m.max(v.abs()));
+            let diff = out
+                .iter()
+                .zip(want.row(0))
+                .map(|(a, b)| (a - b).abs())
+                .fold(0.0f32, f32::max);
+            prop_assert(
+                diff <= 2e-4 * scale,
+                &format!("gemv diverged from dense reference: {diff}"),
             )
         });
     }

@@ -13,7 +13,7 @@
 use super::format::QuantizedLinear;
 use super::scale::{GroupScales, QuantSpec};
 use crate::tensor::{cholesky_inverse_upper, Matrix};
-use crate::util::threadpool::parallel_for_chunked;
+use crate::util::threadpool::parallel_for_auto;
 use anyhow::Result;
 
 /// Tunables for the GPTQ sweep.
@@ -89,7 +89,7 @@ pub fn gptq_sweep(
     let ints_ptr = crate::util::SendPtr(ints.as_mut_ptr());
 
     // Rows are independent: each worker owns a chunk of rows end-to-end.
-    parallel_for_chunked(rows, 4, |r| {
+    parallel_for_auto(rows, |r| {
         // SAFETY: each row index is visited exactly once.
         let int_row: &mut Vec<u8> = unsafe { &mut *ints_ptr.get().add(r) };
         let mut wrow = w.row(r).to_vec();

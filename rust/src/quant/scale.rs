@@ -211,7 +211,7 @@ pub fn compute_group_scales(
                 let e_ptr = crate::util::SendPtr(e.data.as_mut_ptr());
                 let s_ptr = crate::util::SendPtr(svec.as_mut_ptr());
                 let z_ptr = crate::util::SendPtr(zvec.as_mut_ptr());
-                crate::util::threadpool::parallel_for_chunked(rows, 32, |r| {
+                crate::util::threadpool::parallel_for_auto(rows, |r| {
                     let lo = lo0[r].min(0.0) * beta;
                     let hi = hi0[r].max(0.0) * beta;
                     let mut s = (hi - lo) / qmaxf;

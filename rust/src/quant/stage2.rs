@@ -24,8 +24,9 @@
 
 use super::format::QuantizedLinear;
 use super::scale::GroupScales;
+use crate::tensor::kernels::scalar::dot_span_f64;
 use crate::tensor::Matrix;
-use crate::util::threadpool::parallel_for_chunked;
+use crate::util::threadpool::parallel_for_auto;
 
 /// Stage-2 tunables.
 #[derive(Clone, Copy, Debug)]
@@ -71,13 +72,9 @@ pub fn refine_scales(
     let g = scales.group_size;
     let n_g = scales.scales.cols;
 
-    // Precompute fixed quantities.
-    // wr = W · R  (wᵀ R_i per row is a column slice of this) — Eq. 8 term.
-    let wr = r.map(|rm| {
-        assert_eq!((rm.rows, rm.cols), (cols, cols));
-        w.matmul(rm)
-    });
     // denom[r][gi] = v_iᵀ H_ii v_i — constant while integers are frozen.
+    // (The packed entry point computes the same quantity straight from the
+    // packed words via the dispatched kernels — see `packed_group_denoms`.)
     let mut denom = Matrix::zeros(rows, n_g);
     for gi in 0..n_g {
         let c0 = gi * g;
@@ -88,6 +85,31 @@ pub fn refine_scales(
             denom[(rr, gi)] = crate::tensor::linalg::quad_form(v, &hii, v) as f32;
         }
     }
+    refine_scales_with_denom(w, vint, h, r, scales, cfg, denom)
+}
+
+/// Core CD sweep given a precomputed denominator matrix (`vᵀ H_ii v` per
+/// `(row, group)`), so the packed path can supply kernel-computed denoms.
+#[allow(clippy::too_many_arguments)]
+fn refine_scales_with_denom(
+    w: &Matrix,
+    vint: &Matrix,
+    h: &Matrix,
+    r: Option<&Matrix>,
+    scales: &mut GroupScales,
+    cfg: &Stage2Config,
+    denom: Matrix,
+) -> Stage2Report {
+    let (rows, cols) = (w.rows, w.cols);
+    let g = scales.group_size;
+    let n_g = scales.scales.cols;
+    assert_eq!((denom.rows, denom.cols), (rows, n_g));
+
+    // wr = W · R  (wᵀ R_i per row is a column slice of this) — Eq. 8 term.
+    let wr = r.map(|rm| {
+        assert_eq!((rm.rows, rm.cols), (cols, cols));
+        w.matmul(rm)
+    });
 
     // Current quantized weights and residual D = W − Q.
     let mut dmat = Matrix::zeros(rows, cols);
@@ -117,7 +139,7 @@ pub fn refine_scales(
             let scales_ptr = crate::util::SendPtr(scales.scales.data.as_mut_ptr());
             let d_ptr = crate::util::SendPtr(dmat.data.as_mut_ptr());
             let n_scale_cols = scales.scales.cols;
-            parallel_for_chunked(rows, 16, |rr| {
+            parallel_for_auto(rows, |rr| {
                 let v = &vint.row(rr)[c0..c1];
                 let den = denom[(rr, gi)] as f64;
                 if den < cfg.denom_eps {
@@ -186,11 +208,13 @@ pub fn refine_quantized_linear(
     let mut vint = Matrix::zeros(q.rows, q.cols);
     let g = q.group_size;
     for rr in 0..q.rows {
+        // one streaming unpack per row instead of `get(c)` per element
+        // (which re-validates the words vec on every access)
+        let vals = q.qweight[rr].unpack();
         let zrow = q.zeros.row(rr).to_vec();
-        let packed = &q.qweight[rr];
         let vrow = vint.row_mut(rr);
-        for c in 0..q.cols {
-            vrow[c] = packed.get(c) as f32 - zrow[c / g];
+        for (c, (v, &qc)) in vrow.iter_mut().zip(&vals).enumerate() {
+            *v = qc as f32 - zrow[c / g];
         }
     }
     let mut gs = GroupScales {
@@ -200,13 +224,69 @@ pub fn refine_quantized_linear(
         bits: q.bits,
     };
     let report = if q.perm.is_none() && q.channel_scales.is_none() {
-        refine_scales(w, &vint, h, r, &mut gs, cfg)
+        let denom = packed_group_denoms(q, h, &vint);
+        refine_scales_with_denom(w, &vint, h, r, &mut gs, cfg, denom)
     } else {
         let (wg, hg, rg) = to_stored_coords(w, h, r, q);
-        refine_scales(&wg, &vint, &hg, rg.as_ref(), &mut gs, cfg)
+        let denom = packed_group_denoms(q, &hg, &vint);
+        refine_scales_with_denom(&wg, &vint, &hg, rg.as_ref(), &mut gs, cfg, denom)
     };
     q.scales = gs.scales;
     report
+}
+
+/// `denom[r, gi] = vᵀ H_ii v` for `v = q_r − z_g`, computed straight from
+/// the packed words: each Hessian row contributes one `H v` product
+/// `(H_ii v)_i = Σ_{j∈g} q_j H_ij − z_g Σ_{j∈g} H_ij`, with the integer
+/// unpack-dot reusing the kernel layer ([`dot_span_f64`]) — the same
+/// decomposition the serving GEMV dispatches, so the CD sweep stays cheap
+/// at quantization time for the same reason decode is fast at serve time.
+///
+/// The f64-accumulating variant (not the dispatched f32 kernels) is
+/// deliberate: when a group's ints sit near the zero-point, `Σ q_j H_ij`
+/// and `z Σ H_ij` are each ~`z/|v|` times the centered difference, and this
+/// quantity is a *denominator* — f32 rounding of the uncentered sums would
+/// be amplified by the cancellation straight into the CD step size.
+///
+/// `vint` is the caller's already-materialized `q − z` in stored order
+/// (exact in f32: both operands are small integers), supplying the outer
+/// `v_i` factor without re-unpacking every row.
+fn packed_group_denoms(q: &QuantizedLinear, h: &Matrix, vint: &Matrix) -> Matrix {
+    let g = q.group_size;
+    let n_g = q.n_groups();
+    let cols = q.cols;
+    debug_assert_eq!(h.rows, cols);
+    debug_assert_eq!((vint.rows, vint.cols), (q.rows, cols));
+    // Σ_{j∈group(i)} H[i, j] per column i — the zero-point term of each
+    // H v product; row-independent, computed once.
+    let mut hgsum = vec![0.0f64; cols];
+    for (i, hg) in hgsum.iter_mut().enumerate() {
+        let c0 = (i / g) * g;
+        let c1 = (c0 + g).min(cols);
+        *hg = h.row(i)[c0..c1].iter().map(|v| *v as f64).sum();
+    }
+    let mut denom = Matrix::zeros(q.rows, n_g);
+    let d_ptr = crate::util::SendPtr(denom.data.as_mut_ptr());
+    parallel_for_auto(q.rows, |rr| {
+        let words = &q.qweight[rr].words;
+        let vrow = vint.row(rr);
+        let zrow = q.zeros.row(rr);
+        // SAFETY: disjoint denom rows per worker.
+        let drow: &mut [f32] =
+            unsafe { std::slice::from_raw_parts_mut(d_ptr.get().add(rr * n_g), n_g) };
+        for (gi, d) in drow.iter_mut().enumerate() {
+            let c0 = gi * g;
+            let c1 = (c0 + g).min(cols);
+            let z = zrow[gi] as f64;
+            let mut acc = 0.0f64;
+            for i in c0..c1 {
+                let hq = dot_span_f64(words, q.bits, c0, c1, h.row(i));
+                acc += vrow[i] as f64 * (hq - z * hgsum[i]);
+            }
+            *d = acc as f32;
+        }
+    });
+    denom
 }
 
 /// Gather `w`/`h`/`r` into stored column order with the AWQ channel
@@ -486,6 +566,85 @@ mod tests {
             after <= before * (1.0 + 1e-6),
             "stage2 on AWQ output must not increase loss: {before} -> {after}"
         );
+    }
+
+    #[test]
+    fn packed_denoms_match_quad_form_reference() {
+        // The kernel-computed H v denominators must agree with the dense
+        // quad-form path refine_scales uses, across a straddling bit width.
+        for (bits, seed) in [(2u8, 21), (3, 22), (4, 23), (8, 24)] {
+            let (_, hd, q, _) = setup(6, 64, 16, bits, seed);
+            let mut vint = Matrix::zeros(q.rows, q.cols);
+            for rr in 0..q.rows {
+                let vals = q.qweight[rr].unpack();
+                let zrow = q.zeros.row(rr).to_vec();
+                let vrow = vint.row_mut(rr);
+                for (c, (v, &qc)) in vrow.iter_mut().zip(&vals).enumerate() {
+                    *v = qc as f32 - zrow[c / q.group_size];
+                }
+            }
+            let denom_p = packed_group_denoms(&q, &hd, &vint);
+            let g = q.group_size;
+            for rr in 0..q.rows {
+                let vals = q.qweight[rr].unpack();
+                for gi in 0..q.n_groups() {
+                    let c0 = gi * g;
+                    let c1 = ((gi + 1) * g).min(q.cols);
+                    let z = q.zeros[(rr, gi)];
+                    let v: Vec<f32> =
+                        vals[c0..c1].iter().map(|&qc| qc as f32 - z).collect();
+                    let hii = hd.slice(c0, c1, c0, c1);
+                    let want = crate::tensor::linalg::quad_form(&v, &hii, &v) as f32;
+                    let got = denom_p[(rr, gi)];
+                    assert!(
+                        (got - want).abs() <= 1e-3 * want.abs().max(1e-6),
+                        "bits={bits} r={rr} g={gi}: packed {got} vs quad_form {want}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn packed_denoms_survive_near_zero_point_cancellation() {
+        // 8-bit ints clustered at the zero-point (v ∈ {−1,0,1}) against a
+        // large-magnitude Hessian: the uncentered sums Σ q_j·H_ij are ~128×
+        // the centered signal, so an f32 inner dot would leak its rounding
+        // into the denominator through the cancellation. The f64 unpack-dot
+        // must track the all-f64 centered quad form tightly.
+        let inp = 32;
+        let g = 16;
+        let rows = 2;
+        let mut rng = Rng::new(55);
+        let mut h = correlated_hessian(inp, 128, &mut rng);
+        h.scale_inplace(1e3);
+        let ints: Vec<Vec<u8>> = (0..rows)
+            .map(|_| (0..inp).map(|_| 127 + (rng.next_u64() % 3) as u8).collect())
+            .collect();
+        let scales = Matrix::from_vec(rows, 2, vec![0.01; rows * 2]);
+        let zeros = Matrix::from_vec(rows, 2, vec![128.0; rows * 2]);
+        let q = QuantizedLinear::from_ints(&ints, 8, g, scales, zeros);
+        let mut vint = Matrix::zeros(rows, inp);
+        for rr in 0..rows {
+            for c in 0..inp {
+                vint[(rr, c)] = ints[rr][c] as f32 - 128.0;
+            }
+        }
+        let denoms = packed_group_denoms(&q, &h, &vint);
+        for rr in 0..rows {
+            for gi in 0..2 {
+                let c0 = gi * g;
+                let c1 = c0 + g;
+                let v = &vint.row(rr)[c0..c1];
+                let hii = h.slice(c0, c1, c0, c1);
+                let want = crate::tensor::linalg::quad_form(v, &hii, v) as f32;
+                let got = denoms[(rr, gi)];
+                assert!(
+                    (got - want).abs() <= 1e-5 * want.abs().max(1e-12),
+                    "r={rr} g={gi}: packed denom {got} vs centered quad form {want}"
+                );
+            }
+        }
     }
 
     #[test]

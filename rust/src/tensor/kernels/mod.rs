@@ -1,0 +1,423 @@
+//! Runtime-dispatched dequant dot kernels — the compute half of the packed
+//! execution path.
+//!
+//! [`crate::tensor::packed::dot_span`] is the single hot primitive every
+//! packed GEMV/GEMM group iteration runs (one integer×activation dot per
+//! `(row, group)` span). This module turns it into a dispatch point: a
+//! [`KernelTable`] of per-bit-width function pointers selected **once** at
+//! startup from CPU feature detection (`is_x86_feature_detected!` on
+//! x86_64, portable scalar everywhere else), behind the same signature, so
+//! `QuantizedLinear::gemv_into`/`forward`, `model/exec.rs` and the stage-2
+//! CD sweep need no call-site changes.
+//!
+//! Two algorithm families:
+//!
+//! * **sequential** ([`scalar::dot_span_seq`]) — the original in-register
+//!   unpack loop; exact for every bit width 1..=8, any span offset, any
+//!   ragged tail. It remains the fallback for widths without a specialized
+//!   kernel and handles the unaligned head/tail of every striped span.
+//! * **lane-striped** — 2/3/4/8-bit spans are split into head (sequential)
+//!   + 8-wide value blocks + tail (sequential). Each block is one bit
+//!   *chunk* ([`chunk8`]) fanned out to 8 f32 lanes, multiplied against 8
+//!   activations, and accumulated into 8 independent partial sums that are
+//!   reduced by a fixed pairwise tree ([`scalar::hsum8_tree`]).
+//!
+//! The portable lane-striped kernels ([`scalar`]) and the AVX2 ones
+//! ([`x86`]) perform **the same IEEE f32 operations in the same order,
+//! lane for lane** (vector mul + add, never FMA — a fused multiply-add
+//! skips the intermediate rounding and would diverge), so the dispatched
+//! SIMD kernels are *bit-identical* to the scalar reference — property
+//! tested below — and `TSGO_FORCE_SCALAR=1` reproduces dispatched numerics
+//! exactly while debugging.
+
+pub mod scalar;
+// Crate-private: `dot_span_avx2` executes AVX2 instructions unconditionally
+// and is only sound to call via a table installed after feature detection —
+// exposing it `pub` would make that UB reachable from safe downstream code.
+#[cfg(target_arch = "x86_64")]
+pub(crate) mod x86;
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::OnceLock;
+
+/// Signature every dequant dot kernel implements: integer × activation dot
+/// `Σ_{j∈[c0,c1)} q_j x[j]` over one packed row (same contract as
+/// [`crate::tensor::packed::dot_span`]).
+pub type DotSpanFn = fn(words: &[u32], bits: u8, c0: usize, c1: usize, x: &[f32]) -> f32;
+
+/// One resolved kernel per bit width. Index = bits (0 unused; `PackedInts`
+/// guarantees 1..=8).
+pub struct KernelTable {
+    /// Table-level name shown by `tsgo kernels` ("scalar" / "avx2").
+    pub name: &'static str,
+    pub dot: [DotSpanFn; 9],
+    /// Per-bit-width kernel label ("scalar-seq", "scalar-lanes8",
+    /// "avx2-srlv", "avx2-bytes").
+    pub labels: [&'static str; 9],
+}
+
+/// Bit widths with a specialized lane-striped kernel; everything else runs
+/// the sequential path in every table.
+pub const STRIPED_BITS: [u8; 4] = [2, 3, 4, 8];
+
+/// The portable table: lane-striped scalar for 2/3/4/8 bits, sequential for
+/// the rest. This is both the `TSGO_FORCE_SCALAR` fallback and the
+/// bit-exactness reference the SIMD kernels are tested against.
+pub fn scalar_table() -> &'static KernelTable {
+    static T: OnceLock<KernelTable> = OnceLock::new();
+    T.get_or_init(|| {
+        let mut dot = [scalar::dot_span_seq as DotSpanFn; 9];
+        let mut labels = ["scalar-seq"; 9];
+        for b in STRIPED_BITS {
+            dot[b as usize] = scalar::dot_span_lanes;
+            labels[b as usize] = "scalar-lanes8";
+        }
+        KernelTable { name: "scalar", dot, labels }
+    })
+}
+
+#[cfg(target_arch = "x86_64")]
+fn avx2_table() -> &'static KernelTable {
+    static T: OnceLock<KernelTable> = OnceLock::new();
+    T.get_or_init(|| {
+        let mut dot = [scalar::dot_span_seq as DotSpanFn; 9];
+        let mut labels = ["scalar-seq"; 9];
+        for b in STRIPED_BITS {
+            dot[b as usize] = x86::dot_span_avx2;
+            labels[b as usize] = if b == 8 { "avx2-bytes" } else { "avx2-srlv" };
+        }
+        KernelTable { name: "avx2", dot, labels }
+    })
+}
+
+/// The best table this CPU supports, detected once.
+pub fn best_table() -> &'static KernelTable {
+    static T: OnceLock<&'static KernelTable> = OnceLock::new();
+    T.get_or_init(|| {
+        #[cfg(target_arch = "x86_64")]
+        if x86::avx2_available() {
+            return avx2_table();
+        }
+        scalar_table()
+    })
+}
+
+/// Dispatch override: benches and the forced-dispatch tests flip this at
+/// runtime; `TSGO_FORCE_SCALAR=1` seeds it on first use.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ForcedKernel {
+    /// Environment-seeded default (scalar iff `TSGO_FORCE_SCALAR=1`).
+    Auto,
+    /// Always the portable scalar table.
+    Scalar,
+    /// Always the detected best table.
+    Best,
+}
+
+const FORCE_UNSET: u8 = u8::MAX;
+const FORCE_AUTO_SCALAR: u8 = 0;
+const FORCE_AUTO_BEST: u8 = 1;
+const FORCE_SCALAR: u8 = 2;
+const FORCE_BEST: u8 = 3;
+
+static FORCE: AtomicU8 = AtomicU8::new(FORCE_UNSET);
+
+fn env_force_scalar() -> bool {
+    matches!(
+        std::env::var("TSGO_FORCE_SCALAR").as_deref(),
+        Ok("1") | Ok("true") | Ok("yes")
+    )
+}
+
+/// Override kernel selection process-wide (tests / benches). `Auto` restores
+/// the environment-driven default.
+pub fn set_forced(f: ForcedKernel) {
+    let v = match f {
+        ForcedKernel::Auto => {
+            if env_force_scalar() {
+                FORCE_AUTO_SCALAR
+            } else {
+                FORCE_AUTO_BEST
+            }
+        }
+        ForcedKernel::Scalar => FORCE_SCALAR,
+        ForcedKernel::Best => FORCE_BEST,
+    };
+    FORCE.store(v, Ordering::Relaxed);
+}
+
+/// The table `dot_span` dispatches through right now: the forced override
+/// if set, else `TSGO_FORCE_SCALAR`, else the detected best.
+pub fn active_table() -> &'static KernelTable {
+    let mut f = FORCE.load(Ordering::Relaxed);
+    if f == FORCE_UNSET {
+        f = if env_force_scalar() { FORCE_AUTO_SCALAR } else { FORCE_AUTO_BEST };
+        FORCE.store(f, Ordering::Relaxed);
+    }
+    match f {
+        FORCE_AUTO_SCALAR | FORCE_SCALAR => scalar_table(),
+        _ => best_table(),
+    }
+}
+
+/// Everything `tsgo kernels` prints: detected CPU features, forcing state,
+/// and the per-bit-width dispatch rows.
+pub struct DispatchInfo {
+    /// Name of the table `dot_span` currently routes through.
+    pub active: &'static str,
+    /// Name of the best table the CPU supports (ignoring forcing).
+    pub best: &'static str,
+    pub forced_scalar: bool,
+    /// `(feature, detected)` pairs (empty off x86_64).
+    pub cpu_features: Vec<(&'static str, bool)>,
+    /// `(bits, scalar label, active label)` per bit width 1..=8.
+    pub rows: Vec<(u8, &'static str, &'static str)>,
+}
+
+/// Snapshot the dispatch state for reporting.
+pub fn dispatch_info() -> DispatchInfo {
+    let active = active_table(); // also seeds FORCE from the environment
+    let scalar = scalar_table();
+    let forced_scalar = matches!(
+        FORCE.load(Ordering::Relaxed),
+        FORCE_AUTO_SCALAR | FORCE_SCALAR
+    );
+    #[cfg(target_arch = "x86_64")]
+    let cpu_features = vec![
+        ("sse2", is_x86_feature_detected!("sse2")),
+        ("avx", is_x86_feature_detected!("avx")),
+        ("avx2", is_x86_feature_detected!("avx2")),
+        ("fma", is_x86_feature_detected!("fma")),
+    ];
+    #[cfg(not(target_arch = "x86_64"))]
+    let cpu_features = Vec::new();
+    DispatchInfo {
+        active: active.name,
+        best: best_table().name,
+        forced_scalar,
+        cpu_features,
+        rows: (1u8..=8)
+            .map(|b| (b, scalar.labels[b as usize], active.labels[b as usize]))
+            .collect(),
+    }
+}
+
+/// Split `[c0, c1)` into sequential head, 8-wide striped main blocks and
+/// sequential tail; returns `(head_end, main_end)`. Blocks for 2/4/8-bit
+/// must start at `j ≡ 0 (mod 8)` so every [`chunk8`] window is word-aligned;
+/// 3-bit blocks stream from any offset (their 24-bit window is assembled
+/// from at most two words, which `PackedInts::words_needed` keeps in bounds
+/// whenever the window actually straddles). The scalar and SIMD kernels both
+/// call this, so they make identical split decisions — a precondition for
+/// bit-identity.
+#[inline]
+pub(crate) fn block_bounds(bits: u8, c0: usize, c1: usize) -> (usize, usize) {
+    debug_assert!(c0 <= c1);
+    let b = bits as usize;
+    if !matches!(b, 2 | 3 | 4 | 8) {
+        return (c1, c1);
+    }
+    let head_end = if b == 3 { c0 } else { c0.next_multiple_of(8).min(c1) };
+    let main_end = head_end + (c1 - head_end) / 8 * 8;
+    (head_end, main_end)
+}
+
+/// Gather the `8·bits`-bit window holding values `j..j+8` into a `u64`
+/// (value `j+l` at bit `l·bits`). Callers guarantee the block layout of
+/// [`block_bounds`]: 2/4/8-bit windows start word-aligned (`j % 8 == 0`),
+/// 3-bit windows may straddle two words.
+#[inline]
+pub(crate) fn chunk8(words: &[u32], b: usize, j: usize) -> u64 {
+    let bit = j * b;
+    let wi = bit / 32;
+    let off = bit % 32;
+    match b {
+        8 => (words[wi] as u64) | ((words[wi + 1] as u64) << 32),
+        4 => words[wi] as u64,
+        2 => ((words[wi] >> off) & 0xFFFF) as u64,
+        3 => {
+            let mut v = (words[wi] >> off) as u64;
+            if off > 8 {
+                // window straddles: off+24 > 32. In-bounds: a straddling
+                // window implies words_needed covers wi+1 (off ≥ 9 ⇒ the
+                // row's bit count reaches past word wi).
+                v |= (words[wi + 1] as u64) << (32 - off);
+            }
+            v & 0xFF_FFFF
+        }
+        _ => unreachable!("chunk8 is only defined for bits 2/3/4/8"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::packed::PackedInts;
+    use crate::util::proptest::{check, prop_assert};
+    use crate::util::rng::Rng;
+
+    fn reference_dot(vals: &[u8], c0: usize, c1: usize, x: &[f32]) -> f64 {
+        vals[c0..c1]
+            .iter()
+            .zip(&x[c0..c1])
+            .map(|(&q, &v)| q as f64 * v as f64)
+            .sum()
+    }
+
+    #[test]
+    fn tables_resolve_and_cover_all_widths() {
+        let s = scalar_table();
+        let b = best_table();
+        let a = active_table();
+        assert_eq!(s.name, "scalar");
+        assert!(a.name == s.name || a.name == b.name);
+        for bits in 1u8..=8 {
+            assert!(!s.labels[bits as usize].is_empty());
+            assert!(!b.labels[bits as usize].is_empty());
+        }
+        let info = dispatch_info();
+        assert_eq!(info.rows.len(), 8);
+    }
+
+    #[test]
+    fn block_bounds_alignment_and_coverage() {
+        // 4-bit: head rounds c0 up to a multiple of 8, main is a multiple
+        // of 8 long, tail is the remainder.
+        assert_eq!(block_bounds(4, 0, 64), (0, 64));
+        assert_eq!(block_bounds(4, 5, 64), (8, 64));
+        assert_eq!(block_bounds(4, 5, 7), (7, 7));
+        assert_eq!(block_bounds(4, 5, 13), (8, 8));
+        // 3-bit streams from any offset.
+        assert_eq!(block_bounds(3, 5, 64), (5, 61));
+        // widths without a striped kernel: everything sequential.
+        assert_eq!(block_bounds(5, 0, 64), (64, 64));
+    }
+
+    #[test]
+    fn chunk8_matches_get_for_all_striped_widths() {
+        let mut rng = Rng::new(7);
+        for bits in STRIPED_BITS {
+            let max = 1usize << bits;
+            let vals: Vec<u8> =
+                (0..160).map(|_| (rng.next_u64() as usize % max) as u8).collect();
+            let p = PackedInts::pack(&vals, bits);
+            let b = bits as usize;
+            let starts: Vec<usize> = if bits == 3 {
+                (0..152).collect() // any offset
+            } else {
+                (0..19).map(|k| k * 8).collect() // word-aligned blocks
+            };
+            for j in starts {
+                let chunk = chunk8(&p.words, b, j);
+                for l in 0..8 {
+                    let got = ((chunk >> (b * l)) & ((1u64 << b) - 1)) as u8;
+                    assert_eq!(got, vals[j + l], "bits={bits} j={j} lane={l}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn prop_striped_kernels_bit_identical_across_tables() {
+        // The acceptance bar: for every specialized width, every span offset
+        // (group boundaries straddling words) and every ragged tail, the
+        // dispatched kernel returns the exact same f32 bits as the scalar
+        // reference. On non-AVX2 hosts best == scalar and this holds
+        // trivially; on AVX2 hosts it checks the SIMD lanes for real.
+        check("SIMD kernels bit-identical to scalar reference", 120, |g| {
+            let bits = STRIPED_BITS[g.usize_in(0, 3)];
+            let n = g.usize_in(1, 400);
+            let max = 1usize << bits;
+            let mut rng = g.rng.fork(5);
+            let vals: Vec<u8> =
+                (0..n).map(|_| (rng.next_u64() as usize % max) as u8).collect();
+            let x: Vec<f32> = rng.normal_vec(n, 1.0);
+            let p = PackedInts::pack(&vals, bits);
+            let c0 = g.usize_in(0, n - 1);
+            let c1 = g.usize_in(c0, n);
+            let a = (scalar_table().dot[bits as usize])(&p.words, bits, c0, c1, &x);
+            let b = (best_table().dot[bits as usize])(&p.words, bits, c0, c1, &x);
+            prop_assert(
+                a.to_bits() == b.to_bits(),
+                &format!(
+                    "bits={bits} span=({c0},{c1}) n={n}: scalar {a} ({:#010x}) vs \
+                     dispatched {b} ({:#010x})",
+                    a.to_bits(),
+                    b.to_bits()
+                ),
+            )
+        });
+    }
+
+    #[test]
+    fn prop_lane_kernels_match_sequential_reference() {
+        // Mathematical correctness of the striped decomposition itself,
+        // against an f64 reference (the striped sum order differs from the
+        // sequential one by rounding only).
+        check("lane-striped kernels match f64 reference", 120, |g| {
+            let bits = STRIPED_BITS[g.usize_in(0, 3)];
+            let n = g.usize_in(1, 400);
+            let max = 1usize << bits;
+            let mut rng = g.rng.fork(9);
+            let vals: Vec<u8> =
+                (0..n).map(|_| (rng.next_u64() as usize % max) as u8).collect();
+            let x: Vec<f32> = rng.normal_vec(n, 1.0);
+            let p = PackedInts::pack(&vals, bits);
+            let c0 = g.usize_in(0, n - 1);
+            let c1 = g.usize_in(c0, n);
+            let want = reference_dot(&vals, c0, c1, &x);
+            for (label, table) in [("scalar", scalar_table()), ("best", best_table())] {
+                let got = (table.dot[bits as usize])(&p.words, bits, c0, c1, &x) as f64;
+                if (got - want).abs() > 1e-3 * want.abs().max(1.0) {
+                    return Err(format!(
+                        "{label} bits={bits} span=({c0},{c1}): {got} vs {want}"
+                    ));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn striped_exercises_group_boundaries_straddling_words() {
+        // Deterministic straddle battery: every (bits, span) pair that a
+        // group-size-8/16/24 layout can produce at the start of a row,
+        // including spans entirely inside the sequential head.
+        let mut rng = Rng::new(23);
+        for bits in STRIPED_BITS {
+            let n = 200;
+            let max = 1usize << bits;
+            let vals: Vec<u8> =
+                (0..n).map(|_| (rng.next_u64() as usize % max) as u8).collect();
+            let x: Vec<f32> = rng.normal_vec(n, 1.0);
+            let p = PackedInts::pack(&vals, bits);
+            for group in [8usize, 16, 24] {
+                for g in 0..n / group {
+                    let (c0, c1) = (g * group, ((g + 1) * group).min(n));
+                    let a = (scalar_table().dot[bits as usize])(&p.words, bits, c0, c1, &x);
+                    let b = (best_table().dot[bits as usize])(&p.words, bits, c0, c1, &x);
+                    assert_eq!(
+                        a.to_bits(),
+                        b.to_bits(),
+                        "bits={bits} group={group} span=({c0},{c1})"
+                    );
+                    let want = reference_dot(&vals, c0, c1, &x);
+                    assert!(
+                        (a as f64 - want).abs() <= 1e-3 * want.abs().max(1.0),
+                        "bits={bits} span=({c0},{c1}): {a} vs {want}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn forcing_flips_the_active_table() {
+        set_forced(ForcedKernel::Scalar);
+        assert_eq!(active_table().name, "scalar");
+        set_forced(ForcedKernel::Best);
+        assert_eq!(active_table().name, best_table().name);
+        set_forced(ForcedKernel::Auto);
+        let _ = active_table(); // env-seeded; just must not panic
+    }
+}

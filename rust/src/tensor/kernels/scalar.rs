@@ -1,0 +1,195 @@
+//! Portable dequant dot kernels: the sequential reference and the
+//! lane-striped scalar implementation the SIMD kernels mirror bit for bit.
+
+use super::{block_bounds, chunk8};
+
+/// Sequential in-register unpack dot — the original `dot_span` body. Exact
+/// for every bit width 1..=8, any span offset and any ragged tail; the
+/// striped kernels delegate their unaligned head/tail spans here.
+///
+/// Two paths: a word-at-a-time loop when values never straddle word
+/// boundaries and the span starts word-aligned (bits ∈ {1,2,4,8} with
+/// aligned groups — the common deployment shapes), and a streaming 64-bit
+/// bit-buffer for everything else (3-bit, ragged starts).
+#[inline]
+pub fn dot_span_seq(words: &[u32], bits: u8, c0: usize, c1: usize, x: &[f32]) -> f32 {
+    debug_assert!(c1 <= x.len());
+    if c0 >= c1 {
+        return 0.0;
+    }
+    let b = bits as usize;
+    let mask = (1u32 << bits) - 1;
+    if 32 % b == 0 && (c0 * b) % 32 == 0 {
+        // Aligned path: each word holds 32/bits whole values.
+        let vpw = 32 / b;
+        let mut acc = 0.0f32;
+        let mut j = c0;
+        let mut wi = c0 * b / 32;
+        while j < c1 {
+            let mut w = words[wi];
+            wi += 1;
+            let n = vpw.min(c1 - j);
+            for _ in 0..n {
+                acc += (w & mask) as f32 * x[j];
+                w >>= bits;
+                j += 1;
+            }
+        }
+        acc
+    } else {
+        // Streaming path: keep unconsumed bits in a u64 buffer (≤ 39 bits
+        // live at any point since bits ≤ 8), refill one word at a time.
+        let bit0 = c0 * b;
+        let mut wi = bit0 / 32;
+        let off = bit0 % 32;
+        let mut buf = (words[wi] >> off) as u64;
+        let mut have = 32 - off;
+        wi += 1;
+        let mut acc = 0.0f32;
+        for xj in &x[c0..c1] {
+            if have < b {
+                buf |= (words[wi] as u64) << have;
+                wi += 1;
+                have += 32;
+            }
+            acc += ((buf as u32) & mask) as f32 * xj;
+            buf >>= b;
+            have -= b;
+        }
+        acc
+    }
+}
+
+/// Sequential unpack dot with **f64 accumulation** — same streaming unpack
+/// scheme as [`dot_span_seq`], for quantization-time consumers that go on
+/// to subtract two large uncentered sums (the stage-2 CD denominators
+/// compute `Σ q_j H_ij − z Σ H_ij`, where `q ≈ z` makes the difference tiny
+/// relative to either term; f32 accumulation of the first sum would be
+/// amplified catastrophically by that cancellation, f64 keeps it ~1e-13).
+pub fn dot_span_f64(words: &[u32], bits: u8, c0: usize, c1: usize, x: &[f32]) -> f64 {
+    debug_assert!(c1 <= x.len());
+    if c0 >= c1 {
+        return 0.0;
+    }
+    let b = bits as usize;
+    let mask = (1u32 << bits) - 1;
+    let bit0 = c0 * b;
+    let mut wi = bit0 / 32;
+    let off = bit0 % 32;
+    let mut buf = (words[wi] >> off) as u64;
+    let mut have = 32 - off;
+    wi += 1;
+    let mut acc = 0.0f64;
+    for xj in &x[c0..c1] {
+        if have < b {
+            buf |= (words[wi] as u64) << have;
+            wi += 1;
+            have += 32;
+        }
+        acc += ((buf as u32) & mask) as f64 * *xj as f64;
+        buf >>= b;
+        have -= b;
+    }
+    acc
+}
+
+/// Fixed pairwise reduction over 8 partial sums. The AVX2 horizontal sum
+/// (`x86::hsum8`) performs these exact additions in this exact order —
+/// change one and bit-identity across tables breaks.
+#[inline]
+pub fn hsum8_tree(a: [f32; 8]) -> f32 {
+    let s0 = [a[0] + a[4], a[1] + a[5], a[2] + a[6], a[3] + a[7]];
+    let s1 = [s0[0] + s0[2], s0[1] + s0[3]];
+    s1[0] + s1[1]
+}
+
+/// Lane-striped dot for bits ∈ {2, 3, 4, 8}: sequential head, 8-wide chunk
+/// blocks into 8 independent accumulators (breaking the sequential
+/// dependence chain — faster scalar, and the exact lane semantics of the
+/// AVX2 kernels), pairwise-tree reduction, sequential tail. The final
+/// combination order `(head + blocks) + tail` is part of the bit-identity
+/// contract.
+pub fn dot_span_lanes(words: &[u32], bits: u8, c0: usize, c1: usize, x: &[f32]) -> f32 {
+    debug_assert!(c1 <= x.len());
+    if c0 >= c1 {
+        return 0.0;
+    }
+    let (head_end, main_end) = block_bounds(bits, c0, c1);
+    let head = dot_span_seq(words, bits, c0, head_end, x);
+    let b = bits as usize;
+    let mask = (1u64 << b) - 1;
+    let mut acc = [0.0f32; 8];
+    let mut j = head_end;
+    while j < main_end {
+        let chunk = chunk8(words, b, j);
+        for (l, a) in acc.iter_mut().enumerate() {
+            *a += ((chunk >> (b * l)) & mask) as f32 * x[j + l];
+        }
+        j += 8;
+    }
+    let tail = dot_span_seq(words, bits, main_end, c1, x);
+    (head + hsum8_tree(acc)) + tail
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::packed::PackedInts;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn hsum8_tree_is_the_documented_order() {
+        let a = [1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0];
+        assert_eq!(hsum8_tree(a), 36.0);
+        // order check against a value where association matters
+        let b = [1e8f32, 1.0, -1e8, 1.0, 1e8, 1.0, -1e8, 1.0];
+        // s0 = [2e8, 2.0, -2e8, 2.0]; s1 = [0.0, 4.0]; total 4.0
+        assert_eq!(hsum8_tree(b), 4.0);
+    }
+
+    #[test]
+    fn f64_dot_matches_exact_reference() {
+        let mut rng = Rng::new(29);
+        for bits in [1u8, 2, 3, 4, 5, 8] {
+            let n = 97;
+            let max = 1usize << bits;
+            let vals: Vec<u8> =
+                (0..n).map(|_| (rng.next_u64() as usize % max) as u8).collect();
+            let x: Vec<f32> = rng.normal_vec(n, 1.0);
+            let p = PackedInts::pack(&vals, bits);
+            for (c0, c1) in [(0, n), (7, 93), (33, 34), (5, 5)] {
+                let got = dot_span_f64(&p.words, bits, c0, c1, &x);
+                let want: f64 = vals[c0..c1]
+                    .iter()
+                    .zip(&x[c0..c1])
+                    .map(|(&q, &v)| q as f64 * v as f64)
+                    .sum();
+                assert!(
+                    (got - want).abs() <= 1e-9 * want.abs().max(1.0),
+                    "bits={bits} span=({c0},{c1}): {got} vs {want}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn lanes_match_seq_within_rounding_all_widths() {
+        let mut rng = Rng::new(3);
+        for bits in super::super::STRIPED_BITS {
+            let n = 131;
+            let max = 1usize << bits;
+            let vals: Vec<u8> =
+                (0..n).map(|_| (rng.next_u64() as usize % max) as u8).collect();
+            let x: Vec<f32> = rng.normal_vec(n, 1.0);
+            let p = PackedInts::pack(&vals, bits);
+            for (c0, c1) in [(0, n), (0, 64), (64, n), (7, 93), (33, 34), (5, 5), (9, 9)] {
+                let a = dot_span_lanes(&p.words, bits, c0, c1, &x);
+                let b = dot_span_seq(&p.words, bits, c0, c1, &x);
+                assert!(
+                    (a - b).abs() <= 1e-3 * b.abs().max(1.0),
+                    "bits={bits} span=({c0},{c1}): lanes {a} vs seq {b}"
+                );
+            }
+        }
+    }
+}

@@ -1,0 +1,104 @@
+//! AVX2 dequant dot kernels (x86_64).
+//!
+//! Same lane-striped algorithm as [`super::scalar::dot_span_lanes`], with
+//! the 8 lanes living in one `__m256`:
+//!
+//! * 2/3/4-bit — one [`super::chunk8`] window per block, fanned out with a
+//!   per-lane variable shift (`vpsrlvd`) + mask, converted to f32.
+//! * 8-bit — the packed row *is* a byte stream on little-endian; 8 bytes
+//!   are widened with `vpmovzxbd` per block.
+//!
+//! Deliberately `mul + add`, **not** FMA: a fused multiply-add skips the
+//! intermediate rounding and would break bit-identity with the scalar
+//! reference (the property the dispatch layer tests ride on). The unpack
+//! itself is integer-exact either way, and the packed hot path is memory-
+//! bound — the win is the 8-wide unpack, not the last flop.
+
+#![cfg(target_arch = "x86_64")]
+
+use super::scalar::dot_span_seq;
+use super::{block_bounds, chunk8};
+use std::arch::x86_64::*;
+
+/// Runtime gate for installing [`dot_span_avx2`] into a table.
+pub(crate) fn avx2_available() -> bool {
+    is_x86_feature_detected!("avx2")
+}
+
+/// AVX2 dequant dot for bits ∈ {2, 3, 4, 8}. Bit-identical to
+/// [`super::scalar::dot_span_lanes`].
+///
+/// Crate-private (see the `mod x86` declaration): must only be reached
+/// through a kernel table installed after [`avx2_available`] returned true.
+pub(crate) fn dot_span_avx2(words: &[u32], bits: u8, c0: usize, c1: usize, x: &[f32]) -> f32 {
+    debug_assert!(avx2_available(), "dot_span_avx2 reached without AVX2");
+    debug_assert!(c1 <= x.len());
+    if c0 >= c1 {
+        return 0.0;
+    }
+    // SAFETY: this function pointer is only installed into a kernel table
+    // after `avx2_available()` returned true (see `kernels::best_table`).
+    unsafe { dot_span_avx2_impl(words, bits, c0, c1, x) }
+}
+
+#[target_feature(enable = "avx2")]
+unsafe fn dot_span_avx2_impl(words: &[u32], bits: u8, c0: usize, c1: usize, x: &[f32]) -> f32 {
+    let (head_end, main_end) = block_bounds(bits, c0, c1);
+    let head = dot_span_seq(words, bits, c0, head_end, x);
+    let main = match bits {
+        2 | 3 | 4 => srlv_blocks(words, bits as usize, head_end, main_end, x),
+        8 => byte_blocks(words, head_end, main_end, x),
+        _ => 0.0, // never installed for other widths; block_bounds made main empty
+    };
+    let tail = dot_span_seq(words, bits, main_end, c1, x);
+    (head + main) + tail
+}
+
+/// Blocks for sub-byte widths: chunk → per-lane shift → mask → f32 → mul/add.
+#[target_feature(enable = "avx2")]
+unsafe fn srlv_blocks(words: &[u32], b: usize, j0: usize, j1: usize, x: &[f32]) -> f32 {
+    let bi = b as i32;
+    let shifts = _mm256_setr_epi32(0, bi, 2 * bi, 3 * bi, 4 * bi, 5 * bi, 6 * bi, 7 * bi);
+    let mask = _mm256_set1_epi32(((1u32 << b) - 1) as i32);
+    let mut acc = _mm256_setzero_ps();
+    let mut j = j0;
+    while j < j1 {
+        // ≤ 32 bits for b ∈ {2,3,4}: the whole block fits one i32 lane seed.
+        let chunk = chunk8(words, b, j) as u32;
+        let lanes =
+            _mm256_and_si256(_mm256_srlv_epi32(_mm256_set1_epi32(chunk as i32), shifts), mask);
+        let vals = _mm256_cvtepi32_ps(lanes);
+        let xs = _mm256_loadu_ps(x.as_ptr().add(j));
+        acc = _mm256_add_ps(acc, _mm256_mul_ps(vals, xs));
+        j += 8;
+    }
+    hsum8(acc)
+}
+
+/// Blocks for 8-bit: widen 8 packed bytes per step.
+#[target_feature(enable = "avx2")]
+unsafe fn byte_blocks(words: &[u32], j0: usize, j1: usize, x: &[f32]) -> f32 {
+    let bytes = words.as_ptr() as *const u8;
+    let mut acc = _mm256_setzero_ps();
+    let mut j = j0;
+    while j < j1 {
+        let q8 = _mm_loadl_epi64(bytes.add(j) as *const __m128i);
+        let vals = _mm256_cvtepi32_ps(_mm256_cvtepu8_epi32(q8));
+        let xs = _mm256_loadu_ps(x.as_ptr().add(j));
+        acc = _mm256_add_ps(acc, _mm256_mul_ps(vals, xs));
+        j += 8;
+    }
+    hsum8(acc)
+}
+
+/// Horizontal sum matching `scalar::hsum8_tree` addition for addition:
+/// `[a0+a4, a1+a5, a2+a6, a3+a7]` → `[s0+s2, s1+s3]` → scalar.
+#[target_feature(enable = "avx2")]
+unsafe fn hsum8(v: __m256) -> f32 {
+    let lo = _mm256_castps256_ps128(v);
+    let hi = _mm256_extractf128_ps(v, 1);
+    let s = _mm_add_ps(lo, hi);
+    let s2 = _mm_add_ps(s, _mm_movehl_ps(s, s));
+    let s3 = _mm_add_ss(s2, _mm_shuffle_ps(s2, s2, 0b01));
+    _mm_cvtss_f32(s3)
+}

@@ -1,7 +1,7 @@
 //! Row-major f32 matrix with blocked, threaded GEMM.
 
 use crate::util::rng::Rng;
-use crate::util::threadpool::parallel_for_chunked;
+use crate::util::threadpool::parallel_for_auto;
 
 /// Dense row-major f32 matrix.
 #[derive(Clone, Debug, PartialEq)]
@@ -115,7 +115,7 @@ impl Matrix {
         let mut out = Matrix::zeros(m, n);
         const RB: usize = 32; // row block per steal
         let out_ptr = crate::util::SendPtr(out.data.as_mut_ptr());
-        parallel_for_chunked(m.div_ceil(RB), 1, |rb| {
+        parallel_for_auto(m.div_ceil(RB), |rb| {
             let r0 = rb * RB;
             let r1 = (r0 + RB).min(m);
             for r in r0..r1 {
@@ -146,7 +146,7 @@ impl Matrix {
         let (m, n) = (self.rows, other.rows);
         let mut out = Matrix::zeros(m, n);
         let out_ptr = crate::util::SendPtr(out.data.as_mut_ptr());
-        parallel_for_chunked(m, 8, |r| {
+        parallel_for_auto(m, |r| {
             let orow: &mut [f32] =
                 unsafe { std::slice::from_raw_parts_mut(out_ptr.get().add(r * n), n) };
             let arow = self.row(r);

@@ -7,6 +7,7 @@
 //! bit-packed integer storage and the fused group-wise dequant GEMV kernels
 //! the packed execution path runs on.
 
+pub mod kernels;
 pub mod linalg;
 pub mod matrix;
 pub mod packed;

@@ -115,57 +115,20 @@ impl PackedInts {
 /// Integer × activation dot over columns `c0..c1` of a packed row:
 /// `Σ_{j∈[c0,c1)} q_j x[j]`, unpacking in-register.
 ///
-/// Two paths: a word-at-a-time loop when values never straddle word
-/// boundaries and the span starts word-aligned (bits ∈ {1,2,4,8} with
-/// aligned groups — the common deployment shapes), and a streaming 64-bit
-/// bit-buffer for everything else (3-bit, ragged starts).
+/// Routed through the runtime-selected kernel table
+/// ([`crate::tensor::kernels`]): lane-striped scalar or AVX2 for 2/3/4/8-bit
+/// spans, the sequential streaming unpack for everything else. Same
+/// signature as the pre-dispatch scalar kernel, so every caller —
+/// [`packed_row_dot`], the fused GEMV/GEMM, the stage-2 CD sweep — picks up
+/// the SIMD paths without change.
 #[inline]
 pub fn dot_span(words: &[u32], bits: u8, c0: usize, c1: usize, x: &[f32]) -> f32 {
     debug_assert!(c1 <= x.len());
+    debug_assert!(matches!(bits, 1..=8));
     if c0 >= c1 {
         return 0.0;
     }
-    let b = bits as usize;
-    let mask = (1u32 << bits) - 1;
-    if 32 % b == 0 && (c0 * b) % 32 == 0 {
-        // Aligned path: each word holds 32/bits whole values.
-        let vpw = 32 / b;
-        let mut acc = 0.0f32;
-        let mut j = c0;
-        let mut wi = c0 * b / 32;
-        while j < c1 {
-            let mut w = words[wi];
-            wi += 1;
-            let n = vpw.min(c1 - j);
-            for _ in 0..n {
-                acc += (w & mask) as f32 * x[j];
-                w >>= bits;
-                j += 1;
-            }
-        }
-        acc
-    } else {
-        // Streaming path: keep unconsumed bits in a u64 buffer (≤ 39 bits
-        // live at any point since bits ≤ 8), refill one word at a time.
-        let bit0 = c0 * b;
-        let mut wi = bit0 / 32;
-        let off = bit0 % 32;
-        let mut buf = (words[wi] >> off) as u64;
-        let mut have = 32 - off;
-        wi += 1;
-        let mut acc = 0.0f32;
-        for xj in &x[c0..c1] {
-            if have < b {
-                buf |= (words[wi] as u64) << have;
-                wi += 1;
-                have += 32;
-            }
-            acc += ((buf as u32) & mask) as f32 * xj;
-            buf >>= b;
-            have -= b;
-        }
-        acc
-    }
+    (crate::tensor::kernels::active_table().dot[bits as usize])(words, bits, c0, c1, x)
 }
 
 /// Fused group-wise dequant GEMV for one packed row:
@@ -176,6 +139,7 @@ pub fn dot_span(words: &[u32], bits: u8, c0: usize, c1: usize, x: &[f32]) -> f32
 /// and `gsum[g] = Σ_{j∈g} x[j]` is precomputed once per activation row and
 /// shared across all output rows.
 #[inline]
+#[allow(clippy::too_many_arguments)]
 pub fn packed_row_dot(
     words: &[u32],
     bits: u8,
@@ -201,8 +165,17 @@ pub fn packed_row_dot(
 
 /// Per-group activation sums `gsum[g] = Σ_{j∈g} x[j]` (the shared zero-point
 /// term of [`packed_row_dot`]).
+///
+/// Overwrites **every** element of `gsum` — including the ragged tail group —
+/// and requires `gsum.len()` to be exactly the group count, so callers can
+/// hand it a dirty reused scratch buffer without zeroing it first.
 #[inline]
 pub fn group_sums(x: &[f32], group_size: usize, gsum: &mut [f32]) {
+    debug_assert_eq!(
+        gsum.len(),
+        x.len().div_ceil(group_size.max(1)),
+        "gsum must be exactly the group count (full overwrite contract)"
+    );
     for (g, chunk) in x.chunks(group_size).enumerate() {
         gsum[g] = chunk.iter().sum();
     }

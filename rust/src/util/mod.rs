@@ -8,6 +8,7 @@ pub mod cli;
 pub mod json;
 pub mod proptest;
 pub mod rng;
+pub mod scratch;
 pub mod threadpool;
 
 /// Shareable raw pointer for disjoint parallel writes (workers must write

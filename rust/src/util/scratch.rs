@@ -1,0 +1,201 @@
+//! Reusable f32 scratch buffers for the packed execution hot path.
+//!
+//! The fused GEMV/GEMM needs per-call working memory (folded activations,
+//! per-group sums). Allocating it per call puts `vec![0.0; n]` — an
+//! allocation *plus* a zeroing memset — on the per-token decode path.
+//! Checkout order instead: a lock-free **per-thread** cache first (the
+//! decode loop reuses its own buffers with zero synchronization), then a
+//! bounded process-wide overflow pool shared across threads (so buffers
+//! survive the short-lived scoped workers the threadpool spawns). Both
+//! layers are byte-capped: a large prefill burst can't pin its multi-MB
+//! fold buffers for the process lifetime.
+//!
+//! Contract: checked-out buffers have **arbitrary contents** (stale data
+//! from a previous use). Every consumer must fully overwrite what it reads —
+//! which `fold_activation`/`group_sums` guarantee (see the full-overwrite
+//! contract on [`crate::tensor::packed::group_sums`]).
+
+use std::cell::RefCell;
+use std::sync::Mutex;
+
+/// Buffers the shared pool retains; beyond this the excess is freed.
+const MAX_POOLED: usize = 64;
+/// Total f32 capacity the shared pool may retain (≈ 32 MB).
+const MAX_POOLED_ELEMS: usize = 8 << 20;
+/// Buffers each thread caches locally (lock-free fast path).
+const MAX_LOCAL: usize = 8;
+/// Largest buffer (in f32s, ≈ 1 MB) kept in a thread-local cache; bigger
+/// ones go to the shared pool so per-thread retention stays ≤ ~8 MB and
+/// prefill-sized buffers are reusable across threads.
+const MAX_LOCAL_BUF_ELEMS: usize = 256 << 10;
+
+struct Pool {
+    bufs: Vec<Vec<f32>>,
+    /// Sum of `capacity()` over `bufs`.
+    elems: usize,
+}
+
+static POOL: Mutex<Pool> = Mutex::new(Pool { bufs: Vec::new(), elems: 0 });
+
+thread_local! {
+    static LOCAL: RefCell<Vec<Vec<f32>>> = const { RefCell::new(Vec::new()) };
+}
+
+/// A checked-out scratch buffer; derefs to `[f32]` of exactly the requested
+/// length and returns its storage to a cache on drop.
+pub struct ScratchF32 {
+    buf: Vec<f32>,
+}
+
+impl std::ops::Deref for ScratchF32 {
+    type Target = [f32];
+    fn deref(&self) -> &[f32] {
+        &self.buf
+    }
+}
+
+impl std::ops::DerefMut for ScratchF32 {
+    fn deref_mut(&mut self) -> &mut [f32] {
+        &mut self.buf
+    }
+}
+
+impl Drop for ScratchF32 {
+    fn drop(&mut self) {
+        let buf = std::mem::take(&mut self.buf);
+        if buf.capacity() == 0 {
+            return;
+        }
+        if buf.capacity() <= MAX_LOCAL_BUF_ELEMS {
+            let kept = LOCAL.with(|l| {
+                let mut l = l.borrow_mut();
+                if l.len() < MAX_LOCAL {
+                    l.push(buf);
+                    return None;
+                }
+                Some(buf)
+            });
+            let Some(buf) = kept else { return };
+            return pool_return(buf);
+        }
+        pool_return(buf);
+    }
+}
+
+fn pool_return(buf: Vec<f32>) {
+    let mut pool = POOL.lock().unwrap();
+    if pool.bufs.len() < MAX_POOLED && pool.elems + buf.capacity() <= MAX_POOLED_ELEMS {
+        pool.elems += buf.capacity();
+        pool.bufs.push(buf);
+    } // else: drop the storage — retention stays bounded in bytes
+}
+
+/// Check out a scratch buffer of exactly `len` f32s with ARBITRARY contents.
+///
+/// Size-aware: a buffer whose capacity already fits `len` is preferred —
+/// local cache first (lock-free), then the shared pool — so a decode thread
+/// alternating column-sized and group-sized checkouts never reallocates,
+/// and a prefill-sized request finds its prefill-sized buffer in the shared
+/// pool instead of repeatedly regrowing a small local one. Only when
+/// nothing fits anywhere does it fall back to regrowing an undersized
+/// local buffer (or a fresh allocation).
+pub fn take_f32(len: usize) -> ScratchF32 {
+    let recycled = LOCAL
+        .with(|l| take_fitting(&mut l.borrow_mut(), len))
+        .or_else(|| {
+            let mut pool = POOL.lock().unwrap();
+            let buf = take_fitting(&mut pool.bufs, len);
+            if let Some(b) = &buf {
+                pool.elems -= b.capacity();
+            }
+            buf
+        })
+        .or_else(|| LOCAL.with(|l| l.borrow_mut().pop()));
+    let mut buf = recycled.unwrap_or_default();
+    if buf.capacity() < len {
+        // growth path: drop stale contents so resize doesn't copy them
+        // across the reallocation
+        buf.clear();
+    }
+    // resize, not a fresh vec: reuses capacity; zero-fills only growth.
+    buf.resize(len, 0.0);
+    ScratchF32 { buf }
+}
+
+/// Remove and return a buffer whose capacity already fits `len`, if any.
+fn take_fitting(list: &mut Vec<Vec<f32>>, len: usize) -> Option<Vec<f32>> {
+    let i = list.iter().position(|b| b.capacity() >= len)?;
+    Some(list.swap_remove(i))
+}
+
+/// Buffers currently parked in the *shared* pool (observability / tests).
+pub fn pooled() -> usize {
+    POOL.lock().unwrap().bufs.len()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn checkout_length_is_exact() {
+        // Caches are global/thread-local and tests run concurrently, so
+        // nothing is asserted about WHICH allocation comes back — only the
+        // contracts: exact length, writable, shared pool never over cap.
+        let mut a = take_f32(512);
+        assert_eq!(a.len(), 512);
+        a[0] = 7.0;
+        a[511] = -7.0;
+        drop(a);
+        let b = take_f32(512);
+        assert_eq!(b.len(), 512);
+        assert!(pooled() <= MAX_POOLED);
+    }
+
+    #[test]
+    fn local_cache_reuses_storage_on_one_thread() {
+        // On a single thread with the local cache warm, a same-size
+        // checkout must come back without reallocating. Runs on a fresh
+        // thread so the local cache state is deterministic.
+        std::thread::spawn(|| {
+            let (ptr, cacheable) = {
+                let a = take_f32(128);
+                (a.as_ptr() as usize, a.buf.capacity() <= MAX_LOCAL_BUF_ELEMS)
+            };
+            if !cacheable {
+                // take_f32 recycled an oversized buffer from the shared
+                // pool; it went back there on drop and another test thread
+                // may legally have taken it — nothing deterministic to
+                // assert in that case.
+                return;
+            }
+            let b = take_f32(128);
+            assert_eq!(b.as_ptr() as usize, ptr, "local cache should hand back the same buffer");
+        })
+        .join()
+        .unwrap();
+    }
+
+    #[test]
+    fn resize_across_sizes_keeps_length_contract() {
+        {
+            let mut small = take_f32(8);
+            for v in small.iter_mut() {
+                *v = f32::NAN;
+            }
+        }
+        // A later larger checkout may recycle that storage; contents are
+        // arbitrary by contract ("overwrite before read") — only the length
+        // must be exact.
+        let big = take_f32(1024);
+        assert_eq!(big.len(), 1024);
+        let empty = take_f32(0);
+        assert_eq!(empty.len(), 0);
+        // oversized buffers must route to the shared pool, not the local
+        // cache, when dropped
+        let huge = take_f32(MAX_LOCAL_BUF_ELEMS + 1);
+        assert_eq!(huge.len(), MAX_LOCAL_BUF_ELEMS + 1);
+        drop(huge);
+        assert!(pooled() <= MAX_POOLED);
+    }
+}

@@ -7,14 +7,35 @@
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 
-/// Number of worker threads to use: `TSGO_THREADS` env var or all cores.
+/// Number of worker threads to use: `TSGO_THREADS` env var override, else
+/// `std::thread::available_parallelism()`. Resolved once and cached — the
+/// count cannot meaningfully change mid-process, and this sits on the
+/// per-token decode path (twice per parallel region via [`auto_chunk`]).
 pub fn num_threads() -> usize {
-    if let Ok(v) = std::env::var("TSGO_THREADS") {
-        if let Ok(n) = v.parse::<usize>() {
-            return n.max(1);
+    static N: std::sync::OnceLock<usize> = std::sync::OnceLock::new();
+    *N.get_or_init(|| {
+        if let Ok(v) = std::env::var("TSGO_THREADS") {
+            if let Ok(n) = v.parse::<usize>() {
+                return n.max(1);
+            }
         }
-    }
-    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+    })
+}
+
+/// Steal-chunk size derived from the machine's parallelism instead of a
+/// per-call-site constant: spread `n` items over ~`OVERSUB` steals per
+/// worker ([`num_threads`], i.e. `TSGO_THREADS` or all cores), so small `n`
+/// still balances across threads and large `n` doesn't thrash the cursor.
+pub fn auto_chunk(n: usize) -> usize {
+    const OVERSUB: usize = 4;
+    (n / (num_threads() * OVERSUB)).max(1)
+}
+
+/// [`parallel_for_chunked`] with an [`auto_chunk`]-derived chunk size — the
+/// default way to parallelize an index range.
+pub fn parallel_for_auto<F: Fn(usize) + Sync>(n: usize, f: F) {
+    parallel_for_chunked(n, auto_chunk(n), f)
 }
 
 /// Run `f(i)` for every `i in 0..n`, distributing indices across threads
@@ -100,6 +121,22 @@ mod tests {
     fn map_items() {
         let items = vec!["a", "bb", "ccc"];
         assert_eq!(parallel_map_items(&items, |s| s.len()), vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn auto_chunk_spreads_work() {
+        assert_eq!(auto_chunk(0), 1);
+        assert_eq!(auto_chunk(1), 1);
+        let nt = num_threads();
+        // enough items that every worker gets multiple steals
+        let n = nt * 64;
+        let c = auto_chunk(n);
+        assert!(c >= 1 && c * nt <= n, "chunk {c} for n={n}, nt={nt}");
+        let sum = AtomicU64::new(0);
+        parallel_for_auto(n, |i| {
+            sum.fetch_add(i as u64, Ordering::Relaxed);
+        });
+        assert_eq!(sum.load(Ordering::Relaxed), (n as u64 - 1) * n as u64 / 2);
     }
 
     #[test]

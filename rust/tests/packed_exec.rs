@@ -13,6 +13,7 @@ use tsgo::pipeline::{quantize_model, PipelineConfig};
 use tsgo::quant::scale::{compute_group_scales, QuantSpec, ScaleMetric};
 use tsgo::quant::QuantPlan;
 use tsgo::serve::{request_generation, server::serve_in_background, ServerConfig};
+use tsgo::tensor::kernels::{set_forced, ForcedKernel};
 use tsgo::util::rng::Rng;
 
 fn tmp(name: &str) -> std::path::PathBuf {
@@ -68,6 +69,36 @@ fn packed_decode_is_token_identical_to_dense() {
         let a = greedy(&dense.weights, &prompt, 12);
         let b = greedy(&packed, &prompt, 12);
         assert_eq!(a, b, "packed greedy decode diverged for {prompt:?}");
+    }
+}
+
+#[test]
+fn packed_exec_token_identical_under_forced_scalar_and_simd_dispatch() {
+    // The dispatch-layer acceptance bar: decode and perplexity on the packed
+    // path must match the dense path under BOTH the forced-scalar table and
+    // the detected-best (SIMD where available) table, over a checkpoint that
+    // exercises every specialized kernel width (2/3/4/8-bit linears).
+    let (dense, packed) = pipeline_checkpoint(
+        "kernel_dispatch_plan.tsr",
+        "rtn:bits=2,group=32;wv=bits3;wo=bits4;w2=bits8",
+    );
+    let prompt = [5u8, 10, 15, 20];
+    let want_tokens = greedy(&dense.weights, &prompt, 12);
+    let corpus = Corpus::generate(CorpusKind::SynthC4, 12_000, 8);
+    let want_ppl = tsgo::eval::perplexity(&dense.weights, &corpus.bytes, 32, 2);
+    for force in [ForcedKernel::Scalar, ForcedKernel::Best] {
+        set_forced(force);
+        let got_tokens = greedy(&packed, &prompt, 12);
+        let got_ppl = tsgo::eval::perplexity(&packed, &corpus.bytes, 32, 2);
+        set_forced(ForcedKernel::Auto);
+        assert_eq!(
+            got_tokens, want_tokens,
+            "packed greedy decode diverged from dense under {force:?}"
+        );
+        assert!(
+            (got_ppl - want_ppl).abs() < 1e-3 * want_ppl,
+            "packed ppl {got_ppl} diverged from dense ppl {want_ppl} under {force:?}"
+        );
     }
 }
 
