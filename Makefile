@@ -1,7 +1,7 @@
 # Repo-level entry points. `make check` is the tier-1 gate
 # (build + tests + formatting).
 
-.PHONY: check build test fmt clippy bench-json artifacts
+.PHONY: check build test fmt clippy bench-json bench-check artifacts
 
 check:
 	bash ci.sh
@@ -22,6 +22,15 @@ clippy:
 # (tokens/s, GB/s, scalar-vs-SIMD speedup per bit width) at the repo root.
 bench-json:
 	cd rust && TSGO_BENCH_JSON=../BENCH_packed_gemv.json cargo bench --bench packed_gemv
+
+# Regression guard: run the packed-GEMV bench into a scratch file and
+# compare against the committed BENCH_packed_gemv.json baseline — fails on a
+# >15% tokens/s drop per bit width (TSGO_BENCH_TOLERANCE overrides). The
+# committed seed baseline carries provenance "seeded-unmeasured" and only
+# reports; `make bench-json` + commit arms the hard gate.
+bench-check:
+	cd rust && TSGO_BENCH_JSON=../BENCH_packed_gemv.fresh.json cargo bench --bench packed_gemv
+	cd rust && cargo run --release --quiet --bin bench_check -- ../BENCH_packed_gemv.json ../BENCH_packed_gemv.fresh.json
 
 # AOT-lower the L2/L1 JAX + Pallas graphs to HLO artifacts for the runtime.
 artifacts:

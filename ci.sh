@@ -1,6 +1,7 @@
 #!/usr/bin/env bash
-# Tier-1 verification: build, tests, formatting — the command `make check`
-# runs and CI should run. Requires a Rust toolchain (rustup.rs) and the
+# Tier-1 verification: build, tests (under BOTH kernel tables), formatting,
+# bench compile, lints — the command `make check` runs and CI runs
+# (.github/workflows/ci.yml). Requires a Rust toolchain (rustup.rs) and the
 # crates.io deps in rust/Cargo.toml; see CHANGES.md for the current
 # pass-set triage when no toolchain is available.
 set -euo pipefail
@@ -12,7 +13,25 @@ if ! command -v cargo >/dev/null 2>&1; then
 fi
 
 cargo build --release
-cargo test -q
+
+# The test suite must pass under BOTH kernel tables: the runtime-dispatched
+# one (SIMD where the CPU supports it) and the forced-scalar portable one.
+# They are bit-identical by construction — a failure in exactly one table
+# means that invariant broke, so fail fast and say which table it was.
+if ! cargo test -q; then
+    echo "" >&2
+    echo "FAILED: test suite under the DISPATCHED kernel table" >&2
+    echo "        (runtime-selected SIMD/scalar — the default execution path)." >&2
+    exit 1
+fi
+if ! TSGO_FORCE_SCALAR=1 cargo test -q; then
+    echo "" >&2
+    echo "FAILED: test suite under the FORCED-SCALAR kernel table (TSGO_FORCE_SCALAR=1)." >&2
+    echo "        The dispatched run above passed: the scalar/SIMD bit-identity" >&2
+    echo "        invariant (ROADMAP.md 'Kernel dispatch') is broken." >&2
+    exit 1
+fi
+
 cargo fmt --check
 # All bench targets must keep compiling (they are plain main() binaries and
 # easy to break silently since nothing else links them).

@@ -7,7 +7,7 @@
 
 use std::sync::Arc;
 use tsgo::calib::{calibration_batches, Corpus, CorpusKind};
-use tsgo::model::{ExecModel, ModelExec, ModelWeights, Preset};
+use tsgo::model::{ExecModel, KvSpec, ModelExec, ModelWeights, Preset};
 use tsgo::pipeline::{quantize_model, PipelineConfig};
 use tsgo::quant::QuantSpec;
 use tsgo::serve::server::serve_in_background;
@@ -19,10 +19,11 @@ fn measure<M: ModelExec + Send + Sync + 'static>(
     weights: Arc<M>,
     clients: usize,
     max_new: usize,
+    kv: KvSpec,
 ) -> (f64, f64, f64, usize) {
     let cfg = ServerConfig {
         addr: "127.0.0.1:0".into(),
-        batcher: BatcherConfig { max_batch: clients.max(1), ..Default::default() },
+        batcher: BatcherConfig { max_batch: clients.max(1), kv, ..Default::default() },
         max_connections: Some(clients),
     };
     let (addr, handle) = serve_in_background(weights, cfg).unwrap();
@@ -76,22 +77,32 @@ fn main() {
     let q_mb = qm.packed_bytes() as f64 / 1e6;
 
     let mut table = Table::new(&[
-        "weights", "clients", "tok/s", "p50 ms", "p95 ms", "max batch",
+        "weights", "kv", "clients", "tok/s", "p50 ms", "p95 ms", "max batch",
     ]);
     let packed = Arc::new(ExecModel::from_quantized(&qm));
     let lin_fp_bytes = packed.dense_linear_bytes();
     let fp = Arc::new(fp);
     let q = Arc::new(qm.weights);
     let max_new = 24;
+    let kv8 = KvSpec::PackedGroupwise { bits: 8, group: 64 };
+    let kv4 = KvSpec::PackedGroupwise { bits: 4, group: 64 };
     for clients in [1usize, 4, 8] {
-        for label in ["FP32", "INT2-dequant", "INT2-packed"] {
+        let rows = [
+            ("FP32", KvSpec::DenseF32),
+            ("INT2-dequant", KvSpec::DenseF32),
+            ("INT2-packed", KvSpec::DenseF32),
+            ("INT2-packed", kv8),
+            ("INT2-packed", kv4),
+        ];
+        for (label, kv) in rows {
             let (tps, p50, p95, maxb) = match label {
-                "FP32" => measure(fp.clone(), clients, max_new),
-                "INT2-dequant" => measure(q.clone(), clients, max_new),
-                _ => measure(packed.clone(), clients, max_new),
+                "FP32" => measure(fp.clone(), clients, max_new, kv),
+                "INT2-dequant" => measure(q.clone(), clients, max_new, kv),
+                _ => measure(packed.clone(), clients, max_new, kv),
             };
             table.row(vec![
                 label.into(),
+                kv.effective(&fp.config).label(),
                 clients.to_string(),
                 format!("{tps:.1}"),
                 format!("{p50:.1}"),
@@ -101,12 +112,38 @@ fn main() {
         }
     }
     table.print("serving throughput / latency");
+
+    // -- KV-cache bytes per decoded token (all layers, K+V) -----------------
+    // The decode-bandwidth story once weights are packed: the f32 KV cache
+    // is what is left to shrink. Reported for the bench model's shape and
+    // the serving presets (the ≥3.5× int8 bar holds from head_dim 64 up —
+    // per-head scale/zero overhead fades as heads widen).
+    let mut kvt = Table::new(&["model", "kv format", "KV B/token", "vs f32"]);
+    for (mlabel, c) in [
+        ("bench model", fp.config),
+        ("small", Preset::Small.config()),
+        ("base", Preset::Base.config()),
+    ] {
+        let dense = KvSpec::DenseF32.bytes_per_token(&c) * c.n_layers;
+        for spec in [KvSpec::DenseF32, kv8, kv4] {
+            let b = spec.bytes_per_token(&c) * c.n_layers;
+            kvt.row(vec![
+                mlabel.into(),
+                spec.effective(&c).label(),
+                b.to_string(),
+                format!("{:.2}x", dense as f64 / b as f64),
+            ]);
+        }
+    }
+    kvt.print("KV cache bytes per decoded token (all layers, K+V)");
+
     println!(
         "weight footprint: {fp_mb:.1} MB fp32 → {q_mb:.1} MB packed ({:.1}× smaller).\n\
          INT2-dequant serves dense weights dequantized at load; INT2-packed executes\n\
          the packed ints through the fused dequant kernels (`tsgo serve --packed`),\n\
-         touching {:.1}× fewer linear-weight bytes per token. Kernel-level numbers:\n\
-         `cargo bench --bench packed_gemv`.",
+         touching {:.1}× fewer linear-weight bytes per token. The kv column shows the\n\
+         decode KV-cache representation (`--kv-bits/--kv-group`). Kernel-level\n\
+         numbers: `cargo bench --bench packed_gemv`.",
         fp_mb / q_mb,
         lin_fp_bytes as f64 / packed.linear_weight_bytes() as f64
     );

@@ -1,0 +1,136 @@
+//! `bench_check` — compare a fresh `BENCH_packed_gemv.json` against the
+//! committed baseline and fail on tokens/s regressions (`make bench-check`).
+//!
+//! Usage: `bench_check <baseline.json> <fresh.json>`
+//!
+//! Per bit width (GEMV dispatched tokens/s) and per decode row, a drop of
+//! more than `TSGO_BENCH_TOLERANCE` (default 0.15 = 15%) against the
+//! baseline is a regression → exit 1. Two deliberate soft edges:
+//!
+//! * a missing baseline is a bootstrap, not a failure — the tool says how to
+//!   create one and exits 0;
+//! * only a baseline whose `provenance` field is exactly `"measured"` (what
+//!   `make bench-json` stamps) arms the hard gate; anything else — including
+//!   the repo-seeded `"seeded-unmeasured"` placeholder and baselines with no
+//!   provenance at all — is compared and reported but never fails the build.
+//!
+//! Absolute tokens/s are machine-specific, so cross-machine comparisons are
+//! advisory by nature — CI runs this as a non-blocking job; the hard gate is
+//! meant for a stable perf box comparing against its own committed numbers.
+
+use std::process::exit;
+use tsgo::util::json::Json;
+
+fn load(path: &str, what: &str) -> Option<Json> {
+    let text = match std::fs::read_to_string(path) {
+        Ok(t) => t,
+        Err(_) => return None,
+    };
+    match Json::parse(&text) {
+        Ok(j) => Some(j),
+        Err(e) => {
+            eprintln!("bench-check: {what} {path} is not valid JSON: {e}");
+            exit(2);
+        }
+    }
+}
+
+/// Pull `(key, tokens/s)` comparison rows shared by both reports.
+fn rows(j: &Json) -> Vec<(String, f64)> {
+    let mut out = Vec::new();
+    if let Some(arr) = j.get("gemv").as_arr() {
+        for e in arr {
+            if let (Some(bits), Some(tps)) =
+                (e.get("bits").as_f64(), e.get("dispatched_tokens_per_s").as_f64())
+            {
+                out.push((format!("gemv INT{bits}"), tps));
+            }
+        }
+    }
+    let decode = j.get("decode");
+    for key in [
+        "dense_tokens_per_s",
+        "packed_int2_tokens_per_s",
+        "packed_int2_kv8_tokens_per_s",
+        "packed_int2_kv4_tokens_per_s",
+    ] {
+        if let Some(tps) = decode.get(key).as_f64() {
+            out.push((format!("decode {key}"), tps));
+        }
+    }
+    out
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let [baseline_path, fresh_path] = match args.as_slice() {
+        [b, f] => [b.clone(), f.clone()],
+        _ => {
+            eprintln!("usage: bench_check <baseline.json> <fresh.json>");
+            exit(2);
+        }
+    };
+    let tolerance: f64 = std::env::var("TSGO_BENCH_TOLERANCE")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0.15);
+
+    let Some(baseline) = load(&baseline_path, "baseline") else {
+        println!(
+            "bench-check: no baseline at {baseline_path} — bootstrap: run \
+             `make bench-json` and commit {baseline_path} to arm the regression guard."
+        );
+        exit(0);
+    };
+    let Some(fresh) = load(&fresh_path, "fresh results") else {
+        eprintln!("bench-check: cannot read fresh results at {fresh_path} (run `make bench-json` first)");
+        exit(2);
+    };
+
+    // Only a baseline `make bench-json` actually measured arms the gate;
+    // seeded placeholders and un-tagged files report but never fail.
+    let armed = baseline.get("provenance").as_str() == Some("measured");
+
+    let base_rows = rows(&baseline);
+    let fresh_rows = rows(&fresh);
+    let mut regressions = Vec::new();
+    println!(
+        "bench-check vs {baseline_path} (tolerance {:.0}%{})",
+        tolerance * 100.0,
+        if armed { "" } else { ", baseline not yet measured — advisory" }
+    );
+    println!("  {:<36} {:>12} {:>12} {:>8}", "row", "baseline", "fresh", "ratio");
+    for (key, base_tps) in &base_rows {
+        let Some((_, fresh_tps)) = fresh_rows.iter().find(|(k, _)| k == key) else {
+            regressions.push(format!("{key}: missing from fresh results"));
+            continue;
+        };
+        let ratio = if *base_tps > 0.0 { fresh_tps / base_tps } else { f64::INFINITY };
+        let flag = if ratio < 1.0 - tolerance { "  << REGRESSION" } else { "" };
+        println!(
+            "  {key:<36} {base_tps:>12.1} {fresh_tps:>12.1} {:>7.2}x{flag}",
+            ratio
+        );
+        if ratio < 1.0 - tolerance {
+            regressions.push(format!(
+                "{key}: {fresh_tps:.1} tok/s is {:.1}% below baseline {base_tps:.1}",
+                (1.0 - ratio) * 100.0
+            ));
+        }
+    }
+    if regressions.is_empty() {
+        println!("bench-check: OK — no row regressed more than {:.0}%", tolerance * 100.0);
+        return;
+    }
+    println!("bench-check: {} regression(s):", regressions.len());
+    for r in &regressions {
+        println!("  - {r}");
+    }
+    if armed {
+        exit(1);
+    }
+    println!(
+        "bench-check: baseline is seeded, not measured — not failing. \
+         Regenerate it with `make bench-json` and commit to arm the guard."
+    );
+}

@@ -6,20 +6,23 @@
 //! and the AOT HLO artifact.
 
 use crate::calib::batcher::eval_windows;
-use crate::model::{forward_logits, ModelExec};
+use crate::model::{forward_logits, DecodeState, KvSpec, ModelExec};
 use crate::tensor::Matrix;
+
+/// NLL of one next-token prediction given a logits row.
+fn row_nll(row: &[f32], target: usize) -> f64 {
+    let maxv = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let lse: f64 =
+        row.iter().map(|v| ((v - maxv) as f64).exp()).sum::<f64>().ln() + maxv as f64;
+    lse - row[target] as f64
+}
 
 /// Mean NLL of a window given its logits `[T, vocab]`.
 pub fn window_nll(logits: &Matrix, tokens: &[u8]) -> f64 {
     let n = tokens.len() - 1;
     let mut total = 0.0f64;
     for t in 0..n {
-        let row = logits.row(t);
-        let target = tokens[t + 1] as usize;
-        let maxv = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
-        let lse: f64 =
-            row.iter().map(|v| ((v - maxv) as f64).exp()).sum::<f64>().ln() + maxv as f64;
-        total += lse - row[target] as f64;
+        total += row_nll(logits.row(t), tokens[t + 1] as usize);
     }
     total / n as f64
 }
@@ -52,6 +55,35 @@ pub fn perplexity<M: ModelExec>(m: &M, data: &[u8], seq_len: usize, max_windows:
     (nlls.iter().sum::<f64>() / nlls.len() as f64).exp()
 }
 
+/// Perplexity measured through the serve-path KV-cached decode instead of
+/// the full-sequence forward: every window is teacher-forced token by token
+/// through a [`DecodeState`] with the given KV representation. With
+/// [`KvSpec::DenseF32`] this matches [`perplexity`] up to the decode path's
+/// usual 1e-4-level logit agreement; with a packed spec the difference *is*
+/// the KV-quantization accuracy cost — the ppl-delta number `tsgo eval
+/// --kv-bits` reports.
+pub fn decode_perplexity<M: ModelExec>(
+    m: &M,
+    data: &[u8],
+    seq_len: usize,
+    max_windows: usize,
+    kv: KvSpec,
+) -> f64 {
+    let windows = eval_windows(data, seq_len, max_windows);
+    assert!(!windows.is_empty(), "no evaluation windows");
+    let nlls = crate::util::threadpool::parallel_map_items(&windows, |win| {
+        let mut st = DecodeState::with_kv(m, kv);
+        let n = win.len() - 1;
+        let mut total = 0.0f64;
+        for t in 0..n {
+            let logits = st.step(win[t]);
+            total += row_nll(&logits, win[t + 1] as usize);
+        }
+        total / n as f64
+    });
+    (nlls.iter().sum::<f64>() / nlls.len() as f64).exp()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -77,6 +109,37 @@ mod tests {
         let a = perplexity(&w, &c.bytes, 32, 3);
         let b = perplexity_with(&c.bytes, 32, 3, |t| forward_logits(&w, t));
         assert!((a - b).abs() < 1e-9 * a);
+    }
+
+    #[test]
+    fn decode_ppl_matches_forward_ppl_with_f32_kv() {
+        let mut rng = Rng::new(4);
+        let w = ModelWeights::init(Preset::Tiny.config(), &mut rng);
+        let c = Corpus::generate(CorpusKind::SynthWiki, 4_000, 6);
+        let a = perplexity(&w, &c.bytes, 32, 3);
+        let b = decode_perplexity(&w, &c.bytes, 32, 3, KvSpec::DenseF32);
+        assert!((a - b).abs() < 1e-3 * a, "forward {a} vs decode {b}");
+    }
+
+    #[test]
+    fn quantized_kv_ppl_within_tolerance() {
+        // The documented accuracy bars: int8-KV decode ppl within 2% of the
+        // f32-KV decode ppl, int4 within 5% (ROADMAP "Quantized KV cache").
+        let mut rng = Rng::new(5);
+        let w = ModelWeights::init(Preset::Tiny.config(), &mut rng);
+        let c = Corpus::generate(CorpusKind::SynthC4, 4_000, 9);
+        let base = decode_perplexity(&w, &c.bytes, 32, 3, KvSpec::DenseF32);
+        for (bits, tol) in [(8u8, 0.02), (4, 0.05)] {
+            let q = decode_perplexity(
+                &w,
+                &c.bytes,
+                32,
+                3,
+                KvSpec::PackedGroupwise { bits, group: 64 },
+            );
+            let delta = (q / base - 1.0).abs();
+            assert!(delta < tol, "int{bits}: ppl {q} vs {base} (delta {delta:.4})");
+        }
     }
 
     #[test]

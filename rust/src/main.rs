@@ -15,7 +15,7 @@ use std::path::{Path, PathBuf};
 use std::sync::Arc;
 use tsgo::calib::{calibration_batches, Corpus, CorpusKind};
 use tsgo::eval::tasks::{build_suite, task_suite};
-use tsgo::model::{store, ModelExec, ModelWeights, Preset};
+use tsgo::model::{store, KvSpec, ModelExec, ModelWeights, Preset};
 use tsgo::pipeline::{quantize_model, PipelineConfig};
 use tsgo::quant::QuantPlan;
 use tsgo::runtime::Engine;
@@ -67,11 +67,14 @@ fn print_help() {
          \x20            --method takes any registered quantizer (rtn|awq|actorder|gptq|\n\
          \x20            stage1|stage2|ours) or a per-layer plan string such as\n\
          \x20            'ours:bits=2,group=64;wv,wo=bits4;l0=awq'\n\
-         \x20 eval       PPL + 0-shot (--model m.tsr [--quantized | --packed])\n\
+         \x20 eval       PPL + 0-shot (--model m.tsr [--quantized | --packed]);\n\
+         \x20            --kv-bits 8 --kv-group 64 additionally reports the\n\
+         \x20            decode-path ppl delta of a group-wise quantized KV cache\n\
          \x20 serve      generation server (--model m.tsr --addr 127.0.0.1:7433\n\
          \x20            [--quantized | --packed]); --packed executes the packed\n\
          \x20            ints through the fused dequant kernels, never\n\
-         \x20            materializing dense weights\n\
+         \x20            materializing dense weights; --kv-bits 8|4 --kv-group 64\n\
+         \x20            quantizes the decode KV cache group-wise per head\n\
          \x20 kernels    print the dequant kernel dispatch table (CPU features,\n\
          \x20            per-bit-width kernel selection, forcing state)\n\
          \x20 warmup     pre-compile all artifacts"
@@ -274,10 +277,16 @@ fn cmd_eval(argv: &[String]) -> Result<()> {
         OptSpec { name: "windows", help: "eval windows per corpus", default: Some("32"), is_flag: false },
         OptSpec { name: "tasks", help: "items per 0-shot family", default: Some("25"), is_flag: false },
         OptSpec { name: "native", help: "force native forward (skip artifacts)", default: None, is_flag: true },
+        OptSpec { name: "kv-bits", help: "also report decode ppl with an N-bit KV cache (0 = off)", default: Some("0"), is_flag: false },
+        OptSpec { name: "kv-group", help: "KV group size (per-head groups, clamped to head_dim)", default: Some("64"), is_flag: false },
     ];
     let a = parse(argv, "tsgo eval", "PPL + 0-shot evaluation", &specs)?;
     let windows = a.usize("windows").map_err(anyhow::Error::msg)?;
     let n_tasks = a.usize("tasks").map_err(anyhow::Error::msg)?;
+    let kv = KvSpec::from_flags(
+        a.usize("kv-bits").map_err(anyhow::Error::msg)?,
+        a.usize("kv-group").map_err(anyhow::Error::msg)?,
+    )?;
     if a.flag("packed") {
         let em = store::load_quantized_packed(Path::new(&a.str("model")))?;
         println!(
@@ -287,7 +296,8 @@ fn cmd_eval(argv: &[String]) -> Result<()> {
             em.linear_weight_bytes() as f64 / 1e6
         );
         println!("kernels: {}", em.kernel_dispatch());
-        return run_eval_report(&em, windows, n_tasks, &mut native_ppl);
+        run_eval_report(&em, windows, n_tasks, &mut native_ppl)?;
+        return run_kv_ppl_report(&em, windows, kv);
     }
     let w = load_any_model(Path::new(&a.str("model")), a.flag("quantized"))?;
     let engine = if a.flag("native") { None } else { Engine::open_default() };
@@ -295,10 +305,33 @@ fn cmd_eval(argv: &[String]) -> Result<()> {
         Some(e) if e.manifest.config == w.config => {
             run_eval_report(&w, windows, n_tasks, &mut |m, test, wnd| {
                 tsgo::runtime::perplexity_artifact(e, m, test, m.config().seq_len, wnd)
-            })
+            })?
         }
-        _ => run_eval_report(&w, windows, n_tasks, &mut native_ppl),
+        _ => run_eval_report(&w, windows, n_tasks, &mut native_ppl)?,
     }
+    run_kv_ppl_report(&w, windows, kv)
+}
+
+/// The end-to-end accuracy accounting of KV-cache quantization: decode-path
+/// ppl with the f32 cache vs the requested packed cache, and the delta. A
+/// no-op when `--kv-bits` was 0/absent.
+fn run_kv_ppl_report<M: ModelExec>(m: &M, windows: usize, kv: KvSpec) -> Result<()> {
+    if !kv.is_packed() {
+        return Ok(());
+    }
+    let cfg = m.config();
+    print_kv_banner(&kv, cfg);
+    let corpus = Corpus::generate(CorpusKind::SynthWiki, 400_000, 1);
+    let (_, test) = corpus.split(0.1);
+    let base = tsgo::eval::decode_perplexity(m, test, cfg.seq_len, windows, KvSpec::DenseF32);
+    let quant = tsgo::eval::decode_perplexity(m, test, cfg.seq_len, windows, kv);
+    println!(
+        "decode ppl[{}]: f32-KV = {base:.3}, {}-KV = {quant:.3} ({:+.3}%)",
+        CorpusKind::SynthWiki.label(),
+        kv.effective(cfg).label(),
+        (quant / base - 1.0) * 100.0
+    );
+    Ok(())
 }
 
 fn cmd_serve(argv: &[String]) -> Result<()> {
@@ -308,12 +341,19 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         OptSpec { name: "packed", help: "execute the packed ints directly (fused dequant kernels)", default: None, is_flag: true },
         OptSpec { name: "addr", help: "bind address", default: Some("127.0.0.1:7433"), is_flag: false },
         OptSpec { name: "max-batch", help: "dynamic batch cap", default: Some("8"), is_flag: false },
+        OptSpec { name: "kv-bits", help: "quantize the decode KV cache to N bits (0 = f32)", default: Some("0"), is_flag: false },
+        OptSpec { name: "kv-group", help: "KV group size (per-head groups, clamped to head_dim)", default: Some("64"), is_flag: false },
     ];
     let a = parse(argv, "tsgo serve", "batched generation server", &specs)?;
+    let kv = KvSpec::from_flags(
+        a.usize("kv-bits").map_err(anyhow::Error::msg)?,
+        a.usize("kv-group").map_err(anyhow::Error::msg)?,
+    )?;
     let cfg = tsgo::serve::ServerConfig {
         addr: a.str("addr"),
         batcher: tsgo::serve::BatcherConfig {
             max_batch: a.usize("max-batch").map_err(anyhow::Error::msg)?,
+            kv,
             ..Default::default()
         },
         max_connections: None,
@@ -328,10 +368,36 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
             em.dense_linear_bytes() as f64 / 1e6
         );
         println!("kernels: {}", em.kernel_dispatch());
+        print_kv_banner(&kv, em.config());
         return tsgo::serve::serve(Arc::new(em), cfg);
     }
     let w = Arc::new(load_any_model(Path::new(&a.str("model")), a.flag("quantized"))?);
+    print_kv_banner(&kv, w.config());
     tsgo::serve::serve(w, cfg)
+}
+
+/// One banner line describing the decode KV-cache representation, with the
+/// per-token byte accounting that motivates quantizing it.
+fn print_kv_banner(kv: &KvSpec, cfg: &tsgo::model::ModelConfig) {
+    let dense = KvSpec::DenseF32.bytes_per_token(cfg) * cfg.n_layers;
+    // Label the *effective* spec: a requested group wider than head_dim is
+    // stored clamped, and the banner must describe what actually runs.
+    match kv.effective(cfg) {
+        KvSpec::DenseF32 => {
+            println!("kv cache: f32 ({dense} B/token across {} layers)", cfg.n_layers)
+        }
+        spec => {
+            let b = spec.bytes_per_token(cfg) * cfg.n_layers;
+            println!(
+                "kv cache: {} ({} B/token across {} layers vs {} f32, {:.1}x smaller)",
+                spec.label(),
+                b,
+                cfg.n_layers,
+                dense,
+                dense as f64 / b as f64
+            );
+        }
+    }
 }
 
 fn cmd_kernels() -> Result<()> {
@@ -348,9 +414,12 @@ fn cmd_kernels() -> Result<()> {
         info.active,
         if info.forced_scalar { " (TSGO_FORCE_SCALAR / forced)" } else { "" }
     );
-    println!("  {:<6} {:<16} {:<16}", "bits", "scalar", "active");
-    for (bits, scalar, active) in &info.rows {
-        println!("  {:<6} {:<16} {:<16}", bits, scalar, active);
+    println!(
+        "  {:<6} {:<16} {:<16} {:<16}",
+        "bits", "scalar dot", "active dot", "active kv-axpy"
+    );
+    for (bits, scalar, active, axpy) in &info.rows {
+        println!("  {:<6} {:<16} {:<16} {:<16}", bits, scalar, active, axpy);
     }
     println!("\nforce the portable path with TSGO_FORCE_SCALAR=1 (bit-identical\nto the SIMD kernels by construction; see ROADMAP.md).");
     Ok(())

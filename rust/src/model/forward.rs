@@ -17,6 +17,7 @@
 //! Numerics must match the JAX model: RMSNorm ε = 1e-5, rotary embeddings
 //! over pairs `(x[2i], x[2i+1])` with base 10000, pre-norm residual blocks.
 
+use super::kvcache::{KvCache, KvSpec};
 use super::linear::{BlockLinears, ModelExec};
 use super::weights::{LinearKind, ModelWeights};
 use crate::tensor::Matrix;
@@ -214,24 +215,56 @@ pub fn sequence_nll<M: ModelExec>(m: &M, tokens: &[u8]) -> f64 {
 /// Incremental KV-cached decoding state for one sequence (serve path),
 /// generic over the execution representation — the packed serve path runs
 /// exactly this code with fused dequant GEMVs behind [`BlockLinears`].
+///
+/// The K/V caches themselves are representation-pluggable too
+/// ([`KvSpec`]): the default [`KvSpec::DenseF32`] keeps f32 rows
+/// (bit-identical to the historical decode path), while
+/// [`KvSpec::PackedGroupwise`] RTN-quantizes appended rows with per-head
+/// group-wise scales and attends straight from the packed words
+/// (`tsgo serve --kv-bits 8 --kv-group 64`).
 pub struct DecodeState<'a, M: ModelExec> {
     model: &'a M,
-    /// Per layer: cached K and V, `[t_so_far, d]`.
-    kcache: Vec<Matrix>,
-    vcache: Vec<Matrix>,
+    /// Per layer: cached K and V rows in the configured representation.
+    kcache: Vec<KvCache>,
+    vcache: Vec<KvCache>,
+    spec: KvSpec,
     pub pos: usize,
 }
 
 impl<'a, M: ModelExec> DecodeState<'a, M> {
     pub fn new(model: &'a M) -> DecodeState<'a, M> {
+        Self::with_kv(model, KvSpec::DenseF32)
+    }
+
+    /// Decode with an explicit KV-cache representation.
+    pub fn with_kv(model: &'a M, spec: KvSpec) -> DecodeState<'a, M> {
         let cfg = model.config();
         let n = cfg.n_layers;
+        // Store and report the *effective* spec (group clamped to head_dim).
+        let spec = spec.effective(cfg);
         DecodeState {
             model,
-            kcache: (0..n).map(|_| Matrix::zeros(0, cfg.d_model)).collect(),
-            vcache: (0..n).map(|_| Matrix::zeros(0, cfg.d_model)).collect(),
+            kcache: (0..n).map(|_| KvCache::new(spec, cfg)).collect(),
+            vcache: (0..n).map(|_| KvCache::new(spec, cfg)).collect(),
+            spec,
             pos: 0,
         }
+    }
+
+    /// The configured KV representation (group post-clamp).
+    pub fn kv_spec(&self) -> KvSpec {
+        self.spec
+    }
+
+    /// Bytes currently held by all layers' K+V caches.
+    pub fn kv_bytes(&self) -> usize {
+        self.kcache.iter().chain(&self.vcache).map(|c| c.nbytes()).sum()
+    }
+
+    /// Total storage-growth events across all caches — O(layers · log pos)
+    /// by the amortized-growth contract.
+    pub fn kv_grow_events(&self) -> usize {
+        self.kcache.iter().chain(&self.vcache).map(|c| c.grow_events()).sum()
     }
 
     /// Feed one token; returns the logits for the next position.
@@ -254,45 +287,33 @@ impl<'a, M: ModelExec> DecodeState<'a, M> {
             rope_inplace(&mut q, n_heads, self.pos);
             rope_inplace(&mut k, n_heads, self.pos);
 
-            // append to cache
-            let kc = &mut self.kcache[li];
-            let vc = &mut self.vcache[li];
-            let mut knew = Matrix::zeros(kc.rows + 1, d);
-            knew.set_slice(0, 0, kc);
-            knew.set_slice(kc.rows, 0, &k);
-            *kc = knew;
-            let mut vnew = Matrix::zeros(vc.rows + 1, d);
-            vnew.set_slice(0, 0, vc);
-            vnew.set_slice(vc.rows, 0, &v);
-            *vc = vnew;
+            // append to cache (quantizing on the fly when packed)
+            self.kcache[li].append(k.row(0));
+            self.vcache[li].append(v.row(0));
+            let kc = &self.kcache[li];
+            let vc = &self.vcache[li];
 
-            // attention against the cache
-            let t_len = kc.rows;
+            // attention against the cache, head by head: fused dequant
+            // scores + softmax + fused dequant probs·V accumulation
+            let t_len = kc.rows();
             let mut ctx = Matrix::zeros(1, d);
+            let mut scores: Vec<f32> = Vec::with_capacity(t_len);
             for hh in 0..n_heads {
                 let base = hh * hd;
-                let qrow = &q.row(0)[base..base + hd];
-                let mut scores = Vec::with_capacity(t_len);
+                kc.head_scores(hh, q.row(0), scale, &mut scores);
                 let mut maxs = f32::NEG_INFINITY;
-                for tk in 0..t_len {
-                    let s =
-                        crate::tensor::matrix::dot(qrow, &kc.row(tk)[base..base + hd]) * scale;
+                for &s in scores.iter() {
                     maxs = maxs.max(s);
-                    scores.push(s);
                 }
                 let mut denom = 0.0;
                 for s in scores.iter_mut() {
                     *s = (*s - maxs).exp();
                     denom += *s;
                 }
-                let crow = ctx.row_mut(0);
-                for (tk, p) in scores.iter().enumerate() {
-                    let wgt = p / denom;
-                    let vrow = &vc.row(tk)[base..base + hd];
-                    for i in 0..hd {
-                        crow[base + i] += wgt * vrow[i];
-                    }
+                for s in scores.iter_mut() {
+                    *s /= denom;
                 }
+                vc.head_axpy(hh, &scores, &mut ctx.row_mut(0)[base..base + hd]);
             }
             let attn_out = l.apply(LinearKind::Wo, &ctx);
             for (hv, a) in h.iter_mut().zip(&attn_out.data) {
@@ -422,6 +443,36 @@ mod tests {
                 .map(|(a, b)| (a - b).abs())
                 .fold(0.0f32, f32::max);
             assert!(maxdiff < 1e-4, "pos {t}: maxdiff {maxdiff}");
+        }
+    }
+
+    #[test]
+    fn quantized_kv_decode_tracks_full_forward() {
+        // int8 per-head group-wise KV must track the exact (cache-free)
+        // full forward closely; int4 more loosely. Dense-KV decode already
+        // matches to 1e-4 (test above), so the slack here is the KV
+        // quantization error alone.
+        let w = tiny_model(8);
+        let tokens: Vec<u8> = vec![3, 141, 59, 26, 53, 58, 97, 93];
+        let full = forward_logits(&w, &tokens);
+        for (bits, tol) in [(8u8, 5e-2f32), (4, 3e-1)] {
+            let spec = KvSpec::PackedGroupwise { bits, group: 64 };
+            let mut st = DecodeState::with_kv(&w, spec);
+            assert_eq!(st.kv_spec(), KvSpec::PackedGroupwise { bits, group: 32 });
+            for (t, &tok) in tokens.iter().enumerate() {
+                let step_logits = st.step(tok);
+                let maxdiff = step_logits
+                    .iter()
+                    .zip(full.row(t))
+                    .map(|(a, b)| (a - b).abs())
+                    .fold(0.0f32, f32::max);
+                assert!(maxdiff < tol, "bits={bits} pos {t}: maxdiff {maxdiff}");
+            }
+            // cache accounting: K+V across layers, spec-predicted size
+            let per_tok = st.kv_spec().bytes_per_token(&w.config);
+            assert_eq!(st.kv_bytes(), tokens.len() * w.config.n_layers * per_tok);
+            let dense_per_tok = KvSpec::DenseF32.bytes_per_token(&w.config);
+            assert!(per_tok * 2 < dense_per_tok, "int{bits} KV not smaller");
         }
     }
 

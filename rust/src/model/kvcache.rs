@@ -1,0 +1,647 @@
+//! Group-wise quantized KV cache — the second packed data plane.
+//!
+//! PR 2/3 made weights execute straight from packed ints, which leaves
+//! decode bandwidth dominated by the f32 K/V cache: every generated token
+//! re-reads the entire cache once for `q·kᵀ` and once for `probs·V`. This
+//! module applies the paper's group-wise affine format to those
+//! *activations*: appended K/V rows are RTN-quantized on the fly with
+//! **per-head, per-group** asymmetric (min/max) scales and stored in the
+//! same little-endian packed-word layout as [`PackedInts`], and the attend
+//! kernels fuse dequantization into the attention dot products so the cache
+//! is never materialized in f32.
+//!
+//! Differences from the weight plane that shape the design:
+//!
+//! * **Written incrementally at decode time.** Weights are read-only; the KV
+//!   cache grows one row per token. Both the dense and the packed variants
+//!   use amortized doubling growth (tracked by [`KvCache::grow_events`]) so
+//!   the serve path never reallocates per token.
+//! * **Scales live per row.** A row is quantized once when appended and its
+//!   `(scale, zero)` pairs are fixed forever — no global calibration pass,
+//!   matching the KIVI/KVQuant observation that per-token K/V quantization
+//!   works because each row's dynamic range is known exactly at append time.
+//! * **Groups never cross heads.** Attention reads the cache head by head,
+//!   so the group grid subdivides each head's `head_dim` span (`group` is
+//!   clamped to `head_dim`); every attend span is then a whole number of
+//!   groups and the fused kernels can factor the zero point per group:
+//!
+//!   ```text
+//!   q·k̂ᵀ  = Σ_g s_g (Σ_{j∈g} k_j q_j − z_g Σ_{j∈g} q_j)      (dot_span)
+//!   ctx  += Σ_t w_t · s_g (k_j − z_g) = Σ_t (a q_j + b)       (axpy_span)
+//!   ```
+//!
+//! Both fused kernels route through the runtime-dispatched table in
+//! [`crate::tensor::kernels`], and the forced-scalar table reproduces the
+//! dispatched numerics bit for bit (`dot_span` by the lane-striped identity,
+//! `axpy_span` structurally — it is elementwise).
+
+use super::config::ModelConfig;
+use crate::tensor::packed::{axpy_span, dot_span, PackedInts};
+use anyhow::{bail, Result};
+
+/// How a [`KvCache`] stores appended rows.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KvSpec {
+    /// Plain f32 rows (the default; numerically identical to the
+    /// pre-KV-cache-quantization decode path).
+    DenseF32,
+    /// Group-wise asymmetric RTN on append: packed ints + per-head,
+    /// per-group `(scale, zero)` pairs. `group` is clamped to `head_dim` at
+    /// construction so groups never cross a head boundary.
+    PackedGroupwise { bits: u8, group: usize },
+}
+
+impl KvSpec {
+    /// Build from the `--kv-bits` / `--kv-group` CLI flags
+    /// (`kv_bits == 0` means the f32 cache).
+    pub fn from_flags(kv_bits: usize, kv_group: usize) -> Result<KvSpec> {
+        match kv_bits {
+            0 => Ok(KvSpec::DenseF32),
+            1..=8 => {
+                if kv_group == 0 {
+                    bail!("--kv-group must be positive");
+                }
+                Ok(KvSpec::PackedGroupwise { bits: kv_bits as u8, group: kv_group })
+            }
+            _ => bail!("--kv-bits must be 0 (f32) or 1..=8, got {kv_bits}"),
+        }
+    }
+
+    pub fn is_packed(&self) -> bool {
+        matches!(self, KvSpec::PackedGroupwise { .. })
+    }
+
+    /// The spec a cache actually stores for `cfg`: the group clamped to
+    /// `head_dim` (groups never cross heads). Banners and bench rows must
+    /// label with this, not the requested spec.
+    pub fn effective(&self, cfg: &ModelConfig) -> KvSpec {
+        match *self {
+            KvSpec::DenseF32 => KvSpec::DenseF32,
+            KvSpec::PackedGroupwise { bits, group } => KvSpec::PackedGroupwise {
+                bits,
+                group: group.clamp(1, cfg.head_dim()),
+            },
+        }
+    }
+
+    /// Short human label ("f32", "int8 g64") for banners and bench rows.
+    pub fn label(&self) -> String {
+        match self {
+            KvSpec::DenseF32 => "f32".to_string(),
+            KvSpec::PackedGroupwise { bits, group } => format!("int{bits} g{group}"),
+        }
+    }
+
+    /// Bytes appended per decoded token per layer (K **and** V rows,
+    /// including scale/zero overhead) — the bytes-per-token column of the
+    /// serving bench. Uses the effective (head-clamped) group size, so the
+    /// number reflects what the cache actually stores for `cfg`.
+    pub fn bytes_per_token(&self, cfg: &ModelConfig) -> usize {
+        match *self {
+            KvSpec::DenseF32 => 2 * cfg.d_model * 4,
+            KvSpec::PackedGroupwise { bits, group } => {
+                let hd = cfg.head_dim();
+                let geff = group.clamp(1, hd);
+                let groups_per_row = cfg.n_heads * hd.div_ceil(geff);
+                2 * (PackedInts::words_needed(cfg.d_model, bits) * 4 + groups_per_row * 8)
+            }
+        }
+    }
+}
+
+/// Dense f32 cache rows with amortized doubling growth (the seed
+/// implementation rebuilt a `Matrix` per appended token — O(T²) copies over
+/// a decode).
+#[derive(Clone, Debug)]
+pub struct DenseKv {
+    d: usize,
+    head_dim: usize,
+    rows: usize,
+    data: Vec<f32>,
+    grows: usize,
+}
+
+/// Packed group-wise cache: one quantized row per appended token, flat word
+/// storage (`rows × words_per_row`) plus per-row `(scale, zero)` pairs
+/// (`rows × groups_per_row`), all with doubling growth.
+#[derive(Clone, Debug)]
+pub struct PackedKv {
+    bits: u8,
+    /// Effective group size after clamping to `head_dim`.
+    group: usize,
+    n_heads: usize,
+    head_dim: usize,
+    d: usize,
+    words_per_row: usize,
+    groups_per_head: usize,
+    rows: usize,
+    words: Vec<u32>,
+    scales: Vec<f32>,
+    zeros: Vec<f32>,
+    grows: usize,
+}
+
+/// One K or V cache for one layer, in whichever representation the decode
+/// was configured with ([`KvSpec`]).
+#[derive(Clone, Debug)]
+pub enum KvCache {
+    Dense(DenseKv),
+    Packed(PackedKv),
+}
+
+impl KvCache {
+    pub fn new(spec: KvSpec, cfg: &ModelConfig) -> KvCache {
+        match spec {
+            KvSpec::DenseF32 => KvCache::Dense(DenseKv {
+                d: cfg.d_model,
+                head_dim: cfg.head_dim(),
+                rows: 0,
+                data: Vec::new(),
+                grows: 0,
+            }),
+            KvSpec::PackedGroupwise { bits, group } => {
+                assert!(matches!(bits, 1..=8), "kv bits must be 1..=8");
+                let hd = cfg.head_dim();
+                let geff = group.clamp(1, hd);
+                KvCache::Packed(PackedKv {
+                    bits,
+                    group: geff,
+                    n_heads: cfg.n_heads,
+                    head_dim: hd,
+                    d: cfg.d_model,
+                    words_per_row: PackedInts::words_needed(cfg.d_model, bits),
+                    groups_per_head: hd.div_ceil(geff),
+                    rows: 0,
+                    words: Vec::new(),
+                    scales: Vec::new(),
+                    zeros: Vec::new(),
+                    grows: 0,
+                })
+            }
+        }
+    }
+
+    /// The spec this cache was built with (group reported post-clamp).
+    pub fn spec(&self) -> KvSpec {
+        match self {
+            KvCache::Dense(_) => KvSpec::DenseF32,
+            KvCache::Packed(c) => {
+                KvSpec::PackedGroupwise { bits: c.bits, group: c.group }
+            }
+        }
+    }
+
+    /// Cached rows (= tokens seen so far).
+    pub fn rows(&self) -> usize {
+        match self {
+            KvCache::Dense(c) => c.rows,
+            KvCache::Packed(c) => c.rows,
+        }
+    }
+
+    /// Bytes currently used by cached rows (not capacity).
+    pub fn nbytes(&self) -> usize {
+        match self {
+            KvCache::Dense(c) => c.rows * c.d * 4,
+            KvCache::Packed(c) => {
+                c.rows * (c.words_per_row * 4 + c.n_heads * c.groups_per_head * 8)
+            }
+        }
+    }
+
+    /// How many times the backing storage grew — appends are amortized, so
+    /// this stays O(log rows) (the long-sequence append test rides on it).
+    pub fn grow_events(&self) -> usize {
+        match self {
+            KvCache::Dense(c) => c.grows,
+            KvCache::Packed(c) => c.grows,
+        }
+    }
+
+    /// Append one `[d_model]` row (quantizing it on the fly when packed).
+    pub fn append(&mut self, row: &[f32]) {
+        match self {
+            KvCache::Dense(c) => c.append(row),
+            KvCache::Packed(c) => c.append(row),
+        }
+    }
+
+    /// Attention scores for one head against every cached row:
+    /// `scores[t] = (q[base..base+hd] · row_t[base..base+hd]) · scale`,
+    /// where `q` is the **full** `[d_model]` query row. `scores` is cleared
+    /// and refilled.
+    pub fn head_scores(&self, head: usize, q: &[f32], scale: f32, scores: &mut Vec<f32>) {
+        scores.clear();
+        match self {
+            KvCache::Dense(c) => {
+                let base = head * c.head_dim;
+                let qh = &q[base..base + c.head_dim];
+                for t in 0..c.rows {
+                    let krow = &c.data[t * c.d + base..t * c.d + base + c.head_dim];
+                    scores.push(crate::tensor::matrix::dot(qh, krow) * scale);
+                }
+            }
+            KvCache::Packed(c) => c.head_scores(head, q, scale, scores),
+        }
+    }
+
+    /// Accumulate the softmax-weighted value rows of one head into
+    /// `ctx_head` (`[head_dim]`): `ctx_head[i] += Σ_t probs[t] · row_t[base+i]`.
+    pub fn head_axpy(&self, head: usize, probs: &[f32], ctx_head: &mut [f32]) {
+        match self {
+            KvCache::Dense(c) => {
+                let base = head * c.head_dim;
+                debug_assert!(probs.len() >= c.rows && ctx_head.len() >= c.head_dim);
+                for (t, &w) in probs.iter().enumerate().take(c.rows) {
+                    let vrow = &c.data[t * c.d + base..t * c.d + base + c.head_dim];
+                    for (o, &v) in ctx_head.iter_mut().zip(vrow) {
+                        *o += w * v;
+                    }
+                }
+            }
+            KvCache::Packed(c) => c.head_axpy(head, probs, ctx_head),
+        }
+    }
+
+    /// Dequantize one cached row back to f32 (dense rows copy). Test and
+    /// debugging aid — the decode path never calls this.
+    pub fn dequant_row(&self, t: usize) -> Vec<f32> {
+        match self {
+            KvCache::Dense(c) => c.data[t * c.d..(t + 1) * c.d].to_vec(),
+            KvCache::Packed(c) => c.dequant_row(t),
+        }
+    }
+}
+
+/// Grow `v` so it can hold `need` more elements without reallocating,
+/// doubling capacity (with a floor) when it can't. Returns `true` when a
+/// grow happened — callers count those to verify amortization.
+fn reserve_doubling<T>(v: &mut Vec<T>, need: usize, floor: usize) -> bool {
+    let want = v.len() + need;
+    if want <= v.capacity() {
+        return false;
+    }
+    let target = (v.capacity() * 2).max(want).max(floor);
+    v.reserve_exact(target - v.len());
+    true
+}
+
+impl DenseKv {
+    fn append(&mut self, row: &[f32]) {
+        debug_assert_eq!(row.len(), self.d);
+        if reserve_doubling(&mut self.data, self.d, 16 * self.d) {
+            self.grows += 1;
+        }
+        self.data.extend_from_slice(row);
+        self.rows += 1;
+    }
+}
+
+impl PackedKv {
+    fn groups_per_row(&self) -> usize {
+        self.n_heads * self.groups_per_head
+    }
+
+    /// Quantize + append one row. Per (head, group): asymmetric min/max
+    /// range, `scale = (max − min) / (2^bits − 1)`, f32 zero-point
+    /// `z = −min / scale` (un-rounded, like the weight format's stored
+    /// zeros), so `min` and `max` dequantize exactly. The bit layout is
+    /// produced by [`PackedInts::pack`] itself — one source of truth for the
+    /// word format the `dot_span`/`axpy_span` kernels read.
+    fn append(&mut self, row: &[f32]) {
+        debug_assert_eq!(row.len(), self.d);
+        let wpr = self.words_per_row;
+        let gpr = self.groups_per_row();
+        let mut grew = false;
+        grew |= reserve_doubling(&mut self.words, wpr, 16 * wpr);
+        grew |= reserve_doubling(&mut self.scales, gpr, 16 * gpr);
+        grew |= reserve_doubling(&mut self.zeros, gpr, 16 * gpr);
+        if grew {
+            self.grows += 1;
+        }
+        let maxq = ((1u32 << self.bits) - 1) as f32;
+        let mut qvals = vec![0u8; self.d];
+        for h in 0..self.n_heads {
+            let base = h * self.head_dim;
+            for g in 0..self.groups_per_head {
+                let c0 = base + g * self.group;
+                let c1 = (c0 + self.group).min(base + self.head_dim);
+                let slice = &row[c0..c1];
+                let lo = slice.iter().copied().fold(f32::INFINITY, f32::min);
+                let hi = slice.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+                let range = hi - lo;
+                let scale = if range > 0.0 { range / maxq } else { 1.0 };
+                self.scales.push(scale);
+                self.zeros.push(-lo / scale);
+                for (q, &v) in qvals[c0..c1].iter_mut().zip(slice) {
+                    *q = (((v - lo) / scale).round()).clamp(0.0, maxq) as u8;
+                }
+            }
+        }
+        let packed = PackedInts::pack(&qvals, self.bits);
+        debug_assert_eq!(packed.words.len(), wpr);
+        self.words.extend_from_slice(&packed.words);
+        self.rows += 1;
+    }
+
+    fn head_scores(&self, head: usize, q: &[f32], scale: f32, scores: &mut Vec<f32>) {
+        let base = head * self.head_dim;
+        debug_assert!(q.len() >= base + self.head_dim);
+        let gph = self.groups_per_head;
+        let gpr = self.groups_per_row();
+        // Per-group query sums — the shared zero-point term, computed once
+        // per (head, step) and reused across every cached row.
+        let mut gsum = crate::util::scratch::take_f32(gph);
+        for (g, chunk) in q[base..base + self.head_dim].chunks(self.group).enumerate() {
+            gsum[g] = chunk.iter().sum();
+        }
+        scores.reserve(self.rows);
+        for t in 0..self.rows {
+            let words = &self.words[t * self.words_per_row..(t + 1) * self.words_per_row];
+            let srow = &self.scales[t * gpr + head * gph..t * gpr + (head + 1) * gph];
+            let zrow = &self.zeros[t * gpr + head * gph..t * gpr + (head + 1) * gph];
+            let mut y = 0.0f32;
+            for g in 0..gph {
+                let c0 = base + g * self.group;
+                let c1 = (c0 + self.group).min(base + self.head_dim);
+                let qdot = dot_span(words, self.bits, c0, c1, q);
+                y += srow[g] * (qdot - zrow[g] * gsum[g]);
+            }
+            scores.push(y * scale);
+        }
+    }
+
+    fn head_axpy(&self, head: usize, probs: &[f32], ctx_head: &mut [f32]) {
+        let base = head * self.head_dim;
+        debug_assert!(probs.len() >= self.rows && ctx_head.len() >= self.head_dim);
+        let gph = self.groups_per_head;
+        let gpr = self.groups_per_row();
+        for (t, &w) in probs.iter().enumerate().take(self.rows) {
+            let words = &self.words[t * self.words_per_row..(t + 1) * self.words_per_row];
+            let srow = &self.scales[t * gpr + head * gph..t * gpr + (head + 1) * gph];
+            let zrow = &self.zeros[t * gpr + head * gph..t * gpr + (head + 1) * gph];
+            for g in 0..gph {
+                let c0 = base + g * self.group;
+                let c1 = (c0 + self.group).min(base + self.head_dim);
+                let a = w * srow[g];
+                let b = -(a * zrow[g]);
+                axpy_span(
+                    words,
+                    self.bits,
+                    c0,
+                    c1,
+                    a,
+                    b,
+                    &mut ctx_head[c0 - base..c1 - base],
+                );
+            }
+        }
+    }
+
+    fn dequant_row(&self, t: usize) -> Vec<f32> {
+        let gpr = self.groups_per_row();
+        // Reconstruct through PackedInts so reads share pack's layout code.
+        let packed = PackedInts {
+            bits: self.bits,
+            len: self.d,
+            words: self.words[t * self.words_per_row..(t + 1) * self.words_per_row].to_vec(),
+        };
+        let qvals = packed.unpack();
+        let mut out = vec![0.0f32; self.d];
+        for h in 0..self.n_heads {
+            let base = h * self.head_dim;
+            for g in 0..self.groups_per_head {
+                let gi = t * gpr + h * self.groups_per_head + g;
+                let (s, z) = (self.scales[gi], self.zeros[gi]);
+                let c0 = base + g * self.group;
+                let c1 = (c0 + self.group).min(base + self.head_dim);
+                for (o, &q) in out[c0..c1].iter_mut().zip(&qvals[c0..c1]) {
+                    *o = s * (q as f32 - z);
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::config::Preset;
+    use crate::tensor::kernels::{set_forced, ForcedKernel};
+    use crate::util::rng::Rng;
+
+    fn cfg() -> ModelConfig {
+        Preset::Tiny.config() // d=64, 2 heads, head_dim=32
+    }
+
+    fn rows(n: usize, d: usize, seed: u64) -> Vec<Vec<f32>> {
+        let mut rng = Rng::new(seed);
+        (0..n).map(|_| rng.normal_vec(d, 1.0)).collect()
+    }
+
+    #[test]
+    fn from_flags_parses_and_rejects() {
+        assert_eq!(KvSpec::from_flags(0, 64).unwrap(), KvSpec::DenseF32);
+        assert_eq!(
+            KvSpec::from_flags(8, 64).unwrap(),
+            KvSpec::PackedGroupwise { bits: 8, group: 64 }
+        );
+        assert!(KvSpec::from_flags(9, 64).is_err());
+        assert!(KvSpec::from_flags(4, 0).is_err());
+    }
+
+    #[test]
+    fn group_is_clamped_to_head_dim() {
+        let c = KvCache::new(KvSpec::PackedGroupwise { bits: 8, group: 64 }, &cfg());
+        // head_dim = 32 < requested 64 → per-head single group
+        assert_eq!(c.spec(), KvSpec::PackedGroupwise { bits: 8, group: 32 });
+    }
+
+    #[test]
+    fn quantize_dequant_roundtrip_hits_group_extrema() {
+        let cfg = cfg();
+        let mut c = KvCache::new(KvSpec::PackedGroupwise { bits: 8, group: 16 }, &cfg);
+        let r = rows(5, cfg.d_model, 3);
+        for row in &r {
+            c.append(row);
+        }
+        assert_eq!(c.rows(), 5);
+        for (t, row) in r.iter().enumerate() {
+            let deq = c.dequant_row(t);
+            // every element within scale/2; group min/max exact
+            for (g, chunk) in row.chunks(16).enumerate() {
+                let lo = chunk.iter().copied().fold(f32::INFINITY, f32::min);
+                let hi = chunk.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+                let half_step = (hi - lo) / 255.0 / 2.0 + 1e-6;
+                for (j, &v) in chunk.iter().enumerate() {
+                    let d = deq[g * 16 + j];
+                    assert!(
+                        (d - v).abs() <= half_step * 1.01 + 1e-5,
+                        "t={t} g={g} j={j}: {d} vs {v} (half step {half_step})"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn constant_group_is_exact() {
+        // max == min → scale falls back to 1.0 and the value round-trips.
+        let cfg = cfg();
+        let mut c = KvCache::new(KvSpec::PackedGroupwise { bits: 4, group: 32 }, &cfg);
+        c.append(&vec![0.75f32; cfg.d_model]);
+        let deq = c.dequant_row(0);
+        assert!(deq.iter().all(|&v| (v - 0.75).abs() < 1e-6), "{deq:?}");
+    }
+
+    #[test]
+    fn fused_attend_matches_dequant_reference() {
+        // head_scores / head_axpy computed from the packed words must equal
+        // the explicit dequantize-then-dense-attend reference — the same
+        // equivalence the packed weight path proves against dequantized
+        // GEMMs.
+        let cfg = cfg();
+        let hd = cfg.head_dim();
+        for bits in [4u8, 8] {
+            let mut c =
+                KvCache::new(KvSpec::PackedGroupwise { bits, group: 16 }, &cfg);
+            let r = rows(7, cfg.d_model, 11);
+            for row in &r {
+                c.append(row);
+            }
+            let mut rng = Rng::new(99);
+            let q: Vec<f32> = rng.normal_vec(cfg.d_model, 1.0);
+            let probs: Vec<f32> = (0..7).map(|i| (i as f32 + 1.0) / 28.0).collect();
+            let scale = 1.0 / (hd as f32).sqrt();
+            for h in 0..cfg.n_heads {
+                let base = h * hd;
+                let mut scores = Vec::new();
+                c.head_scores(h, &q, scale, &mut scores);
+                for (t, &s) in scores.iter().enumerate() {
+                    let deq = c.dequant_row(t);
+                    let want =
+                        crate::tensor::matrix::dot(&q[base..base + hd], &deq[base..base + hd])
+                            * scale;
+                    assert!(
+                        (s - want).abs() <= 1e-4 * want.abs().max(1.0),
+                        "bits={bits} h={h} t={t}: {s} vs {want}"
+                    );
+                }
+                let mut ctx = vec![0.0f32; hd];
+                c.head_axpy(h, &probs, &mut ctx);
+                for (i, &got) in ctx.iter().enumerate() {
+                    let want: f32 = (0..7)
+                        .map(|t| probs[t] * c.dequant_row(t)[base + i])
+                        .sum();
+                    assert!(
+                        (got - want).abs() <= 1e-4 * want.abs().max(1.0),
+                        "bits={bits} h={h} i={i}: {got} vs {want}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn attend_bit_identical_scalar_vs_dispatched() {
+        // The dispatch invariant extended to the KV plane: forced-scalar and
+        // detected-best tables must produce identical f32 bits for both
+        // attend primitives (trivial off AVX2; real on it).
+        let cfg = cfg();
+        let _guard = crate::tensor::kernels::force_test_lock();
+        for bits in [2u8, 3, 4, 8] {
+            let mut c = KvCache::new(KvSpec::PackedGroupwise { bits, group: 16 }, &cfg);
+            for row in &rows(9, cfg.d_model, 21) {
+                c.append(row);
+            }
+            let mut rng = Rng::new(7);
+            let q: Vec<f32> = rng.normal_vec(cfg.d_model, 1.0);
+            let probs: Vec<f32> = (0..9).map(|i| 1.0 / (i as f32 + 2.0)).collect();
+            for h in 0..cfg.n_heads {
+                let (mut a, mut b) = (Vec::new(), Vec::new());
+                set_forced(ForcedKernel::Scalar);
+                c.head_scores(h, &q, 0.25, &mut a);
+                let mut ctx_a = vec![0.0f32; cfg.head_dim()];
+                c.head_axpy(h, &probs, &mut ctx_a);
+                set_forced(ForcedKernel::Best);
+                c.head_scores(h, &q, 0.25, &mut b);
+                let mut ctx_b = vec![0.0f32; cfg.head_dim()];
+                c.head_axpy(h, &probs, &mut ctx_b);
+                set_forced(ForcedKernel::Auto);
+                let eq_bits = |x: &[f32], y: &[f32]| {
+                    x.iter().zip(y).all(|(p, q)| p.to_bits() == q.to_bits())
+                };
+                assert!(eq_bits(&a, &b), "bits={bits} h={h}: scores diverged");
+                assert!(eq_bits(&ctx_a, &ctx_b), "bits={bits} h={h}: ctx diverged");
+            }
+        }
+    }
+
+    #[test]
+    fn dense_cache_matches_reference_attend() {
+        let cfg = cfg();
+        let hd = cfg.head_dim();
+        let mut c = KvCache::new(KvSpec::DenseF32, &cfg);
+        let r = rows(6, cfg.d_model, 5);
+        for row in &r {
+            c.append(row);
+        }
+        let mut rng = Rng::new(55);
+        let q: Vec<f32> = rng.normal_vec(cfg.d_model, 1.0);
+        let mut scores = Vec::new();
+        c.head_scores(1, &q, 0.5, &mut scores);
+        for (t, &s) in scores.iter().enumerate() {
+            let want =
+                crate::tensor::matrix::dot(&q[hd..2 * hd], &r[t][hd..2 * hd]) * 0.5;
+            assert_eq!(s.to_bits(), want.to_bits(), "t={t}");
+        }
+    }
+
+    #[test]
+    fn long_append_is_amortized_for_both_variants() {
+        // The seed bug: the dense cache rebuilt its Matrix per token. Both
+        // variants must now grow O(log n) times over a long decode.
+        let cfg = cfg();
+        for spec in [KvSpec::DenseF32, KvSpec::PackedGroupwise { bits: 8, group: 32 }] {
+            let mut c = KvCache::new(spec, &cfg);
+            let r = rows(1, cfg.d_model, 1);
+            for _ in 0..2048 {
+                c.append(&r[0]);
+            }
+            assert_eq!(c.rows(), 2048);
+            assert!(
+                c.grow_events() <= 12,
+                "{}: {} grow events for 2048 appends",
+                spec.label(),
+                c.grow_events()
+            );
+        }
+    }
+
+    #[test]
+    fn bytes_per_token_ratios() {
+        // The serving-shape compression story: ≥ 3.5× at int8 g64 on the
+        // base preset (head_dim 64), and the per-cache accounting agrees
+        // with what append actually stores.
+        let base = Preset::Base.config();
+        let f32_b = KvSpec::DenseF32.bytes_per_token(&base);
+        let int8 = KvSpec::PackedGroupwise { bits: 8, group: 64 }.bytes_per_token(&base);
+        let int4 = KvSpec::PackedGroupwise { bits: 4, group: 64 }.bytes_per_token(&base);
+        assert!(
+            f32_b as f64 / int8 as f64 >= 3.5,
+            "int8 ratio {} < 3.5",
+            f32_b as f64 / int8 as f64
+        );
+        assert!(f32_b as f64 / int4 as f64 >= 6.0);
+        // nbytes of an actual cache == rows × (bytes_per_token / 2)  (one of
+        // the K/V pair)
+        let cfg = cfg();
+        let spec = KvSpec::PackedGroupwise { bits: 8, group: 64 };
+        let mut c = KvCache::new(spec, &cfg);
+        for row in &rows(3, cfg.d_model, 9) {
+            c.append(row);
+        }
+        assert_eq!(c.nbytes(), 3 * spec.bytes_per_token(&cfg) / 2);
+    }
+}

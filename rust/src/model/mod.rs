@@ -17,6 +17,7 @@
 pub mod config;
 pub mod exec;
 pub mod forward;
+pub mod kvcache;
 pub mod linear;
 pub mod store;
 pub mod weights;
@@ -24,5 +25,6 @@ pub mod weights;
 pub use config::{ModelConfig, Preset};
 pub use exec::{ExecLayer, ExecModel};
 pub use forward::{forward_captures, forward_logits, DecodeState, LayerCaptures};
+pub use kvcache::{KvCache, KvSpec};
 pub use linear::{BlockLinears, LinearOp, ModelExec};
 pub use weights::{LayerWeights, LinearKind, ModelWeights};

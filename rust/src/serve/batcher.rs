@@ -10,7 +10,7 @@
 //! dense f32 weights and the packed fused-dequant execution path
 //! (`tsgo serve --packed`).
 
-use crate::model::{DecodeState, ModelExec};
+use crate::model::{DecodeState, KvSpec, ModelExec};
 use anyhow::{anyhow, Result};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
@@ -37,11 +37,18 @@ pub struct GenResponse {
 pub struct BatcherConfig {
     pub max_batch: usize,
     pub max_wait: Duration,
+    /// KV-cache representation for every per-sequence [`DecodeState`]
+    /// (`tsgo serve --kv-bits/--kv-group`). Default: f32.
+    pub kv: KvSpec,
 }
 
 impl Default for BatcherConfig {
     fn default() -> Self {
-        BatcherConfig { max_batch: 8, max_wait: Duration::from_millis(5) }
+        BatcherConfig {
+            max_batch: 8,
+            max_wait: Duration::from_millis(5),
+            kv: KvSpec::DenseF32,
+        }
     }
 }
 
@@ -98,21 +105,22 @@ fn worker_loop<M: ModelExec>(model: Arc<M>, cfg: BatcherConfig, rx: Receiver<Pen
                 Err(_) => break,
             }
         }
-        run_batch(model.as_ref(), batch);
+        run_batch(model.as_ref(), &cfg, batch);
     }
 }
 
-fn run_batch<M: ModelExec>(model: &M, batch: Vec<Pending>) {
+fn run_batch<M: ModelExec>(model: &M, cfg: &BatcherConfig, batch: Vec<Pending>) {
     let bs = batch.len();
-    // Decode all sequences in lock-step; each sequence owns a KV cache and
-    // advances on a worker thread per step (threads scale with batch).
+    // Decode all sequences in lock-step; each sequence owns a KV cache (in
+    // the configured representation) and advances on a worker thread per
+    // step (threads scale with batch).
     type Decoded = (Result<Vec<u8>, String>, Instant, Sender<Result<GenResponse, String>>);
     let results: Vec<Decoded> = {
         let outputs = Mutex::new(Vec::with_capacity(bs));
         crate::util::threadpool::parallel_for(bs, |i| {
             let p = &batch[i];
             let decode = || -> Result<Vec<u8>, String> {
-                let mut st = DecodeState::new(model);
+                let mut st = DecodeState::with_kv(model, cfg.kv);
                 let mut logits = Vec::new();
                 for &t in &p.req.prompt {
                     logits = st.step(t);
@@ -206,7 +214,11 @@ mod tests {
     fn concurrent_requests_get_batched() {
         let b = Arc::new(DynamicBatcher::spawn(
             model(),
-            BatcherConfig { max_batch: 4, max_wait: Duration::from_millis(100) },
+            BatcherConfig {
+                max_batch: 4,
+                max_wait: Duration::from_millis(100),
+                ..Default::default()
+            },
         ));
         let mut handles = Vec::new();
         for i in 0..4u8 {
@@ -246,6 +258,33 @@ mod tests {
         let b = DynamicBatcher::spawn(m.clone(), BatcherConfig::default());
         let r = b.generate(GenRequest { prompt: prompt.to_vec(), max_new: 4 }).unwrap();
         assert_eq!(r.tokens, expect);
+    }
+
+    #[test]
+    fn kv_quantized_batcher_matches_direct_decode() {
+        // The batcher's per-sequence states must honor the configured KV
+        // representation: tokens through the batcher with int8 KV equal a
+        // direct DecodeState::with_kv decode (identical numerics path).
+        let m = model();
+        let spec = KvSpec::PackedGroupwise { bits: 8, group: 64 };
+        let prompt = [4u8, 8, 15, 16];
+        let mut st = DecodeState::with_kv(m.as_ref(), spec);
+        let mut logits = Vec::new();
+        for &t in &prompt {
+            logits = st.step(t);
+        }
+        let mut expect = Vec::new();
+        for _ in 0..5 {
+            let next = super::argmax_token(&logits).unwrap();
+            expect.push(next);
+            logits = st.step(next);
+        }
+        let b = DynamicBatcher::spawn(
+            m.clone(),
+            BatcherConfig { kv: spec, ..Default::default() },
+        );
+        let r = b.generate(GenRequest { prompt: prompt.to_vec(), max_new: 5 }).unwrap();
+        assert_eq!(r.tokens, expect, "batcher diverged from direct int8-KV decode");
     }
 
     #[test]

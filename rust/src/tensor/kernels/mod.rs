@@ -45,6 +45,14 @@ use std::sync::OnceLock;
 /// [`crate::tensor::packed::dot_span`]).
 pub type DotSpanFn = fn(words: &[u32], bits: u8, c0: usize, c1: usize, x: &[f32]) -> f32;
 
+/// Signature of the dequant **axpy** kernels: `out[j − c0] += a·q_j + b` for
+/// `j ∈ [c0, c1)` over one packed row (same contract as
+/// [`crate::tensor::packed::axpy_span`]). The `probs · V` half of the
+/// quantized-KV attend path; elementwise, so bit-identity across tables is
+/// structural rather than reduction-order-sensitive.
+pub type AxpySpanFn =
+    fn(words: &[u32], bits: u8, c0: usize, c1: usize, a: f32, b: f32, out: &mut [f32]);
+
 /// One resolved kernel per bit width. Index = bits (0 unused; `PackedInts`
 /// guarantees 1..=8).
 pub struct KernelTable {
@@ -54,6 +62,9 @@ pub struct KernelTable {
     /// Per-bit-width kernel label ("scalar-seq", "scalar-lanes8",
     /// "avx2-srlv", "avx2-bytes").
     pub labels: [&'static str; 9],
+    /// Dequant axpy kernels (KV-cache attend `probs · V`).
+    pub axpy: [AxpySpanFn; 9],
+    pub axpy_labels: [&'static str; 9],
 }
 
 /// Bit widths with a specialized lane-striped kernel; everything else runs
@@ -72,7 +83,15 @@ pub fn scalar_table() -> &'static KernelTable {
             dot[b as usize] = scalar::dot_span_lanes;
             labels[b as usize] = "scalar-lanes8";
         }
-        KernelTable { name: "scalar", dot, labels }
+        KernelTable {
+            name: "scalar",
+            dot,
+            labels,
+            // axpy is elementwise: the sequential loop IS the lane-exact
+            // reference for every width.
+            axpy: [scalar::axpy_span_seq as AxpySpanFn; 9],
+            axpy_labels: ["scalar-seq"; 9],
+        }
     })
 }
 
@@ -82,11 +101,15 @@ fn avx2_table() -> &'static KernelTable {
     T.get_or_init(|| {
         let mut dot = [scalar::dot_span_seq as DotSpanFn; 9];
         let mut labels = ["scalar-seq"; 9];
+        let mut axpy = [scalar::axpy_span_seq as AxpySpanFn; 9];
+        let mut axpy_labels = ["scalar-seq"; 9];
         for b in STRIPED_BITS {
             dot[b as usize] = x86::dot_span_avx2;
             labels[b as usize] = if b == 8 { "avx2-bytes" } else { "avx2-srlv" };
+            axpy[b as usize] = x86::axpy_span_avx2;
+            axpy_labels[b as usize] = if b == 8 { "avx2-bytes" } else { "avx2-srlv" };
         }
-        KernelTable { name: "avx2", dot, labels }
+        KernelTable { name: "avx2", dot, labels, axpy, axpy_labels }
     })
 }
 
@@ -127,6 +150,18 @@ fn env_force_scalar() -> bool {
         std::env::var("TSGO_FORCE_SCALAR").as_deref(),
         Ok("1") | Ok("true") | Ok("yes")
     )
+}
+
+/// Serializes unit tests that mutate the process-wide forcing state (the
+/// library test binary runs tests on threads; two tests flipping `FORCE`
+/// concurrently would make table-name assertions racy). Integration-test
+/// binaries each get their own process and don't need it.
+#[cfg(test)]
+pub(crate) fn force_test_lock() -> std::sync::MutexGuard<'static, ()> {
+    static L: OnceLock<std::sync::Mutex<()>> = OnceLock::new();
+    L.get_or_init(|| std::sync::Mutex::new(()))
+        .lock()
+        .unwrap_or_else(|e| e.into_inner())
 }
 
 /// Override kernel selection process-wide (tests / benches). `Auto` restores
@@ -170,8 +205,9 @@ pub struct DispatchInfo {
     pub forced_scalar: bool,
     /// `(feature, detected)` pairs (empty off x86_64).
     pub cpu_features: Vec<(&'static str, bool)>,
-    /// `(bits, scalar label, active label)` per bit width 1..=8.
-    pub rows: Vec<(u8, &'static str, &'static str)>,
+    /// `(bits, scalar dot label, active dot label, active axpy label)` per
+    /// bit width 1..=8.
+    pub rows: Vec<(u8, &'static str, &'static str, &'static str)>,
 }
 
 /// Snapshot the dispatch state for reporting.
@@ -197,7 +233,14 @@ pub fn dispatch_info() -> DispatchInfo {
         forced_scalar,
         cpu_features,
         rows: (1u8..=8)
-            .map(|b| (b, scalar.labels[b as usize], active.labels[b as usize]))
+            .map(|b| {
+                (
+                    b,
+                    scalar.labels[b as usize],
+                    active.labels[b as usize],
+                    active.axpy_labels[b as usize],
+                )
+            })
             .collect(),
     }
 }
@@ -274,9 +317,52 @@ mod tests {
         for bits in 1u8..=8 {
             assert!(!s.labels[bits as usize].is_empty());
             assert!(!b.labels[bits as usize].is_empty());
+            assert!(!s.axpy_labels[bits as usize].is_empty());
+            assert!(!b.axpy_labels[bits as usize].is_empty());
         }
         let info = dispatch_info();
         assert_eq!(info.rows.len(), 8);
+    }
+
+    #[test]
+    fn prop_axpy_kernels_bit_identical_across_tables() {
+        // The KV-attend acceptance bar: the dispatched axpy kernel must
+        // produce the exact same f32 bits as the scalar reference for every
+        // specialized width, span offset and ragged tail (trivial on
+        // non-AVX2 hosts; real on AVX2 ones).
+        check("axpy kernels bit-identical to scalar reference", 120, |g| {
+            let bits = STRIPED_BITS[g.usize_in(0, 3)];
+            let n = g.usize_in(1, 400);
+            let max = 1usize << bits;
+            let mut rng = g.rng.fork(13);
+            let vals: Vec<u8> =
+                (0..n).map(|_| (rng.next_u64() as usize % max) as u8).collect();
+            let p = PackedInts::pack(&vals, bits);
+            let c0 = g.usize_in(0, n - 1);
+            let c1 = g.usize_in(c0, n);
+            let a = rng.normal() as f32;
+            let bconst = rng.normal() as f32;
+            let init: Vec<f32> = rng.normal_vec(n, 1.0);
+            let mut s_out = init.clone();
+            let mut b_out = init.clone();
+            (scalar_table().axpy[bits as usize])(&p.words, bits, c0, c1, a, bconst, &mut s_out);
+            (best_table().axpy[bits as usize])(&p.words, bits, c0, c1, a, bconst, &mut b_out);
+            for (k, (sa, sb)) in s_out.iter().zip(&b_out).enumerate() {
+                if sa.to_bits() != sb.to_bits() {
+                    return Err(format!(
+                        "bits={bits} span=({c0},{c1}) k={k}: scalar {sa} vs dispatched {sb}"
+                    ));
+                }
+            }
+            // and both match the exact reference
+            for (k, (got, before)) in s_out.iter().zip(&init).take(c1 - c0).enumerate() {
+                let want = before + (a * vals[c0 + k] as f32 + bconst);
+                if got.to_bits() != want.to_bits() {
+                    return Err(format!("bits={bits} k={k}: {got} vs reference {want}"));
+                }
+            }
+            Ok(())
+        });
     }
 
     #[test]
@@ -413,6 +499,7 @@ mod tests {
 
     #[test]
     fn forcing_flips_the_active_table() {
+        let _guard = force_test_lock();
         set_forced(ForcedKernel::Scalar);
         assert_eq!(active_table().name, "scalar");
         set_forced(ForcedKernel::Best);

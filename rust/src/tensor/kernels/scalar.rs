@@ -93,6 +93,51 @@ pub fn dot_span_f64(words: &[u32], bits: u8, c0: usize, c1: usize, x: &[f32]) ->
     acc
 }
 
+/// Sequential dequant **axpy** over a packed span: for every column
+/// `j ∈ [c0, c1)`, `out[j − c0] += a · q_j + b`.
+///
+/// This is the `probs · V` half of the quantized-KV attend path: with
+/// `a = w_t · s_g` and `b = −a · z_g`, accumulating one cached row into the
+/// context is `ctx += a·q + b` per element. Unlike the dot kernels there is
+/// **no cross-element reduction** — every output element owns an independent
+/// `mul, add, add` chain — so any 8-wide vectorization of the same per-lane
+/// ops is bit-identical to this loop by construction (the property
+/// [`super::x86::axpy_span_avx2`] rides on).
+pub fn axpy_span_seq(
+    words: &[u32],
+    bits: u8,
+    c0: usize,
+    c1: usize,
+    a: f32,
+    b: f32,
+    out: &mut [f32],
+) {
+    if c0 >= c1 {
+        return;
+    }
+    debug_assert!(out.len() >= c1 - c0);
+    let bw = bits as usize;
+    let mask = (1u32 << bits) - 1;
+    // Streaming 64-bit bit-buffer unpack, same scheme as `dot_span_seq`.
+    let bit0 = c0 * bw;
+    let mut wi = bit0 / 32;
+    let off = bit0 % 32;
+    let mut buf = (words[wi] >> off) as u64;
+    let mut have = 32 - off;
+    wi += 1;
+    for o in out[..c1 - c0].iter_mut() {
+        if have < bw {
+            buf |= (words[wi] as u64) << have;
+            wi += 1;
+            have += 32;
+        }
+        let q = ((buf as u32) & mask) as f32;
+        *o += a * q + b;
+        buf >>= bw;
+        have -= bw;
+    }
+}
+
 /// Fixed pairwise reduction over 8 partial sums. The AVX2 horizontal sum
 /// (`x86::hsum8`) performs these exact additions in this exact order —
 /// change one and bit-identity across tables breaks.
@@ -168,6 +213,36 @@ mod tests {
                     (got - want).abs() <= 1e-9 * want.abs().max(1.0),
                     "bits={bits} span=({c0},{c1}): {got} vs {want}"
                 );
+            }
+        }
+    }
+
+    #[test]
+    fn axpy_seq_matches_reference_all_widths() {
+        let mut rng = Rng::new(17);
+        for bits in [1u8, 2, 3, 4, 5, 8] {
+            let n = 97;
+            let max = 1usize << bits;
+            let vals: Vec<u8> =
+                (0..n).map(|_| (rng.next_u64() as usize % max) as u8).collect();
+            let p = PackedInts::pack(&vals, bits);
+            let (a, b) = (0.37f32, -0.81f32);
+            for (c0, c1) in [(0, n), (7, 93), (33, 34), (5, 5)] {
+                let mut out: Vec<f32> = rng.normal_vec(n.max(c1 - c0), 1.0);
+                let before = out.clone();
+                axpy_span_seq(&p.words, bits, c0, c1, a, b, &mut out);
+                for (k, (got, old)) in out.iter().zip(&before).enumerate() {
+                    let want = if k < c1 - c0 {
+                        old + (a * vals[c0 + k] as f32 + b)
+                    } else {
+                        *old
+                    };
+                    assert_eq!(
+                        got.to_bits(),
+                        want.to_bits(),
+                        "bits={bits} span=({c0},{c1}) k={k}"
+                    );
+                }
             }
         }
     }

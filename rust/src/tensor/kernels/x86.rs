@@ -16,7 +16,7 @@
 
 #![cfg(target_arch = "x86_64")]
 
-use super::scalar::dot_span_seq;
+use super::scalar::{axpy_span_seq, dot_span_seq};
 use super::{block_bounds, chunk8};
 use std::arch::x86_64::*;
 
@@ -89,6 +89,82 @@ unsafe fn byte_blocks(words: &[u32], j0: usize, j1: usize, x: &[f32]) -> f32 {
         j += 8;
     }
     hsum8(acc)
+}
+
+/// AVX2 dequant axpy for bits ∈ {2, 3, 4, 8}: `out[j − c0] += a · q_j + b`
+/// over the span. Bit-identical to [`super::scalar::axpy_span_seq`] — every
+/// element is an independent `mul, add, add` chain (no reduction), and both
+/// implementations perform those ops in the same order per element.
+///
+/// Crate-private like [`dot_span_avx2`]: only reachable through a kernel
+/// table installed after [`avx2_available`] returned true.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn axpy_span_avx2(
+    words: &[u32],
+    bits: u8,
+    c0: usize,
+    c1: usize,
+    a: f32,
+    b: f32,
+    out: &mut [f32],
+) {
+    debug_assert!(avx2_available(), "axpy_span_avx2 reached without AVX2");
+    if c0 >= c1 {
+        return;
+    }
+    // Real assert: the main loop stores 8 lanes at a time through a raw
+    // pointer, and the table function pointers are reachable from safe code
+    // (`KernelTable.axpy` is pub) — a short `out` must panic, not corrupt.
+    assert!(out.len() >= c1 - c0, "axpy kernel: out too short ({} < {})", out.len(), c1 - c0);
+    // SAFETY: installed into a table only after `avx2_available()`.
+    unsafe { axpy_span_avx2_impl(words, bits, c0, c1, a, b, out) }
+}
+
+#[target_feature(enable = "avx2")]
+unsafe fn axpy_span_avx2_impl(
+    words: &[u32],
+    bits: u8,
+    c0: usize,
+    c1: usize,
+    a: f32,
+    b: f32,
+    out: &mut [f32],
+) {
+    let (head_end, main_end) = block_bounds(bits, c0, c1);
+    axpy_span_seq(words, bits, c0, head_end, a, b, out);
+    let bw = bits as usize;
+    let av = _mm256_set1_ps(a);
+    let bv = _mm256_set1_ps(b);
+    let mut j = head_end;
+    if bits == 8 {
+        let bytes = words.as_ptr() as *const u8;
+        while j < main_end {
+            let q8 = _mm_loadl_epi64(bytes.add(j) as *const __m128i);
+            let vals = _mm256_cvtepi32_ps(_mm256_cvtepu8_epi32(q8));
+            let o = out.as_mut_ptr().add(j - c0);
+            let t = _mm256_add_ps(_mm256_mul_ps(av, vals), bv);
+            _mm256_storeu_ps(o, _mm256_add_ps(_mm256_loadu_ps(o), t));
+            j += 8;
+        }
+    } else {
+        let bi = bw as i32;
+        let shifts =
+            _mm256_setr_epi32(0, bi, 2 * bi, 3 * bi, 4 * bi, 5 * bi, 6 * bi, 7 * bi);
+        let mask = _mm256_set1_epi32(((1u32 << bw) - 1) as i32);
+        while j < main_end {
+            let chunk = chunk8(words, bw, j) as u32;
+            let lanes = _mm256_and_si256(
+                _mm256_srlv_epi32(_mm256_set1_epi32(chunk as i32), shifts),
+                mask,
+            );
+            let vals = _mm256_cvtepi32_ps(lanes);
+            let o = out.as_mut_ptr().add(j - c0);
+            let t = _mm256_add_ps(_mm256_mul_ps(av, vals), bv);
+            _mm256_storeu_ps(o, _mm256_add_ps(_mm256_loadu_ps(o), t));
+            j += 8;
+        }
+    }
+    axpy_span_seq(words, bits, main_end, c1, a, b, &mut out[main_end - c0..]);
 }
 
 /// Horizontal sum matching `scalar::hsum8_tree` addition for addition:

@@ -131,6 +131,28 @@ pub fn dot_span(words: &[u32], bits: u8, c0: usize, c1: usize, x: &[f32]) -> f32
     (crate::tensor::kernels::active_table().dot[bits as usize])(words, bits, c0, c1, x)
 }
 
+/// Dequant **axpy** over columns `c0..c1` of a packed row:
+/// `out[j − c0] += a · q_j + b` — the `probs · V` primitive of the
+/// quantized-KV attend path. With `a = w · s_g` and `b = −a · z_g` this
+/// accumulates one softmax-weighted dequantized cache row into the context
+/// without materializing it.
+///
+/// Routed through the runtime-selected kernel table like [`dot_span`];
+/// elementwise (no reduction), so the dispatched kernel is bit-identical to
+/// the scalar one by construction.
+#[inline]
+pub fn axpy_span(words: &[u32], bits: u8, c0: usize, c1: usize, a: f32, b: f32, out: &mut [f32]) {
+    debug_assert!(matches!(bits, 1..=8));
+    if c0 >= c1 {
+        return;
+    }
+    // Real assert, not debug: the AVX2 kernel stores through raw pointers,
+    // so a short `out` from a safe caller must panic here in release builds
+    // too, never write past the slice.
+    assert!(out.len() >= c1 - c0, "axpy_span: out too short ({} < {})", out.len(), c1 - c0);
+    (crate::tensor::kernels::active_table().axpy[bits as usize])(words, bits, c0, c1, a, b, out)
+}
+
 /// Fused group-wise dequant GEMV for one packed row:
 /// `y = Σ_g s[g] · ( Σ_{j∈g} q_j x[j] − z[g] · gsum[g] )`.
 ///
@@ -291,6 +313,41 @@ mod tests {
                 &format!("bits={bits} group={group} cols={cols}: {got} vs {want}"),
             )
         });
+    }
+
+    #[test]
+    fn axpy_span_accumulates_dequant_rows() {
+        // Accumulating rows with (a = w·s, b = −a·z) must equal the explicit
+        // softmax-weighted dequant sum — the KV-attend decomposition.
+        let mut rng = Rng::new(31);
+        for bits in [2u8, 3, 4, 8] {
+            let n = 48;
+            let max = 1usize << bits;
+            let rows: Vec<Vec<u8>> = (0..3)
+                .map(|_| (0..n).map(|_| (rng.next_u64() as usize % max) as u8).collect())
+                .collect();
+            let packed: Vec<PackedInts> =
+                rows.iter().map(|r| PackedInts::pack(r, bits)).collect();
+            let weights = [0.2f32, 0.5, 0.3];
+            let (s, z) = (0.37f32, 2.0f32);
+            let mut out = vec![0.0f32; n];
+            for (p, &w) in packed.iter().zip(&weights) {
+                let a = w * s;
+                axpy_span(&p.words, bits, 0, n, a, -(a * z), &mut out);
+            }
+            for j in 0..n {
+                let want: f32 = rows
+                    .iter()
+                    .zip(&weights)
+                    .map(|(r, &w)| (w * s) * (r[j] as f32 - z))
+                    .sum();
+                assert!(
+                    (out[j] - want).abs() <= 1e-5 * want.abs().max(1.0),
+                    "bits={bits} j={j}: {} vs {want}",
+                    out[j]
+                );
+            }
+        }
     }
 
     #[test]

@@ -1,0 +1,192 @@
+//! Quantized-KV-cache integration: decode with group-wise int8/int4 K/V
+//! against the f32 cache on a mixed 2/3/4/8-bit packed checkpoint —
+//! token identity, documented ppl tolerances, forced-scalar vs dispatched
+//! bit-identity, serve-path plumbing, and amortized cache growth.
+
+use std::sync::{Arc, Mutex, MutexGuard, OnceLock};
+use tsgo::calib::{calibration_batches, Corpus, CorpusKind};
+use tsgo::model::store::{load_quantized_packed, save_quantized};
+use tsgo::model::{DecodeState, ExecModel, KvSpec, ModelExec, ModelWeights, Preset};
+use tsgo::pipeline::{quantize_model, PipelineConfig};
+use tsgo::quant::QuantPlan;
+use tsgo::serve::{
+    request_generation, server::serve_in_background, BatcherConfig, ServerConfig,
+};
+use tsgo::tensor::kernels::{set_forced, ForcedKernel};
+use tsgo::util::rng::Rng;
+
+fn tmp(name: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join("tsgo_kv_cache");
+    std::fs::create_dir_all(&dir).unwrap();
+    dir.join(name)
+}
+
+/// Serializes the tests in this binary against the one that flips the
+/// process-wide forced-kernel state: without it, a set_forced(Scalar/Best)
+/// mid-decode of a concurrently running test would make failures
+/// nondeterministic exactly when a scalar/SIMD divergence exists (the
+/// condition these tests exist to catch). Poison-tolerant so one panicking
+/// test doesn't cascade.
+fn force_lock() -> MutexGuard<'static, ()> {
+    static L: OnceLock<Mutex<()>> = OnceLock::new();
+    L.get_or_init(|| Mutex::new(()))
+        .lock()
+        .unwrap_or_else(|e| e.into_inner())
+}
+
+/// The kernel-matrix checkpoint: every specialized dequant width
+/// (2/3/4/8-bit linears) through the real pipeline, loaded packed.
+fn mixed_checkpoint(name: &str) -> ExecModel {
+    let cfg = Preset::Tiny.config();
+    let mut rng = Rng::new(4321);
+    let w = ModelWeights::init(cfg, &mut rng);
+    let corpus = Corpus::generate(CorpusKind::SynthWiki, 30_000, 1);
+    let calib = calibration_batches(&corpus.bytes, 4, 32, 2, 3);
+    let plan = QuantPlan::parse_with_defaults(
+        "rtn:bits=2,group=32;wv=bits3;wo=bits4;w2=bits8",
+        4,
+        32,
+    )
+    .unwrap();
+    let (qm, _) = quantize_model(&w, &calib, &PipelineConfig::from_plan(plan)).unwrap();
+    let p = tmp(name);
+    save_quantized(&p, &qm).unwrap();
+    load_quantized_packed(&p).unwrap()
+}
+
+fn greedy<M: ModelExec>(m: &M, kv: KvSpec, prompt: &[u8], max_new: usize) -> Vec<u8> {
+    let mut st = DecodeState::with_kv(m, kv);
+    let mut logits = Vec::new();
+    for &t in prompt {
+        logits = st.step(t);
+    }
+    let mut out = Vec::new();
+    for _ in 0..max_new {
+        let next = tsgo::serve::argmax_token(&logits).unwrap();
+        out.push(next);
+        logits = st.step(next);
+    }
+    out
+}
+
+#[test]
+fn int8_kv_decode_token_identical_to_f32_kv_for_64_steps() {
+    let _guard = force_lock();
+    // The acceptance bar: greedy decode with the int8 group-wise KV cache
+    // must emit the same tokens as the f32 cache for ≥64 steps on the
+    // mixed-width checkpoint. A random-init checkpoint has near-uniform
+    // logits (argmax margins of ~1e-2, comparable to any genuine numeric
+    // perturbation), so tie the LM head to the embedding first: logits then
+    // align with the hidden state's dominant embedding component and greedy
+    // margins are decisive rather than coin flips — the comparison measures
+    // the KV path, not tie-breaking luck.
+    let mut em = mixed_checkpoint("kv_ident.tsr");
+    em.head = em.embed.clone();
+    let prompt = [17u8, 94, 3, 201];
+    let want = greedy(&em, KvSpec::DenseF32, &prompt, 64);
+    let got = greedy(&em, KvSpec::PackedGroupwise { bits: 8, group: 64 }, &prompt, 64);
+    assert_eq!(got, want, "int8-KV greedy decode diverged from f32-KV");
+}
+
+#[test]
+fn kv_ppl_within_documented_tolerances() {
+    let _guard = force_lock();
+    // ROADMAP "Quantized KV cache": int8-KV decode ppl within 2% of f32-KV,
+    // int4-KV within 5%, measured end to end on the packed checkpoint.
+    let em = mixed_checkpoint("kv_ppl.tsr");
+    let corpus = Corpus::generate(CorpusKind::SynthC4, 12_000, 8);
+    let base = tsgo::eval::decode_perplexity(&em, &corpus.bytes, 32, 2, KvSpec::DenseF32);
+    for (bits, tol) in [(8u8, 0.02), (4, 0.05)] {
+        let q = tsgo::eval::decode_perplexity(
+            &em,
+            &corpus.bytes,
+            32,
+            2,
+            KvSpec::PackedGroupwise { bits, group: 64 },
+        );
+        let delta = (q / base - 1.0).abs();
+        assert!(
+            delta < tol,
+            "int{bits}-KV ppl {q} vs f32-KV {base} (delta {delta:.4} > {tol})"
+        );
+    }
+}
+
+#[test]
+fn kv_attend_forced_scalar_vs_dispatched_bit_identical() {
+    let _guard = force_lock();
+    // The dispatch invariant, end to end through the decode loop: packed
+    // weights AND packed KV under the forced-scalar table must produce the
+    // exact same logit bits as under the detected-best table, step by step.
+    let em = mixed_checkpoint("kv_dispatch.tsr");
+    let tokens: Vec<u8> = (0..32u8).map(|i| i.wrapping_mul(37)).collect();
+    for kv in [
+        KvSpec::PackedGroupwise { bits: 8, group: 64 },
+        KvSpec::PackedGroupwise { bits: 4, group: 16 },
+        KvSpec::PackedGroupwise { bits: 2, group: 8 },
+    ] {
+        set_forced(ForcedKernel::Scalar);
+        let mut st_s = DecodeState::with_kv(&em, kv);
+        let scalar_logits: Vec<Vec<f32>> = tokens.iter().map(|&t| st_s.step(t)).collect();
+        set_forced(ForcedKernel::Best);
+        let mut st_b = DecodeState::with_kv(&em, kv);
+        let best_logits: Vec<Vec<f32>> = tokens.iter().map(|&t| st_b.step(t)).collect();
+        set_forced(ForcedKernel::Auto);
+        for (t, (a, b)) in scalar_logits.iter().zip(&best_logits).enumerate() {
+            for (i, (x, y)) in a.iter().zip(b).enumerate() {
+                assert_eq!(
+                    x.to_bits(),
+                    y.to_bits(),
+                    "{} step {t} logit {i}: scalar {x} vs dispatched {y}",
+                    kv.label()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn long_decode_grows_cache_amortized() {
+    let _guard = force_lock();
+    // The seed DecodeState rebuilt both caches every token (O(T²) copies);
+    // both representations must now grow O(log T) times per cache.
+    let em = mixed_checkpoint("kv_growth.tsr");
+    let n_caches = 2 * em.config().n_layers; // K + V per layer
+    for kv in [KvSpec::DenseF32, KvSpec::PackedGroupwise { bits: 8, group: 64 }] {
+        let mut st = DecodeState::with_kv(&em, kv);
+        let mut logits = st.step(1);
+        for _ in 0..160 {
+            let next = tsgo::serve::argmax_token(&logits).unwrap();
+            logits = st.step(next);
+        }
+        // 161 appends per cache; doubling from a 16-row floor needs ≤ 5
+        // grows (16→32→64→128→256), plus the initial allocation.
+        assert!(
+            st.kv_grow_events() <= 6 * n_caches,
+            "{}: {} grow events across {n_caches} caches for 161 tokens",
+            kv.label(),
+            st.kv_grow_events()
+        );
+        assert!(st.kv_bytes() > 0);
+    }
+}
+
+#[test]
+fn serve_packed_with_quantized_kv_end_to_end() {
+    let _guard = force_lock();
+    // `tsgo serve --packed --kv-bits 8` in miniature: the full TCP + batcher
+    // stack over the packed checkpoint with an int8 KV cache, and the served
+    // tokens equal a direct decode with the same spec.
+    let em = mixed_checkpoint("kv_serve.tsr");
+    let kv = KvSpec::PackedGroupwise { bits: 8, group: 64 };
+    let want = greedy(&em, kv, &[10, 20, 30, 40], 8);
+    let cfg = ServerConfig {
+        addr: "127.0.0.1:0".into(),
+        batcher: BatcherConfig { kv, ..Default::default() },
+        max_connections: Some(1),
+    };
+    let (addr, handle) = serve_in_background(Arc::new(em), cfg).unwrap();
+    let resp = request_generation(&addr.to_string(), &[10, 20, 30, 40], 8).unwrap();
+    assert_eq!(resp.tokens, want, "served int8-KV tokens diverged from direct decode");
+    handle.join().unwrap();
+}
