@@ -9,7 +9,9 @@
 //!   vs dispatched — the per-kernel speedup table;
 //! * prefill GEMM scaling with batch size (the two-level blocking means
 //!   throughput keeps climbing past the activation row count);
-//! * end-to-end KV-cached decode tokens/s, dense [`ExecModel`] vs packed.
+//! * end-to-end KV-cached decode tokens/s, dense [`ExecModel`] vs packed,
+//!   plus batch-1 pipeline decode at 1/2/4 shards (the per-step handoff
+//!   overhead floor; batched shard scaling lives in the serving bench).
 //!
 //! Besides the human-readable tables, the run emits a machine-readable
 //! baseline to `BENCH_packed_gemv.json` (override with `TSGO_BENCH_JSON`)
@@ -24,6 +26,7 @@ use tsgo::model::{DecodeState, ExecModel, KvSpec, ModelWeights, Preset};
 use tsgo::quant::rtn::rtn_quantize;
 use tsgo::quant::scale::{compute_group_scales, QuantSpec, ScaleMetric};
 use tsgo::quant::QuantizedLinear;
+use tsgo::shard::ShardedModel;
 use tsgo::tensor::kernels::{self, ForcedKernel};
 use tsgo::tensor::Matrix;
 use tsgo::util::bench::{bench_units, print_measurements, Measurement, Table};
@@ -34,6 +37,31 @@ fn quantize(w: &Matrix, bits: u8, group: usize) -> QuantizedLinear {
     let spec = QuantSpec::new(bits, group);
     let scales = compute_group_scales(w, &spec, ScaleMetric::L2, None);
     rtn_quantize(w, &scales, &spec)
+}
+
+/// RTN-quantize every linear of a fresh `cfg`-shaped model to INT2 g64 —
+/// the decode sections' shared model recipe. Callers build whichever exec
+/// forms (packed / dequantized-dense) they actually bench.
+fn int2_quantized_model(
+    cfg: tsgo::model::ModelConfig,
+    rng: &mut Rng,
+) -> tsgo::model::store::QuantizedModel {
+    let fp = ModelWeights::init(cfg, rng);
+    let spec = QuantSpec::new(2, 64);
+    let mut weights = fp.clone();
+    let mut linears = BTreeMap::new();
+    for (li, kind, m) in fp.linears() {
+        let scales = compute_group_scales(m, &spec, ScaleMetric::L2, None);
+        let q = rtn_quantize(m, &scales, &spec);
+        *weights.layers[li].linear_mut(kind) = q.dequantize();
+        linears.insert((li, kind.label()), q);
+    }
+    tsgo::model::store::QuantizedModel {
+        config: cfg,
+        weights,
+        linears,
+        quantizers: BTreeMap::new(),
+    }
 }
 
 fn main() {
@@ -180,22 +208,7 @@ fn main() {
 
     // -- end-to-end decode: dense ExecModel vs packed ExecModel -------------
     let cfg = Preset::Tiny.config();
-    let fp = ModelWeights::init(cfg, &mut rng);
-    let spec = QuantSpec::new(2, 64);
-    let mut weights = fp.clone();
-    let mut linears = BTreeMap::new();
-    for (li, kind, m) in fp.linears() {
-        let scales = compute_group_scales(m, &spec, ScaleMetric::L2, None);
-        let q = rtn_quantize(m, &scales, &spec);
-        *weights.layers[li].linear_mut(kind) = q.dequantize();
-        linears.insert((li, kind.label()), q);
-    }
-    let qm = tsgo::model::store::QuantizedModel {
-        config: cfg,
-        weights,
-        linears,
-        quantizers: BTreeMap::new(),
-    };
+    let qm = int2_quantized_model(cfg, &mut rng);
     let packed = ExecModel::from_quantized(&qm);
     let dense = ExecModel::from_dense(qm.weights.clone());
     let decode_tokens = 24usize;
@@ -248,6 +261,36 @@ fn main() {
             std::hint::black_box(run_decode(&packed, kv4));
         },
     );
+    // -- sharded pipeline decode (`--shards N`) -----------------------------
+    // On the Small preset (4 layers) so 2- and 4-shard plans are distinct.
+    // Batch-1 decode cannot overlap microbatches, so these rows price the
+    // pipeline's per-step handoff overhead — the floor the batched serving
+    // bench (`cargo bench --bench serving`) climbs from.
+    let small_qm = int2_quantized_model(Preset::Small.config(), &mut rng);
+    let small_packed = std::sync::Arc::new(ExecModel::from_quantized(&small_qm));
+    let mut shard_rows: Vec<(usize, Measurement)> = Vec::new();
+    for shards in [1usize, 2, 4] {
+        let sm = ShardedModel::new(small_packed.clone(), shards);
+        let mut dec = sm.decoder(KvSpec::DenseF32);
+        let m = bench_units(
+            &format!("decode {decode_tokens} tok · packed INT2 · {shards} shards (small)"),
+            1,
+            iters.min(10),
+            Some(decode_tokens as f64),
+            &mut || {
+                let slot = dec.admit().unwrap();
+                let mut logits = dec.step(&[(slot, 0, 65)]).pop().unwrap().unwrap();
+                for pos in 1..decode_tokens {
+                    let next = tsgo::serve::argmax_token(&logits).unwrap();
+                    logits = dec.step(&[(slot, pos, next)]).pop().unwrap().unwrap();
+                }
+                dec.retire(slot);
+                std::hint::black_box(&logits);
+            },
+        );
+        shard_rows.push((shards, m));
+    }
+
     // capture provenance BEFORE restoring Auto: the scaling + decode
     // sections above ran under the pinned Best table.
     let dispatch_under_test = packed.kernel_dispatch();
@@ -256,6 +299,9 @@ fn main() {
     ms.push(m_decode_packed.clone());
     ms.push(m_decode_kv8.clone());
     ms.push(m_decode_kv4.clone());
+    for (_, m) in &shard_rows {
+        ms.push(m.clone());
+    }
     bytes.row(vec![
         "tiny model linears, dense".into(),
         format!("{}", dense.linear_weight_bytes()),
@@ -318,24 +364,38 @@ fn main() {
         ("gemm_scaling", Json::arr(scaling_json)),
         (
             "decode",
-            Json::obj(vec![
-                (
-                    "dense_tokens_per_s",
-                    Json::num(m_decode_dense.throughput().unwrap_or(0.0)),
-                ),
-                (
-                    "packed_int2_tokens_per_s",
-                    Json::num(m_decode_packed.throughput().unwrap_or(0.0)),
-                ),
-                (
-                    "packed_int2_kv8_tokens_per_s",
-                    Json::num(m_decode_kv8.throughput().unwrap_or(0.0)),
-                ),
-                (
-                    "packed_int2_kv4_tokens_per_s",
-                    Json::num(m_decode_kv4.throughput().unwrap_or(0.0)),
-                ),
-            ]),
+            Json::obj({
+                let mut rows = vec![
+                    (
+                        "dense_tokens_per_s",
+                        Json::num(m_decode_dense.throughput().unwrap_or(0.0)),
+                    ),
+                    (
+                        "packed_int2_tokens_per_s",
+                        Json::num(m_decode_packed.throughput().unwrap_or(0.0)),
+                    ),
+                    (
+                        "packed_int2_kv8_tokens_per_s",
+                        Json::num(m_decode_kv8.throughput().unwrap_or(0.0)),
+                    ),
+                    (
+                        "packed_int2_kv4_tokens_per_s",
+                        Json::num(m_decode_kv4.throughput().unwrap_or(0.0)),
+                    ),
+                ];
+                // sharded pipeline decode rows (small preset, batch 1);
+                // covered by bench_check like every other decode row
+                for (shards, m) in &shard_rows {
+                    let key: &'static str = match shards {
+                        1 => "packed_int2_shards1_tokens_per_s",
+                        2 => "packed_int2_shards2_tokens_per_s",
+                        4 => "packed_int2_shards4_tokens_per_s",
+                        _ => unreachable!("unbenched shard count"),
+                    };
+                    rows.push((key, Json::num(m.throughput().unwrap_or(0.0))));
+                }
+                rows
+            }),
         ),
         (
             "kv",

@@ -21,9 +21,24 @@ fn measure<M: ModelExec + Send + Sync + 'static>(
     max_new: usize,
     kv: KvSpec,
 ) -> (f64, f64, f64, usize) {
+    measure_sharded(weights, clients, max_new, kv, 1)
+}
+
+fn measure_sharded<M: ModelExec + Send + Sync + 'static>(
+    weights: Arc<M>,
+    clients: usize,
+    max_new: usize,
+    kv: KvSpec,
+    shards: usize,
+) -> (f64, f64, f64, usize) {
     let cfg = ServerConfig {
         addr: "127.0.0.1:0".into(),
-        batcher: BatcherConfig { max_batch: clients.max(1), kv, ..Default::default() },
+        batcher: BatcherConfig {
+            max_batch: clients.max(1),
+            kv,
+            shards,
+            ..Default::default()
+        },
         max_connections: Some(clients),
     };
     let (addr, handle) = serve_in_background(weights, cfg).unwrap();
@@ -112,6 +127,30 @@ fn main() {
         }
     }
     table.print("serving throughput / latency");
+
+    // -- pipeline-parallel shard scaling ------------------------------------
+    // The same packed model served through `--shards N`: layers split over N
+    // shard threads with channel activation handoff, driven by the
+    // step-level scheduler. Shard counts above the model's layer count
+    // clamp (the plan gives every shard ≥1 layer), so on shallow bench
+    // models the 4-shard row measures the clamped plan.
+    let mut shard_table =
+        Table::new(&["weights", "shards", "clients", "tok/s", "p50 ms", "p95 ms"]);
+    for shards in [1usize, 2, 4] {
+        for clients in [1usize, 8] {
+            let (tps, p50, p95, _) =
+                measure_sharded(packed.clone(), clients, max_new, KvSpec::DenseF32, shards);
+            shard_table.row(vec![
+                "INT2-packed".into(),
+                shards.to_string(),
+                clients.to_string(),
+                format!("{tps:.1}"),
+                format!("{p50:.1}"),
+                format!("{p95:.1}"),
+            ]);
+        }
+    }
+    shard_table.print("pipeline-parallel serving (`--shards N`, step-level scheduler)");
 
     // -- KV-cache bytes per decoded token (all layers, K+V) -----------------
     // The decode-bandwidth story once weights are packed: the f32 KV cache

@@ -7,7 +7,8 @@
 //!   streaming, Hessian/deviation statistics, the GPTQ inner loop, the
 //!   paper's two-stage group-scale optimization ([`quant::stage1`],
 //!   [`quant::stage2`]), the layer-by-layer pipeline ([`pipeline`]),
-//!   evaluation ([`eval`]) and a batched generation server ([`serve`]).
+//!   evaluation ([`eval`]) and a batched generation server ([`serve`])
+//!   with an optional layer-sharded pipeline-parallel topology ([`shard`]).
 //! * **L2 (python/compile)** — the Llamette transformer forward/backward in
 //!   JAX, AOT-lowered once to HLO text artifacts.
 //! * **L1 (python/compile/kernels)** — Pallas kernels for the compute
@@ -26,6 +27,7 @@ pub mod pipeline;
 pub mod quant;
 pub mod runtime;
 pub mod serve;
+pub mod shard;
 pub mod tensor;
 pub mod util;
 

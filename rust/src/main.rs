@@ -19,6 +19,7 @@ use tsgo::model::{store, KvSpec, ModelExec, ModelWeights, Preset};
 use tsgo::pipeline::{quantize_model, PipelineConfig};
 use tsgo::quant::QuantPlan;
 use tsgo::runtime::Engine;
+use tsgo::shard::ShardedModel;
 use tsgo::util::cli::{usage, Args, OptSpec};
 
 fn main() {
@@ -69,12 +70,17 @@ fn print_help() {
          \x20            'ours:bits=2,group=64;wv,wo=bits4;l0=awq'\n\
          \x20 eval       PPL + 0-shot (--model m.tsr [--quantized | --packed]);\n\
          \x20            --kv-bits 8 --kv-group 64 additionally reports the\n\
-         \x20            decode-path ppl delta of a group-wise quantized KV cache\n\
+         \x20            decode-path ppl delta of a group-wise quantized KV cache;\n\
+         \x20            --shards N evaluates through the layer-sharded model\n\
+         \x20            (prints the shard plan; numerics identical to unsharded)\n\
          \x20 serve      generation server (--model m.tsr --addr 127.0.0.1:7433\n\
          \x20            [--quantized | --packed]); --packed executes the packed\n\
          \x20            ints through the fused dequant kernels, never\n\
          \x20            materializing dense weights; --kv-bits 8|4 --kv-group 64\n\
-         \x20            quantizes the decode KV cache group-wise per head\n\
+         \x20            quantizes the decode KV cache group-wise per head;\n\
+         \x20            --shards N splits layers over N pipeline shard threads\n\
+         \x20            (bit-identical tokens; banner shows per-shard ranges,\n\
+         \x20            weight bytes and KV bytes/token)\n\
          \x20 kernels    print the dequant kernel dispatch table (CPU features,\n\
          \x20            per-bit-width kernel selection, forcing state)\n\
          \x20 warmup     pre-compile all artifacts"
@@ -279,10 +285,12 @@ fn cmd_eval(argv: &[String]) -> Result<()> {
         OptSpec { name: "native", help: "force native forward (skip artifacts)", default: None, is_flag: true },
         OptSpec { name: "kv-bits", help: "also report decode ppl with an N-bit KV cache (0 = off)", default: Some("0"), is_flag: false },
         OptSpec { name: "kv-group", help: "KV group size (per-head groups, clamped to head_dim)", default: Some("64"), is_flag: false },
+        OptSpec { name: "shards", help: "evaluate through a layer-sharded model (banner reports the plan; forces native forward)", default: Some("1"), is_flag: false },
     ];
     let a = parse(argv, "tsgo eval", "PPL + 0-shot evaluation", &specs)?;
     let windows = a.usize("windows").map_err(anyhow::Error::msg)?;
     let n_tasks = a.usize("tasks").map_err(anyhow::Error::msg)?;
+    let shards = a.usize("shards").map_err(anyhow::Error::msg)?;
     let kv = KvSpec::from_flags(
         a.usize("kv-bits").map_err(anyhow::Error::msg)?,
         a.usize("kv-group").map_err(anyhow::Error::msg)?,
@@ -296,10 +304,16 @@ fn cmd_eval(argv: &[String]) -> Result<()> {
             em.linear_weight_bytes() as f64 / 1e6
         );
         println!("kernels: {}", em.kernel_dispatch());
+        if shards > 1 {
+            return run_eval_sharded(em, shards, kv, windows, n_tasks);
+        }
         run_eval_report(&em, windows, n_tasks, &mut native_ppl)?;
         return run_kv_ppl_report(&em, windows, kv);
     }
     let w = load_any_model(Path::new(&a.str("model")), a.flag("quantized"))?;
+    if shards > 1 {
+        return run_eval_sharded(w, shards, kv, windows, n_tasks);
+    }
     let engine = if a.flag("native") { None } else { Engine::open_default() };
     match &engine {
         Some(e) if e.manifest.config == w.config => {
@@ -343,17 +357,20 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         OptSpec { name: "max-batch", help: "dynamic batch cap", default: Some("8"), is_flag: false },
         OptSpec { name: "kv-bits", help: "quantize the decode KV cache to N bits (0 = f32)", default: Some("0"), is_flag: false },
         OptSpec { name: "kv-group", help: "KV group size (per-head groups, clamped to head_dim)", default: Some("64"), is_flag: false },
+        OptSpec { name: "shards", help: "pipeline-parallel shard count (layers split over N worker threads; clamped to the layer count)", default: Some("1"), is_flag: false },
     ];
     let a = parse(argv, "tsgo serve", "batched generation server", &specs)?;
     let kv = KvSpec::from_flags(
         a.usize("kv-bits").map_err(anyhow::Error::msg)?,
         a.usize("kv-group").map_err(anyhow::Error::msg)?,
     )?;
+    let shards = a.usize("shards").map_err(anyhow::Error::msg)?;
     let cfg = tsgo::serve::ServerConfig {
         addr: a.str("addr"),
         batcher: tsgo::serve::BatcherConfig {
             max_batch: a.usize("max-batch").map_err(anyhow::Error::msg)?,
             kv,
+            shards,
             ..Default::default()
         },
         max_connections: None,
@@ -369,11 +386,59 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         );
         println!("kernels: {}", em.kernel_dispatch());
         print_kv_banner(&kv, em.config());
+        if shards > 1 {
+            return serve_sharded(Arc::new(em), shards, kv, cfg);
+        }
         return tsgo::serve::serve(Arc::new(em), cfg);
     }
     let w = Arc::new(load_any_model(Path::new(&a.str("model")), a.flag("quantized"))?);
     print_kv_banner(&kv, w.config());
+    if shards > 1 {
+        return serve_sharded(w, shards, kv, cfg);
+    }
     tsgo::serve::serve(w, cfg)
+}
+
+/// The `--shards N` eval path, shared by the packed and dense branches:
+/// wrap, print the plan banner, run the native-forward report. (The AOT
+/// artifact engine runs whole-model graphs, so sharded eval is always
+/// native.)
+fn run_eval_sharded<M: ModelExec>(
+    m: M,
+    shards: usize,
+    kv: KvSpec,
+    windows: usize,
+    n_tasks: usize,
+) -> Result<()> {
+    let sm = ShardedModel::new(Arc::new(m), shards);
+    print_shard_banner(&sm, &kv);
+    run_eval_report(&sm, windows, n_tasks, &mut native_ppl)?;
+    run_kv_ppl_report(&sm, windows, kv)
+}
+
+/// The `--shards N` serve path, shared by the packed and dense branches:
+/// print the plan banner, then serve the *inner* model — the batcher
+/// shards it itself (`cfg.batcher.shards`) through the same
+/// `ShardedModel::new` recipe the banner used, so wrapping here too would
+/// only nest a second delegation layer onto the decode hot path.
+fn serve_sharded<M: ModelExec + Send + Sync + 'static>(
+    m: Arc<M>,
+    shards: usize,
+    kv: KvSpec,
+    cfg: tsgo::serve::ServerConfig,
+) -> Result<()> {
+    let sm = ShardedModel::new(m.clone(), shards);
+    print_shard_banner(&sm, &kv);
+    tsgo::serve::serve(m, cfg)
+}
+
+/// The `--shards` banner: the plan's per-shard layer ranges, weight bytes
+/// and KV bytes/token — what a deployment log needs to spot the pipeline
+/// bottleneck shard (the batcher derives the identical plan internally).
+fn print_shard_banner<M: ModelExec>(sm: &ShardedModel<M>, kv: &KvSpec) {
+    for line in sm.banner_lines(*kv) {
+        println!("{line}");
+    }
 }
 
 /// One banner line describing the decode KV-cache representation, with the

@@ -79,6 +79,12 @@ impl BlockLinears for ExecLayer {
     fn apply(&self, kind: LinearKind, x: &Matrix) -> Matrix {
         self.op(kind).forward(x)
     }
+
+    fn weight_bytes(&self) -> usize {
+        let linears: usize =
+            LinearKind::ALL.iter().map(|&k| self.op(k).weight_bytes()).sum();
+        linears + (self.ln1.len() + self.ln2.len()) * 4
+    }
 }
 
 /// A whole executable model (see module docs).
@@ -231,6 +237,14 @@ impl ModelExec for ExecModel {
 
     fn apply_head(&self, x: &Matrix) -> Matrix {
         x.matmul_bt(&self.head)
+    }
+
+    fn embed_bytes(&self) -> usize {
+        self.embed.data.len() * 4
+    }
+
+    fn head_bytes(&self) -> usize {
+        (self.head.data.len() + self.ln_f.len()) * 4
     }
 }
 

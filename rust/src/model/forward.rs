@@ -17,7 +17,8 @@
 //! Numerics must match the JAX model: RMSNorm ε = 1e-5, rotary embeddings
 //! over pairs `(x[2i], x[2i+1])` with base 10000, pre-norm residual blocks.
 
-use super::kvcache::{KvCache, KvSpec};
+use super::config::ModelConfig;
+use super::kvcache::{KvSpec, LayerKv};
 use super::linear::{BlockLinears, ModelExec};
 use super::weights::{LinearKind, ModelWeights};
 use crate::tensor::Matrix;
@@ -212,6 +213,87 @@ pub fn sequence_nll<M: ModelExec>(m: &M, tokens: &[u8]) -> f64 {
     total / n as f64
 }
 
+/// One transformer block's KV-cached decode step: append this position's
+/// K/V to the layer's cache and advance the `[d_model]` hidden state in
+/// place. This is the per-layer core of [`DecodeState::step`], factored out
+/// so the sharded pipeline executor ([`crate::shard`]) and the step-level
+/// serve scheduler run the **exact same floating-point ops in the same
+/// order** as unsharded decode — the bit-identity guarantee between
+/// `--shards N` and single-worker execution is structural, not tested-in.
+pub fn decode_layer_step<L: BlockLinears + ?Sized>(
+    l: &L,
+    cfg: &ModelConfig,
+    pos: usize,
+    h: &mut [f32],
+    kv: &mut LayerKv,
+) {
+    let d = cfg.d_model;
+    let ffn = cfg.ffn;
+    let n_heads = cfg.n_heads;
+    let hd = cfg.head_dim();
+    let scale = 1.0 / (hd as f32).sqrt();
+
+    let hx = Matrix::from_vec(1, d, h.to_vec());
+    let xa = rmsnorm(&hx, l.ln1());
+    let mut q = l.apply(LinearKind::Wq, &xa);
+    let mut k = l.apply(LinearKind::Wk, &xa);
+    let v = l.apply(LinearKind::Wv, &xa);
+    rope_inplace(&mut q, n_heads, pos);
+    rope_inplace(&mut k, n_heads, pos);
+
+    // append to cache (quantizing on the fly when packed)
+    kv.k.append(k.row(0));
+    kv.v.append(v.row(0));
+
+    // attention against the cache, head by head: fused dequant scores +
+    // softmax + fused dequant probs·V accumulation
+    let mut ctx = Matrix::zeros(1, d);
+    let mut scores: Vec<f32> = Vec::with_capacity(kv.k.rows());
+    for hh in 0..n_heads {
+        let base = hh * hd;
+        kv.k.head_scores(hh, q.row(0), scale, &mut scores);
+        let mut maxs = f32::NEG_INFINITY;
+        for &s in scores.iter() {
+            maxs = maxs.max(s);
+        }
+        let mut denom = 0.0;
+        for s in scores.iter_mut() {
+            *s = (*s - maxs).exp();
+            denom += *s;
+        }
+        for s in scores.iter_mut() {
+            *s /= denom;
+        }
+        kv.v.head_axpy(hh, &scores, &mut ctx.row_mut(0)[base..base + hd]);
+    }
+    let attn_out = l.apply(LinearKind::Wo, &ctx);
+    for (hv, a) in h.iter_mut().zip(&attn_out.data) {
+        *hv += *a;
+    }
+
+    let hx = Matrix::from_vec(1, d, h.to_vec());
+    let xm = rmsnorm(&hx, l.ln2());
+    let gate = l.apply(LinearKind::W1, &xm);
+    let up = l.apply(LinearKind::W3, &xm);
+    let mut act = Matrix::zeros(1, ffn);
+    for i in 0..ffn {
+        act.data[i] = silu(gate.data[i]) * up.data[i];
+    }
+    let down = l.apply(LinearKind::W2, &act);
+    for (hv, a) in h.iter_mut().zip(&down.data) {
+        *hv += *a;
+    }
+}
+
+/// Final norm + LM head for one decoded position — the tail of
+/// [`DecodeState::step`], shared with the *last* pipeline shard (which owns
+/// the head, per the shard plan).
+pub fn decode_head<M: ModelExec>(m: &M, h: Vec<f32>) -> Vec<f32> {
+    let hx = Matrix::from_vec(1, m.config().d_model, h);
+    let f = rmsnorm(&hx, m.ln_f());
+    m.apply_head(&f).data
+}
+
 /// Incremental KV-cached decoding state for one sequence (serve path),
 /// generic over the execution representation — the packed serve path runs
 /// exactly this code with fused dequant GEMVs behind [`BlockLinears`].
@@ -225,8 +307,7 @@ pub fn sequence_nll<M: ModelExec>(m: &M, tokens: &[u8]) -> f64 {
 pub struct DecodeState<'a, M: ModelExec> {
     model: &'a M,
     /// Per layer: cached K and V rows in the configured representation.
-    kcache: Vec<KvCache>,
-    vcache: Vec<KvCache>,
+    kv: Vec<LayerKv>,
     spec: KvSpec,
     pub pos: usize,
 }
@@ -244,8 +325,7 @@ impl<'a, M: ModelExec> DecodeState<'a, M> {
         let spec = spec.effective(cfg);
         DecodeState {
             model,
-            kcache: (0..n).map(|_| KvCache::new(spec, cfg)).collect(),
-            vcache: (0..n).map(|_| KvCache::new(spec, cfg)).collect(),
+            kv: (0..n).map(|_| LayerKv::new(spec, cfg)).collect(),
             spec,
             pos: 0,
         }
@@ -258,85 +338,29 @@ impl<'a, M: ModelExec> DecodeState<'a, M> {
 
     /// Bytes currently held by all layers' K+V caches.
     pub fn kv_bytes(&self) -> usize {
-        self.kcache.iter().chain(&self.vcache).map(|c| c.nbytes()).sum()
+        self.kv.iter().map(|c| c.nbytes()).sum()
     }
 
     /// Total storage-growth events across all caches — O(layers · log pos)
     /// by the amortized-growth contract.
     pub fn kv_grow_events(&self) -> usize {
-        self.kcache.iter().chain(&self.vcache).map(|c| c.grow_events()).sum()
+        self.kv.iter().map(|c| c.grow_events()).sum()
     }
 
     /// Feed one token; returns the logits for the next position.
+    ///
+    /// Implemented entirely in terms of [`decode_layer_step`] and
+    /// [`decode_head`] — the same primitives the sharded pipeline executor
+    /// runs per shard — so sharded and unsharded decode share one op
+    /// sequence.
     pub fn step(&mut self, token: u8) -> Vec<f32> {
         let m = self.model;
-        let cfg = m.config();
-        let d = cfg.d_model;
-        let ffn = cfg.ffn;
-        let n_heads = cfg.n_heads;
-        let hd = cfg.head_dim();
-        let scale = 1.0 / (hd as f32).sqrt();
-
         let mut h: Vec<f32> = m.embed_row(token).to_vec();
-        for (li, l) in m.layers().iter().enumerate() {
-            let hx = Matrix::from_vec(1, d, h.clone());
-            let xa = rmsnorm(&hx, l.ln1());
-            let mut q = l.apply(LinearKind::Wq, &xa);
-            let mut k = l.apply(LinearKind::Wk, &xa);
-            let v = l.apply(LinearKind::Wv, &xa);
-            rope_inplace(&mut q, n_heads, self.pos);
-            rope_inplace(&mut k, n_heads, self.pos);
-
-            // append to cache (quantizing on the fly when packed)
-            self.kcache[li].append(k.row(0));
-            self.vcache[li].append(v.row(0));
-            let kc = &self.kcache[li];
-            let vc = &self.vcache[li];
-
-            // attention against the cache, head by head: fused dequant
-            // scores + softmax + fused dequant probs·V accumulation
-            let t_len = kc.rows();
-            let mut ctx = Matrix::zeros(1, d);
-            let mut scores: Vec<f32> = Vec::with_capacity(t_len);
-            for hh in 0..n_heads {
-                let base = hh * hd;
-                kc.head_scores(hh, q.row(0), scale, &mut scores);
-                let mut maxs = f32::NEG_INFINITY;
-                for &s in scores.iter() {
-                    maxs = maxs.max(s);
-                }
-                let mut denom = 0.0;
-                for s in scores.iter_mut() {
-                    *s = (*s - maxs).exp();
-                    denom += *s;
-                }
-                for s in scores.iter_mut() {
-                    *s /= denom;
-                }
-                vc.head_axpy(hh, &scores, &mut ctx.row_mut(0)[base..base + hd]);
-            }
-            let attn_out = l.apply(LinearKind::Wo, &ctx);
-            for (hv, a) in h.iter_mut().zip(&attn_out.data) {
-                *hv += *a;
-            }
-
-            let hx = Matrix::from_vec(1, d, h.clone());
-            let xm = rmsnorm(&hx, l.ln2());
-            let gate = l.apply(LinearKind::W1, &xm);
-            let up = l.apply(LinearKind::W3, &xm);
-            let mut act = Matrix::zeros(1, ffn);
-            for i in 0..ffn {
-                act.data[i] = silu(gate.data[i]) * up.data[i];
-            }
-            let down = l.apply(LinearKind::W2, &act);
-            for (hv, a) in h.iter_mut().zip(&down.data) {
-                *hv += *a;
-            }
+        for (l, kv) in m.layers().iter().zip(self.kv.iter_mut()) {
+            decode_layer_step(l, m.config(), self.pos, &mut h, kv);
         }
         self.pos += 1;
-        let hx = Matrix::from_vec(1, d, h);
-        let f = rmsnorm(&hx, m.ln_f());
-        m.apply_head(&f).data
+        decode_head(m, h)
     }
 }
 

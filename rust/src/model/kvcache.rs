@@ -273,6 +273,41 @@ impl KvCache {
     }
 }
 
+/// One layer's K and V caches as a unit — what a decode step advances and
+/// what a pipeline shard owns per sequence: [`DecodeState`] holds one per
+/// model layer, while each shard worker holds one per layer *in its range*
+/// (the "shard-local half" of a sequence's cache). Keeping the pair together
+/// means the per-layer decode step ([`super::forward::decode_layer_step`])
+/// has a single mutable argument and both topologies share it verbatim.
+///
+/// [`DecodeState`]: super::DecodeState
+#[derive(Clone, Debug)]
+pub struct LayerKv {
+    pub k: KvCache,
+    pub v: KvCache,
+}
+
+impl LayerKv {
+    pub fn new(spec: KvSpec, cfg: &ModelConfig) -> LayerKv {
+        LayerKv { k: KvCache::new(spec, cfg), v: KvCache::new(spec, cfg) }
+    }
+
+    /// Bytes currently held by this layer's K+V rows.
+    pub fn nbytes(&self) -> usize {
+        self.k.nbytes() + self.v.nbytes()
+    }
+
+    /// Storage-growth events across both caches (amortization contract).
+    pub fn grow_events(&self) -> usize {
+        self.k.grow_events() + self.v.grow_events()
+    }
+
+    /// Cached rows (= tokens this layer has seen).
+    pub fn rows(&self) -> usize {
+        self.k.rows()
+    }
+}
+
 /// Grow `v` so it can hold `need` more elements without reallocating,
 /// doubling capacity (with a floor) when it can't. Returns `true` when a
 /// grow happened — callers count those to verify amortization.

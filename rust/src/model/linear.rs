@@ -5,8 +5,10 @@
 //! fused dequant kernels. [`BlockLinears`] / [`ModelExec`] abstract one
 //! transformer block / a whole model over that choice, so the forward pass,
 //! KV-cached decoding, the serve batcher and the eval harness are written
-//! once and run on either representation (and later backends — SIMD unpack,
-//! sharded layers — slot in behind the same two traits).
+//! once and run on either representation. The SIMD unpack tables (PR 3) and
+//! the layer-sharded pipeline topology (`crate::shard`, PR 5) both slot in
+//! behind these same two traits — the byte-accounting methods below are
+//! what the shard planner balances ranges with.
 
 use super::config::ModelConfig;
 use super::weights::{LayerWeights, LinearKind, ModelWeights};
@@ -67,6 +69,11 @@ pub trait BlockLinears: Sync {
     fn ln2(&self) -> &[f32];
     /// Apply projection `kind`: `x @ W_kindᵀ`.
     fn apply(&self, kind: LinearKind, x: &Matrix) -> Matrix;
+    /// Bytes this block's deployed weights occupy (linears in their stored
+    /// representation plus the two norm gains) — what the shard planner
+    /// balances contiguous layer ranges by, so a mixed-precision checkpoint
+    /// shards by its *actual* per-layer footprint, not the layer count.
+    fn weight_bytes(&self) -> usize;
 }
 
 impl BlockLinears for LayerWeights {
@@ -81,12 +88,19 @@ impl BlockLinears for LayerWeights {
     fn apply(&self, kind: LinearKind, x: &Matrix) -> Matrix {
         x.matmul_bt(self.linear(kind))
     }
+
+    fn weight_bytes(&self) -> usize {
+        let linears: usize =
+            LinearKind::ALL.iter().map(|&k| self.linear(k).data.len() * 4).sum();
+        linears + (self.ln1.len() + self.ln2.len()) * 4
+    }
 }
 
 /// A whole executable model: embedding + blocks + final norm + LM head.
-/// Implemented by the dense [`ModelWeights`] and the packed-capable
-/// [`super::ExecModel`]; the forward pass, [`super::DecodeState`], the
-/// serve batcher and eval are generic over it.
+/// Implemented by the dense [`ModelWeights`], the packed-capable
+/// [`super::ExecModel`], and the plan-carrying
+/// [`crate::shard::ShardedModel`]; the forward pass, [`super::DecodeState`],
+/// the serve batcher and eval are generic over it.
 pub trait ModelExec: Sync {
     type Layer: BlockLinears;
 
@@ -97,6 +111,12 @@ pub trait ModelExec: Sync {
     fn ln_f(&self) -> &[f32];
     /// LM head: `x @ W_headᵀ` → `[T, vocab]`.
     fn apply_head(&self, x: &Matrix) -> Matrix;
+    /// Bytes of the token-embedding table. The shard planner charges these
+    /// to the **first** pipeline shard, which owns embedding lookup.
+    fn embed_bytes(&self) -> usize;
+    /// Bytes of the final norm + untied LM head, charged to the **last**
+    /// pipeline shard, which owns logit production.
+    fn head_bytes(&self) -> usize;
 }
 
 impl ModelExec for ModelWeights {
@@ -120,6 +140,14 @@ impl ModelExec for ModelWeights {
 
     fn apply_head(&self, x: &Matrix) -> Matrix {
         x.matmul_bt(&self.head)
+    }
+
+    fn embed_bytes(&self) -> usize {
+        self.embed.data.len() * 4
+    }
+
+    fn head_bytes(&self) -> usize {
+        (self.head.data.len() + self.ln_f.len()) * 4
     }
 }
 
@@ -147,5 +175,18 @@ mod tests {
         let a = dense.forward(&x);
         let b = packed.forward(&x);
         assert!(a.max_abs_diff(&b) < 1e-4, "diff {}", a.max_abs_diff(&b));
+    }
+
+    #[test]
+    fn byte_accounting_matches_shapes() {
+        // The shard planner's inputs derive from the actual tensor shapes.
+        let mut rng = Rng::new(2);
+        let cfg = crate::model::Preset::Tiny.config();
+        let w = ModelWeights::init(cfg, &mut rng);
+        let per_layer =
+            (4 * cfg.d_model * cfg.d_model + 3 * cfg.d_model * cfg.ffn + 2 * cfg.d_model) * 4;
+        assert_eq!(w.layers[0].weight_bytes(), per_layer);
+        assert_eq!(w.embed_bytes(), cfg.vocab * cfg.d_model * 4);
+        assert_eq!(w.head_bytes(), (cfg.vocab * cfg.d_model + cfg.d_model) * 4);
     }
 }

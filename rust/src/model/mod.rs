@@ -24,7 +24,10 @@ pub mod weights;
 
 pub use config::{ModelConfig, Preset};
 pub use exec::{ExecLayer, ExecModel};
-pub use forward::{forward_captures, forward_logits, DecodeState, LayerCaptures};
-pub use kvcache::{KvCache, KvSpec};
+pub use forward::{
+    decode_head, decode_layer_step, forward_captures, forward_logits, DecodeState,
+    LayerCaptures,
+};
+pub use kvcache::{KvCache, KvSpec, LayerKv};
 pub use linear::{BlockLinears, LinearOp, ModelExec};
 pub use weights::{LayerWeights, LinearKind, ModelWeights};

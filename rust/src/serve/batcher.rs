@@ -1,19 +1,31 @@
-//! Dynamic request batching.
+//! Dynamic request batching over the step-level scheduler.
 //!
-//! Requests arrive asynchronously; the batcher coalesces up to
-//! `max_batch` of them (waiting at most `max_wait` for stragglers) and
-//! decodes the whole batch in lock-step, one token per step, with the
-//! per-sequence KV caches advancing in parallel worker threads. This is the
-//! same continuous-batching shape vLLM's router uses, reduced to its core.
+//! Requests arrive asynchronously; a single worker thread runs the
+//! continuous-batching scheduler ([`super::sched`]): the unit of work is
+//! one token step of the running batch, and sequences are admitted and
+//! retired *between steps*, so a request arriving while other generations
+//! are mid-flight joins the very next step instead of queueing behind an
+//! entire batch's full generation (the seed implementation's admission
+//! stall — its "vLLM-style" claim only held for requests that arrived
+//! together). The split [`GenResponse::queue_wait`] / `decode_time` makes
+//! the behaviour observable per request.
 //!
 //! The worker is generic over [`ModelExec`], so the same batcher drives
-//! dense f32 weights and the packed fused-dequant execution path
-//! (`tsgo serve --packed`).
+//! dense f32 weights and the packed fused-dequant execution path, and —
+//! with [`BatcherConfig::shards`] > 1 — the layer-sharded pipeline executor
+//! ([`crate::shard`]), where per-step scheduling is what keeps every shard
+//! busy.
+//!
+//! [`DynamicBatcher`] owns its worker: dropping it closes the queue, drains
+//! any in-flight replies with an error, joins the scheduler thread (and,
+//! transitively, the shard threads) — no thread outlives its batcher.
 
-use crate::model::{DecodeState, KvSpec, ModelExec};
+use super::sched::{scheduler_loop, LocalBackend, ShardBackend};
+use crate::model::{KvSpec, ModelExec};
+use crate::shard::ShardedModel;
 use anyhow::{anyhow, Result};
-use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::{Arc, Mutex};
+use std::sync::mpsc::{channel, Sender};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 /// One generation request.
@@ -27,19 +39,39 @@ pub struct GenRequest {
 #[derive(Clone, Debug)]
 pub struct GenResponse {
     pub tokens: Vec<u8>,
-    pub latency: Duration,
-    /// How many requests shared the batch this one ran in.
+    /// Enqueue → admission into the running batch. Under continuous
+    /// batching this stays near zero whenever the batch has a free lane;
+    /// under the old whole-batch scheduler it absorbed entire generations.
+    pub queue_wait: Duration,
+    /// Admission → final token (the time actually spent decoding).
+    pub decode_time: Duration,
+    /// The largest batch this request ever shared a token step with.
     pub batch_size: usize,
+}
+
+impl GenResponse {
+    /// End-to-end latency as the client saw it.
+    pub fn latency(&self) -> Duration {
+        self.queue_wait + self.decode_time
+    }
 }
 
 /// Batcher tunables.
 #[derive(Clone, Copy, Debug)]
 pub struct BatcherConfig {
+    /// Cap on concurrently decoding sequences (the admission limit).
     pub max_batch: usize,
+    /// Coalescing window applied only when the batch is idle: after the
+    /// first request of a burst, wait up to this long for stragglers so
+    /// they start as one batch. Once decoding, admission never waits.
     pub max_wait: Duration,
-    /// KV-cache representation for every per-sequence [`DecodeState`]
+    /// KV-cache representation for every per-sequence decode state
     /// (`tsgo serve --kv-bits/--kv-group`). Default: f32.
     pub kv: KvSpec,
+    /// Pipeline-parallel shard count (`tsgo serve --shards N`): 0/1 =
+    /// single worker; N > 1 splits layers over N shard threads (clamped to
+    /// the layer count) with channel-based activation handoff.
+    pub shards: usize,
 }
 
 impl Default for BatcherConfig {
@@ -48,30 +80,48 @@ impl Default for BatcherConfig {
             max_batch: 8,
             max_wait: Duration::from_millis(5),
             kv: KvSpec::DenseF32,
+            shards: 1,
         }
     }
 }
 
-struct Pending {
-    req: GenRequest,
-    enqueued: Instant,
-    reply: Sender<Result<GenResponse, String>>,
+pub(crate) struct Pending {
+    pub(crate) req: GenRequest,
+    pub(crate) enqueued: Instant,
+    pub(crate) reply: Sender<Result<GenResponse, String>>,
 }
 
-/// A shared handle: submit requests, a background thread serves them.
+/// A shared handle: submit requests, a background scheduler serves them.
 pub struct DynamicBatcher {
-    queue: Sender<Pending>,
+    queue: Option<Sender<Pending>>,
+    worker: Option<std::thread::JoinHandle<()>>,
 }
 
 impl DynamicBatcher {
-    /// Spawn the batching worker over the given model (dense or packed).
+    /// Spawn the scheduling worker over the given model (dense or packed;
+    /// sharded when `cfg.shards > 1`).
     pub fn spawn<M: ModelExec + Send + Sync + 'static>(
         model: Arc<M>,
         cfg: BatcherConfig,
     ) -> DynamicBatcher {
         let (tx, rx) = channel::<Pending>();
-        std::thread::spawn(move || worker_loop(model, cfg, rx));
-        DynamicBatcher { queue: tx }
+        let worker = std::thread::Builder::new()
+            .name("tsgo-batcher".into())
+            .spawn(move || {
+                if cfg.shards > 1 {
+                    // Same constructor path a `ShardedModel` banner uses
+                    // (`new` → plan → `decoder`), so the printed plan and
+                    // the executing plan can only come from one recipe.
+                    let sharded = ShardedModel::new(model, cfg.shards);
+                    let mut backend = ShardBackend::new(sharded.decoder(cfg.kv));
+                    scheduler_loop(&mut backend, &cfg, rx);
+                } else {
+                    let mut backend = LocalBackend::new(model, cfg.kv, cfg.max_batch);
+                    scheduler_loop(&mut backend, &cfg, rx);
+                }
+            })
+            .expect("spawn batcher worker thread");
+        DynamicBatcher { queue: Some(tx), worker: Some(worker) }
     }
 
     /// Submit a request; blocks until the response is ready. Decode
@@ -80,74 +130,26 @@ impl DynamicBatcher {
     pub fn generate(&self, req: GenRequest) -> Result<GenResponse> {
         let (tx, rx) = channel();
         self.queue
+            .as_ref()
+            .expect("batcher queue open until drop")
             .send(Pending { req, enqueued: Instant::now(), reply: tx })
             .map_err(|_| anyhow!("batcher unavailable"))?;
         rx.recv().map_err(|_| anyhow!("batcher unavailable"))?.map_err(|e| anyhow!(e))
     }
 }
 
-fn worker_loop<M: ModelExec>(model: Arc<M>, cfg: BatcherConfig, rx: Receiver<Pending>) {
-    loop {
-        // block for the first request, then soak up stragglers
-        let first = match rx.recv() {
-            Ok(p) => p,
-            Err(_) => return, // all senders dropped
-        };
-        let mut batch = vec![first];
-        let deadline = Instant::now() + cfg.max_wait;
-        while batch.len() < cfg.max_batch {
-            let now = Instant::now();
-            if now >= deadline {
-                break;
-            }
-            match rx.recv_timeout(deadline - now) {
-                Ok(p) => batch.push(p),
-                Err(_) => break,
-            }
+impl Drop for DynamicBatcher {
+    /// Close the queue and join the worker. The scheduler notices the
+    /// closed queue at its next admission point, answers any in-flight
+    /// request with an error, and exits — which in turn drops its backend
+    /// and joins the shard threads. The seed implementation had no shutdown
+    /// path at all: every `spawn` (one per test, one per server) leaked its
+    /// worker thread for the life of the process.
+    fn drop(&mut self) {
+        drop(self.queue.take());
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
         }
-        run_batch(model.as_ref(), &cfg, batch);
-    }
-}
-
-fn run_batch<M: ModelExec>(model: &M, cfg: &BatcherConfig, batch: Vec<Pending>) {
-    let bs = batch.len();
-    // Decode all sequences in lock-step; each sequence owns a KV cache (in
-    // the configured representation) and advances on a worker thread per
-    // step (threads scale with batch).
-    type Decoded = (Result<Vec<u8>, String>, Instant, Sender<Result<GenResponse, String>>);
-    let results: Vec<Decoded> = {
-        let outputs = Mutex::new(Vec::with_capacity(bs));
-        crate::util::threadpool::parallel_for(bs, |i| {
-            let p = &batch[i];
-            let decode = || -> Result<Vec<u8>, String> {
-                let mut st = DecodeState::with_kv(model, cfg.kv);
-                let mut logits = Vec::new();
-                for &t in &p.req.prompt {
-                    logits = st.step(t);
-                }
-                let mut out = Vec::with_capacity(p.req.max_new);
-                for _ in 0..p.req.max_new {
-                    let next = argmax_token(&logits)?;
-                    out.push(next);
-                    logits = st.step(next);
-                }
-                Ok(out)
-            };
-            outputs.lock().unwrap().push((i, decode()));
-        });
-        let mut v = outputs.into_inner().unwrap();
-        v.sort_by_key(|(i, _)| *i);
-        v.into_iter()
-            .zip(batch)
-            .map(|((_, out), p)| (out, p.enqueued, p.reply))
-            .collect()
-    };
-    for (tokens, enqueued, reply) in results {
-        let _ = reply.send(tokens.map(|tokens| GenResponse {
-            tokens,
-            latency: enqueued.elapsed(),
-            batch_size: bs,
-        }));
     }
 }
 
@@ -182,7 +184,7 @@ pub fn argmax_token(v: &[f32]) -> Result<u8, String> {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::model::{ModelWeights, Preset};
+    use crate::model::{DecodeState, ModelWeights, Preset};
     use crate::util::rng::Rng;
 
     fn model() -> Arc<ModelWeights> {
@@ -198,6 +200,9 @@ mod tests {
             .unwrap();
         assert_eq!(r.tokens.len(), 5);
         assert!(r.batch_size >= 1);
+        // the latency split always reconstructs the end-to-end number
+        assert_eq!(r.latency(), r.queue_wait + r.decode_time);
+        assert!(r.decode_time > Duration::ZERO);
     }
 
     #[test]
@@ -230,7 +235,7 @@ mod tests {
         let responses: Vec<GenResponse> =
             handles.into_iter().map(|h| h.join().unwrap()).collect();
         assert!(responses.iter().all(|r| r.tokens.len() == 3));
-        // at least one pair must have shared a batch
+        // at least one pair must have shared a step
         assert!(
             responses.iter().any(|r| r.batch_size > 1),
             "no batching happened: sizes {:?}",
@@ -285,6 +290,37 @@ mod tests {
         );
         let r = b.generate(GenRequest { prompt: prompt.to_vec(), max_new: 5 }).unwrap();
         assert_eq!(r.tokens, expect, "batcher diverged from direct int8-KV decode");
+    }
+
+    #[test]
+    fn drop_joins_the_worker() {
+        // The seed leaked one thread per spawn. Drop must close the queue
+        // and join: repeated spawn+drop cycles neither hang nor accumulate
+        // workers (a hang here is the regression this test exists for).
+        let m = model();
+        for _ in 0..8 {
+            let b = DynamicBatcher::spawn(m.clone(), BatcherConfig::default());
+            let r = b.generate(GenRequest { prompt: vec![3, 5], max_new: 2 }).unwrap();
+            assert_eq!(r.tokens.len(), 2);
+            drop(b); // joins the scheduler thread before the next iteration
+        }
+    }
+
+    #[test]
+    fn zero_max_new_returns_empty() {
+        let b = DynamicBatcher::spawn(model(), BatcherConfig::default());
+        let r = b.generate(GenRequest { prompt: vec![1, 2], max_new: 0 }).unwrap();
+        assert!(r.tokens.is_empty());
+    }
+
+    #[test]
+    fn empty_prompt_is_an_error() {
+        let b = DynamicBatcher::spawn(model(), BatcherConfig::default());
+        let err = b
+            .generate(GenRequest { prompt: vec![], max_new: 3 })
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("empty"), "{err}");
     }
 
     #[test]

@@ -10,6 +10,11 @@ use std::net::TcpStream;
 pub struct ClientResponse {
     pub tokens: Vec<u8>,
     pub latency_ms: f64,
+    /// Time the request sat queued before joining the running batch
+    /// (near zero under continuous batching while lanes are free).
+    pub queue_wait_ms: f64,
+    /// Time spent actually decoding once admitted.
+    pub decode_ms: f64,
     pub batch_size: usize,
 }
 
@@ -33,6 +38,8 @@ pub fn request_generation(addr: &str, prompt: &[u8], max_new: usize) -> Result<C
     Ok(ClientResponse {
         tokens: j.get("tokens").usize_vec().into_iter().map(|t| t as u8).collect(),
         latency_ms: j.get("latency_ms").as_f64().unwrap_or(0.0),
+        queue_wait_ms: j.get("queue_wait_ms").as_f64().unwrap_or(0.0),
+        decode_ms: j.get("decode_ms").as_f64().unwrap_or(0.0),
         batch_size: j.get("batch_size").as_usize().unwrap_or(1),
     })
 }

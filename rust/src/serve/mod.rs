@@ -2,13 +2,17 @@
 //! weight-only quantization (paper §2.2: vLLM / TensorRT-LLM support
 //! group-wise formats because decode is memory-bandwidth-bound).
 //!
-//! A minimal but real serving stack: a TCP line-JSON protocol, a dynamic
-//! batcher that coalesces concurrent requests, and KV-cached greedy decoding
-//! over either the FP or a quantized checkpoint. The serving bench compares
-//! FP vs quantized token throughput and tail latency.
+//! A minimal but real serving stack: a TCP line-JSON protocol, a
+//! continuous-batching scheduler that admits and retires sequences at every
+//! token step (`sched`), and KV-cached greedy decoding over either the FP
+//! or a quantized checkpoint — single-worker or layer-sharded
+//! pipeline-parallel ([`crate::shard`], `--shards N`). The serving bench
+//! compares FP vs quantized token throughput, tail latency, and shard-count
+//! scaling.
 
 pub mod batcher;
 pub mod client;
+pub(crate) mod sched;
 pub mod server;
 
 pub use batcher::{argmax_token, BatcherConfig, DynamicBatcher, GenRequest, GenResponse};

@@ -1,0 +1,467 @@
+//! Step-level continuous-batching scheduler — one admission/retire decision
+//! per token step.
+//!
+//! The seed batcher coalesced a batch once, then decoded every member's
+//! *entire* generation before looking at the queue again: a request arriving
+//! one token after a batch started waited for the whole batch to finish (the
+//! admission stall). This scheduler is the vLLM-shaped fix: the unit of
+//! scheduling is a single token step of the *running batch*, and between
+//! steps sequences join (admission) and leave (retire) mid-flight. A
+//! late-arriving short request therefore starts decoding on the very next
+//! step and finishes long before an earlier long generation does — the
+//! property `GenResponse::queue_wait` makes observable and
+//! `tests/sharded_exec.rs` locks in.
+//!
+//! The scheduler is backend-agnostic via [`StepBackend`]:
+//!
+//! * [`LocalBackend`] — single-worker execution: every sequence owns a full
+//!   per-layer [`LayerKv`] bank; batch steps run on a **persistent step
+//!   pool** (spawned lazily at the first multi-job step, joined on drop —
+//!   a scoped spawn-per-step would pay thread creation once per decoded
+//!   token), with a no-pool inline fast path for the batch-of-1 case. Same
+//!   per-layer primitives as [`crate::model::DecodeState`], so tokens are
+//!   identical to direct decode.
+//! * [`ShardBackend`] — the pipeline topology: steps are fed to the
+//!   [`ShardedDecoder`]'s shard threads, which is exactly what makes the
+//!   step-level design matter — per-step scheduling keeps microbatches
+//!   flowing so all shards stay busy, where whole-batch scheduling would
+//!   drain the pipe between generations.
+
+use super::batcher::{argmax_token, BatcherConfig, GenResponse, Pending};
+use crate::model::{decode_head, decode_layer_step, KvSpec, LayerKv, ModelExec};
+use crate::shard::ShardedDecoder;
+use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// The execution surface the scheduler drives: admit a sequence slot, step
+/// a batch of `(slot, pos, token)` jobs, retire a slot. Implementations own
+/// all per-sequence decode state; the scheduler owns all policy.
+pub(crate) trait StepBackend {
+    fn admit(&mut self) -> Result<usize, String>;
+    fn retire(&mut self, slot: usize);
+    /// One token step per job; returns each job's next-position logits in
+    /// job order. An `Err` entry retires that sequence with the error.
+    fn step(&mut self, jobs: &[(usize, usize, u8)]) -> Vec<Result<Vec<f32>, String>>;
+}
+
+/// One full-depth decode step — the exact [`crate::model::DecodeState`]
+/// op sequence, shared by the inline fast path and the pool workers.
+fn run_job<M: ModelExec>(m: &M, pos: usize, token: u8, bank: &mut [LayerKv]) -> Vec<f32> {
+    let mut h = m.embed_row(token).to_vec();
+    for (l, kv) in m.layers().iter().zip(bank.iter_mut()) {
+        decode_layer_step(l, m.config(), pos, &mut h, kv);
+    }
+    decode_head(m, h)
+}
+
+/// One batched-step job in flight to the persistent pool: the sequence's KV
+/// bank travels with the job and comes back with the logits, so workers
+/// need no shared mutable state. `gen` identifies the `step` call that sent
+/// the job — a result surfacing after its step gave up (recv timeout) must
+/// be discarded, never matched by raw index against a *later* step's jobs.
+struct PoolJob {
+    gen: u64,
+    idx: usize,
+    pos: usize,
+    token: u8,
+    bank: Vec<LayerKv>,
+}
+
+/// The persistent decode pool: workers pull [`PoolJob`]s off a shared
+/// receiver and reply on `done_rx`. Dropping it closes the job channel and
+/// joins every worker.
+struct StepPool {
+    job_tx: Option<Sender<PoolJob>>,
+    done_rx: Receiver<(u64, usize, Vec<LayerKv>, Vec<f32>)>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+    /// Monotonic `step` counter; see [`PoolJob::gen`].
+    gen: u64,
+}
+
+impl StepPool {
+    fn spawn<M: ModelExec + Send + Sync + 'static>(model: &Arc<M>, width: usize) -> StepPool {
+        let (job_tx, job_rx) = channel::<PoolJob>();
+        let (done_tx, done_rx) = channel::<(u64, usize, Vec<LayerKv>, Vec<f32>)>();
+        let job_rx = Arc::new(Mutex::new(job_rx));
+        let mut workers = Vec::with_capacity(width);
+        for i in 0..width {
+            let m = model.clone();
+            let rx = job_rx.clone();
+            let tx = done_tx.clone();
+            let worker = std::thread::Builder::new()
+                .name(format!("tsgo-step-{i}"))
+                .spawn(move || loop {
+                    // Classic shared-receiver pool: the idle worker holds
+                    // the lock while blocked in recv; peers queue on the
+                    // mutex. Pickup is serialized, compute is parallel.
+                    let job = match rx.lock().unwrap().recv() {
+                        Ok(j) => j,
+                        Err(_) => break, // backend dropped: pool drains
+                    };
+                    let mut bank = job.bank;
+                    let logits = run_job(m.as_ref(), job.pos, job.token, &mut bank);
+                    if tx.send((job.gen, job.idx, bank, logits)).is_err() {
+                        break;
+                    }
+                })
+                .expect("spawn step-pool worker thread");
+            workers.push(worker);
+        }
+        StepPool { job_tx: Some(job_tx), done_rx, workers, gen: 0 }
+    }
+}
+
+impl Drop for StepPool {
+    fn drop(&mut self) {
+        drop(self.job_tx.take());
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+/// Single-worker backend: per-sequence full-depth KV banks, batch steps
+/// distributed over a persistent decode pool. The pool spawns lazily on
+/// the first multi-job step (a server that only ever sees one request at a
+/// time decodes inline and never pays for idle workers) and lives until
+/// the backend drops — the scheduler calls `step` once per decoded token,
+/// so a scoped spawn-per-call would pay thread creation per token.
+pub(crate) struct LocalBackend<M: ModelExec> {
+    model: Arc<M>,
+    kv: KvSpec,
+    /// Pool width when it spawns: `min(threads, max_batch)` — never more
+    /// workers than concurrently decoding sequences or the thread budget.
+    pool_width: usize,
+    pool: Option<StepPool>,
+    slots: Vec<Option<Vec<LayerKv>>>,
+    free: Vec<usize>,
+}
+
+impl<M: ModelExec> LocalBackend<M> {
+    pub(crate) fn new(model: Arc<M>, kv: KvSpec, max_batch: usize) -> LocalBackend<M> {
+        let pool_width = crate::util::threadpool::num_threads().min(max_batch.max(1));
+        LocalBackend {
+            model,
+            kv,
+            pool_width,
+            pool: None,
+            slots: Vec::new(),
+            free: Vec::new(),
+        }
+    }
+}
+
+impl<M: ModelExec + Send + Sync + 'static> StepBackend for LocalBackend<M> {
+    fn admit(&mut self) -> Result<usize, String> {
+        let cfg = self.model.config();
+        let bank: Vec<LayerKv> =
+            (0..cfg.n_layers).map(|_| LayerKv::new(self.kv, cfg)).collect();
+        match self.free.pop() {
+            Some(s) => {
+                self.slots[s] = Some(bank);
+                Ok(s)
+            }
+            None => {
+                self.slots.push(Some(bank));
+                Ok(self.slots.len() - 1)
+            }
+        }
+    }
+
+    fn retire(&mut self, slot: usize) {
+        self.slots[slot] = None;
+        self.free.push(slot);
+    }
+
+    fn step(&mut self, jobs: &[(usize, usize, u8)]) -> Vec<Result<Vec<f32>, String>> {
+        if jobs.is_empty() {
+            return Vec::new();
+        }
+        if let [(slot, pos, token)] = *jobs {
+            // Batch of one: decode inline, skipping the pool's channel hops.
+            let mut bank = self.slots[slot].take().expect("step on unadmitted slot");
+            let logits = run_job(self.model.as_ref(), pos, token, &mut bank);
+            self.slots[slot] = Some(bank);
+            return vec![Ok(logits)];
+        }
+        let unavailable = || "step pool unavailable (a decode worker exited)".to_string();
+        let mut out: Vec<Result<Vec<f32>, String>> =
+            jobs.iter().map(|_| Err(unavailable())).collect();
+        let pool = self
+            .pool
+            .get_or_insert_with(|| StepPool::spawn(&self.model, self.pool_width));
+        pool.gen += 1;
+        let gen = pool.gen;
+        let tx = pool.job_tx.as_ref().expect("step pool open until drop");
+        let mut sent = 0usize;
+        for (idx, &(slot, pos, token)) in jobs.iter().enumerate() {
+            let bank = self.slots[slot].take().expect("step on unadmitted slot");
+            if tx.send(PoolJob { gen, idx, pos, token, bank }).is_err() {
+                break; // a worker panicked; remaining entries stay Err
+            }
+            sent += 1;
+        }
+        let mut got = 0usize;
+        while got < sent {
+            // recv_timeout, not recv: if a worker dies mid-job its reply
+            // never comes while idle peers keep the channel open — a plain
+            // recv would wedge the scheduler. The bound only fires on a
+            // genuinely dead pool (a healthy batch step is milliseconds).
+            match pool.done_rx.recv_timeout(Duration::from_secs(60)) {
+                // A stale generation is a job whose step already gave up:
+                // its sequence was errored/retired back then, so both the
+                // bank and the logits are dead — drop them rather than
+                // matching the raw index into *this* step's jobs.
+                Ok((g, _, _, _)) if g != gen => continue,
+                Ok((_, idx, bank, logits)) => {
+                    self.slots[jobs[idx].0] = Some(bank);
+                    out[idx] = Ok(logits);
+                    got += 1;
+                }
+                Err(_) => break,
+            }
+        }
+        out
+    }
+}
+
+/// Pipeline backend: delegates to the shard threads.
+pub(crate) struct ShardBackend {
+    dec: ShardedDecoder,
+}
+
+impl ShardBackend {
+    pub(crate) fn new(dec: ShardedDecoder) -> ShardBackend {
+        ShardBackend { dec }
+    }
+}
+
+impl StepBackend for ShardBackend {
+    fn admit(&mut self) -> Result<usize, String> {
+        self.dec.admit()
+    }
+
+    fn retire(&mut self, slot: usize) {
+        self.dec.retire(slot)
+    }
+
+    fn step(&mut self, jobs: &[(usize, usize, u8)]) -> Vec<Result<Vec<f32>, String>> {
+        self.dec.step(jobs)
+    }
+}
+
+/// One in-flight sequence: its slot, progress, and reply line.
+struct Running {
+    slot: usize,
+    prompt: Vec<u8>,
+    /// Prompt tokens fed so far (prefill advances one per step, in lock
+    /// step with the rest of the batch).
+    fed: usize,
+    /// Tokens fed in total = this sequence's next position.
+    pos: usize,
+    /// The generated token to feed next (valid once `out` is non-empty).
+    pending: u8,
+    out: Vec<u8>,
+    max_new: usize,
+    enqueued: Instant,
+    /// When this sequence joined its first token step. Set by the
+    /// scheduler right before stepping (not at admission) so the idle
+    /// coalescing window counts as queue time, not decode time.
+    started: Option<Instant>,
+    /// Largest co-running batch this sequence ever shared a step with.
+    max_cobatch: usize,
+    reply: Sender<Result<GenResponse, String>>,
+}
+
+enum Advance {
+    Continue,
+    Done(Result<(), String>),
+}
+
+/// The scheduler loop: runs on the `DynamicBatcher` worker thread until the
+/// request queue closes (batcher dropped). Exits only with every in-flight
+/// sequence answered — finished normally, or drained with an error on
+/// shutdown — so `DynamicBatcher::drop` can join unconditionally.
+pub(crate) fn scheduler_loop(
+    backend: &mut dyn StepBackend,
+    cfg: &BatcherConfig,
+    rx: Receiver<Pending>,
+) {
+    let mut active: Vec<Running> = Vec::new();
+    loop {
+        // -- admission: one decision point per token step -----------------
+        if active.is_empty() {
+            // Idle: block for the next request; a closed, drained queue
+            // means the batcher was dropped — done.
+            match rx.recv() {
+                Ok(p) => admit_request(backend, &mut active, p),
+                Err(_) => return,
+            }
+            // Initial coalescing window (the legacy `max_wait` knob): soak
+            // up stragglers so a burst starts as one batch. Only applies
+            // from idle — once decoding, admission never waits — and only
+            // when the first request actually started a sequence.
+            let deadline = Instant::now() + cfg.max_wait;
+            while !active.is_empty() && active.len() < cfg.max_batch {
+                let now = Instant::now();
+                if now >= deadline {
+                    break;
+                }
+                match rx.recv_timeout(deadline - now) {
+                    Ok(p) => admit_request(backend, &mut active, p),
+                    Err(_) => break,
+                }
+            }
+        } else {
+            // Decoding: admit whatever is queued right now, without
+            // waiting — this is the continuous-batching fix. A sequence
+            // admitted here joins the very next token step.
+            loop {
+                if active.len() >= cfg.max_batch {
+                    break;
+                }
+                match rx.try_recv() {
+                    Ok(p) => admit_request(backend, &mut active, p),
+                    Err(TryRecvError::Empty) => break,
+                    Err(TryRecvError::Disconnected) => {
+                        // Batcher dropped mid-flight: drain every reply
+                        // with an error rather than leaving callers hung.
+                        drain(backend, active, "batcher shut down");
+                        return;
+                    }
+                }
+            }
+        }
+
+        // Admission can answer requests without starting a sequence (empty
+        // prompt, max_new == 0, backend refusal); with nothing running, go
+        // straight back to blocking on the queue instead of issuing an
+        // empty step.
+        if active.is_empty() {
+            continue;
+        }
+
+        // -- one token step for the whole running batch --------------------
+        let bs = active.len();
+        let step_start = Instant::now();
+        for r in active.iter_mut() {
+            r.started.get_or_insert(step_start);
+        }
+        let jobs: Vec<(usize, usize, u8)> = active
+            .iter()
+            .map(|r| {
+                let tok =
+                    if r.fed < r.prompt.len() { r.prompt[r.fed] } else { r.pending };
+                (r.slot, r.pos, tok)
+            })
+            .collect();
+        let results = backend.step(&jobs);
+
+        // -- retire decisions ----------------------------------------------
+        let mut still = Vec::with_capacity(bs);
+        for (mut r, res) in active.into_iter().zip(results) {
+            r.max_cobatch = r.max_cobatch.max(bs);
+            match advance(&mut r, res) {
+                Advance::Continue => still.push(r),
+                Advance::Done(result) => {
+                    backend.retire(r.slot);
+                    finish(r, result);
+                }
+            }
+        }
+        active = still;
+    }
+}
+
+/// Consume one step result for one sequence; decides continue vs retire.
+fn advance(r: &mut Running, res: Result<Vec<f32>, String>) -> Advance {
+    let logits = match res {
+        Ok(l) => l,
+        Err(e) => return Advance::Done(Err(e)),
+    };
+    r.pos += 1;
+    if r.fed < r.prompt.len() {
+        r.fed += 1;
+        if r.fed < r.prompt.len() {
+            return Advance::Continue; // mid-prefill: logits unused
+        }
+        // fall through: the last prompt token's logits pick generated
+        // token #1 — identical to the unbatched greedy-decode semantics.
+    }
+    match argmax_token(&logits) {
+        Ok(next) => {
+            r.out.push(next);
+            if r.out.len() >= r.max_new {
+                Advance::Done(Ok(()))
+            } else {
+                r.pending = next;
+                Advance::Continue
+            }
+        }
+        Err(e) => Advance::Done(Err(e)),
+    }
+}
+
+fn admit_request(backend: &mut dyn StepBackend, active: &mut Vec<Running>, p: Pending) {
+    let admitted = Instant::now();
+    let queue_wait = admitted.saturating_duration_since(p.enqueued);
+    if p.req.prompt.is_empty() {
+        // Matches the historical error path (argmax over no decoded step).
+        let _ = p
+            .reply
+            .send(Err("empty logits (no prompt token was decoded)".into()));
+        return;
+    }
+    if p.req.max_new == 0 {
+        let _ = p.reply.send(Ok(GenResponse {
+            tokens: Vec::new(),
+            queue_wait,
+            decode_time: Duration::ZERO,
+            batch_size: 1,
+        }));
+        return;
+    }
+    match backend.admit() {
+        Ok(slot) => active.push(Running {
+            slot,
+            prompt: p.req.prompt,
+            fed: 0,
+            pos: 0,
+            pending: 0,
+            out: Vec::new(),
+            max_new: p.req.max_new,
+            enqueued: p.enqueued,
+            started: None,
+            max_cobatch: 1,
+            reply: p.reply,
+        }),
+        Err(e) => {
+            let _ = p.reply.send(Err(e));
+        }
+    }
+}
+
+fn finish(r: Running, result: Result<(), String>) {
+    // A sequence only finishes after at least one step, so `started` is
+    // always stamped by then; the fallback is pure defensiveness.
+    let started = r.started.unwrap_or_else(Instant::now);
+    let resp = result.map(|()| GenResponse {
+        tokens: r.out,
+        queue_wait: started.saturating_duration_since(r.enqueued),
+        decode_time: started.elapsed(),
+        batch_size: r.max_cobatch,
+    });
+    let _ = r.reply.send(resp);
+}
+
+fn drain(backend: &mut dyn StepBackend, active: Vec<Running>, msg: &str) {
+    for r in active {
+        backend.retire(r.slot);
+        let _ = r.reply.send(Err(format!(
+            "{msg} while this request was in flight ({} of {} tokens generated)",
+            r.out.len(),
+            r.max_new
+        )));
+    }
+}

@@ -2,8 +2,14 @@
 //!
 //! Protocol: one JSON object per line.
 //! Request  : `{"prompt": [byte ids], "max_new": N}`
-//! Response : `{"tokens": [...], "latency_ms": f, "batch_size": n}`
+//! Response : `{"tokens": [...], "latency_ms": f, "queue_wait_ms": f,
+//!             "decode_ms": f, "batch_size": n}`
 //! Error    : `{"error": "..."}`
+//!
+//! `latency_ms` is always `queue_wait_ms + decode_ms`; the split makes the
+//! continuous-batching behaviour observable per request (a request admitted
+//! mid-flight shows a near-zero queue wait even when other generations were
+//! already running).
 
 use super::batcher::{BatcherConfig, DynamicBatcher, GenRequest};
 use crate::model::ModelExec;
@@ -65,7 +71,9 @@ fn handle_line(batcher: &DynamicBatcher, line: &str) -> String {
                 "tokens",
                 Json::arr(resp.tokens.iter().map(|&t| Json::num(t as f64))),
             ),
-            ("latency_ms", Json::num(resp.latency.as_secs_f64() * 1e3)),
+            ("latency_ms", Json::num(resp.latency().as_secs_f64() * 1e3)),
+            ("queue_wait_ms", Json::num(resp.queue_wait.as_secs_f64() * 1e3)),
+            ("decode_ms", Json::num(resp.decode_time.as_secs_f64() * 1e3)),
             ("batch_size", Json::num(resp.batch_size as f64)),
         ])
         .to_string(),

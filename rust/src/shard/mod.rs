@@ -1,0 +1,38 @@
+//! Sharded pipeline-parallel execution — the second execution topology.
+//!
+//! PR 2–4 made per-layer compute cheap (fused packed GEMV, dispatched SIMD
+//! kernels, quantized KV); the next scaling axis is structural: split the
+//! model's layers across workers and overlap them with in-flight
+//! microbatches. Three pieces, layered:
+//!
+//! * [`ShardPlan`] — contiguous layer ranges balanced by per-layer deployed
+//!   weight bytes, with the embedding pinned to the first shard and the
+//!   final norm + LM head to the last.
+//! * [`ShardedModel`] — a model plus its plan; implements
+//!   [`crate::model::ModelExec`] by delegation so serve, eval and
+//!   `decode_perplexity` accept it anywhere a model goes, and renders the
+//!   per-shard deployment banner.
+//! * [`ShardedDecoder`] — the pipeline executor: one OS thread per shard,
+//!   channel-based activation handoff, shard-local per-sequence KV caches,
+//!   microbatches kept in flight so every shard computes during
+//!   steady-state batched decode. Driven by the step-level scheduler in
+//!   [`crate::serve::sched`].
+//!
+//! Every shard runs the same [`crate::model::decode_layer_step`] /
+//! [`crate::model::decode_head`] primitives as unsharded
+//! [`crate::model::DecodeState`], so sharded decode is **bit-identical** to
+//! single-worker decode by construction — the property
+//! `tests/sharded_exec.rs` locks in across dense, mixed-precision packed
+//! and quantized-KV configurations under both kernel tables.
+//!
+//! This module is also the plug point for the ROADMAP's future
+//! tensor-parallel mode: a tensor-parallel worker would implement the same
+//! admit/retire/step surface the scheduler already drives.
+
+pub mod model;
+pub mod pipeline;
+pub mod plan;
+
+pub use model::ShardedModel;
+pub use pipeline::ShardedDecoder;
+pub use plan::ShardPlan;

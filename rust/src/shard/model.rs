@@ -1,0 +1,161 @@
+//! [`ShardedModel`] — a model plus its shard plan, usable anywhere a
+//! [`ModelExec`] is.
+//!
+//! The wrapper serves two roles:
+//!
+//! * **Drop-in execution.** It implements [`ModelExec`] by delegating to
+//!   the inner model, so `tsgo eval --shards N`, `decode_perplexity`, the
+//!   0-shot suite and every other `ModelExec` consumer run unchanged (and
+//!   trivially bit-identical — same layers, same code path). The pipeline
+//!   topology is only engaged where it pays: steady-state batched decode.
+//! * **Deployment accounting.** It owns the [`ShardPlan`] and renders the
+//!   per-shard banner (layer ranges, weight bytes, KV bytes/token) that
+//!   `tsgo serve|eval --shards N` print, and it mints the
+//!   [`ShardedDecoder`] the serve scheduler drives.
+
+use super::pipeline::ShardedDecoder;
+use super::plan::ShardPlan;
+use crate::model::{KvSpec, ModelConfig, ModelExec};
+use crate::tensor::Matrix;
+use std::sync::Arc;
+
+/// A model split into contiguous layer ranges (see module docs).
+pub struct ShardedModel<M: ModelExec> {
+    inner: Arc<M>,
+    plan: ShardPlan,
+}
+
+impl<M: ModelExec> ShardedModel<M> {
+    /// Plan `n_shards` ranges over `inner` balanced by per-layer weight
+    /// bytes (`n_shards` clamps to the layer count).
+    pub fn new(inner: Arc<M>, n_shards: usize) -> ShardedModel<M> {
+        let plan = ShardPlan::for_model(inner.as_ref(), n_shards);
+        ShardedModel { inner, plan }
+    }
+
+    /// Use a pre-built plan (must cover the model's layers exactly).
+    pub fn with_plan(inner: Arc<M>, plan: ShardPlan) -> ShardedModel<M> {
+        assert_eq!(plan.n_layers(), inner.layers().len(), "plan/model layer mismatch");
+        ShardedModel { inner, plan }
+    }
+
+    pub fn plan(&self) -> &ShardPlan {
+        &self.plan
+    }
+
+    pub fn inner(&self) -> &Arc<M> {
+        &self.inner
+    }
+
+    /// The serve/eval banner: one header plus one line per shard with its
+    /// layer range, pinned extras, deployed weight bytes and KV growth per
+    /// decoded token — the numbers a deployment log needs to see which
+    /// shard is the pipeline bottleneck.
+    pub fn banner_lines(&self, kv: KvSpec) -> Vec<String> {
+        let cfg = self.inner.config();
+        let n = self.plan.n_shards();
+        let mut lines = vec![format!(
+            "sharded execution: {} shard{} over {} layers (pipeline decode, 1 thread/shard, {} KV)",
+            n,
+            if n == 1 { "" } else { "s" },
+            self.plan.n_layers(),
+            kv.effective(cfg).label(),
+        )];
+        for s in 0..n {
+            let (lo, hi) = self.plan.range(s);
+            let extras = match (s == 0, s + 1 == n) {
+                (true, true) => " +embed +head",
+                (true, false) => " +embed",
+                (false, true) => " +head",
+                (false, false) => "",
+            };
+            lines.push(format!(
+                "  shard {s}/{n}: layers {lo}..{hi}{extras}  {:.2} MB weights  {} B/token KV",
+                self.plan.weight_bytes(s) as f64 / 1e6,
+                self.plan.kv_bytes_per_token(s, cfg, kv),
+            ));
+        }
+        lines
+    }
+}
+
+impl<M: ModelExec + Send + Sync + 'static> ShardedModel<M> {
+    /// Spawn the pipeline executor for this plan (one thread per shard).
+    pub fn decoder(&self, kv: KvSpec) -> ShardedDecoder {
+        ShardedDecoder::new(self.inner.clone(), &self.plan, kv)
+    }
+}
+
+impl<M: ModelExec> ModelExec for ShardedModel<M> {
+    type Layer = M::Layer;
+
+    fn config(&self) -> &ModelConfig {
+        self.inner.config()
+    }
+
+    fn embed_row(&self, token: u8) -> &[f32] {
+        self.inner.embed_row(token)
+    }
+
+    fn layers(&self) -> &[M::Layer] {
+        self.inner.layers()
+    }
+
+    fn ln_f(&self) -> &[f32] {
+        self.inner.ln_f()
+    }
+
+    fn apply_head(&self, x: &Matrix) -> Matrix {
+        self.inner.apply_head(x)
+    }
+
+    fn embed_bytes(&self) -> usize {
+        self.inner.embed_bytes()
+    }
+
+    fn head_bytes(&self) -> usize {
+        self.inner.head_bytes()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{forward_logits, ModelWeights, Preset};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn delegation_preserves_logits_and_stats() {
+        let mut rng = Rng::new(9);
+        let w = ModelWeights::init(Preset::Tiny.config(), &mut rng);
+        let tokens: Vec<u8> = (0..10).map(|i| i * 11).collect();
+        let want = forward_logits(&w, &tokens);
+        let sm = ShardedModel::new(Arc::new(w), 2);
+        assert_eq!(sm.plan().n_shards(), 2);
+        let got = forward_logits(&sm, &tokens);
+        for (a, b) in want.data.iter().zip(&got.data) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        // accounting: shard bytes sum to the whole deployed model
+        let total: usize =
+            (0..sm.plan().n_shards()).map(|s| sm.plan().weight_bytes(s)).sum();
+        use crate::model::BlockLinears;
+        let expect: usize = sm.layers().iter().map(|l| l.weight_bytes()).sum::<usize>()
+            + sm.embed_bytes()
+            + sm.head_bytes();
+        assert_eq!(total, expect);
+    }
+
+    #[test]
+    fn banner_names_every_shard_and_extras() {
+        let mut rng = Rng::new(10);
+        let w = ModelWeights::init(Preset::Tiny.config(), &mut rng);
+        let sm = ShardedModel::new(Arc::new(w), 2);
+        let lines = sm.banner_lines(KvSpec::PackedGroupwise { bits: 8, group: 64 });
+        assert_eq!(lines.len(), 3);
+        assert!(lines[0].contains("2 shards"), "{}", lines[0]);
+        assert!(lines[0].contains("int8"), "{}", lines[0]);
+        assert!(lines[1].contains("+embed") && !lines[1].contains("+head"), "{}", lines[1]);
+        assert!(lines[2].contains("+head") && !lines[2].contains("+embed"), "{}", lines[2]);
+    }
+}

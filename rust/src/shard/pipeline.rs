@@ -1,0 +1,274 @@
+//! The pipeline executor: one OS thread per shard, channel-based activation
+//! handoff, shard-local KV caches.
+//!
+//! Topology (for a 3-shard plan):
+//!
+//! ```text
+//! scheduler ──Token{slot,pos,tok}──▶ shard 0 ──Act{slot,pos,h}──▶ shard 1
+//!     ▲        (embed + layers 0..a,  (layers a..b, its KV slice)   │
+//!     │         its KV slice)                                       ▼
+//!     └────────────(slot, logits)◀── shard 2 (layers b.., ln_f + head)
+//! ```
+//!
+//! Each shard thread owns, for every admitted sequence slot, the
+//! [`LayerKv`] pair of each layer in its range — the shard-local half of
+//! that sequence's KV cache. Nothing is shared between shards but the
+//! immutable model (`Arc`) and the channels, so there are no locks on the
+//! decode path.
+//!
+//! **Microbatching / overlap.** A microbatch is one sequence's single-token
+//! activation. [`ShardedDecoder::step`] writes *every* job of the current
+//! scheduler step into the pipe before reading any logits back, so while
+//! sequence `k` runs on shard 0, sequence `k−1` is already on shard 1 —
+//! up to `min(batch, n_shards)` shards compute simultaneously and all
+//! shards stay busy in steady-state decode once the running batch is at
+//! least as deep as the pipeline. Per-channel FIFO plus one thread per
+//! stage makes result order deterministic (= submission order).
+//!
+//! **Bit-identity.** Every shard runs
+//! [`decode_layer_step`]/[`decode_head`] — the *same* functions
+//! [`DecodeState::step`](crate::model::DecodeState) is built from — over
+//! the same layer objects in the same order, so a token stepped through the
+//! pipeline produces bit-identical logits to unsharded decode, for dense,
+//! packed, and quantized-KV configurations alike (tested in
+//! `tests/sharded_exec.rs` under both kernel tables).
+//!
+//! **Shutdown.** Dropping the [`ShardedDecoder`] closes shard 0's input
+//! channel; each worker drains, drops its downstream sender (cascading the
+//! close), and exits; `Drop` then joins every thread — no leaked shard
+//! threads, mirroring `DynamicBatcher`'s own `Drop` contract.
+
+use super::plan::ShardPlan;
+use crate::model::{decode_head, decode_layer_step, KvSpec, LayerKv, ModelExec};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+/// What flows down the pipe. Control packets (`Admit`/`Retire`) travel the
+/// same FIFO as activations, so a shard never sees a `Token`/`Act` for a
+/// slot it hasn't admitted or has already retired.
+enum Packet {
+    /// Allocate fresh shard-local KV caches for `slot`.
+    Admit { slot: usize },
+    /// Free `slot`'s caches (the slot id may be reused by a later `Admit`).
+    Retire { slot: usize },
+    /// A new token for `slot` at position `pos` — consumed by shard 0,
+    /// which embeds it and emits an `Act`.
+    Token { slot: usize, pos: usize, token: u8 },
+    /// A hidden-state activation handed from the previous shard.
+    Act { slot: usize, pos: usize, h: Vec<f32> },
+}
+
+/// Where a shard sends its output: the next shard, or (for the last shard)
+/// the logits channel back to the scheduler.
+enum Downstream {
+    Next(Sender<Packet>),
+    Logits(Sender<(usize, Vec<f32>)>),
+}
+
+/// Handle to a running shard pipeline; owned by the serve scheduler (one
+/// per `DynamicBatcher` worker when `--shards N > 1`).
+pub struct ShardedDecoder {
+    input: Option<Sender<Packet>>,
+    results: Receiver<(usize, Vec<f32>)>,
+    workers: Vec<JoinHandle<()>>,
+    free: Vec<usize>,
+    n_slots: usize,
+    n_shards: usize,
+}
+
+impl ShardedDecoder {
+    /// Spawn one worker thread per shard of `plan` over `model`. `kv` is
+    /// the per-sequence KV representation (each shard quantizes its own
+    /// slice on append, exactly as `DecodeState::with_kv` would).
+    pub fn new<M: ModelExec + Send + Sync + 'static>(
+        model: Arc<M>,
+        plan: &ShardPlan,
+        kv: KvSpec,
+    ) -> ShardedDecoder {
+        assert_eq!(
+            plan.n_layers(),
+            model.layers().len(),
+            "shard plan does not match the model's layer count"
+        );
+        let n = plan.n_shards();
+        let (input_tx, first_rx) = channel::<Packet>();
+        let (res_tx, res_rx) = channel::<(usize, Vec<f32>)>();
+        let mut workers = Vec::with_capacity(n);
+        let mut rx_opt = Some(first_rx);
+        for s in 0..n {
+            let this_rx = rx_opt.take().expect("one receiver per shard");
+            let down = if s + 1 == n {
+                Downstream::Logits(res_tx.clone())
+            } else {
+                let (tx, next_rx) = channel::<Packet>();
+                rx_opt = Some(next_rx);
+                Downstream::Next(tx)
+            };
+            let (lo, hi) = plan.range(s);
+            let m = model.clone();
+            let worker = std::thread::Builder::new()
+                .name(format!("tsgo-shard-{s}"))
+                .spawn(move || run_shard(m, lo, hi, kv, this_rx, down))
+                .expect("spawn shard worker thread");
+            workers.push(worker);
+        }
+        drop(res_tx);
+        ShardedDecoder {
+            input: Some(input_tx),
+            results: res_rx,
+            workers,
+            free: Vec::new(),
+            n_slots: 0,
+            n_shards: n,
+        }
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.n_shards
+    }
+
+    fn send(&self, p: Packet) -> Result<(), String> {
+        self.input
+            .as_ref()
+            .expect("pipeline input open until drop")
+            .send(p)
+            .map_err(|_| "shard pipeline unavailable (a shard worker exited)".to_string())
+    }
+
+    /// Allocate a sequence slot: every shard creates the KV caches for its
+    /// layer range. Slot ids are recycled after [`Self::retire`].
+    pub fn admit(&mut self) -> Result<usize, String> {
+        let slot = self.free.pop().unwrap_or_else(|| {
+            let s = self.n_slots;
+            self.n_slots += 1;
+            s
+        });
+        match self.send(Packet::Admit { slot }) {
+            Ok(()) => Ok(slot),
+            Err(e) => {
+                self.free.push(slot);
+                Err(e)
+            }
+        }
+    }
+
+    /// Free a sequence slot on every shard. The id returns to the free
+    /// list even if the pipe is already dead — a dead pipeline fails every
+    /// later admit/step anyway, and keeping the accounting symmetric with
+    /// [`Self::admit`] means slot ids never leak.
+    pub fn retire(&mut self, slot: usize) {
+        let _ = self.send(Packet::Retire { slot });
+        self.free.push(slot);
+    }
+
+    /// One token step for every job `(slot, pos, token)`: all jobs are fed
+    /// into the pipe before any logits are read back (the microbatch
+    /// overlap described in the module docs); returns each job's
+    /// next-position logits in submission order.
+    pub fn step(&mut self, jobs: &[(usize, usize, u8)]) -> Vec<Result<Vec<f32>, String>> {
+        let mut out: Vec<Result<Vec<f32>, String>> = Vec::with_capacity(jobs.len());
+        let mut sent = 0usize;
+        for &(slot, pos, token) in jobs {
+            if self.send(Packet::Token { slot, pos, token }).is_err() {
+                break;
+            }
+            sent += 1;
+        }
+        for &(want_slot, _, _) in jobs.iter().take(sent) {
+            match self.results.recv() {
+                // FIFO channels + one thread per stage make result order
+                // deterministic; a mismatch means the pipe is corrupt, so
+                // surface it as an error rather than mislabeling logits.
+                Ok((slot, logits)) if slot == want_slot => out.push(Ok(logits)),
+                Ok((slot, _)) => out.push(Err(format!(
+                    "pipeline returned logits for slot {slot} where \
+                     slot {want_slot} was expected"
+                ))),
+                Err(_) => break,
+            }
+        }
+        while out.len() < jobs.len() {
+            out.push(Err("shard pipeline unavailable (a shard worker exited)".into()));
+        }
+        out
+    }
+}
+
+impl Drop for ShardedDecoder {
+    fn drop(&mut self) {
+        // Closing the input cascades: each worker's recv loop ends, its
+        // downstream sender drops, and the next stage drains in turn.
+        drop(self.input.take());
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+/// One shard's worker loop: layers `lo..hi`, plus embedding when `lo == 0`
+/// and the final norm + head when `hi == n_layers`.
+fn run_shard<M: ModelExec>(
+    model: Arc<M>,
+    lo: usize,
+    hi: usize,
+    kv: KvSpec,
+    rx: Receiver<Packet>,
+    down: Downstream,
+) {
+    let cfg = *model.config();
+    // slot → the shard-local half of that sequence's KV cache (one LayerKv
+    // per layer in `lo..hi`).
+    let mut slots: Vec<Option<Vec<LayerKv>>> = Vec::new();
+    while let Ok(pkt) = rx.recv() {
+        let (slot, pos, mut h) = match pkt {
+            Packet::Admit { slot } => {
+                if slots.len() <= slot {
+                    slots.resize_with(slot + 1, || None);
+                }
+                slots[slot] = Some((lo..hi).map(|_| LayerKv::new(kv, &cfg)).collect());
+                if let Downstream::Next(tx) = &down {
+                    if tx.send(Packet::Admit { slot }).is_err() {
+                        return;
+                    }
+                }
+                continue;
+            }
+            Packet::Retire { slot } => {
+                if let Some(s) = slots.get_mut(slot) {
+                    *s = None;
+                }
+                if let Downstream::Next(tx) = &down {
+                    if tx.send(Packet::Retire { slot }).is_err() {
+                        return;
+                    }
+                }
+                continue;
+            }
+            Packet::Token { slot, pos, token } => {
+                debug_assert_eq!(lo, 0, "Token packet reached a non-first shard");
+                (slot, pos, model.embed_row(token).to_vec())
+            }
+            Packet::Act { slot, pos, h } => (slot, pos, h),
+        };
+        let Some(kvs) = slots.get_mut(slot).and_then(|s| s.as_mut()) else {
+            // A step for an unadmitted/retired slot is a scheduler protocol
+            // bug. Dying loudly tears the channel chain down, so the
+            // scheduler sees "pipeline unavailable" errors instead of a
+            // silently dropped packet deadlocking `step()`'s recv.
+            panic!("shard {lo}..{hi}: step for unadmitted slot {slot}");
+        };
+        for (j, li) in (lo..hi).enumerate() {
+            decode_layer_step(&model.layers()[li], &cfg, pos, &mut h, &mut kvs[j]);
+        }
+        let sent = match &down {
+            Downstream::Next(tx) => tx.send(Packet::Act { slot, pos, h }).is_ok(),
+            Downstream::Logits(tx) => {
+                tx.send((slot, decode_head(model.as_ref(), h))).is_ok()
+            }
+        };
+        if !sent {
+            return; // downstream hung up: the pipeline is shutting down
+        }
+    }
+}

@@ -1,0 +1,245 @@
+//! [`ShardPlan`] — how a model's layers are split into contiguous
+//! pipeline-shard ranges.
+//!
+//! The partition is balanced by per-layer **deployed weight bytes**
+//! ([`crate::model::BlockLinears::weight_bytes`]), not layer count: a
+//! mixed-precision checkpoint (`wv,wo=bits4;…`) has unequal layers, and in
+//! steady-state pipeline decode the throughput ceiling is the *slowest*
+//! shard, which on a memory-bound decode is the shard touching the most
+//! weight bytes per token. The embedding table is charged to shard 0 (it
+//! owns token lookup) and the final-norm + LM head to the last shard (it
+//! produces logits), so the planner shifts interior cuts to compensate.
+//!
+//! Exact minimization (not a greedy sweep): layer counts are small, so an
+//! O(shards · layers²) dynamic program over contiguous partitions finds a
+//! split minimizing the max per-shard bytes. Ties break toward the earliest
+//! cut, making the plan deterministic for a given byte profile — the serve
+//! banner, the batcher's internally derived plan, and tests all agree.
+
+use crate::model::{BlockLinears, KvSpec, ModelConfig, ModelExec};
+
+/// Contiguous layer ranges, one per pipeline shard, with the per-shard
+/// weight-byte accounting the banner reports.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ShardPlan {
+    /// Per shard: `[start, end)` layer indices. Concatenated they cover
+    /// `0..n_layers` exactly; every shard holds at least one layer.
+    ranges: Vec<(usize, usize)>,
+    /// Per shard: deployed weight bytes (its layers, plus the embedding on
+    /// shard 0 and final-norm+head on the last shard).
+    weight_bytes: Vec<usize>,
+}
+
+impl ShardPlan {
+    /// Balance `layer_bytes.len()` layers over `n_shards` contiguous ranges
+    /// minimizing the max per-shard bytes, with `embed_bytes` pinned to the
+    /// first range and `head_bytes` to the last. `n_shards` is clamped to
+    /// `1..=n_layers` (every shard must own at least one layer).
+    pub fn balance(
+        layer_bytes: &[usize],
+        embed_bytes: usize,
+        head_bytes: usize,
+        n_shards: usize,
+    ) -> ShardPlan {
+        let n_layers = layer_bytes.len();
+        assert!(n_layers > 0, "cannot shard a model with no layers");
+        let s = n_shards.clamp(1, n_layers);
+        let mut prefix = vec![0usize; n_layers + 1];
+        for (i, &b) in layer_bytes.iter().enumerate() {
+            prefix[i + 1] = prefix[i] + b;
+        }
+        let seg = |i: usize, j: usize| prefix[j] - prefix[i];
+
+        if s == 1 {
+            return ShardPlan {
+                ranges: vec![(0, n_layers)],
+                weight_bytes: vec![seg(0, n_layers) + embed_bytes + head_bytes],
+            };
+        }
+
+        // dp[k][j]: minimal achievable max-shard-bytes splitting the first
+        // `j` layers into `k` shards (shard 0 carrying the embedding; the
+        // head is folded in at the final selection below, where the last
+        // segment is known). cut[k][j] records the split producing it.
+        const INF: usize = usize::MAX;
+        let mut dp = vec![vec![INF; n_layers + 1]; s + 1];
+        let mut cut = vec![vec![0usize; n_layers + 1]; s + 1];
+        for j in 1..=n_layers {
+            dp[1][j] = seg(0, j) + embed_bytes;
+        }
+        for k in 2..=s {
+            for j in k..=n_layers {
+                for i in (k - 1)..j {
+                    if dp[k - 1][i] == INF {
+                        continue;
+                    }
+                    let cost = dp[k - 1][i].max(seg(i, j));
+                    if cost < dp[k][j] {
+                        dp[k][j] = cost;
+                        cut[k][j] = i;
+                    }
+                }
+            }
+        }
+        let (mut best_cost, mut best_i) = (INF, s - 1);
+        for i in (s - 1)..n_layers {
+            if dp[s - 1][i] == INF {
+                continue;
+            }
+            let cost = dp[s - 1][i].max(seg(i, n_layers) + head_bytes);
+            if cost < best_cost {
+                best_cost = cost;
+                best_i = i;
+            }
+        }
+        // Reconstruct the cut positions right-to-left.
+        let mut bounds = vec![n_layers, best_i];
+        let mut j = best_i;
+        for k in (2..s).rev() {
+            j = cut[k][j];
+            bounds.push(j);
+        }
+        bounds.push(0);
+        bounds.reverse();
+        let ranges: Vec<(usize, usize)> =
+            bounds.windows(2).map(|w| (w[0], w[1])).collect();
+        let weight_bytes = ranges
+            .iter()
+            .enumerate()
+            .map(|(k, &(lo, hi))| {
+                let mut b = seg(lo, hi);
+                if k == 0 {
+                    b += embed_bytes;
+                }
+                if k + 1 == ranges.len() {
+                    b += head_bytes;
+                }
+                b
+            })
+            .collect();
+        ShardPlan { ranges, weight_bytes }
+    }
+
+    /// Balance a model's layers directly from its deployed representation.
+    pub fn for_model<M: ModelExec>(m: &M, n_shards: usize) -> ShardPlan {
+        let layer_bytes: Vec<usize> =
+            m.layers().iter().map(|l| l.weight_bytes()).collect();
+        ShardPlan::balance(&layer_bytes, m.embed_bytes(), m.head_bytes(), n_shards)
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.ranges.len()
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.ranges.last().map(|&(_, hi)| hi).unwrap_or(0)
+    }
+
+    /// `[start, end)` layer range of shard `s`.
+    pub fn range(&self, s: usize) -> (usize, usize) {
+        self.ranges[s]
+    }
+
+    pub fn ranges(&self) -> &[(usize, usize)] {
+        &self.ranges
+    }
+
+    /// Deployed weight bytes held by shard `s` (incl. embed/head extras).
+    pub fn weight_bytes(&self, s: usize) -> usize {
+        self.weight_bytes[s]
+    }
+
+    /// The steady-state pipeline bottleneck: the heaviest shard's bytes.
+    pub fn max_shard_bytes(&self) -> usize {
+        self.weight_bytes.iter().copied().max().unwrap_or(0)
+    }
+
+    /// KV-cache bytes appended per decoded token by shard `s` (K+V for each
+    /// of its layers, in the effective representation) — each shard owns the
+    /// shard-local slice of every sequence's cache, so this is *its* growth
+    /// rate, not the model's.
+    pub fn kv_bytes_per_token(&self, s: usize, cfg: &ModelConfig, kv: KvSpec) -> usize {
+        let (lo, hi) = self.ranges[s];
+        (hi - lo) * kv.effective(cfg).bytes_per_token(cfg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cover_invariants(p: &ShardPlan, n_layers: usize) {
+        assert_eq!(p.n_layers(), n_layers);
+        let mut expect = 0;
+        for s in 0..p.n_shards() {
+            let (lo, hi) = p.range(s);
+            assert_eq!(lo, expect, "ranges not contiguous");
+            assert!(hi > lo, "empty shard");
+            expect = hi;
+        }
+        assert_eq!(expect, n_layers);
+    }
+
+    #[test]
+    fn uniform_layers_split_evenly() {
+        let p = ShardPlan::balance(&[100; 6], 0, 0, 3);
+        cover_invariants(&p, 6);
+        assert_eq!(p.ranges(), &[(0, 2), (2, 4), (4, 6)]);
+        assert_eq!(p.max_shard_bytes(), 200);
+    }
+
+    #[test]
+    fn shard_count_clamps_to_layer_count() {
+        let p = ShardPlan::balance(&[10, 20], 0, 0, 8);
+        assert_eq!(p.n_shards(), 2);
+        cover_invariants(&p, 2);
+        let p1 = ShardPlan::balance(&[10, 20, 30], 5, 7, 0);
+        assert_eq!(p1.n_shards(), 1);
+        assert_eq!(p1.weight_bytes(0), 60 + 5 + 7);
+    }
+
+    #[test]
+    fn embed_and_head_shift_the_cuts() {
+        // Without extras, 4×100 over 2 shards splits 2+2. A heavy embedding
+        // must push the first cut earlier so shard 0 isn't the bottleneck.
+        let even = ShardPlan::balance(&[100; 4], 0, 0, 2);
+        assert_eq!(even.ranges(), &[(0, 2), (2, 4)]);
+        let heavy_embed = ShardPlan::balance(&[100; 4], 150, 0, 2);
+        assert_eq!(heavy_embed.ranges(), &[(0, 1), (1, 4)]);
+        assert_eq!(heavy_embed.weight_bytes(0), 250);
+        let heavy_head = ShardPlan::balance(&[100; 4], 0, 150, 2);
+        assert_eq!(heavy_head.ranges(), &[(0, 3), (3, 4)]);
+    }
+
+    #[test]
+    fn minimizes_max_shard_bytes_exactly() {
+        // Greedy front-loading would split [90,10,10,90] as (0,1)(1,4)=110;
+        // the DP must find (0,2)(2,4)=100.
+        let p = ShardPlan::balance(&[90, 10, 10, 90], 0, 0, 2);
+        assert_eq!(p.ranges(), &[(0, 2), (2, 4)]);
+        assert_eq!(p.max_shard_bytes(), 100);
+        // and a 3-way case: the heavy layer gets isolated on its own shard
+        let p3 = ShardPlan::balance(&[10, 200, 10, 10, 10], 0, 0, 3);
+        cover_invariants(&p3, 5);
+        assert_eq!(p3.max_shard_bytes(), 200);
+        assert!(p3.ranges().contains(&(1, 2)), "{:?}", p3.ranges());
+    }
+
+    #[test]
+    fn kv_accounting_is_per_shard_layers() {
+        use crate::model::Preset;
+        let cfg = Preset::Tiny.config(); // 2 layers
+        let p = ShardPlan::balance(&[100, 100], 0, 0, 2);
+        let kv = KvSpec::DenseF32;
+        let per_layer = kv.bytes_per_token(&cfg);
+        assert_eq!(p.kv_bytes_per_token(0, &cfg, kv), per_layer);
+        assert_eq!(p.kv_bytes_per_token(1, &cfg, kv), per_layer);
+    }
+
+    #[test]
+    fn deterministic_for_equal_profiles() {
+        let a = ShardPlan::balance(&[64, 64, 64, 64, 64], 10, 10, 2);
+        let b = ShardPlan::balance(&[64, 64, 64, 64, 64], 10, 10, 2);
+        assert_eq!(a, b);
+    }
+}

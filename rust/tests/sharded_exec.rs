@@ -1,0 +1,331 @@
+//! Sharded pipeline-parallel execution: the PR-5 acceptance battery.
+//!
+//! * logits **bit-identical** between `--shards {1,2,3}` pipeline decode and
+//!   unsharded [`DecodeState`] on dense, mixed 2/3/4/8-bit packed, and
+//!   int8-KV configurations — under the dispatched *and* the forced-scalar
+//!   kernel tables;
+//! * the step-level scheduler admits mid-flight: a late short request
+//!   completes before an earlier long generation finishes;
+//! * serve e2e over `--shards 2`;
+//! * shutdown: dropping a (sharded) batcher joins every worker thread.
+
+use std::sync::mpsc::channel;
+use std::sync::{Arc, Mutex, MutexGuard, OnceLock};
+use std::time::{Duration, Instant};
+use tsgo::calib::{calibration_batches, Corpus, CorpusKind};
+use tsgo::model::{DecodeState, ExecModel, KvSpec, ModelConfig, ModelExec, ModelWeights};
+use tsgo::pipeline::{quantize_model, PipelineConfig};
+use tsgo::quant::QuantPlan;
+use tsgo::serve::{
+    argmax_token, request_generation, server::serve_in_background, BatcherConfig,
+    DynamicBatcher, GenRequest, ServerConfig,
+};
+use tsgo::shard::{ShardPlan, ShardedModel};
+use tsgo::tensor::kernels::{set_forced, ForcedKernel};
+use tsgo::util::rng::Rng;
+
+/// Serializes tests that flip the process-wide forced-kernel state (same
+/// rationale as the lock in `tests/kv_cache.rs`): a concurrent flip
+/// mid-decode would make a real scalar/SIMD divergence nondeterministic.
+fn force_lock() -> MutexGuard<'static, ()> {
+    static L: OnceLock<Mutex<()>> = OnceLock::new();
+    L.get_or_init(|| Mutex::new(()))
+        .lock()
+        .unwrap_or_else(|e| e.into_inner())
+}
+
+/// A 4-layer tiny-width config so a 3-shard plan is a real split
+/// (the tiny preset's 2 layers would clamp `--shards 3` down to 2).
+fn cfg4() -> ModelConfig {
+    ModelConfig { vocab: 256, d_model: 64, n_layers: 4, n_heads: 2, ffn: 128, seq_len: 64 }
+}
+
+fn dense4(seed: u64) -> ModelWeights {
+    let mut rng = Rng::new(seed);
+    ModelWeights::init(cfg4(), &mut rng)
+}
+
+/// Mixed-precision packed model over the 4-layer config: every specialized
+/// dequant width (2/3/4/8-bit) in one checkpoint, executed packed.
+fn mixed_packed4() -> ExecModel {
+    let w = dense4(77);
+    let corpus = Corpus::generate(CorpusKind::SynthWiki, 30_000, 1);
+    let calib = calibration_batches(&corpus.bytes, 4, 32, 2, 3);
+    let plan = QuantPlan::parse_with_defaults(
+        "rtn:bits=2,group=32;wv=bits3;wo=bits4;w2=bits8",
+        4,
+        32,
+    )
+    .unwrap();
+    let (qm, _) = quantize_model(&w, &calib, &PipelineConfig::from_plan(plan)).unwrap();
+    ExecModel::from_quantized(&qm)
+}
+
+/// Step `tokens` through an `n_shards` pipeline and assert every position's
+/// logits are bit-identical to an unsharded [`DecodeState`] decode.
+fn assert_pipeline_bit_identical<M: ModelExec + Send + Sync + 'static>(
+    model: Arc<M>,
+    n_shards: usize,
+    kv: KvSpec,
+    tokens: &[u8],
+    label: &str,
+) {
+    let mut st = DecodeState::with_kv(model.as_ref(), kv);
+    let sm = ShardedModel::new(model.clone(), n_shards);
+    let mut dec = sm.decoder(kv);
+    let slot = dec.admit().unwrap();
+    for (pos, &tok) in tokens.iter().enumerate() {
+        let want = st.step(tok);
+        let got = dec.step(&[(slot, pos, tok)]);
+        assert_eq!(got.len(), 1);
+        let got = got[0].as_ref().expect("pipeline step failed");
+        assert_eq!(got.len(), want.len(), "{label}: logit width");
+        for (i, (a, b)) in got.iter().zip(&want).enumerate() {
+            assert_eq!(
+                a.to_bits(),
+                b.to_bits(),
+                "{label}: shards={n_shards} pos={pos} logit {i}: {a} vs {b}"
+            );
+        }
+    }
+    dec.retire(slot);
+}
+
+#[test]
+fn pipeline_logits_bit_identical_across_shard_counts_and_configs() {
+    let _guard = force_lock();
+    let dense = Arc::new(dense4(11));
+    let packed = Arc::new(mixed_packed4());
+    let tokens: Vec<u8> = vec![3, 141, 59, 26, 53, 58, 97, 93, 23, 84];
+    let kv8 = KvSpec::PackedGroupwise { bits: 8, group: 64 };
+    for force in [ForcedKernel::Scalar, ForcedKernel::Best] {
+        set_forced(force);
+        for shards in [1usize, 2, 3] {
+            assert_pipeline_bit_identical(
+                dense.clone(),
+                shards,
+                KvSpec::DenseF32,
+                &tokens,
+                &format!("dense f32-KV under {force:?}"),
+            );
+            assert_pipeline_bit_identical(
+                packed.clone(),
+                shards,
+                KvSpec::DenseF32,
+                &tokens,
+                &format!("mixed-packed f32-KV under {force:?}"),
+            );
+            assert_pipeline_bit_identical(
+                packed.clone(),
+                shards,
+                kv8,
+                &tokens,
+                &format!("mixed-packed int8-KV under {force:?}"),
+            );
+        }
+    }
+    set_forced(ForcedKernel::Auto);
+}
+
+#[test]
+fn pipeline_isolates_concurrent_sequences() {
+    // Bit-exact comparison: hold the lock so the forcing test can't flip
+    // the kernel table between the reference and pipeline steps.
+    let _guard = force_lock();
+    // Two slots stepped as one microbatched job list must track two
+    // independent DecodeStates exactly — per-slot, per-shard KV isolation.
+    let model = Arc::new(dense4(12));
+    let sm = ShardedModel::new(model.clone(), 2);
+    let mut dec = sm.decoder(KvSpec::DenseF32);
+    let s0 = dec.admit().unwrap();
+    let s1 = dec.admit().unwrap();
+    assert_ne!(s0, s1);
+    let mut ref0 = DecodeState::new(model.as_ref());
+    let mut ref1 = DecodeState::new(model.as_ref());
+    let seq0: Vec<u8> = vec![10, 20, 30, 40, 50, 60];
+    let seq1: Vec<u8> = vec![200, 150, 100, 50, 25, 12];
+    for pos in 0..seq0.len() {
+        let want0 = ref0.step(seq0[pos]);
+        let want1 = ref1.step(seq1[pos]);
+        let got = dec.step(&[(s0, pos, seq0[pos]), (s1, pos, seq1[pos])]);
+        let g0 = got[0].as_ref().unwrap();
+        let g1 = got[1].as_ref().unwrap();
+        assert!(g0.iter().zip(&want0).all(|(a, b)| a.to_bits() == b.to_bits()));
+        assert!(g1.iter().zip(&want1).all(|(a, b)| a.to_bits() == b.to_bits()));
+    }
+    // retire one and admit a fresh sequence into the recycled slot: it must
+    // start from an empty cache, not the retired sequence's history.
+    dec.retire(s0);
+    let s2 = dec.admit().unwrap();
+    let mut ref2 = DecodeState::new(model.as_ref());
+    let want = ref2.step(99);
+    let got = dec.step(&[(s2, 0, 99)]);
+    let fresh = got[0].as_ref().unwrap();
+    assert!(fresh.iter().zip(&want).all(|(a, b)| a.to_bits() == b.to_bits()));
+}
+
+#[test]
+fn sharded_model_delegates_decode_perplexity() {
+    // Bit-exact comparison — serialize against the kernel-forcing test.
+    let _guard = force_lock();
+    // ShardedModel anywhere a ModelExec goes: decode_perplexity through the
+    // wrapper equals the inner model's bit for bit (same code path).
+    let model = Arc::new(dense4(13));
+    let sm = ShardedModel::new(model.clone(), 3);
+    let corpus = Corpus::generate(CorpusKind::SynthWiki, 4_000, 6);
+    let kv = KvSpec::DenseF32;
+    let a = tsgo::eval::decode_perplexity(model.as_ref(), &corpus.bytes, 32, 2, kv);
+    let b = tsgo::eval::decode_perplexity(&sm, &corpus.bytes, 32, 2, kv);
+    assert_eq!(a.to_bits(), b.to_bits());
+}
+
+#[test]
+fn plan_for_mixed_precision_balances_bytes_not_layers() {
+    // The mixed checkpoint's layers have unequal footprints; the plan must
+    // cover all layers contiguously and its per-shard byte spread must be
+    // no worse than the layer-count split's.
+    let em = mixed_packed4();
+    let plan = ShardPlan::for_model(&em, 2);
+    assert_eq!(plan.n_shards(), 2);
+    assert_eq!(plan.n_layers(), 4);
+    use tsgo::model::BlockLinears;
+    let total: usize = em.layers().iter().map(|l| l.weight_bytes()).sum::<usize>()
+        + em.embed_bytes()
+        + em.head_bytes();
+    assert_eq!(plan.weight_bytes(0) + plan.weight_bytes(1), total);
+}
+
+#[test]
+fn late_short_request_completes_before_long_generation() {
+    // The admission-stall fix, end to end: a long generation is mid-flight;
+    // a short request arriving afterwards must join the running batch (not
+    // wait for the long one) and finish first.
+    let m = Arc::new(dense4(14));
+    let b = Arc::new(DynamicBatcher::spawn(
+        m,
+        BatcherConfig {
+            max_batch: 4,
+            max_wait: Duration::from_millis(1),
+            ..Default::default()
+        },
+    ));
+    let (done_tx, done_rx) = channel::<(&'static str, Instant)>();
+    let long = {
+        let (b, tx) = (b.clone(), done_tx.clone());
+        std::thread::spawn(move || {
+            let r = b
+                .generate(GenRequest { prompt: vec![5, 6, 7], max_new: 4000 })
+                .unwrap();
+            tx.send(("long", Instant::now())).unwrap();
+            r
+        })
+    };
+    // let the long generation get well into decode before the short arrives
+    std::thread::sleep(Duration::from_millis(10));
+    let short = {
+        let (b, tx) = (b.clone(), done_tx.clone());
+        std::thread::spawn(move || {
+            let r = b.generate(GenRequest { prompt: vec![9, 9], max_new: 2 }).unwrap();
+            tx.send(("short", Instant::now())).unwrap();
+            r
+        })
+    };
+    let (first, _) = done_rx.recv().unwrap();
+    assert_eq!(
+        first, "short",
+        "short request did not overtake the in-flight long generation"
+    );
+    let short_resp = short.join().unwrap();
+    let long_resp = long.join().unwrap();
+    assert_eq!(short_resp.tokens.len(), 2);
+    assert_eq!(long_resp.tokens.len(), 4000);
+    // co-running proves mid-flight admission (it would be 1 under the old
+    // whole-batch scheduler, which only batched requests that arrived
+    // together within max_wait)
+    assert!(
+        short_resp.batch_size >= 2,
+        "short request never shared a step with the long one \
+         (batch_size {}); was it queued behind the whole generation?",
+        short_resp.batch_size
+    );
+    // and the split metric shows it barely queued: admission happened
+    // mid-flight, not after the long generation's ~4000 steps
+    assert!(
+        short_resp.queue_wait < long_resp.decode_time,
+        "queue_wait {:?} vs long decode {:?}",
+        short_resp.queue_wait,
+        long_resp.decode_time
+    );
+}
+
+#[test]
+fn sharded_batcher_tokens_match_unsharded() {
+    let _guard = force_lock();
+    let m = Arc::new(mixed_packed4());
+    let req = GenRequest { prompt: vec![65, 66, 67, 68], max_new: 12 };
+    let unsharded = DynamicBatcher::spawn(m.clone(), BatcherConfig::default());
+    let a = unsharded.generate(req.clone()).unwrap();
+    for shards in [2usize, 3] {
+        let sharded = DynamicBatcher::spawn(
+            m.clone(),
+            BatcherConfig { shards, ..Default::default() },
+        );
+        let b = sharded.generate(req.clone()).unwrap();
+        assert_eq!(a.tokens, b.tokens, "shards={shards} diverged from unsharded");
+    }
+}
+
+#[test]
+fn serve_e2e_with_two_shards() {
+    let _guard = force_lock();
+    // `tsgo serve --packed --kv-bits 8 --shards 2` in miniature: the full
+    // TCP + scheduler + pipeline stack, tokens equal to a direct decode.
+    let em = Arc::new(mixed_packed4());
+    let kv = KvSpec::PackedGroupwise { bits: 8, group: 64 };
+    let prompt = [65u8, 66, 67];
+    let want = {
+        let mut st = DecodeState::with_kv(em.as_ref(), kv);
+        let mut logits = Vec::new();
+        for &t in &prompt {
+            logits = st.step(t);
+        }
+        let mut out = Vec::new();
+        for _ in 0..6 {
+            let next = argmax_token(&logits).unwrap();
+            out.push(next);
+            logits = st.step(next);
+        }
+        out
+    };
+    let cfg = ServerConfig {
+        addr: "127.0.0.1:0".into(),
+        batcher: BatcherConfig { kv, shards: 2, ..Default::default() },
+        max_connections: Some(2),
+    };
+    let sm = Arc::new(ShardedModel::new(em, 2));
+    let (addr, handle) = serve_in_background(sm, cfg).unwrap();
+    let a = request_generation(&addr.to_string(), &prompt, 6).unwrap();
+    assert_eq!(a.tokens, want, "served sharded tokens diverged from direct decode");
+    assert!(a.latency_ms > 0.0);
+    assert!((a.queue_wait_ms + a.decode_ms - a.latency_ms).abs() < 1e-6);
+    let b = request_generation(&addr.to_string(), &prompt, 6).unwrap();
+    assert_eq!(a.tokens, b.tokens, "sharded serving must stay deterministic");
+    handle.join().unwrap();
+}
+
+#[test]
+fn dropping_a_sharded_batcher_joins_all_threads() {
+    // Shutdown satellite: batcher Drop must close the queue, join the
+    // scheduler, and (transitively) join every shard thread — repeated
+    // cycles must neither hang nor error.
+    let m = Arc::new(dense4(15));
+    for _ in 0..4 {
+        let b = DynamicBatcher::spawn(
+            m.clone(),
+            BatcherConfig { shards: 3, ..Default::default() },
+        );
+        let r = b.generate(GenRequest { prompt: vec![1, 2, 3], max_new: 3 }).unwrap();
+        assert_eq!(r.tokens.len(), 3);
+        drop(b);
+    }
+}
