@@ -10,8 +10,10 @@
 //! * prefill GEMM scaling with batch size (the two-level blocking means
 //!   throughput keeps climbing past the activation row count);
 //! * end-to-end KV-cached decode tokens/s, dense [`ExecModel`] vs packed,
-//!   plus batch-1 pipeline decode at 1/2/4 shards (the per-step handoff
-//!   overhead floor; batched shard scaling lives in the serving bench).
+//!   paged-pool vs contiguous KV, plus batch-1 pipeline decode at 1/2/4
+//!   shards (the per-step handoff overhead floor; batched shard scaling
+//!   lives in the serving bench) — and a constrained-pool serving pass
+//!   that records the preemption rate under deliberate memory pressure.
 //!
 //! Besides the human-readable tables, the run emits a machine-readable
 //! baseline to `BENCH_packed_gemv.json` (override with `TSGO_BENCH_JSON`)
@@ -22,10 +24,13 @@
 //! root, which drops the JSON next to this README).
 
 use std::collections::BTreeMap;
+use std::sync::Arc;
+use tsgo::kvpool::{KvPool, PoolCfg};
 use tsgo::model::{DecodeState, ExecModel, KvSpec, ModelWeights, Preset};
 use tsgo::quant::rtn::rtn_quantize;
 use tsgo::quant::scale::{compute_group_scales, QuantSpec, ScaleMetric};
 use tsgo::quant::QuantizedLinear;
+use tsgo::serve::{BatcherConfig, DynamicBatcher, GenRequest};
 use tsgo::shard::ShardedModel;
 use tsgo::tensor::kernels::{self, ForcedKernel};
 use tsgo::tensor::Matrix;
@@ -261,6 +266,67 @@ fn main() {
             std::hint::black_box(run_decode(&packed, kv4));
         },
     );
+    // Paged KV (`--kv-pool-mb`): the same decode loop with pages drawn from
+    // an ample shared pool — the page-table indirection priced against the
+    // contiguous cache above (same bytes, same kernels; pages recycle
+    // across iterations so steady-state allocation is free-list pops).
+    let page_pool = KvPool::new(
+        PoolCfg { budget_bytes: 4 << 20, page_tokens: PoolCfg::DEFAULT_PAGE_TOKENS },
+        KvSpec::DenseF32,
+        &cfg,
+    );
+    let m_decode_paged = bench_units(
+        &format!("decode {decode_tokens} tok · packed INT2 + paged KV (tiny)"),
+        1,
+        iters.min(10),
+        Some(decode_tokens as f64),
+        &mut || {
+            let mut st = DecodeState::with_kv_pool(&packed, KvSpec::DenseF32, Some(&page_pool));
+            let mut logits = st.step(65);
+            for _ in 1..decode_tokens {
+                let next = tsgo::serve::argmax_token(&logits).unwrap();
+                logits = st.step(next);
+            }
+            std::hint::black_box(logits);
+        },
+    );
+    // Constrained-pool serving: a budget deliberately below the client
+    // batch's aggregate KV demand, so the scheduler must preempt and
+    // re-prefill (correctness is locked in by tests/kv_pool.rs; this
+    // records the *rate* for the JSON baseline).
+    let (pool_preempt_rate, pool_peak_pages, pool_total_pages) = {
+        let m = Arc::new(qm.weights.clone());
+        let kv = KvSpec::DenseF32;
+        let probe = KvPool::new(PoolCfg { budget_bytes: 1 << 30, page_tokens: 4 }, kv, &cfg);
+        let total_pages = 20usize;
+        let pc = PoolCfg { budget_bytes: total_pages * probe.page_bytes(), page_tokens: 4 };
+        let b = Arc::new(DynamicBatcher::spawn(
+            m,
+            BatcherConfig {
+                max_batch: 4,
+                max_wait: std::time::Duration::from_millis(100),
+                kv,
+                pool: Some(pc),
+                ..Default::default()
+            },
+        ));
+        let joins: Vec<_> = (0..4u8)
+            .map(|i| {
+                let b = b.clone();
+                std::thread::spawn(move || {
+                    b.generate(GenRequest {
+                        prompt: vec![i * 31, i * 31 + 5, 7, 11],
+                        max_new: 12,
+                    })
+                    .unwrap()
+                })
+            })
+            .collect();
+        let rs: Vec<_> = joins.into_iter().map(|j| j.join().unwrap()).collect();
+        let preemptions: usize = rs.iter().map(|r| r.preemptions).sum();
+        let peak = rs.iter().map(|r| r.kv_pages_used).max().unwrap_or(0);
+        (preemptions as f64 / rs.len() as f64, peak, total_pages)
+    };
     // -- sharded pipeline decode (`--shards N`) -----------------------------
     // On the Small preset (4 layers) so 2- and 4-shard plans are distinct.
     // Batch-1 decode cannot overlap microbatches, so these rows price the
@@ -299,6 +365,7 @@ fn main() {
     ms.push(m_decode_packed.clone());
     ms.push(m_decode_kv8.clone());
     ms.push(m_decode_kv4.clone());
+    ms.push(m_decode_paged.clone());
     for (_, m) in &shard_rows {
         ms.push(m.clone());
     }
@@ -331,6 +398,10 @@ fn main() {
     bytes.print("weight bytes touched per full application");
     println!("\nthroughput column: activation rows (tokens) per second.");
     println!("kernel dispatch under test: {dispatch_under_test}");
+    println!(
+        "constrained kv pool ({pool_total_pages} pages x 4 tok): \
+         {pool_preempt_rate:.2} preemptions/request, peak {pool_peak_pages} pages/seq"
+    );
 
     // -- machine-readable baseline ------------------------------------------
     let report = Json::obj(vec![
@@ -382,6 +453,10 @@ fn main() {
                         "packed_int2_kv4_tokens_per_s",
                         Json::num(m_decode_kv4.throughput().unwrap_or(0.0)),
                     ),
+                    (
+                        "packed_int2_paged_tokens_per_s",
+                        Json::num(m_decode_paged.throughput().unwrap_or(0.0)),
+                    ),
                 ];
                 // sharded pipeline decode rows (small preset, batch 1);
                 // covered by bench_check like every other decode row
@@ -396,6 +471,17 @@ fn main() {
                 }
                 rows
             }),
+        ),
+        // constrained-pool serving under deliberate KV-memory pressure:
+        // rate rows, not throughput — bench_check leaves them advisory
+        (
+            "pool",
+            Json::obj(vec![
+                ("page_tokens", Json::num(4.0)),
+                ("total_pages", Json::num(pool_total_pages as f64)),
+                ("preemptions_per_request", Json::num(pool_preempt_rate)),
+                ("peak_pages_per_seq", Json::num(pool_peak_pages as f64)),
+            ]),
         ),
         (
             "kv",

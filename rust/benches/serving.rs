@@ -7,13 +7,54 @@
 
 use std::sync::Arc;
 use tsgo::calib::{calibration_batches, Corpus, CorpusKind};
+use tsgo::kvpool::{KvPool, PoolCfg};
 use tsgo::model::{ExecModel, KvSpec, ModelExec, ModelWeights, Preset};
 use tsgo::pipeline::{quantize_model, PipelineConfig};
 use tsgo::quant::QuantSpec;
+use tsgo::serve::client::ClientResponse;
 use tsgo::serve::server::serve_in_background;
 use tsgo::serve::{request_generation, BatcherConfig, ServerConfig};
 use tsgo::util::bench::Table;
 use tsgo::util::rng::Rng;
+
+/// Serve `weights` with the given batcher config, drive it with `clients`
+/// concurrent connections, and return (responses, wall seconds).
+fn run_server<M: ModelExec + Send + Sync + 'static>(
+    weights: Arc<M>,
+    clients: usize,
+    max_new: usize,
+    batcher: BatcherConfig,
+) -> (Vec<ClientResponse>, f64) {
+    let cfg = ServerConfig {
+        addr: "127.0.0.1:0".into(),
+        batcher,
+        max_connections: Some(clients),
+    };
+    let (addr, handle) = serve_in_background(weights, cfg).unwrap();
+    let corpus = Corpus::generate(CorpusKind::SynthWiki, 50_000, 11);
+    let t0 = std::time::Instant::now();
+    let joins: Vec<_> = (0..clients)
+        .map(|i| {
+            let addr = addr.to_string();
+            let prompt = corpus.bytes[i * 64..i * 64 + 16].to_vec();
+            std::thread::spawn(move || request_generation(&addr, &prompt, max_new).unwrap())
+        })
+        .collect();
+    let responses: Vec<_> = joins.into_iter().map(|j| j.join().unwrap()).collect();
+    let wall = t0.elapsed().as_secs_f64();
+    handle.join().unwrap();
+    (responses, wall)
+}
+
+fn percentiles(responses: &[ClientResponse], wall: f64) -> (f64, f64, f64) {
+    let lat: Vec<f64> = responses.iter().map(|r| r.latency_ms).collect();
+    let toks: usize = responses.iter().map(|r| r.tokens.len()).sum();
+    (
+        toks as f64 / wall,
+        tsgo::util::percentile(&lat, 50.0),
+        tsgo::util::percentile(&lat, 95.0),
+    )
+}
 
 fn measure<M: ModelExec + Send + Sync + 'static>(
     weights: Arc<M>,
@@ -31,38 +72,33 @@ fn measure_sharded<M: ModelExec + Send + Sync + 'static>(
     kv: KvSpec,
     shards: usize,
 ) -> (f64, f64, f64, usize) {
-    let cfg = ServerConfig {
-        addr: "127.0.0.1:0".into(),
-        batcher: BatcherConfig {
-            max_batch: clients.max(1),
-            kv,
-            shards,
-            ..Default::default()
-        },
-        max_connections: Some(clients),
-    };
-    let (addr, handle) = serve_in_background(weights, cfg).unwrap();
-    let corpus = Corpus::generate(CorpusKind::SynthWiki, 50_000, 11);
-    let t0 = std::time::Instant::now();
-    let joins: Vec<_> = (0..clients)
-        .map(|i| {
-            let addr = addr.to_string();
-            let prompt = corpus.bytes[i * 64..i * 64 + 16].to_vec();
-            std::thread::spawn(move || request_generation(&addr, &prompt, max_new).unwrap())
-        })
-        .collect();
-    let responses: Vec<_> = joins.into_iter().map(|j| j.join().unwrap()).collect();
-    let wall = t0.elapsed().as_secs_f64();
-    handle.join().unwrap();
-    let lat: Vec<f64> = responses.iter().map(|r| r.latency_ms).collect();
-    let toks: usize = responses.iter().map(|r| r.tokens.len()).sum();
+    let batcher = BatcherConfig { max_batch: clients.max(1), kv, shards, ..Default::default() };
+    let (responses, wall) = run_server(weights, clients, max_new, batcher);
+    let (tps, p50, p95) = percentiles(&responses, wall);
     let maxb = responses.iter().map(|r| r.batch_size).max().unwrap_or(1);
-    (
-        toks as f64 / wall,
-        tsgo::util::percentile(&lat, 50.0),
-        tsgo::util::percentile(&lat, 95.0),
-        maxb,
-    )
+    (tps, p50, p95, maxb)
+}
+
+/// Constrained-pool variant (`--kv-pool-mb`): same drive, plus the
+/// preemption total and per-sequence peak page count from the responses.
+fn measure_pooled<M: ModelExec + Send + Sync + 'static>(
+    weights: Arc<M>,
+    clients: usize,
+    max_new: usize,
+    kv: KvSpec,
+    pool: PoolCfg,
+) -> (f64, f64, f64, usize, usize) {
+    let batcher = BatcherConfig {
+        max_batch: clients.max(1),
+        kv,
+        pool: Some(pool),
+        ..Default::default()
+    };
+    let (responses, wall) = run_server(weights, clients, max_new, batcher);
+    let (tps, p50, p95) = percentiles(&responses, wall);
+    let preempts: usize = responses.iter().map(|r| r.preemptions).sum();
+    let peak = responses.iter().map(|r| r.kv_pages_used).max().unwrap_or(0);
+    (tps, p50, p95, preempts, peak)
 }
 
 fn main() {
@@ -151,6 +187,40 @@ fn main() {
         }
     }
     shard_table.print("pipeline-parallel serving (`--shards N`, step-level scheduler)");
+
+    // -- budget-bounded paged KV pool (`--kv-pool-mb`) ----------------------
+    // The same packed model with every KV cache paged out of one shared
+    // pool. "ample" holds the full 8-client working set, so only admission
+    // accounting runs; "half" holds ~56% of it, forcing mid-decode
+    // preemption + re-prefill. Generated tokens are unchanged either way
+    // (greedy decode is deterministic) — the pressure shows up in p95 and
+    // the preemption column.
+    let pt = PoolCfg::DEFAULT_PAGE_TOKENS;
+    let probe = KvPool::new(
+        PoolCfg { budget_bytes: 1 << 30, page_tokens: pt },
+        KvSpec::DenseF32,
+        &fp.config,
+    );
+    let per_seq = 2 * fp.config.n_layers * probe.pages_for_rows(16 + max_new);
+    let mut pool_table = Table::new(&[
+        "pool", "pages", "clients", "tok/s", "p50 ms", "p95 ms", "preempt", "peak pages",
+    ]);
+    for (label, pages) in [("ample", 8 * per_seq), ("half", 9 * per_seq / 2)] {
+        let pc = PoolCfg { budget_bytes: pages * probe.page_bytes(), page_tokens: pt };
+        let (tps, p50, p95, preempts, peak) =
+            measure_pooled(packed.clone(), 8, max_new, KvSpec::DenseF32, pc);
+        pool_table.row(vec![
+            label.into(),
+            pages.to_string(),
+            "8".into(),
+            format!("{tps:.1}"),
+            format!("{p50:.1}"),
+            format!("{p95:.1}"),
+            preempts.to_string(),
+            peak.to_string(),
+        ]);
+    }
+    pool_table.print("paged KV pool (`--kv-pool-mb`: budget admission + preemption)");
 
     // -- KV-cache bytes per decoded token (all layers, K+V) -----------------
     // The decode-bandwidth story once weights are packed: the f32 KV cache

@@ -53,6 +53,7 @@ fn rows(j: &Json) -> Vec<(String, f64)> {
         "packed_int2_tokens_per_s",
         "packed_int2_kv8_tokens_per_s",
         "packed_int2_kv4_tokens_per_s",
+        "packed_int2_paged_tokens_per_s",
         "packed_int2_shards1_tokens_per_s",
         "packed_int2_shards2_tokens_per_s",
         "packed_int2_shards4_tokens_per_s",

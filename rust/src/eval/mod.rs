@@ -3,5 +3,5 @@
 pub mod ppl;
 pub mod tasks;
 
-pub use ppl::{decode_perplexity, perplexity, perplexity_with};
+pub use ppl::{decode_perplexity, decode_perplexity_pooled, perplexity, perplexity_with};
 pub use tasks::{task_suite, TaskReport};

@@ -6,8 +6,10 @@
 //! and the AOT HLO artifact.
 
 use crate::calib::batcher::eval_windows;
+use crate::kvpool::{KvPool, PoolCfg};
 use crate::model::{forward_logits, DecodeState, KvSpec, ModelExec};
 use crate::tensor::Matrix;
+use anyhow::{ensure, Result};
 
 /// NLL of one next-token prediction given a logits row.
 fn row_nll(row: &[f32], target: usize) -> f64 {
@@ -84,6 +86,57 @@ pub fn decode_perplexity<M: ModelExec>(
     (nlls.iter().sum::<f64>() / nlls.len() as f64).exp()
 }
 
+/// [`decode_perplexity`] with the KV caches paged out of one shared
+/// budget-bounded [`KvPool`] (`tsgo eval --kv-bits N --kv-pool-mb M`).
+/// Numerically identical to the contiguous run — paging never changes
+/// bytes, only where they live — so the interesting outputs are the
+/// side effects: the run proves every window decodes inside the budget.
+///
+/// Eval needs no preemption machinery: window demand is known up front
+/// (`seq_len` rows per cache), so admission is simply "run at most as many
+/// windows at once as the pool can hold"; errors if even one window's
+/// peak demand exceeds the budget.
+pub fn decode_perplexity_pooled<M: ModelExec>(
+    m: &M,
+    data: &[u8],
+    seq_len: usize,
+    max_windows: usize,
+    kv: KvSpec,
+    pc: PoolCfg,
+) -> Result<f64> {
+    let windows = eval_windows(data, seq_len, max_windows);
+    ensure!(!windows.is_empty(), "no evaluation windows");
+    let cfg = m.config();
+    let pool = KvPool::new(pc, kv, cfg);
+    // Peak pages one window holds: K and V per layer, each spanning
+    // ceil(seq_len / page_tokens) pages.
+    let per_window = 2 * cfg.n_layers * pool.pages_for_rows(seq_len);
+    ensure!(
+        per_window <= pool.total_pages(),
+        "kv pool too small for one {seq_len}-token eval window: it needs {per_window} \
+         pages but the pool holds {} — raise --kv-pool-mb",
+        pool.total_pages()
+    );
+    let lanes = (pool.total_pages() / per_window)
+        .min(crate::util::threadpool::num_threads())
+        .max(1);
+    let mut nll = 0.0f64;
+    for chunk in windows.chunks(lanes) {
+        let nlls = crate::util::threadpool::parallel_map_items(chunk, |win| {
+            let mut st = DecodeState::with_kv_pool(m, kv, Some(&pool));
+            let n = win.len() - 1;
+            let mut total = 0.0f64;
+            for t in 0..n {
+                let logits = st.step(win[t]);
+                total += row_nll(&logits, win[t + 1] as usize);
+            }
+            total / n as f64
+        });
+        nll += nlls.iter().sum::<f64>();
+    }
+    Ok((nll / windows.len() as f64).exp())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -140,6 +193,27 @@ mod tests {
             let delta = (q / base - 1.0).abs();
             assert!(delta < tol, "int{bits}: ppl {q} vs {base} (delta {delta:.4})");
         }
+    }
+
+    #[test]
+    fn pooled_decode_ppl_is_bit_identical_to_contiguous() {
+        // Paging moves KV bytes, never changes them; chunked lane summation
+        // adds the same f64s in the same left-to-right order. So the pooled
+        // ppl must equal the contiguous ppl to the last bit.
+        let mut rng = Rng::new(6);
+        let w = ModelWeights::init(Preset::Tiny.config(), &mut rng);
+        let c = Corpus::generate(CorpusKind::SynthWiki, 4_000, 11);
+        let kv = KvSpec::PackedGroupwise { bits: 8, group: 64 };
+        let a = decode_perplexity(&w, &c.bytes, 32, 3, kv);
+        let pc = PoolCfg { budget_bytes: 1 << 20, page_tokens: 8 };
+        let b = decode_perplexity_pooled(&w, &c.bytes, 32, 3, kv, pc).unwrap();
+        assert_eq!(a.to_bits(), b.to_bits(), "contiguous {a} vs pooled {b}");
+        // and a budget below one window's peak demand is a clean error
+        let tiny = PoolCfg { budget_bytes: 1, page_tokens: 8 };
+        let err = decode_perplexity_pooled(&w, &c.bytes, 32, 3, kv, tiny)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("kv pool too small"), "{err}");
     }
 
     #[test]

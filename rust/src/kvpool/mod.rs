@@ -1,0 +1,35 @@
+//! Paged KV memory pool — the vLLM PagedAttention design point adapted to
+//! the packed-word KV layout (PR 6).
+//!
+//! PR 4 shrank KV *bytes per token*; this module bounds KV *bytes total*.
+//! Without it every admitted sequence owns an unbounded doubling-growth
+//! cache, so serving memory scales with whatever traffic shows up — the
+//! first thing the "heavy traffic" north star breaks. Here all per-sequence
+//! KV storage comes from one fixed-budget pool of equal-size pages:
+//!
+//! * [`page::PageSpec`] / [`page::KvPage`] — a page holds a fixed number of
+//!   **whole token rows** (packed words + per-group scale/zero pairs for
+//!   `PackedGroupwise`, f32 rows for `DenseF32`). Because group grids
+//!   subdivide rows and rows never straddle pages, group boundaries are
+//!   page-aligned by construction and every attend span stays whole-group.
+//! * [`pool::KvPool`] — the free-list allocator: a global byte budget fixed
+//!   at construction, retired page buffers recycled before new ones are
+//!   minted, occupancy/preemption counters for the serve banner.
+//! * [`paged::PagedKv`] — the paged [`crate::model::kvcache::KvCache`]
+//!   variant: a per-sequence page table whose append/attend walk the pages
+//!   but run the **same** per-row quantize/score/axpy helpers
+//!   ([`crate::model::kvcache`]'s `PackedLayout`) on byte-identical row
+//!   slices, so paged logits are bit-identical to contiguous-cache logits
+//!   under every kernel table.
+//!
+//! The serving integration (admission by free pages, youngest-first
+//! preemption with re-prefill when the pool runs dry) lives in
+//! [`crate::serve`]; this module only owns pages and page tables.
+
+pub mod page;
+pub mod paged;
+pub mod pool;
+
+pub use page::{KvPage, PageSpec};
+pub use paged::PagedKv;
+pub use pool::{KvPool, PoolCfg};

@@ -1,0 +1,102 @@
+//! Fixed-size KV pages: the allocation unit of the pool.
+//!
+//! A page stores a fixed number of whole token rows for **one** K-or-V cache
+//! of one layer. Sizing pages in token rows (not bytes) is what keeps the
+//! paged attend path trivially bit-identical: a row — and therefore every
+//! (head, group) span the fused kernels read — lives entirely inside one
+//! page, so the per-row slices handed to `dot_span`/`axpy_span` are
+//! byte-identical to the contiguous cache's.
+
+use crate::model::config::ModelConfig;
+use crate::model::kvcache::KvSpec;
+use crate::tensor::packed::PackedInts;
+
+/// Per-row storage geometry of a page, fixed by the (effective) [`KvSpec`]
+/// and model shape. All pages of one [`super::KvPool`] share one `PageSpec`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PageSpec {
+    /// Token rows per page.
+    pub tokens: usize,
+    /// Packed `u32` words per row (0 for dense pages).
+    pub words_per_row: usize,
+    /// f32 elements per row in [`KvPage::data`]: `d_model` for dense rows,
+    /// `groups_per_row` scales for packed rows.
+    pub data_per_row: usize,
+    /// f32 zero-points per row (`groups_per_row` for packed, 0 for dense).
+    pub zeros_per_row: usize,
+}
+
+impl PageSpec {
+    /// Geometry for `spec` (head-clamped via [`KvSpec::effective`]) on
+    /// `cfg`-shaped models, with `page_tokens` rows per page.
+    pub fn new(spec: KvSpec, cfg: &ModelConfig, page_tokens: usize) -> PageSpec {
+        let tokens = page_tokens.max(1);
+        match spec.effective(cfg) {
+            KvSpec::DenseF32 => PageSpec {
+                tokens,
+                words_per_row: 0,
+                data_per_row: cfg.d_model,
+                zeros_per_row: 0,
+            },
+            KvSpec::PackedGroupwise { bits, group } => {
+                let gpr = cfg.n_heads * cfg.head_dim().div_ceil(group);
+                PageSpec {
+                    tokens,
+                    words_per_row: PackedInts::words_needed(cfg.d_model, bits),
+                    data_per_row: gpr,
+                    zeros_per_row: gpr,
+                }
+            }
+        }
+    }
+
+    /// Bytes one full page stores — the unit the pool's byte budget is
+    /// divided by.
+    pub fn page_bytes(&self) -> usize {
+        self.tokens * (self.words_per_row + self.data_per_row + self.zeros_per_row) * 4
+    }
+
+    /// Mint an empty page with capacity for `tokens` rows up front (pages
+    /// never reallocate: append fills them row by row, `reset` keeps the
+    /// buffers for reuse).
+    pub(crate) fn blank(&self) -> KvPage {
+        KvPage {
+            rows: 0,
+            words: Vec::with_capacity(self.tokens * self.words_per_row),
+            data: Vec::with_capacity(self.tokens * self.data_per_row),
+            zeros: Vec::with_capacity(self.tokens * self.zeros_per_row),
+        }
+    }
+}
+
+/// One pool page: storage for up to `PageSpec::tokens` whole rows of one
+/// K-or-V cache. Owned by exactly one page table ([`super::PagedKv`]) at a
+/// time; released pages go back to the pool's free list with their buffers
+/// intact.
+#[derive(Debug)]
+pub struct KvPage {
+    /// Rows currently written (≤ `PageSpec::tokens`).
+    pub(crate) rows: usize,
+    /// Packed words, `rows × words_per_row` (empty for dense pages).
+    pub(crate) words: Vec<u32>,
+    /// Dense f32 rows, or per-group scales for packed rows.
+    pub(crate) data: Vec<f32>,
+    /// Per-group zero points (packed rows only).
+    pub(crate) zeros: Vec<f32>,
+}
+
+impl KvPage {
+    /// Rows currently written to this page.
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// Clear contents but keep the allocations — called on release so the
+    /// free list recycles warm buffers.
+    pub(crate) fn reset(&mut self) {
+        self.rows = 0;
+        self.words.clear();
+        self.data.clear();
+        self.zeros.clear();
+    }
+}

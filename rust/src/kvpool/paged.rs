@@ -1,0 +1,315 @@
+//! The paged per-sequence cache: a page table over pool pages.
+//!
+//! `PagedKv` is the third [`crate::model::kvcache::KvCache`] representation.
+//! It stores exactly what the contiguous caches store — f32 rows, or packed
+//! words plus per-group scale/zero pairs — just scattered over fixed-size
+//! pages instead of one flat vector. Append allocates a page every
+//! `page_tokens` rows; attend walks the page table in row order and hands
+//! each row's slices to the **same** `PackedLayout` helpers (or the same
+//! dense `dot`/axpy loops) the contiguous caches use, so paged logits are
+//! bit-identical to contiguous-cache logits under every kernel table.
+//!
+//! Pool exhaustion inside `append` is a panic, not an error: the scheduler
+//! gates every step on free pages (`StepBackend::can_step`) and preempts
+//! until the step fits, so an allocation failure here means the reservation
+//! accounting is wrong — corrupting a decode silently would be worse.
+
+use super::page::{KvPage, PageSpec};
+use super::pool::KvPool;
+use crate::model::config::ModelConfig;
+use crate::model::kvcache::{KvSpec, PackedLayout};
+
+/// Row representation, mirroring the contiguous `DenseKv`/`PackedKv` split.
+#[derive(Clone, Copy, Debug)]
+enum PagedRepr {
+    Dense { d: usize, head_dim: usize },
+    Packed(PackedLayout),
+}
+
+/// One K or V cache for one layer, backed by pool pages.
+#[derive(Debug)]
+pub struct PagedKv {
+    pool: KvPool,
+    repr: PagedRepr,
+    rows: usize,
+    /// The page table: pages in row order, all full except the last.
+    pages: Vec<KvPage>,
+}
+
+impl PagedKv {
+    /// An empty page table drawing from `pool` (which must have been built
+    /// for the same `spec`/`cfg` — checked in debug builds).
+    pub fn new(spec: KvSpec, cfg: &ModelConfig, pool: &KvPool) -> PagedKv {
+        let eff = spec.effective(cfg);
+        debug_assert_eq!(
+            pool.page_spec(),
+            PageSpec::new(eff, cfg, pool.page_tokens()),
+            "KvPool was built for a different KV layout than this cache"
+        );
+        let repr = match eff {
+            KvSpec::DenseF32 => {
+                PagedRepr::Dense { d: cfg.d_model, head_dim: cfg.head_dim() }
+            }
+            KvSpec::PackedGroupwise { bits, group } => {
+                PagedRepr::Packed(PackedLayout::new(bits, group, cfg))
+            }
+        };
+        PagedKv { pool: pool.clone(), repr, rows: 0, pages: Vec::new() }
+    }
+
+    /// The spec this cache stores (group reported post-clamp).
+    pub fn spec(&self) -> KvSpec {
+        match self.repr {
+            PagedRepr::Dense { .. } => KvSpec::DenseF32,
+            PagedRepr::Packed(lay) => {
+                KvSpec::PackedGroupwise { bits: lay.bits, group: lay.group }
+            }
+        }
+    }
+
+    /// Cached rows (= tokens seen so far).
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// Pool pages this table currently holds.
+    pub fn pages_used(&self) -> usize {
+        self.pages.len()
+    }
+
+    /// Bytes used by cached rows — same accounting as the contiguous caches
+    /// (page-slack capacity is the pool's business, not the cache's).
+    pub fn nbytes(&self) -> usize {
+        match self.repr {
+            PagedRepr::Dense { d, .. } => self.rows * d * 4,
+            PagedRepr::Packed(lay) => {
+                self.rows * (lay.words_per_row * 4 + lay.groups_per_row() * 8)
+            }
+        }
+    }
+
+    /// Append one `[d_model]` row, allocating a page at each page boundary.
+    pub fn append(&mut self, row: &[f32]) {
+        if self.rows % self.pool.page_tokens() == 0 {
+            let page = self.pool.alloc().unwrap_or_else(|| {
+                panic!(
+                    "kv pool exhausted during append (row {}, {} pages held): \
+                     the scheduler must gate steps on free pages",
+                    self.rows,
+                    self.pages.len()
+                )
+            });
+            self.pages.push(page);
+        }
+        let page = self.pages.last_mut().expect("page allocated above");
+        match self.repr {
+            PagedRepr::Dense { d, .. } => {
+                debug_assert_eq!(row.len(), d);
+                page.data.extend_from_slice(row);
+            }
+            PagedRepr::Packed(lay) => {
+                lay.quantize_row_into(row, &mut page.words, &mut page.data, &mut page.zeros);
+            }
+        }
+        page.rows += 1;
+        self.rows += 1;
+    }
+
+    /// Attention scores for one head against every cached row — the paged
+    /// twin of the contiguous `head_scores` (same per-row math, same order).
+    pub fn head_scores(&self, head: usize, q: &[f32], scale: f32, scores: &mut Vec<f32>) {
+        scores.clear();
+        scores.reserve(self.rows);
+        match self.repr {
+            PagedRepr::Dense { d, head_dim } => {
+                let base = head * head_dim;
+                let qh = &q[base..base + head_dim];
+                for page in &self.pages {
+                    for r in 0..page.rows {
+                        let krow = &page.data[r * d + base..r * d + base + head_dim];
+                        scores.push(crate::tensor::matrix::dot(qh, krow) * scale);
+                    }
+                }
+            }
+            PagedRepr::Packed(lay) => {
+                let gph = lay.groups_per_head;
+                let gpr = lay.groups_per_row();
+                let wpr = lay.words_per_row;
+                let mut gsum = crate::util::scratch::take_f32(gph);
+                lay.head_gsums(q, head, &mut gsum);
+                for page in &self.pages {
+                    for r in 0..page.rows {
+                        let words = &page.words[r * wpr..(r + 1) * wpr];
+                        let srow = &page.data[r * gpr + head * gph..r * gpr + (head + 1) * gph];
+                        let zrow = &page.zeros[r * gpr + head * gph..r * gpr + (head + 1) * gph];
+                        scores.push(lay.row_score(words, srow, zrow, head, q, &gsum) * scale);
+                    }
+                }
+            }
+        }
+    }
+
+    /// Accumulate the softmax-weighted value rows of one head into
+    /// `ctx_head` — paged twin of the contiguous `head_axpy`.
+    pub fn head_axpy(&self, head: usize, probs: &[f32], ctx_head: &mut [f32]) {
+        debug_assert!(probs.len() >= self.rows);
+        match self.repr {
+            PagedRepr::Dense { d, head_dim } => {
+                debug_assert!(ctx_head.len() >= head_dim);
+                let base = head * head_dim;
+                let mut t = 0usize;
+                for page in &self.pages {
+                    for r in 0..page.rows {
+                        let w = probs[t];
+                        let vrow = &page.data[r * d + base..r * d + base + head_dim];
+                        for (o, &v) in ctx_head.iter_mut().zip(vrow) {
+                            *o += w * v;
+                        }
+                        t += 1;
+                    }
+                }
+            }
+            PagedRepr::Packed(lay) => {
+                debug_assert!(ctx_head.len() >= lay.head_dim);
+                let gph = lay.groups_per_head;
+                let gpr = lay.groups_per_row();
+                let wpr = lay.words_per_row;
+                let mut t = 0usize;
+                for page in &self.pages {
+                    for r in 0..page.rows {
+                        let w = probs[t];
+                        let words = &page.words[r * wpr..(r + 1) * wpr];
+                        let srow = &page.data[r * gpr + head * gph..r * gpr + (head + 1) * gph];
+                        let zrow = &page.zeros[r * gpr + head * gph..r * gpr + (head + 1) * gph];
+                        lay.row_axpy(words, srow, zrow, head, w, ctx_head);
+                        t += 1;
+                    }
+                }
+            }
+        }
+    }
+
+    /// Dequantize one cached row back to f32 (dense rows copy).
+    pub fn dequant_row(&self, t: usize) -> Vec<f32> {
+        let pt = self.pool.page_tokens();
+        let page = &self.pages[t / pt];
+        let r = t % pt;
+        match self.repr {
+            PagedRepr::Dense { d, .. } => page.data[r * d..(r + 1) * d].to_vec(),
+            PagedRepr::Packed(lay) => {
+                let wpr = lay.words_per_row;
+                let gpr = lay.groups_per_row();
+                lay.dequant_row_from(
+                    &page.words[r * wpr..(r + 1) * wpr],
+                    &page.data[r * gpr..(r + 1) * gpr],
+                    &page.zeros[r * gpr..(r + 1) * gpr],
+                )
+            }
+        }
+    }
+}
+
+impl Clone for PagedKv {
+    /// Clones allocate fresh pages from the same pool and copy contents —
+    /// pages are uniquely owned, so a derived (shallow-vec) clone would
+    /// double-release on drop and corrupt the pool's accounting.
+    fn clone(&self) -> PagedKv {
+        let pages = self
+            .pages
+            .iter()
+            .map(|p| {
+                let mut fresh = self.pool.alloc().unwrap_or_else(|| {
+                    panic!("kv pool exhausted while cloning a page table")
+                });
+                fresh.rows = p.rows;
+                fresh.words.extend_from_slice(&p.words);
+                fresh.data.extend_from_slice(&p.data);
+                fresh.zeros.extend_from_slice(&p.zeros);
+                fresh
+            })
+            .collect();
+        PagedKv { pool: self.pool.clone(), repr: self.repr, rows: self.rows, pages }
+    }
+}
+
+impl Drop for PagedKv {
+    fn drop(&mut self) {
+        for page in self.pages.drain(..) {
+            self.pool.release(page);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kvpool::PoolCfg;
+    use crate::model::config::Preset;
+    use crate::util::rng::Rng;
+
+    fn tiny() -> ModelConfig {
+        Preset::Tiny.config()
+    }
+
+    fn pool_for(spec: KvSpec, cfg: &ModelConfig, pages: usize, page_tokens: usize) -> KvPool {
+        let bytes = PageSpec::new(spec, cfg, page_tokens).page_bytes();
+        KvPool::new(
+            PoolCfg { budget_bytes: pages * bytes, page_tokens },
+            spec,
+            cfg,
+        )
+    }
+
+    #[test]
+    fn append_allocates_one_page_per_page_tokens_rows() {
+        let cfg = tiny();
+        let pool = pool_for(KvSpec::DenseF32, &cfg, 4, 4);
+        let mut c = PagedKv::new(KvSpec::DenseF32, &cfg, &pool);
+        let mut rng = Rng::new(3);
+        for t in 0..9 {
+            c.append(&rng.normal_vec(cfg.d_model, 1.0));
+            assert_eq!(c.rows(), t + 1);
+            assert_eq!(c.pages_used(), (t + 1).div_ceil(4));
+        }
+        assert_eq!(pool.used_pages(), 3);
+        drop(c);
+        assert_eq!(pool.used_pages(), 0, "drop must release every page");
+    }
+
+    #[test]
+    fn clone_owns_its_own_pages() {
+        let cfg = tiny();
+        let spec = KvSpec::PackedGroupwise { bits: 8, group: 16 };
+        let pool = pool_for(spec, &cfg, 8, 4);
+        let mut a = PagedKv::new(spec, &cfg, &pool);
+        let mut rng = Rng::new(7);
+        let rows: Vec<Vec<f32>> =
+            (0..6).map(|_| rng.normal_vec(cfg.d_model, 1.0)).collect();
+        for row in &rows {
+            a.append(row);
+        }
+        let b = a.clone();
+        assert_eq!(pool.used_pages(), 4, "clone must hold its own pages");
+        for t in 0..6 {
+            assert_eq!(a.dequant_row(t), b.dequant_row(t), "t={t}");
+        }
+        drop(a);
+        assert_eq!(pool.used_pages(), 2);
+        drop(b);
+        assert_eq!(pool.used_pages(), 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "kv pool exhausted during append")]
+    fn append_past_budget_panics() {
+        // The scheduler is responsible for never letting this happen; the
+        // cache fails loudly rather than decoding against missing rows.
+        let cfg = tiny();
+        let pool = pool_for(KvSpec::DenseF32, &cfg, 1, 2);
+        let mut c = PagedKv::new(KvSpec::DenseF32, &cfg, &pool);
+        let row = vec![0.5f32; cfg.d_model];
+        c.append(&row);
+        c.append(&row);
+        c.append(&row); // third row needs a second page the pool doesn't have
+    }
+}

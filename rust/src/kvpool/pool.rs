@@ -1,0 +1,282 @@
+//! The free-list page allocator: a global byte budget, minted-on-demand and
+//! recycled [`KvPage`]s, and the occupancy/preemption counters the serve
+//! banner reports.
+//!
+//! `KvPool` is a cheap-`Clone` handle (shared state behind an `Arc`), so the
+//! scheduler, every page table, and the banner printer all observe one
+//! budget. Locks recover from poison — a panicking decode worker must not
+//! wedge every other sequence's allocator (same policy as the step pool's
+//! job queue).
+
+use super::page::{KvPage, PageSpec};
+use crate::model::config::ModelConfig;
+use crate::model::kvcache::KvSpec;
+use anyhow::{bail, Result};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard};
+
+/// Pool tunables — the `--kv-pool-mb` / `--kv-page-tokens` CLI pair.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PoolCfg {
+    /// Global KV byte budget; the pool holds `budget_bytes / page_bytes`
+    /// pages, fixed at construction.
+    pub budget_bytes: usize,
+    /// Token rows per page.
+    pub page_tokens: usize,
+}
+
+impl PoolCfg {
+    /// Default `--kv-page-tokens`.
+    pub const DEFAULT_PAGE_TOKENS: usize = 16;
+
+    /// Build from the CLI flags; `pool_mb == 0` means "no pool" (the
+    /// unbounded contiguous caches, as before PR 6).
+    pub fn from_flags(pool_mb: usize, page_tokens: usize) -> Result<Option<PoolCfg>> {
+        if pool_mb == 0 {
+            return Ok(None);
+        }
+        if page_tokens == 0 {
+            bail!("--kv-page-tokens must be positive");
+        }
+        Ok(Some(PoolCfg { budget_bytes: pool_mb << 20, page_tokens }))
+    }
+
+    /// The slice of a global budget a shard owning `layers` of
+    /// `total_layers` gets: bytes proportional to its layer count (KV cost
+    /// is per layer), page geometry unchanged. Both the shard-local
+    /// sub-pools and the scheduler's accounting mirror derive their budgets
+    /// through this one function, so they can never disagree.
+    pub fn shard_slice(&self, layers: usize, total_layers: usize) -> PoolCfg {
+        PoolCfg {
+            budget_bytes: self.budget_bytes * layers / total_layers.max(1),
+            page_tokens: self.page_tokens,
+        }
+    }
+}
+
+struct PoolInner {
+    /// Released page buffers, recycled before minting new ones.
+    free: Vec<KvPage>,
+    /// Pages currently held by page tables.
+    used: usize,
+    /// Pages ever minted: `used + free.len()`, and never above
+    /// `total_pages` — the no-leak invariant the reuse test checks.
+    minted: usize,
+}
+
+/// Free-list allocator over fixed-size KV pages with a global byte budget.
+#[derive(Clone)]
+pub struct KvPool {
+    spec: PageSpec,
+    total_pages: usize,
+    inner: Arc<Mutex<PoolInner>>,
+    peak_used: Arc<AtomicUsize>,
+    preemptions: Arc<AtomicUsize>,
+}
+
+impl std::fmt::Debug for KvPool {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("KvPool")
+            .field("spec", &self.spec)
+            .field("total_pages", &self.total_pages)
+            .field("used_pages", &self.used_pages())
+            .finish()
+    }
+}
+
+impl KvPool {
+    /// A pool for `kv`-formatted caches of `mcfg`-shaped models. The page
+    /// geometry uses the **effective** (head-clamped) spec so budget math
+    /// matches what the caches actually store.
+    pub fn new(cfg: PoolCfg, kv: KvSpec, mcfg: &ModelConfig) -> KvPool {
+        let spec = PageSpec::new(kv, mcfg, cfg.page_tokens);
+        let total_pages = cfg.budget_bytes / spec.page_bytes().max(1);
+        KvPool {
+            spec,
+            total_pages,
+            inner: Arc::new(Mutex::new(PoolInner {
+                free: Vec::new(),
+                used: 0,
+                minted: 0,
+            })),
+            peak_used: Arc::new(AtomicUsize::new(0)),
+            preemptions: Arc::new(AtomicUsize::new(0)),
+        }
+    }
+
+    fn lock(&self) -> MutexGuard<'_, PoolInner> {
+        self.inner.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
+    pub(crate) fn page_spec(&self) -> PageSpec {
+        self.spec
+    }
+
+    /// Token rows per page.
+    pub fn page_tokens(&self) -> usize {
+        self.spec.tokens
+    }
+
+    /// Bytes per page for this pool's layout.
+    pub fn page_bytes(&self) -> usize {
+        self.spec.page_bytes()
+    }
+
+    /// The fixed page budget (`budget_bytes / page_bytes`).
+    pub fn total_pages(&self) -> usize {
+        self.total_pages
+    }
+
+    /// Pages currently held by page tables.
+    pub fn used_pages(&self) -> usize {
+        self.lock().used
+    }
+
+    /// Pages still allocatable.
+    pub fn free_pages(&self) -> usize {
+        self.total_pages - self.lock().used
+    }
+
+    /// Pages ever minted (≤ `total_pages`; stays flat once the working set
+    /// recycles).
+    pub fn minted_pages(&self) -> usize {
+        self.lock().minted
+    }
+
+    /// Pages one cache needs to hold `rows` token rows.
+    pub fn pages_for_rows(&self, rows: usize) -> usize {
+        rows.div_ceil(self.spec.tokens)
+    }
+
+    /// High-water mark of `used_pages`.
+    pub fn peak_used(&self) -> usize {
+        self.peak_used.load(Ordering::Relaxed)
+    }
+
+    /// Preemptions recorded against this pool (see [`Self::note_preemption`]).
+    pub fn preemptions(&self) -> usize {
+        self.preemptions.load(Ordering::Relaxed)
+    }
+
+    /// The scheduler records each mid-decode eviction here so the banner and
+    /// bench rows can report a preemption rate.
+    pub fn note_preemption(&self) {
+        self.preemptions.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Take one page, recycling a released buffer when one exists. `None`
+    /// when the budget is exhausted — callers at the admission/step layer
+    /// must treat that as back-pressure, never as an error.
+    pub(crate) fn alloc(&self) -> Option<KvPage> {
+        let mut inner = self.lock();
+        if inner.used >= self.total_pages {
+            return None;
+        }
+        inner.used += 1;
+        let used = inner.used;
+        let page = match inner.free.pop() {
+            Some(p) => p,
+            None => {
+                inner.minted += 1;
+                self.spec.blank()
+            }
+        };
+        drop(inner);
+        self.peak_used.fetch_max(used, Ordering::Relaxed);
+        Some(page)
+    }
+
+    /// Return a page to the free list (contents cleared, buffers kept).
+    pub(crate) fn release(&self, mut page: KvPage) {
+        page.reset();
+        let mut inner = self.lock();
+        debug_assert!(inner.used > 0, "kv pool release with no pages out");
+        inner.used = inner.used.saturating_sub(1);
+        inner.free.push(page);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::config::Preset;
+
+    fn tiny() -> ModelConfig {
+        Preset::Tiny.config() // d=64, 2 heads, head_dim=32
+    }
+
+    #[test]
+    fn from_flags_parses_and_rejects() {
+        assert_eq!(PoolCfg::from_flags(0, 16).unwrap(), None);
+        let pc = PoolCfg::from_flags(2, 8).unwrap().unwrap();
+        assert_eq!(pc.budget_bytes, 2 << 20);
+        assert_eq!(pc.page_tokens, 8);
+        assert!(PoolCfg::from_flags(2, 0).is_err());
+    }
+
+    #[test]
+    fn budget_divides_into_pages() {
+        let cfg = tiny();
+        // dense rows: 64 f32 = 256 B/row, 4 rows/page → 1024 B/page
+        let pool = KvPool::new(
+            PoolCfg { budget_bytes: 10 * 1024 + 512, page_tokens: 4 },
+            KvSpec::DenseF32,
+            &cfg,
+        );
+        assert_eq!(pool.page_bytes(), 1024);
+        assert_eq!(pool.total_pages(), 10); // remainder bytes don't mint a page
+        assert_eq!(pool.pages_for_rows(0), 0);
+        assert_eq!(pool.pages_for_rows(4), 1);
+        assert_eq!(pool.pages_for_rows(5), 2);
+    }
+
+    #[test]
+    fn packed_page_bytes_match_kvspec_accounting() {
+        // One page of T packed rows must cost T × (bytes_per_token/2): the
+        // pool's budget math and the serving banner's bytes/token agree.
+        let cfg = tiny();
+        let spec = KvSpec::PackedGroupwise { bits: 8, group: 64 };
+        let page = PageSpec::new(spec, &cfg, 16);
+        assert_eq!(page.page_bytes(), 16 * spec.bytes_per_token(&cfg) / 2);
+    }
+
+    #[test]
+    fn alloc_release_recycles_buffers() {
+        let cfg = tiny();
+        let pool = KvPool::new(
+            PoolCfg { budget_bytes: 3 * 1024, page_tokens: 4 },
+            KvSpec::DenseF32,
+            &cfg,
+        );
+        assert_eq!(pool.total_pages(), 3);
+        let a = pool.alloc().unwrap();
+        let b = pool.alloc().unwrap();
+        let c = pool.alloc().unwrap();
+        assert!(pool.alloc().is_none(), "budget must be hard");
+        assert_eq!(pool.used_pages(), 3);
+        pool.release(a);
+        pool.release(b);
+        pool.release(c);
+        assert_eq!(pool.used_pages(), 0);
+        assert_eq!(pool.free_pages(), 3);
+        // the next round must reuse buffers, not mint new ones
+        let again = pool.alloc().unwrap();
+        assert_eq!(pool.minted_pages(), 3);
+        assert_eq!(again.rows(), 0);
+        pool.release(again);
+        assert_eq!(pool.peak_used(), 3);
+    }
+
+    #[test]
+    fn preemption_counter_accumulates() {
+        let pool = KvPool::new(
+            PoolCfg { budget_bytes: 1 << 20, page_tokens: 16 },
+            KvSpec::DenseF32,
+            &tiny(),
+        );
+        assert_eq!(pool.preemptions(), 0);
+        pool.note_preemption();
+        pool.note_preemption();
+        assert_eq!(pool.preemptions(), 2);
+    }
+}

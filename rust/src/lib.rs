@@ -8,7 +8,8 @@
 //!   paper's two-stage group-scale optimization ([`quant::stage1`],
 //!   [`quant::stage2`]), the layer-by-layer pipeline ([`pipeline`]),
 //!   evaluation ([`eval`]) and a batched generation server ([`serve`])
-//!   with an optional layer-sharded pipeline-parallel topology ([`shard`]).
+//!   with an optional layer-sharded pipeline-parallel topology ([`shard`])
+//!   and a budget-bounded paged KV memory pool ([`kvpool`]).
 //! * **L2 (python/compile)** — the Llamette transformer forward/backward in
 //!   JAX, AOT-lowered once to HLO text artifacts.
 //! * **L1 (python/compile/kernels)** — Pallas kernels for the compute
@@ -22,6 +23,7 @@
 
 pub mod calib;
 pub mod eval;
+pub mod kvpool;
 pub mod model;
 pub mod pipeline;
 pub mod quant;

@@ -15,6 +15,7 @@ use std::path::{Path, PathBuf};
 use std::sync::Arc;
 use tsgo::calib::{calibration_batches, Corpus, CorpusKind};
 use tsgo::eval::tasks::{build_suite, task_suite};
+use tsgo::kvpool::{KvPool, PoolCfg};
 use tsgo::model::{store, KvSpec, ModelExec, ModelWeights, Preset};
 use tsgo::pipeline::{quantize_model, PipelineConfig};
 use tsgo::quant::QuantPlan;
@@ -71,6 +72,7 @@ fn print_help() {
          \x20 eval       PPL + 0-shot (--model m.tsr [--quantized | --packed]);\n\
          \x20            --kv-bits 8 --kv-group 64 additionally reports the\n\
          \x20            decode-path ppl delta of a group-wise quantized KV cache;\n\
+         \x20            --kv-pool-mb M pages the decode KV out of a bounded pool;\n\
          \x20            --shards N evaluates through the layer-sharded model\n\
          \x20            (prints the shard plan; numerics identical to unsharded)\n\
          \x20 serve      generation server (--model m.tsr --addr 127.0.0.1:7433\n\
@@ -80,7 +82,10 @@ fn print_help() {
          \x20            quantizes the decode KV cache group-wise per head;\n\
          \x20            --shards N splits layers over N pipeline shard threads\n\
          \x20            (bit-identical tokens; banner shows per-shard ranges,\n\
-         \x20            weight bytes and KV bytes/token)\n\
+         \x20            weight bytes and KV bytes/token); --kv-pool-mb M\n\
+         \x20            --kv-page-tokens T bound total KV memory with a paged\n\
+         \x20            pool (budget-aware admission, youngest-first preemption\n\
+         \x20            with deterministic re-prefill — tokens unchanged)\n\
          \x20 kernels    print the dequant kernel dispatch table (CPU features,\n\
          \x20            per-bit-width kernel selection, forcing state)\n\
          \x20 warmup     pre-compile all artifacts"
@@ -285,6 +290,8 @@ fn cmd_eval(argv: &[String]) -> Result<()> {
         OptSpec { name: "native", help: "force native forward (skip artifacts)", default: None, is_flag: true },
         OptSpec { name: "kv-bits", help: "also report decode ppl with an N-bit KV cache (0 = off)", default: Some("0"), is_flag: false },
         OptSpec { name: "kv-group", help: "KV group size (per-head groups, clamped to head_dim)", default: Some("64"), is_flag: false },
+        OptSpec { name: "kv-pool-mb", help: "page the decode-ppl KV caches out of an N MB pool (0 = contiguous)", default: Some("0"), is_flag: false },
+        OptSpec { name: "kv-page-tokens", help: "token rows per KV page", default: Some("16"), is_flag: false },
         OptSpec { name: "shards", help: "evaluate through a layer-sharded model (banner reports the plan; forces native forward)", default: Some("1"), is_flag: false },
     ];
     let a = parse(argv, "tsgo eval", "PPL + 0-shot evaluation", &specs)?;
@@ -294,6 +301,10 @@ fn cmd_eval(argv: &[String]) -> Result<()> {
     let kv = KvSpec::from_flags(
         a.usize("kv-bits").map_err(anyhow::Error::msg)?,
         a.usize("kv-group").map_err(anyhow::Error::msg)?,
+    )?;
+    let pool = PoolCfg::from_flags(
+        a.usize("kv-pool-mb").map_err(anyhow::Error::msg)?,
+        a.usize("kv-page-tokens").map_err(anyhow::Error::msg)?,
     )?;
     if a.flag("packed") {
         let em = store::load_quantized_packed(Path::new(&a.str("model")))?;
@@ -305,14 +316,14 @@ fn cmd_eval(argv: &[String]) -> Result<()> {
         );
         println!("kernels: {}", em.kernel_dispatch());
         if shards > 1 {
-            return run_eval_sharded(em, shards, kv, windows, n_tasks);
+            return run_eval_sharded(em, shards, kv, pool, windows, n_tasks);
         }
         run_eval_report(&em, windows, n_tasks, &mut native_ppl)?;
-        return run_kv_ppl_report(&em, windows, kv);
+        return run_kv_ppl_report(&em, windows, kv, pool);
     }
     let w = load_any_model(Path::new(&a.str("model")), a.flag("quantized"))?;
     if shards > 1 {
-        return run_eval_sharded(w, shards, kv, windows, n_tasks);
+        return run_eval_sharded(w, shards, kv, pool, windows, n_tasks);
     }
     let engine = if a.flag("native") { None } else { Engine::open_default() };
     match &engine {
@@ -323,22 +334,37 @@ fn cmd_eval(argv: &[String]) -> Result<()> {
         }
         _ => run_eval_report(&w, windows, n_tasks, &mut native_ppl)?,
     }
-    run_kv_ppl_report(&w, windows, kv)
+    run_kv_ppl_report(&w, windows, kv, pool)
 }
 
 /// The end-to-end accuracy accounting of KV-cache quantization: decode-path
 /// ppl with the f32 cache vs the requested packed cache, and the delta. A
-/// no-op when `--kv-bits` was 0/absent.
-fn run_kv_ppl_report<M: ModelExec>(m: &M, windows: usize, kv: KvSpec) -> Result<()> {
+/// no-op when `--kv-bits` was 0/absent. With `--kv-pool-mb` the quantized
+/// run pages its caches out of a bounded pool (the banner says so) — the
+/// numbers must not move, only the memory ceiling does.
+fn run_kv_ppl_report<M: ModelExec>(
+    m: &M,
+    windows: usize,
+    kv: KvSpec,
+    pool: Option<PoolCfg>,
+) -> Result<()> {
     if !kv.is_packed() {
         return Ok(());
     }
     let cfg = m.config();
-    print_kv_banner(&kv, cfg);
+    print_kv_banner(&kv, cfg, pool.is_some());
+    if let Some(pc) = pool {
+        print_pool_banner(&pc, &kv, cfg);
+    }
     let corpus = Corpus::generate(CorpusKind::SynthWiki, 400_000, 1);
     let (_, test) = corpus.split(0.1);
     let base = tsgo::eval::decode_perplexity(m, test, cfg.seq_len, windows, KvSpec::DenseF32);
-    let quant = tsgo::eval::decode_perplexity(m, test, cfg.seq_len, windows, kv);
+    let quant = match pool {
+        Some(pc) => {
+            tsgo::eval::decode_perplexity_pooled(m, test, cfg.seq_len, windows, kv, pc)?
+        }
+        None => tsgo::eval::decode_perplexity(m, test, cfg.seq_len, windows, kv),
+    };
     println!(
         "decode ppl[{}]: f32-KV = {base:.3}, {}-KV = {quant:.3} ({:+.3}%)",
         CorpusKind::SynthWiki.label(),
@@ -357,12 +383,18 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         OptSpec { name: "max-batch", help: "dynamic batch cap", default: Some("8"), is_flag: false },
         OptSpec { name: "kv-bits", help: "quantize the decode KV cache to N bits (0 = f32)", default: Some("0"), is_flag: false },
         OptSpec { name: "kv-group", help: "KV group size (per-head groups, clamped to head_dim)", default: Some("64"), is_flag: false },
+        OptSpec { name: "kv-pool-mb", help: "page all KV caches out of an N MB pool with budget-aware admission and preemption (0 = unbounded contiguous)", default: Some("0"), is_flag: false },
+        OptSpec { name: "kv-page-tokens", help: "token rows per KV page", default: Some("16"), is_flag: false },
         OptSpec { name: "shards", help: "pipeline-parallel shard count (layers split over N worker threads; clamped to the layer count)", default: Some("1"), is_flag: false },
     ];
     let a = parse(argv, "tsgo serve", "batched generation server", &specs)?;
     let kv = KvSpec::from_flags(
         a.usize("kv-bits").map_err(anyhow::Error::msg)?,
         a.usize("kv-group").map_err(anyhow::Error::msg)?,
+    )?;
+    let pool = PoolCfg::from_flags(
+        a.usize("kv-pool-mb").map_err(anyhow::Error::msg)?,
+        a.usize("kv-page-tokens").map_err(anyhow::Error::msg)?,
     )?;
     let shards = a.usize("shards").map_err(anyhow::Error::msg)?;
     let cfg = tsgo::serve::ServerConfig {
@@ -371,6 +403,7 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
             max_batch: a.usize("max-batch").map_err(anyhow::Error::msg)?,
             kv,
             shards,
+            pool,
             ..Default::default()
         },
         max_connections: None,
@@ -385,14 +418,20 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
             em.dense_linear_bytes() as f64 / 1e6
         );
         println!("kernels: {}", em.kernel_dispatch());
-        print_kv_banner(&kv, em.config());
+        print_kv_banner(&kv, em.config(), pool.is_some());
+        if let Some(pc) = pool {
+            print_pool_banner(&pc, &kv, em.config());
+        }
         if shards > 1 {
             return serve_sharded(Arc::new(em), shards, kv, cfg);
         }
         return tsgo::serve::serve(Arc::new(em), cfg);
     }
     let w = Arc::new(load_any_model(Path::new(&a.str("model")), a.flag("quantized"))?);
-    print_kv_banner(&kv, w.config());
+    print_kv_banner(&kv, w.config(), pool.is_some());
+    if let Some(pc) = pool {
+        print_pool_banner(&pc, &kv, w.config());
+    }
     if shards > 1 {
         return serve_sharded(w, shards, kv, cfg);
     }
@@ -407,13 +446,14 @@ fn run_eval_sharded<M: ModelExec>(
     m: M,
     shards: usize,
     kv: KvSpec,
+    pool: Option<PoolCfg>,
     windows: usize,
     n_tasks: usize,
 ) -> Result<()> {
     let sm = ShardedModel::new(Arc::new(m), shards);
     print_shard_banner(&sm, &kv);
     run_eval_report(&sm, windows, n_tasks, &mut native_ppl)?;
-    run_kv_ppl_report(&sm, windows, kv)
+    run_kv_ppl_report(&sm, windows, kv, pool)
 }
 
 /// The `--shards N` serve path, shared by the packed and dense branches:
@@ -442,19 +482,21 @@ fn print_shard_banner<M: ModelExec>(sm: &ShardedModel<M>, kv: &KvSpec) {
 }
 
 /// One banner line describing the decode KV-cache representation, with the
-/// per-token byte accounting that motivates quantizing it.
-fn print_kv_banner(kv: &KvSpec, cfg: &tsgo::model::ModelConfig) {
+/// per-token byte accounting that motivates quantizing it. `paged` marks
+/// the cache as pool-backed (`--kv-pool-mb`) — same bytes, bounded ceiling.
+fn print_kv_banner(kv: &KvSpec, cfg: &tsgo::model::ModelConfig, paged: bool) {
     let dense = KvSpec::DenseF32.bytes_per_token(cfg) * cfg.n_layers;
+    let tag = if paged { ", paged" } else { "" };
     // Label the *effective* spec: a requested group wider than head_dim is
     // stored clamped, and the banner must describe what actually runs.
     match kv.effective(cfg) {
         KvSpec::DenseF32 => {
-            println!("kv cache: f32 ({dense} B/token across {} layers)", cfg.n_layers)
+            println!("kv cache: f32{tag} ({dense} B/token across {} layers)", cfg.n_layers)
         }
         spec => {
             let b = spec.bytes_per_token(cfg) * cfg.n_layers;
             println!(
-                "kv cache: {} ({} B/token across {} layers vs {} f32, {:.1}x smaller)",
+                "kv cache: {}{tag} ({} B/token across {} layers vs {} f32, {:.1}x smaller)",
                 spec.label(),
                 b,
                 cfg.n_layers,
@@ -463,6 +505,22 @@ fn print_kv_banner(kv: &KvSpec, cfg: &tsgo::model::ModelConfig) {
             );
         }
     }
+}
+
+/// The `--kv-pool-mb` banner: page geometry and pool capacity, plus the
+/// policy one line of log should remind an operator of. Occupancy and
+/// preemption counts surface at runtime (scheduler pressure lines, and
+/// `kv_pages_used` / `preemptions` on every response).
+fn print_pool_banner(pc: &PoolCfg, kv: &KvSpec, cfg: &tsgo::model::ModelConfig) {
+    let probe = KvPool::new(*pc, *kv, cfg);
+    println!(
+        "kv pool: {:.1} MB budget = {} pages x {} tokens ({} B/page); \
+         admission by free pages, youngest-first preemption with re-prefill",
+        pc.budget_bytes as f64 / (1 << 20) as f64,
+        probe.total_pages(),
+        probe.page_tokens(),
+        probe.page_bytes(),
+    );
 }
 
 fn cmd_kernels() -> Result<()> {

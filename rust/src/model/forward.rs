@@ -319,13 +319,24 @@ impl<'a, M: ModelExec> DecodeState<'a, M> {
 
     /// Decode with an explicit KV-cache representation.
     pub fn with_kv(model: &'a M, spec: KvSpec) -> DecodeState<'a, M> {
+        Self::with_kv_pool(model, spec, None)
+    }
+
+    /// Decode drawing KV pages from a budget-bounded pool when one is given
+    /// (paged caches, bit-identical to the contiguous ones), contiguous
+    /// otherwise.
+    pub fn with_kv_pool(
+        model: &'a M,
+        spec: KvSpec,
+        pool: Option<&crate::kvpool::KvPool>,
+    ) -> DecodeState<'a, M> {
         let cfg = model.config();
         let n = cfg.n_layers;
         // Store and report the *effective* spec (group clamped to head_dim).
         let spec = spec.effective(cfg);
         DecodeState {
             model,
-            kv: (0..n).map(|_| LayerKv::new(spec, cfg)).collect(),
+            kv: (0..n).map(|_| LayerKv::new_in(spec, cfg, pool)).collect(),
             spec,
             pos: 0,
         }
@@ -342,9 +353,15 @@ impl<'a, M: ModelExec> DecodeState<'a, M> {
     }
 
     /// Total storage-growth events across all caches — O(layers · log pos)
-    /// by the amortized-growth contract.
+    /// by the amortized-growth contract. Always 0 when pooled: paged caches
+    /// never grow a buffer.
     pub fn kv_grow_events(&self) -> usize {
         self.kv.iter().map(|c| c.grow_events()).sum()
+    }
+
+    /// Pool pages currently held across all layers (0 when not pooled).
+    pub fn kv_pages_used(&self) -> usize {
+        self.kv.iter().map(|c| c.pages_used()).sum()
     }
 
     /// Feed one token; returns the logits for the next position.

@@ -36,6 +36,7 @@
 //! `axpy_span` structurally — it is elementwise).
 
 use super::config::ModelConfig;
+use crate::kvpool::{KvPool, PagedKv};
 use crate::tensor::packed::{axpy_span, dot_span, PackedInts};
 use anyhow::{bail, Result};
 
@@ -109,6 +110,163 @@ impl KvSpec {
     }
 }
 
+/// The packed-row geometry plus the per-row quantize/attend math shared by
+/// the contiguous [`PackedKv`] and the paged [`PagedKv`] caches. Keeping the
+/// per-row code here — and calling it from both layouts — is what makes the
+/// paged attend bit-identical to the contiguous attend: both hand
+/// byte-identical row slices to the same fused kernels in the same order,
+/// so the storage layout (flat vector vs page table) cannot perturb a
+/// single f32 bit.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub(crate) struct PackedLayout {
+    pub(crate) bits: u8,
+    /// Effective group size after clamping to `head_dim`.
+    pub(crate) group: usize,
+    pub(crate) n_heads: usize,
+    pub(crate) head_dim: usize,
+    pub(crate) d: usize,
+    pub(crate) words_per_row: usize,
+    pub(crate) groups_per_head: usize,
+}
+
+impl PackedLayout {
+    pub(crate) fn new(bits: u8, group: usize, cfg: &ModelConfig) -> PackedLayout {
+        assert!(matches!(bits, 1..=8), "kv bits must be 1..=8");
+        let hd = cfg.head_dim();
+        let geff = group.clamp(1, hd);
+        PackedLayout {
+            bits,
+            group: geff,
+            n_heads: cfg.n_heads,
+            head_dim: hd,
+            d: cfg.d_model,
+            words_per_row: PackedInts::words_needed(cfg.d_model, bits),
+            groups_per_head: hd.div_ceil(geff),
+        }
+    }
+
+    pub(crate) fn groups_per_row(&self) -> usize {
+        self.n_heads * self.groups_per_head
+    }
+
+    /// Quantize one `[d_model]` row and push its packed words and per-group
+    /// `(scale, zero)` pairs. Per (head, group): asymmetric min/max range,
+    /// `scale = (max − min) / (2^bits − 1)`, f32 zero-point `z = −min/scale`
+    /// (un-rounded, like the weight format's stored zeros), so `min` and
+    /// `max` dequantize exactly. The bit layout is produced by
+    /// [`PackedInts::pack`] itself — one source of truth for the word format
+    /// the `dot_span`/`axpy_span` kernels read.
+    pub(crate) fn quantize_row_into(
+        &self,
+        row: &[f32],
+        words: &mut Vec<u32>,
+        scales: &mut Vec<f32>,
+        zeros: &mut Vec<f32>,
+    ) {
+        debug_assert_eq!(row.len(), self.d);
+        let maxq = ((1u32 << self.bits) - 1) as f32;
+        let mut qvals = vec![0u8; self.d];
+        for h in 0..self.n_heads {
+            let base = h * self.head_dim;
+            for g in 0..self.groups_per_head {
+                let c0 = base + g * self.group;
+                let c1 = (c0 + self.group).min(base + self.head_dim);
+                let slice = &row[c0..c1];
+                let lo = slice.iter().copied().fold(f32::INFINITY, f32::min);
+                let hi = slice.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+                let range = hi - lo;
+                let scale = if range > 0.0 { range / maxq } else { 1.0 };
+                scales.push(scale);
+                zeros.push(-lo / scale);
+                for (q, &v) in qvals[c0..c1].iter_mut().zip(slice) {
+                    *q = (((v - lo) / scale).round()).clamp(0.0, maxq) as u8;
+                }
+            }
+        }
+        let packed = PackedInts::pack(&qvals, self.bits);
+        debug_assert_eq!(packed.words.len(), self.words_per_row);
+        words.extend_from_slice(&packed.words);
+    }
+
+    /// Per-group query sums for `head` — the shared zero-point term,
+    /// computed once per (head, step) and reused across every cached row.
+    pub(crate) fn head_gsums(&self, q: &[f32], head: usize, gsum: &mut [f32]) {
+        let base = head * self.head_dim;
+        debug_assert!(q.len() >= base + self.head_dim);
+        for (g, chunk) in q[base..base + self.head_dim].chunks(self.group).enumerate() {
+            gsum[g] = chunk.iter().sum();
+        }
+    }
+
+    /// One row's fused attend score for `head` (caller applies the 1/√d
+    /// scale): `words` is the row's packed words, `srow`/`zrow` its
+    /// `groups_per_head` scale/zero slices for this head, `gsum` from
+    /// [`Self::head_gsums`].
+    pub(crate) fn row_score(
+        &self,
+        words: &[u32],
+        srow: &[f32],
+        zrow: &[f32],
+        head: usize,
+        q: &[f32],
+        gsum: &[f32],
+    ) -> f32 {
+        let base = head * self.head_dim;
+        let mut y = 0.0f32;
+        for g in 0..self.groups_per_head {
+            let c0 = base + g * self.group;
+            let c1 = (c0 + self.group).min(base + self.head_dim);
+            let qdot = dot_span(words, self.bits, c0, c1, q);
+            y += srow[g] * (qdot - zrow[g] * gsum[g]);
+        }
+        y
+    }
+
+    /// Accumulate `w · dequant(row)[head span]` into `ctx_head` through the
+    /// fused dequant-axpy kernel.
+    pub(crate) fn row_axpy(
+        &self,
+        words: &[u32],
+        srow: &[f32],
+        zrow: &[f32],
+        head: usize,
+        w: f32,
+        ctx_head: &mut [f32],
+    ) {
+        let base = head * self.head_dim;
+        for g in 0..self.groups_per_head {
+            let c0 = base + g * self.group;
+            let c1 = (c0 + self.group).min(base + self.head_dim);
+            let a = w * srow[g];
+            let b = -(a * zrow[g]);
+            axpy_span(words, self.bits, c0, c1, a, b, &mut ctx_head[c0 - base..c1 - base]);
+        }
+    }
+
+    /// Dequantize one packed row (its full `groups_per_row` scale/zero
+    /// slices) back to f32, reconstructing through [`PackedInts`] so reads
+    /// share pack's layout code.
+    pub(crate) fn dequant_row_from(&self, words: &[u32], srow: &[f32], zrow: &[f32]) -> Vec<f32> {
+        let packed =
+            PackedInts { bits: self.bits, len: self.d, words: words.to_vec() };
+        let qvals = packed.unpack();
+        let mut out = vec![0.0f32; self.d];
+        for h in 0..self.n_heads {
+            let base = h * self.head_dim;
+            for g in 0..self.groups_per_head {
+                let gi = h * self.groups_per_head + g;
+                let (s, z) = (srow[gi], zrow[gi]);
+                let c0 = base + g * self.group;
+                let c1 = (c0 + self.group).min(base + self.head_dim);
+                for (o, &qv) in out[c0..c1].iter_mut().zip(&qvals[c0..c1]) {
+                    *o = s * (qv as f32 - z);
+                }
+            }
+        }
+        out
+    }
+}
+
 /// Dense f32 cache rows with amortized doubling growth (the seed
 /// implementation rebuilt a `Matrix` per appended token — O(T²) copies over
 /// a decode).
@@ -123,17 +281,12 @@ pub struct DenseKv {
 
 /// Packed group-wise cache: one quantized row per appended token, flat word
 /// storage (`rows × words_per_row`) plus per-row `(scale, zero)` pairs
-/// (`rows × groups_per_row`), all with doubling growth.
+/// (`rows × groups_per_row`), all with doubling growth. The quantize and
+/// per-row attend math lives on [`PackedLayout`], shared with the paged
+/// variant.
 #[derive(Clone, Debug)]
 pub struct PackedKv {
-    bits: u8,
-    /// Effective group size after clamping to `head_dim`.
-    group: usize,
-    n_heads: usize,
-    head_dim: usize,
-    d: usize,
-    words_per_row: usize,
-    groups_per_head: usize,
+    lay: PackedLayout,
     rows: usize,
     words: Vec<u32>,
     scales: Vec<f32>,
@@ -142,15 +295,27 @@ pub struct PackedKv {
 }
 
 /// One K or V cache for one layer, in whichever representation the decode
-/// was configured with ([`KvSpec`]).
+/// was configured with: contiguous with doubling growth (`Dense`/`Packed`),
+/// or page-table backed by a budget-bounded [`KvPool`] (`Paged`, PR 6).
 #[derive(Clone, Debug)]
 pub enum KvCache {
     Dense(DenseKv),
     Packed(PackedKv),
+    Paged(PagedKv),
 }
 
 impl KvCache {
+    /// A contiguous (non-pooled) cache — `new_in` with no pool.
     pub fn new(spec: KvSpec, cfg: &ModelConfig) -> KvCache {
+        KvCache::new_in(spec, cfg, None)
+    }
+
+    /// A cache for `spec`: paged out of `pool` when one is given, otherwise
+    /// contiguous with doubling growth.
+    pub fn new_in(spec: KvSpec, cfg: &ModelConfig, pool: Option<&KvPool>) -> KvCache {
+        if let Some(pool) = pool {
+            return KvCache::Paged(PagedKv::new(spec, cfg, pool));
+        }
         match spec {
             KvSpec::DenseF32 => KvCache::Dense(DenseKv {
                 d: cfg.d_model,
@@ -159,25 +324,14 @@ impl KvCache {
                 data: Vec::new(),
                 grows: 0,
             }),
-            KvSpec::PackedGroupwise { bits, group } => {
-                assert!(matches!(bits, 1..=8), "kv bits must be 1..=8");
-                let hd = cfg.head_dim();
-                let geff = group.clamp(1, hd);
-                KvCache::Packed(PackedKv {
-                    bits,
-                    group: geff,
-                    n_heads: cfg.n_heads,
-                    head_dim: hd,
-                    d: cfg.d_model,
-                    words_per_row: PackedInts::words_needed(cfg.d_model, bits),
-                    groups_per_head: hd.div_ceil(geff),
-                    rows: 0,
-                    words: Vec::new(),
-                    scales: Vec::new(),
-                    zeros: Vec::new(),
-                    grows: 0,
-                })
-            }
+            KvSpec::PackedGroupwise { bits, group } => KvCache::Packed(PackedKv {
+                lay: PackedLayout::new(bits, group, cfg),
+                rows: 0,
+                words: Vec::new(),
+                scales: Vec::new(),
+                zeros: Vec::new(),
+                grows: 0,
+            }),
         }
     }
 
@@ -186,8 +340,9 @@ impl KvCache {
         match self {
             KvCache::Dense(_) => KvSpec::DenseF32,
             KvCache::Packed(c) => {
-                KvSpec::PackedGroupwise { bits: c.bits, group: c.group }
+                KvSpec::PackedGroupwise { bits: c.lay.bits, group: c.lay.group }
             }
+            KvCache::Paged(c) => c.spec(),
         }
     }
 
@@ -196,6 +351,7 @@ impl KvCache {
         match self {
             KvCache::Dense(c) => c.rows,
             KvCache::Packed(c) => c.rows,
+            KvCache::Paged(c) => c.rows(),
         }
     }
 
@@ -204,17 +360,30 @@ impl KvCache {
         match self {
             KvCache::Dense(c) => c.rows * c.d * 4,
             KvCache::Packed(c) => {
-                c.rows * (c.words_per_row * 4 + c.n_heads * c.groups_per_head * 8)
+                c.rows * (c.lay.words_per_row * 4 + c.lay.groups_per_row() * 8)
             }
+            KvCache::Paged(c) => c.nbytes(),
         }
     }
 
-    /// How many times the backing storage grew — appends are amortized, so
-    /// this stays O(log rows) (the long-sequence append test rides on it).
+    /// How many times the backing storage grew. Only meaningful for the
+    /// contiguous variants — their appends amortize to O(log rows) grows
+    /// (the long-sequence append test rides on it). A paged cache never
+    /// grows a buffer (pages are fixed-size and pre-sized), so it reports 0
+    /// rather than conflating the two storage disciplines.
     pub fn grow_events(&self) -> usize {
         match self {
             KvCache::Dense(c) => c.grows,
             KvCache::Packed(c) => c.grows,
+            KvCache::Paged(_) => 0,
+        }
+    }
+
+    /// Pool pages held (0 for the contiguous variants).
+    pub fn pages_used(&self) -> usize {
+        match self {
+            KvCache::Paged(c) => c.pages_used(),
+            _ => 0,
         }
     }
 
@@ -223,6 +392,7 @@ impl KvCache {
         match self {
             KvCache::Dense(c) => c.append(row),
             KvCache::Packed(c) => c.append(row),
+            KvCache::Paged(c) => c.append(row),
         }
     }
 
@@ -242,6 +412,7 @@ impl KvCache {
                 }
             }
             KvCache::Packed(c) => c.head_scores(head, q, scale, scores),
+            KvCache::Paged(c) => c.head_scores(head, q, scale, scores),
         }
     }
 
@@ -260,6 +431,7 @@ impl KvCache {
                 }
             }
             KvCache::Packed(c) => c.head_axpy(head, probs, ctx_head),
+            KvCache::Paged(c) => c.head_axpy(head, probs, ctx_head),
         }
     }
 
@@ -269,6 +441,7 @@ impl KvCache {
         match self {
             KvCache::Dense(c) => c.data[t * c.d..(t + 1) * c.d].to_vec(),
             KvCache::Packed(c) => c.dequant_row(t),
+            KvCache::Paged(c) => c.dequant_row(t),
         }
     }
 }
@@ -289,7 +462,15 @@ pub struct LayerKv {
 
 impl LayerKv {
     pub fn new(spec: KvSpec, cfg: &ModelConfig) -> LayerKv {
-        LayerKv { k: KvCache::new(spec, cfg), v: KvCache::new(spec, cfg) }
+        LayerKv::new_in(spec, cfg, None)
+    }
+
+    /// Like [`LayerKv::new`], but paged out of `pool` when one is given.
+    pub fn new_in(spec: KvSpec, cfg: &ModelConfig, pool: Option<&KvPool>) -> LayerKv {
+        LayerKv {
+            k: KvCache::new_in(spec, cfg, pool),
+            v: KvCache::new_in(spec, cfg, pool),
+        }
     }
 
     /// Bytes currently held by this layer's K+V rows.
@@ -305,6 +486,11 @@ impl LayerKv {
     /// Cached rows (= tokens this layer has seen).
     pub fn rows(&self) -> usize {
         self.k.rows()
+    }
+
+    /// Pool pages held across both caches (0 when not paged).
+    pub fn pages_used(&self) -> usize {
+        self.k.pages_used() + self.v.pages_used()
     }
 }
 
@@ -333,20 +519,12 @@ impl DenseKv {
 }
 
 impl PackedKv {
-    fn groups_per_row(&self) -> usize {
-        self.n_heads * self.groups_per_head
-    }
-
-    /// Quantize + append one row. Per (head, group): asymmetric min/max
-    /// range, `scale = (max − min) / (2^bits − 1)`, f32 zero-point
-    /// `z = −min / scale` (un-rounded, like the weight format's stored
-    /// zeros), so `min` and `max` dequantize exactly. The bit layout is
-    /// produced by [`PackedInts::pack`] itself — one source of truth for the
-    /// word format the `dot_span`/`axpy_span` kernels read.
+    /// Quantize + append one row (the math lives on
+    /// [`PackedLayout::quantize_row_into`]; this layer only owns the
+    /// doubling-growth storage).
     fn append(&mut self, row: &[f32]) {
-        debug_assert_eq!(row.len(), self.d);
-        let wpr = self.words_per_row;
-        let gpr = self.groups_per_row();
+        let wpr = self.lay.words_per_row;
+        let gpr = self.lay.groups_per_row();
         let mut grew = false;
         grew |= reserve_doubling(&mut self.words, wpr, 16 * wpr);
         grew |= reserve_doubling(&mut self.scales, gpr, 16 * gpr);
@@ -354,108 +532,46 @@ impl PackedKv {
         if grew {
             self.grows += 1;
         }
-        let maxq = ((1u32 << self.bits) - 1) as f32;
-        let mut qvals = vec![0u8; self.d];
-        for h in 0..self.n_heads {
-            let base = h * self.head_dim;
-            for g in 0..self.groups_per_head {
-                let c0 = base + g * self.group;
-                let c1 = (c0 + self.group).min(base + self.head_dim);
-                let slice = &row[c0..c1];
-                let lo = slice.iter().copied().fold(f32::INFINITY, f32::min);
-                let hi = slice.iter().copied().fold(f32::NEG_INFINITY, f32::max);
-                let range = hi - lo;
-                let scale = if range > 0.0 { range / maxq } else { 1.0 };
-                self.scales.push(scale);
-                self.zeros.push(-lo / scale);
-                for (q, &v) in qvals[c0..c1].iter_mut().zip(slice) {
-                    *q = (((v - lo) / scale).round()).clamp(0.0, maxq) as u8;
-                }
-            }
-        }
-        let packed = PackedInts::pack(&qvals, self.bits);
-        debug_assert_eq!(packed.words.len(), wpr);
-        self.words.extend_from_slice(&packed.words);
+        self.lay.quantize_row_into(row, &mut self.words, &mut self.scales, &mut self.zeros);
         self.rows += 1;
     }
 
     fn head_scores(&self, head: usize, q: &[f32], scale: f32, scores: &mut Vec<f32>) {
-        let base = head * self.head_dim;
-        debug_assert!(q.len() >= base + self.head_dim);
-        let gph = self.groups_per_head;
-        let gpr = self.groups_per_row();
-        // Per-group query sums — the shared zero-point term, computed once
-        // per (head, step) and reused across every cached row.
+        let lay = self.lay;
+        let gph = lay.groups_per_head;
+        let gpr = lay.groups_per_row();
         let mut gsum = crate::util::scratch::take_f32(gph);
-        for (g, chunk) in q[base..base + self.head_dim].chunks(self.group).enumerate() {
-            gsum[g] = chunk.iter().sum();
-        }
+        lay.head_gsums(q, head, &mut gsum);
         scores.reserve(self.rows);
         for t in 0..self.rows {
-            let words = &self.words[t * self.words_per_row..(t + 1) * self.words_per_row];
+            let words = &self.words[t * lay.words_per_row..(t + 1) * lay.words_per_row];
             let srow = &self.scales[t * gpr + head * gph..t * gpr + (head + 1) * gph];
             let zrow = &self.zeros[t * gpr + head * gph..t * gpr + (head + 1) * gph];
-            let mut y = 0.0f32;
-            for g in 0..gph {
-                let c0 = base + g * self.group;
-                let c1 = (c0 + self.group).min(base + self.head_dim);
-                let qdot = dot_span(words, self.bits, c0, c1, q);
-                y += srow[g] * (qdot - zrow[g] * gsum[g]);
-            }
-            scores.push(y * scale);
+            scores.push(lay.row_score(words, srow, zrow, head, q, &gsum) * scale);
         }
     }
 
     fn head_axpy(&self, head: usize, probs: &[f32], ctx_head: &mut [f32]) {
-        let base = head * self.head_dim;
-        debug_assert!(probs.len() >= self.rows && ctx_head.len() >= self.head_dim);
-        let gph = self.groups_per_head;
-        let gpr = self.groups_per_row();
+        let lay = self.lay;
+        debug_assert!(probs.len() >= self.rows && ctx_head.len() >= lay.head_dim);
+        let gph = lay.groups_per_head;
+        let gpr = lay.groups_per_row();
         for (t, &w) in probs.iter().enumerate().take(self.rows) {
-            let words = &self.words[t * self.words_per_row..(t + 1) * self.words_per_row];
+            let words = &self.words[t * lay.words_per_row..(t + 1) * lay.words_per_row];
             let srow = &self.scales[t * gpr + head * gph..t * gpr + (head + 1) * gph];
             let zrow = &self.zeros[t * gpr + head * gph..t * gpr + (head + 1) * gph];
-            for g in 0..gph {
-                let c0 = base + g * self.group;
-                let c1 = (c0 + self.group).min(base + self.head_dim);
-                let a = w * srow[g];
-                let b = -(a * zrow[g]);
-                axpy_span(
-                    words,
-                    self.bits,
-                    c0,
-                    c1,
-                    a,
-                    b,
-                    &mut ctx_head[c0 - base..c1 - base],
-                );
-            }
+            lay.row_axpy(words, srow, zrow, head, w, ctx_head);
         }
     }
 
     fn dequant_row(&self, t: usize) -> Vec<f32> {
-        let gpr = self.groups_per_row();
-        // Reconstruct through PackedInts so reads share pack's layout code.
-        let packed = PackedInts {
-            bits: self.bits,
-            len: self.d,
-            words: self.words[t * self.words_per_row..(t + 1) * self.words_per_row].to_vec(),
-        };
-        let qvals = packed.unpack();
-        let mut out = vec![0.0f32; self.d];
-        for h in 0..self.n_heads {
-            let base = h * self.head_dim;
-            for g in 0..self.groups_per_head {
-                let gi = t * gpr + h * self.groups_per_head + g;
-                let (s, z) = (self.scales[gi], self.zeros[gi]);
-                let c0 = base + g * self.group;
-                let c1 = (c0 + self.group).min(base + self.head_dim);
-                for (o, &q) in out[c0..c1].iter_mut().zip(&qvals[c0..c1]) {
-                    *o = s * (q as f32 - z);
-                }
-            }
-        }
-        out
+        let lay = self.lay;
+        let gpr = lay.groups_per_row();
+        lay.dequant_row_from(
+            &self.words[t * lay.words_per_row..(t + 1) * lay.words_per_row],
+            &self.scales[t * gpr..(t + 1) * gpr],
+            &self.zeros[t * gpr..(t + 1) * gpr],
+        )
     }
 }
 
@@ -610,6 +726,63 @@ mod tests {
                 assert!(eq_bits(&a, &b), "bits={bits} h={h}: scores diverged");
                 assert!(eq_bits(&ctx_a, &ctx_b), "bits={bits} h={h}: ctx diverged");
             }
+        }
+    }
+
+    #[test]
+    fn paged_cache_attends_bit_identically() {
+        // The tentpole invariant at cache granularity: a page-table cache
+        // fed the same rows must produce bit-identical scores/ctx to the
+        // contiguous cache, under both kernel tables — the storage layout
+        // must be invisible to the attend math.
+        use crate::kvpool::{KvPool, PoolCfg};
+        let cfg = cfg();
+        let _guard = crate::tensor::kernels::force_test_lock();
+        let eq_bits = |x: &[f32], y: &[f32]| {
+            x.len() == y.len() && x.iter().zip(y).all(|(p, q)| p.to_bits() == q.to_bits())
+        };
+        for spec in [
+            KvSpec::DenseF32,
+            KvSpec::PackedGroupwise { bits: 3, group: 16 },
+            KvSpec::PackedGroupwise { bits: 8, group: 16 },
+        ] {
+            let pool = KvPool::new(
+                PoolCfg { budget_bytes: 1 << 20, page_tokens: 4 },
+                spec,
+                &cfg,
+            );
+            let mut flat = KvCache::new(spec, &cfg);
+            let mut paged = KvCache::new_in(spec, &cfg, Some(&pool));
+            for row in &rows(11, cfg.d_model, 31) {
+                flat.append(row);
+                paged.append(row);
+            }
+            assert_eq!(paged.pages_used(), 3, "11 rows / 4-token pages");
+            assert_eq!(flat.pages_used(), 0);
+            assert_eq!(paged.nbytes(), flat.nbytes());
+            let mut rng = Rng::new(17);
+            let q: Vec<f32> = rng.normal_vec(cfg.d_model, 1.0);
+            let probs: Vec<f32> = (0..11).map(|i| 1.0 / (i as f32 + 2.0)).collect();
+            for forced in [ForcedKernel::Scalar, ForcedKernel::Best] {
+                set_forced(forced);
+                for h in 0..cfg.n_heads {
+                    let (mut a, mut b) = (Vec::new(), Vec::new());
+                    flat.head_scores(h, &q, 0.25, &mut a);
+                    paged.head_scores(h, &q, 0.25, &mut b);
+                    assert!(eq_bits(&a, &b), "{}: paged scores diverged (h={h})", spec.label());
+                    let mut ctx_a = vec![0.0f32; cfg.head_dim()];
+                    let mut ctx_b = vec![0.0f32; cfg.head_dim()];
+                    flat.head_axpy(h, &probs, &mut ctx_a);
+                    paged.head_axpy(h, &probs, &mut ctx_b);
+                    assert!(
+                        eq_bits(&ctx_a, &ctx_b),
+                        "{}: paged ctx diverged (h={h})",
+                        spec.label()
+                    );
+                    assert_eq!(flat.dequant_row(h), paged.dequant_row(h));
+                }
+            }
+            set_forced(ForcedKernel::Auto);
         }
     }
 

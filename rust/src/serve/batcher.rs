@@ -14,17 +14,23 @@
 //! dense f32 weights and the packed fused-dequant execution path, and —
 //! with [`BatcherConfig::shards`] > 1 — the layer-sharded pipeline executor
 //! ([`crate::shard`]), where per-step scheduling is what keeps every shard
-//! busy.
+//! busy. With [`BatcherConfig::pool`] set, every sequence's KV is paged out
+//! of a bounded [`crate::kvpool::KvPool`] and the scheduler adds admission
+//! gating plus youngest-first preemption (see [`super::sched`]); on top of
+//! that, [`BatcherConfig::max_queue`] sheds load at the door — a full queue
+//! fails `generate` immediately instead of buffering unboundedly.
 //!
 //! [`DynamicBatcher`] owns its worker: dropping it closes the queue, drains
 //! any in-flight replies with an error, joins the scheduler thread (and,
 //! transitively, the shard threads) — no thread outlives its batcher.
 
-use super::sched::{scheduler_loop, LocalBackend, ShardBackend};
+use super::sched::{scheduler_loop, LocalBackend, PoolMirror, ShardBackend};
+use crate::kvpool::PoolCfg;
 use crate::model::{KvSpec, ModelExec};
 use crate::shard::ShardedModel;
 use anyhow::{anyhow, Result};
-use std::sync::mpsc::{channel, Sender};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, RecvError, RecvTimeoutError, Sender, TryRecvError};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
@@ -47,6 +53,12 @@ pub struct GenResponse {
     pub decode_time: Duration,
     /// The largest batch this request ever shared a token step with.
     pub batch_size: usize,
+    /// High-water mark of KV-pool pages this request's caches held (0
+    /// without `--kv-pool-mb`).
+    pub kv_pages_used: usize,
+    /// Times this request was preempted for pool pressure (pages released,
+    /// then deterministically re-prefilled after re-admission).
+    pub preemptions: usize,
 }
 
 impl GenResponse {
@@ -72,6 +84,14 @@ pub struct BatcherConfig {
     /// single worker; N > 1 splits layers over N shard threads (clamped to
     /// the layer count) with channel-based activation handoff.
     pub shards: usize,
+    /// Paged KV-pool budget (`tsgo serve --kv-pool-mb/--kv-page-tokens`):
+    /// `None` = unbounded contiguous caches. With `shards > 1` the budget
+    /// splits into shard-local sub-pools proportional to layer count.
+    pub pool: Option<PoolCfg>,
+    /// Requests allowed in the queue (enqueued but not yet decoding);
+    /// `generate` past this limit fails immediately with a "server
+    /// overloaded" error instead of queueing unboundedly.
+    pub max_queue: usize,
 }
 
 impl Default for BatcherConfig {
@@ -81,6 +101,8 @@ impl Default for BatcherConfig {
             max_wait: Duration::from_millis(5),
             kv: KvSpec::DenseF32,
             shards: 1,
+            pool: None,
+            max_queue: 256,
         }
     }
 }
@@ -91,10 +113,44 @@ pub(crate) struct Pending {
     pub(crate) reply: Sender<Result<GenResponse, String>>,
 }
 
+/// The scheduler's receiving end of the request queue, paired with the
+/// shared depth counter behind [`BatcherConfig::max_queue`]. The counter is
+/// incremented by `generate` on enqueue and decremented by
+/// [`RequestQueue::settle`] exactly once per request, when the scheduler
+/// *resolves* it (admitted to decode, answered directly, or drained) — a
+/// pool-deferred request stays counted, so the overload gate keeps
+/// back-pressuring while the KV pool is the bottleneck.
+pub(crate) struct RequestQueue {
+    rx: Receiver<Pending>,
+    depth: Arc<AtomicUsize>,
+}
+
+impl RequestQueue {
+    pub(crate) fn recv(&self) -> Result<Pending, RecvError> {
+        self.rx.recv()
+    }
+
+    pub(crate) fn recv_timeout(&self, timeout: Duration) -> Result<Pending, RecvTimeoutError> {
+        self.rx.recv_timeout(timeout)
+    }
+
+    pub(crate) fn try_recv(&self) -> Result<Pending, TryRecvError> {
+        self.rx.try_recv()
+    }
+
+    /// One request left the queue for good: reopen its `max_queue` slot.
+    pub(crate) fn settle(&self) {
+        self.depth.fetch_sub(1, Ordering::AcqRel);
+    }
+}
+
 /// A shared handle: submit requests, a background scheduler serves them.
 pub struct DynamicBatcher {
     queue: Option<Sender<Pending>>,
     worker: Option<std::thread::JoinHandle<()>>,
+    /// Requests enqueued but not yet resolved by the scheduler.
+    depth: Arc<AtomicUsize>,
+    max_queue: usize,
 }
 
 impl DynamicBatcher {
@@ -105,6 +161,8 @@ impl DynamicBatcher {
         cfg: BatcherConfig,
     ) -> DynamicBatcher {
         let (tx, rx) = channel::<Pending>();
+        let depth = Arc::new(AtomicUsize::new(0));
+        let queue = RequestQueue { rx, depth: depth.clone() };
         let worker = std::thread::Builder::new()
             .name("tsgo-batcher".into())
             .spawn(move || {
@@ -113,27 +171,52 @@ impl DynamicBatcher {
                     // (`new` → plan → `decoder`), so the printed plan and
                     // the executing plan can only come from one recipe.
                     let sharded = ShardedModel::new(model, cfg.shards);
-                    let mut backend = ShardBackend::new(sharded.decoder(cfg.kv));
-                    scheduler_loop(&mut backend, &cfg, rx);
+                    let mirror = cfg.pool.map(|pc| {
+                        PoolMirror::new(sharded.plan(), sharded.config(), cfg.kv, pc)
+                    });
+                    let dec = sharded.decoder_pooled(cfg.kv, cfg.pool);
+                    let mut backend = ShardBackend::new(dec, mirror);
+                    scheduler_loop(&mut backend, &cfg, queue);
                 } else {
-                    let mut backend = LocalBackend::new(model, cfg.kv, cfg.max_batch);
-                    scheduler_loop(&mut backend, &cfg, rx);
+                    let mut backend =
+                        LocalBackend::new(model, cfg.kv, cfg.max_batch, cfg.pool);
+                    scheduler_loop(&mut backend, &cfg, queue);
                 }
             })
             .expect("spawn batcher worker thread");
-        DynamicBatcher { queue: Some(tx), worker: Some(worker) }
+        DynamicBatcher {
+            queue: Some(tx),
+            worker: Some(worker),
+            depth,
+            max_queue: cfg.max_queue,
+        }
     }
 
     /// Submit a request; blocks until the response is ready. Decode
     /// failures (e.g. a greedy token outside the byte range) come back as
-    /// errors, never as silently-mangled tokens.
+    /// errors, never as silently-mangled tokens. A queue already at
+    /// [`BatcherConfig::max_queue`] unresolved requests fails immediately —
+    /// load shedding at the door instead of unbounded buffering.
     pub fn generate(&self, req: GenRequest) -> Result<GenResponse> {
+        let d = self.depth.fetch_add(1, Ordering::AcqRel);
+        if d >= self.max_queue {
+            self.depth.fetch_sub(1, Ordering::AcqRel);
+            return Err(anyhow!(
+                "server overloaded: {d} requests already queued (max_queue = {})",
+                self.max_queue
+            ));
+        }
         let (tx, rx) = channel();
-        self.queue
+        if self
+            .queue
             .as_ref()
             .expect("batcher queue open until drop")
             .send(Pending { req, enqueued: Instant::now(), reply: tx })
-            .map_err(|_| anyhow!("batcher unavailable"))?;
+            .is_err()
+        {
+            self.depth.fetch_sub(1, Ordering::AcqRel);
+            return Err(anyhow!("batcher unavailable"));
+        }
         rx.recv().map_err(|_| anyhow!("batcher unavailable"))?.map_err(|e| anyhow!(e))
     }
 }
@@ -321,6 +404,22 @@ mod tests {
             .unwrap_err()
             .to_string();
         assert!(err.contains("empty"), "{err}");
+    }
+
+    #[test]
+    fn max_queue_overload_fails_immediately() {
+        // A full queue sheds load at the door: the error is instant (no
+        // enqueue, no waiting on the scheduler) and names the limit.
+        let b = DynamicBatcher::spawn(
+            model(),
+            BatcherConfig { max_queue: 0, ..Default::default() },
+        );
+        let err = b
+            .generate(GenRequest { prompt: vec![1, 2], max_new: 2 })
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("server overloaded"), "{err}");
+        assert!(err.contains("max_queue = 0"), "{err}");
     }
 
     #[test]

@@ -16,6 +16,11 @@ pub struct ClientResponse {
     /// Time spent actually decoding once admitted.
     pub decode_ms: f64,
     pub batch_size: usize,
+    /// Peak KV-pool pages this request held (0 when the server runs
+    /// without `--kv-pool-mb`, or against a pre-pool server).
+    pub kv_pages_used: usize,
+    /// Times this request was preempted and re-prefilled for pool pressure.
+    pub preemptions: usize,
 }
 
 /// Send one generation request and wait for the reply.
@@ -41,5 +46,7 @@ pub fn request_generation(addr: &str, prompt: &[u8], max_new: usize) -> Result<C
         queue_wait_ms: j.get("queue_wait_ms").as_f64().unwrap_or(0.0),
         decode_ms: j.get("decode_ms").as_f64().unwrap_or(0.0),
         batch_size: j.get("batch_size").as_usize().unwrap_or(1),
+        kv_pages_used: j.get("kv_pages_used").as_usize().unwrap_or(0),
+        preemptions: j.get("preemptions").as_usize().unwrap_or(0),
     })
 }

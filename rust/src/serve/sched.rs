@@ -12,6 +12,25 @@
 //! property `GenResponse::queue_wait` makes observable and
 //! `tests/sharded_exec.rs` locks in.
 //!
+//! **Paged-KV back-pressure (PR 6).** With `--kv-pool-mb` set, every
+//! sequence's KV lives in fixed-size pages drawn from a global [`KvPool`]
+//! budget, and the scheduler becomes the memory arbiter:
+//!
+//! * *Admission* is budget-aware: [`StepBackend::admit`] returns
+//!   [`AdmitVerdict::Defer`] when the pool lacks free pages for the
+//!   prompt's prefill plus a one-step reservation margin (the request waits
+//!   in FIFO order without blocking the batch), and `Reject` only when the
+//!   prompt could never fit the whole pool.
+//! * *Steps* are gated: before each token step the scheduler asks
+//!   [`StepBackend::can_step`] whether every sequence crossing a page
+//!   boundary can get its pages. If not, it **preempts the youngest
+//!   sequence** — releases all its pages, keeps its generated tokens, and
+//!   requeues it for deterministic re-prefill (greedy decode replays the
+//!   prompt + generated chain to rebuild byte-identical KV state).
+//!   Preempted sequences re-admit with strict priority over new work, so
+//!   every request still completes; `queue_wait` keeps its original
+//!   enqueue anchor across preemptions.
+//!
 //! The scheduler is backend-agnostic via [`StepBackend`]:
 //!
 //! * [`LocalBackend`] — single-worker execution: every sequence owns a full
@@ -25,24 +44,65 @@
 //!   [`ShardedDecoder`]'s shard threads, which is exactly what makes the
 //!   step-level design matter — per-step scheduling keeps microbatches
 //!   flowing so all shards stay busy, where whole-batch scheduling would
-//!   drain the pipe between generations.
+//!   drain the pipe between generations. Pool accounting runs through a
+//!   scheduler-side [`PoolMirror`] of the shard-local sub-pools, because
+//!   `retire` is an asynchronous packet: the mirror frees pages the moment
+//!   the scheduler decides, and channel FIFO order guarantees each shard
+//!   processes that release before any allocation the decision enabled.
 
-use super::batcher::{argmax_token, BatcherConfig, GenResponse, Pending};
-use crate::model::{decode_head, decode_layer_step, KvSpec, LayerKv, ModelExec};
-use crate::shard::ShardedDecoder;
+use super::batcher::{argmax_token, BatcherConfig, GenResponse, Pending, RequestQueue};
+use crate::kvpool::{KvPool, PoolCfg};
+use crate::model::{
+    decode_head, decode_layer_step, KvSpec, LayerKv, ModelConfig, ModelExec,
+};
+use crate::shard::{ShardPlan, ShardedDecoder};
+use std::collections::VecDeque;
 use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
+/// What admission says about a sequence, given the KV budget.
+pub(crate) enum AdmitVerdict {
+    /// Admitted into this slot.
+    Slot(usize),
+    /// No room right now — retry once pages free up (retire/preemption).
+    Defer,
+    /// Can never fit (e.g. the prompt alone exceeds the whole pool):
+    /// answer the request with this error.
+    Reject(String),
+}
+
 /// The execution surface the scheduler drives: admit a sequence slot, step
 /// a batch of `(slot, pos, token)` jobs, retire a slot. Implementations own
-/// all per-sequence decode state; the scheduler owns all policy.
+/// all per-sequence decode state; the scheduler owns all policy. The pool
+/// hooks (`can_step`/`preempt`/`slot_pages`/`pool_stats`) have pass-through
+/// defaults so an unpooled backend is exactly the pre-PR-6 surface.
 pub(crate) trait StepBackend {
-    fn admit(&mut self) -> Result<usize, String>;
+    /// Try to start a sequence whose prompt is `prompt_len` tokens.
+    fn admit(&mut self, prompt_len: usize) -> AdmitVerdict;
     fn retire(&mut self, slot: usize);
     /// One token step per job; returns each job's next-position logits in
     /// job order. An `Err` entry retires that sequence with the error.
     fn step(&mut self, jobs: &[(usize, usize, u8)]) -> Vec<Result<Vec<f32>, String>>;
+    /// Whether every job of this step can append its KV row without
+    /// exhausting the page budget. `true` means `step(jobs)` cannot fail
+    /// on page allocation.
+    fn can_step(&self, _jobs: &[(usize, usize, u8)]) -> bool {
+        true
+    }
+    /// Release `slot` (like [`Self::retire`]) but record it as a
+    /// preemption: the sequence will be re-admitted and re-prefilled.
+    fn preempt(&mut self, slot: usize) {
+        self.retire(slot);
+    }
+    /// Pool pages currently held by `slot` (0 when unpooled).
+    fn slot_pages(&self, _slot: usize) -> usize {
+        0
+    }
+    /// `(used_pages, total_pages)` of the pool, when there is one.
+    fn pool_stats(&self) -> Option<(usize, usize)> {
+        None
+    }
 }
 
 /// One full-depth decode step — the exact [`crate::model::DecodeState`]
@@ -94,8 +154,11 @@ impl StepPool {
                 .spawn(move || loop {
                     // Classic shared-receiver pool: the idle worker holds
                     // the lock while blocked in recv; peers queue on the
-                    // mutex. Pickup is serialized, compute is parallel.
-                    let job = match rx.lock().unwrap().recv() {
+                    // mutex. Pickup is serialized, compute is parallel. A
+                    // poisoned lock (a peer panicked mid-pickup) is
+                    // recovered, not propagated — one dead worker must not
+                    // cascade into a dead pool.
+                    let job = match rx.lock().unwrap_or_else(|p| p.into_inner()).recv() {
                         Ok(j) => j,
                         Err(_) => break, // backend dropped: pool drains
                     };
@@ -127,6 +190,11 @@ impl Drop for StepPool {
 /// time decodes inline and never pays for idle workers) and lives until
 /// the backend drops — the scheduler calls `step` once per decoded token,
 /// so a scoped spawn-per-call would pay thread creation per token.
+///
+/// With a [`KvPool`] configured, every bank's caches are paged out of that
+/// shared budget; admission and the per-step gate are exact because decode
+/// appends K and V on every layer each step, so a sequence at `rows` tokens
+/// holds exactly `2 · n_layers · ⌈rows / page_tokens⌉` pages.
 pub(crate) struct LocalBackend<M: ModelExec> {
     model: Arc<M>,
     kv: KvSpec,
@@ -134,42 +202,80 @@ pub(crate) struct LocalBackend<M: ModelExec> {
     /// workers than concurrently decoding sequences or the thread budget.
     pool_width: usize,
     pool: Option<StepPool>,
+    /// The paged-KV page budget (`--kv-pool-mb`); `None` = contiguous
+    /// growable caches, exactly the pre-PR-6 behaviour.
+    kv_pool: Option<KvPool>,
     slots: Vec<Option<Vec<LayerKv>>>,
     free: Vec<usize>,
 }
 
 impl<M: ModelExec> LocalBackend<M> {
-    pub(crate) fn new(model: Arc<M>, kv: KvSpec, max_batch: usize) -> LocalBackend<M> {
+    pub(crate) fn new(
+        model: Arc<M>,
+        kv: KvSpec,
+        max_batch: usize,
+        pool_cfg: Option<PoolCfg>,
+    ) -> LocalBackend<M> {
         let pool_width = crate::util::threadpool::num_threads().min(max_batch.max(1));
+        let kv_pool = pool_cfg.map(|pc| KvPool::new(pc, kv, model.config()));
         LocalBackend {
             model,
             kv,
             pool_width,
             pool: None,
+            kv_pool,
             slots: Vec::new(),
             free: Vec::new(),
         }
     }
+
+    /// Pages K+V of all layers allocate whenever a sequence crosses one
+    /// page boundary.
+    fn pages_per_boundary(&self) -> usize {
+        2 * self.model.config().n_layers
+    }
 }
 
 impl<M: ModelExec + Send + Sync + 'static> StepBackend for LocalBackend<M> {
-    fn admit(&mut self) -> Result<usize, String> {
+    fn admit(&mut self, prompt_len: usize) -> AdmitVerdict {
+        if let Some(pool) = &self.kv_pool {
+            let per_boundary = 2 * self.model.config().n_layers;
+            let need = per_boundary * pool.pages_for_rows(prompt_len);
+            if need > pool.total_pages() {
+                return AdmitVerdict::Reject(format!(
+                    "kv pool too small for this prompt: prefill needs {need} pages \
+                     ({prompt_len} tokens x {} layers x K+V at {} tokens/page) but \
+                     the pool holds {} pages — raise --kv-pool-mb",
+                    self.model.config().n_layers,
+                    pool.page_tokens(),
+                    pool.total_pages(),
+                ));
+            }
+            // One decode step past the prompt as reservation margin, capped
+            // at the whole pool so a lone maximal sequence still admits.
+            if (need + per_boundary).min(pool.total_pages()) > pool.free_pages() {
+                return AdmitVerdict::Defer;
+            }
+        }
         let cfg = self.model.config();
-        let bank: Vec<LayerKv> =
-            (0..cfg.n_layers).map(|_| LayerKv::new(self.kv, cfg)).collect();
-        match self.free.pop() {
+        let bank: Vec<LayerKv> = (0..cfg.n_layers)
+            .map(|_| LayerKv::new_in(self.kv, cfg, self.kv_pool.as_ref()))
+            .collect();
+        let slot = match self.free.pop() {
             Some(s) => {
                 self.slots[s] = Some(bank);
-                Ok(s)
+                s
             }
             None => {
                 self.slots.push(Some(bank));
-                Ok(self.slots.len() - 1)
+                self.slots.len() - 1
             }
-        }
+        };
+        AdmitVerdict::Slot(slot)
     }
 
     fn retire(&mut self, slot: usize) {
+        // Dropping a paged bank releases its pages back to the pool.
         self.slots[slot] = None;
         self.free.push(slot);
     }
@@ -224,54 +330,257 @@ impl<M: ModelExec + Send + Sync + 'static> StepBackend for LocalBackend<M> {
         }
         out
     }
+
+    fn can_step(&self, jobs: &[(usize, usize, u8)]) -> bool {
+        let Some(pool) = &self.kv_pool else {
+            return true;
+        };
+        let boundaries = jobs
+            .iter()
+            .filter(|&&(_, pos, _)| pos % pool.page_tokens() == 0)
+            .count();
+        self.pages_per_boundary() * boundaries <= pool.free_pages()
+    }
+
+    fn preempt(&mut self, slot: usize) {
+        self.retire(slot);
+        if let Some(pool) = &self.kv_pool {
+            pool.note_preemption();
+        }
+    }
+
+    fn slot_pages(&self, slot: usize) -> usize {
+        self.slots
+            .get(slot)
+            .and_then(|b| b.as_ref())
+            .map_or(0, |bank| bank.iter().map(|lk| lk.pages_used()).sum())
+    }
+
+    fn pool_stats(&self) -> Option<(usize, usize)> {
+        self.kv_pool.as_ref().map(|p| (p.used_pages(), p.total_pages()))
+    }
 }
 
-/// Pipeline backend: delegates to the shard threads.
+/// Scheduler-side accounting twin of the shard-local KV sub-pools.
+///
+/// The pipeline's `admit`/`retire` are asynchronous packets, so the real
+/// sub-pools' counters lag the scheduler's decisions; gating on them could
+/// spin on stale state. The mirror instead tracks what each decision
+/// *implies* — exact, because decode appends K and V on every layer each
+/// step, so a slot at `rows` tokens holds `2 · layers_s · ⌈rows/pt⌉` pages
+/// of shard `s`'s sub-pool. Channel FIFO order makes the mirror safe: a
+/// release the mirror credits was sent down the pipe before any allocation
+/// it enabled, so each shard frees first and allocates second.
+pub(crate) struct PoolMirror {
+    page_tokens: usize,
+    /// Per shard: (layers in its range, its sub-pool's page budget).
+    shards: Vec<(usize, usize)>,
+    /// Rows cached per admitted slot (== that sequence's next position).
+    slot_rows: Vec<Option<usize>>,
+}
+
+impl PoolMirror {
+    pub(crate) fn new(
+        plan: &ShardPlan,
+        mcfg: &ModelConfig,
+        kv: KvSpec,
+        pc: PoolCfg,
+    ) -> PoolMirror {
+        let shards = (0..plan.n_shards())
+            .map(|s| {
+                let (lo, hi) = plan.range(s);
+                let sub = pc.shard_slice(hi - lo, plan.n_layers());
+                // A throwaway pool computes the page budget with the exact
+                // constructor math of the shard's real sub-pool.
+                (hi - lo, KvPool::new(sub, kv, mcfg).total_pages())
+            })
+            .collect();
+        PoolMirror { page_tokens: pc.page_tokens.max(1), shards, slot_rows: Vec::new() }
+    }
+
+    fn pages_for(&self, rows: usize) -> usize {
+        rows.div_ceil(self.page_tokens)
+    }
+
+    /// Σ over live slots of pages held per (layer, K|V) cache; shard `s`
+    /// holds `2 · layers_s ·` this.
+    fn held(&self) -> usize {
+        self.slot_rows.iter().flatten().map(|&r| self.pages_for(r)).sum()
+    }
+
+    fn verdict(&self, prompt_len: usize) -> Option<AdmitVerdict> {
+        let held = self.held();
+        for &(layers, total) in &self.shards {
+            let per_boundary = 2 * layers;
+            let need = per_boundary * self.pages_for(prompt_len);
+            if need > total {
+                return Some(AdmitVerdict::Reject(format!(
+                    "kv pool too small for this prompt: prefill needs {need} of a \
+                     {layers}-layer shard's {total} pages — raise --kv-pool-mb",
+                )));
+            }
+            let free = total.saturating_sub(per_boundary * held);
+            if (need + per_boundary).min(total) > free {
+                return Some(AdmitVerdict::Defer);
+            }
+        }
+        None
+    }
+
+    fn on_admit(&mut self, slot: usize) {
+        if self.slot_rows.len() <= slot {
+            self.slot_rows.resize(slot + 1, None);
+        }
+        self.slot_rows[slot] = Some(0);
+    }
+
+    fn on_retire(&mut self, slot: usize) {
+        if let Some(s) = self.slot_rows.get_mut(slot) {
+            *s = None;
+        }
+    }
+
+    fn on_step(&mut self, jobs: &[(usize, usize, u8)]) {
+        for &(slot, _, _) in jobs {
+            if let Some(Some(r)) = self.slot_rows.get_mut(slot) {
+                *r += 1;
+            }
+        }
+    }
+
+    fn can_step(&self, jobs: &[(usize, usize, u8)]) -> bool {
+        let boundaries = jobs
+            .iter()
+            .filter(|&&(slot, _, _)| {
+                matches!(self.slot_rows.get(slot),
+                         Some(Some(r)) if r % self.page_tokens == 0)
+            })
+            .count();
+        let held = self.held();
+        self.shards
+            .iter()
+            .all(|&(layers, total)| 2 * layers * (held + boundaries) <= total)
+    }
+
+    fn slot_pages(&self, slot: usize) -> usize {
+        let rows = match self.slot_rows.get(slot) {
+            Some(Some(r)) => *r,
+            _ => return 0,
+        };
+        self.shards
+            .iter()
+            .map(|&(layers, _)| 2 * layers * self.pages_for(rows))
+            .sum()
+    }
+
+    fn stats(&self) -> (usize, usize) {
+        let held = self.held();
+        let used = self.shards.iter().map(|&(layers, _)| 2 * layers * held).sum();
+        let total = self.shards.iter().map(|&(_, t)| t).sum();
+        (used, total)
+    }
+}
+
+/// Pipeline backend: delegates execution to the shard threads and pool
+/// accounting to the [`PoolMirror`] (when a pool is configured).
 pub(crate) struct ShardBackend {
     dec: ShardedDecoder,
+    mirror: Option<PoolMirror>,
 }
 
 impl ShardBackend {
-    pub(crate) fn new(dec: ShardedDecoder) -> ShardBackend {
-        ShardBackend { dec }
+    pub(crate) fn new(dec: ShardedDecoder, mirror: Option<PoolMirror>) -> ShardBackend {
+        ShardBackend { dec, mirror }
     }
 }
 
 impl StepBackend for ShardBackend {
-    fn admit(&mut self) -> Result<usize, String> {
-        self.dec.admit()
+    fn admit(&mut self, prompt_len: usize) -> AdmitVerdict {
+        if let Some(v) = self.mirror.as_ref().and_then(|m| m.verdict(prompt_len)) {
+            return v;
+        }
+        match self.dec.admit() {
+            Ok(slot) => {
+                if let Some(m) = &mut self.mirror {
+                    m.on_admit(slot);
+                }
+                AdmitVerdict::Slot(slot)
+            }
+            Err(e) => AdmitVerdict::Reject(e),
+        }
     }
 
     fn retire(&mut self, slot: usize) {
-        self.dec.retire(slot)
+        if let Some(m) = &mut self.mirror {
+            m.on_retire(slot);
+        }
+        self.dec.retire(slot);
     }
 
     fn step(&mut self, jobs: &[(usize, usize, u8)]) -> Vec<Result<Vec<f32>, String>> {
-        self.dec.step(jobs)
+        let out = self.dec.step(jobs);
+        if let Some(m) = &mut self.mirror {
+            m.on_step(jobs);
+        }
+        out
+    }
+
+    fn can_step(&self, jobs: &[(usize, usize, u8)]) -> bool {
+        self.mirror.as_ref().is_none_or(|m| m.can_step(jobs))
+    }
+
+    fn slot_pages(&self, slot: usize) -> usize {
+        self.mirror.as_ref().map_or(0, |m| m.slot_pages(slot))
+    }
+
+    fn pool_stats(&self) -> Option<(usize, usize)> {
+        self.mirror.as_ref().map(|m| m.stats())
     }
 }
 
 /// One in-flight sequence: its slot, progress, and reply line.
+///
+/// The feed chain is `prompt ++ out`: position `pos` always feeds
+/// `chain[pos]`, which uniformly covers prefill, steady-state decode (the
+/// last generated token) and post-preemption re-prefill — a preempted
+/// sequence just resets `pos` to 0 and replays the whole chain (greedy
+/// decode is deterministic, so the rebuilt KV state is byte-identical and
+/// the continuation matches an unpreempted run).
 struct Running {
     slot: usize,
     prompt: Vec<u8>,
-    /// Prompt tokens fed so far (prefill advances one per step, in lock
-    /// step with the rest of the batch).
-    fed: usize,
-    /// Tokens fed in total = this sequence's next position.
+    /// Chain positions stepped so far = this sequence's next position.
     pos: usize,
-    /// The generated token to feed next (valid once `out` is non-empty).
-    pending: u8,
     out: Vec<u8>,
     max_new: usize,
     enqueued: Instant,
     /// When this sequence joined its first token step. Set by the
     /// scheduler right before stepping (not at admission) so the idle
-    /// coalescing window counts as queue time, not decode time.
+    /// coalescing window counts as queue time, not decode time. Survives
+    /// preemption: replay time is decode time, never queue time.
     started: Option<Instant>,
     /// Largest co-running batch this sequence ever shared a step with.
     max_cobatch: usize,
+    /// Times this sequence was evicted for pool pressure.
+    preemptions: usize,
+    /// High-water mark of pool pages this sequence's KV held.
+    kv_pages_peak: usize,
     reply: Sender<Result<GenResponse, String>>,
+}
+
+impl Running {
+    fn chain_len(&self) -> usize {
+        self.prompt.len() + self.out.len()
+    }
+
+    /// The token to feed at the current position.
+    fn feed(&self) -> u8 {
+        if self.pos < self.prompt.len() {
+            self.prompt[self.pos]
+        } else {
+            self.out[self.pos - self.prompt.len()]
+        }
+    }
 }
 
 enum Advance {
@@ -286,16 +595,26 @@ enum Advance {
 pub(crate) fn scheduler_loop(
     backend: &mut dyn StepBackend,
     cfg: &BatcherConfig,
-    rx: Receiver<Pending>,
+    queue: RequestQueue,
 ) {
     let mut active: Vec<Running> = Vec::new();
+    // Preempted sequences awaiting re-admission (oldest first) and requests
+    // the pool deferred at admission (FIFO). Invariant: both only grow under
+    // pool pressure, and pages always free up (sequences finish or error),
+    // so neither starves.
+    let mut paused: VecDeque<Running> = VecDeque::new();
+    let mut waiting: VecDeque<Pending> = VecDeque::new();
     loop {
         // -- admission: one decision point per token step -----------------
-        if active.is_empty() {
+        if active.is_empty() && paused.is_empty() && waiting.is_empty() {
             // Idle: block for the next request; a closed, drained queue
             // means the batcher was dropped — done.
-            match rx.recv() {
-                Ok(p) => admit_request(backend, &mut active, p),
+            match queue.recv() {
+                Ok(p) => {
+                    if let Some(p) = admit_request(backend, &mut active, &queue, p) {
+                        waiting.push_back(p);
+                    }
+                }
                 Err(_) => return,
             }
             // Initial coalescing window (the legacy `max_wait` knob): soak
@@ -308,26 +627,62 @@ pub(crate) fn scheduler_loop(
                 if now >= deadline {
                     break;
                 }
-                match rx.recv_timeout(deadline - now) {
-                    Ok(p) => admit_request(backend, &mut active, p),
+                match queue.recv_timeout(deadline - now) {
+                    Ok(p) => {
+                        if let Some(p) = admit_request(backend, &mut active, &queue, p) {
+                            waiting.push_back(p);
+                        }
+                    }
                     Err(_) => break,
                 }
             }
         } else {
+            // Preempted sequences re-admit first, oldest first: they carry
+            // generation progress, and handing freed pages to new prompts
+            // instead would starve them.
+            while active.len() < cfg.max_batch && !paused.is_empty() {
+                let need = paused.front().expect("checked non-empty").chain_len();
+                match backend.admit(need) {
+                    AdmitVerdict::Slot(slot) => {
+                        let mut r = paused.pop_front().expect("checked non-empty");
+                        r.slot = slot;
+                        active.push(r);
+                    }
+                    AdmitVerdict::Defer => break,
+                    AdmitVerdict::Reject(e) => {
+                        // The chain outgrew the whole pool while paused.
+                        let r = paused.pop_front().expect("checked non-empty");
+                        let _ = r.reply.send(Err(e));
+                    }
+                }
+            }
+            // Deferred and fresh requests get pages only once nothing is
+            // paused; within that, earlier-deferred before newly-arrived
+            // (FIFO fairness — a Defer at the front holds the line).
+            let mut open = paused.is_empty();
+            while open && active.len() < cfg.max_batch && !waiting.is_empty() {
+                let p = waiting.pop_front().expect("checked non-empty");
+                if let Some(p) = admit_request(backend, &mut active, &queue, p) {
+                    waiting.push_front(p);
+                    open = false;
+                }
+            }
             // Decoding: admit whatever is queued right now, without
             // waiting — this is the continuous-batching fix. A sequence
             // admitted here joins the very next token step.
-            loop {
-                if active.len() >= cfg.max_batch {
-                    break;
-                }
-                match rx.try_recv() {
-                    Ok(p) => admit_request(backend, &mut active, p),
+            while open && active.len() < cfg.max_batch {
+                match queue.try_recv() {
+                    Ok(p) => {
+                        if let Some(p) = admit_request(backend, &mut active, &queue, p) {
+                            waiting.push_back(p);
+                            open = false;
+                        }
+                    }
                     Err(TryRecvError::Empty) => break,
                     Err(TryRecvError::Disconnected) => {
                         // Batcher dropped mid-flight: drain every reply
                         // with an error rather than leaving callers hung.
-                        drain(backend, active, "batcher shut down");
+                        drain(backend, active, paused, waiting, &queue, "batcher shut down");
                         return;
                     }
                 }
@@ -342,26 +697,60 @@ pub(crate) fn scheduler_loop(
             continue;
         }
 
+        // -- pool pressure gate: preempt until the step fits ---------------
+        let jobs = loop {
+            let jobs: Vec<(usize, usize, u8)> =
+                active.iter().map(|r| (r.slot, r.pos, r.feed())).collect();
+            if backend.can_step(&jobs) {
+                break jobs;
+            }
+            if active.len() == 1 {
+                // Alone and still short of pages: this one chain exceeds
+                // the whole pool. Preempting it would just replay into the
+                // same wall, so answer it with the error.
+                let r = active.pop().expect("checked non-empty");
+                backend.retire(r.slot);
+                let _ = r.reply.send(Err(format!(
+                    "kv pool exhausted: this sequence alone needs more pages than \
+                     the pool holds ({} tokens cached) — raise --kv-pool-mb",
+                    r.pos
+                )));
+                break Vec::new();
+            }
+            // Youngest first: the most recently (re)admitted sequence has
+            // the least progress to replay.
+            let mut r = active.pop().expect("len checked above");
+            r.preemptions += 1;
+            r.kv_pages_peak = r.kv_pages_peak.max(backend.slot_pages(r.slot));
+            if let Some((used, total)) = backend.pool_stats() {
+                println!(
+                    "serve: kv pool pressure ({used}/{total} pages held): preempting \
+                     youngest sequence ({} of {} tokens generated, will re-prefill)",
+                    r.out.len(),
+                    r.max_new
+                );
+            }
+            backend.preempt(r.slot);
+            r.pos = 0;
+            paused.push_back(r);
+        };
+        if active.is_empty() {
+            continue;
+        }
+
         // -- one token step for the whole running batch --------------------
         let bs = active.len();
         let step_start = Instant::now();
         for r in active.iter_mut() {
             r.started.get_or_insert(step_start);
         }
-        let jobs: Vec<(usize, usize, u8)> = active
-            .iter()
-            .map(|r| {
-                let tok =
-                    if r.fed < r.prompt.len() { r.prompt[r.fed] } else { r.pending };
-                (r.slot, r.pos, tok)
-            })
-            .collect();
         let results = backend.step(&jobs);
 
         // -- retire decisions ----------------------------------------------
         let mut still = Vec::with_capacity(bs);
         for (mut r, res) in active.into_iter().zip(results) {
             r.max_cobatch = r.max_cobatch.max(bs);
+            r.kv_pages_peak = r.kv_pages_peak.max(backend.slot_pages(r.slot));
             match advance(&mut r, res) {
                 Advance::Continue => still.push(r),
                 Advance::Done(result) => {
@@ -381,21 +770,20 @@ fn advance(r: &mut Running, res: Result<Vec<f32>, String>) -> Advance {
         Err(e) => return Advance::Done(Err(e)),
     };
     r.pos += 1;
-    if r.fed < r.prompt.len() {
-        r.fed += 1;
-        if r.fed < r.prompt.len() {
-            return Advance::Continue; // mid-prefill: logits unused
-        }
-        // fall through: the last prompt token's logits pick generated
-        // token #1 — identical to the unbatched greedy-decode semantics.
+    if r.pos < r.chain_len() {
+        // Mid-prefill — or mid-replay after a preemption: known chain
+        // positions never consult the logits, which is what makes replay
+        // cheap (no argmax) and trivially deterministic.
+        return Advance::Continue;
     }
+    // The chain's last token was just stepped: its logits pick the next
+    // generated token — identical to the unbatched greedy-decode semantics.
     match argmax_token(&logits) {
         Ok(next) => {
             r.out.push(next);
             if r.out.len() >= r.max_new {
                 Advance::Done(Ok(()))
             } else {
-                r.pending = next;
                 Advance::Continue
             }
         }
@@ -403,41 +791,61 @@ fn advance(r: &mut Running, res: Result<Vec<f32>, String>) -> Advance {
     }
 }
 
-fn admit_request(backend: &mut dyn StepBackend, active: &mut Vec<Running>, p: Pending) {
-    let admitted = Instant::now();
-    let queue_wait = admitted.saturating_duration_since(p.enqueued);
+/// Resolve one pending request: answer it directly (validation, rejection),
+/// start it as a [`Running`], or hand it back for the deferred queue.
+fn admit_request(
+    backend: &mut dyn StepBackend,
+    active: &mut Vec<Running>,
+    queue: &RequestQueue,
+    p: Pending,
+) -> Option<Pending> {
+    let queue_wait = Instant::now().saturating_duration_since(p.enqueued);
     if p.req.prompt.is_empty() {
         // Matches the historical error path (argmax over no decoded step).
+        queue.settle();
         let _ = p
             .reply
             .send(Err("empty logits (no prompt token was decoded)".into()));
-        return;
+        return None;
     }
     if p.req.max_new == 0 {
+        queue.settle();
         let _ = p.reply.send(Ok(GenResponse {
             tokens: Vec::new(),
             queue_wait,
             decode_time: Duration::ZERO,
             batch_size: 1,
+            kv_pages_used: 0,
+            preemptions: 0,
         }));
-        return;
+        return None;
     }
-    match backend.admit() {
-        Ok(slot) => active.push(Running {
-            slot,
-            prompt: p.req.prompt,
-            fed: 0,
-            pos: 0,
-            pending: 0,
-            out: Vec::new(),
-            max_new: p.req.max_new,
-            enqueued: p.enqueued,
-            started: None,
-            max_cobatch: 1,
-            reply: p.reply,
-        }),
-        Err(e) => {
+    match backend.admit(p.req.prompt.len()) {
+        AdmitVerdict::Slot(slot) => {
+            queue.settle();
+            active.push(Running {
+                slot,
+                prompt: p.req.prompt,
+                pos: 0,
+                out: Vec::new(),
+                max_new: p.req.max_new,
+                enqueued: p.enqueued,
+                started: None,
+                max_cobatch: 1,
+                preemptions: 0,
+                kv_pages_peak: 0,
+                reply: p.reply,
+            });
+            None
+        }
+        // Deferred requests stay un-settled: they keep occupying their
+        // `max_queue` slot, so the front door keeps back-pressuring while
+        // the pool is the bottleneck.
+        AdmitVerdict::Defer => Some(p),
+        AdmitVerdict::Reject(e) => {
+            queue.settle();
             let _ = p.reply.send(Err(e));
+            None
         }
     }
 }
@@ -451,11 +859,20 @@ fn finish(r: Running, result: Result<(), String>) {
         queue_wait: started.saturating_duration_since(r.enqueued),
         decode_time: started.elapsed(),
         batch_size: r.max_cobatch,
+        kv_pages_used: r.kv_pages_peak,
+        preemptions: r.preemptions,
     });
     let _ = r.reply.send(resp);
 }
 
-fn drain(backend: &mut dyn StepBackend, active: Vec<Running>, msg: &str) {
+fn drain(
+    backend: &mut dyn StepBackend,
+    active: Vec<Running>,
+    paused: VecDeque<Running>,
+    waiting: VecDeque<Pending>,
+    queue: &RequestQueue,
+    msg: &str,
+) {
     for r in active {
         backend.retire(r.slot);
         let _ = r.reply.send(Err(format!(
@@ -463,5 +880,17 @@ fn drain(backend: &mut dyn StepBackend, active: Vec<Running>, msg: &str) {
             r.out.len(),
             r.max_new
         )));
+    }
+    // Paused sequences hold no slot (preemption released it) — no retire.
+    for r in paused {
+        let _ = r.reply.send(Err(format!(
+            "{msg} while this request was in flight ({} of {} tokens generated)",
+            r.out.len(),
+            r.max_new
+        )));
+    }
+    for p in waiting {
+        queue.settle();
+        let _ = p.reply.send(Err(format!("{msg} before this request was admitted")));
     }
 }

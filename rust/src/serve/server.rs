@@ -3,7 +3,8 @@
 //! Protocol: one JSON object per line.
 //! Request  : `{"prompt": [byte ids], "max_new": N}`
 //! Response : `{"tokens": [...], "latency_ms": f, "queue_wait_ms": f,
-//!             "decode_ms": f, "batch_size": n}`
+//!             "decode_ms": f, "batch_size": n, "kv_pages_used": n,
+//!             "preemptions": n}`
 //! Error    : `{"error": "..."}`
 //!
 //! `latency_ms` is always `queue_wait_ms + decode_ms`; the split makes the
@@ -75,6 +76,8 @@ fn handle_line(batcher: &DynamicBatcher, line: &str) -> String {
             ("queue_wait_ms", Json::num(resp.queue_wait.as_secs_f64() * 1e3)),
             ("decode_ms", Json::num(resp.decode_time.as_secs_f64() * 1e3)),
             ("batch_size", Json::num(resp.batch_size as f64)),
+            ("kv_pages_used", Json::num(resp.kv_pages_used as f64)),
+            ("preemptions", Json::num(resp.preemptions as f64)),
         ])
         .to_string(),
         Err(e) => respond_err(&e.to_string()),

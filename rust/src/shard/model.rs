@@ -15,6 +15,7 @@
 
 use super::pipeline::ShardedDecoder;
 use super::plan::ShardPlan;
+use crate::kvpool::PoolCfg;
 use crate::model::{KvSpec, ModelConfig, ModelExec};
 use crate::tensor::Matrix;
 use std::sync::Arc;
@@ -82,7 +83,15 @@ impl<M: ModelExec> ShardedModel<M> {
 impl<M: ModelExec + Send + Sync + 'static> ShardedModel<M> {
     /// Spawn the pipeline executor for this plan (one thread per shard).
     pub fn decoder(&self, kv: KvSpec) -> ShardedDecoder {
-        ShardedDecoder::new(self.inner.clone(), &self.plan, kv)
+        self.decoder_pooled(kv, None)
+    }
+
+    /// Like [`ShardedModel::decoder`], but with an optional paged-KV
+    /// budget: the global [`PoolCfg`] splits into shard-local sub-pools
+    /// proportional to each shard's layer count (`tsgo serve --shards N
+    /// --kv-pool-mb M`).
+    pub fn decoder_pooled(&self, kv: KvSpec, pool: Option<PoolCfg>) -> ShardedDecoder {
+        ShardedDecoder::new_pooled(self.inner.clone(), &self.plan, kv, pool)
     }
 }
 

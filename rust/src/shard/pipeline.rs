@@ -14,7 +14,10 @@
 //! [`LayerKv`] pair of each layer in its range — the shard-local half of
 //! that sequence's KV cache. Nothing is shared between shards but the
 //! immutable model (`Arc`) and the channels, so there are no locks on the
-//! decode path.
+//! decode path. Under `--kv-pool-mb` that stays true: each shard pages its
+//! caches out of its **own** sub-pool (a layer-proportional slice of the
+//! global budget, see [`PoolCfg::shard_slice`]), so the only lock a shard
+//! ever takes is on an allocator no other shard touches.
 //!
 //! **Microbatching / overlap.** A microbatch is one sequence's single-token
 //! activation. [`ShardedDecoder::step`] writes *every* job of the current
@@ -39,6 +42,7 @@
 //! threads, mirroring `DynamicBatcher`'s own `Drop` contract.
 
 use super::plan::ShardPlan;
+use crate::kvpool::{KvPool, PoolCfg};
 use crate::model::{decode_head, decode_layer_step, KvSpec, LayerKv, ModelExec};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
@@ -86,6 +90,22 @@ impl ShardedDecoder {
         plan: &ShardPlan,
         kv: KvSpec,
     ) -> ShardedDecoder {
+        ShardedDecoder::new_pooled(model, plan, kv, None)
+    }
+
+    /// Like [`ShardedDecoder::new`], but with an optional paged-KV budget:
+    /// each shard gets a **shard-local sub-pool** sized by
+    /// [`PoolCfg::shard_slice`] (bytes proportional to its layer count), so
+    /// shards never contend on one allocator lock and a shard's occupancy
+    /// is exactly predictable from its layer count. Admission/preemption
+    /// policy stays upstream in the serve scheduler, which mirrors these
+    /// sub-pools' accounting deterministically.
+    pub fn new_pooled<M: ModelExec + Send + Sync + 'static>(
+        model: Arc<M>,
+        plan: &ShardPlan,
+        kv: KvSpec,
+        pool: Option<PoolCfg>,
+    ) -> ShardedDecoder {
         assert_eq!(
             plan.n_layers(),
             model.layers().len(),
@@ -106,10 +126,14 @@ impl ShardedDecoder {
                 Downstream::Next(tx)
             };
             let (lo, hi) = plan.range(s);
+            let sub_pool = pool.map(|pc| {
+                let sub = pc.shard_slice(hi - lo, plan.n_layers());
+                KvPool::new(sub, kv, model.config())
+            });
             let m = model.clone();
             let worker = std::thread::Builder::new()
                 .name(format!("tsgo-shard-{s}"))
-                .spawn(move || run_shard(m, lo, hi, kv, this_rx, down))
+                .spawn(move || run_shard(m, lo, hi, kv, sub_pool, this_rx, down))
                 .expect("spawn shard worker thread");
             workers.push(worker);
         }
@@ -213,6 +237,7 @@ fn run_shard<M: ModelExec>(
     lo: usize,
     hi: usize,
     kv: KvSpec,
+    pool: Option<KvPool>,
     rx: Receiver<Packet>,
     down: Downstream,
 ) {
@@ -226,7 +251,8 @@ fn run_shard<M: ModelExec>(
                 if slots.len() <= slot {
                     slots.resize_with(slot + 1, || None);
                 }
-                slots[slot] = Some((lo..hi).map(|_| LayerKv::new(kv, &cfg)).collect());
+                slots[slot] =
+                    Some((lo..hi).map(|_| LayerKv::new_in(kv, &cfg, pool.as_ref())).collect());
                 if let Downstream::Next(tx) = &down {
                     if tx.send(Packet::Admit { slot }).is_err() {
                         return;

@@ -1,0 +1,349 @@
+//! Paged KV pool: the PR-6 acceptance battery.
+//!
+//! * paged decode is **bit-identical** to the contiguous caches — dense
+//!   f32, the mixed 2/3/4/8-bit packed checkpoint, and int8/int4 KV, under
+//!   the dispatched *and* the forced-scalar kernel tables;
+//! * a serve run whose pool budget is below the batch's aggregate KV demand
+//!   completes every request via preemption + deterministic re-prefill,
+//!   with the `kv_pages_used` / `preemptions` counters visible;
+//! * page tables release to the free list on retire and the pool recycles
+//!   buffers instead of minting (no leak across admit/retire cycles);
+//! * oversized prompts are rejected and over-long lone chains error out
+//!   instead of livelocking;
+//! * a constrained-pool stress leg (`TSGO_KV_POOL_MB`, set in the threads-2
+//!   CI matrix job) keeps every response byte-correct;
+//! * the sharded pipeline serves correctly out of shard-local sub-pools.
+
+use std::sync::{Arc, Mutex, MutexGuard, OnceLock};
+use std::time::Duration;
+use tsgo::calib::{calibration_batches, Corpus, CorpusKind};
+use tsgo::kvpool::{KvPool, PoolCfg};
+use tsgo::model::{
+    DecodeState, ExecModel, KvSpec, ModelConfig, ModelExec, ModelWeights, Preset,
+};
+use tsgo::pipeline::{quantize_model, PipelineConfig};
+use tsgo::quant::QuantPlan;
+use tsgo::serve::{argmax_token, BatcherConfig, DynamicBatcher, GenRequest, GenResponse};
+use tsgo::tensor::kernels::{set_forced, ForcedKernel};
+use tsgo::util::rng::Rng;
+
+/// Serializes tests that flip the process-wide forced-kernel state, and the
+/// bit-exact comparisons a concurrent flip would make nondeterministic
+/// (same pattern as `tests/sharded_exec.rs`).
+fn force_lock() -> MutexGuard<'static, ()> {
+    static L: OnceLock<Mutex<()>> = OnceLock::new();
+    L.get_or_init(|| Mutex::new(()))
+        .lock()
+        .unwrap_or_else(|e| e.into_inner())
+}
+
+fn tiny(seed: u64) -> ModelWeights {
+    let mut rng = Rng::new(seed);
+    ModelWeights::init(Preset::Tiny.config(), &mut rng)
+}
+
+/// 4-layer tiny-width config (as in `tests/sharded_exec.rs`), so a 2-shard
+/// plan is a real split.
+fn cfg4() -> ModelConfig {
+    ModelConfig { vocab: 256, d_model: 64, n_layers: 4, n_heads: 2, ffn: 128, seq_len: 64 }
+}
+
+/// Mixed-precision packed checkpoint (2/3/4/8-bit linears in one model)
+/// over a 4-layer config — every specialized dequant width on the paged
+/// decode path at once.
+fn mixed_packed4() -> ExecModel {
+    let mut rng = Rng::new(77);
+    let w = ModelWeights::init(cfg4(), &mut rng);
+    let corpus = Corpus::generate(CorpusKind::SynthWiki, 30_000, 1);
+    let calib = calibration_batches(&corpus.bytes, 4, 32, 2, 3);
+    let plan = QuantPlan::parse_with_defaults(
+        "rtn:bits=2,group=32;wv=bits3;wo=bits4;w2=bits8",
+        4,
+        32,
+    )
+    .unwrap();
+    let (qm, _) = quantize_model(&w, &calib, &PipelineConfig::from_plan(plan)).unwrap();
+    ExecModel::from_quantized(&qm)
+}
+
+/// A pool with exactly `pages` pages for `kv`-formatted caches of `cfg`.
+fn pool_of_pages(pages: usize, page_tokens: usize, kv: KvSpec, cfg: &ModelConfig) -> PoolCfg {
+    let probe = KvPool::new(PoolCfg { budget_bytes: 1 << 30, page_tokens }, kv, cfg);
+    PoolCfg { budget_bytes: pages * probe.page_bytes(), page_tokens }
+}
+
+/// Greedy reference decode through a plain (contiguous) [`DecodeState`].
+fn greedy_direct<M: ModelExec>(m: &M, kv: KvSpec, prompt: &[u8], max_new: usize) -> Vec<u8> {
+    let mut st = DecodeState::with_kv(m, kv);
+    let mut logits = Vec::new();
+    for &t in prompt {
+        logits = st.step(t);
+    }
+    let mut out = Vec::new();
+    for _ in 0..max_new {
+        let next = argmax_token(&logits).unwrap();
+        out.push(next);
+        logits = st.step(next);
+    }
+    out
+}
+
+#[test]
+fn paged_decode_bit_identical_across_configs_and_kernel_tables() {
+    let _guard = force_lock();
+    // The tentpole acceptance bar: per-position logits from a pool-backed
+    // DecodeState equal the contiguous-cache logits to the last bit, for
+    // dense f32 KV, int8 and int4 packed KV, on both the dense-f32 model
+    // and the mixed packed checkpoint — and page geometry must not matter
+    // (page smaller than, equal to, and larger than a KV group).
+    let dense = tiny(21);
+    let packed = mixed_packed4();
+    let tokens: Vec<u8> = vec![3, 141, 59, 26, 53, 58, 97, 93, 23, 84, 7, 200];
+    let specs = [
+        KvSpec::DenseF32,
+        KvSpec::PackedGroupwise { bits: 8, group: 64 },
+        KvSpec::PackedGroupwise { bits: 4, group: 32 },
+    ];
+    for force in [ForcedKernel::Scalar, ForcedKernel::Best] {
+        set_forced(force);
+        for kv in specs {
+            for pt in [3usize, 16] {
+                let lbl = format!("under {force:?}");
+                check_paged_matches_contiguous(&dense, kv, pt, &tokens, &lbl);
+                check_paged_matches_contiguous(&packed, kv, pt, &tokens, &lbl);
+            }
+        }
+    }
+    set_forced(ForcedKernel::Auto);
+}
+
+fn check_paged_matches_contiguous<M: ModelExec>(
+    m: &M,
+    kv: KvSpec,
+    page_tokens: usize,
+    tokens: &[u8],
+    label: &str,
+) {
+    let cfg = m.config();
+    let pc = pool_of_pages(256, page_tokens, kv, cfg);
+    let pool = KvPool::new(pc, kv, cfg);
+    let mut contiguous = DecodeState::with_kv(m, kv);
+    let mut paged = DecodeState::with_kv_pool(m, kv, Some(&pool));
+    for (pos, &t) in tokens.iter().enumerate() {
+        let want = contiguous.step(t);
+        let got = paged.step(t);
+        assert_eq!(want.len(), got.len());
+        for (i, (a, b)) in got.iter().zip(&want).enumerate() {
+            assert_eq!(
+                a.to_bits(),
+                b.to_bits(),
+                "{label}: kv {} page_tokens={page_tokens} pos={pos} logit {i}: {a} vs {b}",
+                kv.effective(cfg).label(),
+            );
+        }
+    }
+    assert!(paged.kv_pages_used() > 0, "{label}: paged decode held no pages");
+}
+
+#[test]
+fn exhaustion_preemption_readmission_roundtrip() {
+    let _guard = force_lock();
+    // A pool below the aggregate demand of two concurrent generations:
+    // both are admitted (each fits alone), the pool runs dry mid-decode,
+    // the youngest is preempted and re-prefilled — and every returned
+    // token still equals the unconstrained direct decode.
+    let m = Arc::new(tiny(22));
+    let cfg = *m.config();
+    let kv = KvSpec::DenseF32;
+    // page = 4 tokens; one 16-token chain peaks at 2 layers × K+V × 4
+    // pages = 16; two chains need 32. 20 pages admit both but can't hold
+    // both to completion.
+    let pc = pool_of_pages(20, 4, kv, &cfg);
+    let reqs = [
+        GenRequest { prompt: vec![10, 20, 30, 40], max_new: 12 },
+        GenRequest { prompt: vec![200, 150, 100, 50], max_new: 12 },
+    ];
+    let want: Vec<Vec<u8>> = reqs
+        .iter()
+        .map(|r| greedy_direct(m.as_ref(), kv, &r.prompt, r.max_new))
+        .collect();
+    let b = Arc::new(DynamicBatcher::spawn(
+        m.clone(),
+        BatcherConfig {
+            max_batch: 4,
+            max_wait: Duration::from_millis(200),
+            kv,
+            pool: Some(pc),
+            ..Default::default()
+        },
+    ));
+    let handles: Vec<_> = reqs
+        .iter()
+        .cloned()
+        .map(|req| {
+            let b = b.clone();
+            std::thread::spawn(move || b.generate(req).unwrap())
+        })
+        .collect();
+    let responses: Vec<GenResponse> =
+        handles.into_iter().map(|h| h.join().unwrap()).collect();
+    for (i, (resp, want)) in responses.iter().zip(&want).enumerate() {
+        assert_eq!(
+            &resp.tokens, want,
+            "request {i}: preemption/re-prefill changed the tokens"
+        );
+        assert!(resp.kv_pages_used > 0, "request {i}: no page accounting");
+        // each sequence alone peaks at 16 of the 20 pages
+        assert!(resp.kv_pages_used <= 16, "request {i}: {}", resp.kv_pages_used);
+    }
+    // both ran concurrently at some point (else the pool was never under
+    // pressure and the test proves nothing)
+    assert!(
+        responses.iter().any(|r| r.batch_size >= 2),
+        "generations never co-ran: sizes {:?}",
+        responses.iter().map(|r| r.batch_size).collect::<Vec<_>>()
+    );
+    let total_preemptions: usize = responses.iter().map(|r| r.preemptions).sum();
+    assert!(
+        total_preemptions >= 1,
+        "a 20-page pool under 32 pages of demand must preempt"
+    );
+}
+
+#[test]
+fn oversized_prompt_rejected_and_lone_overlong_chain_errors() {
+    let m = Arc::new(tiny(23));
+    let cfg = *m.config();
+    let kv = KvSpec::DenseF32;
+    // 12 pages of 4 tokens: capacity for one 12-token chain (2 layers ×
+    // K+V × 3 pages).
+    let pc = pool_of_pages(12, 4, kv, &cfg);
+    let b = DynamicBatcher::spawn(
+        m,
+        BatcherConfig { kv, pool: Some(pc), ..Default::default() },
+    );
+    // a prompt whose prefill alone exceeds the pool is rejected up front
+    let err = b
+        .generate(GenRequest { prompt: vec![9; 32], max_new: 2 })
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("kv pool too small"), "{err}");
+    // a chain that outgrows the pool mid-decode, running alone, errors out
+    // (preempting it would just replay into the same wall)
+    let err = b
+        .generate(GenRequest { prompt: vec![1, 2, 3, 4], max_new: 20 })
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("kv pool exhausted"), "{err}");
+    // the pool recovered: a fitting request still completes
+    let r = b.generate(GenRequest { prompt: vec![5, 6], max_new: 4 }).unwrap();
+    assert_eq!(r.tokens.len(), 4);
+}
+
+#[test]
+fn pages_recycle_after_retire() {
+    let _guard = force_lock();
+    // Page-table teardown returns every page, and later sequences reuse
+    // the freed buffers: used returns to 0, free to total, and the minted
+    // count stays flat after the first round (no leak, no re-minting).
+    let m = tiny(24);
+    let kv = KvSpec::PackedGroupwise { bits: 8, group: 64 };
+    let pc = pool_of_pages(64, 4, kv, m.config());
+    let pool = KvPool::new(pc, kv, m.config());
+    let total = pool.total_pages();
+    let mut minted_after_first = 0;
+    for round in 0..3u8 {
+        let mut st = DecodeState::with_kv_pool(&m, kv, Some(&pool));
+        for t in 0..10u8 {
+            st.step(t * 7 + round);
+        }
+        assert!(pool.used_pages() > 0, "round {round}: no pages in use");
+        drop(st);
+        assert_eq!(pool.used_pages(), 0, "round {round}: pages leaked");
+        assert_eq!(pool.free_pages(), total, "round {round}");
+        if round == 0 {
+            minted_after_first = pool.minted_pages();
+        } else {
+            assert_eq!(
+                pool.minted_pages(),
+                minted_after_first,
+                "round {round}: minted new pages instead of recycling"
+            );
+        }
+    }
+}
+
+#[test]
+fn tiny_pool_stress_stays_correct() {
+    let _guard = force_lock();
+    // The CI threads-2 leg runs this under TSGO_KV_POOL_MB=1 (and
+    // TSGO_THREADS=2): many concurrent requests of uneven lengths through
+    // a small pool; whatever admission deferrals and preemptions happen,
+    // every response must be byte-identical to the direct decode.
+    let mb: usize = std::env::var("TSGO_KV_POOL_MB")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .filter(|&v| v > 0)
+        .unwrap_or(1);
+    let m = Arc::new(tiny(25));
+    let kv = KvSpec::DenseF32;
+    let pc = PoolCfg::from_flags(mb, 8).unwrap().expect("nonzero MB");
+    let b = Arc::new(DynamicBatcher::spawn(
+        m.clone(),
+        BatcherConfig {
+            max_batch: 4,
+            max_wait: Duration::from_millis(50),
+            kv,
+            pool: Some(pc),
+            ..Default::default()
+        },
+    ));
+    let reqs: Vec<GenRequest> = (0..10u8)
+        .map(|i| GenRequest {
+            prompt: (0..(2 + i as usize % 4)).map(|j| i * 17 + j as u8).collect(),
+            max_new: 3 + (i as usize * 5) % 12,
+        })
+        .collect();
+    let want: Vec<Vec<u8>> = reqs
+        .iter()
+        .map(|r| greedy_direct(m.as_ref(), kv, &r.prompt, r.max_new))
+        .collect();
+    let handles: Vec<_> = reqs
+        .iter()
+        .cloned()
+        .map(|req| {
+            let b = b.clone();
+            std::thread::spawn(move || b.generate(req).unwrap())
+        })
+        .collect();
+    for (i, (h, want)) in handles.into_iter().zip(&want).enumerate() {
+        let resp = h.join().unwrap();
+        assert_eq!(&resp.tokens, want, "request {i} diverged under pool pressure");
+    }
+}
+
+#[test]
+fn sharded_pooled_serve_matches_unsharded_unpooled() {
+    let _guard = force_lock();
+    // `--shards 2 --kv-pool-mb M` end to end: shard-local sub-pools plus
+    // the scheduler's mirror accounting must leave tokens untouched
+    // relative to the plain unsharded, unpooled batcher.
+    let em = Arc::new(mixed_packed4());
+    let kv = KvSpec::PackedGroupwise { bits: 8, group: 64 };
+    let req = GenRequest { prompt: vec![65, 66, 67, 68], max_new: 10 };
+    let plain = DynamicBatcher::spawn(em.clone(), BatcherConfig { kv, ..Default::default() });
+    let a = plain.generate(req.clone()).unwrap();
+    let pooled = DynamicBatcher::spawn(
+        em.clone(),
+        BatcherConfig {
+            kv,
+            shards: 2,
+            pool: Some(PoolCfg { budget_bytes: 4 << 20, page_tokens: 8 }),
+            ..Default::default()
+        },
+    );
+    let b = pooled.generate(req).unwrap();
+    assert_eq!(a.tokens, b.tokens, "sharded pooled serving changed the tokens");
+    assert!(b.kv_pages_used > 0, "mirror reported no page usage");
+    assert_eq!(b.preemptions, 0, "an ample pool must not preempt");
+}
