@@ -9,6 +9,8 @@
 //!   vs dispatched — the per-kernel speedup table;
 //! * prefill GEMM scaling with batch size (the two-level blocking means
 //!   throughput keeps climbing past the activation row count);
+//! * chunked prefill TTFT: a 512-token prompt through `step_span` at
+//!   `--prefill-chunk` 1 / 16 / 64 — the GEMV-to-GEMM prefill payoff;
 //! * end-to-end KV-cached decode tokens/s, dense [`ExecModel`] vs packed,
 //!   paged-pool vs contiguous KV, plus batch-1 pipeline decode at 1/2/4
 //!   shards (the per-step handoff overhead floor; batched shard scaling
@@ -30,7 +32,7 @@ use tsgo::model::{DecodeState, ExecModel, KvSpec, ModelWeights, Preset};
 use tsgo::quant::rtn::rtn_quantize;
 use tsgo::quant::scale::{compute_group_scales, QuantSpec, ScaleMetric};
 use tsgo::quant::QuantizedLinear;
-use tsgo::serve::{BatcherConfig, DynamicBatcher, GenRequest};
+use tsgo::serve::{BatcherConfig, DynamicBatcher, GenRequest, StepJob};
 use tsgo::shard::ShardedModel;
 use tsgo::tensor::kernels::{self, ForcedKernel};
 use tsgo::tensor::Matrix;
@@ -345,16 +347,73 @@ fn main() {
             Some(decode_tokens as f64),
             &mut || {
                 let slot = dec.admit().unwrap();
-                let mut logits = dec.step(&[(slot, 0, 65)]).pop().unwrap().unwrap();
+                let mut logits =
+                    dec.step(&[StepJob::single(slot, 0, 65)]).pop().unwrap().unwrap();
                 for pos in 1..decode_tokens {
                     let next = tsgo::serve::argmax_token(&logits).unwrap();
-                    logits = dec.step(&[(slot, pos, next)]).pop().unwrap().unwrap();
+                    logits =
+                        dec.step(&[StepJob::single(slot, pos, next)]).pop().unwrap().unwrap();
                 }
                 dec.retire(slot);
                 std::hint::black_box(&logits);
             },
         );
         shard_rows.push((shards, m));
+    }
+
+    // -- chunked prefill TTFT (`--prefill-chunk`) ---------------------------
+    // A 512-token prompt on a tiny-width int2 model with the context to
+    // hold it: time-to-first-token as a function of the prefill chunk.
+    // Chunk 1 is the historical one-token loop (512 batch-1 GEMVs per
+    // linear); larger spans turn the same work into T-row GEMMs, which is
+    // the whole TTFT case for chunked prefill. Tokens are bit-identical
+    // across the sweep, so the rows differ only in time.
+    let long_cfg = tsgo::model::ModelConfig {
+        vocab: 256,
+        d_model: 64,
+        n_layers: 2,
+        n_heads: 2,
+        ffn: 128,
+        seq_len: 520,
+    };
+    let long_qm = int2_quantized_model(long_cfg, &mut rng);
+    let long_packed = ExecModel::from_quantized(&long_qm);
+    let prompt512: Vec<u8> = (0..512u32).map(|i| (i * 131 % 251) as u8).collect();
+    let mut prefill_rows: Vec<(usize, Measurement)> = Vec::new();
+    for chunk in [1usize, 16, 64] {
+        let m = bench_units(
+            &format!("prefill 512 tok · packed INT2 · chunk {chunk}"),
+            1,
+            iters.min(10),
+            Some(prompt512.len() as f64),
+            &mut || {
+                let mut st = DecodeState::with_kv(&long_packed, KvSpec::DenseF32);
+                let mut t = 0usize;
+                let mut first = None;
+                while t < prompt512.len() {
+                    let len = chunk.min(prompt512.len() - t);
+                    let logits = st.step_span(&prompt512[t..t + len]);
+                    t += len;
+                    if t == prompt512.len() {
+                        first = tsgo::serve::argmax_token(logits.row(len - 1));
+                    }
+                }
+                std::hint::black_box(first);
+            },
+        );
+        prefill_rows.push((chunk, m));
+    }
+    let ttft_ms = |m: &Measurement| m.mean.as_secs_f64() * 1e3;
+    let mut prefill_table = Table::new(&["chunk", "ttft ms", "vs chunk 1"]);
+    for (chunk, m) in &prefill_rows {
+        prefill_table.row(vec![
+            format!("{chunk}"),
+            format!("{:.3}", ttft_ms(m)),
+            format!(
+                "{:.2}x",
+                prefill_rows[0].1.mean.as_secs_f64() / m.mean.as_secs_f64().max(1e-12)
+            ),
+        ]);
     }
 
     // capture provenance BEFORE restoring Auto: the scaling + decode
@@ -367,6 +426,9 @@ fn main() {
     ms.push(m_decode_kv4.clone());
     ms.push(m_decode_paged.clone());
     for (_, m) in &shard_rows {
+        ms.push(m.clone());
+    }
+    for (_, m) in &prefill_rows {
         ms.push(m.clone());
     }
     bytes.row(vec![
@@ -395,6 +457,7 @@ fn main() {
         kernels::best_table().name
     ));
     scaling.print("packed GEMM scaling with batch size (two-level blocking)");
+    prefill_table.print("chunked prefill TTFT — 512-token prompt, packed INT2 (--prefill-chunk)");
     bytes.print("weight bytes touched per full application");
     println!("\nthroughput column: activation rows (tokens) per second.");
     println!("kernel dispatch under test: {dispatch_under_test}");
@@ -470,6 +533,35 @@ fn main() {
                     rows.push((key, Json::num(m.throughput().unwrap_or(0.0))));
                 }
                 rows
+            }),
+        ),
+        // chunked prefill TTFT: ms rows (lower is better) — bench_check
+        // inverts them into rates before comparing
+        (
+            "prefill",
+            Json::obj({
+                let headline = prefill_rows
+                    .iter()
+                    .find(|(c, _)| *c == 64)
+                    .expect("chunk-64 prefill row");
+                vec![
+                    ("prompt_len", Json::num(512.0)),
+                    ("ttft_ms_int2_prompt512", Json::num(ttft_ms(&headline.1))),
+                    (
+                        "chunk_sweep",
+                        Json::arr(
+                            prefill_rows
+                                .iter()
+                                .map(|(chunk, m)| {
+                                    Json::obj(vec![
+                                        ("chunk", Json::num(*chunk as f64)),
+                                        ("ttft_ms", Json::num(ttft_ms(m))),
+                                    ])
+                                })
+                                .collect(),
+                        ),
+                    ),
+                ]
             }),
         ),
         // constrained-pool serving under deliberate KV-memory pressure:

@@ -18,10 +18,12 @@ use tsgo::util::bench::Table;
 use tsgo::util::rng::Rng;
 
 /// Serve `weights` with the given batcher config, drive it with `clients`
-/// concurrent connections, and return (responses, wall seconds).
+/// concurrent connections each sending a `prompt_len`-token prompt, and
+/// return (responses, wall seconds).
 fn run_server<M: ModelExec + Send + Sync + 'static>(
     weights: Arc<M>,
     clients: usize,
+    prompt_len: usize,
     max_new: usize,
     batcher: BatcherConfig,
 ) -> (Vec<ClientResponse>, f64) {
@@ -36,7 +38,7 @@ fn run_server<M: ModelExec + Send + Sync + 'static>(
     let joins: Vec<_> = (0..clients)
         .map(|i| {
             let addr = addr.to_string();
-            let prompt = corpus.bytes[i * 64..i * 64 + 16].to_vec();
+            let prompt = corpus.bytes[i * 64..i * 64 + prompt_len].to_vec();
             std::thread::spawn(move || request_generation(&addr, &prompt, max_new).unwrap())
         })
         .collect();
@@ -59,21 +61,23 @@ fn percentiles(responses: &[ClientResponse], wall: f64) -> (f64, f64, f64) {
 fn measure<M: ModelExec + Send + Sync + 'static>(
     weights: Arc<M>,
     clients: usize,
+    prompt_len: usize,
     max_new: usize,
     kv: KvSpec,
 ) -> (f64, f64, f64, usize) {
-    measure_sharded(weights, clients, max_new, kv, 1)
+    measure_sharded(weights, clients, prompt_len, max_new, kv, 1)
 }
 
 fn measure_sharded<M: ModelExec + Send + Sync + 'static>(
     weights: Arc<M>,
     clients: usize,
+    prompt_len: usize,
     max_new: usize,
     kv: KvSpec,
     shards: usize,
 ) -> (f64, f64, f64, usize) {
     let batcher = BatcherConfig { max_batch: clients.max(1), kv, shards, ..Default::default() };
-    let (responses, wall) = run_server(weights, clients, max_new, batcher);
+    let (responses, wall) = run_server(weights, clients, prompt_len, max_new, batcher);
     let (tps, p50, p95) = percentiles(&responses, wall);
     let maxb = responses.iter().map(|r| r.batch_size).max().unwrap_or(1);
     (tps, p50, p95, maxb)
@@ -84,6 +88,7 @@ fn measure_sharded<M: ModelExec + Send + Sync + 'static>(
 fn measure_pooled<M: ModelExec + Send + Sync + 'static>(
     weights: Arc<M>,
     clients: usize,
+    prompt_len: usize,
     max_new: usize,
     kv: KvSpec,
     pool: PoolCfg,
@@ -94,7 +99,7 @@ fn measure_pooled<M: ModelExec + Send + Sync + 'static>(
         pool: Some(pool),
         ..Default::default()
     };
-    let (responses, wall) = run_server(weights, clients, max_new, batcher);
+    let (responses, wall) = run_server(weights, clients, prompt_len, max_new, batcher);
     let (tps, p50, p95) = percentiles(&responses, wall);
     let preempts: usize = responses.iter().map(|r| r.preemptions).sum();
     let peak = responses.iter().map(|r| r.kv_pages_used).max().unwrap_or(0);
@@ -147,9 +152,9 @@ fn main() {
         ];
         for (label, kv) in rows {
             let (tps, p50, p95, maxb) = match label {
-                "FP32" => measure(fp.clone(), clients, max_new, kv),
-                "INT2-dequant" => measure(q.clone(), clients, max_new, kv),
-                _ => measure(packed.clone(), clients, max_new, kv),
+                "FP32" => measure(fp.clone(), clients, 16, max_new, kv),
+                "INT2-dequant" => measure(q.clone(), clients, 16, max_new, kv),
+                _ => measure(packed.clone(), clients, 16, max_new, kv),
             };
             table.row(vec![
                 label.into(),
@@ -171,19 +176,28 @@ fn main() {
     // clamp (the plan gives every shard ≥1 layer), so on shallow bench
     // models the 4-shard row measures the clamped plan.
     let mut shard_table =
-        Table::new(&["weights", "shards", "clients", "tok/s", "p50 ms", "p95 ms"]);
+        Table::new(&["weights", "shards", "clients", "prompt", "tok/s", "p50 ms", "p95 ms"]);
     for shards in [1usize, 2, 4] {
         for clients in [1usize, 8] {
-            let (tps, p50, p95, _) =
-                measure_sharded(packed.clone(), clients, max_new, KvSpec::DenseF32, shards);
-            shard_table.row(vec![
-                "INT2-packed".into(),
-                shards.to_string(),
-                clients.to_string(),
-                format!("{tps:.1}"),
-                format!("{p50:.1}"),
-                format!("{p95:.1}"),
-            ]);
+            for prompt_len in [16usize, 32] {
+                let (tps, p50, p95, _) = measure_sharded(
+                    packed.clone(),
+                    clients,
+                    prompt_len,
+                    max_new,
+                    KvSpec::DenseF32,
+                    shards,
+                );
+                shard_table.row(vec![
+                    "INT2-packed".into(),
+                    shards.to_string(),
+                    clients.to_string(),
+                    prompt_len.to_string(),
+                    format!("{tps:.1}"),
+                    format!("{p50:.1}"),
+                    format!("{p95:.1}"),
+                ]);
+            }
         }
     }
     shard_table.print("pipeline-parallel serving (`--shards N`, step-level scheduler)");
@@ -201,24 +215,28 @@ fn main() {
         KvSpec::DenseF32,
         &fp.config,
     );
-    let per_seq = 2 * fp.config.n_layers * probe.pages_for_rows(16 + max_new);
     let mut pool_table = Table::new(&[
-        "pool", "pages", "clients", "tok/s", "p50 ms", "p95 ms", "preempt", "peak pages",
+        "pool", "pages", "clients", "prompt", "tok/s", "p50 ms", "p95 ms", "preempt",
+        "peak pages",
     ]);
-    for (label, pages) in [("ample", 8 * per_seq), ("half", 9 * per_seq / 2)] {
-        let pc = PoolCfg { budget_bytes: pages * probe.page_bytes(), page_tokens: pt };
-        let (tps, p50, p95, preempts, peak) =
-            measure_pooled(packed.clone(), 8, max_new, KvSpec::DenseF32, pc);
-        pool_table.row(vec![
-            label.into(),
-            pages.to_string(),
-            "8".into(),
-            format!("{tps:.1}"),
-            format!("{p50:.1}"),
-            format!("{p95:.1}"),
-            preempts.to_string(),
-            peak.to_string(),
-        ]);
+    for prompt_len in [16usize, 32] {
+        let per_seq = 2 * fp.config.n_layers * probe.pages_for_rows(prompt_len + max_new);
+        for (label, pages) in [("ample", 8 * per_seq), ("half", 9 * per_seq / 2)] {
+            let pc = PoolCfg { budget_bytes: pages * probe.page_bytes(), page_tokens: pt };
+            let (tps, p50, p95, preempts, peak) =
+                measure_pooled(packed.clone(), 8, prompt_len, max_new, KvSpec::DenseF32, pc);
+            pool_table.row(vec![
+                label.into(),
+                pages.to_string(),
+                "8".into(),
+                prompt_len.to_string(),
+                format!("{tps:.1}"),
+                format!("{p50:.1}"),
+                format!("{p95:.1}"),
+                preempts.to_string(),
+                peak.to_string(),
+            ]);
+        }
     }
     pool_table.print("paged KV pool (`--kv-pool-mb`: budget admission + preemption)");
 

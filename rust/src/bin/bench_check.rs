@@ -3,9 +3,11 @@
 //!
 //! Usage: `bench_check <baseline.json> <fresh.json>`
 //!
-//! Per bit width (GEMV dispatched tokens/s) and per decode row, a drop of
-//! more than `TSGO_BENCH_TOLERANCE` (default 0.15 = 15%) against the
-//! baseline is a regression → exit 1. Two deliberate soft edges:
+//! Per bit width (GEMV dispatched tokens/s), per decode row, and per
+//! prefill-TTFT row (ms, inverted to prefills/s so every comparison is
+//! higher-is-better), a drop of more than `TSGO_BENCH_TOLERANCE` (default
+//! 0.15 = 15%) against the baseline is a regression → exit 1. Two
+//! deliberate soft edges:
 //!
 //! * a missing baseline is a bootstrap, not a failure — the tool says how to
 //!   create one and exits 0;
@@ -60,6 +62,25 @@ fn rows(j: &Json) -> Vec<(String, f64)> {
     ] {
         if let Some(tps) = decode.get(key).as_f64() {
             out.push((format!("decode {key}"), tps));
+        }
+    }
+    // Prefill rows are milliseconds (lower is better); invert into prefills/s
+    // so the shared higher-is-better ratio logic covers them too.
+    let prefill = j.get("prefill");
+    if let Some(ms) = prefill.get("ttft_ms_int2_prompt512").as_f64() {
+        if ms > 0.0 {
+            out.push(("prefill ttft_ms_int2_prompt512".to_string(), 1e3 / ms));
+        }
+    }
+    if let Some(sweep) = prefill.get("chunk_sweep").as_arr() {
+        for e in sweep {
+            if let (Some(chunk), Some(ms)) =
+                (e.get("chunk").as_f64(), e.get("ttft_ms").as_f64())
+            {
+                if ms > 0.0 {
+                    out.push((format!("prefill ttft chunk {chunk}"), 1e3 / ms));
+                }
+            }
         }
     }
     out

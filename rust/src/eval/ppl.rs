@@ -19,6 +19,28 @@ fn row_nll(row: &[f32], target: usize) -> f64 {
     lse - row[target] as f64
 }
 
+/// Teacher-forced mean NLL of one window through a KV-cached decode state,
+/// prefilling in spans of `chunk` tokens (PR 7). Bit-identical to the
+/// historical one-token-per-step loop for every chunk size: `step_span`
+/// computes each row with the exact per-position op order of the one-token
+/// step, and the NLL terms are accumulated in the same left-to-right f64
+/// order the row loop always used.
+fn window_decode_nll<M: ModelExec>(st: &mut DecodeState<M>, win: &[u8], chunk: usize) -> f64 {
+    let n = win.len() - 1;
+    let chunk = chunk.max(1);
+    let mut total = 0.0f64;
+    let mut t = 0usize;
+    while t < n {
+        let len = chunk.min(n - t);
+        let logits = st.step_span(&win[t..t + len]);
+        for r in 0..len {
+            total += row_nll(logits.row(r), win[t + r + 1] as usize);
+        }
+        t += len;
+    }
+    total / n as f64
+}
+
 /// Mean NLL of a window given its logits `[T, vocab]`.
 pub fn window_nll(logits: &Matrix, tokens: &[u8]) -> f64 {
     let n = tokens.len() - 1;
@@ -73,15 +95,10 @@ pub fn decode_perplexity<M: ModelExec>(
 ) -> f64 {
     let windows = eval_windows(data, seq_len, max_windows);
     assert!(!windows.is_empty(), "no evaluation windows");
+    let chunk = crate::serve::default_prefill_chunk();
     let nlls = crate::util::threadpool::parallel_map_items(&windows, |win| {
         let mut st = DecodeState::with_kv(m, kv);
-        let n = win.len() - 1;
-        let mut total = 0.0f64;
-        for t in 0..n {
-            let logits = st.step(win[t]);
-            total += row_nll(&logits, win[t + 1] as usize);
-        }
-        total / n as f64
+        window_decode_nll(&mut st, win, chunk)
     });
     (nlls.iter().sum::<f64>() / nlls.len() as f64).exp()
 }
@@ -120,17 +137,12 @@ pub fn decode_perplexity_pooled<M: ModelExec>(
     let lanes = (pool.total_pages() / per_window)
         .min(crate::util::threadpool::num_threads())
         .max(1);
+    let prefill = crate::serve::default_prefill_chunk();
     let mut nll = 0.0f64;
     for chunk in windows.chunks(lanes) {
         let nlls = crate::util::threadpool::parallel_map_items(chunk, |win| {
             let mut st = DecodeState::with_kv_pool(m, kv, Some(&pool));
-            let n = win.len() - 1;
-            let mut total = 0.0f64;
-            for t in 0..n {
-                let logits = st.step(win[t]);
-                total += row_nll(&logits, win[t + 1] as usize);
-            }
-            total / n as f64
+            window_decode_nll(&mut st, win, prefill)
         });
         nll += nlls.iter().sum::<f64>();
     }
@@ -214,6 +226,26 @@ mod tests {
             .unwrap_err()
             .to_string();
         assert!(err.contains("kv pool too small"), "{err}");
+    }
+
+    #[test]
+    fn decode_nll_is_chunk_invariant_to_the_bit() {
+        // The chunked teacher-forcing spine: any prefill-chunk size yields
+        // the same f64 NLL, bit for bit, as the one-token loop.
+        let mut rng = Rng::new(7);
+        let w = ModelWeights::init(Preset::Tiny.config(), &mut rng);
+        let c = Corpus::generate(CorpusKind::SynthWiki, 3_000, 13);
+        let windows = eval_windows(&c.bytes, 32, 2);
+        let kv = KvSpec::PackedGroupwise { bits: 8, group: 64 };
+        for win in &windows {
+            let mut st1 = DecodeState::with_kv(&w, kv);
+            let base = window_decode_nll(&mut st1, win, 1);
+            for chunk in [3usize, 16, 64] {
+                let mut st = DecodeState::with_kv(&w, kv);
+                let nll = window_decode_nll(&mut st, win, chunk);
+                assert_eq!(base.to_bits(), nll.to_bits(), "chunk {chunk} diverged");
+            }
+        }
     }
 
     #[test]

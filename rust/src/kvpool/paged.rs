@@ -118,16 +118,36 @@ impl PagedKv {
     /// Attention scores for one head against every cached row — the paged
     /// twin of the contiguous `head_scores` (same per-row math, same order).
     pub fn head_scores(&self, head: usize, q: &[f32], scale: f32, scores: &mut Vec<f32>) {
+        self.head_scores_limit(head, q, scale, self.rows, scores);
+    }
+
+    /// Scores against the first `limit` rows only — the causal mask of
+    /// chunked prefill, walking the page table in row order and stopping at
+    /// `limit`. `limit == rows` is exactly the full attend.
+    pub fn head_scores_limit(
+        &self,
+        head: usize,
+        q: &[f32],
+        scale: f32,
+        limit: usize,
+        scores: &mut Vec<f32>,
+    ) {
+        debug_assert!(limit <= self.rows);
         scores.clear();
-        scores.reserve(self.rows);
+        scores.reserve(limit);
+        let mut remaining = limit;
         match self.repr {
             PagedRepr::Dense { d, head_dim } => {
                 let base = head * head_dim;
                 let qh = &q[base..base + head_dim];
                 for page in &self.pages {
-                    for r in 0..page.rows {
+                    for r in 0..page.rows.min(remaining) {
                         let krow = &page.data[r * d + base..r * d + base + head_dim];
                         scores.push(crate::tensor::matrix::dot(qh, krow) * scale);
+                    }
+                    remaining -= page.rows.min(remaining);
+                    if remaining == 0 {
+                        break;
                     }
                 }
             }
@@ -138,11 +158,15 @@ impl PagedKv {
                 let mut gsum = crate::util::scratch::take_f32(gph);
                 lay.head_gsums(q, head, &mut gsum);
                 for page in &self.pages {
-                    for r in 0..page.rows {
+                    for r in 0..page.rows.min(remaining) {
                         let words = &page.words[r * wpr..(r + 1) * wpr];
                         let srow = &page.data[r * gpr + head * gph..r * gpr + (head + 1) * gph];
                         let zrow = &page.zeros[r * gpr + head * gph..r * gpr + (head + 1) * gph];
                         scores.push(lay.row_score(words, srow, zrow, head, q, &gsum) * scale);
+                    }
+                    remaining -= page.rows.min(remaining);
+                    if remaining == 0 {
+                        break;
                     }
                 }
             }
@@ -152,14 +176,29 @@ impl PagedKv {
     /// Accumulate the softmax-weighted value rows of one head into
     /// `ctx_head` — paged twin of the contiguous `head_axpy`.
     pub fn head_axpy(&self, head: usize, probs: &[f32], ctx_head: &mut [f32]) {
-        debug_assert!(probs.len() >= self.rows);
+        self.head_axpy_limit(head, probs, self.rows, ctx_head);
+    }
+
+    /// Accumulate over the first `limit` rows only (span-prefill causal
+    /// mask — see [`Self::head_scores_limit`]).
+    pub fn head_axpy_limit(
+        &self,
+        head: usize,
+        probs: &[f32],
+        limit: usize,
+        ctx_head: &mut [f32],
+    ) {
+        debug_assert!(limit <= self.rows && probs.len() >= limit);
         match self.repr {
             PagedRepr::Dense { d, head_dim } => {
                 debug_assert!(ctx_head.len() >= head_dim);
                 let base = head * head_dim;
                 let mut t = 0usize;
-                for page in &self.pages {
+                'pages: for page in &self.pages {
                     for r in 0..page.rows {
+                        if t == limit {
+                            break 'pages;
+                        }
                         let w = probs[t];
                         let vrow = &page.data[r * d + base..r * d + base + head_dim];
                         for (o, &v) in ctx_head.iter_mut().zip(vrow) {
@@ -175,8 +214,11 @@ impl PagedKv {
                 let gpr = lay.groups_per_row();
                 let wpr = lay.words_per_row;
                 let mut t = 0usize;
-                for page in &self.pages {
+                'pages: for page in &self.pages {
                     for r in 0..page.rows {
+                        if t == limit {
+                            break 'pages;
+                        }
                         let w = probs[t];
                         let words = &page.words[r * wpr..(r + 1) * wpr];
                         let srow = &page.data[r * gpr + head * gph..r * gpr + (head + 1) * gph];

@@ -85,7 +85,10 @@ fn print_help() {
          \x20            weight bytes and KV bytes/token); --kv-pool-mb M\n\
          \x20            --kv-page-tokens T bound total KV memory with a paged\n\
          \x20            pool (budget-aware admission, youngest-first preemption\n\
-         \x20            with deterministic re-prefill — tokens unchanged)\n\
+         \x20            with deterministic re-prefill — tokens unchanged);\n\
+         \x20            --prefill-chunk C feeds prompts C tokens per step\n\
+         \x20            (batched GEMM prefill; C=1 is the one-token path,\n\
+         \x20            tokens bit-identical for every C)\n\
          \x20 kernels    print the dequant kernel dispatch table (CPU features,\n\
          \x20            per-bit-width kernel selection, forcing state)\n\
          \x20 warmup     pre-compile all artifacts"
@@ -386,6 +389,7 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         OptSpec { name: "kv-pool-mb", help: "page all KV caches out of an N MB pool with budget-aware admission and preemption (0 = unbounded contiguous)", default: Some("0"), is_flag: false },
         OptSpec { name: "kv-page-tokens", help: "token rows per KV page", default: Some("16"), is_flag: false },
         OptSpec { name: "shards", help: "pipeline-parallel shard count (layers split over N worker threads; clamped to the layer count)", default: Some("1"), is_flag: false },
+        OptSpec { name: "prefill-chunk", help: "prompt tokens per prefill step (1 = one-token steps; tokens identical for any value; 0 = default 64 / TSGO_PREFILL_CHUNK)", default: Some("0"), is_flag: false },
     ];
     let a = parse(argv, "tsgo serve", "batched generation server", &specs)?;
     let kv = KvSpec::from_flags(
@@ -397,6 +401,10 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         a.usize("kv-page-tokens").map_err(anyhow::Error::msg)?,
     )?;
     let shards = a.usize("shards").map_err(anyhow::Error::msg)?;
+    let prefill_chunk = match a.usize("prefill-chunk").map_err(anyhow::Error::msg)? {
+        0 => tsgo::serve::default_prefill_chunk(),
+        c => c,
+    };
     let cfg = tsgo::serve::ServerConfig {
         addr: a.str("addr"),
         batcher: tsgo::serve::BatcherConfig {
@@ -404,10 +412,15 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
             kv,
             shards,
             pool,
+            prefill_chunk,
             ..Default::default()
         },
         max_connections: None,
     };
+    println!(
+        "prefill: chunked, {prefill_chunk} tokens/step (--prefill-chunk; \
+         1 reproduces one-token prefill, tokens identical either way)"
+    );
     if a.flag("packed") {
         let em = store::load_quantized_packed(Path::new(&a.str("model")))?;
         println!(

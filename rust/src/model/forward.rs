@@ -213,13 +213,91 @@ pub fn sequence_nll<M: ModelExec>(m: &M, tokens: &[u8]) -> f64 {
     total / n as f64
 }
 
-/// One transformer block's KV-cached decode step: append this position's
-/// K/V to the layer's cache and advance the `[d_model]` hidden state in
-/// place. This is the per-layer core of [`DecodeState::step`], factored out
-/// so the sharded pipeline executor ([`crate::shard`]) and the step-level
-/// serve scheduler run the **exact same floating-point ops in the same
-/// order** as unsharded decode — the bit-identity guarantee between
-/// `--shards N` and single-worker execution is structural, not tested-in.
+/// One transformer block's KV-cached decode step over a **span** of `T`
+/// positions: append the span's K/V rows to the layer's cache and advance
+/// the `[T, d_model]` hidden block in place. `pos` is the chain position of
+/// the span's first row (== cached rows before this call).
+///
+/// This is the per-layer core of [`DecodeState::step_span`] and the chunked
+/// prefill path: the span's Q/K/V come from **one** batched GEMM per
+/// projection (each output row of the tiled packed GEMM / dense `matmul_bt`
+/// is an independent fixed-order dot, so a T-row apply is bitwise equal to
+/// T one-row applies), and attention then runs row by row in the exact op
+/// order of the historical one-token step, with span row `t` attending to
+/// cached rows `0..pos+t+1` via the `_limit` attend primitives. The
+/// one-token [`decode_layer_step`] is a T=1 wrapper around this function,
+/// so chunked and token-at-a-time execution cannot diverge structurally —
+/// the bit-identity guarantee across `--shards N`, kernel tables, and
+/// prefill chunk sizes is shared code, not tested-in.
+pub fn decode_layer_span<L: BlockLinears + ?Sized>(
+    l: &L,
+    cfg: &ModelConfig,
+    pos: usize,
+    h: &mut Matrix,
+    kv: &mut LayerKv,
+) {
+    let t_len = h.rows;
+    let d = cfg.d_model;
+    let n_heads = cfg.n_heads;
+    let hd = cfg.head_dim();
+    let scale = 1.0 / (hd as f32).sqrt();
+    debug_assert_eq!(h.cols, d);
+    debug_assert_eq!(kv.rows(), pos, "span must start where the cache ends");
+
+    let xa = rmsnorm(h, l.ln1());
+    let mut q = l.apply(LinearKind::Wq, &xa);
+    let mut k = l.apply(LinearKind::Wk, &xa);
+    let v = l.apply(LinearKind::Wv, &xa);
+    rope_inplace(&mut q, n_heads, pos);
+    rope_inplace(&mut k, n_heads, pos);
+
+    // append the whole span to the cache (quantizing on the fly when
+    // packed) before attending: row t then masks itself to `pos + t + 1`.
+    kv.append_span(&k, &v);
+
+    // attention against the cache, row by row and head by head: fused
+    // dequant scores + softmax + fused dequant probs·V accumulation — the
+    // same per-row sequence the one-token step always ran.
+    let mut ctx = Matrix::zeros(t_len, d);
+    let mut scores: Vec<f32> = Vec::with_capacity(kv.k.rows());
+    for t in 0..t_len {
+        let limit = pos + t + 1;
+        for hh in 0..n_heads {
+            let base = hh * hd;
+            kv.k.head_scores_limit(hh, q.row(t), scale, limit, &mut scores);
+            let mut maxs = f32::NEG_INFINITY;
+            for &s in scores.iter() {
+                maxs = maxs.max(s);
+            }
+            let mut denom = 0.0;
+            for s in scores.iter_mut() {
+                *s = (*s - maxs).exp();
+                denom += *s;
+            }
+            for s in scores.iter_mut() {
+                *s /= denom;
+            }
+            kv.v.head_axpy_limit(hh, &scores, limit, &mut ctx.row_mut(t)[base..base + hd]);
+        }
+    }
+    let attn_out = l.apply(LinearKind::Wo, &ctx);
+    h.add_inplace(&attn_out);
+
+    let xm = rmsnorm(h, l.ln2());
+    let gate = l.apply(LinearKind::W1, &xm);
+    let up = l.apply(LinearKind::W3, &xm);
+    let mut act = Matrix::zeros(gate.rows, gate.cols);
+    for i in 0..act.data.len() {
+        act.data[i] = silu(gate.data[i]) * up.data[i];
+    }
+    let down = l.apply(LinearKind::W2, &act);
+    h.add_inplace(&down);
+}
+
+/// One transformer block's KV-cached decode step for a single position —
+/// the T=1 span (see [`decode_layer_span`]; kept because the hidden state
+/// of a one-token step is naturally a `[d_model]` slice, and as the
+/// historical contract the span refactor is measured against).
 pub fn decode_layer_step<L: BlockLinears + ?Sized>(
     l: &L,
     cfg: &ModelConfig,
@@ -227,71 +305,27 @@ pub fn decode_layer_step<L: BlockLinears + ?Sized>(
     h: &mut [f32],
     kv: &mut LayerKv,
 ) {
-    let d = cfg.d_model;
-    let ffn = cfg.ffn;
-    let n_heads = cfg.n_heads;
-    let hd = cfg.head_dim();
-    let scale = 1.0 / (hd as f32).sqrt();
+    let mut hx = Matrix::from_vec(1, cfg.d_model, h.to_vec());
+    decode_layer_span(l, cfg, pos, &mut hx, kv);
+    h.copy_from_slice(&hx.data);
+}
 
-    let hx = Matrix::from_vec(1, d, h.to_vec());
-    let xa = rmsnorm(&hx, l.ln1());
-    let mut q = l.apply(LinearKind::Wq, &xa);
-    let mut k = l.apply(LinearKind::Wk, &xa);
-    let v = l.apply(LinearKind::Wv, &xa);
-    rope_inplace(&mut q, n_heads, pos);
-    rope_inplace(&mut k, n_heads, pos);
-
-    // append to cache (quantizing on the fly when packed)
-    kv.k.append(k.row(0));
-    kv.v.append(v.row(0));
-
-    // attention against the cache, head by head: fused dequant scores +
-    // softmax + fused dequant probs·V accumulation
-    let mut ctx = Matrix::zeros(1, d);
-    let mut scores: Vec<f32> = Vec::with_capacity(kv.k.rows());
-    for hh in 0..n_heads {
-        let base = hh * hd;
-        kv.k.head_scores(hh, q.row(0), scale, &mut scores);
-        let mut maxs = f32::NEG_INFINITY;
-        for &s in scores.iter() {
-            maxs = maxs.max(s);
-        }
-        let mut denom = 0.0;
-        for s in scores.iter_mut() {
-            *s = (*s - maxs).exp();
-            denom += *s;
-        }
-        for s in scores.iter_mut() {
-            *s /= denom;
-        }
-        kv.v.head_axpy(hh, &scores, &mut ctx.row_mut(0)[base..base + hd]);
-    }
-    let attn_out = l.apply(LinearKind::Wo, &ctx);
-    for (hv, a) in h.iter_mut().zip(&attn_out.data) {
-        *hv += *a;
-    }
-
-    let hx = Matrix::from_vec(1, d, h.to_vec());
-    let xm = rmsnorm(&hx, l.ln2());
-    let gate = l.apply(LinearKind::W1, &xm);
-    let up = l.apply(LinearKind::W3, &xm);
-    let mut act = Matrix::zeros(1, ffn);
-    for i in 0..ffn {
-        act.data[i] = silu(gate.data[i]) * up.data[i];
-    }
-    let down = l.apply(LinearKind::W2, &act);
-    for (hv, a) in h.iter_mut().zip(&down.data) {
-        *hv += *a;
-    }
+/// Final norm + LM head over a `[T, d_model]` span of hidden states —
+/// returns `[T, vocab]` logits. Row-wise rmsnorm and a row-independent head
+/// GEMM, so row `t` equals what a one-position [`decode_head`] of that row
+/// would produce.
+pub fn decode_head_span<M: ModelExec>(m: &M, h: &Matrix) -> Matrix {
+    let f = rmsnorm(h, m.ln_f());
+    m.apply_head(&f)
 }
 
 /// Final norm + LM head for one decoded position — the tail of
 /// [`DecodeState::step`], shared with the *last* pipeline shard (which owns
-/// the head, per the shard plan).
+/// the head, per the shard plan). Serving feeds only a span's last row
+/// through this: prefill logits at other rows are never sampled.
 pub fn decode_head<M: ModelExec>(m: &M, h: Vec<f32>) -> Vec<f32> {
     let hx = Matrix::from_vec(1, m.config().d_model, h);
-    let f = rmsnorm(&hx, m.ln_f());
-    m.apply_head(&f).data
+    decode_head_span(m, &hx).data
 }
 
 /// Incremental KV-cached decoding state for one sequence (serve path),
@@ -364,20 +398,32 @@ impl<'a, M: ModelExec> DecodeState<'a, M> {
         self.kv.iter().map(|c| c.pages_used()).sum()
     }
 
+    /// Feed a span of tokens in one call; returns `[T, vocab]` logits, one
+    /// row per fed position (row `t` predicts the token after `tokens[t]`).
+    ///
+    /// This is the chunked-prefill primitive: the span runs through the
+    /// batched GEMM path layer by layer ([`decode_layer_span`]) with the
+    /// causal mask applied per row, so the returned logits are bit-identical
+    /// to feeding the same tokens through [`DecodeState::step`] one at a
+    /// time — under every KV representation, kernel table, and shard count.
+    pub fn step_span(&mut self, tokens: &[u8]) -> Matrix {
+        assert!(!tokens.is_empty(), "step_span needs at least one token");
+        let m = self.model;
+        let mut h = embed_tokens(m, tokens);
+        for (l, kv) in m.layers().iter().zip(self.kv.iter_mut()) {
+            decode_layer_span(l, m.config(), self.pos, &mut h, kv);
+        }
+        self.pos += tokens.len();
+        decode_head_span(m, &h)
+    }
+
     /// Feed one token; returns the logits for the next position.
     ///
-    /// Implemented entirely in terms of [`decode_layer_step`] and
-    /// [`decode_head`] — the same primitives the sharded pipeline executor
-    /// runs per shard — so sharded and unsharded decode share one op
-    /// sequence.
+    /// A T=1 [`DecodeState::step_span`] — the same primitives the sharded
+    /// pipeline executor runs per shard, so sharded, unsharded, chunked and
+    /// token-at-a-time decode all share one op sequence.
     pub fn step(&mut self, token: u8) -> Vec<f32> {
-        let m = self.model;
-        let mut h: Vec<f32> = m.embed_row(token).to_vec();
-        for (l, kv) in m.layers().iter().zip(self.kv.iter_mut()) {
-            decode_layer_step(l, m.config(), self.pos, &mut h, kv);
-        }
-        self.pos += 1;
-        decode_head(m, h)
+        self.step_span(&[token]).data
     }
 }
 
@@ -514,6 +560,42 @@ mod tests {
             assert_eq!(st.kv_bytes(), tokens.len() * w.config.n_layers * per_tok);
             let dense_per_tok = KvSpec::DenseF32.bytes_per_token(&w.config);
             assert!(per_tok * 2 < dense_per_tok, "int{bits} KV not smaller");
+        }
+    }
+
+    #[test]
+    fn step_span_bit_identical_to_one_token_loop() {
+        // The chunked-prefill spine at unit granularity: feeding a sequence
+        // in spans of any chunk size must reproduce the one-token loop's
+        // logits bit for bit at every position, for dense and packed KV.
+        let w = tiny_model(9);
+        let tokens: Vec<u8> = (0..13).map(|i| (i * 41 % 251) as u8).collect();
+        for spec in [KvSpec::DenseF32, KvSpec::PackedGroupwise { bits: 8, group: 16 }] {
+            let mut st_loop = DecodeState::with_kv(&w, spec);
+            let loop_logits: Vec<Vec<f32>> =
+                tokens.iter().map(|&t| st_loop.step(t)).collect();
+            for chunk in [1usize, 3, 5, 64] {
+                let mut st_span = DecodeState::with_kv(&w, spec);
+                let mut span_logits: Vec<Vec<f32>> = Vec::new();
+                for c in tokens.chunks(chunk) {
+                    let l = st_span.step_span(c);
+                    assert_eq!((l.rows, l.cols), (c.len(), 256));
+                    for t in 0..l.rows {
+                        span_logits.push(l.row(t).to_vec());
+                    }
+                }
+                assert_eq!(st_span.pos, st_loop.pos);
+                for (t, (a, b)) in loop_logits.iter().zip(&span_logits).enumerate() {
+                    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+                        assert_eq!(
+                            x.to_bits(),
+                            y.to_bits(),
+                            "{} chunk={chunk} pos {t} logit {i}: loop {x} vs span {y}",
+                            spec.label()
+                        );
+                    }
+                }
+            }
         }
     }
 

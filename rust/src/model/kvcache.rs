@@ -401,37 +401,68 @@ impl KvCache {
     /// where `q` is the **full** `[d_model]` query row. `scores` is cleared
     /// and refilled.
     pub fn head_scores(&self, head: usize, q: &[f32], scale: f32, scores: &mut Vec<f32>) {
+        self.head_scores_limit(head, q, scale, self.rows(), scores);
+    }
+
+    /// Like [`Self::head_scores`], but only against the first `limit` cached
+    /// rows. This is the causal mask of chunked prefill: span row `t`
+    /// attends to rows `0..pos+t+1` even though the whole span's K/V was
+    /// appended up front. `limit == rows()` reproduces `head_scores` exactly
+    /// — there is **one** loop, so the one-token step and the span step
+    /// cannot diverge structurally.
+    pub fn head_scores_limit(
+        &self,
+        head: usize,
+        q: &[f32],
+        scale: f32,
+        limit: usize,
+        scores: &mut Vec<f32>,
+    ) {
+        debug_assert!(limit <= self.rows());
         scores.clear();
         match self {
             KvCache::Dense(c) => {
                 let base = head * c.head_dim;
                 let qh = &q[base..base + c.head_dim];
-                for t in 0..c.rows {
+                for t in 0..limit {
                     let krow = &c.data[t * c.d + base..t * c.d + base + c.head_dim];
                     scores.push(crate::tensor::matrix::dot(qh, krow) * scale);
                 }
             }
-            KvCache::Packed(c) => c.head_scores(head, q, scale, scores),
-            KvCache::Paged(c) => c.head_scores(head, q, scale, scores),
+            KvCache::Packed(c) => c.head_scores(head, q, scale, limit, scores),
+            KvCache::Paged(c) => c.head_scores_limit(head, q, scale, limit, scores),
         }
     }
 
     /// Accumulate the softmax-weighted value rows of one head into
     /// `ctx_head` (`[head_dim]`): `ctx_head[i] += Σ_t probs[t] · row_t[base+i]`.
     pub fn head_axpy(&self, head: usize, probs: &[f32], ctx_head: &mut [f32]) {
+        self.head_axpy_limit(head, probs, self.rows(), ctx_head);
+    }
+
+    /// Like [`Self::head_axpy`], but only over the first `limit` cached rows
+    /// (the span-prefill causal mask — see [`Self::head_scores_limit`]).
+    pub fn head_axpy_limit(
+        &self,
+        head: usize,
+        probs: &[f32],
+        limit: usize,
+        ctx_head: &mut [f32],
+    ) {
+        debug_assert!(limit <= self.rows());
         match self {
             KvCache::Dense(c) => {
                 let base = head * c.head_dim;
-                debug_assert!(probs.len() >= c.rows && ctx_head.len() >= c.head_dim);
-                for (t, &w) in probs.iter().enumerate().take(c.rows) {
+                debug_assert!(probs.len() >= limit && ctx_head.len() >= c.head_dim);
+                for (t, &w) in probs.iter().enumerate().take(limit) {
                     let vrow = &c.data[t * c.d + base..t * c.d + base + c.head_dim];
                     for (o, &v) in ctx_head.iter_mut().zip(vrow) {
                         *o += w * v;
                     }
                 }
             }
-            KvCache::Packed(c) => c.head_axpy(head, probs, ctx_head),
-            KvCache::Paged(c) => c.head_axpy(head, probs, ctx_head),
+            KvCache::Packed(c) => c.head_axpy(head, probs, limit, ctx_head),
+            KvCache::Paged(c) => c.head_axpy_limit(head, probs, limit, ctx_head),
         }
     }
 
@@ -470,6 +501,20 @@ impl LayerKv {
         LayerKv {
             k: KvCache::new_in(spec, cfg, pool),
             v: KvCache::new_in(spec, cfg, pool),
+        }
+    }
+
+    /// Append a whole span's K and V rows (`k`/`v` are `[T, d_model]`) in
+    /// one call — the multi-row append of chunked prefill. Rows land in the
+    /// exact order the one-token step appends them (`k` row then `v` row,
+    /// position by position), so pooled page tables allocate pages in the
+    /// same interleaving a T-step loop would and the stored bytes are
+    /// identical by construction.
+    pub fn append_span(&mut self, k: &crate::tensor::Matrix, v: &crate::tensor::Matrix) {
+        debug_assert_eq!(k.rows, v.rows);
+        for t in 0..k.rows {
+            self.k.append(k.row(t));
+            self.v.append(v.row(t));
         }
     }
 
@@ -536,14 +581,23 @@ impl PackedKv {
         self.rows += 1;
     }
 
-    fn head_scores(&self, head: usize, q: &[f32], scale: f32, scores: &mut Vec<f32>) {
+    /// Scores against the first `limit` cached rows (`limit == rows` is the
+    /// full-cache attend; the enum wrapper passes the causal span limit).
+    fn head_scores(
+        &self,
+        head: usize,
+        q: &[f32],
+        scale: f32,
+        limit: usize,
+        scores: &mut Vec<f32>,
+    ) {
         let lay = self.lay;
         let gph = lay.groups_per_head;
         let gpr = lay.groups_per_row();
         let mut gsum = crate::util::scratch::take_f32(gph);
         lay.head_gsums(q, head, &mut gsum);
-        scores.reserve(self.rows);
-        for t in 0..self.rows {
+        scores.reserve(limit);
+        for t in 0..limit {
             let words = &self.words[t * lay.words_per_row..(t + 1) * lay.words_per_row];
             let srow = &self.scales[t * gpr + head * gph..t * gpr + (head + 1) * gph];
             let zrow = &self.zeros[t * gpr + head * gph..t * gpr + (head + 1) * gph];
@@ -551,12 +605,12 @@ impl PackedKv {
         }
     }
 
-    fn head_axpy(&self, head: usize, probs: &[f32], ctx_head: &mut [f32]) {
+    fn head_axpy(&self, head: usize, probs: &[f32], limit: usize, ctx_head: &mut [f32]) {
         let lay = self.lay;
-        debug_assert!(probs.len() >= self.rows && ctx_head.len() >= lay.head_dim);
+        debug_assert!(probs.len() >= limit && ctx_head.len() >= lay.head_dim);
         let gph = lay.groups_per_head;
         let gpr = lay.groups_per_row();
-        for (t, &w) in probs.iter().enumerate().take(self.rows) {
+        for (t, &w) in probs.iter().enumerate().take(limit) {
             let words = &self.words[t * lay.words_per_row..(t + 1) * lay.words_per_row];
             let srow = &self.scales[t * gpr + head * gph..t * gpr + (head + 1) * gph];
             let zrow = &self.zeros[t * gpr + head * gph..t * gpr + (head + 1) * gph];

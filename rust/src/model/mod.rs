@@ -25,8 +25,8 @@ pub mod weights;
 pub use config::{ModelConfig, Preset};
 pub use exec::{ExecLayer, ExecModel};
 pub use forward::{
-    decode_head, decode_layer_step, forward_captures, forward_logits, DecodeState,
-    LayerCaptures,
+    decode_head, decode_head_span, decode_layer_span, decode_layer_step, embed_tokens,
+    forward_captures, forward_logits, DecodeState, LayerCaptures,
 };
 pub use kvcache::{KvCache, KvSpec, LayerKv};
 pub use linear::{BlockLinears, LinearOp, ModelExec};

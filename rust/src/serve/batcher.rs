@@ -7,8 +7,10 @@
 //! are mid-flight joins the very next step instead of queueing behind an
 //! entire batch's full generation (the seed implementation's admission
 //! stall — its "vLLM-style" claim only held for requests that arrived
-//! together). The split [`GenResponse::queue_wait`] / `decode_time` makes
-//! the behaviour observable per request.
+//! together). The split [`GenResponse::queue_wait`] / `prefill_time` /
+//! `decode_time` makes the behaviour — and time to first token —
+//! observable per request. Prompts prefill in chunked token spans
+//! ([`BatcherConfig::prefill_chunk`]) rather than one token per step.
 //!
 //! The worker is generic over [`ModelExec`], so the same batcher drives
 //! dense f32 weights and the packed fused-dequant execution path, and —
@@ -49,7 +51,12 @@ pub struct GenResponse {
     /// batching this stays near zero whenever the batch has a free lane;
     /// under the old whole-batch scheduler it absorbed entire generations.
     pub queue_wait: Duration,
-    /// Admission → final token (the time actually spent decoding).
+    /// Admission → first generated token: the prompt-prefill cost, paid in
+    /// ⌈prompt/C⌉ span steps of `C = BatcherConfig::prefill_chunk` tokens.
+    /// `queue_wait + prefill_time` is this request's time to first token.
+    pub prefill_time: Duration,
+    /// First generated token → final token (the steady-state decode time;
+    /// includes any post-preemption replay).
     pub decode_time: Duration,
     /// The largest batch this request ever shared a token step with.
     pub batch_size: usize,
@@ -64,7 +71,12 @@ pub struct GenResponse {
 impl GenResponse {
     /// End-to-end latency as the client saw it.
     pub fn latency(&self) -> Duration {
-        self.queue_wait + self.decode_time
+        self.queue_wait + self.prefill_time + self.decode_time
+    }
+
+    /// Time to first token: queueing plus prompt prefill.
+    pub fn ttft(&self) -> Duration {
+        self.queue_wait + self.prefill_time
     }
 }
 
@@ -92,6 +104,26 @@ pub struct BatcherConfig {
     /// `generate` past this limit fails immediately with a "server
     /// overloaded" error instead of queueing unboundedly.
     pub max_queue: usize,
+    /// Prompt tokens fed per scheduler step while a sequence is behind its
+    /// chain end (`tsgo serve --prefill-chunk C`): prefill — and
+    /// post-preemption replay — runs as T×d span steps of up to this many
+    /// tokens. `1` reproduces the historical one-token-per-step prefill
+    /// exactly; tokens are bit-identical for every value (the span path is
+    /// the one-token path's op order, batched).
+    pub prefill_chunk: usize,
+}
+
+/// The `--prefill-chunk` default: the `TSGO_PREFILL_CHUNK` env knob when
+/// set to a positive integer (how CI pins odd chunk sizes without touching
+/// every harness), else 64 — big enough that prompt prefill is
+/// GEMM-shaped, small enough that a decoding neighbour's step latency
+/// stays bounded.
+pub fn default_prefill_chunk() -> usize {
+    std::env::var("TSGO_PREFILL_CHUNK")
+        .ok()
+        .and_then(|v| v.trim().parse::<usize>().ok())
+        .filter(|&c| c > 0)
+        .unwrap_or(64)
 }
 
 impl Default for BatcherConfig {
@@ -103,6 +135,7 @@ impl Default for BatcherConfig {
             shards: 1,
             pool: None,
             max_queue: 256,
+            prefill_chunk: default_prefill_chunk(),
         }
     }
 }
@@ -141,6 +174,15 @@ impl RequestQueue {
     /// One request left the queue for good: reopen its `max_queue` slot.
     pub(crate) fn settle(&self) {
         self.depth.fetch_sub(1, Ordering::AcqRel);
+    }
+
+    /// Test-only: wrap a raw receiver so in-crate tests can drive
+    /// `scheduler_loop` directly with an instrumented backend. The depth
+    /// counter starts huge because these tests bypass `generate`'s
+    /// increment and `settle` still decrements.
+    #[cfg(test)]
+    pub(crate) fn over(rx: Receiver<Pending>) -> RequestQueue {
+        RequestQueue { rx, depth: Arc::new(AtomicUsize::new(usize::MAX / 2)) }
     }
 }
 
@@ -284,7 +326,8 @@ mod tests {
         assert_eq!(r.tokens.len(), 5);
         assert!(r.batch_size >= 1);
         // the latency split always reconstructs the end-to-end number
-        assert_eq!(r.latency(), r.queue_wait + r.decode_time);
+        assert_eq!(r.latency(), r.queue_wait + r.prefill_time + r.decode_time);
+        assert_eq!(r.ttft(), r.queue_wait + r.prefill_time);
         assert!(r.decode_time > Duration::ZERO);
     }
 
@@ -373,6 +416,29 @@ mod tests {
         );
         let r = b.generate(GenRequest { prompt: prompt.to_vec(), max_new: 5 }).unwrap();
         assert_eq!(r.tokens, expect, "batcher diverged from direct int8-KV decode");
+    }
+
+    #[test]
+    fn chunked_prefill_matches_one_token_prefill() {
+        // The span step contract's spine: any --prefill-chunk produces the
+        // same tokens as the historical one-token-per-step prefill.
+        let m = model();
+        let req = GenRequest { prompt: (0..23u8).collect(), max_new: 6 };
+        let base = DynamicBatcher::spawn(
+            m.clone(),
+            BatcherConfig { prefill_chunk: 1, ..Default::default() },
+        )
+        .generate(req.clone())
+        .unwrap();
+        for chunk in [3, 8, 64] {
+            let r = DynamicBatcher::spawn(
+                m.clone(),
+                BatcherConfig { prefill_chunk: chunk, ..Default::default() },
+            )
+            .generate(req.clone())
+            .unwrap();
+            assert_eq!(r.tokens, base.tokens, "chunk {chunk} diverged from chunk 1");
+        }
     }
 
     #[test]

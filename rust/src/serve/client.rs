@@ -13,7 +13,13 @@ pub struct ClientResponse {
     /// Time the request sat queued before joining the running batch
     /// (near zero under continuous batching while lanes are free).
     pub queue_wait_ms: f64,
-    /// Time spent actually decoding once admitted.
+    /// Admission → first generated token: the chunked-prefill cost (0.0
+    /// against a pre-PR-7 server that doesn't report the split).
+    pub prefill_ms: f64,
+    /// Time to first token: `queue_wait_ms + prefill_ms` (0.0 against a
+    /// pre-PR-7 server).
+    pub ttft_ms: f64,
+    /// First generated token → final token.
     pub decode_ms: f64,
     pub batch_size: usize,
     /// Peak KV-pool pages this request held (0 when the server runs
@@ -44,6 +50,8 @@ pub fn request_generation(addr: &str, prompt: &[u8], max_new: usize) -> Result<C
         tokens: j.get("tokens").usize_vec().into_iter().map(|t| t as u8).collect(),
         latency_ms: j.get("latency_ms").as_f64().unwrap_or(0.0),
         queue_wait_ms: j.get("queue_wait_ms").as_f64().unwrap_or(0.0),
+        prefill_ms: j.get("prefill_ms").as_f64().unwrap_or(0.0),
+        ttft_ms: j.get("ttft_ms").as_f64().unwrap_or(0.0),
         decode_ms: j.get("decode_ms").as_f64().unwrap_or(0.0),
         batch_size: j.get("batch_size").as_usize().unwrap_or(1),
         kv_pages_used: j.get("kv_pages_used").as_usize().unwrap_or(0),

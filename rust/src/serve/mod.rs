@@ -15,6 +15,9 @@ pub mod client;
 pub(crate) mod sched;
 pub mod server;
 
-pub use batcher::{argmax_token, BatcherConfig, DynamicBatcher, GenRequest, GenResponse};
+pub use batcher::{
+    argmax_token, default_prefill_chunk, BatcherConfig, DynamicBatcher, GenRequest, GenResponse,
+};
 pub use client::request_generation;
+pub use sched::StepJob;
 pub use server::{serve, ServerConfig};

@@ -12,6 +12,25 @@
 //! property `GenResponse::queue_wait` makes observable and
 //! `tests/sharded_exec.rs` locks in.
 //!
+//! **The span step contract (PR 7).** The unit of work per sequence per
+//! step is a [`StepJob`]: a *span* of chain tokens starting at the
+//! sequence's current position, not a single token. Steady-state decode
+//! feeds one-token spans; prefill — and post-preemption replay, which is
+//! just prefill of a longer chain — feeds up to `--prefill-chunk` tokens
+//! per step, so a 1000-token prompt costs ⌈1000/C⌉ steps of batched T×d
+//! GEMMs instead of 1000 sequential batch-1 GEMVs. Backends return one
+//! logits vector per job, for the span's **last** row only: earlier
+//! prefill rows' logits are never sampled, which is what lets the span
+//! path skip their head projections entirely. Decode interleaving is
+//! structural, not scheduled: all batch members step together, so a
+//! decoding sequence gets its one-token span in the *same* backend step
+//! as a prefilling neighbour's C-token span and is never starved behind
+//! someone else's prompt. Bit-identity with the one-token loop is also
+//! structural — every backend runs `decode_layer_span`, of which the
+//! one-token step is the T=1 case, and the span's causal masking replays
+//! the exact per-row op order of the historical step (see
+//! `model/forward.rs`).
+//!
 //! **Paged-KV back-pressure (PR 6).** With `--kv-pool-mb` set, every
 //! sequence's KV lives in fixed-size pages drawn from a global [`KvPool`]
 //! budget, and the scheduler becomes the memory arbiter:
@@ -53,13 +72,41 @@
 use super::batcher::{argmax_token, BatcherConfig, GenResponse, Pending, RequestQueue};
 use crate::kvpool::{KvPool, PoolCfg};
 use crate::model::{
-    decode_head, decode_layer_step, KvSpec, LayerKv, ModelConfig, ModelExec,
+    decode_head, decode_layer_span, embed_tokens, KvSpec, LayerKv, ModelConfig, ModelExec,
 };
 use crate::shard::{ShardPlan, ShardedDecoder};
 use std::collections::VecDeque;
 use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
+
+/// One sequence's work for one scheduler step: feed `tokens` into `slot`'s
+/// KV caches starting at chain position `pos` (which always equals the rows
+/// already cached for that slot). Steady-state decode carries a one-token
+/// span; prefill — and post-preemption replay, which is prefill of a longer
+/// chain — carries spans of up to `--prefill-chunk` tokens. Backends return
+/// one result per job: the logits of the span's **last** row. Logits at
+/// earlier span rows are never sampled, so backends skip their head
+/// projections.
+#[derive(Clone, Debug)]
+pub struct StepJob {
+    pub slot: usize,
+    pub pos: usize,
+    pub tokens: Vec<u8>,
+}
+
+impl StepJob {
+    /// A one-token decode job: position `pos` feeds `token`. The spelling
+    /// of the pre-span step contract, kept for tests and benches.
+    pub fn single(slot: usize, pos: usize, token: u8) -> StepJob {
+        StepJob { slot, pos, tokens: vec![token] }
+    }
+
+    /// Chain position just past this span: the slot's rows after the step.
+    pub fn end(&self) -> usize {
+        self.pos + self.tokens.len()
+    }
+}
 
 /// What admission says about a sequence, given the KV budget.
 pub(crate) enum AdmitVerdict {
@@ -73,21 +120,21 @@ pub(crate) enum AdmitVerdict {
 }
 
 /// The execution surface the scheduler drives: admit a sequence slot, step
-/// a batch of `(slot, pos, token)` jobs, retire a slot. Implementations own
-/// all per-sequence decode state; the scheduler owns all policy. The pool
+/// a batch of [`StepJob`] spans, retire a slot. Implementations own all
+/// per-sequence decode state; the scheduler owns all policy. The pool
 /// hooks (`can_step`/`preempt`/`slot_pages`/`pool_stats`) have pass-through
 /// defaults so an unpooled backend is exactly the pre-PR-6 surface.
 pub(crate) trait StepBackend {
     /// Try to start a sequence whose prompt is `prompt_len` tokens.
     fn admit(&mut self, prompt_len: usize) -> AdmitVerdict;
     fn retire(&mut self, slot: usize);
-    /// One token step per job; returns each job's next-position logits in
-    /// job order. An `Err` entry retires that sequence with the error.
-    fn step(&mut self, jobs: &[(usize, usize, u8)]) -> Vec<Result<Vec<f32>, String>>;
-    /// Whether every job of this step can append its KV row without
+    /// One span step per job; returns each job's last-row logits in job
+    /// order. An `Err` entry retires that sequence with the error.
+    fn step(&mut self, jobs: &[StepJob]) -> Vec<Result<Vec<f32>, String>>;
+    /// Whether every job of this step can append its full KV span without
     /// exhausting the page budget. `true` means `step(jobs)` cannot fail
     /// on page allocation.
-    fn can_step(&self, _jobs: &[(usize, usize, u8)]) -> bool {
+    fn can_step(&self, _jobs: &[StepJob]) -> bool {
         true
     }
     /// Release `slot` (like [`Self::retire`]) but record it as a
@@ -105,14 +152,17 @@ pub(crate) trait StepBackend {
     }
 }
 
-/// One full-depth decode step — the exact [`crate::model::DecodeState`]
-/// op sequence, shared by the inline fast path and the pool workers.
-fn run_job<M: ModelExec>(m: &M, pos: usize, token: u8, bank: &mut [LayerKv]) -> Vec<f32> {
-    let mut h = m.embed_row(token).to_vec();
+/// One full-depth span step — the exact [`crate::model::DecodeState`]
+/// `step_span` op sequence, shared by the inline fast path and the pool
+/// workers. Only the span's last row feeds the LM head: logits at earlier
+/// prefill rows are never sampled by greedy decode.
+fn run_job<M: ModelExec>(m: &M, pos: usize, tokens: &[u8], bank: &mut [LayerKv]) -> Vec<f32> {
+    let mut h = embed_tokens(m, tokens);
     for (l, kv) in m.layers().iter().zip(bank.iter_mut()) {
-        decode_layer_step(l, m.config(), pos, &mut h, kv);
+        decode_layer_span(l, m.config(), pos, &mut h, kv);
     }
-    decode_head(m, h)
+    let last = h.row(h.rows - 1).to_vec();
+    decode_head(m, last)
 }
 
 /// One batched-step job in flight to the persistent pool: the sequence's KV
@@ -124,7 +174,7 @@ struct PoolJob {
     gen: u64,
     idx: usize,
     pos: usize,
-    token: u8,
+    tokens: Vec<u8>,
     bank: Vec<LayerKv>,
 }
 
@@ -163,7 +213,7 @@ impl StepPool {
                         Err(_) => break, // backend dropped: pool drains
                     };
                     let mut bank = job.bank;
-                    let logits = run_job(m.as_ref(), job.pos, job.token, &mut bank);
+                    let logits = run_job(m.as_ref(), job.pos, &job.tokens, &mut bank);
                     if tx.send((job.gen, job.idx, bank, logits)).is_err() {
                         break;
                     }
@@ -280,15 +330,15 @@ impl<M: ModelExec + Send + Sync + 'static> StepBackend for LocalBackend<M> {
         self.free.push(slot);
     }
 
-    fn step(&mut self, jobs: &[(usize, usize, u8)]) -> Vec<Result<Vec<f32>, String>> {
+    fn step(&mut self, jobs: &[StepJob]) -> Vec<Result<Vec<f32>, String>> {
         if jobs.is_empty() {
             return Vec::new();
         }
-        if let [(slot, pos, token)] = *jobs {
+        if let [job] = jobs {
             // Batch of one: decode inline, skipping the pool's channel hops.
-            let mut bank = self.slots[slot].take().expect("step on unadmitted slot");
-            let logits = run_job(self.model.as_ref(), pos, token, &mut bank);
-            self.slots[slot] = Some(bank);
+            let mut bank = self.slots[job.slot].take().expect("step on unadmitted slot");
+            let logits = run_job(self.model.as_ref(), job.pos, &job.tokens, &mut bank);
+            self.slots[job.slot] = Some(bank);
             return vec![Ok(logits)];
         }
         let unavailable = || "step pool unavailable (a decode worker exited)".to_string();
@@ -301,9 +351,10 @@ impl<M: ModelExec + Send + Sync + 'static> StepBackend for LocalBackend<M> {
         let gen = pool.gen;
         let tx = pool.job_tx.as_ref().expect("step pool open until drop");
         let mut sent = 0usize;
-        for (idx, &(slot, pos, token)) in jobs.iter().enumerate() {
-            let bank = self.slots[slot].take().expect("step on unadmitted slot");
-            if tx.send(PoolJob { gen, idx, pos, token, bank }).is_err() {
+        for (idx, job) in jobs.iter().enumerate() {
+            let bank = self.slots[job.slot].take().expect("step on unadmitted slot");
+            let pj = PoolJob { gen, idx, pos: job.pos, tokens: job.tokens.clone(), bank };
+            if tx.send(pj).is_err() {
                 break; // a worker panicked; remaining entries stay Err
             }
             sent += 1;
@@ -321,7 +372,7 @@ impl<M: ModelExec + Send + Sync + 'static> StepBackend for LocalBackend<M> {
                 // matching the raw index into *this* step's jobs.
                 Ok((g, _, _, _)) if g != gen => continue,
                 Ok((_, idx, bank, logits)) => {
-                    self.slots[jobs[idx].0] = Some(bank);
+                    self.slots[jobs[idx].slot] = Some(bank);
                     out[idx] = Ok(logits);
                     got += 1;
                 }
@@ -331,15 +382,19 @@ impl<M: ModelExec + Send + Sync + 'static> StepBackend for LocalBackend<M> {
         out
     }
 
-    fn can_step(&self, jobs: &[(usize, usize, u8)]) -> bool {
+    fn can_step(&self, jobs: &[StepJob]) -> bool {
         let Some(pool) = &self.kv_pool else {
             return true;
         };
-        let boundaries = jobs
+        // Exact span-aware gate: a job appending `tokens.len()` rows from
+        // `pos` crosses `pages_for(end) - pages_for(pos)` page boundaries
+        // per (layer, K|V) cache. The one-token case degenerates to the old
+        // "pos is on a boundary" test.
+        let new_pages: usize = jobs
             .iter()
-            .filter(|&&(_, pos, _)| pos % pool.page_tokens() == 0)
-            .count();
-        self.pages_per_boundary() * boundaries <= pool.free_pages()
+            .map(|j| pool.pages_for_rows(j.end()) - pool.pages_for_rows(j.pos))
+            .sum();
+        self.pages_per_boundary() * new_pages <= pool.free_pages()
     }
 
     fn preempt(&mut self, slot: usize) {
@@ -440,26 +495,29 @@ impl PoolMirror {
         }
     }
 
-    fn on_step(&mut self, jobs: &[(usize, usize, u8)]) {
-        for &(slot, _, _) in jobs {
-            if let Some(Some(r)) = self.slot_rows.get_mut(slot) {
-                *r += 1;
+    fn on_step(&mut self, jobs: &[StepJob]) {
+        for j in jobs {
+            if let Some(Some(r)) = self.slot_rows.get_mut(j.slot) {
+                *r += j.tokens.len();
             }
         }
     }
 
-    fn can_step(&self, jobs: &[(usize, usize, u8)]) -> bool {
-        let boundaries = jobs
+    fn can_step(&self, jobs: &[StepJob]) -> bool {
+        // Span-aware, like `LocalBackend::can_step`: each job's new pages
+        // are the boundary crossings of its whole span, computed from the
+        // mirror's row counts (authoritative — see the struct docs).
+        let new_pages: usize = jobs
             .iter()
-            .filter(|&&(slot, _, _)| {
-                matches!(self.slot_rows.get(slot),
-                         Some(Some(r)) if r % self.page_tokens == 0)
+            .map(|j| match self.slot_rows.get(j.slot) {
+                Some(Some(r)) => self.pages_for(r + j.tokens.len()) - self.pages_for(*r),
+                _ => 0,
             })
-            .count();
+            .sum();
         let held = self.held();
         self.shards
             .iter()
-            .all(|&(layers, total)| 2 * layers * (held + boundaries) <= total)
+            .all(|&(layers, total)| 2 * layers * (held + new_pages) <= total)
     }
 
     fn slot_pages(&self, slot: usize) -> usize {
@@ -517,7 +575,7 @@ impl StepBackend for ShardBackend {
         self.dec.retire(slot);
     }
 
-    fn step(&mut self, jobs: &[(usize, usize, u8)]) -> Vec<Result<Vec<f32>, String>> {
+    fn step(&mut self, jobs: &[StepJob]) -> Vec<Result<Vec<f32>, String>> {
         let out = self.dec.step(jobs);
         if let Some(m) = &mut self.mirror {
             m.on_step(jobs);
@@ -525,7 +583,7 @@ impl StepBackend for ShardBackend {
         out
     }
 
-    fn can_step(&self, jobs: &[(usize, usize, u8)]) -> bool {
+    fn can_step(&self, jobs: &[StepJob]) -> bool {
         self.mirror.as_ref().is_none_or(|m| m.can_step(jobs))
     }
 
@@ -561,6 +619,10 @@ struct Running {
     started: Option<Instant>,
     /// Largest co-running batch this sequence ever shared a step with.
     max_cobatch: usize,
+    /// When this sequence's first generated token was sampled: the boundary
+    /// between prefill time and decode time. Survives preemption — replay
+    /// of an already-started generation counts as decode time.
+    first_token: Option<Instant>,
     /// Times this sequence was evicted for pool pressure.
     preemptions: usize,
     /// High-water mark of pool pages this sequence's KV held.
@@ -573,13 +635,21 @@ impl Running {
         self.prompt.len() + self.out.len()
     }
 
-    /// The token to feed at the current position.
-    fn feed(&self) -> u8 {
-        if self.pos < self.prompt.len() {
-            self.prompt[self.pos]
+    fn chain_at(&self, i: usize) -> u8 {
+        if i < self.prompt.len() {
+            self.prompt[i]
         } else {
-            self.out[self.pos - self.prompt.len()]
+            self.out[i - self.prompt.len()]
         }
+    }
+
+    /// The span of chain tokens to feed this step: up to `chunk` tokens
+    /// while behind the chain end (prefill, or post-preemption replay),
+    /// which degenerates to a single token in steady-state decode where
+    /// `pos == chain_len - 1`.
+    fn feed_span(&self, chunk: usize) -> Vec<u8> {
+        let end = (self.pos + chunk.max(1)).min(self.chain_len());
+        (self.pos..end).map(|i| self.chain_at(i)).collect()
     }
 }
 
@@ -699,8 +769,14 @@ pub(crate) fn scheduler_loop(
 
         // -- pool pressure gate: preempt until the step fits ---------------
         let jobs = loop {
-            let jobs: Vec<(usize, usize, u8)> =
-                active.iter().map(|r| (r.slot, r.pos, r.feed())).collect();
+            let jobs: Vec<StepJob> = active
+                .iter()
+                .map(|r| StepJob {
+                    slot: r.slot,
+                    pos: r.pos,
+                    tokens: r.feed_span(cfg.prefill_chunk),
+                })
+                .collect();
             if backend.can_step(&jobs) {
                 break jobs;
             }
@@ -738,8 +814,9 @@ pub(crate) fn scheduler_loop(
             continue;
         }
 
-        // -- one token step for the whole running batch --------------------
+        // -- one span step for the whole running batch ---------------------
         let bs = active.len();
+        let span_lens: Vec<usize> = jobs.iter().map(|j| j.tokens.len()).collect();
         let step_start = Instant::now();
         for r in active.iter_mut() {
             r.started.get_or_insert(step_start);
@@ -748,10 +825,15 @@ pub(crate) fn scheduler_loop(
 
         // -- retire decisions ----------------------------------------------
         let mut still = Vec::with_capacity(bs);
-        for (mut r, res) in active.into_iter().zip(results) {
+        for ((mut r, res), span_len) in active.into_iter().zip(results).zip(span_lens) {
             r.max_cobatch = r.max_cobatch.max(bs);
             r.kv_pages_peak = r.kv_pages_peak.max(backend.slot_pages(r.slot));
-            match advance(&mut r, res) {
+            let had_tokens = !r.out.is_empty();
+            let verdict = advance(&mut r, res, span_len);
+            if !had_tokens && !r.out.is_empty() {
+                r.first_token = Some(Instant::now());
+            }
+            match verdict {
                 Advance::Continue => still.push(r),
                 Advance::Done(result) => {
                     backend.retire(r.slot);
@@ -763,13 +845,14 @@ pub(crate) fn scheduler_loop(
     }
 }
 
-/// Consume one step result for one sequence; decides continue vs retire.
-fn advance(r: &mut Running, res: Result<Vec<f32>, String>) -> Advance {
+/// Consume one span-step result for one sequence; decides continue vs
+/// retire. `span_len` is how many chain tokens the step just cached.
+fn advance(r: &mut Running, res: Result<Vec<f32>, String>, span_len: usize) -> Advance {
     let logits = match res {
         Ok(l) => l,
         Err(e) => return Advance::Done(Err(e)),
     };
-    r.pos += 1;
+    r.pos += span_len;
     if r.pos < r.chain_len() {
         // Mid-prefill — or mid-replay after a preemption: known chain
         // positions never consult the logits, which is what makes replay
@@ -813,6 +896,7 @@ fn admit_request(
         let _ = p.reply.send(Ok(GenResponse {
             tokens: Vec::new(),
             queue_wait,
+            prefill_time: Duration::ZERO,
             decode_time: Duration::ZERO,
             batch_size: 1,
             kv_pages_used: 0,
@@ -832,6 +916,7 @@ fn admit_request(
                 enqueued: p.enqueued,
                 started: None,
                 max_cobatch: 1,
+                first_token: None,
                 preemptions: 0,
                 kv_pages_peak: 0,
                 reply: p.reply,
@@ -852,12 +937,17 @@ fn admit_request(
 
 fn finish(r: Running, result: Result<(), String>) {
     // A sequence only finishes after at least one step, so `started` is
-    // always stamped by then; the fallback is pure defensiveness.
+    // always stamped by then; the fallbacks are pure defensiveness.
     let started = r.started.unwrap_or_else(Instant::now);
+    // Prefill ends when the first generated token is sampled; everything
+    // after (including any post-preemption replay) is decode time. A
+    // sequence that errored before its first token has zero decode time.
+    let first = r.first_token.unwrap_or_else(Instant::now);
     let resp = result.map(|()| GenResponse {
         tokens: r.out,
         queue_wait: started.saturating_duration_since(r.enqueued),
-        decode_time: started.elapsed(),
+        prefill_time: first.saturating_duration_since(started),
+        decode_time: first.elapsed(),
         batch_size: r.max_cobatch,
         kv_pages_used: r.kv_pages_peak,
         preemptions: r.preemptions,
@@ -892,5 +982,172 @@ fn drain(
     for p in waiting {
         queue.settle();
         let _ = p.reply.send(Err(format!("{msg} before this request was admitted")));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{DecodeState, ModelWeights, Preset};
+    use crate::serve::batcher::GenRequest;
+    use crate::util::rng::Rng;
+
+    /// Wraps a backend to record every step's `(slot, pos, span_len)` jobs.
+    struct Recording<B: StepBackend> {
+        inner: B,
+        log: Arc<Mutex<Vec<Vec<(usize, usize, usize)>>>>,
+    }
+
+    impl<B: StepBackend> StepBackend for Recording<B> {
+        fn admit(&mut self, prompt_len: usize) -> AdmitVerdict {
+            self.inner.admit(prompt_len)
+        }
+        fn retire(&mut self, slot: usize) {
+            self.inner.retire(slot)
+        }
+        fn step(&mut self, jobs: &[StepJob]) -> Vec<Result<Vec<f32>, String>> {
+            self.log
+                .lock()
+                .unwrap()
+                .push(jobs.iter().map(|j| (j.slot, j.pos, j.tokens.len())).collect());
+            self.inner.step(jobs)
+        }
+        fn can_step(&self, jobs: &[StepJob]) -> bool {
+            self.inner.can_step(jobs)
+        }
+        fn preempt(&mut self, slot: usize) {
+            self.inner.preempt(slot)
+        }
+        fn slot_pages(&self, slot: usize) -> usize {
+            self.inner.slot_pages(slot)
+        }
+        fn pool_stats(&self) -> Option<(usize, usize)> {
+            self.inner.pool_stats()
+        }
+    }
+
+    /// ROADMAP item 2's closed caveat: a preempted ~200-token sequence must
+    /// re-prefill through the chunked span path — ⌈chain/C⌉ replay steps of
+    /// C tokens, not one step per token — and its tokens must be unchanged
+    /// from an unpreempted decode.
+    #[test]
+    fn preemption_replay_is_chunked_and_token_identical() {
+        const CHUNK: usize = 48;
+        let mut rng = Rng::new(11);
+        let model = Arc::new(ModelWeights::init(Preset::Tiny.config(), &mut rng));
+        let kv = KvSpec::DenseF32;
+        // Pool of 16 "units" (a unit = one page in each of the 2·n_layers
+        // caches, at 16 tokens/page). A peaks at 5 units (8 + 60 = 68
+        // rows), B needs 13 for its 200-token prompt and crosses into 14
+        // mid-decode — so the pool drains while both run, and the youngest
+        // sequence (B) is preempted with its whole prompt cached.
+        let probe = KvPool::new(
+            PoolCfg { budget_bytes: 1 << 30, page_tokens: 16 },
+            kv,
+            model.config(),
+        );
+        let pc = PoolCfg {
+            budget_bytes: 16 * 2 * model.config().n_layers * probe.page_bytes(),
+            page_tokens: 16,
+        };
+        let mut backend = Recording {
+            inner: LocalBackend::new(model.clone(), kv, 2, Some(pc)),
+            log: Arc::new(Mutex::new(Vec::new())),
+        };
+        let log = backend.log.clone();
+
+        let prompt_a: Vec<u8> = (0..8u8).collect();
+        let prompt_b: Vec<u8> = (0..200u32).map(|i| (i * 7 % 251) as u8).collect();
+        let (tx, rx) = channel::<Pending>();
+        let (ra_tx, ra_rx) = channel();
+        let (rb_tx, rb_rx) = channel();
+        let now = Instant::now();
+        // Both requests are queued before the loop starts, so A admits from
+        // idle and B joins deterministically in the coalescing window.
+        tx.send(Pending {
+            req: GenRequest { prompt: prompt_a, max_new: 60 },
+            enqueued: now,
+            reply: ra_tx,
+        })
+        .unwrap();
+        tx.send(Pending {
+            req: GenRequest { prompt: prompt_b.clone(), max_new: 24 },
+            enqueued: now,
+            reply: rb_tx,
+        })
+        .unwrap();
+        let cfg = BatcherConfig {
+            max_batch: 2,
+            max_wait: Duration::from_secs(1),
+            kv,
+            shards: 1,
+            pool: Some(pc),
+            max_queue: 256,
+            prefill_chunk: CHUNK,
+        };
+        let sched = std::thread::spawn(move || {
+            scheduler_loop(&mut backend, &cfg, RequestQueue::over(rx));
+        });
+        let resp_a = ra_rx.recv().unwrap().unwrap();
+        let resp_b = rb_rx.recv().unwrap().unwrap();
+        drop(tx);
+        sched.join().unwrap();
+
+        assert_eq!(resp_a.tokens.len(), 60);
+        assert_eq!(resp_b.tokens.len(), 24);
+        assert!(resp_b.preemptions >= 1, "B was never preempted; pool sizing drifted");
+
+        // Tokens unchanged: the preempted, replayed, co-batched generation
+        // equals a solo unpooled greedy decode.
+        let mut st = DecodeState::new(model.as_ref());
+        let mut logits = Vec::new();
+        for &t in &prompt_b {
+            logits = st.step(t);
+        }
+        let mut expect = Vec::new();
+        for _ in 0..24 {
+            let next = argmax_token(&logits).unwrap();
+            expect.push(next);
+            logits = st.step(next);
+        }
+        assert_eq!(resp_b.tokens, expect, "preempted sequence's tokens changed");
+
+        // Replay is chunked. The replay begins at the first step after the
+        // initial one whose jobs restart from position 0 (only a preempted
+        // sequence ever resets); by then A has finished, so every later job
+        // is B's.
+        let log = log.lock().unwrap();
+        assert_eq!(log[0].len(), 2, "A and B must start in the same first step");
+        let reset = log
+            .iter()
+            .skip(1)
+            .position(|step| step.iter().any(|&(_, pos, _)| pos == 0))
+            .map(|i| i + 1)
+            .expect("no replay step found after the preemption");
+        let post: Vec<(usize, usize, usize)> =
+            log[reset..].iter().flatten().copied().collect();
+        let n_replay =
+            post.iter().position(|&(_, _, len)| len == 1).unwrap_or(post.len());
+        let replay = &post[..n_replay];
+        let replay_chain: usize = replay.iter().map(|&(_, _, len)| len).sum();
+        assert!(
+            replay_chain >= 200,
+            "B should replay its whole 200-token prompt plus generated tokens, \
+             got {replay_chain}"
+        );
+        assert_eq!(
+            replay.len(),
+            replay_chain.div_ceil(CHUNK),
+            "replay took {} steps for {replay_chain} tokens, want ⌈chain/{CHUNK}⌉: {replay:?}",
+            replay.len(),
+        );
+        for (i, &(_, pos, len)) in replay.iter().enumerate() {
+            assert_eq!(pos, i * CHUNK, "replay spans must be contiguous from 0");
+            assert_eq!(len, CHUNK.min(replay_chain - pos), "replay span {i} wrong length");
+        }
+        // …and decode resumes exactly past the rebuilt chain.
+        if let Some(&(_, pos, _)) = post.get(n_replay) {
+            assert_eq!(pos, replay_chain, "decode did not resume at the chain end");
+        }
     }
 }

@@ -3,14 +3,16 @@
 //! Protocol: one JSON object per line.
 //! Request  : `{"prompt": [byte ids], "max_new": N}`
 //! Response : `{"tokens": [...], "latency_ms": f, "queue_wait_ms": f,
-//!             "decode_ms": f, "batch_size": n, "kv_pages_used": n,
-//!             "preemptions": n}`
+//!             "prefill_ms": f, "ttft_ms": f, "decode_ms": f,
+//!             "batch_size": n, "kv_pages_used": n, "preemptions": n}`
 //! Error    : `{"error": "..."}`
 //!
-//! `latency_ms` is always `queue_wait_ms + decode_ms`; the split makes the
-//! continuous-batching behaviour observable per request (a request admitted
+//! `latency_ms` is always `queue_wait_ms + prefill_ms + decode_ms`, and
+//! `ttft_ms` (time to first token) is `queue_wait_ms + prefill_ms`; the
+//! split makes both the continuous-batching behaviour (a request admitted
 //! mid-flight shows a near-zero queue wait even when other generations were
-//! already running).
+//! already running) and the chunked-prefill speedup (`--prefill-chunk`
+//! shrinks `prefill_ms`, nothing else) observable per request.
 
 use super::batcher::{BatcherConfig, DynamicBatcher, GenRequest};
 use crate::model::ModelExec;
@@ -74,6 +76,8 @@ fn handle_line(batcher: &DynamicBatcher, line: &str) -> String {
             ),
             ("latency_ms", Json::num(resp.latency().as_secs_f64() * 1e3)),
             ("queue_wait_ms", Json::num(resp.queue_wait.as_secs_f64() * 1e3)),
+            ("prefill_ms", Json::num(resp.prefill_time.as_secs_f64() * 1e3)),
+            ("ttft_ms", Json::num(resp.ttft().as_secs_f64() * 1e3)),
             ("decode_ms", Json::num(resp.decode_time.as_secs_f64() * 1e3)),
             ("batch_size", Json::num(resp.batch_size as f64)),
             ("kv_pages_used", Json::num(resp.kv_pages_used as f64)),

@@ -4,7 +4,7 @@
 //! Topology (for a 3-shard plan):
 //!
 //! ```text
-//! scheduler ──Token{slot,pos,tok}──▶ shard 0 ──Act{slot,pos,h}──▶ shard 1
+//! scheduler ──Span{slot,pos,toks}──▶ shard 0 ──Act{slot,pos,h}──▶ shard 1
 //!     ▲        (embed + layers 0..a,  (layers a..b, its KV slice)   │
 //!     │         its KV slice)                                       ▼
 //!     └────────────(slot, logits)◀── shard 2 (layers b.., ln_f + head)
@@ -19,21 +19,23 @@
 //! global budget, see [`PoolCfg::shard_slice`]), so the only lock a shard
 //! ever takes is on an allocator no other shard touches.
 //!
-//! **Microbatching / overlap.** A microbatch is one sequence's single-token
-//! activation. [`ShardedDecoder::step`] writes *every* job of the current
-//! scheduler step into the pipe before reading any logits back, so while
-//! sequence `k` runs on shard 0, sequence `k−1` is already on shard 1 —
-//! up to `min(batch, n_shards)` shards compute simultaneously and all
-//! shards stay busy in steady-state decode once the running batch is at
-//! least as deep as the pipeline. Per-channel FIFO plus one thread per
-//! stage makes result order deterministic (= submission order).
+//! **Microbatching / overlap.** A microbatch is one sequence's token-span
+//! activation — a `T×d` block, where `T` is 1 in steady-state decode and up
+//! to `--prefill-chunk` during prefill ([`crate::serve::StepJob`]).
+//! [`ShardedDecoder::step`] writes *every* job of the current scheduler
+//! step into the pipe before reading any logits back, so while sequence `k`
+//! runs on shard 0, sequence `k−1` is already on shard 1 — up to
+//! `min(batch, n_shards)` shards compute simultaneously and all shards stay
+//! busy in steady-state decode once the running batch is at least as deep
+//! as the pipeline. Per-channel FIFO plus one thread per stage makes result
+//! order deterministic (= submission order).
 //!
 //! **Bit-identity.** Every shard runs
-//! [`decode_layer_step`]/[`decode_head`] — the *same* functions
-//! [`DecodeState::step`](crate::model::DecodeState) is built from — over
-//! the same layer objects in the same order, so a token stepped through the
-//! pipeline produces bit-identical logits to unsharded decode, for dense,
-//! packed, and quantized-KV configurations alike (tested in
+//! [`decode_layer_span`]/[`decode_head`] — the *same* functions
+//! [`DecodeState::step_span`](crate::model::DecodeState) is built from —
+//! over the same layer objects in the same order, so a span stepped through
+//! the pipeline produces bit-identical logits to unsharded decode, for
+//! dense, packed, and quantized-KV configurations alike (tested in
 //! `tests/sharded_exec.rs` under both kernel tables).
 //!
 //! **Shutdown.** Dropping the [`ShardedDecoder`] closes shard 0's input
@@ -43,24 +45,27 @@
 
 use super::plan::ShardPlan;
 use crate::kvpool::{KvPool, PoolCfg};
-use crate::model::{decode_head, decode_layer_step, KvSpec, LayerKv, ModelExec};
+use crate::model::{decode_head, decode_layer_span, embed_tokens, KvSpec, LayerKv, ModelExec};
+use crate::serve::StepJob;
+use crate::tensor::Matrix;
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 
 /// What flows down the pipe. Control packets (`Admit`/`Retire`) travel the
-/// same FIFO as activations, so a shard never sees a `Token`/`Act` for a
+/// same FIFO as activations, so a shard never sees a `Span`/`Act` for a
 /// slot it hasn't admitted or has already retired.
 enum Packet {
     /// Allocate fresh shard-local KV caches for `slot`.
     Admit { slot: usize },
     /// Free `slot`'s caches (the slot id may be reused by a later `Admit`).
     Retire { slot: usize },
-    /// A new token for `slot` at position `pos` — consumed by shard 0,
-    /// which embeds it and emits an `Act`.
-    Token { slot: usize, pos: usize, token: u8 },
-    /// A hidden-state activation handed from the previous shard.
-    Act { slot: usize, pos: usize, h: Vec<f32> },
+    /// A span of new tokens for `slot` starting at position `pos` —
+    /// consumed by shard 0, which embeds them and emits an `Act`.
+    Span { slot: usize, pos: usize, tokens: Vec<u8> },
+    /// A `T×d` hidden-state block handed from the previous shard (`T` = the
+    /// span length; 1 in steady-state decode).
+    Act { slot: usize, pos: usize, h: Matrix },
 }
 
 /// Where a shard sends its output: the next shard, or (for the last shard)
@@ -186,20 +191,25 @@ impl ShardedDecoder {
         self.free.push(slot);
     }
 
-    /// One token step for every job `(slot, pos, token)`: all jobs are fed
-    /// into the pipe before any logits are read back (the microbatch
-    /// overlap described in the module docs); returns each job's
-    /// next-position logits in submission order.
-    pub fn step(&mut self, jobs: &[(usize, usize, u8)]) -> Vec<Result<Vec<f32>, String>> {
+    /// One span step for every [`StepJob`]: all jobs are fed into the pipe
+    /// before any logits are read back (the microbatch overlap described in
+    /// the module docs); returns each job's last-row logits in submission
+    /// order.
+    pub fn step(&mut self, jobs: &[StepJob]) -> Vec<Result<Vec<f32>, String>> {
         let mut out: Vec<Result<Vec<f32>, String>> = Vec::with_capacity(jobs.len());
         let mut sent = 0usize;
-        for &(slot, pos, token) in jobs {
-            if self.send(Packet::Token { slot, pos, token }).is_err() {
+        for job in jobs {
+            let pkt = Packet::Span {
+                slot: job.slot,
+                pos: job.pos,
+                tokens: job.tokens.clone(),
+            };
+            if self.send(pkt).is_err() {
                 break;
             }
             sent += 1;
         }
-        for &(want_slot, _, _) in jobs.iter().take(sent) {
+        for want_slot in jobs.iter().take(sent).map(|j| j.slot) {
             match self.results.recv() {
                 // FIFO channels + one thread per stage make result order
                 // deterministic; a mismatch means the pipe is corrupt, so
@@ -271,9 +281,9 @@ fn run_shard<M: ModelExec>(
                 }
                 continue;
             }
-            Packet::Token { slot, pos, token } => {
-                debug_assert_eq!(lo, 0, "Token packet reached a non-first shard");
-                (slot, pos, model.embed_row(token).to_vec())
+            Packet::Span { slot, pos, tokens } => {
+                debug_assert_eq!(lo, 0, "Span packet reached a non-first shard");
+                (slot, pos, embed_tokens(model.as_ref(), &tokens))
             }
             Packet::Act { slot, pos, h } => (slot, pos, h),
         };
@@ -285,12 +295,15 @@ fn run_shard<M: ModelExec>(
             panic!("shard {lo}..{hi}: step for unadmitted slot {slot}");
         };
         for (j, li) in (lo..hi).enumerate() {
-            decode_layer_step(&model.layers()[li], &cfg, pos, &mut h, &mut kvs[j]);
+            decode_layer_span(&model.layers()[li], &cfg, pos, &mut h, &mut kvs[j]);
         }
         let sent = match &down {
             Downstream::Next(tx) => tx.send(Packet::Act { slot, pos, h }).is_ok(),
             Downstream::Logits(tx) => {
-                tx.send((slot, decode_head(model.as_ref(), h))).is_ok()
+                // Only the span's last row is sampled; its logits are the
+                // step's result (matches `DecodeState::step_span`).
+                let last = h.row(h.rows - 1).to_vec();
+                tx.send((slot, decode_head(model.as_ref(), last))).is_ok()
             }
         };
         if !sent {

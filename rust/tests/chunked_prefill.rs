@@ -1,0 +1,223 @@
+//! Chunked prefill: the PR-7 acceptance battery.
+//!
+//! The span step contract's spine is *bit-identity*: feeding a prompt in
+//! T-token spans must produce exactly the logits — and therefore exactly
+//! the greedy tokens — of the historical one-token-per-step loop, for every
+//! chunk size, because `decode_layer_span` replays the one-token step's
+//! per-position op order inside a batched GEMM. This file pins that across
+//! the full configuration matrix:
+//!
+//! * `DecodeState::step_span` vs the one-token loop, every prefill row's
+//!   logits `to_bits`-equal, on dense and mixed 2/3/4/8-bit packed models ×
+//!   f32/int8 KV — under the dispatched *and* the forced-scalar kernel
+//!   tables, for chunks 1 / 3 / 64 / beyond-prompt;
+//! * end-to-end serving tokens identical across `--prefill-chunk` values ×
+//!   `--shards {1,2}`;
+//! * same with the KV caches paged out of a shared budget-bounded pool.
+
+use std::sync::{Arc, Mutex, MutexGuard, OnceLock};
+use std::time::Duration;
+use tsgo::calib::{calibration_batches, Corpus, CorpusKind};
+use tsgo::kvpool::PoolCfg;
+use tsgo::model::{DecodeState, ExecModel, KvSpec, ModelConfig, ModelExec, ModelWeights};
+use tsgo::pipeline::{quantize_model, PipelineConfig};
+use tsgo::quant::QuantPlan;
+use tsgo::serve::{BatcherConfig, DynamicBatcher, GenRequest};
+use tsgo::tensor::kernels::{set_forced, ForcedKernel};
+use tsgo::util::rng::Rng;
+
+/// Serializes tests that flip the process-wide forced-kernel state or make
+/// bit-exact comparisons (same rationale as the lock in
+/// `tests/sharded_exec.rs`): a concurrent flip mid-decode would make a real
+/// scalar/SIMD divergence nondeterministic.
+fn force_lock() -> MutexGuard<'static, ()> {
+    static L: OnceLock<Mutex<()>> = OnceLock::new();
+    L.get_or_init(|| Mutex::new(()))
+        .lock()
+        .unwrap_or_else(|e| e.into_inner())
+}
+
+/// A 4-layer tiny-width config so 2-shard plans are a real split.
+fn cfg4() -> ModelConfig {
+    ModelConfig { vocab: 256, d_model: 64, n_layers: 4, n_heads: 2, ffn: 128, seq_len: 96 }
+}
+
+fn dense4(seed: u64) -> ModelWeights {
+    let mut rng = Rng::new(seed);
+    ModelWeights::init(cfg4(), &mut rng)
+}
+
+/// Mixed-precision packed model: every specialized dequant width
+/// (2/3/4/8-bit) in one checkpoint, executed packed.
+fn mixed_packed4() -> ExecModel {
+    let w = dense4(78);
+    let corpus = Corpus::generate(CorpusKind::SynthWiki, 30_000, 1);
+    let calib = calibration_batches(&corpus.bytes, 4, 32, 2, 3);
+    let plan = QuantPlan::parse_with_defaults(
+        "rtn:bits=2,group=32;wv=bits3;wo=bits4;w2=bits8",
+        4,
+        32,
+    )
+    .unwrap();
+    let (qm, _) = quantize_model(&w, &calib, &PipelineConfig::from_plan(plan)).unwrap();
+    ExecModel::from_quantized(&qm)
+}
+
+/// The prompt every test prefills: long enough that chunk 3 needs many
+/// spans and chunk 64 fewer, short enough to stay inside `seq_len` with
+/// decode headroom.
+fn prompt() -> Vec<u8> {
+    (0..40u32).map(|i| (i * 37 % 251) as u8).collect()
+}
+
+/// Chunk sizes exercised everywhere: the historical one-token loop, a size
+/// that never divides the prompt evenly, the default, and one beyond the
+/// prompt length (whole-prompt single span).
+const CHUNKS: [usize; 4] = [1, 3, 64, 128];
+
+/// Prefill `prompt` through `step_span` in `chunk`-token spans and assert
+/// every position's logits are bit-identical to the one-token reference
+/// rows. Returns nothing — failure carries the diverging position.
+fn assert_span_prefill_bit_identical<M: ModelExec>(
+    m: &M,
+    kv: KvSpec,
+    chunk: usize,
+    want_rows: &[Vec<f32>],
+    label: &str,
+) {
+    let prompt = prompt();
+    let mut st = DecodeState::with_kv(m, kv);
+    let mut row = 0usize;
+    let mut t = 0usize;
+    while t < prompt.len() {
+        let len = chunk.min(prompt.len() - t);
+        let logits = st.step_span(&prompt[t..t + len]);
+        assert_eq!(logits.rows, len, "{label}: span returned wrong row count");
+        for r in 0..len {
+            let got = logits.row(r);
+            let want = &want_rows[row];
+            assert_eq!(got.len(), want.len());
+            for (i, (a, b)) in got.iter().zip(want).enumerate() {
+                assert_eq!(
+                    a.to_bits(),
+                    b.to_bits(),
+                    "{label}: chunk={chunk} pos={row} logit {i}: {a} vs {b}"
+                );
+            }
+            row += 1;
+        }
+        t += len;
+    }
+    assert_eq!(row, prompt.len());
+}
+
+/// Reference: the historical loop — one `step` per prompt token, collecting
+/// each position's logits row.
+fn one_token_rows<M: ModelExec>(m: &M, kv: KvSpec, prompt: &[u8]) -> Vec<Vec<f32>> {
+    let mut st = DecodeState::with_kv(m, kv);
+    prompt.iter().map(|&t| st.step(t)).collect()
+}
+
+/// Run the chunk sweep for one (model, kv) cell against its one-token
+/// reference rows.
+fn sweep_chunks<M: ModelExec>(m: &M, kv: KvSpec, label: &str) {
+    let want = one_token_rows(m, kv, &prompt());
+    for chunk in CHUNKS {
+        assert_span_prefill_bit_identical(m, kv, chunk, &want, label);
+    }
+}
+
+#[test]
+fn span_prefill_bit_identical_to_one_token_loop() {
+    let _guard = force_lock();
+    let dense = dense4(21);
+    let packed = mixed_packed4();
+    let kv8 = KvSpec::PackedGroupwise { bits: 8, group: 64 };
+    for force in [ForcedKernel::Scalar, ForcedKernel::Best] {
+        set_forced(force);
+        sweep_chunks(&dense, KvSpec::DenseF32, &format!("dense f32-KV under {force:?}"));
+        sweep_chunks(
+            &packed,
+            KvSpec::DenseF32,
+            &format!("mixed-packed f32-KV under {force:?}"),
+        );
+        sweep_chunks(&packed, kv8, &format!("mixed-packed int8-KV under {force:?}"));
+    }
+    set_forced(ForcedKernel::Auto);
+}
+
+#[test]
+fn served_tokens_identical_across_chunks_and_shards() {
+    let _guard = force_lock();
+    // End to end: `--prefill-chunk` must never change the generation, under
+    // any shard count. Chunk 1 × shards 1 is the pre-PR-7 behaviour; every
+    // other cell must emit the same tokens.
+    let m = Arc::new(mixed_packed4());
+    let kv8 = KvSpec::PackedGroupwise { bits: 8, group: 64 };
+    let req = GenRequest { prompt: prompt(), max_new: 10 };
+    let mut want: Option<Vec<u8>> = None;
+    for shards in [1usize, 2] {
+        for chunk in CHUNKS {
+            let b = DynamicBatcher::spawn(
+                m.clone(),
+                BatcherConfig { kv: kv8, shards, prefill_chunk: chunk, ..Default::default() },
+            );
+            let r = b.generate(req.clone()).unwrap();
+            assert_eq!(r.tokens.len(), 10);
+            match &want {
+                None => want = Some(r.tokens),
+                Some(w) => assert_eq!(
+                    &r.tokens, w,
+                    "shards={shards} chunk={chunk} diverged from chunk-1 baseline"
+                ),
+            }
+        }
+    }
+}
+
+#[test]
+fn served_tokens_identical_with_pooled_kv() {
+    let _guard = force_lock();
+    // Same invariant with the KV caches paged out of a shared pool: span
+    // appends cross page boundaries mid-span, and pooled admission charges
+    // whole spans — neither may change a byte of the generation.
+    let m = Arc::new(dense4(22));
+    let req = GenRequest { prompt: prompt(), max_new: 10 };
+    let pc = PoolCfg { budget_bytes: 4 << 20, page_tokens: 8 };
+    let baseline = {
+        let b = DynamicBatcher::spawn(
+            m.clone(),
+            BatcherConfig { prefill_chunk: 1, ..Default::default() },
+        );
+        b.generate(req.clone()).unwrap().tokens
+    };
+    for chunk in CHUNKS {
+        let b = DynamicBatcher::spawn(
+            m.clone(),
+            BatcherConfig { pool: Some(pc), prefill_chunk: chunk, ..Default::default() },
+        );
+        let r = b.generate(req.clone()).unwrap();
+        assert_eq!(r.tokens, baseline, "pooled chunk={chunk} diverged from contiguous");
+    }
+}
+
+#[test]
+fn prefill_time_is_reported_and_split_from_decode() {
+    // The satellite-1 metric split, observed from outside: a served request
+    // reports a prefill_time, ttft = queue_wait + prefill_time, and
+    // latency = ttft + decode_time.
+    let m = Arc::new(dense4(23));
+    let b = DynamicBatcher::spawn(
+        m,
+        BatcherConfig {
+            max_wait: Duration::from_millis(1),
+            prefill_chunk: 8,
+            ..Default::default()
+        },
+    );
+    let r = b.generate(GenRequest { prompt: prompt(), max_new: 4 }).unwrap();
+    assert_eq!(r.tokens.len(), 4);
+    assert!(r.prefill_time > Duration::ZERO, "40-token prefill took zero time?");
+    assert_eq!(r.ttft(), r.queue_wait + r.prefill_time);
+    assert_eq!(r.latency(), r.ttft() + r.decode_time);
+}

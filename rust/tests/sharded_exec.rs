@@ -18,7 +18,7 @@ use tsgo::pipeline::{quantize_model, PipelineConfig};
 use tsgo::quant::QuantPlan;
 use tsgo::serve::{
     argmax_token, request_generation, server::serve_in_background, BatcherConfig,
-    DynamicBatcher, GenRequest, ServerConfig,
+    DynamicBatcher, GenRequest, ServerConfig, StepJob,
 };
 use tsgo::shard::{ShardPlan, ShardedModel};
 use tsgo::tensor::kernels::{set_forced, ForcedKernel};
@@ -76,7 +76,7 @@ fn assert_pipeline_bit_identical<M: ModelExec + Send + Sync + 'static>(
     let slot = dec.admit().unwrap();
     for (pos, &tok) in tokens.iter().enumerate() {
         let want = st.step(tok);
-        let got = dec.step(&[(slot, pos, tok)]);
+        let got = dec.step(&[StepJob::single(slot, pos, tok)]);
         assert_eq!(got.len(), 1);
         let got = got[0].as_ref().expect("pipeline step failed");
         assert_eq!(got.len(), want.len(), "{label}: logit width");
@@ -147,7 +147,10 @@ fn pipeline_isolates_concurrent_sequences() {
     for pos in 0..seq0.len() {
         let want0 = ref0.step(seq0[pos]);
         let want1 = ref1.step(seq1[pos]);
-        let got = dec.step(&[(s0, pos, seq0[pos]), (s1, pos, seq1[pos])]);
+        let got = dec.step(&[
+            StepJob::single(s0, pos, seq0[pos]),
+            StepJob::single(s1, pos, seq1[pos]),
+        ]);
         let g0 = got[0].as_ref().unwrap();
         let g1 = got[1].as_ref().unwrap();
         assert!(g0.iter().zip(&want0).all(|(a, b)| a.to_bits() == b.to_bits()));
@@ -159,7 +162,7 @@ fn pipeline_isolates_concurrent_sequences() {
     let s2 = dec.admit().unwrap();
     let mut ref2 = DecodeState::new(model.as_ref());
     let want = ref2.step(99);
-    let got = dec.step(&[(s2, 0, 99)]);
+    let got = dec.step(&[StepJob::single(s2, 0, 99)]);
     let fresh = got[0].as_ref().unwrap();
     assert!(fresh.iter().zip(&want).all(|(a, b)| a.to_bits() == b.to_bits()));
 }
@@ -307,7 +310,8 @@ fn serve_e2e_with_two_shards() {
     let a = request_generation(&addr.to_string(), &prompt, 6).unwrap();
     assert_eq!(a.tokens, want, "served sharded tokens diverged from direct decode");
     assert!(a.latency_ms > 0.0);
-    assert!((a.queue_wait_ms + a.decode_ms - a.latency_ms).abs() < 1e-6);
+    assert!((a.queue_wait_ms + a.prefill_ms + a.decode_ms - a.latency_ms).abs() < 1e-6);
+    assert!((a.queue_wait_ms + a.prefill_ms - a.ttft_ms).abs() < 1e-6);
     let b = request_generation(&addr.to_string(), &prompt, 6).unwrap();
     assert_eq!(a.tokens, b.tokens, "sharded serving must stay deterministic");
     handle.join().unwrap();
