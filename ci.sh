@@ -31,6 +31,18 @@ if ! TSGO_FORCE_SCALAR=1 cargo test -q; then
     echo "        invariant (ROADMAP.md 'Kernel dispatch') is broken." >&2
     exit 1
 fi
+# Chaos pass: the whole suite with a deterministic fault armed via the
+# fault-injection plane (util::fault): the 3rd step-job evaluation after
+# each arming sleeps 20 ms. A sleep perturbs only timing — every token-
+# identity assertion must still hold, and no serve path may wedge on it.
+if ! TSGO_FAULT="step_worker_slow_ms=20@hit=3" cargo test -q; then
+    echo "" >&2
+    echo "FAILED: test suite with the fault plane armed (TSGO_FAULT=step_worker_slow_ms=20@hit=3)." >&2
+    echo "        Both unarmed runs above passed: a 20 ms injected delay in one" >&2
+    echo "        decode step-job changed behaviour — a timing assumption in the" >&2
+    echo "        serving stack is load-bearing (ROADMAP.md 'Fault tolerance')." >&2
+    exit 1
+fi
 
 cargo fmt --check
 # All bench targets must keep compiling (they are plain main() binaries and

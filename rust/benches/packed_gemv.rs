@@ -15,7 +15,10 @@
 //!   paged-pool vs contiguous KV, plus batch-1 pipeline decode at 1/2/4
 //!   shards (the per-step handoff overhead floor; batched shard scaling
 //!   lives in the serving bench) — and a constrained-pool serving pass
-//!   that records the preemption rate under deliberate memory pressure.
+//!   that records the preemption rate under deliberate memory pressure;
+//! * fault-plane pricing (PR 8): the packed decode through the scheduler
+//!   step surface with the fault plane unarmed vs armed-but-idle — the
+//!   pair of rows behind the "zero-cost when unarmed" claim.
 //!
 //! Besides the human-readable tables, the run emits a machine-readable
 //! baseline to `BENCH_packed_gemv.json` (override with `TSGO_BENCH_JSON`)
@@ -32,11 +35,14 @@ use tsgo::model::{DecodeState, ExecModel, KvSpec, ModelWeights, Preset};
 use tsgo::quant::rtn::rtn_quantize;
 use tsgo::quant::scale::{compute_group_scales, QuantSpec, ScaleMetric};
 use tsgo::quant::QuantizedLinear;
-use tsgo::serve::{BatcherConfig, DynamicBatcher, GenRequest, StepJob};
+use tsgo::serve::{
+    AdmitVerdict, BatcherConfig, DynamicBatcher, GenRequest, LocalBackend, StepBackend, StepJob,
+};
 use tsgo::shard::ShardedModel;
 use tsgo::tensor::kernels::{self, ForcedKernel};
 use tsgo::tensor::Matrix;
 use tsgo::util::bench::{bench_units, print_measurements, Measurement, Table};
+use tsgo::util::fault::{self, FaultPlan, FaultPoint};
 use tsgo::util::json::Json;
 use tsgo::util::rng::Rng;
 
@@ -246,6 +252,49 @@ fn main() {
             std::hint::black_box(run_decode(&packed, KvSpec::DenseF32));
         },
     );
+    // Fault-plane pricing (PR 8): the same packed decode through the
+    // scheduler backend's step surface, where the fault points actually
+    // live (`run_job` evaluates two per span step). "fault unarmed" is the
+    // production configuration — one relaxed atomic load per point;
+    // "fault armed-idle" arms a spec whose hit count never fires, pricing
+    // the slow path's counter bump. This row pair is the zero-cost claim
+    // in ROADMAP "Fault tolerance (PR 8)".
+    let sched_packed = Arc::new(ExecModel::from_quantized(&qm));
+    let mut sched_be = LocalBackend::new(sched_packed, KvSpec::DenseF32, 1, None);
+    let run_sched_decode = |be: &mut LocalBackend<ExecModel>| {
+        let slot = match be.admit(1) {
+            AdmitVerdict::Slot(s) => s,
+            _ => unreachable!("the unpooled backend always admits"),
+        };
+        let mut logits = be.step(&[StepJob::single(slot, 0, 65)]).pop().unwrap().unwrap();
+        for pos in 1..decode_tokens {
+            let next = tsgo::serve::argmax_token(&logits).unwrap();
+            logits = be.step(&[StepJob::single(slot, pos, next)]).pop().unwrap().unwrap();
+        }
+        be.retire(slot);
+        std::hint::black_box(&logits);
+    };
+    fault::disarm();
+    let m_decode_fault_unarmed = bench_units(
+        &format!("decode {decode_tokens} tok · packed INT2 · fault unarmed (tiny)"),
+        1,
+        iters.min(10),
+        Some(decode_tokens as f64),
+        &mut || run_sched_decode(&mut sched_be),
+    );
+    fault::arm(&FaultPlan::single(
+        FaultPoint::StepWorkerSlowMs,
+        1,
+        1_000_000_000_000,
+    ));
+    let m_decode_fault_armed = bench_units(
+        &format!("decode {decode_tokens} tok · packed INT2 · fault armed-idle (tiny)"),
+        1,
+        iters.min(10),
+        Some(decode_tokens as f64),
+        &mut || run_sched_decode(&mut sched_be),
+    );
+    fault::disarm();
     // Quantized KV cache on top of packed weights: the second packed data
     // plane. Same decode loop, group-wise int8/int4 K/V with fused attend.
     let kv8 = KvSpec::PackedGroupwise { bits: 8, group: 64 };
@@ -422,6 +471,8 @@ fn main() {
     kernels::set_forced(ForcedKernel::Auto);
     ms.push(m_decode_dense.clone());
     ms.push(m_decode_packed.clone());
+    ms.push(m_decode_fault_unarmed.clone());
+    ms.push(m_decode_fault_armed.clone());
     ms.push(m_decode_kv8.clone());
     ms.push(m_decode_kv4.clone());
     ms.push(m_decode_paged.clone());
@@ -507,6 +558,14 @@ fn main() {
                     (
                         "packed_int2_tokens_per_s",
                         Json::num(m_decode_packed.throughput().unwrap_or(0.0)),
+                    ),
+                    (
+                        "packed_int2_fault_unarmed_tokens_per_s",
+                        Json::num(m_decode_fault_unarmed.throughput().unwrap_or(0.0)),
+                    ),
+                    (
+                        "packed_int2_fault_armed_tokens_per_s",
+                        Json::num(m_decode_fault_armed.throughput().unwrap_or(0.0)),
                     ),
                     (
                         "packed_int2_kv8_tokens_per_s",

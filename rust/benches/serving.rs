@@ -31,6 +31,7 @@ fn run_server<M: ModelExec + Send + Sync + 'static>(
         addr: "127.0.0.1:0".into(),
         batcher,
         max_connections: Some(clients),
+        ..Default::default()
     };
     let (addr, handle) = serve_in_background(weights, cfg).unwrap();
     let corpus = Corpus::generate(CorpusKind::SynthWiki, 50_000, 11);

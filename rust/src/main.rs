@@ -88,7 +88,13 @@ fn print_help() {
          \x20            with deterministic re-prefill — tokens unchanged);\n\
          \x20            --prefill-chunk C feeds prompts C tokens per step\n\
          \x20            (batched GEMM prefill; C=1 is the one-token path,\n\
-         \x20            tokens bit-identical for every C)\n\
+         \x20            tokens bit-identical for every C);\n\
+         \x20            --request-timeout MS bounds total per-request latency\n\
+         \x20            (expired requests return partial tokens, timed_out=true),\n\
+         \x20            --step-timeout MS bounds one decode step, --conn-timeout MS\n\
+         \x20            disconnects silent clients; panicked decode workers are\n\
+         \x20            respawned and dead shard chains rebuilt automatically\n\
+         \x20            (TSGO_FAULT=point[=v][@hit=N] injects test faults)\n\
          \x20 kernels    print the dequant kernel dispatch table (CPU features,\n\
          \x20            per-bit-width kernel selection, forcing state)\n\
          \x20 warmup     pre-compile all artifacts"
@@ -390,6 +396,9 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         OptSpec { name: "kv-page-tokens", help: "token rows per KV page", default: Some("16"), is_flag: false },
         OptSpec { name: "shards", help: "pipeline-parallel shard count (layers split over N worker threads; clamped to the layer count)", default: Some("1"), is_flag: false },
         OptSpec { name: "prefill-chunk", help: "prompt tokens per prefill step (1 = one-token steps; tokens identical for any value; 0 = default 64 / TSGO_PREFILL_CHUNK)", default: Some("0"), is_flag: false },
+        OptSpec { name: "request-timeout", help: "total per-request deadline in ms, queue wait included; expired requests return partial tokens with timed_out=true (0 = none)", default: Some("0"), is_flag: false },
+        OptSpec { name: "step-timeout", help: "per-decode-step deadline in ms before a worker is declared lost and its sequence errored (0 = default 60000)", default: Some("0"), is_flag: false },
+        OptSpec { name: "conn-timeout", help: "per-connection socket read/write timeout in ms; disconnects silent/half-open clients (0 = default 120000)", default: Some("0"), is_flag: false },
     ];
     let a = parse(argv, "tsgo serve", "batched generation server", &specs)?;
     let kv = KvSpec::from_flags(
@@ -405,6 +414,18 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         0 => tsgo::serve::default_prefill_chunk(),
         c => c,
     };
+    let request_timeout = match a.usize("request-timeout").map_err(anyhow::Error::msg)? {
+        0 => None,
+        ms => Some(std::time::Duration::from_millis(ms as u64)),
+    };
+    let step_timeout = match a.usize("step-timeout").map_err(anyhow::Error::msg)? {
+        0 => tsgo::serve::BatcherConfig::default().step_timeout,
+        ms => std::time::Duration::from_millis(ms as u64),
+    };
+    let conn_timeout = match a.usize("conn-timeout").map_err(anyhow::Error::msg)? {
+        0 => tsgo::serve::ServerConfig::default().conn_timeout,
+        ms => Some(std::time::Duration::from_millis(ms as u64)),
+    };
     let cfg = tsgo::serve::ServerConfig {
         addr: a.str("addr"),
         batcher: tsgo::serve::BatcherConfig {
@@ -413,13 +434,24 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
             shards,
             pool,
             prefill_chunk,
+            request_timeout,
+            step_timeout,
             ..Default::default()
         },
         max_connections: None,
+        conn_timeout,
     };
     println!(
         "prefill: chunked, {prefill_chunk} tokens/step (--prefill-chunk; \
          1 reproduces one-token prefill, tokens identical either way)"
+    );
+    println!(
+        "fault tolerance: step deadline {}, request deadline {}, conn timeout {} \
+         (workers respawn after panics, shard chains rebuild after deaths; \
+         TSGO_FAULT injects deterministic faults — see util::fault)",
+        tsgo::util::fmt_duration(step_timeout),
+        request_timeout.map_or("none".to_string(), tsgo::util::fmt_duration),
+        conn_timeout.map_or("none".to_string(), tsgo::util::fmt_duration),
     );
     if a.flag("packed") {
         let em = store::load_quantized_packed(Path::new(&a.str("model")))?;

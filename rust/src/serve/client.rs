@@ -27,6 +27,16 @@ pub struct ClientResponse {
     pub kv_pages_used: usize,
     /// Times this request was preempted and re-prefilled for pool pressure.
     pub preemptions: usize,
+    /// True when the request hit the server's `--request-timeout` and
+    /// `tokens` holds only what was generated before the deadline (false
+    /// against a pre-PR-8 server that doesn't report the flag).
+    pub timed_out: bool,
+    /// Process-lifetime count of decode pool workers respawned after a
+    /// panic (0 against a pre-PR-8 server).
+    pub worker_restarts: usize,
+    /// Process-lifetime count of shard-pipeline rebuilds after a shard
+    /// death (0 against a pre-PR-8 server).
+    pub pipeline_rebuilds: usize,
 }
 
 /// Send one generation request and wait for the reply.
@@ -56,5 +66,8 @@ pub fn request_generation(addr: &str, prompt: &[u8], max_new: usize) -> Result<C
         batch_size: j.get("batch_size").as_usize().unwrap_or(1),
         kv_pages_used: j.get("kv_pages_used").as_usize().unwrap_or(0),
         preemptions: j.get("preemptions").as_usize().unwrap_or(0),
+        timed_out: j.get("timed_out").as_bool().unwrap_or(false),
+        worker_restarts: j.get("worker_restarts").as_usize().unwrap_or(0),
+        pipeline_rebuilds: j.get("pipeline_rebuilds").as_usize().unwrap_or(0),
     })
 }

@@ -12,12 +12,15 @@
 
 pub mod batcher;
 pub mod client;
-pub(crate) mod sched;
+pub mod sched;
 pub mod server;
 
 pub use batcher::{
     argmax_token, default_prefill_chunk, BatcherConfig, DynamicBatcher, GenRequest, GenResponse,
+    Pending, RequestQueue,
 };
 pub use client::request_generation;
-pub use sched::StepJob;
+pub use sched::{
+    scheduler_loop, AdmitVerdict, LocalBackend, PoolMirror, ShardBackend, StepBackend, StepJob,
+};
 pub use server::{serve, ServerConfig};

@@ -68,6 +68,27 @@
 //!   `retire` is an asynchronous packet: the mirror frees pages the moment
 //!   the scheduler decides, and channel FIFO order guarantees each shard
 //!   processes that release before any allocation the decision enabled.
+//!
+//! **Fault tolerance (PR 8).** Worker failure is contained to the failing
+//! sequence, never the process or its co-batch:
+//!
+//! * Every decode step (inline and pooled) runs under `catch_unwind`; a
+//!   panicking step worker sends a *structured* `Err` reply tagged with the
+//!   job's `gen`/`idx`, so exactly that sequence errors while its
+//!   neighbours' replies land normally — no 60-second stall. The pool
+//!   supervisor ([`StepPool::reap_and_respawn`]) joins finished workers and
+//!   respawns back to full width before the next step.
+//! * The shard pipeline self-reports death ([`ShardedDecoder::dead`]);
+//!   [`ShardBackend`] defers admission while dead sequences drain (their KV
+//!   banks died with the chain, so they error terminally and retire), then
+//!   the decoder rebuilds the whole thread chain on the next admit.
+//! * Deadlines: `BatcherConfig::step_timeout` bounds how long one batch
+//!   step may wait on a lost reply (the old hardcoded 60s), and
+//!   `BatcherConfig::request_timeout` retires sequences past their total
+//!   deadline with partial tokens and `GenResponse::timed_out` set.
+//!
+//! The failure paths are exercised deterministically via the fault points
+//! in [`crate::util::fault`] (`TSGO_FAULT`, `BatcherConfig::faults`).
 
 use super::batcher::{argmax_token, BatcherConfig, GenResponse, Pending, RequestQueue};
 use crate::kvpool::{KvPool, PoolCfg};
@@ -75,7 +96,9 @@ use crate::model::{
     decode_head, decode_layer_span, embed_tokens, KvSpec, LayerKv, ModelConfig, ModelExec,
 };
 use crate::shard::{ShardPlan, ShardedDecoder};
+use crate::util::fault::{self, FaultPoint};
 use std::collections::VecDeque;
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
@@ -108,8 +131,10 @@ impl StepJob {
     }
 }
 
-/// What admission says about a sequence, given the KV budget.
-pub(crate) enum AdmitVerdict {
+/// What admission says about a sequence, given the KV budget. Public (like
+/// the backends and [`scheduler_loop`]) so integration tests — and the
+/// planned multi-process fleet — can drive the scheduler surface directly.
+pub enum AdmitVerdict {
     /// Admitted into this slot.
     Slot(usize),
     /// No room right now — retry once pages free up (retire/preemption).
@@ -124,7 +149,7 @@ pub(crate) enum AdmitVerdict {
 /// per-sequence decode state; the scheduler owns all policy. The pool
 /// hooks (`can_step`/`preempt`/`slot_pages`/`pool_stats`) have pass-through
 /// defaults so an unpooled backend is exactly the pre-PR-6 surface.
-pub(crate) trait StepBackend {
+pub trait StepBackend {
     /// Try to start a sequence whose prompt is `prompt_len` tokens.
     fn admit(&mut self, prompt_len: usize) -> AdmitVerdict;
     fn retire(&mut self, slot: usize);
@@ -150,6 +175,16 @@ pub(crate) trait StepBackend {
     fn pool_stats(&self) -> Option<(usize, usize)> {
         None
     }
+    /// Upper bound one batch step may block waiting for a reply that will
+    /// never come (`--step-timeout`). No-op default for backends whose
+    /// steps have no asynchronous replies.
+    fn set_step_timeout(&mut self, _timeout: Duration) {}
+    /// `(worker_restarts, pipeline_rebuilds)` this backend has recovered
+    /// from so far — surfaced on every [`GenResponse`] and in the serve
+    /// banner.
+    fn recovery_counts(&self) -> (usize, usize) {
+        (0, 0)
+    }
 }
 
 /// One full-depth span step — the exact [`crate::model::DecodeState`]
@@ -157,6 +192,11 @@ pub(crate) trait StepBackend {
 /// workers. Only the span's last row feeds the LM head: logits at earlier
 /// prefill rows are never sampled by greedy decode.
 fn run_job<M: ModelExec>(m: &M, pos: usize, tokens: &[u8], bank: &mut [LayerKv]) -> Vec<f32> {
+    // Both step-job fault points live here so the inline fast path and the
+    // pool workers share one injection site (a single relaxed load when
+    // nothing is armed — see `util::fault`).
+    fault::maybe_sleep(FaultPoint::StepWorkerSlowMs);
+    fault::maybe_panic(FaultPoint::StepWorkerPanic);
     let mut h = embed_tokens(m, tokens);
     for (l, kv) in m.layers().iter().zip(bank.iter_mut()) {
         decode_layer_span(l, m.config(), pos, &mut h, kv);
@@ -178,50 +218,140 @@ struct PoolJob {
     bank: Vec<LayerKv>,
 }
 
+/// A pool worker's reply: the job's generation tag and index, then either
+/// the returned bank + logits, or the contained panic's message (the bank
+/// was dropped worker-side, releasing its pages exactly once).
+type PoolReply = (u64, usize, Result<(Vec<LayerKv>, Vec<f32>), String>);
+
+/// Best-effort text of a caught panic payload.
+fn panic_msg(p: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = p.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "unknown panic payload".to_string()
+    }
+}
+
 /// The persistent decode pool: workers pull [`PoolJob`]s off a shared
 /// receiver and reply on `done_rx`. Dropping it closes the job channel and
-/// joins every worker.
+/// joins every worker. A panicking worker is *supervised*: the panic is
+/// caught, routed back as a structured `Err` reply for exactly its job, and
+/// the worker replaced by [`StepPool::reap_and_respawn`] before the next
+/// step — the pool never silently shrinks.
 struct StepPool {
     job_tx: Option<Sender<PoolJob>>,
-    done_rx: Receiver<(u64, usize, Vec<LayerKv>, Vec<f32>)>,
+    done_rx: Receiver<PoolReply>,
     workers: Vec<std::thread::JoinHandle<()>>,
     /// Monotonic `step` counter; see [`PoolJob::gen`].
     gen: u64,
+    /// Target worker count — respawn restores to this.
+    width: usize,
+    /// Next worker thread id (monotonic across respawns, for clear names).
+    next_id: usize,
+    /// Workers respawned after a death; surfaced as `worker_restarts`.
+    restarts: usize,
+    /// Factory for one worker thread; captures the model, the shared job
+    /// receiver and the reply sender so replacements join the same
+    /// channels the dead worker left.
+    spawn_worker: Box<dyn Fn(usize) -> std::thread::JoinHandle<()> + Send>,
 }
 
 impl StepPool {
     fn spawn<M: ModelExec + Send + Sync + 'static>(model: &Arc<M>, width: usize) -> StepPool {
         let (job_tx, job_rx) = channel::<PoolJob>();
-        let (done_tx, done_rx) = channel::<(u64, usize, Vec<LayerKv>, Vec<f32>)>();
+        let (done_tx, done_rx) = channel::<PoolReply>();
         let job_rx = Arc::new(Mutex::new(job_rx));
-        let mut workers = Vec::with_capacity(width);
-        for i in 0..width {
-            let m = model.clone();
-            let rx = job_rx.clone();
-            let tx = done_tx.clone();
-            let worker = std::thread::Builder::new()
-                .name(format!("tsgo-step-{i}"))
-                .spawn(move || loop {
-                    // Classic shared-receiver pool: the idle worker holds
-                    // the lock while blocked in recv; peers queue on the
-                    // mutex. Pickup is serialized, compute is parallel. A
-                    // poisoned lock (a peer panicked mid-pickup) is
-                    // recovered, not propagated — one dead worker must not
-                    // cascade into a dead pool.
-                    let job = match rx.lock().unwrap_or_else(|p| p.into_inner()).recv() {
-                        Ok(j) => j,
-                        Err(_) => break, // backend dropped: pool drains
-                    };
-                    let mut bank = job.bank;
-                    let logits = run_job(m.as_ref(), job.pos, &job.tokens, &mut bank);
-                    if tx.send((job.gen, job.idx, bank, logits)).is_err() {
-                        break;
-                    }
-                })
-                .expect("spawn step-pool worker thread");
-            workers.push(worker);
+        let spawn_worker: Box<dyn Fn(usize) -> std::thread::JoinHandle<()> + Send> = {
+            let model = model.clone();
+            Box::new(move |i| {
+                let m = model.clone();
+                let rx = job_rx.clone();
+                let tx = done_tx.clone();
+                std::thread::Builder::new()
+                    .name(format!("tsgo-step-{i}"))
+                    .spawn(move || loop {
+                        // Classic shared-receiver pool: the idle worker holds
+                        // the lock while blocked in recv; peers queue on the
+                        // mutex. Pickup is serialized, compute is parallel. A
+                        // poisoned lock (a peer panicked mid-pickup) is
+                        // recovered, not propagated — one dead worker must not
+                        // cascade into a dead pool.
+                        let job = match rx.lock().unwrap_or_else(|p| p.into_inner()).recv() {
+                            Ok(j) => j,
+                            Err(_) => break, // backend dropped: pool drains
+                        };
+                        let mut bank = job.bank;
+                        let result = catch_unwind(AssertUnwindSafe(|| {
+                            run_job(m.as_ref(), job.pos, &job.tokens, &mut bank)
+                        }));
+                        match result {
+                            Ok(logits) => {
+                                // A dropped reply models a lost message: the
+                                // bank (and its pool pages) is released right
+                                // here; the scheduler's step deadline errors
+                                // the sequence.
+                                if fault::fires(FaultPoint::ChannelDrop) {
+                                    continue;
+                                }
+                                if tx.send((job.gen, job.idx, Ok((bank, logits)))).is_err() {
+                                    break;
+                                }
+                            }
+                            Err(p) => {
+                                // Contained panic: drop the (possibly torn)
+                                // bank so its pages return to the pool exactly
+                                // once, route the failure to precisely this
+                                // job's sequence, then exit — a panicked
+                                // worker's state is no longer trusted; the
+                                // supervisor respawns a replacement.
+                                drop(bank);
+                                let _ = tx.send((job.gen, job.idx, Err(panic_msg(p.as_ref()))));
+                                break;
+                            }
+                        }
+                    })
+                    .expect("spawn step-pool worker thread")
+            })
+        };
+        let workers = (0..width).map(|i| spawn_worker(i)).collect();
+        StepPool {
+            job_tx: Some(job_tx),
+            done_rx,
+            workers,
+            gen: 0,
+            width,
+            next_id: width,
+            restarts: 0,
+            spawn_worker,
         }
-        StepPool { job_tx: Some(job_tx), done_rx, workers, gen: 0 }
+    }
+
+    /// Supervision: join any worker that exited (a contained panic kills
+    /// its worker after the `Err` reply) and respawn replacements back to
+    /// the pool width. Returns how many were respawned. Called at the top
+    /// of every pooled step, so a death in step N is healed before step
+    /// N+1's jobs queue.
+    fn reap_and_respawn(&mut self) -> usize {
+        if !self.workers.iter().any(|w| w.is_finished()) {
+            return 0;
+        }
+        let (dead, alive): (Vec<_>, Vec<_>) =
+            self.workers.drain(..).partition(|w| w.is_finished());
+        self.workers = alive;
+        for w in dead {
+            let _ = w.join(); // the panic was already routed as an Err reply
+        }
+        let mut spawned = 0usize;
+        while self.workers.len() < self.width {
+            let id = self.next_id;
+            self.next_id += 1;
+            self.workers.push((self.spawn_worker)(id));
+            self.restarts += 1;
+            spawned += 1;
+        }
+        spawned
     }
 }
 
@@ -245,7 +375,7 @@ impl Drop for StepPool {
 /// shared budget; admission and the per-step gate are exact because decode
 /// appends K and V on every layer each step, so a sequence at `rows` tokens
 /// holds exactly `2 · n_layers · ⌈rows / page_tokens⌉` pages.
-pub(crate) struct LocalBackend<M: ModelExec> {
+pub struct LocalBackend<M: ModelExec> {
     model: Arc<M>,
     kv: KvSpec,
     /// Pool width when it spawns: `min(threads, max_batch)` — never more
@@ -257,10 +387,13 @@ pub(crate) struct LocalBackend<M: ModelExec> {
     kv_pool: Option<KvPool>,
     slots: Vec<Option<Vec<LayerKv>>>,
     free: Vec<usize>,
+    /// How long one pooled step waits for a reply that may never come
+    /// (`--step-timeout`; the old behaviour was a hardcoded 60s).
+    step_timeout: Duration,
 }
 
 impl<M: ModelExec> LocalBackend<M> {
-    pub(crate) fn new(
+    pub fn new(
         model: Arc<M>,
         kv: KvSpec,
         max_batch: usize,
@@ -276,6 +409,7 @@ impl<M: ModelExec> LocalBackend<M> {
             kv_pool,
             slots: Vec::new(),
             free: Vec::new(),
+            step_timeout: Duration::from_secs(60),
         }
     }
 
@@ -284,10 +418,31 @@ impl<M: ModelExec> LocalBackend<M> {
     fn pages_per_boundary(&self) -> usize {
         2 * self.model.config().n_layers
     }
+
+    /// Workers the pool supervisor has respawned after a death.
+    pub fn worker_restarts(&self) -> usize {
+        self.pool.as_ref().map_or(0, |p| p.restarts)
+    }
+
+    /// Drop any replies parked in the done channel. Between steps every
+    /// parked reply is stale — its step already returned, its sequence was
+    /// errored and retired — so the only live thing in it is a KV bank
+    /// whose drop here returns the pages to the pool (the lost-bank leak:
+    /// a slow worker's reply landing after its step's deadline would
+    /// otherwise hold pages forever). Called by `retire` and at the top of
+    /// every pooled step; public so fault tests can force reclamation.
+    pub fn reclaim_stale(&mut self) {
+        if let Some(pool) = &self.pool {
+            while pool.done_rx.try_recv().is_ok() {}
+        }
+    }
 }
 
 impl<M: ModelExec + Send + Sync + 'static> StepBackend for LocalBackend<M> {
     fn admit(&mut self, prompt_len: usize) -> AdmitVerdict {
+        if fault::fires(FaultPoint::AdmitExhaust) {
+            return AdmitVerdict::Defer;
+        }
         if let Some(pool) = &self.kv_pool {
             let per_boundary = 2 * self.model.config().n_layers;
             let need = per_boundary * pool.pages_for_rows(prompt_len);
@@ -325,9 +480,14 @@ impl<M: ModelExec + Send + Sync + 'static> StepBackend for LocalBackend<M> {
     }
 
     fn retire(&mut self, slot: usize) {
-        // Dropping a paged bank releases its pages back to the pool.
+        // Dropping a paged bank releases its pages back to the pool. A
+        // bankless slot (its bank was lost to a worker death or is parked
+        // in a stale reply) has nothing to drop here — `reclaim_stale`
+        // frees any parked bank, so each bank's pages release exactly once
+        // whichever path it died on.
         self.slots[slot] = None;
         self.free.push(slot);
+        self.reclaim_stale();
     }
 
     fn step(&mut self, jobs: &[StepJob]) -> Vec<Result<Vec<f32>, String>> {
@@ -335,18 +495,49 @@ impl<M: ModelExec + Send + Sync + 'static> StepBackend for LocalBackend<M> {
             return Vec::new();
         }
         if let [job] = jobs {
-            // Batch of one: decode inline, skipping the pool's channel hops.
+            // Batch of one: decode inline, skipping the pool's channel
+            // hops. Panics are contained exactly like a pool worker's: the
+            // failure becomes this job's Err, the (possibly torn) bank is
+            // discarded so its pages return to the pool, and the slot
+            // stays bankless until retire.
             let mut bank = self.slots[job.slot].take().expect("step on unadmitted slot");
-            let logits = run_job(self.model.as_ref(), job.pos, &job.tokens, &mut bank);
-            self.slots[job.slot] = Some(bank);
-            return vec![Ok(logits)];
+            let result = catch_unwind(AssertUnwindSafe(|| {
+                run_job(self.model.as_ref(), job.pos, &job.tokens, &mut bank)
+            }));
+            return vec![match result {
+                Ok(logits) => {
+                    self.slots[job.slot] = Some(bank);
+                    Ok(logits)
+                }
+                Err(p) => {
+                    drop(bank);
+                    Err(format!("decode worker panicked: {}", panic_msg(p.as_ref())))
+                }
+            }];
         }
-        let unavailable = || "step pool unavailable (a decode worker exited)".to_string();
-        let mut out: Vec<Result<Vec<f32>, String>> =
-            jobs.iter().map(|_| Err(unavailable())).collect();
+        let timeout = self.step_timeout;
+        let lost = || {
+            format!(
+                "decode step reply lost (worker died or exceeded the {} step deadline)",
+                crate::util::fmt_duration(timeout)
+            )
+        };
+        let mut out: Vec<Result<Vec<f32>, String>> = jobs.iter().map(|_| Err(lost())).collect();
         let pool = self
             .pool
             .get_or_insert_with(|| StepPool::spawn(&self.model, self.pool_width));
+        let respawned = pool.reap_and_respawn();
+        if respawned > 0 {
+            println!(
+                "serve: step pool respawned {respawned} decode worker(s) after a death \
+                 (width {}, total restarts {})",
+                pool.width, pool.restarts
+            );
+        }
+        // Anything parked in the done channel now predates this step:
+        // drain it so stale banks release their pages and the recv loop
+        // below mostly sees this generation.
+        while pool.done_rx.try_recv().is_ok() {}
         pool.gen += 1;
         let gen = pool.gen;
         let tx = pool.job_tx.as_ref().expect("step pool open until drop");
@@ -355,28 +546,35 @@ impl<M: ModelExec + Send + Sync + 'static> StepBackend for LocalBackend<M> {
             let bank = self.slots[job.slot].take().expect("step on unadmitted slot");
             let pj = PoolJob { gen, idx, pos: job.pos, tokens: job.tokens.clone(), bank };
             if tx.send(pj).is_err() {
-                break; // a worker panicked; remaining entries stay Err
+                break; // every worker died mid-step; remaining entries stay Err
             }
             sent += 1;
         }
         let mut got = 0usize;
         while got < sent {
-            // recv_timeout, not recv: if a worker dies mid-job its reply
-            // never comes while idle peers keep the channel open — a plain
-            // recv would wedge the scheduler. The bound only fires on a
-            // genuinely dead pool (a healthy batch step is milliseconds).
-            match pool.done_rx.recv_timeout(Duration::from_secs(60)) {
+            // recv_timeout, not recv: if a reply is lost (dead worker,
+            // dropped message) while idle peers keep the channel open, a
+            // plain recv would wedge the scheduler. `--step-timeout`
+            // bounds the wait (a healthy batch step is milliseconds).
+            match pool.done_rx.recv_timeout(timeout) {
                 // A stale generation is a job whose step already gave up:
                 // its sequence was errored/retired back then, so both the
                 // bank and the logits are dead — drop them rather than
                 // matching the raw index into *this* step's jobs.
-                Ok((g, _, _, _)) if g != gen => continue,
-                Ok((_, idx, bank, logits)) => {
+                Ok((g, _, _)) if g != gen => continue,
+                Ok((_, idx, Ok((bank, logits)))) => {
                     self.slots[jobs[idx].slot] = Some(bank);
                     out[idx] = Ok(logits);
                     got += 1;
                 }
-                Err(_) => break,
+                Ok((_, idx, Err(e))) => {
+                    // A contained worker panic: only this job's sequence
+                    // errors; its bank was dropped worker-side, so the
+                    // pages are already back in the pool.
+                    out[idx] = Err(format!("decode worker panicked: {e}"));
+                    got += 1;
+                }
+                Err(_) => break, // deadline: unanswered entries keep `lost`
             }
         }
         out
@@ -414,6 +612,14 @@ impl<M: ModelExec + Send + Sync + 'static> StepBackend for LocalBackend<M> {
     fn pool_stats(&self) -> Option<(usize, usize)> {
         self.kv_pool.as_ref().map(|p| (p.used_pages(), p.total_pages()))
     }
+
+    fn set_step_timeout(&mut self, timeout: Duration) {
+        self.step_timeout = timeout.max(Duration::from_millis(1));
+    }
+
+    fn recovery_counts(&self) -> (usize, usize) {
+        (self.worker_restarts(), 0)
+    }
 }
 
 /// Scheduler-side accounting twin of the shard-local KV sub-pools.
@@ -426,7 +632,7 @@ impl<M: ModelExec + Send + Sync + 'static> StepBackend for LocalBackend<M> {
 /// of shard `s`'s sub-pool. Channel FIFO order makes the mirror safe: a
 /// release the mirror credits was sent down the pipe before any allocation
 /// it enabled, so each shard frees first and allocates second.
-pub(crate) struct PoolMirror {
+pub struct PoolMirror {
     page_tokens: usize,
     /// Per shard: (layers in its range, its sub-pool's page budget).
     shards: Vec<(usize, usize)>,
@@ -435,7 +641,7 @@ pub(crate) struct PoolMirror {
 }
 
 impl PoolMirror {
-    pub(crate) fn new(
+    pub fn new(
         plan: &ShardPlan,
         mcfg: &ModelConfig,
         kv: KvSpec,
@@ -495,11 +701,13 @@ impl PoolMirror {
         }
     }
 
-    fn on_step(&mut self, jobs: &[StepJob]) {
-        for j in jobs {
-            if let Some(Some(r)) = self.slot_rows.get_mut(j.slot) {
-                *r += j.tokens.len();
-            }
+    /// Credit one job's span as cached rows. Only called for jobs whose
+    /// step result was `Ok` — a failed job's KV never (reliably) appended,
+    /// and its sequence is about to retire anyway, so counting it would
+    /// overstate held pages until the retire lands.
+    fn on_job(&mut self, j: &StepJob) {
+        if let Some(Some(r)) = self.slot_rows.get_mut(j.slot) {
+            *r += j.tokens.len();
         }
     }
 
@@ -541,19 +749,35 @@ impl PoolMirror {
 
 /// Pipeline backend: delegates execution to the shard threads and pool
 /// accounting to the [`PoolMirror`] (when a pool is configured).
-pub(crate) struct ShardBackend {
+///
+/// Failure containment: when the decoder reports itself dead (a shard
+/// thread died or the result FIFO went corrupt), admission *defers* until
+/// every in-flight sequence has been errored and retired — their KV banks
+/// died with the chain — and only then lets [`ShardedDecoder::admit`]
+/// rebuild the whole thread chain, so a rebuilt pipeline never sees a slot
+/// it didn't admit.
+pub struct ShardBackend {
     dec: ShardedDecoder,
     mirror: Option<PoolMirror>,
 }
 
 impl ShardBackend {
-    pub(crate) fn new(dec: ShardedDecoder, mirror: Option<PoolMirror>) -> ShardBackend {
+    pub fn new(dec: ShardedDecoder, mirror: Option<PoolMirror>) -> ShardBackend {
         ShardBackend { dec, mirror }
     }
 }
 
 impl StepBackend for ShardBackend {
     fn admit(&mut self, prompt_len: usize) -> AdmitVerdict {
+        if fault::fires(FaultPoint::AdmitExhaust) {
+            return AdmitVerdict::Defer;
+        }
+        if self.dec.dead() && self.dec.live_slots() > 0 {
+            // The chain is down but sequences still reference its slots:
+            // their next step errors them terminally and retires them;
+            // rebuild (inside `dec.admit`) waits for that drain.
+            return AdmitVerdict::Defer;
+        }
         if let Some(v) = self.mirror.as_ref().and_then(|m| m.verdict(prompt_len)) {
             return v;
         }
@@ -578,7 +802,11 @@ impl StepBackend for ShardBackend {
     fn step(&mut self, jobs: &[StepJob]) -> Vec<Result<Vec<f32>, String>> {
         let out = self.dec.step(jobs);
         if let Some(m) = &mut self.mirror {
-            m.on_step(jobs);
+            for (j, r) in jobs.iter().zip(&out) {
+                if r.is_ok() {
+                    m.on_job(j);
+                }
+            }
         }
         out
     }
@@ -593,6 +821,14 @@ impl StepBackend for ShardBackend {
 
     fn pool_stats(&self) -> Option<(usize, usize)> {
         self.mirror.as_ref().map(|m| m.stats())
+    }
+
+    fn set_step_timeout(&mut self, timeout: Duration) {
+        self.dec.set_step_timeout(timeout.max(Duration::from_millis(1)));
+    }
+
+    fn recovery_counts(&self) -> (usize, usize) {
+        (0, self.dec.rebuilds())
     }
 }
 
@@ -662,11 +898,8 @@ enum Advance {
 /// request queue closes (batcher dropped). Exits only with every in-flight
 /// sequence answered — finished normally, or drained with an error on
 /// shutdown — so `DynamicBatcher::drop` can join unconditionally.
-pub(crate) fn scheduler_loop(
-    backend: &mut dyn StepBackend,
-    cfg: &BatcherConfig,
-    queue: RequestQueue,
-) {
+pub fn scheduler_loop(backend: &mut dyn StepBackend, cfg: &BatcherConfig, queue: RequestQueue) {
+    backend.set_step_timeout(cfg.step_timeout);
     let mut active: Vec<Running> = Vec::new();
     // Preempted sequences awaiting re-admission (oldest first) and requests
     // the pool deferred at admission (FIFO). Invariant: both only grow under
@@ -759,6 +992,64 @@ pub(crate) fn scheduler_loop(
             }
         }
 
+        // -- deadlines: expire requests past --request-timeout -------------
+        // Checked once per step (steps are milliseconds), queue wait
+        // included: an expired sequence answers with its partial tokens and
+        // `timed_out` set, freeing its slot and pages for the batch.
+        if let Some(limit) = cfg.request_timeout {
+            let now = Instant::now();
+            let counts = backend.recovery_counts();
+            let expired = |enq: Instant| now.saturating_duration_since(enq) >= limit;
+            let mut still = Vec::with_capacity(active.len());
+            for r in active {
+                if expired(r.enqueued) {
+                    println!(
+                        "serve: deadline exceeded ({} elapsed): retiring sequence with \
+                         {} of {} tokens",
+                        crate::util::fmt_duration(now.saturating_duration_since(r.enqueued)),
+                        r.out.len(),
+                        r.max_new
+                    );
+                    backend.retire(r.slot);
+                    finish(r, Ok(()), true, counts);
+                } else {
+                    still.push(r);
+                }
+            }
+            active = still;
+            // Paused sequences hold no slot (preemption released it).
+            for _ in 0..paused.len() {
+                let r = paused.pop_front().expect("iterating current length");
+                if expired(r.enqueued) {
+                    finish(r, Ok(()), true, counts);
+                } else {
+                    paused.push_back(r);
+                }
+            }
+            // Never-admitted requests expire with zero tokens: all their
+            // elapsed time was queue wait.
+            for _ in 0..waiting.len() {
+                let p = waiting.pop_front().expect("iterating current length");
+                if expired(p.enqueued) {
+                    queue.settle();
+                    let _ = p.reply.send(Ok(GenResponse {
+                        tokens: Vec::new(),
+                        queue_wait: now.saturating_duration_since(p.enqueued),
+                        prefill_time: Duration::ZERO,
+                        decode_time: Duration::ZERO,
+                        batch_size: 1,
+                        kv_pages_used: 0,
+                        preemptions: 0,
+                        timed_out: true,
+                        worker_restarts: counts.0,
+                        pipeline_rebuilds: counts.1,
+                    }));
+                } else {
+                    waiting.push_back(p);
+                }
+            }
+        }
+
         // Admission can answer requests without starting a sequence (empty
         // prompt, max_new == 0, backend refusal); with nothing running, go
         // straight back to blocking on the queue instead of issuing an
@@ -837,7 +1128,8 @@ pub(crate) fn scheduler_loop(
                 Advance::Continue => still.push(r),
                 Advance::Done(result) => {
                     backend.retire(r.slot);
-                    finish(r, result);
+                    let counts = backend.recovery_counts();
+                    finish(r, result, false, counts);
                 }
             }
         }
@@ -893,6 +1185,7 @@ fn admit_request(
     }
     if p.req.max_new == 0 {
         queue.settle();
+        let (worker_restarts, pipeline_rebuilds) = backend.recovery_counts();
         let _ = p.reply.send(Ok(GenResponse {
             tokens: Vec::new(),
             queue_wait,
@@ -901,6 +1194,9 @@ fn admit_request(
             batch_size: 1,
             kv_pages_used: 0,
             preemptions: 0,
+            timed_out: false,
+            worker_restarts,
+            pipeline_rebuilds,
         }));
         return None;
     }
@@ -935,9 +1231,10 @@ fn admit_request(
     }
 }
 
-fn finish(r: Running, result: Result<(), String>) {
+fn finish(r: Running, result: Result<(), String>, timed_out: bool, counts: (usize, usize)) {
     // A sequence only finishes after at least one step, so `started` is
-    // always stamped by then; the fallbacks are pure defensiveness.
+    // always stamped by then; the fallbacks are pure defensiveness (and
+    // cover a deadline expiry before the first step).
     let started = r.started.unwrap_or_else(Instant::now);
     // Prefill ends when the first generated token is sampled; everything
     // after (including any post-preemption replay) is decode time. A
@@ -951,6 +1248,9 @@ fn finish(r: Running, result: Result<(), String>) {
         batch_size: r.max_cobatch,
         kv_pages_used: r.kv_pages_peak,
         preemptions: r.preemptions,
+        timed_out,
+        worker_restarts: counts.0,
+        pipeline_rebuilds: counts.1,
     });
     let _ = r.reply.send(resp);
 }
@@ -1084,9 +1384,10 @@ mod tests {
             pool: Some(pc),
             max_queue: 256,
             prefill_chunk: CHUNK,
+            ..Default::default()
         };
         let sched = std::thread::spawn(move || {
-            scheduler_loop(&mut backend, &cfg, RequestQueue::over(rx));
+            scheduler_loop(&mut backend, &cfg, RequestQueue::for_tests(rx));
         });
         let resp_a = ra_rx.recv().unwrap().unwrap();
         let resp_b = rb_rx.recv().unwrap().unwrap();

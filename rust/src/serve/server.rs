@@ -4,8 +4,15 @@
 //! Request  : `{"prompt": [byte ids], "max_new": N}`
 //! Response : `{"tokens": [...], "latency_ms": f, "queue_wait_ms": f,
 //!             "prefill_ms": f, "ttft_ms": f, "decode_ms": f,
-//!             "batch_size": n, "kv_pages_used": n, "preemptions": n}`
+//!             "batch_size": n, "kv_pages_used": n, "preemptions": n,
+//!             "timed_out": b, "worker_restarts": n, "pipeline_rebuilds": n}`
 //! Error    : `{"error": "..."}`
+//!
+//! `timed_out` is true when the request hit the server's `--request-timeout`
+//! and returned the tokens generated so far; `worker_restarts` /
+//! `pipeline_rebuilds` are process-lifetime recovery counters (see
+//! [`crate::serve::sched`]) so a client can observe that a fault occurred
+//! and was absorbed.
 //!
 //! `latency_ms` is always `queue_wait_ms + prefill_ms + decode_ms`, and
 //! `ttft_ms` (time to first token) is `queue_wait_ms + prefill_ms`; the
@@ -21,6 +28,7 @@ use anyhow::{Context, Result};
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::Arc;
+use std::time::Duration;
 
 /// Server tunables.
 #[derive(Clone, Debug)]
@@ -30,6 +38,13 @@ pub struct ServerConfig {
     /// Stop after serving this many connections (None = forever). Used by
     /// tests and the example driver.
     pub max_connections: Option<usize>,
+    /// Per-connection socket read/write timeout. A half-open client (TCP
+    /// established, then silence) would otherwise pin its connection
+    /// thread in a blocking read forever; with this set, the read times
+    /// out and the thread exits. Generous by default — it must comfortably
+    /// exceed generation latency only for *writes*; reads between requests
+    /// are idle time, so this doubles as an idle-connection reaper.
+    pub conn_timeout: Option<Duration>,
 }
 
 impl Default for ServerConfig {
@@ -38,6 +53,7 @@ impl Default for ServerConfig {
             addr: "127.0.0.1:7433".into(),
             batcher: BatcherConfig::default(),
             max_connections: None,
+            conn_timeout: Some(Duration::from_secs(120)),
         }
     }
 }
@@ -82,14 +98,25 @@ fn handle_line(batcher: &DynamicBatcher, line: &str) -> String {
             ("batch_size", Json::num(resp.batch_size as f64)),
             ("kv_pages_used", Json::num(resp.kv_pages_used as f64)),
             ("preemptions", Json::num(resp.preemptions as f64)),
+            ("timed_out", Json::Bool(resp.timed_out)),
+            ("worker_restarts", Json::num(resp.worker_restarts as f64)),
+            ("pipeline_rebuilds", Json::num(resp.pipeline_rebuilds as f64)),
         ])
         .to_string(),
         Err(e) => respond_err(&e.to_string()),
     }
 }
 
-fn handle_conn(batcher: Arc<DynamicBatcher>, stream: TcpStream) {
+fn handle_conn(batcher: Arc<DynamicBatcher>, stream: TcpStream, timeout: Option<Duration>) {
     let peer = stream.peer_addr().ok();
+    // A half-open or silent client must not pin this thread: a timed-out
+    // blocking read surfaces as an Err line below and the thread exits.
+    // Failure to set the timeouts degrades to the old (pin-prone)
+    // behaviour rather than refusing the connection.
+    if let Some(t) = timeout {
+        let _ = stream.set_read_timeout(Some(t));
+        let _ = stream.set_write_timeout(Some(t));
+    }
     let mut writer = match stream.try_clone() {
         Ok(w) => w,
         Err(_) => return,
@@ -127,7 +154,8 @@ pub fn serve<M: ModelExec + Send + Sync + 'static>(
     for stream in listener.incoming() {
         let stream = stream?;
         let b = batcher.clone();
-        std::thread::spawn(move || handle_conn(b, stream));
+        let t = cfg.conn_timeout;
+        std::thread::spawn(move || handle_conn(b, stream, t));
         served += 1;
         if let Some(max) = cfg.max_connections {
             if served >= max {
@@ -147,12 +175,13 @@ pub fn serve_in_background<M: ModelExec + Send + Sync + 'static>(
     let addr = listener.local_addr()?;
     let batcher = Arc::new(DynamicBatcher::spawn(model, cfg.batcher));
     let max = cfg.max_connections;
+    let conn_timeout = cfg.conn_timeout;
     let handle = std::thread::spawn(move || {
         let mut served = 0usize;
         for stream in listener.incoming() {
             let Ok(stream) = stream else { break };
             let b = batcher.clone();
-            std::thread::spawn(move || handle_conn(b, stream));
+            std::thread::spawn(move || handle_conn(b, stream, conn_timeout));
             served += 1;
             if let Some(m) = max {
                 if served >= m {
@@ -210,6 +239,36 @@ mod tests {
         reader.read_line(&mut line).unwrap();
         assert!(line.contains("empty prompt"));
         drop(stream);
+        handle.join().unwrap();
+    }
+
+    #[test]
+    fn silent_client_is_disconnected() {
+        // A client that connects and then says nothing must not pin its
+        // connection thread forever: the read timeout fires and the server
+        // closes the socket (observed as EOF on our side).
+        let mut rng = Rng::new(7);
+        let w = Arc::new(ModelWeights::init(Preset::Tiny.config(), &mut rng));
+        let cfg = ServerConfig {
+            addr: "127.0.0.1:0".into(),
+            max_connections: Some(1),
+            conn_timeout: Some(Duration::from_millis(200)),
+            ..Default::default()
+        };
+        let (addr, handle) = serve_in_background(w, cfg).unwrap();
+        let stream = std::net::TcpStream::connect(addr).unwrap();
+        // Generous guard so a hang fails the test instead of wedging it.
+        stream.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+        use std::io::{BufRead, BufReader};
+        let mut reader = BufReader::new(stream);
+        let mut line = String::new();
+        let start = std::time::Instant::now();
+        let n = reader.read_line(&mut line).unwrap();
+        assert_eq!(n, 0, "expected EOF from server, got: {line}");
+        assert!(
+            start.elapsed() < Duration::from_secs(5),
+            "server took too long to drop the silent connection"
+        );
         handle.join().unwrap();
     }
 

@@ -42,15 +42,30 @@
 //! channel; each worker drains, drops its downstream sender (cascading the
 //! close), and exits; `Drop` then joins every thread — no leaked shard
 //! threads, mirroring `DynamicBatcher`'s own `Drop` contract.
+//!
+//! **Supervised recovery (PR 8).** A dead shard thread is detected fast —
+//! its unwind drops its channels, the close cascades to both ends, and the
+//! next send/recv fails — and marks the decoder `dead`: every remaining and
+//! subsequent step job fails with a structured error (the in-flight
+//! sequences' KV banks died with the chain, so they are unrecoverable), and
+//! the same goes for the first slot-mismatched reply, which means the
+//! result FIFO can no longer be trusted to label logits. Once the serve
+//! scheduler has errored and retired every sequence that referenced the
+//! dead chain, the next [`ShardedDecoder::admit`] *rebuilds* the entire
+//! thread chain from the respawn recipe captured at construction (model,
+//! plan, KV spec, pool budget — rebuilt sub-pools mint fresh pages) and
+//! serving resumes; [`ShardedDecoder::rebuilds`] counts the recoveries.
 
 use super::plan::ShardPlan;
 use crate::kvpool::{KvPool, PoolCfg};
 use crate::model::{decode_head, decode_layer_span, embed_tokens, KvSpec, LayerKv, ModelExec};
 use crate::serve::StepJob;
 use crate::tensor::Matrix;
-use std::sync::mpsc::{channel, Receiver, Sender};
+use crate::util::fault::{self, FaultPoint};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
+use std::time::Duration;
 
 /// What flows down the pipe. Control packets (`Admit`/`Retire`) travel the
 /// same FIFO as activations, so a shard never sees a `Span`/`Act` for a
@@ -75,15 +90,50 @@ enum Downstream {
     Logits(Sender<(usize, Vec<f32>)>),
 }
 
-/// Handle to a running shard pipeline; owned by the serve scheduler (one
-/// per `DynamicBatcher` worker when `--shards N > 1`).
-pub struct ShardedDecoder {
+/// One spawned thread chain: the channels into/out of it plus its worker
+/// handles. Dropping a chain closes the input, cascades the close down the
+/// stages, and joins every thread — dead workers join instantly.
+struct Chain {
     input: Option<Sender<Packet>>,
     results: Receiver<(usize, Vec<f32>)>,
     workers: Vec<JoinHandle<()>>,
+}
+
+impl Drop for Chain {
+    fn drop(&mut self) {
+        // Closing the input cascades: each worker's recv loop ends, its
+        // downstream sender drops, and the next stage drains in turn.
+        drop(self.input.take());
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+/// Handle to a running shard pipeline; owned by the serve scheduler (one
+/// per `DynamicBatcher` worker when `--shards N > 1`).
+pub struct ShardedDecoder {
+    chain: Chain,
+    /// Rebuild recipe: respawns a fresh thread chain (and fresh shard
+    /// sub-pools) identical to the original construction.
+    respawn: Box<dyn Fn() -> Chain + Send>,
     free: Vec<usize>,
     n_slots: usize,
     n_shards: usize,
+    /// Slots currently admitted and not retired; `live` counts them. A
+    /// dead chain only rebuilds once every live slot has been retired —
+    /// a rebuilt chain must never see a slot it didn't admit.
+    admitted: Vec<bool>,
+    live: usize,
+    /// The chain can no longer be trusted: a worker died (send/recv on a
+    /// closed channel) or the result FIFO mislabeled a reply.
+    dead: bool,
+    /// Completed chain rebuilds (surfaced as `pipeline_rebuilds`).
+    rebuilds: usize,
+    /// Upper bound for one result recv — normally death is detected by the
+    /// cascading channel close long before this fires; the timeout only
+    /// catches a *wedged* (not dead) shard.
+    step_timeout: Duration,
 }
 
 impl ShardedDecoder {
@@ -117,39 +167,22 @@ impl ShardedDecoder {
             "shard plan does not match the model's layer count"
         );
         let n = plan.n_shards();
-        let (input_tx, first_rx) = channel::<Packet>();
-        let (res_tx, res_rx) = channel::<(usize, Vec<f32>)>();
-        let mut workers = Vec::with_capacity(n);
-        let mut rx_opt = Some(first_rx);
-        for s in 0..n {
-            let this_rx = rx_opt.take().expect("one receiver per shard");
-            let down = if s + 1 == n {
-                Downstream::Logits(res_tx.clone())
-            } else {
-                let (tx, next_rx) = channel::<Packet>();
-                rx_opt = Some(next_rx);
-                Downstream::Next(tx)
-            };
-            let (lo, hi) = plan.range(s);
-            let sub_pool = pool.map(|pc| {
-                let sub = pc.shard_slice(hi - lo, plan.n_layers());
-                KvPool::new(sub, kv, model.config())
-            });
-            let m = model.clone();
-            let worker = std::thread::Builder::new()
-                .name(format!("tsgo-shard-{s}"))
-                .spawn(move || run_shard(m, lo, hi, kv, sub_pool, this_rx, down))
-                .expect("spawn shard worker thread");
-            workers.push(worker);
-        }
-        drop(res_tx);
+        let respawn: Box<dyn Fn() -> Chain + Send> = {
+            let plan = plan.clone();
+            Box::new(move || spawn_chain(&model, &plan, kv, pool))
+        };
+        let chain = respawn();
         ShardedDecoder {
-            input: Some(input_tx),
-            results: res_rx,
-            workers,
+            chain,
+            respawn,
             free: Vec::new(),
             n_slots: 0,
             n_shards: n,
+            admitted: Vec::new(),
+            live: 0,
+            dead: false,
+            rebuilds: 0,
+            step_timeout: Duration::from_secs(60),
         }
     }
 
@@ -157,24 +190,89 @@ impl ShardedDecoder {
         self.n_shards
     }
 
-    fn send(&self, p: Packet) -> Result<(), String> {
-        self.input
+    /// The chain is down; steps fail until it drains and rebuilds.
+    pub fn dead(&self) -> bool {
+        self.dead
+    }
+
+    /// Admitted-but-not-retired slots (they reference the current chain).
+    pub fn live_slots(&self) -> usize {
+        self.live
+    }
+
+    /// Completed chain rebuilds after a death.
+    pub fn rebuilds(&self) -> usize {
+        self.rebuilds
+    }
+
+    /// Bound one result wait (`--step-timeout`); see the field docs.
+    pub fn set_step_timeout(&mut self, timeout: Duration) {
+        self.step_timeout = timeout.max(Duration::from_millis(1));
+    }
+
+    fn send(&mut self, p: Packet) -> Result<(), String> {
+        let sent = self
+            .chain
+            .input
             .as_ref()
-            .expect("pipeline input open until drop")
+            .expect("chain input open until drop")
             .send(p)
-            .map_err(|_| "shard pipeline unavailable (a shard worker exited)".to_string())
+            .is_ok();
+        if !sent {
+            self.dead = true;
+        }
+        sent.then_some(())
+            .ok_or_else(|| "shard pipeline unavailable (a shard worker exited)".to_string())
+    }
+
+    /// Tear down the dead chain and spawn a fresh one. Only legal with no
+    /// live slots (their shard-local KV lives in the old chain's threads).
+    fn rebuild(&mut self) {
+        assert_eq!(self.live, 0, "rebuilding a shard chain with live slots");
+        // Replacing the chain drops the old one: input closes, the close
+        // cascades, and every old worker (dead or drained) is joined.
+        self.chain = (self.respawn)();
+        self.free.clear();
+        self.n_slots = 0;
+        self.admitted.clear();
+        self.dead = false;
+        self.rebuilds += 1;
+        println!(
+            "serve: shard pipeline died — rebuilt the {}-shard chain (rebuild #{}); \
+             in-flight sequences on the old chain were errored",
+            self.n_shards, self.rebuilds
+        );
     }
 
     /// Allocate a sequence slot: every shard creates the KV caches for its
-    /// layer range. Slot ids are recycled after [`Self::retire`].
+    /// layer range. Slot ids are recycled after [`Self::retire`]. On a
+    /// dead chain this is the rebuild point — once the last live slot has
+    /// retired, the next admit respawns the whole chain and serving
+    /// resumes.
     pub fn admit(&mut self) -> Result<usize, String> {
+        if self.dead {
+            if self.live > 0 {
+                return Err(
+                    "shard pipeline is down; draining in-flight sequences before rebuild"
+                        .to_string(),
+                );
+            }
+            self.rebuild();
+        }
         let slot = self.free.pop().unwrap_or_else(|| {
             let s = self.n_slots;
             self.n_slots += 1;
             s
         });
         match self.send(Packet::Admit { slot }) {
-            Ok(()) => Ok(slot),
+            Ok(()) => {
+                if self.admitted.len() <= slot {
+                    self.admitted.resize(slot + 1, false);
+                }
+                self.admitted[slot] = true;
+                self.live += 1;
+                Ok(slot)
+            }
             Err(e) => {
                 self.free.push(slot);
                 Err(e)
@@ -184,10 +282,17 @@ impl ShardedDecoder {
 
     /// Free a sequence slot on every shard. The id returns to the free
     /// list even if the pipe is already dead — a dead pipeline fails every
-    /// later admit/step anyway, and keeping the accounting symmetric with
-    /// [`Self::admit`] means slot ids never leak.
+    /// later step anyway and a rebuild resets the slot space, so keeping
+    /// the accounting symmetric with [`Self::admit`] means slot ids never
+    /// leak; the live count reaching zero is what unlocks the rebuild.
     pub fn retire(&mut self, slot: usize) {
-        let _ = self.send(Packet::Retire { slot });
+        if !self.dead {
+            let _ = self.send(Packet::Retire { slot });
+        }
+        if self.admitted.get(slot).copied().unwrap_or(false) {
+            self.admitted[slot] = false;
+            self.live -= 1;
+        }
         self.free.push(slot);
     }
 
@@ -195,8 +300,22 @@ impl ShardedDecoder {
     /// before any logits are read back (the microbatch overlap described in
     /// the module docs); returns each job's last-row logits in submission
     /// order.
+    ///
+    /// Any failure — a send into a closed chain, a closed or timed-out
+    /// result channel, or a reply labeled with the wrong slot — marks the
+    /// decoder dead and fails **all** remaining jobs: after a mismatch the
+    /// FIFO's labeling is untrusted, so reading on would risk handing one
+    /// sequence another's logits.
     pub fn step(&mut self, jobs: &[StepJob]) -> Vec<Result<Vec<f32>, String>> {
+        let downed = || {
+            "shard pipeline unavailable (a shard worker died); \
+             sequence state lost, will rebuild"
+                .to_string()
+        };
         let mut out: Vec<Result<Vec<f32>, String>> = Vec::with_capacity(jobs.len());
+        if self.dead {
+            return jobs.iter().map(|_| Err(downed())).collect();
+        }
         let mut sent = 0usize;
         for job in jobs {
             let pkt = Packet::Span {
@@ -210,34 +329,77 @@ impl ShardedDecoder {
             sent += 1;
         }
         for want_slot in jobs.iter().take(sent).map(|j| j.slot) {
-            match self.results.recv() {
+            match self.chain.results.recv_timeout(self.step_timeout) {
                 // FIFO channels + one thread per stage make result order
-                // deterministic; a mismatch means the pipe is corrupt, so
-                // surface it as an error rather than mislabeling logits.
+                // deterministic; a mismatch means the pipe is corrupt.
                 Ok((slot, logits)) if slot == want_slot => out.push(Ok(logits)),
-                Ok((slot, _)) => out.push(Err(format!(
-                    "pipeline returned logits for slot {slot} where \
-                     slot {want_slot} was expected"
-                ))),
-                Err(_) => break,
+                Ok((slot, _)) => {
+                    self.dead = true;
+                    out.push(Err(format!(
+                        "pipeline returned logits for slot {slot} where slot \
+                         {want_slot} was expected; FIFO corrupt, will rebuild"
+                    )));
+                    break;
+                }
+                Err(RecvTimeoutError::Timeout) => {
+                    self.dead = true;
+                    out.push(Err(format!(
+                        "shard pipeline wedged: no result within {}; will rebuild",
+                        crate::util::fmt_duration(self.step_timeout)
+                    )));
+                    break;
+                }
+                Err(RecvTimeoutError::Disconnected) => {
+                    self.dead = true;
+                    break;
+                }
             }
         }
         while out.len() < jobs.len() {
-            out.push(Err("shard pipeline unavailable (a shard worker exited)".into()));
+            out.push(Err(downed()));
         }
         out
     }
 }
 
-impl Drop for ShardedDecoder {
-    fn drop(&mut self) {
-        // Closing the input cascades: each worker's recv loop ends, its
-        // downstream sender drops, and the next stage drains in turn.
-        drop(self.input.take());
-        for w in self.workers.drain(..) {
-            let _ = w.join();
-        }
+/// Spawn one complete thread chain for `plan` — the construction recipe
+/// shared by first spawn and post-death rebuild. Each call mints fresh
+/// shard sub-pools, so a rebuilt chain starts with its full page budget
+/// (the dead chain's pages died with its threads).
+fn spawn_chain<M: ModelExec + Send + Sync + 'static>(
+    model: &Arc<M>,
+    plan: &ShardPlan,
+    kv: KvSpec,
+    pool: Option<PoolCfg>,
+) -> Chain {
+    let n = plan.n_shards();
+    let (input_tx, first_rx) = channel::<Packet>();
+    let (res_tx, res_rx) = channel::<(usize, Vec<f32>)>();
+    let mut workers = Vec::with_capacity(n);
+    let mut rx_opt = Some(first_rx);
+    for s in 0..n {
+        let this_rx = rx_opt.take().expect("one receiver per shard");
+        let down = if s + 1 == n {
+            Downstream::Logits(res_tx.clone())
+        } else {
+            let (tx, next_rx) = channel::<Packet>();
+            rx_opt = Some(next_rx);
+            Downstream::Next(tx)
+        };
+        let (lo, hi) = plan.range(s);
+        let sub_pool = pool.map(|pc| {
+            let sub = pc.shard_slice(hi - lo, plan.n_layers());
+            KvPool::new(sub, kv, model.config())
+        });
+        let m = model.clone();
+        let worker = std::thread::Builder::new()
+            .name(format!("tsgo-shard-{s}"))
+            .spawn(move || run_shard(m, lo, hi, kv, sub_pool, this_rx, down))
+            .expect("spawn shard worker thread");
+        workers.push(worker);
     }
+    drop(res_tx);
+    Chain { input: Some(input_tx), results: res_rx, workers }
 }
 
 /// One shard's worker loop: layers `lo..hi`, plus embedding when `lo == 0`
@@ -287,6 +449,11 @@ fn run_shard<M: ModelExec>(
             }
             Packet::Act { slot, pos, h } => (slot, pos, h),
         };
+        // Deterministic kill point for the recovery tests: evaluated once
+        // per compute packet per shard (a single relaxed load unarmed).
+        // The unwind drops this shard's channels; the close cascades both
+        // ways and the decoder marks itself dead on the next send/recv.
+        fault::maybe_panic(FaultPoint::ShardWorkerPanic);
         let Some(kvs) = slots.get_mut(slot).and_then(|s| s.as_mut()) else {
             // A step for an unadmitted/retired slot is a scheduler protocol
             // bug. Dying loudly tears the channel chain down, so the

@@ -1,0 +1,414 @@
+//! Deterministic fault injection for the serving stack.
+//!
+//! Production recovery paths (worker respawn, pipeline rebuild, step
+//! timeouts) are only trustworthy if they run in CI, and they only run in
+//! CI if the faults that trigger them can be injected *deterministically* —
+//! "kill the worker handling the 17th step job", not "kill something
+//! eventually". This module is that plane: a small set of **named fault
+//! points** compiled into the serve/shard hot paths, armed at runtime by a
+//! spec string, and hit-counted so a test can aim at an exact evaluation.
+//!
+//! # Fault points
+//!
+//! | name                 | where it fires                    | effect           |
+//! |----------------------|-----------------------------------|------------------|
+//! | `step_worker_panic`  | [`run_job`] (pool + inline paths) | worker panics    |
+//! | `step_worker_slow_ms`| [`run_job`]                       | sleeps `value` ms|
+//! | `shard_worker_panic` | shard span/act processing         | shard panics     |
+//! | `channel_drop`       | step-pool reply send              | reply is lost    |
+//! | `admit_exhaust`      | backend admission                 | verdict = Defer  |
+//!
+//! [`run_job`]: crate::serve
+//!
+//! # Grammar
+//!
+//! ```text
+//! TSGO_FAULT ::= entry (',' entry)*
+//! entry      ::= point ('=' value)? ('@hit=' N)?
+//! ```
+//!
+//! `value` is the fault's u64 payload (milliseconds for
+//! `step_worker_slow_ms`; ignored elsewhere), default 0. `N` is the 1-based
+//! evaluation count at which the fault fires — **exactly once**, on the Nth
+//! time execution passes that point after arming — default 1. Examples:
+//!
+//! ```text
+//! TSGO_FAULT=step_worker_panic@hit=17        # the 17th step job panics
+//! TSGO_FAULT=step_worker_slow_ms=20@hit=3    # the 3rd job sleeps 20 ms
+//! TSGO_FAULT=admit_exhaust,shard_worker_panic@hit=5
+//! ```
+//!
+//! Arming: `DynamicBatcher::spawn` arms `BatcherConfig::faults` when set,
+//! else the `TSGO_FAULT` env var (re-armed — counters reset — per spawn, so
+//! each server/test sees the same deterministic schedule). Tests can also
+//! call [`arm`]/[`disarm`] directly.
+//!
+//! # Zero cost when unarmed
+//!
+//! The plane is compiled in unconditionally — production binaries carry it —
+//! so the unarmed fast path must be free. [`fire`] is `#[inline]` and its
+//! first (and, unarmed, only) instruction is one **relaxed atomic load** of
+//! a process-global flag; the spec lookup, hit counter, and mutex live
+//! behind that branch in a `#[cold]` function. The decode benches record a
+//! `fault_armed` decode row next to the plain one to keep the "negligible
+//! overhead" claim measured, not asserted.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Maximum entries one plan can hold. Fixed so [`FaultPlan`] stays `Copy`
+/// (it rides inside `BatcherConfig`, which is passed by value everywhere).
+pub const MAX_FAULTS: usize = 8;
+
+/// A named point in the serving stack where a fault can be injected. See
+/// the module docs for where each one lives and what it does.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultPoint {
+    /// Panic inside a decode step job (pool worker or inline fast path).
+    StepWorkerPanic,
+    /// Sleep `value` milliseconds inside a decode step job.
+    StepWorkerSlowMs,
+    /// Panic inside a shard worker while processing a span/activation.
+    ShardWorkerPanic,
+    /// Drop a step-pool reply instead of sending it (a lost message).
+    ChannelDrop,
+    /// Make backend admission report an exhausted pool (`Defer`) once.
+    AdmitExhaust,
+}
+
+impl FaultPoint {
+    /// Every point, in grammar-name order.
+    pub const ALL: [FaultPoint; 5] = [
+        FaultPoint::StepWorkerPanic,
+        FaultPoint::StepWorkerSlowMs,
+        FaultPoint::ShardWorkerPanic,
+        FaultPoint::ChannelDrop,
+        FaultPoint::AdmitExhaust,
+    ];
+
+    /// The grammar name (`TSGO_FAULT` spelling) of this point.
+    pub fn name(self) -> &'static str {
+        match self {
+            FaultPoint::StepWorkerPanic => "step_worker_panic",
+            FaultPoint::StepWorkerSlowMs => "step_worker_slow_ms",
+            FaultPoint::ShardWorkerPanic => "shard_worker_panic",
+            FaultPoint::ChannelDrop => "channel_drop",
+            FaultPoint::AdmitExhaust => "admit_exhaust",
+        }
+    }
+
+    fn from_name(s: &str) -> Option<FaultPoint> {
+        FaultPoint::ALL.into_iter().find(|p| p.name() == s)
+    }
+}
+
+impl std::fmt::Display for FaultPoint {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// One armed fault: fire at `point`, carrying `value`, on the `hit`-th
+/// evaluation (1-based) after arming — exactly once.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FaultSpec {
+    pub point: FaultPoint,
+    pub value: u64,
+    pub hit: u64,
+}
+
+/// A parsed, inert fault schedule (the `TSGO_FAULT` grammar as data).
+/// `Copy` by design — it travels inside `BatcherConfig`. Arm it with
+/// [`arm`] to make it live.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct FaultPlan {
+    entries: [Option<FaultSpec>; MAX_FAULTS],
+}
+
+impl FaultPlan {
+    /// Parse the `TSGO_FAULT` grammar (see module docs).
+    pub fn parse(s: &str) -> Result<FaultPlan, String> {
+        let mut plan = FaultPlan::default();
+        let mut n = 0usize;
+        for raw in s.split(',') {
+            let entry = raw.trim();
+            if entry.is_empty() {
+                continue;
+            }
+            if n >= MAX_FAULTS {
+                return Err(format!("fault spec holds more than {MAX_FAULTS} entries"));
+            }
+            let (head, hit) = match entry.split_once("@hit=") {
+                Some((h, nstr)) => {
+                    let hit: u64 = nstr
+                        .trim()
+                        .parse()
+                        .map_err(|_| format!("bad hit count in fault entry '{entry}'"))?;
+                    if hit == 0 {
+                        return Err(format!("hit count must be >= 1 in '{entry}'"));
+                    }
+                    (h.trim(), hit)
+                }
+                None => (entry, 1),
+            };
+            let (name, value) = match head.split_once('=') {
+                Some((p, v)) => (
+                    p.trim(),
+                    v.trim()
+                        .parse::<u64>()
+                        .map_err(|_| format!("bad value in fault entry '{entry}'"))?,
+                ),
+                None => (head, 0),
+            };
+            let point = FaultPoint::from_name(name).ok_or_else(|| {
+                format!(
+                    "unknown fault point '{name}' (known: {})",
+                    FaultPoint::ALL.map(FaultPoint::name).join(", ")
+                )
+            })?;
+            plan.entries[n] = Some(FaultSpec { point, value, hit });
+            n += 1;
+        }
+        Ok(plan)
+    }
+
+    /// A one-entry plan — the common test spelling.
+    pub fn single(point: FaultPoint, value: u64, hit: u64) -> FaultPlan {
+        FaultPlan::default().with(point, value, hit)
+    }
+
+    /// Builder: append one entry. Panics past [`MAX_FAULTS`] — this is
+    /// config-time API, not a runtime path.
+    pub fn with(mut self, point: FaultPoint, value: u64, hit: u64) -> FaultPlan {
+        assert!(hit >= 1, "fault hit counts are 1-based");
+        let slot = self
+            .entries
+            .iter_mut()
+            .find(|e| e.is_none())
+            .expect("fault plan full (MAX_FAULTS entries)");
+        *slot = Some(FaultSpec { point, value, hit });
+        self
+    }
+
+    /// No entries → arming this plan disarms the plane.
+    pub fn is_empty(&self) -> bool {
+        self.entries.iter().all(Option::is_none)
+    }
+
+    /// The armed entries, in order.
+    pub fn specs(&self) -> impl Iterator<Item = FaultSpec> + '_ {
+        self.entries.iter().flatten().copied()
+    }
+}
+
+impl std::fmt::Display for FaultPlan {
+    /// Prints the `TSGO_FAULT` grammar; round-trips through [`FaultPlan::parse`].
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let mut first = true;
+        for s in self.specs() {
+            if !first {
+                f.write_str(",")?;
+            }
+            first = false;
+            write!(f, "{}", s.point)?;
+            if s.value != 0 {
+                write!(f, "={}", s.value)?;
+            }
+            if s.hit != 1 {
+                write!(f, "@hit={}", s.hit)?;
+            }
+        }
+        Ok(())
+    }
+}
+
+/// The live (armed) plan: specs plus per-entry evaluation counters. Kept
+/// separate from [`FaultPlan`] so the inert config type stays `Copy` and
+/// the counters reset on every (re-)arm.
+struct ArmedPlan {
+    entries: Vec<(FaultSpec, AtomicU64)>,
+}
+
+impl ArmedPlan {
+    fn new(plan: &FaultPlan) -> ArmedPlan {
+        ArmedPlan {
+            entries: plan.specs().map(|s| (s, AtomicU64::new(0))).collect(),
+        }
+    }
+
+    /// Count one evaluation of `point`; `Some(value)` exactly when an
+    /// entry's counter reaches its `hit`.
+    fn check(&self, point: FaultPoint) -> Option<u64> {
+        let mut fired = None;
+        for (spec, count) in &self.entries {
+            if spec.point == point {
+                let n = count.fetch_add(1, Ordering::Relaxed) + 1;
+                if n == spec.hit {
+                    fired = Some(spec.value);
+                }
+            }
+        }
+        fired
+    }
+}
+
+/// The one-load unarmed gate. Relaxed is enough: arming happens-before the
+/// work it targets through channel/thread creation, and a stale `false`
+/// read during a racy re-arm only delays a fault by one evaluation.
+static ARMED: AtomicBool = AtomicBool::new(false);
+static PLAN: Mutex<Option<Arc<ArmedPlan>>> = Mutex::new(None);
+
+/// Arm `plan` process-wide, resetting all hit counters. An empty plan
+/// disarms.
+pub fn arm(plan: &FaultPlan) {
+    let armed = (!plan.is_empty()).then(|| Arc::new(ArmedPlan::new(plan)));
+    let mut guard = PLAN.lock().unwrap_or_else(|p| p.into_inner());
+    ARMED.store(armed.is_some(), Ordering::Relaxed);
+    *guard = armed;
+}
+
+/// Disarm the plane (every [`fire`] returns `None` again).
+pub fn disarm() {
+    arm(&FaultPlan::default());
+}
+
+/// Arm from `TSGO_FAULT` when it is set and parses; returns whether the
+/// plane is now armed from the env. A malformed spec is a loud no-op (a
+/// typo'd chaos run must not silently test nothing), an unset var leaves
+/// the current state alone.
+pub fn arm_from_env() -> bool {
+    let Ok(spec) = std::env::var("TSGO_FAULT") else {
+        return false;
+    };
+    match FaultPlan::parse(&spec) {
+        Ok(plan) => {
+            arm(&plan);
+            !plan.is_empty()
+        }
+        Err(e) => {
+            eprintln!("warning: ignoring malformed TSGO_FAULT '{spec}': {e}");
+            false
+        }
+    }
+}
+
+/// Whether any fault schedule is currently armed.
+pub fn armed() -> bool {
+    ARMED.load(Ordering::Relaxed)
+}
+
+/// Evaluate a fault point: `Some(value)` iff an armed entry for `point`
+/// just reached its hit count. This is the call compiled into hot paths —
+/// unarmed it is a single relaxed load and a predictable branch.
+#[inline]
+pub fn fire(point: FaultPoint) -> Option<u64> {
+    if !ARMED.load(Ordering::Relaxed) {
+        return None;
+    }
+    fire_slow(point)
+}
+
+#[cold]
+fn fire_slow(point: FaultPoint) -> Option<u64> {
+    let plan = {
+        let guard = PLAN.lock().unwrap_or_else(|p| p.into_inner());
+        guard.clone()
+    };
+    plan.and_then(|p| p.check(point))
+}
+
+/// Panic at `point` when its fault fires (the `*_panic` points).
+#[inline]
+pub fn maybe_panic(point: FaultPoint) {
+    if fire(point).is_some() {
+        panic!("injected fault: {point}");
+    }
+}
+
+/// Sleep the fired value in milliseconds at `point` (`step_worker_slow_ms`).
+#[inline]
+pub fn maybe_sleep(point: FaultPoint) {
+    if let Some(ms) = fire(point) {
+        std::thread::sleep(std::time::Duration::from_millis(ms));
+    }
+}
+
+/// `true` when the fault at `point` fires (valueless points).
+#[inline]
+pub fn fires(point: FaultPoint) -> bool {
+    fire(point).is_some()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // NOTE: these tests never call `arm` — the global plane is shared with
+    // every other test in this binary (a worker panic armed here could kill
+    // an unrelated batcher test's decode). Counter semantics are tested on
+    // `ArmedPlan` directly; global arm/disarm behaviour is exercised in
+    // `tests/fault_injection.rs`, which owns its own process and serializes.
+
+    #[test]
+    fn grammar_round_trips() {
+        for spec in [
+            "step_worker_panic",
+            "step_worker_slow_ms=20@hit=3",
+            "shard_worker_panic@hit=5",
+            "channel_drop,admit_exhaust@hit=2",
+            "step_worker_panic@hit=17,step_worker_slow_ms=250",
+        ] {
+            let plan = FaultPlan::parse(spec).unwrap();
+            assert_eq!(plan.to_string(), spec, "display must round-trip the grammar");
+            assert_eq!(FaultPlan::parse(&plan.to_string()).unwrap(), plan);
+        }
+    }
+
+    #[test]
+    fn parse_defaults_and_whitespace() {
+        let plan = FaultPlan::parse(" step_worker_panic , channel_drop@hit=4 ").unwrap();
+        let specs: Vec<FaultSpec> = plan.specs().collect();
+        assert_eq!(specs[0], FaultSpec { point: FaultPoint::StepWorkerPanic, value: 0, hit: 1 });
+        assert_eq!(specs[1], FaultSpec { point: FaultPoint::ChannelDrop, value: 0, hit: 4 });
+        assert!(FaultPlan::parse("").unwrap().is_empty());
+        assert!(FaultPlan::parse(" , ").unwrap().is_empty());
+    }
+
+    #[test]
+    fn parse_rejects_malformed_specs() {
+        for bad in [
+            "no_such_point",
+            "step_worker_panic@hit=0",
+            "step_worker_panic@hit=x",
+            "step_worker_slow_ms=abc",
+            "step_worker_slow_ms=-4",
+        ] {
+            assert!(FaultPlan::parse(bad).is_err(), "'{bad}' must not parse");
+        }
+        let nine = vec!["channel_drop"; MAX_FAULTS + 1].join(",");
+        assert!(FaultPlan::parse(&nine).is_err(), "over-long plans must not parse");
+    }
+
+    #[test]
+    fn armed_plan_fires_exactly_on_the_nth_hit() {
+        let plan = FaultPlan::single(FaultPoint::StepWorkerSlowMs, 20, 3);
+        let armed = ArmedPlan::new(&plan);
+        assert_eq!(armed.check(FaultPoint::StepWorkerSlowMs), None);
+        // a different point never consumes this point's counter
+        assert_eq!(armed.check(FaultPoint::ChannelDrop), None);
+        assert_eq!(armed.check(FaultPoint::StepWorkerSlowMs), None);
+        assert_eq!(armed.check(FaultPoint::StepWorkerSlowMs), Some(20), "3rd hit fires");
+        assert_eq!(armed.check(FaultPoint::StepWorkerSlowMs), None, "fires exactly once");
+    }
+
+    #[test]
+    fn independent_points_count_independently() {
+        let plan = FaultPlan::single(FaultPoint::AdmitExhaust, 0, 1)
+            .with(FaultPoint::StepWorkerPanic, 0, 2);
+        let armed = ArmedPlan::new(&plan);
+        assert_eq!(armed.check(FaultPoint::AdmitExhaust), Some(0));
+        assert_eq!(armed.check(FaultPoint::StepWorkerPanic), None);
+        assert_eq!(armed.check(FaultPoint::StepWorkerPanic), Some(0));
+        assert_eq!(armed.check(FaultPoint::AdmitExhaust), None);
+    }
+}

@@ -1,0 +1,445 @@
+//! Fault-tolerance battery: proves the PR 8 recovery paths by injecting
+//! deterministic faults through `tsgo::util::fault` and asserting the blast
+//! radius — a worker panic errors exactly its sequence (neighbours'
+//! tokens bit-identical to solo decode, pool respawned), a shard death
+//! rebuilds the whole chain and the next request succeeds, lost replies
+//! never leak KV-pool pages, and the `--request-timeout`/`--step-timeout`
+//! deadlines bound every wait the old code left unbounded.
+//!
+//! The fault plane is process-global, so every test here serializes on one
+//! mutex: a plan armed for one test must never leak faults into another's
+//! decode. Plans armed via `BatcherConfig::faults` are disarmed by the
+//! batcher's drop; tests that arm directly disarm before releasing the lock.
+
+use std::sync::mpsc::channel;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use tsgo::kvpool::{KvPool, PoolCfg};
+use tsgo::model::{DecodeState, KvSpec, ModelExec, ModelWeights, Preset};
+use tsgo::serve::{
+    argmax_token, AdmitVerdict, BatcherConfig, DynamicBatcher, GenRequest, GenResponse,
+    LocalBackend, Pending, RequestQueue, StepBackend, StepJob,
+};
+use tsgo::serve::scheduler_loop;
+use tsgo::util::fault::{self, FaultPlan, FaultPoint};
+use tsgo::util::rng::Rng;
+
+static LOCK: Mutex<()> = Mutex::new(());
+
+fn serialize() -> std::sync::MutexGuard<'static, ()> {
+    LOCK.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+fn model(seed: u64) -> Arc<ModelWeights> {
+    let mut rng = Rng::new(seed);
+    Arc::new(ModelWeights::init(Preset::Tiny.config(), &mut rng))
+}
+
+/// Solo greedy reference decode — what every surviving sequence must match.
+fn reference(m: &ModelWeights, prompt: &[u8], max_new: usize) -> Vec<u8> {
+    let mut st = DecodeState::new(m);
+    let mut logits = Vec::new();
+    for &t in prompt {
+        logits = st.step(t);
+    }
+    let mut out = Vec::new();
+    for _ in 0..max_new {
+        let next = argmax_token(&logits).unwrap();
+        out.push(next);
+        logits = st.step(next);
+    }
+    out
+}
+
+/// The pooled-step scenarios need at least two pool workers: with one, a
+/// worker death also strands the jobs queued behind it (they error on the
+/// step deadline, which is correct containment but a different scenario).
+fn pool_is_wide() -> bool {
+    tsgo::util::threadpool::num_threads() >= 2
+}
+
+/// Tentpole, part 1: a panicking decode worker errors exactly its own
+/// sequence. Neighbours finish with tokens bit-identical to solo decode,
+/// nothing waits out the old 60 s recv, and the supervisor respawns the
+/// pool back to width (visible as `worker_restarts` on later responses).
+#[test]
+fn worker_panic_is_contained_to_one_sequence() {
+    let _g = serialize();
+    if !pool_is_wide() {
+        eprintln!("skipping: step pool would be width 1 on this machine");
+        return;
+    }
+    let m = model(1);
+    let prompts: [Vec<u8>; 3] = [vec![10, 20, 30], vec![40, 50, 60], vec![70, 80, 90]];
+    let want: Vec<Vec<u8>> = prompts.iter().map(|p| reference(&m, p, 12)).collect();
+    // 3 jobs/step: evaluations 1-3 are the prefill step, 4-6 the first
+    // decode step — hit 5 panics one worker mid-decode, pooled.
+    let cfg = BatcherConfig {
+        max_batch: 4,
+        max_wait: Duration::from_millis(500),
+        step_timeout: Duration::from_secs(5),
+        faults: Some(FaultPlan::single(FaultPoint::StepWorkerPanic, 0, 5)),
+        ..Default::default()
+    };
+    let b = Arc::new(DynamicBatcher::spawn(m.clone(), cfg));
+    let t0 = Instant::now();
+    let handles: Vec<_> = prompts
+        .iter()
+        .cloned()
+        .map(|prompt| {
+            let b = b.clone();
+            std::thread::spawn(move || b.generate(GenRequest { prompt, max_new: 12 }))
+        })
+        .collect();
+    let results: Vec<Result<GenResponse, _>> =
+        handles.into_iter().map(|h| h.join().unwrap()).collect();
+    let elapsed = t0.elapsed();
+    assert!(
+        elapsed < Duration::from_secs(30),
+        "containment must not stall the batch (took {elapsed:?})"
+    );
+    let errs: Vec<String> =
+        results.iter().filter_map(|r| r.as_ref().err().map(|e| e.to_string())).collect();
+    assert_eq!(errs.len(), 1, "exactly one sequence must error, got {errs:?}");
+    assert!(
+        errs[0].contains("decode worker panicked") && errs[0].contains("injected fault"),
+        "{}",
+        errs[0]
+    );
+    let mut survivors = 0;
+    for (i, r) in results.iter().enumerate() {
+        if let Ok(resp) = r {
+            assert_eq!(resp.tokens, want[i], "neighbour {i}'s tokens changed");
+            assert!(
+                resp.worker_restarts >= 1,
+                "pool was not respawned by the time neighbour {i} finished"
+            );
+            assert!(!resp.timed_out);
+            survivors += 1;
+        }
+    }
+    assert_eq!(survivors, 2);
+}
+
+/// Tentpole, part 2: a shard worker death poisons the chain — the in-flight
+/// request errors terminally — and the next request triggers a full chain
+/// rebuild and succeeds with bit-identical tokens.
+#[test]
+fn shard_death_rebuilds_the_chain() {
+    let _g = serialize();
+    let m = model(2);
+    let prompt = vec![5u8, 6, 7];
+    let want = reference(&m, &prompt, 6);
+    let cfg = BatcherConfig {
+        shards: 2,
+        step_timeout: Duration::from_secs(5),
+        faults: Some(FaultPlan::single(FaultPoint::ShardWorkerPanic, 0, 1)),
+        ..Default::default()
+    };
+    let b = DynamicBatcher::spawn(m.clone(), cfg);
+    let err = b
+        .generate(GenRequest { prompt: prompt.clone(), max_new: 6 })
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("shard pipeline"), "{err}");
+    // The fault fired exactly once; the rebuilt chain serves normally.
+    let r = b.generate(GenRequest { prompt, max_new: 6 }).unwrap();
+    assert_eq!(r.tokens, want, "rebuilt pipeline's tokens diverged");
+    assert!(r.pipeline_rebuilds >= 1, "rebuild was not counted");
+}
+
+/// Satellite: a reply lost in flight (`channel_drop`) must not leak the
+/// sequence's KV-pool pages — the worker releases the bank at the drop
+/// site, the step errors the sequence at the deadline, and after retire
+/// the pool reads empty and the slot is reusable.
+#[test]
+fn lost_reply_releases_pages_and_slot() {
+    let _g = serialize();
+    let m = model(3);
+    let kv = KvSpec::DenseF32;
+    let pc = PoolCfg { budget_bytes: 1 << 30, page_tokens: 16 };
+    let mut be = LocalBackend::new(m.clone(), kv, 2, Some(pc));
+    be.set_step_timeout(Duration::from_millis(100));
+    fault::arm(&FaultPlan::single(FaultPoint::ChannelDrop, 0, 1));
+    let admit = |be: &mut LocalBackend<ModelWeights>| match be.admit(4) {
+        AdmitVerdict::Slot(s) => s,
+        _ => panic!("ample pool must admit"),
+    };
+    let s0 = admit(&mut be);
+    let s1 = admit(&mut be);
+    let jobs = [
+        StepJob { slot: s0, pos: 0, tokens: vec![1, 2, 3, 4] },
+        StepJob { slot: s1, pos: 0, tokens: vec![9, 8, 7, 6] },
+    ];
+    let out = be.step(&jobs);
+    fault::disarm();
+    let n_err = out.iter().filter(|r| r.is_err()).count();
+    assert_eq!(n_err, 1, "exactly the dropped reply's job must error: {out:?}");
+    let lost = out.iter().find_map(|r| r.as_ref().err()).unwrap();
+    assert!(lost.contains("reply lost"), "{lost}");
+    be.retire(s0);
+    be.retire(s1);
+    let (used, total) = be.pool_stats().expect("pooled backend");
+    assert_eq!(used, 0, "lost bank leaked pages ({used}/{total} still held)");
+    // The freed slots admit and decode again.
+    let s2 = admit(&mut be);
+    let out = be.step(&[StepJob { slot: s2, pos: 0, tokens: vec![3, 5] }]);
+    assert!(out[0].is_ok(), "reused slot failed: {out:?}");
+    be.retire(s2);
+    assert_eq!(be.pool_stats().unwrap().0, 0);
+}
+
+/// Satellite: a reply that lands *after* its step's deadline parks a live
+/// KV bank in the done channel; `reclaim_stale` (run by retire and by every
+/// pooled step) must drop it so its pages return exactly once.
+#[test]
+fn late_reply_bank_is_reclaimed() {
+    let _g = serialize();
+    let m = model(4);
+    let pc = PoolCfg { budget_bytes: 1 << 30, page_tokens: 16 };
+    let mut be = LocalBackend::new(m.clone(), KvSpec::DenseF32, 2, Some(pc));
+    be.set_step_timeout(Duration::from_millis(100));
+    fault::arm(&FaultPlan::single(FaultPoint::StepWorkerSlowMs, 500, 1));
+    let (s0, s1) = match (be.admit(2), be.admit(2)) {
+        (AdmitVerdict::Slot(a), AdmitVerdict::Slot(b)) => (a, b),
+        _ => panic!("ample pool must admit"),
+    };
+    let out = be.step(&[
+        StepJob { slot: s0, pos: 0, tokens: vec![1, 2] },
+        StepJob { slot: s1, pos: 0, tokens: vec![3, 4] },
+    ]);
+    fault::disarm();
+    assert!(
+        out.iter().any(|r| r.is_err()),
+        "the slow job must miss the 100 ms step deadline: {out:?}"
+    );
+    // Let the slow worker's reply land in the done channel, then reclaim.
+    std::thread::sleep(Duration::from_millis(900));
+    be.reclaim_stale();
+    be.retire(s0);
+    be.retire(s1);
+    let (used, _) = be.pool_stats().unwrap();
+    assert_eq!(used, 0, "late reply's bank leaked {used} pages");
+}
+
+/// Satellite: faults composed with pool pressure. An `admit_exhaust` defer
+/// plus a mid-run worker panic in one paged run — every request terminates
+/// (no hang), the survivor's tokens match solo decode even across
+/// preemption replay, and the pool drains to zero pages.
+#[test]
+fn faults_compose_with_preemption() {
+    let _g = serialize();
+    if !pool_is_wide() {
+        eprintln!("skipping: step pool would be width 1 on this machine");
+        return;
+    }
+    const CHUNK: usize = 48;
+    let m = model(11);
+    let kv = KvSpec::DenseF32;
+    // Same sizing as the scheduler's preemption test: a 16-unit pool that
+    // two sequences (one with a 200-token prompt) are sized to overflow.
+    let probe = KvPool::new(
+        PoolCfg { budget_bytes: 1 << 30, page_tokens: 16 },
+        kv,
+        m.config(),
+    );
+    let pc = PoolCfg {
+        budget_bytes: 16 * 2 * m.config().n_layers * probe.page_bytes(),
+        page_tokens: 16,
+    };
+    let prompt_a: Vec<u8> = (0..8u8).collect();
+    let prompt_b: Vec<u8> = (0..200u32).map(|i| (i * 7 % 251) as u8).collect();
+    let want_a = reference(&m, &prompt_a, 60);
+    let want_b = reference(&m, &prompt_b, 24);
+    let (tx, rx) = channel::<Pending>();
+    let (ra_tx, ra_rx) = channel();
+    let (rb_tx, rb_rx) = channel();
+    let now = Instant::now();
+    tx.send(Pending {
+        req: GenRequest { prompt: prompt_a, max_new: 60 },
+        enqueued: now,
+        reply: ra_tx,
+    })
+    .unwrap();
+    tx.send(Pending {
+        req: GenRequest { prompt: prompt_b, max_new: 24 },
+        enqueued: now,
+        reply: rb_tx,
+    })
+    .unwrap();
+    let cfg = BatcherConfig {
+        max_batch: 2,
+        max_wait: Duration::from_secs(1),
+        kv,
+        pool: Some(pc),
+        prefill_chunk: CHUNK,
+        step_timeout: Duration::from_secs(5),
+        ..Default::default()
+    };
+    // Defer the very first admission once, then panic a step worker around
+    // the 20th batch step — mid-decode, likely after a preemption.
+    fault::arm(
+        &FaultPlan::single(FaultPoint::AdmitExhaust, 0, 1)
+            .with(FaultPoint::StepWorkerPanic, 0, 40),
+    );
+    let sched = std::thread::spawn(move || {
+        let mut backend = LocalBackend::new(m, kv, 2, Some(pc));
+        scheduler_loop(&mut backend, &cfg, RequestQueue::for_tests(rx));
+        backend
+    });
+    let resp_a = ra_rx.recv().unwrap();
+    let resp_b = rb_rx.recv().unwrap();
+    drop(tx);
+    let backend = sched.join().unwrap();
+    fault::disarm();
+    let n_err = [&resp_a, &resp_b].iter().filter(|r| r.is_err()).count();
+    assert_eq!(
+        n_err, 1,
+        "the one injected panic must kill exactly one request: {resp_a:?} / {resp_b:?}"
+    );
+    // Whichever survived must have decoded its exact solo tokens —
+    // preemption replay included.
+    match (&resp_a, &resp_b) {
+        (Ok(a), Err(e)) => {
+            assert_eq!(a.tokens, want_a, "survivor A's tokens changed");
+            assert!(e.contains("panick"), "{e}");
+        }
+        (Err(e), Ok(b)) => {
+            assert_eq!(b.tokens, want_b, "survivor B's tokens changed");
+            assert!(e.contains("panick"), "{e}");
+        }
+        other => panic!("expected one Ok and one Err, got {other:?}"),
+    }
+    // No slot or page leaked through the panic + preemption churn.
+    let (used, total) = backend.pool_stats().unwrap();
+    assert_eq!(used, 0, "pool still holds {used}/{total} pages after drain");
+}
+
+/// Tentpole, part 3a: `--request-timeout` retires an in-flight sequence at
+/// its deadline with the tokens generated so far and `timed_out` set.
+#[test]
+fn request_deadline_returns_partial_tokens() {
+    let _g = serialize();
+    let m = model(5);
+    let cfg = BatcherConfig {
+        request_timeout: Some(Duration::from_millis(150)),
+        ..Default::default()
+    };
+    let b = DynamicBatcher::spawn(m, cfg);
+    let t0 = Instant::now();
+    let r = b
+        .generate(GenRequest { prompt: vec![2, 4, 6, 8], max_new: 500_000 })
+        .unwrap();
+    assert!(r.timed_out, "an unfinishable request must report timed_out");
+    assert!(
+        !r.tokens.is_empty() && r.tokens.len() < 500_000,
+        "expected partial tokens, got {}",
+        r.tokens.len()
+    );
+    assert!(
+        t0.elapsed() < Duration::from_secs(20),
+        "deadline did not bound the request ({:?})",
+        t0.elapsed()
+    );
+}
+
+/// Tentpole, part 3b: the deadline covers queue wait too — a request stuck
+/// behind a slot-hogging neighbour times out without ever decoding.
+#[test]
+fn request_deadline_covers_queue_wait() {
+    let _g = serialize();
+    let m = model(6);
+    let cfg = BatcherConfig {
+        max_batch: 1,
+        request_timeout: Some(Duration::from_millis(120)),
+        ..Default::default()
+    };
+    let b = Arc::new(DynamicBatcher::spawn(m, cfg));
+    let handles: Vec<_> = (0..2u8)
+        .map(|i| {
+            let b = b.clone();
+            std::thread::spawn(move || {
+                b.generate(GenRequest { prompt: vec![i + 1, i + 2], max_new: 500_000 })
+                    .unwrap()
+            })
+        })
+        .collect();
+    for h in handles {
+        let r = h.join().unwrap();
+        assert!(r.timed_out, "both the runner and the queued request must time out");
+    }
+}
+
+/// Tentpole, part 3c: `--step-timeout` replaces the hardcoded 60 s reply
+/// wait — a wedged worker errors only its own sequence, fast, and the
+/// neighbour decodes its exact reference tokens.
+#[test]
+fn step_timeout_bounds_a_wedged_worker() {
+    let _g = serialize();
+    if !pool_is_wide() {
+        eprintln!("skipping: step pool would be width 1 on this machine");
+        return;
+    }
+    let m = model(7);
+    let prompts: [Vec<u8>; 2] = [vec![11, 13], vec![17, 19]];
+    let want: Vec<Vec<u8>> = prompts.iter().map(|p| reference(&m, p, 8)).collect();
+    // Evaluations 1-2 are the prefill step; hit 3 wedges one decode job
+    // for 800 ms against a 150 ms step deadline.
+    let cfg = BatcherConfig {
+        max_batch: 2,
+        max_wait: Duration::from_millis(500),
+        step_timeout: Duration::from_millis(150),
+        faults: Some(FaultPlan::single(FaultPoint::StepWorkerSlowMs, 800, 3)),
+        ..Default::default()
+    };
+    let b = Arc::new(DynamicBatcher::spawn(m.clone(), cfg));
+    let t0 = Instant::now();
+    let handles: Vec<_> = prompts
+        .iter()
+        .cloned()
+        .map(|prompt| {
+            let b = b.clone();
+            std::thread::spawn(move || b.generate(GenRequest { prompt, max_new: 8 }))
+        })
+        .collect();
+    let results: Vec<Result<GenResponse, _>> =
+        handles.into_iter().map(|h| h.join().unwrap()).collect();
+    assert!(
+        t0.elapsed() < Duration::from_secs(10),
+        "step deadline did not bound the wedge ({:?})",
+        t0.elapsed()
+    );
+    let errs: Vec<String> =
+        results.iter().filter_map(|r| r.as_ref().err().map(|e| e.to_string())).collect();
+    assert_eq!(errs.len(), 1, "exactly the wedged sequence must error: {errs:?}");
+    assert!(errs[0].contains("reply lost"), "{}", errs[0]);
+    for (i, r) in results.iter().enumerate() {
+        if let Ok(resp) = r {
+            assert_eq!(resp.tokens, want[i], "neighbour {i}'s tokens changed");
+        }
+    }
+}
+
+/// The env arming path CI's chaos leg rides on, plus the unarmed-plane
+/// contract every hot path relies on.
+#[test]
+fn env_arming_and_unarmed_plane() {
+    let _g = serialize();
+    fault::disarm();
+    assert!(!fault::armed());
+    assert_eq!(fault::fire(FaultPoint::StepWorkerPanic), None);
+    std::env::set_var("TSGO_FAULT", "step_worker_slow_ms=1@hit=1000000000");
+    assert!(fault::arm_from_env(), "a valid TSGO_FAULT must arm the plane");
+    assert!(fault::armed());
+    // Armed-but-idle: a huge hit count means evaluations count but never
+    // fire — the configuration the bench uses for the overhead row.
+    assert_eq!(fault::fire(FaultPoint::StepWorkerSlowMs), None);
+    std::env::set_var("TSGO_FAULT", "not_a_point");
+    assert!(!fault::arm_from_env(), "a malformed spec must be a loud no-op");
+    assert!(fault::armed(), "malformed spec must not clobber the armed plan");
+    std::env::remove_var("TSGO_FAULT");
+    assert!(!fault::arm_from_env(), "unset var leaves state alone, reports unarmed");
+    fault::disarm();
+    assert!(!fault::armed());
+}

@@ -184,6 +184,7 @@ fn serve_packed_with_quantized_kv_end_to_end() {
         addr: "127.0.0.1:0".into(),
         batcher: BatcherConfig { kv, ..Default::default() },
         max_connections: Some(1),
+        ..Default::default()
     };
     let (addr, handle) = serve_in_background(Arc::new(em), cfg).unwrap();
     let resp = request_generation(&addr.to_string(), &[10, 20, 30, 40], 8).unwrap();

@@ -304,6 +304,7 @@ fn serve_e2e_with_two_shards() {
         addr: "127.0.0.1:0".into(),
         batcher: BatcherConfig { kv, shards: 2, ..Default::default() },
         max_connections: Some(2),
+        ..Default::default()
     };
     let sm = Arc::new(ShardedModel::new(em, 2));
     let (addr, handle) = serve_in_background(sm, cfg).unwrap();
