@@ -51,3 +51,7 @@ cargo bench --no-run
 # Lint gate: warnings are errors. `|| true` is NOT acceptable here — a
 # clippy regression must fail CI.
 cargo clippy -q -- -D warnings
+# Docs gate: rustdoc warnings (broken intra-doc links, malformed code
+# fences) are errors — README/docs/ point into the API docs, so a silent
+# rustdoc rot breaks the front door. Mirrored by the `docs` CI job.
+RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet

@@ -23,6 +23,7 @@ fn drive<M: ModelExec + Send + Sync + 'static>(
         addr: "127.0.0.1:0".into(),
         batcher: BatcherConfig::default(),
         max_connections: Some(n_clients),
+        ..Default::default()
     };
     let (addr, handle) = serve_in_background(weights, cfg).expect("bind server");
     let corpus = Corpus::generate(CorpusKind::SynthWiki, 20_000, 9);

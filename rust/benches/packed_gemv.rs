@@ -36,7 +36,8 @@ use tsgo::quant::rtn::rtn_quantize;
 use tsgo::quant::scale::{compute_group_scales, QuantSpec, ScaleMetric};
 use tsgo::quant::QuantizedLinear;
 use tsgo::serve::{
-    AdmitVerdict, BatcherConfig, DynamicBatcher, GenRequest, LocalBackend, StepBackend, StepJob,
+    AdmitVerdict, BatcherConfig, DynamicBatcher, GenRequest, LocalBackend, SamplerChain,
+    SamplingParams, StepBackend, StepJob,
 };
 use tsgo::shard::ShardedModel;
 use tsgo::tensor::kernels::{self, ForcedKernel};
@@ -252,6 +253,37 @@ fn main() {
             std::hint::black_box(run_decode(&packed, KvSpec::DenseF32));
         },
     );
+    // Sampled decode (PR 9): the same packed decode, but every token goes
+    // through a full sampler chain — repetition penalty, temperature, top-k,
+    // top-p, seeded multinomial — pricing the per-token logit transforms
+    // against the greedy row above. The seed is fixed, so the token stream
+    // (and therefore the work done) is identical across iterations.
+    let sampled_params = SamplingParams {
+        temperature: 0.8,
+        top_k: 40,
+        top_p: 0.95,
+        repetition_penalty: 1.1,
+        seed: 7,
+    };
+    let m_decode_sampled = bench_units(
+        &format!("decode {decode_tokens} tok · packed INT2 · sampled (tiny)"),
+        1,
+        iters.min(10),
+        Some(decode_tokens as f64),
+        &mut || {
+            let mut chain = SamplerChain::from_params(&sampled_params).unwrap();
+            let mut st = DecodeState::with_kv(&packed, KvSpec::DenseF32);
+            let prompt = [65u8];
+            let mut out: Vec<u8> = Vec::with_capacity(decode_tokens);
+            let mut logits = st.step(65);
+            for _ in 1..decode_tokens {
+                let next = chain.next_token(&mut logits, &prompt, &out).unwrap();
+                out.push(next);
+                logits = st.step(next);
+            }
+            std::hint::black_box(logits);
+        },
+    );
     // Fault-plane pricing (PR 8): the same packed decode through the
     // scheduler backend's step surface, where the fault points actually
     // live (`run_job` evaluates two per span step). "fault unarmed" is the
@@ -368,6 +400,7 @@ fn main() {
                     b.generate(GenRequest {
                         prompt: vec![i * 31, i * 31 + 5, 7, 11],
                         max_new: 12,
+                        ..Default::default()
                     })
                     .unwrap()
                 })
@@ -471,6 +504,7 @@ fn main() {
     kernels::set_forced(ForcedKernel::Auto);
     ms.push(m_decode_dense.clone());
     ms.push(m_decode_packed.clone());
+    ms.push(m_decode_sampled.clone());
     ms.push(m_decode_fault_unarmed.clone());
     ms.push(m_decode_fault_armed.clone());
     ms.push(m_decode_kv8.clone());
@@ -558,6 +592,10 @@ fn main() {
                     (
                         "packed_int2_tokens_per_s",
                         Json::num(m_decode_packed.throughput().unwrap_or(0.0)),
+                    ),
+                    (
+                        "packed_int2_sampled_tokens_per_s",
+                        Json::num(m_decode_sampled.throughput().unwrap_or(0.0)),
                     ),
                     (
                         "packed_int2_fault_unarmed_tokens_per_s",

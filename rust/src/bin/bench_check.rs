@@ -53,6 +53,7 @@ fn rows(j: &Json) -> Vec<(String, f64)> {
     for key in [
         "dense_tokens_per_s",
         "packed_int2_tokens_per_s",
+        "packed_int2_sampled_tokens_per_s",
         "packed_int2_fault_unarmed_tokens_per_s",
         "packed_int2_fault_armed_tokens_per_s",
         "packed_int2_kv8_tokens_per_s",

@@ -19,7 +19,7 @@ pub struct PageSpec {
     pub tokens: usize,
     /// Packed `u32` words per row (0 for dense pages).
     pub words_per_row: usize,
-    /// f32 elements per row in [`KvPage::data`]: `d_model` for dense rows,
+    /// f32 elements per row in `KvPage::data`: `d_model` for dense rows,
     /// `groups_per_row` scales for packed rows.
     pub data_per_row: usize,
     /// f32 zero-points per row (`groups_per_row` for packed, 0 for dense).

@@ -94,7 +94,14 @@ fn print_help() {
          \x20            --step-timeout MS bounds one decode step, --conn-timeout MS\n\
          \x20            disconnects silent clients; panicked decode workers are\n\
          \x20            respawned and dead shard chains rebuilt automatically\n\
-         \x20            (TSGO_FAULT=point[=v][@hit=N] injects test faults)\n\
+         \x20            (TSGO_FAULT=point[=v][@hit=N] injects test faults);\n\
+         \x20            --temperature T --top-k K --top-p P --repetition-penalty R\n\
+         \x20            --seed S set server-default sampling (T=0 is greedy,\n\
+         \x20            bit-identical to the pre-sampler path; T>0 is seeded\n\
+         \x20            multinomial with deterministic replay), --stop \"a,b\"\n\
+         \x20            sets default stop strings; per-request JSON fields\n\
+         \x20            override, incl. \"stream\": true for per-token events\n\
+         \x20            (see docs/SERVE_API.md)\n\
          \x20 kernels    print the dequant kernel dispatch table (CPU features,\n\
          \x20            per-bit-width kernel selection, forcing state)\n\
          \x20 warmup     pre-compile all artifacts"
@@ -399,6 +406,12 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         OptSpec { name: "request-timeout", help: "total per-request deadline in ms, queue wait included; expired requests return partial tokens with timed_out=true (0 = none)", default: Some("0"), is_flag: false },
         OptSpec { name: "step-timeout", help: "per-decode-step deadline in ms before a worker is declared lost and its sequence errored (0 = default 60000)", default: Some("0"), is_flag: false },
         OptSpec { name: "conn-timeout", help: "per-connection socket read/write timeout in ms; disconnects silent/half-open clients (0 = default 120000)", default: Some("0"), is_flag: false },
+        OptSpec { name: "temperature", help: "default sampling temperature (0 = greedy, bit-identical to the pre-sampler path; >0 = seeded multinomial)", default: Some("0"), is_flag: false },
+        OptSpec { name: "top-k", help: "default top-k truncation before sampling (0 = off)", default: Some("0"), is_flag: false },
+        OptSpec { name: "top-p", help: "default nucleus (top-p) truncation before sampling (1.0 = off)", default: Some("1.0"), is_flag: false },
+        OptSpec { name: "repetition-penalty", help: "default repetition penalty over prompt+output tokens (1.0 = off)", default: Some("1.0"), is_flag: false },
+        OptSpec { name: "seed", help: "default sampling seed (per-request \"seed\" overrides; same seed replays token-identically)", default: Some("0"), is_flag: false },
+        OptSpec { name: "stop", help: "default stop strings, comma-separated; generation ends when the decoded tail matches one (per-request \"stop\" overrides)", default: Some(""), is_flag: false },
     ];
     let a = parse(argv, "tsgo serve", "batched generation server", &specs)?;
     let kv = KvSpec::from_flags(
@@ -426,6 +439,20 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         0 => tsgo::serve::ServerConfig::default().conn_timeout,
         ms => Some(std::time::Duration::from_millis(ms as u64)),
     };
+    let default_sampling = tsgo::serve::SamplingParams {
+        temperature: a.f64("temperature").map_err(anyhow::Error::msg)? as f32,
+        top_k: a.usize("top-k").map_err(anyhow::Error::msg)?,
+        top_p: a.f64("top-p").map_err(anyhow::Error::msg)? as f32,
+        repetition_penalty: a.f64("repetition-penalty").map_err(anyhow::Error::msg)? as f32,
+        seed: a.u64("seed").map_err(anyhow::Error::msg)?,
+    };
+    default_sampling.validate().map_err(anyhow::Error::msg)?;
+    let default_stop: Vec<Vec<u8>> = a
+        .str("stop")
+        .split(',')
+        .filter(|s| !s.is_empty())
+        .map(|s| s.as_bytes().to_vec())
+        .collect();
     let cfg = tsgo::serve::ServerConfig {
         addr: a.str("addr"),
         batcher: tsgo::serve::BatcherConfig {
@@ -436,10 +463,12 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
             prefill_chunk,
             request_timeout,
             step_timeout,
+            default_sampling,
             ..Default::default()
         },
         max_connections: None,
         conn_timeout,
+        default_stop,
     };
     println!(
         "prefill: chunked, {prefill_chunk} tokens/step (--prefill-chunk; \
@@ -453,6 +482,24 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         request_timeout.map_or("none".to_string(), tsgo::util::fmt_duration),
         conn_timeout.map_or("none".to_string(), tsgo::util::fmt_duration),
     );
+    if default_sampling.is_greedy() {
+        println!(
+            "sampling: greedy default (bit-identical to argmax decode); per-request \
+             temperature/top_k/top_p/repetition_penalty/seed/stop/stream override \
+             (docs/SERVE_API.md)"
+        );
+    } else {
+        println!(
+            "sampling: default temperature {} top_k {} top_p {} repetition_penalty {} \
+             seed {} ({} stop seqs); seeded multinomial replays deterministically",
+            default_sampling.temperature,
+            default_sampling.top_k,
+            default_sampling.top_p,
+            default_sampling.repetition_penalty,
+            default_sampling.seed,
+            cfg.default_stop.len(),
+        );
+    }
     if a.flag("packed") {
         let em = store::load_quantized_packed(Path::new(&a.str("model")))?;
         println!(

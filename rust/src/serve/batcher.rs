@@ -26,6 +26,7 @@
 //! any in-flight replies with an error, joins the scheduler thread (and,
 //! transitively, the shard threads) — no thread outlives its batcher.
 
+use super::sampler::SamplingParams;
 use super::sched::{scheduler_loop, LocalBackend, PoolMirror, ShardBackend};
 use crate::kvpool::PoolCfg;
 use crate::model::{KvSpec, ModelExec};
@@ -42,6 +43,67 @@ use std::time::{Duration, Instant};
 pub struct GenRequest {
     pub prompt: Vec<u8>,
     pub max_new: usize,
+    /// Sampling chain configuration. The default is greedy decoding, which
+    /// is bit-identical to the pre-sampler [`argmax_token`] path.
+    pub params: SamplingParams,
+    /// Stop sequences (byte strings / token-id runs): generation ends with
+    /// [`FinishReason::Stop`] as soon as the emitted output ends with any of
+    /// them. The matched sequence stays in `tokens` so streamed events always
+    /// concatenate to the final response.
+    pub stop: Vec<Vec<u8>>,
+}
+
+impl Default for GenRequest {
+    /// Empty prompt, zero budget, greedy sampling, no stop sequences —
+    /// callers spread this (`..Default::default()`) to opt into new knobs
+    /// without naming every field.
+    fn default() -> Self {
+        GenRequest {
+            prompt: Vec::new(),
+            max_new: 0,
+            params: SamplingParams::default(),
+            stop: Vec::new(),
+        }
+    }
+}
+
+/// Why a generation stopped. Serialized on the wire as
+/// `finish_reason: "length" | "stop" | "timeout" | "error"` so clients stop
+/// inferring the cause from `timed_out` + token count.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FinishReason {
+    /// Hit the `max_new` / `max_tokens` budget (includes `max_new == 0`).
+    Length,
+    /// A stop sequence matched the decoded tail.
+    Stop,
+    /// The request deadline expired; `tokens` holds the partial output.
+    Timeout,
+    /// The request failed mid-decode; the partial response carries it.
+    Error,
+}
+
+impl FinishReason {
+    /// The wire label (`length | stop | timeout | error`).
+    pub fn label(&self) -> &'static str {
+        match self {
+            FinishReason::Length => "length",
+            FinishReason::Stop => "stop",
+            FinishReason::Timeout => "timeout",
+            FinishReason::Error => "error",
+        }
+    }
+
+    /// Parse a wire label; unknown labels map to `None` so clients can
+    /// degrade gracefully against newer servers.
+    pub fn parse(s: &str) -> Option<FinishReason> {
+        match s {
+            "length" => Some(FinishReason::Length),
+            "stop" => Some(FinishReason::Stop),
+            "timeout" => Some(FinishReason::Timeout),
+            "error" => Some(FinishReason::Error),
+            _ => None,
+        }
+    }
 }
 
 /// The response for one request.
@@ -76,6 +138,9 @@ pub struct GenResponse {
     /// Times the server has rebuilt a dead shard pipeline, as of this
     /// response (process-lifetime counter, not per-request).
     pub pipeline_rebuilds: usize,
+    /// Why generation ended. `timed_out` is kept (redundantly) for wire
+    /// compatibility with pre-`finish_reason` clients.
+    pub finish_reason: FinishReason,
 }
 
 impl GenResponse {
@@ -134,6 +199,10 @@ pub struct BatcherConfig {
     /// `None` falls back to the `TSGO_FAULT` env var. See
     /// [`crate::util::fault`] for the grammar.
     pub faults: Option<FaultPlan>,
+    /// Server-side sampling defaults (`tsgo serve --temperature/--top-k/
+    /// --top-p/--repetition-penalty/--seed`); per-request JSON fields
+    /// override individual knobs. Default: greedy.
+    pub default_sampling: SamplingParams,
 }
 
 /// The `--prefill-chunk` default: the `TSGO_PREFILL_CHUNK` env knob when
@@ -162,6 +231,7 @@ impl Default for BatcherConfig {
             request_timeout: None,
             step_timeout: Duration::from_secs(60),
             faults: None,
+            default_sampling: SamplingParams::default(),
         }
     }
 }
@@ -173,6 +243,11 @@ pub struct Pending {
     pub req: GenRequest,
     pub enqueued: Instant,
     pub reply: Sender<Result<GenResponse, String>>,
+    /// Streaming tap: when set, the scheduler sends every emitted token here
+    /// as it is sampled. A closed receiver (client went away) cancels the
+    /// request at its next token — the slot is retired and its KV pages are
+    /// freed. `None` for plain blocking requests.
+    pub events: Option<Sender<u8>>,
 }
 
 /// The scheduler's receiving end of the request queue, paired with the
@@ -290,6 +365,28 @@ impl DynamicBatcher {
     /// [`BatcherConfig::max_queue`] unresolved requests fails immediately —
     /// load shedding at the door instead of unbounded buffering.
     pub fn generate(&self, req: GenRequest) -> Result<GenResponse> {
+        let rx = self.enqueue(req, None)?;
+        rx.recv().map_err(|_| anyhow!("batcher unavailable"))?.map_err(|e| anyhow!(e))
+    }
+
+    /// Submit a request and stream its tokens as they are sampled. Returns
+    /// immediately with a [`StreamHandle`]; dropping the handle before the
+    /// generation finishes cancels it (the scheduler retires the slot and
+    /// frees its KV pages at the next emitted token).
+    pub fn generate_stream(&self, req: GenRequest) -> Result<StreamHandle> {
+        let (ev_tx, ev_rx) = channel();
+        let reply = self.enqueue(req, Some(ev_tx))?;
+        Ok(StreamHandle { events: ev_rx, reply })
+    }
+
+    /// Shared enqueue path: overload gate, sampling-parameter validation at
+    /// the door (so bad knobs never reach a scheduler slot), then hand-off.
+    fn enqueue(
+        &self,
+        req: GenRequest,
+        events: Option<Sender<u8>>,
+    ) -> Result<Receiver<Result<GenResponse, String>>> {
+        req.params.validate().map_err(|e| anyhow!(e))?;
         let d = self.depth.fetch_add(1, Ordering::AcqRel);
         if d >= self.max_queue {
             self.depth.fetch_sub(1, Ordering::AcqRel);
@@ -303,13 +400,36 @@ impl DynamicBatcher {
             .queue
             .as_ref()
             .expect("batcher queue open until drop")
-            .send(Pending { req, enqueued: Instant::now(), reply: tx })
+            .send(Pending { req, enqueued: Instant::now(), reply: tx, events })
             .is_err()
         {
             self.depth.fetch_sub(1, Ordering::AcqRel);
             return Err(anyhow!("batcher unavailable"));
         }
-        rx.recv().map_err(|_| anyhow!("batcher unavailable"))?.map_err(|e| anyhow!(e))
+        Ok(rx)
+    }
+}
+
+/// Live tap on one streaming generation (see
+/// [`DynamicBatcher::generate_stream`]).
+///
+/// Read sampled tokens from [`StreamHandle::events`] as they land, then call
+/// [`StreamHandle::wait`] for the final [`GenResponse`] (the events channel
+/// closes right before the response is sent). Dropping the handle early
+/// cancels the generation server-side.
+pub struct StreamHandle {
+    /// Per-token events in emission order.
+    pub events: Receiver<u8>,
+    /// The terminal response (or error) for the request.
+    pub reply: Receiver<Result<GenResponse, String>>,
+}
+
+impl StreamHandle {
+    /// Block until the generation finishes and return the final response.
+    /// Unread token events are left in the channel — the response's `tokens`
+    /// always carries the full output.
+    pub fn wait(self) -> Result<GenResponse> {
+        self.reply.recv().map_err(|_| anyhow!("batcher unavailable"))?.map_err(|e| anyhow!(e))
     }
 }
 
@@ -376,7 +496,7 @@ mod tests {
     fn single_request_roundtrip() {
         let b = DynamicBatcher::spawn(model(), BatcherConfig::default());
         let r = b
-            .generate(GenRequest { prompt: vec![10, 20, 30], max_new: 5 })
+            .generate(GenRequest { prompt: vec![10, 20, 30], max_new: 5, ..Default::default() })
             .unwrap();
         assert_eq!(r.tokens.len(), 5);
         assert!(r.batch_size >= 1);
@@ -390,7 +510,7 @@ mod tests {
     fn generation_is_deterministic_greedy() {
         let m = model();
         let b = DynamicBatcher::spawn(m.clone(), BatcherConfig::default());
-        let req = GenRequest { prompt: vec![1, 2, 3, 4], max_new: 8 };
+        let req = GenRequest { prompt: vec![1, 2, 3, 4], max_new: 8, ..Default::default() };
         let a = b.generate(req.clone()).unwrap();
         let c = b.generate(req).unwrap();
         assert_eq!(a.tokens, c.tokens);
@@ -410,7 +530,8 @@ mod tests {
         for i in 0..4u8 {
             let b = b.clone();
             handles.push(std::thread::spawn(move || {
-                b.generate(GenRequest { prompt: vec![i, i + 1], max_new: 3 }).unwrap()
+                b.generate(GenRequest { prompt: vec![i, i + 1], max_new: 3, ..Default::default() })
+                    .unwrap()
             }));
         }
         let responses: Vec<GenResponse> =
@@ -442,7 +563,9 @@ mod tests {
         }
         // through the batcher
         let b = DynamicBatcher::spawn(m.clone(), BatcherConfig::default());
-        let r = b.generate(GenRequest { prompt: prompt.to_vec(), max_new: 4 }).unwrap();
+        let r = b
+            .generate(GenRequest { prompt: prompt.to_vec(), max_new: 4, ..Default::default() })
+            .unwrap();
         assert_eq!(r.tokens, expect);
     }
 
@@ -469,7 +592,9 @@ mod tests {
             m.clone(),
             BatcherConfig { kv: spec, ..Default::default() },
         );
-        let r = b.generate(GenRequest { prompt: prompt.to_vec(), max_new: 5 }).unwrap();
+        let r = b
+            .generate(GenRequest { prompt: prompt.to_vec(), max_new: 5, ..Default::default() })
+            .unwrap();
         assert_eq!(r.tokens, expect, "batcher diverged from direct int8-KV decode");
     }
 
@@ -478,7 +603,7 @@ mod tests {
         // The span step contract's spine: any --prefill-chunk produces the
         // same tokens as the historical one-token-per-step prefill.
         let m = model();
-        let req = GenRequest { prompt: (0..23u8).collect(), max_new: 6 };
+        let req = GenRequest { prompt: (0..23u8).collect(), max_new: 6, ..Default::default() };
         let base = DynamicBatcher::spawn(
             m.clone(),
             BatcherConfig { prefill_chunk: 1, ..Default::default() },
@@ -504,7 +629,9 @@ mod tests {
         let m = model();
         for _ in 0..8 {
             let b = DynamicBatcher::spawn(m.clone(), BatcherConfig::default());
-            let r = b.generate(GenRequest { prompt: vec![3, 5], max_new: 2 }).unwrap();
+            let r = b
+                .generate(GenRequest { prompt: vec![3, 5], max_new: 2, ..Default::default() })
+                .unwrap();
             assert_eq!(r.tokens.len(), 2);
             drop(b); // joins the scheduler thread before the next iteration
         }
@@ -513,7 +640,9 @@ mod tests {
     #[test]
     fn zero_max_new_returns_empty() {
         let b = DynamicBatcher::spawn(model(), BatcherConfig::default());
-        let r = b.generate(GenRequest { prompt: vec![1, 2], max_new: 0 }).unwrap();
+        let r = b
+            .generate(GenRequest { prompt: vec![1, 2], max_new: 0, ..Default::default() })
+            .unwrap();
         assert!(r.tokens.is_empty());
     }
 
@@ -521,7 +650,7 @@ mod tests {
     fn empty_prompt_is_an_error() {
         let b = DynamicBatcher::spawn(model(), BatcherConfig::default());
         let err = b
-            .generate(GenRequest { prompt: vec![], max_new: 3 })
+            .generate(GenRequest { prompt: vec![], max_new: 3, ..Default::default() })
             .unwrap_err()
             .to_string();
         assert!(err.contains("empty"), "{err}");
@@ -536,7 +665,7 @@ mod tests {
             BatcherConfig { max_queue: 0, ..Default::default() },
         );
         let err = b
-            .generate(GenRequest { prompt: vec![1, 2], max_new: 2 })
+            .generate(GenRequest { prompt: vec![1, 2], max_new: 2, ..Default::default() })
             .unwrap_err()
             .to_string();
         assert!(err.contains("server overloaded"), "{err}");

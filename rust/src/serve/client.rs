@@ -1,5 +1,13 @@
 //! Minimal client for the serve protocol (used by examples and benches).
+//!
+//! The wire protocol — request knobs, response metrics, and the streaming
+//! event framing — is documented field-by-field in `docs/SERVE_API.md`.
+//! [`request_generation`] covers the plain greedy case;
+//! [`request_generation_with`] exposes sampling/stop knobs via
+//! [`ClientOptions`]; [`request_generation_streaming`] adds a per-token
+//! callback fed from the server's `{"token", "index"}` event lines.
 
+use super::sampler::SamplingParams;
 use crate::util::json::Json;
 use anyhow::{bail, Context, Result};
 use std::io::{BufRead, BufReader, Write};
@@ -37,25 +45,61 @@ pub struct ClientResponse {
     /// Process-lifetime count of shard-pipeline rebuilds after a shard
     /// death (0 against a pre-PR-8 server).
     pub pipeline_rebuilds: usize,
+    /// Why generation ended: `length | stop | timeout | error`. Inferred
+    /// for pre-PR-9 servers that don't send the field: `timeout` when
+    /// `timed_out` is set, else `length`.
+    pub finish_reason: String,
 }
 
-/// Send one generation request and wait for the reply.
-pub fn request_generation(addr: &str, prompt: &[u8], max_new: usize) -> Result<ClientResponse> {
-    let mut stream =
-        TcpStream::connect(addr).with_context(|| format!("connect {addr}"))?;
-    let req = Json::obj(vec![
+/// Optional request knobs for [`request_generation_with`] /
+/// [`request_generation_streaming`]. The default sends no sampling fields at
+/// all, so the server's own defaults (its `--temperature` family of flags)
+/// apply.
+#[derive(Clone, Debug, Default)]
+pub struct ClientOptions {
+    /// Sampling knobs to send explicitly; `None` fields defer to the
+    /// server's defaults.
+    pub params: Option<SamplingParams>,
+    /// Stop sequences: raw token-id runs, serialized as id arrays.
+    pub stop: Vec<Vec<u8>>,
+}
+
+fn build_request(
+    prompt: &[u8],
+    max_new: usize,
+    opts: &ClientOptions,
+    stream: bool,
+) -> Json {
+    let mut fields = vec![
         ("prompt", Json::arr(prompt.iter().map(|&t| Json::num(t as f64)))),
         ("max_new", Json::num(max_new as f64)),
-    ]);
-    stream.write_all(req.to_string().as_bytes())?;
-    stream.write_all(b"\n")?;
-    let mut reader = BufReader::new(stream);
-    let mut line = String::new();
-    reader.read_line(&mut line)?;
-    let j = Json::parse(line.trim()).map_err(|e| anyhow::anyhow!("bad response: {e}"))?;
+    ];
+    if let Some(p) = &opts.params {
+        fields.push(("temperature", Json::num(p.temperature as f64)));
+        fields.push(("top_k", Json::num(p.top_k as f64)));
+        fields.push(("top_p", Json::num(p.top_p as f64)));
+        fields.push(("repetition_penalty", Json::num(p.repetition_penalty as f64)));
+        fields.push(("seed", Json::num(p.seed as f64)));
+    }
+    if !opts.stop.is_empty() {
+        fields.push((
+            "stop",
+            Json::arr(opts.stop.iter().map(|seq| {
+                Json::arr(seq.iter().map(|&t| Json::num(t as f64)))
+            })),
+        ));
+    }
+    if stream {
+        fields.push(("stream", Json::Bool(true)));
+    }
+    Json::obj(fields)
+}
+
+fn parse_response(j: &Json) -> Result<ClientResponse> {
     if let Some(err) = j.get("error").as_str() {
         bail!("server error: {err}");
     }
+    let timed_out = j.get("timed_out").as_bool().unwrap_or(false);
     Ok(ClientResponse {
         tokens: j.get("tokens").usize_vec().into_iter().map(|t| t as u8).collect(),
         latency_ms: j.get("latency_ms").as_f64().unwrap_or(0.0),
@@ -66,8 +110,75 @@ pub fn request_generation(addr: &str, prompt: &[u8], max_new: usize) -> Result<C
         batch_size: j.get("batch_size").as_usize().unwrap_or(1),
         kv_pages_used: j.get("kv_pages_used").as_usize().unwrap_or(0),
         preemptions: j.get("preemptions").as_usize().unwrap_or(0),
-        timed_out: j.get("timed_out").as_bool().unwrap_or(false),
+        timed_out,
         worker_restarts: j.get("worker_restarts").as_usize().unwrap_or(0),
         pipeline_rebuilds: j.get("pipeline_rebuilds").as_usize().unwrap_or(0),
+        finish_reason: match j.get("finish_reason").as_str() {
+            Some(r) => r.to_string(),
+            // Pre-PR-9 servers don't send the field: infer the old way.
+            None if timed_out => "timeout".to_string(),
+            None => "length".to_string(),
+        },
     })
+}
+
+/// Send one generation request and wait for the reply (server-default
+/// sampling, no stop sequences).
+pub fn request_generation(addr: &str, prompt: &[u8], max_new: usize) -> Result<ClientResponse> {
+    request_generation_with(addr, prompt, max_new, &ClientOptions::default())
+}
+
+/// Send one generation request with explicit sampling/stop knobs and wait
+/// for the reply.
+pub fn request_generation_with(
+    addr: &str,
+    prompt: &[u8],
+    max_new: usize,
+    opts: &ClientOptions,
+) -> Result<ClientResponse> {
+    let mut stream =
+        TcpStream::connect(addr).with_context(|| format!("connect {addr}"))?;
+    let req = build_request(prompt, max_new, opts, false);
+    stream.write_all(req.to_string().as_bytes())?;
+    stream.write_all(b"\n")?;
+    let mut reader = BufReader::new(stream);
+    let mut line = String::new();
+    reader.read_line(&mut line)?;
+    let j = Json::parse(line.trim()).map_err(|e| anyhow::anyhow!("bad response: {e}"))?;
+    parse_response(&j)
+}
+
+/// Streaming request: `on_token` fires for every `{"token", "index"}` event
+/// line as the server samples it; the returned [`ClientResponse`] is the
+/// final terminal line (its `tokens` always equals the concatenated events).
+/// Degrades gracefully against a pre-PR-9 server that ignores `"stream"`:
+/// the single response line is terminal, so `on_token` simply never fires.
+pub fn request_generation_streaming(
+    addr: &str,
+    prompt: &[u8],
+    max_new: usize,
+    opts: &ClientOptions,
+    mut on_token: impl FnMut(u8, usize),
+) -> Result<ClientResponse> {
+    let mut stream =
+        TcpStream::connect(addr).with_context(|| format!("connect {addr}"))?;
+    let req = build_request(prompt, max_new, opts, true);
+    stream.write_all(req.to_string().as_bytes())?;
+    stream.write_all(b"\n")?;
+    let mut reader = BufReader::new(stream);
+    let mut line = String::new();
+    loop {
+        line.clear();
+        if reader.read_line(&mut line)? == 0 {
+            bail!("server closed the stream before the final response");
+        }
+        let j = Json::parse(line.trim())
+            .map_err(|e| anyhow::anyhow!("bad response: {e}"))?;
+        // Event lines carry `token`; anything else is the terminal line
+        // (the full response, or an error object).
+        match (j.get("token").as_usize(), j.get("index").as_usize()) {
+            (Some(token), Some(index)) if token <= 255 => on_token(token as u8, index),
+            _ => return parse_response(&j),
+        }
+    }
 }

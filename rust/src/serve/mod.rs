@@ -2,24 +2,36 @@
 //! weight-only quantization (paper §2.2: vLLM / TensorRT-LLM support
 //! group-wise formats because decode is memory-bandwidth-bound).
 //!
-//! A minimal but real serving stack: a TCP line-JSON protocol, a
-//! continuous-batching scheduler that admits and retires sequences at every
-//! token step (`sched`), and KV-cached greedy decoding over either the FP
-//! or a quantized checkpoint — single-worker or layer-sharded
+//! A minimal but real serving stack: a TCP line-JSON protocol (documented
+//! field-by-field in `docs/SERVE_API.md`), a continuous-batching scheduler
+//! that admits and retires sequences at every token step (`sched`), a
+//! per-request sampling chain (`sampler`: temperature / top-k / top-p /
+//! repetition penalty over seeded multinomial or greedy selection, plus
+//! stop sequences and token streaming), and KV-cached decoding over either
+//! the FP or a quantized checkpoint — single-worker or layer-sharded
 //! pipeline-parallel ([`crate::shard`], `--shards N`). The serving bench
 //! compares FP vs quantized token throughput, tail latency, and shard-count
 //! scaling.
+//!
+//! Decoding defaults to greedy, bit-identical to the pre-sampler
+//! [`argmax_token`] path; a seeded request replays token-identically across
+//! runs, prefill chunk sizes, shard counts, and kernel tables because the
+//! logits it samples from are bit-identical by construction.
 
 pub mod batcher;
 pub mod client;
+pub mod sampler;
 pub mod sched;
 pub mod server;
 
 pub use batcher::{
-    argmax_token, default_prefill_chunk, BatcherConfig, DynamicBatcher, GenRequest, GenResponse,
-    Pending, RequestQueue,
+    argmax_token, default_prefill_chunk, BatcherConfig, DynamicBatcher, FinishReason,
+    GenRequest, GenResponse, Pending, RequestQueue, StreamHandle,
 };
-pub use client::request_generation;
+pub use client::{
+    request_generation, request_generation_streaming, request_generation_with, ClientOptions,
+};
+pub use sampler::{Sampler, SamplerChain, SamplingParams, Selector, StopSet};
 pub use sched::{
     scheduler_loop, AdmitVerdict, LocalBackend, PoolMirror, ShardBackend, StepBackend, StepJob,
 };

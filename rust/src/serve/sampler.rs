@@ -1,0 +1,523 @@
+//! Composable per-request sampling: logit transforms + a final selector.
+//!
+//! Decoding was hard-wired to greedy [`argmax_token`] until PR 9; this module
+//! generalizes it without giving up reproducibility. A [`SamplerChain`] is a
+//! list of [`Sampler`] transforms that mutate the step's last-row logits
+//! in-place (repetition penalty, temperature, top-k, top-p — applied in that
+//! order) followed by a [`Selector`] that picks the token: greedy argmax, or
+//! seeded multinomial over the surviving probability mass.
+//!
+//! Invariants this module is built around:
+//!
+//! * **Greedy default is bit-identical to the pre-sampler path.** Default
+//!   [`SamplingParams`] build an empty transform list and the greedy
+//!   selector, which calls [`argmax_token`] on the untouched logits — same
+//!   token, same error strings, same first-maximum tie-break.
+//! * **Deterministic replay.** Each request owns its chain; the multinomial
+//!   selector draws from a [`Rng`] seeded with the
+//!   request's `seed` and consumes exactly one draw per *emitted* token.
+//!   Since the kernel/shard/chunking planes already guarantee bit-identical
+//!   logits, same seed + same prompt ⇒ same tokens — across runs, prefill
+//!   chunk sizes, shard counts, and kernel tables. Preemption replay re-feeds
+//!   recorded tokens without consulting logits, so the RNG stream is not
+//!   perturbed by a restart.
+//! * **Masked tokens are unreachable.** Top-k/top-p mask candidates to
+//!   `-inf`; the selection converts those to zero weight and
+//!   `Rng::weighted` never lands on a zero-weight index.
+//!
+//! Stop handling lives here too: a [`StopSet`] holds byte sequences (UTF-8
+//! strings or raw token ids from the wire) and is checked against the decoded
+//! tail after every emitted token.
+
+use super::batcher::argmax_token;
+use crate::util::rng::Rng;
+
+/// Per-request knobs for the sampling chain. `Copy` so it can ride inside
+/// `BatcherConfig` and request structs without ceremony.
+///
+/// The defaults mean "greedy, no transforms": `temperature == 0.0` selects
+/// greedy argmax, `top_k == 0` and `top_p == 1.0` disable truncation, and
+/// `repetition_penalty == 1.0` disables the penalty.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SamplingParams {
+    /// Softmax temperature. `0.0` (the default) means greedy decoding;
+    /// values `> 0.0` enable seeded multinomial sampling.
+    pub temperature: f32,
+    /// Keep only the `k` highest logits before sampling. `0` disables.
+    pub top_k: usize,
+    /// Nucleus sampling: keep the smallest probability-sorted prefix whose
+    /// cumulative mass reaches `top_p`. `1.0` disables.
+    pub top_p: f32,
+    /// Divide (positive) / multiply (non-positive) logits of tokens already
+    /// seen in the prompt or the output. `1.0` disables.
+    pub repetition_penalty: f32,
+    /// Seed for the per-request RNG stream. Same seed + same logits ⇒ same
+    /// tokens. Only consulted when `temperature > 0.0`.
+    pub seed: u64,
+}
+
+impl Default for SamplingParams {
+    fn default() -> Self {
+        SamplingParams {
+            temperature: 0.0,
+            top_k: 0,
+            top_p: 1.0,
+            repetition_penalty: 1.0,
+            seed: 0,
+        }
+    }
+}
+
+impl SamplingParams {
+    /// True when the selector will be greedy argmax (temperature `0.0`).
+    pub fn is_greedy(&self) -> bool {
+        self.temperature <= 0.0
+    }
+
+    /// Reject values that would make sampling meaningless or non-reproducible
+    /// before the request is admitted, so the error reaches the client instead
+    /// of a scheduler slot.
+    pub fn validate(&self) -> Result<(), String> {
+        if !self.temperature.is_finite() || self.temperature < 0.0 {
+            return Err(format!(
+                "temperature must be finite and >= 0.0, got {}",
+                self.temperature
+            ));
+        }
+        if !self.top_p.is_finite() || self.top_p <= 0.0 || self.top_p > 1.0 {
+            return Err(format!("top_p must be in (0.0, 1.0], got {}", self.top_p));
+        }
+        if !self.repetition_penalty.is_finite() || self.repetition_penalty <= 0.0 {
+            return Err(format!(
+                "repetition_penalty must be finite and > 0.0, got {}",
+                self.repetition_penalty
+            ));
+        }
+        Ok(())
+    }
+}
+
+/// One in-place logit transform in a [`SamplerChain`].
+///
+/// `apply` sees the full step context — the mutable logit row plus the
+/// request's prompt and everything emitted so far — so history-aware
+/// transforms (repetition penalty) and pure row transforms (temperature,
+/// truncation) share one interface.
+pub trait Sampler: Send {
+    /// Mutate `logits` in place. `prompt`/`out` are the request's prompt and
+    /// the tokens emitted so far.
+    fn apply(&mut self, logits: &mut [f32], prompt: &[u8], out: &[u8]);
+}
+
+/// Divides positive logits by `penalty` (and multiplies non-positive ones)
+/// for every token id present in the prompt or the output so far.
+struct RepetitionPenalty {
+    penalty: f32,
+}
+
+impl Sampler for RepetitionPenalty {
+    fn apply(&mut self, logits: &mut [f32], prompt: &[u8], out: &[u8]) {
+        let mut seen = [false; 256];
+        for &t in prompt.iter().chain(out) {
+            seen[t as usize] = true;
+        }
+        for (i, l) in logits.iter_mut().enumerate() {
+            if i < 256 && seen[i] {
+                if *l > 0.0 {
+                    *l /= self.penalty;
+                } else {
+                    *l *= self.penalty;
+                }
+            }
+        }
+    }
+}
+
+/// Scales logits by `1 / temperature`. Only constructed for `t > 0`.
+struct Temperature {
+    t: f32,
+}
+
+impl Sampler for Temperature {
+    fn apply(&mut self, logits: &mut [f32], _prompt: &[u8], _out: &[u8]) {
+        for l in logits.iter_mut() {
+            *l /= self.t;
+        }
+    }
+}
+
+/// Masks everything below the `k`-th largest logit to `-inf`. Ties with the
+/// threshold value are all kept, which can retain slightly more than `k`
+/// candidates but is deterministic and order-independent.
+struct TopK {
+    k: usize,
+}
+
+impl Sampler for TopK {
+    fn apply(&mut self, logits: &mut [f32], _prompt: &[u8], _out: &[u8]) {
+        if self.k == 0 || self.k >= logits.len() {
+            return;
+        }
+        let mut sorted: Vec<f32> = logits.to_vec();
+        sorted.sort_unstable_by(|a, b| b.total_cmp(a));
+        let threshold = sorted[self.k - 1];
+        for l in logits.iter_mut() {
+            if *l < threshold {
+                *l = f32::NEG_INFINITY;
+            }
+        }
+    }
+}
+
+/// Nucleus truncation: keeps the smallest probability-sorted prefix whose
+/// cumulative softmax mass reaches `p` (always at least the top token) and
+/// masks the rest to `-inf`. Sorting breaks probability ties by ascending
+/// token id so the kept set is deterministic.
+struct TopP {
+    p: f32,
+}
+
+impl Sampler for TopP {
+    fn apply(&mut self, logits: &mut [f32], _prompt: &[u8], _out: &[u8]) {
+        if self.p >= 1.0 || logits.is_empty() {
+            return;
+        }
+        let max = logits.iter().fold(f32::NEG_INFINITY, |m, &v| m.max(v));
+        if !max.is_finite() {
+            return;
+        }
+        let weights: Vec<f64> = logits
+            .iter()
+            .map(|&l| if l.is_finite() { ((l - max) as f64).exp() } else { 0.0 })
+            .collect();
+        let total: f64 = weights.iter().sum();
+        if total <= 0.0 {
+            return;
+        }
+        let mut order: Vec<usize> = (0..logits.len()).collect();
+        order.sort_unstable_by(|&a, &b| {
+            weights[b].total_cmp(&weights[a]).then(a.cmp(&b))
+        });
+        let mut cum = 0.0;
+        let mut keep = vec![false; logits.len()];
+        for &i in &order {
+            keep[i] = true;
+            cum += weights[i] / total;
+            if cum >= self.p as f64 {
+                break;
+            }
+        }
+        for (i, l) in logits.iter_mut().enumerate() {
+            if !keep[i] {
+                *l = f32::NEG_INFINITY;
+            }
+        }
+    }
+}
+
+/// Terminal stage of the chain: turns the (transformed) logit row into one
+/// token id.
+pub enum Selector {
+    /// First-maximum argmax — byte-exact with [`argmax_token`].
+    Greedy,
+    /// Seeded multinomial over the softmax of the surviving candidates.
+    Multinomial(Rng),
+}
+
+/// A request's sampling pipeline: in-order transforms plus the final
+/// [`Selector`]. Built once per request via [`SamplerChain::from_params`] and
+/// consulted by the scheduler exactly once per emitted token.
+pub struct SamplerChain {
+    transforms: Vec<Box<dyn Sampler>>,
+    selector: Selector,
+}
+
+impl SamplerChain {
+    /// Build the chain for `params` (validating them first). Greedy requests
+    /// skip temperature/top-k/top-p entirely — they cannot change an argmax —
+    /// so the default chain is empty and byte-exact with the pre-sampler
+    /// decode path.
+    pub fn from_params(params: &SamplingParams) -> Result<Self, String> {
+        params.validate()?;
+        let mut transforms: Vec<Box<dyn Sampler>> = Vec::new();
+        if params.repetition_penalty != 1.0 {
+            transforms.push(Box::new(RepetitionPenalty {
+                penalty: params.repetition_penalty,
+            }));
+        }
+        let selector = if params.is_greedy() {
+            Selector::Greedy
+        } else {
+            transforms.push(Box::new(Temperature { t: params.temperature }));
+            if params.top_k > 0 {
+                transforms.push(Box::new(TopK { k: params.top_k }));
+            }
+            if params.top_p < 1.0 {
+                transforms.push(Box::new(TopP { p: params.top_p }));
+            }
+            Selector::Multinomial(Rng::new(params.seed))
+        };
+        Ok(SamplerChain { transforms, selector })
+    }
+
+    /// True when the selector is greedy argmax.
+    pub fn is_greedy(&self) -> bool {
+        matches!(self.selector, Selector::Greedy)
+    }
+
+    /// Run the transforms over `logits` in place, then select the next token.
+    ///
+    /// Input validation mirrors [`argmax_token`]: empty or non-finite *input*
+    /// logits and token ids beyond 255 are errors. (`-inf` introduced by the
+    /// chain's own masking is fine — it is zero probability, not corruption.)
+    /// The multinomial selector consumes exactly one RNG draw per call.
+    pub fn next_token(
+        &mut self,
+        logits: &mut [f32],
+        prompt: &[u8],
+        out: &[u8],
+    ) -> Result<u8, String> {
+        match &mut self.selector {
+            Selector::Greedy => {
+                for t in &mut self.transforms {
+                    t.apply(logits, prompt, out);
+                }
+                argmax_token(logits)
+            }
+            Selector::Multinomial(rng) => {
+                if logits.is_empty() {
+                    return Err("empty logits (no prompt token was decoded)".into());
+                }
+                if logits.iter().any(|v| !v.is_finite()) {
+                    return Err("non-finite logits (model produced NaN/inf)".into());
+                }
+                for t in &mut self.transforms {
+                    t.apply(logits, prompt, out);
+                }
+                let max = logits.iter().fold(f32::NEG_INFINITY, |m, &v| m.max(v));
+                if !max.is_finite() {
+                    return Err("non-finite logits (model produced NaN/inf)".into());
+                }
+                let weights: Vec<f64> = logits
+                    .iter()
+                    .map(|&l| if l.is_finite() { ((l - max) as f64).exp() } else { 0.0 })
+                    .collect();
+                if weights.iter().sum::<f64>() <= 0.0 {
+                    return Err("non-finite logits (model produced NaN/inf)".into());
+                }
+                let idx = rng.weighted(&weights);
+                u8::try_from(idx).map_err(|_| {
+                    format!("sampled token id {idx} exceeds the byte token range (vocab > 256)")
+                })
+            }
+        }
+    }
+}
+
+/// Stop sequences for one request: byte strings checked as suffixes of the
+/// emitted output after every token. An empty set never matches.
+#[derive(Clone, Debug, Default)]
+pub struct StopSet {
+    seqs: Vec<Vec<u8>>,
+}
+
+impl StopSet {
+    /// Build from raw byte sequences; empty sequences are dropped (they would
+    /// match everything, including the empty output).
+    pub fn new(seqs: Vec<Vec<u8>>) -> Self {
+        StopSet { seqs: seqs.into_iter().filter(|s| !s.is_empty()).collect() }
+    }
+
+    /// True when no stop sequence is registered.
+    pub fn is_empty(&self) -> bool {
+        self.seqs.is_empty()
+    }
+
+    /// True when any stop sequence is a suffix of `out`.
+    pub fn hit(&self, out: &[u8]) -> bool {
+        self.seqs.iter().any(|s| out.ends_with(s))
+    }
+
+    /// The registered sequences (wire-format echo and tests).
+    pub fn seqs(&self) -> &[Vec<u8>] {
+        &self.seqs
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sampled(params: SamplingParams, logits: &[f32], n: usize) -> Vec<u8> {
+        let mut chain = SamplerChain::from_params(&params).unwrap();
+        let mut out = Vec::new();
+        for _ in 0..n {
+            let mut row = logits.to_vec();
+            out.push(chain.next_token(&mut row, &[], &out).unwrap());
+        }
+        out
+    }
+
+    #[test]
+    fn default_is_greedy_and_bit_identical_to_argmax() {
+        let logits = [0.1f32, 2.5, -1.0, 2.5, 0.0];
+        let mut chain = SamplerChain::from_params(&SamplingParams::default()).unwrap();
+        assert!(chain.is_greedy());
+        let mut row = logits.to_vec();
+        let tok = chain.next_token(&mut row, &[], &[]).unwrap();
+        assert_eq!(tok, argmax_token(&logits).unwrap());
+        assert_eq!(tok, 1, "first maximum wins on ties");
+        assert_eq!(row, logits, "default chain must not touch the logits");
+    }
+
+    #[test]
+    fn greedy_error_contract_matches_argmax() {
+        let mut chain = SamplerChain::from_params(&SamplingParams::default()).unwrap();
+        assert_eq!(
+            chain.next_token(&mut [], &[], &[]).unwrap_err(),
+            argmax_token(&[]).unwrap_err()
+        );
+        let bad = [1.0f32, f32::NAN];
+        let mut row = bad.to_vec();
+        assert_eq!(
+            chain.next_token(&mut row, &[], &[]).unwrap_err(),
+            argmax_token(&bad).unwrap_err()
+        );
+    }
+
+    #[test]
+    fn multinomial_rejects_bad_input_logits() {
+        let params = SamplingParams { temperature: 1.0, seed: 1, ..Default::default() };
+        let mut chain = SamplerChain::from_params(&params).unwrap();
+        assert!(chain.next_token(&mut [], &[], &[]).unwrap_err().contains("empty"));
+        let mut row = vec![1.0f32, f32::INFINITY];
+        assert!(chain
+            .next_token(&mut row, &[], &[])
+            .unwrap_err()
+            .contains("non-finite"));
+    }
+
+    #[test]
+    fn same_seed_replays_identically() {
+        let params = SamplingParams {
+            temperature: 0.9,
+            top_k: 3,
+            top_p: 0.95,
+            repetition_penalty: 1.2,
+            seed: 42,
+        };
+        let logits = [0.3f32, 1.1, -0.2, 0.9, 0.5, -1.5];
+        assert_eq!(sampled(params, &logits, 32), sampled(params, &logits, 32));
+    }
+
+    #[test]
+    fn different_seeds_diverge() {
+        let base = SamplingParams { temperature: 1.5, ..Default::default() };
+        let logits: Vec<f32> = (0..32).map(|i| (i as f32 * 0.37).sin()).collect();
+        let a = sampled(SamplingParams { seed: 1, ..base }, &logits, 64);
+        let b = sampled(SamplingParams { seed: 2, ..base }, &logits, 64);
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn top_k_masks_everything_outside_k() {
+        let params = SamplingParams { temperature: 1.0, top_k: 2, seed: 7, ..Default::default() };
+        let logits = [5.0f32, 4.0, -50.0, -50.0, -50.0];
+        for tok in sampled(params, &logits, 256) {
+            assert!(tok <= 1, "top_k=2 sampled masked token {tok}");
+        }
+    }
+
+    #[test]
+    fn top_p_keeps_only_the_nucleus() {
+        // Token 0 holds ~83% of the mass; top_p=0.5 must keep exactly it.
+        let params = SamplingParams { temperature: 1.0, top_p: 0.5, seed: 9, ..Default::default() };
+        let logits = [3.0f32, 1.0, 0.0, -1.0];
+        for tok in sampled(params, &logits, 256) {
+            assert_eq!(tok, 0, "top_p nucleus should be a single token here");
+        }
+    }
+
+    #[test]
+    fn top_p_keeps_at_least_one_token() {
+        let params = SamplingParams {
+            temperature: 1.0,
+            top_p: 1e-6,
+            seed: 3,
+            ..Default::default()
+        };
+        let logits = [0.0f32, 0.0, 0.0];
+        let mut chain = SamplerChain::from_params(&params).unwrap();
+        let mut row = logits.to_vec();
+        chain.next_token(&mut row, &[], &[]).unwrap();
+    }
+
+    #[test]
+    fn repetition_penalty_discourages_repeats_under_greedy() {
+        // Greedy with a strong penalty: once 0 is emitted, its logit is
+        // divided and token 1 takes over.
+        let params = SamplingParams { repetition_penalty: 10.0, ..Default::default() };
+        let logits = [2.0f32, 1.9, -5.0];
+        let mut chain = SamplerChain::from_params(&params).unwrap();
+        assert!(chain.is_greedy());
+        let mut out = Vec::new();
+        for _ in 0..2 {
+            let mut row = logits.to_vec();
+            out.push(chain.next_token(&mut row, &[], &out).unwrap());
+        }
+        assert_eq!(out, vec![0, 1]);
+    }
+
+    #[test]
+    fn repetition_penalty_sees_the_prompt() {
+        let params = SamplingParams { repetition_penalty: 10.0, ..Default::default() };
+        let logits = [2.0f32, 1.9, -5.0];
+        let mut chain = SamplerChain::from_params(&params).unwrap();
+        let mut row = logits.to_vec();
+        // Token 0 is in the prompt, so it is penalized before the first emit.
+        assert_eq!(chain.next_token(&mut row, &[0], &[]).unwrap(), 1);
+    }
+
+    #[test]
+    fn validation_rejects_bad_params() {
+        for p in [
+            SamplingParams { temperature: -1.0, ..Default::default() },
+            SamplingParams { temperature: f32::NAN, ..Default::default() },
+            SamplingParams { top_p: 0.0, ..Default::default() },
+            SamplingParams { top_p: 1.5, ..Default::default() },
+            SamplingParams { repetition_penalty: 0.0, ..Default::default() },
+            SamplingParams { repetition_penalty: -2.0, ..Default::default() },
+        ] {
+            assert!(p.validate().is_err(), "{p:?} should be rejected");
+            assert!(SamplerChain::from_params(&p).is_err());
+        }
+        assert!(SamplingParams::default().validate().is_ok());
+    }
+
+    #[test]
+    fn stop_set_suffix_matching() {
+        let stop = StopSet::new(vec![vec![10, 11], vec![7], vec![]]);
+        assert_eq!(stop.seqs().len(), 2, "empty sequences are dropped");
+        assert!(!stop.hit(&[]));
+        assert!(!stop.hit(&[10]));
+        assert!(stop.hit(&[1, 10, 11]));
+        assert!(stop.hit(&[7]));
+        assert!(!stop.hit(&[11, 10]));
+        assert!(StopSet::default().is_empty());
+        assert!(!StopSet::default().hit(&[1, 2, 3]));
+    }
+
+    #[test]
+    fn sampled_distribution_tracks_the_mass() {
+        // Statistical sanity: with temperature 1 and two tokens at equal
+        // logits plus one heavily negative, the two heavies split the draws.
+        let params = SamplingParams { temperature: 1.0, seed: 11, ..Default::default() };
+        let logits = [1.0f32, 1.0, -20.0];
+        let toks = sampled(params, &logits, 2000);
+        let c0 = toks.iter().filter(|&&t| t == 0).count();
+        let c1 = toks.iter().filter(|&&t| t == 1).count();
+        let c2 = toks.iter().filter(|&&t| t == 2).count();
+        assert_eq!(c2, 0, "negligible-mass token should effectively never fire");
+        assert!(c0 > 700 && c1 > 700, "even split expected, got {c0}/{c1}");
+    }
+}

@@ -76,7 +76,7 @@
 //!   panicking step worker sends a *structured* `Err` reply tagged with the
 //!   job's `gen`/`idx`, so exactly that sequence errors while its
 //!   neighbours' replies land normally — no 60-second stall. The pool
-//!   supervisor ([`StepPool::reap_and_respawn`]) joins finished workers and
+//!   supervisor (`StepPool::reap_and_respawn`) joins finished workers and
 //!   respawns back to full width before the next step.
 //! * The shard pipeline self-reports death ([`ShardedDecoder::dead`]);
 //!   [`ShardBackend`] defers admission while dead sequences drain (their KV
@@ -90,7 +90,8 @@
 //! The failure paths are exercised deterministically via the fault points
 //! in [`crate::util::fault`] (`TSGO_FAULT`, `BatcherConfig::faults`).
 
-use super::batcher::{argmax_token, BatcherConfig, GenResponse, Pending, RequestQueue};
+use super::batcher::{BatcherConfig, FinishReason, GenResponse, Pending, RequestQueue};
+use super::sampler::{SamplerChain, StopSet};
 use crate::kvpool::{KvPool, PoolCfg};
 use crate::model::{
     decode_head, decode_layer_span, embed_tokens, KvSpec, LayerKv, ModelConfig, ModelExec,
@@ -863,6 +864,16 @@ struct Running {
     preemptions: usize,
     /// High-water mark of pool pages this sequence's KV held.
     kv_pages_peak: usize,
+    /// This request's sampling pipeline. Only consulted at the chain end
+    /// (one call per emitted token), so replay positions never advance the
+    /// RNG — a preempted sampled sequence resumes its stream exactly where
+    /// it left off.
+    chain: SamplerChain,
+    /// Stop sequences checked against `out`'s tail after every emitted token.
+    stop: StopSet,
+    /// Streaming tap (see [`Pending::events`]); a closed receiver cancels
+    /// the sequence at its next emitted token.
+    events: Option<Sender<u8>>,
     reply: Sender<Result<GenResponse, String>>,
 }
 
@@ -891,7 +902,12 @@ impl Running {
 
 enum Advance {
     Continue,
-    Done(Result<(), String>),
+    /// Retire with a reply: `Ok` carries why generation ended, `Err` the
+    /// decode failure.
+    Done(Result<FinishReason, String>),
+    /// The streaming client went away: retire the slot (freeing its KV
+    /// pages) and send no reply — there is nobody left to read it.
+    Cancelled,
 }
 
 /// The scheduler loop: runs on the `DynamicBatcher` worker thread until the
@@ -1011,7 +1027,7 @@ pub fn scheduler_loop(backend: &mut dyn StepBackend, cfg: &BatcherConfig, queue:
                         r.max_new
                     );
                     backend.retire(r.slot);
-                    finish(r, Ok(()), true, counts);
+                    finish(r, Ok(FinishReason::Timeout), counts);
                 } else {
                     still.push(r);
                 }
@@ -1021,7 +1037,7 @@ pub fn scheduler_loop(backend: &mut dyn StepBackend, cfg: &BatcherConfig, queue:
             for _ in 0..paused.len() {
                 let r = paused.pop_front().expect("iterating current length");
                 if expired(r.enqueued) {
-                    finish(r, Ok(()), true, counts);
+                    finish(r, Ok(FinishReason::Timeout), counts);
                 } else {
                     paused.push_back(r);
                 }
@@ -1043,6 +1059,7 @@ pub fn scheduler_loop(backend: &mut dyn StepBackend, cfg: &BatcherConfig, queue:
                         timed_out: true,
                         worker_restarts: counts.0,
                         pipeline_rebuilds: counts.1,
+                        finish_reason: FinishReason::Timeout,
                     }));
                 } else {
                     waiting.push_back(p);
@@ -1129,7 +1146,16 @@ pub fn scheduler_loop(backend: &mut dyn StepBackend, cfg: &BatcherConfig, queue:
                 Advance::Done(result) => {
                     backend.retire(r.slot);
                     let counts = backend.recovery_counts();
-                    finish(r, result, false, counts);
+                    finish(r, result, counts);
+                }
+                Advance::Cancelled => {
+                    println!(
+                        "serve: streaming client disconnected: retiring sequence \
+                         with {} of {} tokens",
+                        r.out.len(),
+                        r.max_new
+                    );
+                    backend.retire(r.slot);
                 }
             }
         }
@@ -1140,29 +1166,39 @@ pub fn scheduler_loop(backend: &mut dyn StepBackend, cfg: &BatcherConfig, queue:
 /// Consume one span-step result for one sequence; decides continue vs
 /// retire. `span_len` is how many chain tokens the step just cached.
 fn advance(r: &mut Running, res: Result<Vec<f32>, String>, span_len: usize) -> Advance {
-    let logits = match res {
+    let mut logits = match res {
         Ok(l) => l,
         Err(e) => return Advance::Done(Err(e)),
     };
     r.pos += span_len;
     if r.pos < r.chain_len() {
         // Mid-prefill — or mid-replay after a preemption: known chain
-        // positions never consult the logits, which is what makes replay
-        // cheap (no argmax) and trivially deterministic.
+        // positions never consult the logits (or the sampler chain's RNG),
+        // which is what makes replay cheap and trivially deterministic.
         return Advance::Continue;
     }
     // The chain's last token was just stepped: its logits pick the next
-    // generated token — identical to the unbatched greedy-decode semantics.
-    match argmax_token(&logits) {
-        Ok(next) => {
-            r.out.push(next);
-            if r.out.len() >= r.max_new {
-                Advance::Done(Ok(()))
-            } else {
-                Advance::Continue
-            }
+    // generated token. The default (greedy) chain is bit-identical to the
+    // historical argmax path; a seeded chain consumes exactly one RNG draw
+    // here, so same seed + same logits ⇒ same token.
+    let next = match r.chain.next_token(&mut logits, &r.prompt, &r.out) {
+        Ok(next) => next,
+        Err(e) => return Advance::Done(Err(e)),
+    };
+    r.out.push(next);
+    if let Some(events) = &r.events {
+        // A dead receiver means the streaming client disconnected: stop
+        // spending steps on a generation nobody is reading.
+        if events.send(next).is_err() {
+            return Advance::Cancelled;
         }
-        Err(e) => Advance::Done(Err(e)),
+    }
+    if r.stop.hit(&r.out) {
+        Advance::Done(Ok(FinishReason::Stop))
+    } else if r.out.len() >= r.max_new {
+        Advance::Done(Ok(FinishReason::Length))
+    } else {
+        Advance::Continue
     }
 }
 
@@ -1197,9 +1233,21 @@ fn admit_request(
             timed_out: false,
             worker_restarts,
             pipeline_rebuilds,
+            finish_reason: FinishReason::Length,
         }));
         return None;
     }
+    // `generate` validates at the door, but tests (and any future ingress)
+    // can drive the scheduler directly — bad knobs still answer with the
+    // validation error instead of poisoning a slot.
+    let chain = match SamplerChain::from_params(&p.req.params) {
+        Ok(chain) => chain,
+        Err(e) => {
+            queue.settle();
+            let _ = p.reply.send(Err(e));
+            return None;
+        }
+    };
     match backend.admit(p.req.prompt.len()) {
         AdmitVerdict::Slot(slot) => {
             queue.settle();
@@ -1215,6 +1263,9 @@ fn admit_request(
                 first_token: None,
                 preemptions: 0,
                 kv_pages_peak: 0,
+                chain,
+                stop: StopSet::new(p.req.stop),
+                events: p.events,
                 reply: p.reply,
             });
             None
@@ -1231,7 +1282,7 @@ fn admit_request(
     }
 }
 
-fn finish(r: Running, result: Result<(), String>, timed_out: bool, counts: (usize, usize)) {
+fn finish(r: Running, result: Result<FinishReason, String>, counts: (usize, usize)) {
     // A sequence only finishes after at least one step, so `started` is
     // always stamped by then; the fallbacks are pure defensiveness (and
     // cover a deadline expiry before the first step).
@@ -1240,7 +1291,7 @@ fn finish(r: Running, result: Result<(), String>, timed_out: bool, counts: (usiz
     // after (including any post-preemption replay) is decode time. A
     // sequence that errored before its first token has zero decode time.
     let first = r.first_token.unwrap_or_else(Instant::now);
-    let resp = result.map(|()| GenResponse {
+    let resp = result.map(|finish_reason| GenResponse {
         tokens: r.out,
         queue_wait: started.saturating_duration_since(r.enqueued),
         prefill_time: first.saturating_duration_since(started),
@@ -1248,9 +1299,10 @@ fn finish(r: Running, result: Result<(), String>, timed_out: bool, counts: (usiz
         batch_size: r.max_cobatch,
         kv_pages_used: r.kv_pages_peak,
         preemptions: r.preemptions,
-        timed_out,
+        timed_out: finish_reason == FinishReason::Timeout,
         worker_restarts: counts.0,
         pipeline_rebuilds: counts.1,
+        finish_reason,
     });
     let _ = r.reply.send(resp);
 }
@@ -1289,7 +1341,7 @@ fn drain(
 mod tests {
     use super::*;
     use crate::model::{DecodeState, ModelWeights, Preset};
-    use crate::serve::batcher::GenRequest;
+    use crate::serve::batcher::{argmax_token, GenRequest};
     use crate::util::rng::Rng;
 
     /// Wraps a backend to record every step's `(slot, pos, span_len)` jobs.
@@ -1365,15 +1417,21 @@ mod tests {
         // Both requests are queued before the loop starts, so A admits from
         // idle and B joins deterministically in the coalescing window.
         tx.send(Pending {
-            req: GenRequest { prompt: prompt_a, max_new: 60 },
+            req: GenRequest { prompt: prompt_a, max_new: 60, ..Default::default() },
             enqueued: now,
             reply: ra_tx,
+            events: None,
         })
         .unwrap();
         tx.send(Pending {
-            req: GenRequest { prompt: prompt_b.clone(), max_new: 24 },
+            req: GenRequest {
+                prompt: prompt_b.clone(),
+                max_new: 24,
+                ..Default::default()
+            },
             enqueued: now,
             reply: rb_tx,
+            events: None,
         })
         .unwrap();
         let cfg = BatcherConfig {

@@ -1,15 +1,28 @@
 //! TCP line-JSON serving front-end.
 //!
-//! Protocol: one JSON object per line.
-//! Request  : `{"prompt": [byte ids], "max_new": N}`
-//! Response : `{"tokens": [...], "latency_ms": f, "queue_wait_ms": f,
-//!             "prefill_ms": f, "ttft_ms": f, "decode_ms": f,
-//!             "batch_size": n, "kv_pages_used": n, "preemptions": n,
-//!             "timed_out": b, "worker_restarts": n, "pipeline_rebuilds": n}`
-//! Error    : `{"error": "..."}`
+//! Protocol: one JSON object per line; the full field-by-field reference
+//! (request knobs, response metrics, streaming event framing) lives in
+//! `docs/SERVE_API.md`. In brief:
+//!
+//! Request  : `{"prompt": [byte ids], "max_new": N, "temperature": f,
+//!             "top_k": n, "top_p": f, "repetition_penalty": f, "seed": n,
+//!             "stop": ["str" | [ids]], "stream": b}` — everything after
+//!             `prompt` optional; `max_tokens` is accepted as an alias for
+//!             `max_new`.
+//! Response : `{"tokens": [...], "finish_reason": "length|stop|timeout|error",
+//!             "latency_ms": f, "queue_wait_ms": f, "prefill_ms": f,
+//!             "ttft_ms": f, "decode_ms": f, "batch_size": n,
+//!             "kv_pages_used": n, "preemptions": n, "timed_out": b,
+//!             "worker_restarts": n, "pipeline_rebuilds": n}`
+//! Event    : `{"token": t, "index": i}` — only with `"stream": true`: one
+//!             line per sampled token, terminated by the final response
+//!             line (whose `tokens` is always the full output, so the
+//!             concatenated events equal it).
+//! Error    : `{"error": "...", "finish_reason": "error"}`
 //!
 //! `timed_out` is true when the request hit the server's `--request-timeout`
-//! and returned the tokens generated so far; `worker_restarts` /
+//! and returned the tokens generated so far (kept redundantly with
+//! `finish_reason` for pre-`finish_reason` clients); `worker_restarts` /
 //! `pipeline_rebuilds` are process-lifetime recovery counters (see
 //! [`crate::serve::sched`]) so a client can observe that a fault occurred
 //! and was absorbed.
@@ -20,8 +33,15 @@
 //! mid-flight shows a near-zero queue wait even when other generations were
 //! already running) and the chunked-prefill speedup (`--prefill-chunk`
 //! shrinks `prefill_ms`, nothing else) observable per request.
+//!
+//! Sampling defaults come from [`BatcherConfig::default_sampling`] (the
+//! `--temperature` family of serve flags); per-request fields override
+//! individual knobs. A streaming client that disconnects mid-generation
+//! cancels its request: the scheduler retires the slot and frees its KV
+//! pages at the next sampled token.
 
-use super::batcher::{BatcherConfig, DynamicBatcher, GenRequest};
+use super::batcher::{BatcherConfig, DynamicBatcher, GenRequest, GenResponse};
+use super::sampler::SamplingParams;
 use crate::model::ModelExec;
 use crate::util::json::Json;
 use anyhow::{Context, Result};
@@ -45,6 +65,9 @@ pub struct ServerConfig {
     /// exceed generation latency only for *writes*; reads between requests
     /// are idle time, so this doubles as an idle-connection reaper.
     pub conn_timeout: Option<Duration>,
+    /// Server-wide default stop sequences (`tsgo serve --stop`), applied
+    /// when a request carries no `stop` field of its own.
+    pub default_stop: Vec<Vec<u8>>,
 }
 
 impl Default for ServerConfig {
@@ -54,18 +77,34 @@ impl Default for ServerConfig {
             batcher: BatcherConfig::default(),
             max_connections: None,
             conn_timeout: Some(Duration::from_secs(120)),
+            default_stop: Vec::new(),
         }
     }
 }
 
-fn handle_line(batcher: &DynamicBatcher, line: &str) -> String {
-    let respond_err = |msg: &str| Json::obj(vec![("error", Json::str(msg))]).to_string();
-    let req = match Json::parse(line) {
-        Ok(j) => j,
-        Err(e) => return respond_err(&format!("bad json: {e}")),
-    };
+/// Per-connection request defaults, copied out of [`ServerConfig`] when the
+/// connection thread spawns.
+#[derive(Clone)]
+struct ReqDefaults {
+    sampling: SamplingParams,
+    stop: Vec<Vec<u8>>,
+}
+
+fn err_json(msg: &str) -> String {
+    Json::obj(vec![
+        ("error", Json::str(msg)),
+        ("finish_reason", Json::str("error")),
+    ])
+    .to_string()
+}
+
+/// Parse one request line into a [`GenRequest`] plus its `stream` flag.
+/// Absent sampling fields fall back to the server-wide defaults; present
+/// ones override knob-by-knob.
+fn parse_request(line: &str, defaults: &ReqDefaults) -> Result<(GenRequest, bool), String> {
+    let req = Json::parse(line).map_err(|e| format!("bad json: {e}"))?;
     let Some(arr) = req.get("prompt").as_arr() else {
-        return respond_err("prompt must be an array of token ids");
+        return Err("prompt must be an array of token ids".into());
     };
     // Token ids are byte values; anything else is a client error, not
     // something to silently truncate.
@@ -74,40 +113,158 @@ fn handle_line(batcher: &DynamicBatcher, line: &str) -> String {
         match tok.as_f64() {
             Some(v) if v.fract() == 0.0 && (0.0..=255.0).contains(&v) => prompt.push(v as u8),
             _ => {
-                return respond_err(&format!(
+                return Err(format!(
                     "prompt[{i}] = {tok} is out of range (token ids are integers 0-255)"
                 ))
             }
         }
     }
     if prompt.is_empty() {
-        return respond_err("empty prompt");
+        return Err("empty prompt".into());
     }
-    let max_new = req.get("max_new").as_usize().unwrap_or(16).min(512);
-    match batcher.generate(GenRequest { prompt, max_new }) {
-        Ok(resp) => Json::obj(vec![
-            (
-                "tokens",
-                Json::arr(resp.tokens.iter().map(|&t| Json::num(t as f64))),
-            ),
-            ("latency_ms", Json::num(resp.latency().as_secs_f64() * 1e3)),
-            ("queue_wait_ms", Json::num(resp.queue_wait.as_secs_f64() * 1e3)),
-            ("prefill_ms", Json::num(resp.prefill_time.as_secs_f64() * 1e3)),
-            ("ttft_ms", Json::num(resp.ttft().as_secs_f64() * 1e3)),
-            ("decode_ms", Json::num(resp.decode_time.as_secs_f64() * 1e3)),
-            ("batch_size", Json::num(resp.batch_size as f64)),
-            ("kv_pages_used", Json::num(resp.kv_pages_used as f64)),
-            ("preemptions", Json::num(resp.preemptions as f64)),
-            ("timed_out", Json::Bool(resp.timed_out)),
-            ("worker_restarts", Json::num(resp.worker_restarts as f64)),
-            ("pipeline_rebuilds", Json::num(resp.pipeline_rebuilds as f64)),
-        ])
-        .to_string(),
-        Err(e) => respond_err(&e.to_string()),
+    let max_new = req
+        .get("max_new")
+        .as_usize()
+        .or_else(|| req.get("max_tokens").as_usize())
+        .unwrap_or(16)
+        .min(512);
+
+    let mut params = defaults.sampling;
+    if let Some(t) = req.get("temperature").as_f64() {
+        params.temperature = t as f32;
+    }
+    if let Some(k) = req.get("top_k").as_usize() {
+        params.top_k = k;
+    }
+    if let Some(p) = req.get("top_p").as_f64() {
+        params.top_p = p as f32;
+    }
+    if let Some(rp) = req.get("repetition_penalty").as_f64() {
+        params.repetition_penalty = rp as f32;
+    }
+    if let Some(s) = req.get("seed").as_f64() {
+        if s.fract() != 0.0 || s < 0.0 {
+            return Err(format!("seed must be a non-negative integer, got {s}"));
+        }
+        params.seed = s as u64;
+    }
+    params.validate()?;
+
+    let stop = match req.get("stop") {
+        Json::Null => defaults.stop.clone(),
+        Json::Str(s) => vec![s.clone().into_bytes()],
+        Json::Arr(entries) => {
+            let mut seqs = Vec::with_capacity(entries.len());
+            for (i, e) in entries.iter().enumerate() {
+                seqs.push(parse_stop_seq(e).map_err(|why| format!("stop[{i}] {why}"))?);
+            }
+            seqs
+        }
+        other => {
+            return Err(format!(
+                "stop must be a string or an array of strings / token-id arrays, got {other}"
+            ))
+        }
+    };
+    let stream = req.get("stream").as_bool().unwrap_or(false);
+    Ok((GenRequest { prompt, max_new, params, stop }, stream))
+}
+
+/// One `stop` entry: a UTF-8 string (matched on its bytes) or an array of
+/// token ids 0-255.
+fn parse_stop_seq(e: &Json) -> Result<Vec<u8>, String> {
+    match e {
+        Json::Str(s) => Ok(s.clone().into_bytes()),
+        Json::Arr(ids) => {
+            let mut seq = Vec::with_capacity(ids.len());
+            for id in ids {
+                match id.as_f64() {
+                    Some(v) if v.fract() == 0.0 && (0.0..=255.0).contains(&v) => {
+                        seq.push(v as u8)
+                    }
+                    _ => {
+                        return Err(format!(
+                            "has token id {id} out of range (integers 0-255)"
+                        ))
+                    }
+                }
+            }
+            Ok(seq)
+        }
+        other => Err(format!(
+            "must be a string or an array of token ids, got {other}"
+        )),
     }
 }
 
-fn handle_conn(batcher: Arc<DynamicBatcher>, stream: TcpStream, timeout: Option<Duration>) {
+fn response_json(resp: &GenResponse) -> String {
+    Json::obj(vec![
+        (
+            "tokens",
+            Json::arr(resp.tokens.iter().map(|&t| Json::num(t as f64))),
+        ),
+        ("finish_reason", Json::str(resp.finish_reason.label())),
+        ("latency_ms", Json::num(resp.latency().as_secs_f64() * 1e3)),
+        ("queue_wait_ms", Json::num(resp.queue_wait.as_secs_f64() * 1e3)),
+        ("prefill_ms", Json::num(resp.prefill_time.as_secs_f64() * 1e3)),
+        ("ttft_ms", Json::num(resp.ttft().as_secs_f64() * 1e3)),
+        ("decode_ms", Json::num(resp.decode_time.as_secs_f64() * 1e3)),
+        ("batch_size", Json::num(resp.batch_size as f64)),
+        ("kv_pages_used", Json::num(resp.kv_pages_used as f64)),
+        ("preemptions", Json::num(resp.preemptions as f64)),
+        ("timed_out", Json::Bool(resp.timed_out)),
+        ("worker_restarts", Json::num(resp.worker_restarts as f64)),
+        ("pipeline_rebuilds", Json::num(resp.pipeline_rebuilds as f64)),
+    ])
+    .to_string()
+}
+
+
+/// Serve one `"stream": true` request: one `{"token", "index"}` event line
+/// per sampled token, then the final response line. Returns `false` when the
+/// socket died — the caller should drop the connection; dropping the
+/// [`super::batcher::StreamHandle`] here is what cancels the generation
+/// server-side (slot retired, KV pages freed at the next sampled token).
+fn handle_stream(
+    batcher: &DynamicBatcher,
+    writer: &mut impl Write,
+    req: GenRequest,
+) -> bool {
+    let handle = match batcher.generate_stream(req) {
+        Ok(h) => h,
+        Err(e) => {
+            let line = err_json(&e.to_string());
+            return writeln!(writer, "{line}").is_ok();
+        }
+    };
+    let mut index = 0usize;
+    while let Ok(token) = handle.events.recv() {
+        let event = Json::obj(vec![
+            ("token", Json::num(token as f64)),
+            ("index", Json::num(index as f64)),
+        ]);
+        index += 1;
+        if writeln!(writer, "{event}").is_err() || writer.flush().is_err() {
+            // Client gone: dropping `handle` closes the events receiver and
+            // the scheduler cancels the generation at its next token.
+            return false;
+        }
+    }
+    // Events channel closed: the scheduler is done with this request and
+    // the final reply is (or is about to be) in flight.
+    let line = match handle.wait() {
+        Ok(resp) => response_json(&resp),
+        Err(e) => err_json(&e.to_string()),
+    };
+    writeln!(writer, "{line}").is_ok()
+}
+
+fn handle_conn(
+    batcher: Arc<DynamicBatcher>,
+    defaults: ReqDefaults,
+    stream: TcpStream,
+    timeout: Option<Duration>,
+) {
     let peer = stream.peer_addr().ok();
     // A half-open or silent client must not pin this thread: a timed-out
     // blocking read surfaces as an Err line below and the thread exits.
@@ -127,11 +284,28 @@ fn handle_conn(batcher: Arc<DynamicBatcher>, stream: TcpStream, timeout: Option<
         if line.trim().is_empty() {
             continue;
         }
-        let resp = handle_line(&batcher, &line);
-        if writer.write_all(resp.as_bytes()).is_err()
-            || writer.write_all(b"\n").is_err()
-        {
-            break;
+        // A streaming request takes over the connection until its final
+        // response line; everything else stays strict request/response.
+        match parse_request(&line, &defaults) {
+            Ok((req, true)) => {
+                if !handle_stream(&batcher, &mut writer, req) {
+                    break;
+                }
+            }
+            Ok((req, false)) => {
+                let resp = match batcher.generate(req) {
+                    Ok(r) => response_json(&r),
+                    Err(e) => err_json(&e.to_string()),
+                };
+                if writeln!(writer, "{resp}").is_err() {
+                    break;
+                }
+            }
+            Err(e) => {
+                if writeln!(writer, "{}", err_json(&e)).is_err() {
+                    break;
+                }
+            }
         }
     }
     let _ = peer; // quiet unused in non-logging builds
@@ -149,13 +323,18 @@ pub fn serve<M: ModelExec + Send + Sync + 'static>(
     let listener = TcpListener::bind(&cfg.addr)
         .with_context(|| format!("bind {}", cfg.addr))?;
     let batcher = Arc::new(DynamicBatcher::spawn(model, cfg.batcher));
+    let defaults = ReqDefaults {
+        sampling: cfg.batcher.default_sampling,
+        stop: cfg.default_stop.clone(),
+    };
     println!("tsgo serving on {}", listener.local_addr()?);
     let mut served = 0usize;
     for stream in listener.incoming() {
         let stream = stream?;
         let b = batcher.clone();
+        let d = defaults.clone();
         let t = cfg.conn_timeout;
-        std::thread::spawn(move || handle_conn(b, stream, t));
+        std::thread::spawn(move || handle_conn(b, d, stream, t));
         served += 1;
         if let Some(max) = cfg.max_connections {
             if served >= max {
@@ -174,6 +353,10 @@ pub fn serve_in_background<M: ModelExec + Send + Sync + 'static>(
     let listener = TcpListener::bind(&cfg.addr)?;
     let addr = listener.local_addr()?;
     let batcher = Arc::new(DynamicBatcher::spawn(model, cfg.batcher));
+    let defaults = ReqDefaults {
+        sampling: cfg.batcher.default_sampling,
+        stop: cfg.default_stop.clone(),
+    };
     let max = cfg.max_connections;
     let conn_timeout = cfg.conn_timeout;
     let handle = std::thread::spawn(move || {
@@ -181,7 +364,8 @@ pub fn serve_in_background<M: ModelExec + Send + Sync + 'static>(
         for stream in listener.incoming() {
             let Ok(stream) = stream else { break };
             let b = batcher.clone();
-            std::thread::spawn(move || handle_conn(b, stream, conn_timeout));
+            let d = defaults.clone();
+            std::thread::spawn(move || handle_conn(b, d, stream, conn_timeout));
             served += 1;
             if let Some(m) = max {
                 if served >= m {

@@ -18,7 +18,7 @@
 //!   kernel and handles the unaligned head/tail of every striped span.
 //! * **lane-striped** — 2/3/4/8-bit spans are split into head (sequential)
 //!   + 8-wide value blocks + tail (sequential). Each block is one bit
-//!   *chunk* ([`chunk8`]) fanned out to 8 f32 lanes, multiplied against 8
+//!   *chunk* (`chunk8`) fanned out to 8 f32 lanes, multiplied against 8
 //!   activations, and accumulated into 8 independent partial sums that are
 //!   reduced by a fixed pairwise tree ([`scalar::hsum8_tree`]).
 //!

@@ -93,16 +93,25 @@ impl Rng {
     }
 
     /// Sample an index from unnormalized non-negative weights.
+    ///
+    /// The floating-point leftover fallback lands on the last *positive*
+    /// weight, never on a zero-weight tail entry — callers like top-k/top-p
+    /// sampling mask out candidates by zeroing their weight and rely on masked
+    /// indices being unreachable.
     pub fn weighted(&mut self, weights: &[f64]) -> usize {
         let total: f64 = weights.iter().sum();
         let mut x = self.f64() * total;
+        let mut last_positive = weights.len() - 1;
         for (i, w) in weights.iter().enumerate() {
+            if *w > 0.0 {
+                last_positive = i;
+            }
             x -= w;
-            if x <= 0.0 {
+            if x <= 0.0 && *w > 0.0 {
                 return i;
             }
         }
-        weights.len() - 1
+        last_positive
     }
 
     /// Fisher–Yates shuffle.
@@ -172,6 +181,17 @@ mod tests {
         }
         assert!(counts[2] > counts[0] * 4);
         assert!(counts[2] > counts[1] * 4);
+    }
+
+    #[test]
+    fn weighted_never_picks_zero_weight() {
+        let mut r = Rng::new(13);
+        // Zero-weight head, tail, and interior entries must be unreachable
+        // even via the floating-point leftover fallback.
+        for _ in 0..10_000 {
+            let i = r.weighted(&[0.0, 1.0, 0.0, 2.0, 0.0, 0.0]);
+            assert!(i == 1 || i == 3, "picked masked index {i}");
+        }
     }
 
     #[test]

@@ -154,7 +154,7 @@ fn served_tokens_identical_across_chunks_and_shards() {
     // other cell must emit the same tokens.
     let m = Arc::new(mixed_packed4());
     let kv8 = KvSpec::PackedGroupwise { bits: 8, group: 64 };
-    let req = GenRequest { prompt: prompt(), max_new: 10 };
+    let req = GenRequest { prompt: prompt(), max_new: 10, ..Default::default() };
     let mut want: Option<Vec<u8>> = None;
     for shards in [1usize, 2] {
         for chunk in CHUNKS {
@@ -182,7 +182,7 @@ fn served_tokens_identical_with_pooled_kv() {
     // appends cross page boundaries mid-span, and pooled admission charges
     // whole spans — neither may change a byte of the generation.
     let m = Arc::new(dense4(22));
-    let req = GenRequest { prompt: prompt(), max_new: 10 };
+    let req = GenRequest { prompt: prompt(), max_new: 10, ..Default::default() };
     let pc = PoolCfg { budget_bytes: 4 << 20, page_tokens: 8 };
     let baseline = {
         let b = DynamicBatcher::spawn(
@@ -215,7 +215,7 @@ fn prefill_time_is_reported_and_split_from_decode() {
             ..Default::default()
         },
     );
-    let r = b.generate(GenRequest { prompt: prompt(), max_new: 4 }).unwrap();
+    let r = b.generate(GenRequest { prompt: prompt(), max_new: 4, ..Default::default() }).unwrap();
     assert_eq!(r.tokens.len(), 4);
     assert!(r.prefill_time > Duration::ZERO, "40-token prefill took zero time?");
     assert_eq!(r.ttft(), r.queue_wait + r.prefill_time);

@@ -89,7 +89,9 @@ fn worker_panic_is_contained_to_one_sequence() {
         .cloned()
         .map(|prompt| {
             let b = b.clone();
-            std::thread::spawn(move || b.generate(GenRequest { prompt, max_new: 12 }))
+            std::thread::spawn(move || {
+                b.generate(GenRequest { prompt, max_new: 12, ..Default::default() })
+            })
         })
         .collect();
     let results: Vec<Result<GenResponse, _>> =
@@ -139,12 +141,12 @@ fn shard_death_rebuilds_the_chain() {
     };
     let b = DynamicBatcher::spawn(m.clone(), cfg);
     let err = b
-        .generate(GenRequest { prompt: prompt.clone(), max_new: 6 })
+        .generate(GenRequest { prompt: prompt.clone(), max_new: 6, ..Default::default() })
         .unwrap_err()
         .to_string();
     assert!(err.contains("shard pipeline"), "{err}");
     // The fault fired exactly once; the rebuilt chain serves normally.
-    let r = b.generate(GenRequest { prompt, max_new: 6 }).unwrap();
+    let r = b.generate(GenRequest { prompt, max_new: 6, ..Default::default() }).unwrap();
     assert_eq!(r.tokens, want, "rebuilt pipeline's tokens diverged");
     assert!(r.pipeline_rebuilds >= 1, "rebuild was not counted");
 }
@@ -257,15 +259,17 @@ fn faults_compose_with_preemption() {
     let (rb_tx, rb_rx) = channel();
     let now = Instant::now();
     tx.send(Pending {
-        req: GenRequest { prompt: prompt_a, max_new: 60 },
+        req: GenRequest { prompt: prompt_a, max_new: 60, ..Default::default() },
         enqueued: now,
         reply: ra_tx,
+        events: None,
     })
     .unwrap();
     tx.send(Pending {
-        req: GenRequest { prompt: prompt_b, max_new: 24 },
+        req: GenRequest { prompt: prompt_b, max_new: 24, ..Default::default() },
         enqueued: now,
         reply: rb_tx,
+        events: None,
     })
     .unwrap();
     let cfg = BatcherConfig {
@@ -329,7 +333,7 @@ fn request_deadline_returns_partial_tokens() {
     let b = DynamicBatcher::spawn(m, cfg);
     let t0 = Instant::now();
     let r = b
-        .generate(GenRequest { prompt: vec![2, 4, 6, 8], max_new: 500_000 })
+        .generate(GenRequest { prompt: vec![2, 4, 6, 8], max_new: 500_000, ..Default::default() })
         .unwrap();
     assert!(r.timed_out, "an unfinishable request must report timed_out");
     assert!(
@@ -360,8 +364,12 @@ fn request_deadline_covers_queue_wait() {
         .map(|i| {
             let b = b.clone();
             std::thread::spawn(move || {
-                b.generate(GenRequest { prompt: vec![i + 1, i + 2], max_new: 500_000 })
-                    .unwrap()
+                b.generate(GenRequest {
+                    prompt: vec![i + 1, i + 2],
+                    max_new: 500_000,
+                    ..Default::default()
+                })
+                .unwrap()
             })
         })
         .collect();
@@ -400,7 +408,9 @@ fn step_timeout_bounds_a_wedged_worker() {
         .cloned()
         .map(|prompt| {
             let b = b.clone();
-            std::thread::spawn(move || b.generate(GenRequest { prompt, max_new: 8 }))
+            std::thread::spawn(move || {
+                b.generate(GenRequest { prompt, max_new: 8, ..Default::default() })
+            })
         })
         .collect();
     let results: Vec<Result<GenResponse, _>> =

@@ -160,8 +160,8 @@ fn exhaustion_preemption_readmission_roundtrip() {
     // both to completion.
     let pc = pool_of_pages(20, 4, kv, &cfg);
     let reqs = [
-        GenRequest { prompt: vec![10, 20, 30, 40], max_new: 12 },
-        GenRequest { prompt: vec![200, 150, 100, 50], max_new: 12 },
+        GenRequest { prompt: vec![10, 20, 30, 40], max_new: 12, ..Default::default() },
+        GenRequest { prompt: vec![200, 150, 100, 50], max_new: 12, ..Default::default() },
     ];
     let want: Vec<Vec<u8>> = reqs
         .iter()
@@ -224,19 +224,21 @@ fn oversized_prompt_rejected_and_lone_overlong_chain_errors() {
     );
     // a prompt whose prefill alone exceeds the pool is rejected up front
     let err = b
-        .generate(GenRequest { prompt: vec![9; 32], max_new: 2 })
+        .generate(GenRequest { prompt: vec![9; 32], max_new: 2, ..Default::default() })
         .unwrap_err()
         .to_string();
     assert!(err.contains("kv pool too small"), "{err}");
     // a chain that outgrows the pool mid-decode, running alone, errors out
     // (preempting it would just replay into the same wall)
     let err = b
-        .generate(GenRequest { prompt: vec![1, 2, 3, 4], max_new: 20 })
+        .generate(GenRequest { prompt: vec![1, 2, 3, 4], max_new: 20, ..Default::default() })
         .unwrap_err()
         .to_string();
     assert!(err.contains("kv pool exhausted"), "{err}");
     // the pool recovered: a fitting request still completes
-    let r = b.generate(GenRequest { prompt: vec![5, 6], max_new: 4 }).unwrap();
+    let r = b
+        .generate(GenRequest { prompt: vec![5, 6], max_new: 4, ..Default::default() })
+        .unwrap();
     assert_eq!(r.tokens.len(), 4);
 }
 
@@ -302,6 +304,7 @@ fn tiny_pool_stress_stays_correct() {
         .map(|i| GenRequest {
             prompt: (0..(2 + i as usize % 4)).map(|j| i * 17 + j as u8).collect(),
             max_new: 3 + (i as usize * 5) % 12,
+            ..Default::default()
         })
         .collect();
     let want: Vec<Vec<u8>> = reqs
@@ -330,7 +333,7 @@ fn sharded_pooled_serve_matches_unsharded_unpooled() {
     // relative to the plain unsharded, unpooled batcher.
     let em = Arc::new(mixed_packed4());
     let kv = KvSpec::PackedGroupwise { bits: 8, group: 64 };
-    let req = GenRequest { prompt: vec![65, 66, 67, 68], max_new: 10 };
+    let req = GenRequest { prompt: vec![65, 66, 67, 68], max_new: 10, ..Default::default() };
     let plain = DynamicBatcher::spawn(em.clone(), BatcherConfig { kv, ..Default::default() });
     let a = plain.generate(req.clone()).unwrap();
     let pooled = DynamicBatcher::spawn(

@@ -1,0 +1,282 @@
+//! Decoding stack: the PR-9 acceptance battery.
+//!
+//! The sampler chain's spine is *replay invariance*: a seeded request is a
+//! pure function of (model, prompt, params), because the logits it samples
+//! from are bit-identical across kernel tables, prefill chunk sizes, and
+//! shard counts, and the chain consumes exactly one RNG draw per emitted
+//! token. This file pins that, plus the greedy default's bit-identity to
+//! the historical argmax path, stop-sequence termination, the streaming
+//! event contract over real TCP, and cancellation (a dropped stream must
+//! retire its slot and free its KV-pool pages).
+
+use std::sync::{Arc, Mutex, MutexGuard, OnceLock};
+use tsgo::calib::{calibration_batches, Corpus, CorpusKind};
+use tsgo::kvpool::{KvPool, PoolCfg};
+use tsgo::model::{DecodeState, ExecModel, KvSpec, ModelConfig, ModelExec, ModelWeights};
+use tsgo::pipeline::{quantize_model, PipelineConfig};
+use tsgo::quant::QuantPlan;
+use tsgo::serve::{
+    argmax_token, request_generation_streaming, request_generation_with, server::serve_in_background,
+    BatcherConfig, ClientOptions, DynamicBatcher, FinishReason, GenRequest, SamplingParams,
+    ServerConfig, StreamHandle,
+};
+use tsgo::tensor::kernels::{set_forced, ForcedKernel};
+use tsgo::util::rng::Rng;
+
+/// Serializes tests that flip the process-wide forced-kernel state or make
+/// token-exact cross-run comparisons (same pattern as
+/// `tests/chunked_prefill.rs`): a concurrent flip mid-decode would make a
+/// real scalar/SIMD divergence nondeterministic.
+fn force_lock() -> MutexGuard<'static, ()> {
+    static L: OnceLock<Mutex<()>> = OnceLock::new();
+    L.get_or_init(|| Mutex::new(()))
+        .lock()
+        .unwrap_or_else(|e| e.into_inner())
+}
+
+/// A 4-layer tiny-width config so 2-shard plans are a real split.
+fn cfg4() -> ModelConfig {
+    ModelConfig { vocab: 256, d_model: 64, n_layers: 4, n_heads: 2, ffn: 128, seq_len: 96 }
+}
+
+fn dense4(seed: u64) -> ModelWeights {
+    let mut rng = Rng::new(seed);
+    ModelWeights::init(cfg4(), &mut rng)
+}
+
+/// Mixed-precision packed checkpoint (2/3/4/8-bit linears in one model):
+/// every specialized dequant width under the sampler at once.
+fn mixed_packed4() -> ExecModel {
+    let w = dense4(79);
+    let corpus = Corpus::generate(CorpusKind::SynthWiki, 30_000, 1);
+    let calib = calibration_batches(&corpus.bytes, 4, 32, 2, 3);
+    let plan = QuantPlan::parse_with_defaults(
+        "rtn:bits=2,group=32;wv=bits3;wo=bits4;w2=bits8",
+        4,
+        32,
+    )
+    .unwrap();
+    let (qm, _) = quantize_model(&w, &calib, &PipelineConfig::from_plan(plan)).unwrap();
+    ExecModel::from_quantized(&qm)
+}
+
+fn prompt() -> Vec<u8> {
+    (0..24u32).map(|i| (i * 37 % 251) as u8).collect()
+}
+
+/// A chain that exercises every transform: repetition penalty, temperature,
+/// top-k, top-p, then the seeded multinomial selector.
+fn sampled(seed: u64) -> SamplingParams {
+    SamplingParams {
+        temperature: 0.9,
+        top_k: 20,
+        top_p: 0.9,
+        repetition_penalty: 1.15,
+        seed,
+    }
+}
+
+/// Greedy reference decode through a plain [`DecodeState`] — the historical
+/// pre-sampler path the default request must reproduce byte for byte.
+fn greedy_direct<M: ModelExec>(m: &M, kv: KvSpec, prompt: &[u8], max_new: usize) -> Vec<u8> {
+    let mut st = DecodeState::with_kv(m, kv);
+    let mut logits = Vec::new();
+    for &t in prompt {
+        logits = st.step(t);
+    }
+    let mut out = Vec::new();
+    for _ in 0..max_new {
+        let next = argmax_token(&logits).unwrap();
+        out.push(next);
+        logits = st.step(next);
+    }
+    out
+}
+
+#[test]
+fn seeded_sampling_replays_identically_across_the_whole_matrix() {
+    let _guard = force_lock();
+    // The tentpole acceptance bar: one seeded request, one token stream —
+    // across repeated runs on the same batcher, every `--prefill-chunk`
+    // value, shard counts 1 and 2, and the dispatched vs forced-scalar
+    // kernel tables. Any divergence means a logit bit changed or an RNG
+    // draw was consumed at the wrong step.
+    let m = Arc::new(mixed_packed4());
+    let req = GenRequest {
+        prompt: prompt(),
+        max_new: 12,
+        params: sampled(42),
+        ..Default::default()
+    };
+    let mut want: Option<Vec<u8>> = None;
+    for force in [ForcedKernel::Scalar, ForcedKernel::Best] {
+        set_forced(force);
+        for shards in [1usize, 2] {
+            for chunk in [1usize, 3, 64] {
+                let b = DynamicBatcher::spawn(
+                    m.clone(),
+                    BatcherConfig { shards, prefill_chunk: chunk, ..Default::default() },
+                );
+                let r1 = b.generate(req.clone()).unwrap();
+                let r2 = b.generate(req.clone()).unwrap();
+                assert_eq!(r1.tokens.len(), 12);
+                assert_eq!(r1.finish_reason, FinishReason::Length);
+                assert_eq!(
+                    r1.tokens, r2.tokens,
+                    "{force:?} shards={shards} chunk={chunk}: same seed, two runs diverged"
+                );
+                match &want {
+                    None => want = Some(r1.tokens),
+                    Some(w) => assert_eq!(
+                        &r1.tokens, w,
+                        "{force:?} shards={shards} chunk={chunk} diverged from the baseline cell"
+                    ),
+                }
+            }
+        }
+    }
+    set_forced(ForcedKernel::Auto);
+}
+
+#[test]
+fn greedy_default_is_bit_identical_to_direct_argmax_decode() {
+    let _guard = force_lock();
+    // A default-params request through the whole serving stack must emit
+    // exactly the tokens of a bare DecodeState + argmax loop: the sampler
+    // chain's greedy path may not touch a logit.
+    let m = Arc::new(mixed_packed4());
+    let want = greedy_direct(&*m, KvSpec::DenseF32, &prompt(), 10);
+    let b = DynamicBatcher::spawn(m.clone(), BatcherConfig::default());
+    let r = b
+        .generate(GenRequest { prompt: prompt(), max_new: 10, ..Default::default() })
+        .unwrap();
+    assert_eq!(r.tokens, want, "greedy default diverged from the pre-sampler argmax path");
+    assert_eq!(r.finish_reason, FinishReason::Length);
+}
+
+#[test]
+fn stop_sequence_ends_generation_with_finish_reason_stop() {
+    let _guard = force_lock();
+    // Learn the greedy stream, then replay with a stop sequence cut from
+    // its middle: generation must end exactly where the stop run first
+    // completes, with the matched run still in the output (so streamed
+    // events always concatenate to the final tokens).
+    let m = Arc::new(dense4(23));
+    let b = DynamicBatcher::spawn(m.clone(), BatcherConfig::default());
+    let full = b
+        .generate(GenRequest { prompt: prompt(), max_new: 12, ..Default::default() })
+        .unwrap()
+        .tokens;
+    assert_eq!(full.len(), 12);
+    let stop = full[3..6].to_vec();
+    let cut = (1..=full.len())
+        .find(|&k| full[..k].ends_with(&stop))
+        .expect("stop cut from the stream must occur in it");
+    let r = b
+        .generate(GenRequest {
+            prompt: prompt(),
+            max_new: 12,
+            stop: vec![stop.clone()],
+            ..Default::default()
+        })
+        .unwrap();
+    assert_eq!(r.finish_reason, FinishReason::Stop);
+    assert_eq!(r.tokens, &full[..cut], "generation must end where the stop run completes");
+    assert!(r.tokens.ends_with(&stop), "the matched stop run stays in the output");
+
+    // A single-token stop fires on the very first emission.
+    let r1 = b
+        .generate(GenRequest {
+            prompt: prompt(),
+            max_new: 12,
+            stop: vec![vec![full[0]]],
+            ..Default::default()
+        })
+        .unwrap();
+    assert_eq!(r1.finish_reason, FinishReason::Stop);
+    assert_eq!(r1.tokens, &full[..1]);
+}
+
+#[test]
+fn streaming_events_concatenate_to_the_final_response() {
+    let _guard = force_lock();
+    // Real TCP: a `"stream": true` request yields one `{"token","index"}`
+    // event line per sampled token, in order, and the terminal line's
+    // `tokens` equals the concatenated events. A blocking request with the
+    // same seed gets the same stream — replay invariance over the wire.
+    let cfg = ServerConfig {
+        addr: "127.0.0.1:0".into(),
+        max_connections: Some(2),
+        ..Default::default()
+    };
+    let (addr, handle) = serve_in_background(Arc::new(dense4(24)), cfg).unwrap();
+    let opts = ClientOptions { params: Some(sampled(7)), stop: Vec::new() };
+    let mut events: Vec<u8> = Vec::new();
+    let resp = request_generation_streaming(&addr.to_string(), &[65, 66, 67], 12, &opts, |t, i| {
+        assert_eq!(i, events.len(), "event indices must be sequential from 0");
+        events.push(t);
+    })
+    .unwrap();
+    assert_eq!(resp.tokens.len(), 12);
+    assert_eq!(resp.finish_reason, "length");
+    assert_eq!(events, resp.tokens, "streamed events must concatenate to the final tokens");
+    let blocking = request_generation_with(&addr.to_string(), &[65, 66, 67], 12, &opts).unwrap();
+    assert_eq!(blocking.tokens, resp.tokens, "same seed, streaming vs blocking diverged");
+    handle.join().unwrap();
+}
+
+#[test]
+fn dropped_stream_cancels_the_request_and_frees_its_pool_pages() {
+    let _guard = force_lock();
+    // A pool sized for one full-length sequence: request A streams, we
+    // drop its event receiver mid-decode, and the scheduler must retire
+    // the slot *without* replying (cancellation, not completion) — then a
+    // second full-length request fits, proving A's pages went back to the
+    // free list.
+    let kv = KvSpec::DenseF32;
+    let cfg = cfg4();
+    let page_tokens = 8usize;
+    // One 3-prompt + 60-token sequence needs ceil(63/8) = 8 pages; 10
+    // pages fit one such sequence but never two.
+    let probe = KvPool::new(
+        PoolCfg { budget_bytes: 1 << 30, page_tokens },
+        kv,
+        &cfg,
+    );
+    let pc = PoolCfg { budget_bytes: 10 * probe.page_bytes(), page_tokens };
+    let m = Arc::new(dense4(25));
+    let b = DynamicBatcher::spawn(
+        m.clone(),
+        BatcherConfig { pool: Some(pc), ..Default::default() },
+    );
+    let small_prompt = vec![5u8, 6, 7];
+    let a = b
+        .generate_stream(GenRequest {
+            prompt: small_prompt.clone(),
+            max_new: 60,
+            ..Default::default()
+        })
+        .unwrap();
+    // First sampled token: A is admitted, mid-decode, holding pages.
+    let first = a.events.recv().expect("first streamed token");
+    let StreamHandle { events, reply } = a;
+    drop(events);
+    // The scheduler hits the closed event channel at A's next token and
+    // cancels: slot retired, pages freed, and — the observable contract —
+    // the reply channel closes with no response ever sent.
+    assert!(
+        reply.recv().is_err(),
+        "a cancelled request must not produce a response"
+    );
+    let r = b
+        .generate(GenRequest {
+            prompt: small_prompt.clone(),
+            max_new: 60,
+            ..Default::default()
+        })
+        .unwrap();
+    assert_eq!(r.tokens.len(), 60, "the freed pool must fit a second full sequence");
+    assert_eq!(r.tokens[0], first, "greedy decode is deterministic across the cancel");
+    assert_eq!(r.finish_reason, FinishReason::Length);
+    assert_eq!(r.preemptions, 0, "a one-sequence pool with A gone needs no preemption");
+}

@@ -217,7 +217,7 @@ fn late_short_request_completes_before_long_generation() {
         let (b, tx) = (b.clone(), done_tx.clone());
         std::thread::spawn(move || {
             let r = b
-                .generate(GenRequest { prompt: vec![5, 6, 7], max_new: 4000 })
+                .generate(GenRequest { prompt: vec![5, 6, 7], max_new: 4000, ..Default::default() })
                 .unwrap();
             tx.send(("long", Instant::now())).unwrap();
             r
@@ -228,7 +228,9 @@ fn late_short_request_completes_before_long_generation() {
     let short = {
         let (b, tx) = (b.clone(), done_tx.clone());
         std::thread::spawn(move || {
-            let r = b.generate(GenRequest { prompt: vec![9, 9], max_new: 2 }).unwrap();
+            let r = b
+                .generate(GenRequest { prompt: vec![9, 9], max_new: 2, ..Default::default() })
+                .unwrap();
             tx.send(("short", Instant::now())).unwrap();
             r
         })
@@ -265,7 +267,7 @@ fn late_short_request_completes_before_long_generation() {
 fn sharded_batcher_tokens_match_unsharded() {
     let _guard = force_lock();
     let m = Arc::new(mixed_packed4());
-    let req = GenRequest { prompt: vec![65, 66, 67, 68], max_new: 12 };
+    let req = GenRequest { prompt: vec![65, 66, 67, 68], max_new: 12, ..Default::default() };
     let unsharded = DynamicBatcher::spawn(m.clone(), BatcherConfig::default());
     let a = unsharded.generate(req.clone()).unwrap();
     for shards in [2usize, 3] {
@@ -329,7 +331,9 @@ fn dropping_a_sharded_batcher_joins_all_threads() {
             m.clone(),
             BatcherConfig { shards: 3, ..Default::default() },
         );
-        let r = b.generate(GenRequest { prompt: vec![1, 2, 3], max_new: 3 }).unwrap();
+        let r = b
+            .generate(GenRequest { prompt: vec![1, 2, 3], max_new: 3, ..Default::default() })
+            .unwrap();
         assert_eq!(r.tokens.len(), 3);
         drop(b);
     }
