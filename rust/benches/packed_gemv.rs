@@ -18,7 +18,11 @@
 //!   that records the preemption rate under deliberate memory pressure;
 //! * fault-plane pricing (PR 8): the packed decode through the scheduler
 //!   step surface with the fault plane unarmed vs armed-but-idle — the
-//!   pair of rows behind the "zero-cost when unarmed" claim.
+//!   pair of rows behind the "zero-cost when unarmed" claim;
+//! * telemetry-plane pricing: the same scheduler-surface decode with the
+//!   full per-step registry recording (`tsgo::obs`) the serving scheduler
+//!   performs — counters, histogram, gauge, trace ring — priced against
+//!   the fault-unarmed row (the "relaxed atomics are within noise" claim).
 //!
 //! Besides the human-readable tables, the run emits a machine-readable
 //! baseline to `BENCH_packed_gemv.json` (override with `TSGO_BENCH_JSON`)
@@ -32,6 +36,7 @@ use std::collections::BTreeMap;
 use std::sync::Arc;
 use tsgo::kvpool::{KvPool, PoolCfg};
 use tsgo::model::{DecodeState, ExecModel, KvSpec, ModelWeights, Preset};
+use tsgo::obs::{self, StepEvent, SOURCE_SCHED};
 use tsgo::quant::rtn::rtn_quantize;
 use tsgo::quant::scale::{compute_group_scales, QuantSpec, ScaleMetric};
 use tsgo::quant::QuantizedLinear;
@@ -327,6 +332,68 @@ fn main() {
         &mut || run_sched_decode(&mut sched_be),
     );
     fault::disarm();
+    // Telemetry-plane pricing (obs): the identical scheduler-surface decode,
+    // plus — per step — exactly the registry writes `scheduler_loop`
+    // performs: step counter, span-split token counters, a latency-histogram
+    // observation, a batch-size gauge store, and a trace-ring record. The
+    // delta against "fault unarmed" above is the lock-free claim for
+    // `tsgo::obs`: a handful of relaxed atomics per step, within noise.
+    let run_sched_decode_metrics = |be: &mut LocalBackend<ExecModel>| {
+        let reg = obs::registry();
+        let slot = match be.admit(1) {
+            AdmitVerdict::Slot(s) => s,
+            _ => unreachable!("the unpooled backend always admits"),
+        };
+        let mut logits = {
+            let t0 = std::time::Instant::now();
+            let l = be.step(&[StepJob::single(slot, 0, 65)]).pop().unwrap().unwrap();
+            let dur = t0.elapsed();
+            reg.steps.inc();
+            reg.decode_tokens.add(1);
+            reg.step_ms.observe(dur);
+            reg.running_sequences.set(1);
+            reg.trace.record(&StepEvent {
+                seq: 0,
+                source: SOURCE_SCHED,
+                batch: 1,
+                prefill_tokens: 0,
+                decode_tokens: 1,
+                dur_us: dur.as_micros() as u64,
+                preempted: 0,
+                restarts: 0,
+            });
+            l
+        };
+        for pos in 1..decode_tokens {
+            let next = tsgo::serve::argmax_token(&logits).unwrap();
+            let t0 = std::time::Instant::now();
+            logits = be.step(&[StepJob::single(slot, pos, next)]).pop().unwrap().unwrap();
+            let dur = t0.elapsed();
+            reg.steps.inc();
+            reg.decode_tokens.add(1);
+            reg.step_ms.observe(dur);
+            reg.running_sequences.set(1);
+            reg.trace.record(&StepEvent {
+                seq: 0,
+                source: SOURCE_SCHED,
+                batch: 1,
+                prefill_tokens: 0,
+                decode_tokens: 1,
+                dur_us: dur.as_micros() as u64,
+                preempted: 0,
+                restarts: 0,
+            });
+        }
+        be.retire(slot);
+        std::hint::black_box(&logits);
+    };
+    let m_decode_metrics = bench_units(
+        &format!("decode {decode_tokens} tok · packed INT2 · metrics recorded (tiny)"),
+        1,
+        iters.min(10),
+        Some(decode_tokens as f64),
+        &mut || run_sched_decode_metrics(&mut sched_be),
+    );
     // Quantized KV cache on top of packed weights: the second packed data
     // plane. Same decode loop, group-wise int8/int4 K/V with fused attend.
     let kv8 = KvSpec::PackedGroupwise { bits: 8, group: 64 };
@@ -507,6 +574,7 @@ fn main() {
     ms.push(m_decode_sampled.clone());
     ms.push(m_decode_fault_unarmed.clone());
     ms.push(m_decode_fault_armed.clone());
+    ms.push(m_decode_metrics.clone());
     ms.push(m_decode_kv8.clone());
     ms.push(m_decode_kv4.clone());
     ms.push(m_decode_paged.clone());
@@ -604,6 +672,10 @@ fn main() {
                     (
                         "packed_int2_fault_armed_tokens_per_s",
                         Json::num(m_decode_fault_armed.throughput().unwrap_or(0.0)),
+                    ),
+                    (
+                        "packed_int2_metrics_tokens_per_s",
+                        Json::num(m_decode_metrics.throughput().unwrap_or(0.0)),
                     ),
                     (
                         "packed_int2_kv8_tokens_per_s",

@@ -56,6 +56,7 @@ fn rows(j: &Json) -> Vec<(String, f64)> {
         "packed_int2_sampled_tokens_per_s",
         "packed_int2_fault_unarmed_tokens_per_s",
         "packed_int2_fault_armed_tokens_per_s",
+        "packed_int2_metrics_tokens_per_s",
         "packed_int2_kv8_tokens_per_s",
         "packed_int2_kv4_tokens_per_s",
         "packed_int2_paged_tokens_per_s",

@@ -178,11 +178,18 @@ impl KvPool {
             Some(p) => p,
             None => {
                 inner.minted += 1;
+                crate::obs::registry().kv_pages_minted.inc();
                 self.spec.blank()
             }
         };
         drop(inner);
         self.peak_used.fetch_max(used, Ordering::Relaxed);
+        // The process-wide occupancy gauge moves by *delta*: many pools can
+        // coexist (shard sub-pools, concurrent test servers) and deltas
+        // compose where absolute stores would clobber. The global peak
+        // ratchets off the global level, not this pool's local `used`.
+        let global_used = crate::obs::registry().kv_pages_used.add(1);
+        crate::obs::registry().kv_pages_peak.ratchet(global_used);
         Some(page)
     }
 
@@ -193,6 +200,8 @@ impl KvPool {
         debug_assert!(inner.used > 0, "kv pool release with no pages out");
         inner.used = inner.used.saturating_sub(1);
         inner.free.push(page);
+        drop(inner);
+        crate::obs::registry().kv_pages_used.sub(1);
     }
 }
 

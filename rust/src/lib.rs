@@ -8,8 +8,10 @@
 //!   paper's two-stage group-scale optimization ([`quant::stage1`],
 //!   [`quant::stage2`]), the layer-by-layer pipeline ([`pipeline`]),
 //!   evaluation ([`eval`]) and a batched generation server ([`serve`])
-//!   with an optional layer-sharded pipeline-parallel topology ([`shard`])
-//!   and a budget-bounded paged KV memory pool ([`kvpool`]).
+//!   with an optional layer-sharded pipeline-parallel topology ([`shard`]),
+//!   a budget-bounded paged KV memory pool ([`kvpool`]), and a lock-free
+//!   telemetry plane ([`obs`]) scraped via `--metrics-addr` or the
+//!   `{"stats": true}` control line.
 //! * **L2 (python/compile)** — the Llamette transformer forward/backward in
 //!   JAX, AOT-lowered once to HLO text artifacts.
 //! * **L1 (python/compile/kernels)** — Pallas kernels for the compute
@@ -25,6 +27,7 @@ pub mod calib;
 pub mod eval;
 pub mod kvpool;
 pub mod model;
+pub mod obs;
 pub mod pipeline;
 pub mod quant;
 pub mod runtime;

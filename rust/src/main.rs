@@ -7,6 +7,7 @@
 //! * `quantize`  — run the PTQ pipeline (GPTQ baseline or the paper's method)
 //! * `eval`      — perplexity + 0-shot suite for a checkpoint
 //! * `serve`     — batched generation server over a checkpoint
+//! * `stats`     — fetch + pretty-print a running server's telemetry snapshot
 //! * `kernels`   — the runtime-selected dequant kernel dispatch table
 //! * `warmup`    — pre-compile all HLO artifacts
 
@@ -48,6 +49,7 @@ fn run(argv: &[String]) -> Result<()> {
         "quantize" => cmd_quantize(rest),
         "eval" => cmd_eval(rest),
         "serve" => cmd_serve(rest),
+        "stats" => cmd_stats(rest),
         "kernels" => cmd_kernels(),
         "warmup" => cmd_warmup(),
         "help" | "--help" | "-h" => {
@@ -101,7 +103,13 @@ fn print_help() {
          \x20            multinomial with deterministic replay), --stop \"a,b\"\n\
          \x20            sets default stop strings; per-request JSON fields\n\
          \x20            override, incl. \"stream\": true for per-token events\n\
-         \x20            (see docs/SERVE_API.md)\n\
+         \x20            (see docs/SERVE_API.md);\n\
+         \x20            --metrics-addr HOST:PORT serves Prometheus text\n\
+         \x20            exposition of the telemetry plane on a dedicated\n\
+         \x20            listener (counters, gauges, latency histograms)\n\
+         \x20 stats      fetch + pretty-print a running server's telemetry\n\
+         \x20            snapshot (--addr 127.0.0.1:7433; the {{\"stats\": true}}\n\
+         \x20            control line on the serve protocol)\n\
          \x20 kernels    print the dequant kernel dispatch table (CPU features,\n\
          \x20            per-bit-width kernel selection, forcing state)\n\
          \x20 warmup     pre-compile all artifacts"
@@ -412,6 +420,7 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         OptSpec { name: "repetition-penalty", help: "default repetition penalty over prompt+output tokens (1.0 = off)", default: Some("1.0"), is_flag: false },
         OptSpec { name: "seed", help: "default sampling seed (per-request \"seed\" overrides; same seed replays token-identically)", default: Some("0"), is_flag: false },
         OptSpec { name: "stop", help: "default stop strings, comma-separated; generation ends when the decoded tail matches one (per-request \"stop\" overrides)", default: Some(""), is_flag: false },
+        OptSpec { name: "metrics-addr", help: "serve Prometheus text metrics on HOST:PORT via a dedicated listener thread (empty = off; the {\"stats\": true} control line works either way)", default: Some(""), is_flag: false },
     ];
     let a = parse(argv, "tsgo serve", "batched generation server", &specs)?;
     let kv = KvSpec::from_flags(
@@ -453,6 +462,18 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         .filter(|s| !s.is_empty())
         .map(|s| s.as_bytes().to_vec())
         .collect();
+    // Validate --metrics-addr at the door: a typo'd address should fail
+    // here with a clean message, not after the model is loaded and the
+    // worker threads are up.
+    let metrics_addr = match a.str("metrics-addr") {
+        s if s.is_empty() => None,
+        s => {
+            use std::net::ToSocketAddrs;
+            s.to_socket_addrs()
+                .with_context(|| format!("bad --metrics-addr '{s}' (expected HOST:PORT)"))?;
+            Some(s)
+        }
+    };
     let cfg = tsgo::serve::ServerConfig {
         addr: a.str("addr"),
         batcher: tsgo::serve::BatcherConfig {
@@ -469,6 +490,7 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         max_connections: None,
         conn_timeout,
         default_stop,
+        metrics_addr,
     };
     println!(
         "prefill: chunked, {prefill_chunk} tokens/step (--prefill-chunk; \
@@ -613,6 +635,68 @@ fn print_pool_banner(pc: &PoolCfg, kv: &KvSpec, cfg: &tsgo::model::ModelConfig) 
         probe.page_tokens(),
         probe.page_bytes(),
     );
+}
+
+/// `tsgo stats HOST:PORT`-style client for the telemetry plane: send the
+/// `{"stats": true}` control line, pretty-print the snapshot. Works against
+/// any serving mode (the registry is process-wide); the raw JSON is the
+/// same object a monitoring script would read.
+fn cmd_stats(argv: &[String]) -> Result<()> {
+    let specs = [
+        OptSpec { name: "addr", help: "running server's serve address", default: Some("127.0.0.1:7433"), is_flag: false },
+        OptSpec { name: "json", help: "print the raw snapshot JSON line instead of the table", default: None, is_flag: true },
+    ];
+    let a = parse(argv, "tsgo stats", "fetch a running server's telemetry snapshot", &specs)?;
+    let addr = a.str("addr");
+    let snap = tsgo::serve::request_stats(&addr)?;
+    if a.flag("json") {
+        println!("{snap}");
+        return Ok(());
+    }
+    println!("telemetry snapshot from {addr}");
+    for section in ["counters", "gauges"] {
+        let Some(obj) = snap.get(section).as_obj() else { continue };
+        println!("{section}:");
+        for (k, v) in obj {
+            println!("  {k:<24} {v}");
+        }
+    }
+    if let Some(hists) = snap.get("hist").as_obj() {
+        println!("latency histograms (ms):");
+        println!(
+            "  {:<24} {:>8} {:>9} {:>9} {:>9} {:>9}",
+            "name", "count", "mean", "p50", "p95", "p99"
+        );
+        for (k, h) in hists {
+            println!(
+                "  {k:<24} {:>8} {:>9.3} {:>9.3} {:>9.3} {:>9.3}",
+                h.get("count").as_usize().unwrap_or(0),
+                h.get("mean_ms").as_f64().unwrap_or(0.0),
+                h.get("p50_ms").as_f64().unwrap_or(0.0),
+                h.get("p95_ms").as_f64().unwrap_or(0.0),
+                h.get("p99_ms").as_f64().unwrap_or(0.0),
+            );
+        }
+    }
+    if let Some(trace) = snap.get("trace").as_arr() {
+        if !trace.is_empty() {
+            println!("recent steps (newest first):");
+        }
+        for ev in trace {
+            println!(
+                "  #{:<6} {:<8} batch {:<3} prefill {:<4} decode {:<3} {:>8} us  preempted {} restarts {}",
+                ev.get("seq").as_usize().unwrap_or(0),
+                ev.get("source").as_str().unwrap_or("?"),
+                ev.get("batch").as_usize().unwrap_or(0),
+                ev.get("prefill_tokens").as_usize().unwrap_or(0),
+                ev.get("decode_tokens").as_usize().unwrap_or(0),
+                ev.get("dur_us").as_usize().unwrap_or(0),
+                ev.get("preempted").as_usize().unwrap_or(0),
+                ev.get("restarts").as_usize().unwrap_or(0),
+            );
+        }
+    }
+    Ok(())
 }
 
 fn cmd_kernels() -> Result<()> {

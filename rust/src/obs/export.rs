@@ -1,0 +1,429 @@
+//! Readout for the registry: structured JSON snapshots (the
+//! `{"stats": true}` control line), Prometheus text exposition, and the
+//! dedicated scrape listener behind `tsgo serve --metrics-addr`.
+//!
+//! Everything here is read-path only — rendering loads the same relaxed
+//! atomics the hot paths write, allocates freely, and never blocks a
+//! writer. The exposition format is Prometheus text format 0.0.4
+//! (`# HELP` / `# TYPE` preambles, cumulative `_bucket{le="..."}` series
+//! per histogram), served over a minimal hand-rolled HTTP/1.0 responder so
+//! the crate stays dependency-free.
+
+use super::hist::{HistSnapshot, BUCKET_BOUNDS_US};
+use super::registry::{registry, Registry};
+use super::trace::SOURCE_SCHED;
+use crate::util::json::Json;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+
+/// How many trace events a snapshot includes.
+const SNAPSHOT_TRACE_EVENTS: usize = 16;
+
+/// Structured snapshot of the whole registry as a [`Json`] object with
+/// `"counters"`, `"gauges"`, `"hist"`, and `"trace"` sections. This is
+/// the entire `{"stats": true}` reply line and the input `tsgo stats`
+/// pretty-prints.
+pub fn snapshot_json() -> Json {
+    registry_snapshot_json(registry())
+}
+
+/// [`snapshot_json`] over an explicit registry (unit tests use locals).
+pub fn registry_snapshot_json(r: &Registry) -> Json {
+    let counters = Json::obj(vec![
+        ("steps", Json::num(r.steps.get() as f64)),
+        ("prefill_tokens", Json::num(r.prefill_tokens.get() as f64)),
+        ("decode_tokens", Json::num(r.decode_tokens.get() as f64)),
+        ("admit_slot", Json::num(r.admit_slot.get() as f64)),
+        ("admit_defer", Json::num(r.admit_defer.get() as f64)),
+        ("admit_reject", Json::num(r.admit_reject.get() as f64)),
+        ("preemptions", Json::num(r.preemptions.get() as f64)),
+        ("worker_restarts", Json::num(r.worker_restarts.get() as f64)),
+        (
+            "pipeline_rebuilds",
+            Json::num(r.pipeline_rebuilds.get() as f64),
+        ),
+        ("finish_length", Json::num(r.finish_length.get() as f64)),
+        ("finish_stop", Json::num(r.finish_stop.get() as f64)),
+        ("finish_timeout", Json::num(r.finish_timeout.get() as f64)),
+        ("finish_error", Json::num(r.finish_error.get() as f64)),
+        ("kv_pages_minted", Json::num(r.kv_pages_minted.get() as f64)),
+        (
+            "connections_total",
+            Json::num(r.connections_total.get() as f64),
+        ),
+        ("requests_ok", Json::num(r.requests_ok.get() as f64)),
+        ("requests_error", Json::num(r.requests_error.get() as f64)),
+        (
+            "overload_rejected",
+            Json::num(r.overload_rejected.get() as f64),
+        ),
+    ]);
+    let gauges = Json::obj(vec![
+        ("queue_depth", Json::num(r.queue_depth.get() as f64)),
+        (
+            "running_sequences",
+            Json::num(r.running_sequences.get() as f64),
+        ),
+        (
+            "active_connections",
+            Json::num(r.active_connections.get() as f64),
+        ),
+        ("kv_pages_used", Json::num(r.kv_pages_used.get() as f64)),
+        ("kv_pages_peak", Json::num(r.kv_pages_peak.get() as f64)),
+        ("kv_pages_total", Json::num(r.kv_pages_total.get() as f64)),
+    ]);
+    let hist = Json::obj(vec![
+        ("step_ms", hist_json(&r.step_ms.snapshot())),
+        (
+            "request_prefill_ms",
+            hist_json(&r.request_prefill_ms.snapshot()),
+        ),
+        (
+            "request_decode_ms",
+            hist_json(&r.request_decode_ms.snapshot()),
+        ),
+        ("shard_stage_ms", hist_json(&r.shard_stage_ms.snapshot())),
+    ]);
+    let trace = Json::arr(r.trace.recent(SNAPSHOT_TRACE_EVENTS).into_iter().map(|e| {
+        let source = if e.source == SOURCE_SCHED {
+            "sched".to_string()
+        } else {
+            format!("shard:{}", e.source)
+        };
+        Json::obj(vec![
+            ("seq", Json::num(e.seq as f64)),
+            ("source", Json::str(&source)),
+            ("batch", Json::num(e.batch)),
+            ("prefill_tokens", Json::num(e.prefill_tokens)),
+            ("decode_tokens", Json::num(e.decode_tokens)),
+            ("dur_us", Json::num(e.dur_us as f64)),
+            ("preempted", Json::num(e.preempted)),
+            ("restarts", Json::num(e.restarts)),
+        ])
+    }));
+    Json::obj(vec![
+        ("counters", counters),
+        ("gauges", gauges),
+        ("hist", hist),
+        ("trace", trace),
+    ])
+}
+
+fn hist_json(s: &HistSnapshot) -> Json {
+    Json::obj(vec![
+        ("count", Json::num(s.count as f64)),
+        ("sum_ms", Json::num(s.sum_ms())),
+        ("mean_ms", Json::num(s.mean_ms())),
+        ("p50_ms", Json::num(s.quantile_ms(0.50))),
+        ("p95_ms", Json::num(s.quantile_ms(0.95))),
+        ("p99_ms", Json::num(s.quantile_ms(0.99))),
+    ])
+}
+
+/// Render the global registry in Prometheus text exposition format 0.0.4.
+pub fn prometheus_text() -> String {
+    render_prometheus(registry())
+}
+
+/// [`prometheus_text`] over an explicit registry.
+pub fn render_prometheus(r: &Registry) -> String {
+    let mut s = String::with_capacity(4096);
+    counter(&mut s, "tsgo_steps_total", "Scheduler batch steps executed.", r.steps.get());
+    counter(
+        &mut s,
+        "tsgo_prefill_tokens_total",
+        "Prompt tokens fed through prefill spans.",
+        r.prefill_tokens.get(),
+    );
+    counter(
+        &mut s,
+        "tsgo_decode_tokens_total",
+        "Generated-token positions fed through decode steps.",
+        r.decode_tokens.get(),
+    );
+    labeled(
+        &mut s,
+        "tsgo_admit_verdicts_total",
+        "Admission verdicts by outcome.",
+        "verdict",
+        &[
+            ("slot", r.admit_slot.get()),
+            ("defer", r.admit_defer.get()),
+            ("reject", r.admit_reject.get()),
+        ],
+    );
+    counter(
+        &mut s,
+        "tsgo_preemptions_total",
+        "Sequences preempted by pool pressure.",
+        r.preemptions.get(),
+    );
+    counter(
+        &mut s,
+        "tsgo_worker_restarts_total",
+        "Decode workers respawned after a panic.",
+        r.worker_restarts.get(),
+    );
+    counter(
+        &mut s,
+        "tsgo_pipeline_rebuilds_total",
+        "Shard chains torn down and rebuilt.",
+        r.pipeline_rebuilds.get(),
+    );
+    labeled(
+        &mut s,
+        "tsgo_requests_finished_total",
+        "Finished requests by finish_reason.",
+        "reason",
+        &[
+            ("length", r.finish_length.get()),
+            ("stop", r.finish_stop.get()),
+            ("timeout", r.finish_timeout.get()),
+            ("error", r.finish_error.get()),
+        ],
+    );
+    counter(
+        &mut s,
+        "tsgo_kv_pages_minted_total",
+        "KV pages newly minted (not recycled).",
+        r.kv_pages_minted.get(),
+    );
+    counter(
+        &mut s,
+        "tsgo_connections_total",
+        "Client connections accepted.",
+        r.connections_total.get(),
+    );
+    labeled(
+        &mut s,
+        "tsgo_requests_total",
+        "Requests answered, by outcome.",
+        "outcome",
+        &[
+            ("ok", r.requests_ok.get()),
+            ("error", r.requests_error.get()),
+        ],
+    );
+    counter(
+        &mut s,
+        "tsgo_overload_rejected_total",
+        "Requests bounced at enqueue because the queue was full.",
+        r.overload_rejected.get(),
+    );
+    gauge(&mut s, "tsgo_queue_depth", "Requests waiting in the admission queue.", r.queue_depth.get());
+    gauge(
+        &mut s,
+        "tsgo_running_sequences",
+        "Sequences currently holding a scheduler slot.",
+        r.running_sequences.get(),
+    );
+    gauge(
+        &mut s,
+        "tsgo_active_connections",
+        "Live client connections.",
+        r.active_connections.get(),
+    );
+    gauge(
+        &mut s,
+        "tsgo_kv_pages_used",
+        "KV pages currently allocated across all pools.",
+        r.kv_pages_used.get(),
+    );
+    gauge(
+        &mut s,
+        "tsgo_kv_pages_peak",
+        "High-water mark of tsgo_kv_pages_used.",
+        r.kv_pages_peak.get(),
+    );
+    gauge(
+        &mut s,
+        "tsgo_kv_pages_total",
+        "Page budget of the serving pool.",
+        r.kv_pages_total.get(),
+    );
+    histogram(
+        &mut s,
+        "tsgo_step_latency_ms",
+        "Wall time of one scheduler batch step (ms).",
+        &r.step_ms.snapshot(),
+    );
+    histogram(
+        &mut s,
+        "tsgo_request_prefill_ms",
+        "Per-request prefill time (ms).",
+        &r.request_prefill_ms.snapshot(),
+    );
+    histogram(
+        &mut s,
+        "tsgo_request_decode_ms",
+        "Per-request decode time (ms).",
+        &r.request_decode_ms.snapshot(),
+    );
+    histogram(
+        &mut s,
+        "tsgo_shard_stage_ms",
+        "Wall time of one shard worker's span stage (ms).",
+        &r.shard_stage_ms.snapshot(),
+    );
+    s
+}
+
+fn counter(s: &mut String, name: &str, help: &str, v: u64) {
+    use std::fmt::Write as _;
+    let _ = writeln!(s, "# HELP {name} {help}\n# TYPE {name} counter\n{name} {v}");
+}
+
+fn gauge(s: &mut String, name: &str, help: &str, v: i64) {
+    use std::fmt::Write as _;
+    let _ = writeln!(s, "# HELP {name} {help}\n# TYPE {name} gauge\n{name} {v}");
+}
+
+fn labeled(s: &mut String, name: &str, help: &str, label: &str, series: &[(&str, u64)]) {
+    use std::fmt::Write as _;
+    let _ = writeln!(s, "# HELP {name} {help}\n# TYPE {name} counter");
+    for (value, v) in series {
+        let _ = writeln!(s, "{name}{{{label}=\"{value}\"}} {v}");
+    }
+}
+
+fn histogram(s: &mut String, name: &str, help: &str, snap: &HistSnapshot) {
+    use std::fmt::Write as _;
+    let _ = writeln!(s, "# HELP {name} {help}\n# TYPE {name} histogram");
+    let mut cum = 0u64;
+    for (i, &n) in snap.buckets.iter().enumerate() {
+        cum += n;
+        if i < BUCKET_BOUNDS_US.len() {
+            let le = BUCKET_BOUNDS_US[i] as f64 / 1_000.0;
+            let _ = writeln!(s, "{name}_bucket{{le=\"{le}\"}} {cum}");
+        } else {
+            let _ = writeln!(s, "{name}_bucket{{le=\"+Inf\"}} {cum}");
+        }
+    }
+    let _ = writeln!(s, "{name}_sum {}", snap.sum_ms());
+    let _ = writeln!(s, "{name}_count {}", snap.count);
+}
+
+/// Bind `addr` and serve Prometheus scrapes of the global registry on a
+/// dedicated `tsgo-metrics` thread. Returns the bound address (so
+/// `HOST:0` callers — tests — learn the real port). The thread runs for
+/// the life of the process; scrapes are handled serially, which is how
+/// Prometheus polls anyway.
+pub fn serve_metrics(addr: &str) -> std::io::Result<SocketAddr> {
+    let listener = TcpListener::bind(addr)?;
+    let local = listener.local_addr()?;
+    std::thread::Builder::new()
+        .name("tsgo-metrics".into())
+        .spawn(move || {
+            for mut stream in listener.incoming().flatten() {
+                let _ = handle_scrape(&mut stream);
+            }
+        })
+        .expect("spawn tsgo-metrics listener thread");
+    Ok(local)
+}
+
+fn handle_scrape(stream: &mut TcpStream) -> std::io::Result<()> {
+    stream.set_read_timeout(Some(std::time::Duration::from_secs(5)))?;
+    let mut request_line = String::new();
+    BufReader::new(&mut *stream).read_line(&mut request_line)?;
+    let path = request_line.split_whitespace().nth(1).unwrap_or("/");
+    let (status, content_type, body) = if path == "/metrics" || path == "/" {
+        (
+            "200 OK",
+            "text/plain; version=0.0.4; charset=utf-8",
+            prometheus_text(),
+        )
+    } else {
+        (
+            "404 Not Found",
+            "text/plain; charset=utf-8",
+            "not found; scrape /metrics\n".to_string(),
+        )
+    };
+    write!(
+        stream,
+        "HTTP/1.0 {status}\r\nContent-Type: {content_type}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    )?;
+    stream.flush()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn snapshot_json_has_all_sections_and_parses_back() {
+        let r = Registry::new();
+        r.steps.add(7);
+        r.queue_depth.set(3);
+        r.step_ms.observe_us(1_234);
+        r.trace.record(&crate::obs::StepEvent {
+            seq: 0,
+            source: SOURCE_SCHED,
+            batch: 2,
+            prefill_tokens: 6,
+            decode_tokens: 2,
+            dur_us: 1_234,
+            preempted: 0,
+            restarts: 0,
+        });
+        let j = registry_snapshot_json(&r);
+        let round = Json::parse(&j.to_string()).expect("snapshot is valid JSON");
+        assert_eq!(round.get("counters").get("steps").as_f64(), Some(7.0));
+        assert_eq!(round.get("gauges").get("queue_depth").as_f64(), Some(3.0));
+        let h = round.get("hist").get("step_ms");
+        assert_eq!(h.get("count").as_f64(), Some(1.0));
+        assert!(h.get("p50_ms").as_f64().unwrap() > 0.0);
+        let trace = round.get("trace").as_arr().expect("trace array");
+        assert_eq!(trace.len(), 1);
+        assert_eq!(trace[0].get("source").as_str(), Some("sched"));
+        assert_eq!(trace[0].get("batch").as_f64(), Some(2.0));
+    }
+
+    #[test]
+    fn prometheus_rendering_is_well_formed() {
+        let r = Registry::new();
+        r.decode_tokens.add(42);
+        r.finish_stop.add(2);
+        r.step_ms.observe_us(900);
+        r.step_ms.observe_us(90_000);
+        let text = render_prometheus(&r);
+        assert!(text.contains("# TYPE tsgo_decode_tokens_total counter"));
+        assert!(text.contains("tsgo_decode_tokens_total 42"));
+        assert!(text.contains("tsgo_requests_finished_total{reason=\"stop\"} 2"));
+        assert!(text.contains("# TYPE tsgo_step_latency_ms histogram"));
+        assert!(text.contains("tsgo_step_latency_ms_bucket{le=\"1\"} 1"));
+        assert!(text.contains("tsgo_step_latency_ms_bucket{le=\"+Inf\"} 2"));
+        assert!(text.contains("tsgo_step_latency_ms_count 2"));
+        // every HELP has a TYPE and cumulative buckets never decrease
+        let helps = text.matches("# HELP").count();
+        let types = text.matches("# TYPE").count();
+        assert_eq!(helps, types);
+        let mut prev = 0u64;
+        for line in text.lines().filter(|l| l.starts_with("tsgo_step_latency_ms_bucket")) {
+            let v: u64 = line.rsplit(' ').next().unwrap().parse().unwrap();
+            assert!(v >= prev, "cumulative bucket decreased: {line}");
+            prev = v;
+        }
+    }
+
+    #[test]
+    fn scrape_listener_answers_http() {
+        let addr = serve_metrics("127.0.0.1:0").expect("bind scrape listener");
+        let mut conn = TcpStream::connect(addr).expect("connect");
+        write!(conn, "GET /metrics HTTP/1.0\r\n\r\n").unwrap();
+        let mut body = String::new();
+        use std::io::Read as _;
+        conn.read_to_string(&mut body).unwrap();
+        assert!(body.starts_with("HTTP/1.0 200 OK\r\n"), "got: {body}");
+        assert!(body.contains("Content-Type: text/plain; version=0.0.4"));
+        assert!(body.contains("tsgo_steps_total"));
+
+        let mut conn = TcpStream::connect(addr).expect("connect");
+        write!(conn, "GET /nope HTTP/1.0\r\n\r\n").unwrap();
+        let mut body = String::new();
+        conn.read_to_string(&mut body).unwrap();
+        assert!(body.starts_with("HTTP/1.0 404"), "got: {body}");
+    }
+}

@@ -1,0 +1,269 @@
+//! Fixed-bucket latency histograms with lock-free recording.
+//!
+//! The bucket layout is frozen at compile time (geometric-ish bounds from
+//! 50 µs to 5 s, plus a +Inf overflow bucket) so [`Hist::observe_us`] is a
+//! short integer scan plus three relaxed `fetch_add`s — no locks, no
+//! allocation, no floating point on the hot path. Quantiles are computed at
+//! *read* time by walking the bucket counts and linearly interpolating
+//! inside the bucket that crosses the target rank, the same estimate a
+//! Prometheus `histogram_quantile` would produce from the exported
+//! `_bucket` series.
+//!
+//! Readers and writers never synchronize: a [`HistSnapshot`] is a relaxed
+//! copy of the counts, which is exactly as consistent as a Prometheus
+//! scrape of a live process (per-counter monotonic, not cross-counter
+//! atomic).
+
+use std::sync::atomic::{AtomicU64, Ordering::Relaxed};
+
+/// Upper bounds of the finite buckets, in microseconds. The last implicit
+/// bucket is +Inf. Bounds are chosen to resolve both sub-millisecond decode
+/// steps and multi-second chunked prefills.
+pub const BUCKET_BOUNDS_US: [u64; 16] = [
+    50,
+    100,
+    250,
+    500,
+    1_000,
+    2_500,
+    5_000,
+    10_000,
+    25_000,
+    50_000,
+    100_000,
+    250_000,
+    500_000,
+    1_000_000,
+    2_500_000,
+    5_000_000,
+];
+
+/// Total bucket count including the +Inf overflow bucket.
+pub const NUM_BUCKETS: usize = BUCKET_BOUNDS_US.len() + 1;
+
+/// Lock-free fixed-bucket histogram. `const`-constructible so it can live in
+/// a `static` registry; every mutation is a relaxed atomic add.
+pub struct Hist {
+    buckets: [AtomicU64; NUM_BUCKETS],
+    count: AtomicU64,
+    sum_us: AtomicU64,
+}
+
+impl Hist {
+    /// A zeroed histogram, usable in `static` position.
+    pub const fn new() -> Self {
+        #[allow(clippy::declare_interior_mutable_const)]
+        const Z: AtomicU64 = AtomicU64::new(0);
+        Hist {
+            buckets: [Z; NUM_BUCKETS],
+            count: AtomicU64::new(0),
+            sum_us: AtomicU64::new(0),
+        }
+    }
+
+    /// Record one observation of `us` microseconds. Hot-path safe: integer
+    /// compares + three relaxed atomic adds.
+    #[inline]
+    pub fn observe_us(&self, us: u64) {
+        let mut idx = BUCKET_BOUNDS_US.len();
+        for (i, &bound) in BUCKET_BOUNDS_US.iter().enumerate() {
+            if us <= bound {
+                idx = i;
+                break;
+            }
+        }
+        self.buckets[idx].fetch_add(1, Relaxed);
+        self.count.fetch_add(1, Relaxed);
+        self.sum_us.fetch_add(us, Relaxed);
+    }
+
+    /// Record a [`std::time::Duration`] observation.
+    #[inline]
+    pub fn observe(&self, d: std::time::Duration) {
+        self.observe_us(d.as_micros() as u64);
+    }
+
+    /// Relaxed point-in-time copy of the counts.
+    pub fn snapshot(&self) -> HistSnapshot {
+        let mut buckets = [0u64; NUM_BUCKETS];
+        for (b, a) in buckets.iter_mut().zip(self.buckets.iter()) {
+            *b = a.load(Relaxed);
+        }
+        HistSnapshot {
+            buckets,
+            count: self.count.load(Relaxed),
+            sum_us: self.sum_us.load(Relaxed),
+        }
+    }
+}
+
+impl Default for Hist {
+    fn default() -> Self {
+        Hist::new()
+    }
+}
+
+/// Plain-integer copy of a [`Hist`], the unit all readout works on.
+#[derive(Clone, Copy, Debug)]
+pub struct HistSnapshot {
+    /// Per-bucket (non-cumulative) observation counts; the last entry is the
+    /// +Inf overflow bucket.
+    pub buckets: [u64; NUM_BUCKETS],
+    /// Total observations.
+    pub count: u64,
+    /// Sum of all observed values, microseconds.
+    pub sum_us: u64,
+}
+
+impl HistSnapshot {
+    /// Estimated `q`-quantile (`0.0 ..= 1.0`) in **milliseconds**, by linear
+    /// interpolation inside the bucket that crosses the target rank.
+    /// Observations landing in the +Inf bucket clamp to the largest finite
+    /// bound (the Prometheus convention). Returns 0.0 when empty.
+    pub fn quantile_ms(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let target = q.clamp(0.0, 1.0) * self.count as f64;
+        let mut cum = 0u64;
+        for (i, &n) in self.buckets.iter().enumerate() {
+            let prev = cum;
+            cum += n;
+            if (cum as f64) >= target && n > 0 {
+                let hi = if i < BUCKET_BOUNDS_US.len() {
+                    BUCKET_BOUNDS_US[i]
+                } else {
+                    // +Inf bucket: clamp the estimate to the largest finite
+                    // bound rather than extrapolating.
+                    return BUCKET_BOUNDS_US[BUCKET_BOUNDS_US.len() - 1] as f64 / 1_000.0;
+                };
+                let lo = if i == 0 { 0 } else { BUCKET_BOUNDS_US[i - 1] };
+                let frac = ((target - prev as f64) / n as f64).clamp(0.0, 1.0);
+                return (lo as f64 + frac * (hi - lo) as f64) / 1_000.0;
+            }
+        }
+        BUCKET_BOUNDS_US[BUCKET_BOUNDS_US.len() - 1] as f64 / 1_000.0
+    }
+
+    /// Mean observation in milliseconds (0.0 when empty).
+    pub fn mean_ms(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum_us as f64 / self.count as f64 / 1_000.0
+        }
+    }
+
+    /// Sum of observations in milliseconds.
+    pub fn sum_ms(&self) -> f64 {
+        self.sum_us as f64 / 1_000.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{check, prop_assert};
+
+    #[test]
+    fn empty_histogram_reads_zero() {
+        let h = Hist::new();
+        let s = h.snapshot();
+        assert_eq!(s.count, 0);
+        assert_eq!(s.quantile_ms(0.5), 0.0);
+        assert_eq!(s.mean_ms(), 0.0);
+    }
+
+    #[test]
+    fn observations_land_in_the_right_bucket() {
+        let h = Hist::new();
+        h.observe_us(50); // boundary: le=50 bucket
+        h.observe_us(51); // next bucket
+        h.observe_us(7_000_000); // beyond the last bound: +Inf
+        let s = h.snapshot();
+        assert_eq!(s.buckets[0], 1);
+        assert_eq!(s.buckets[1], 1);
+        assert_eq!(s.buckets[NUM_BUCKETS - 1], 1);
+        assert_eq!(s.count, 3);
+        assert_eq!(s.sum_us, 50 + 51 + 7_000_000);
+    }
+
+    #[test]
+    fn quantiles_bracket_a_uniform_stream() {
+        let h = Hist::new();
+        // 1..=1000 µs uniformly: p50 ≈ 0.5 ms, p99 ≈ 0.99 ms.
+        for us in 1..=1000u64 {
+            h.observe_us(us);
+        }
+        let s = h.snapshot();
+        let p50 = s.quantile_ms(0.50);
+        let p99 = s.quantile_ms(0.99);
+        assert!((0.25..=0.75).contains(&p50), "p50 = {p50}");
+        assert!((0.75..=1.0).contains(&p99), "p99 = {p99}");
+        assert!(p50 <= p99);
+    }
+
+    #[test]
+    fn overflow_quantile_clamps_to_last_finite_bound() {
+        let h = Hist::new();
+        for _ in 0..10 {
+            h.observe_us(100_000_000);
+        }
+        let s = h.snapshot();
+        assert_eq!(s.quantile_ms(0.99), 5_000.0);
+    }
+
+    #[test]
+    fn prop_quantile_is_monotone_and_bounded() {
+        check("hist quantile monotone/bounded", 200, |g| {
+            let h = Hist::new();
+            let n = g.usize_in(1, 200);
+            let mut max_us = 0u64;
+            for _ in 0..n {
+                // span several decades so every bucket region gets hit
+                let us = g.usize_in(1, 8_000_000) as u64;
+                max_us = max_us.max(us);
+                h.observe_us(us);
+            }
+            let s = h.snapshot();
+            prop_assert(s.count == n as u64, "count matches observations")?;
+            let mut prev = 0.0f64;
+            for &q in &[0.0, 0.1, 0.25, 0.5, 0.75, 0.9, 0.95, 0.99, 1.0] {
+                let v = s.quantile_ms(q);
+                prop_assert(v >= prev, "quantile is monotone in q")?;
+                prop_assert(v >= 0.0, "quantile non-negative")?;
+                prop_assert(
+                    v <= BUCKET_BOUNDS_US[BUCKET_BOUNDS_US.len() - 1] as f64 / 1_000.0,
+                    "quantile clamped to largest bound",
+                )?;
+                prev = v;
+            }
+            // the q=1.0 estimate must not undershoot the bucket holding the max
+            let max_ms_bucket_lo = BUCKET_BOUNDS_US
+                .iter()
+                .rev()
+                .find(|&&b| b < max_us)
+                .copied()
+                .unwrap_or(0) as f64
+                / 1_000.0;
+            prop_assert(
+                s.quantile_ms(1.0) >= max_ms_bucket_lo.min(5_000.0) - 1e-9,
+                "q=1.0 reaches the max's bucket",
+            )
+        });
+    }
+
+    #[test]
+    fn prop_bucket_counts_partition_the_stream() {
+        check("hist buckets partition", 100, |g| {
+            let h = Hist::new();
+            let n = g.usize_in(0, 100);
+            for _ in 0..n {
+                h.observe_us(g.usize_in(0, 6_000_000) as u64);
+            }
+            let s = h.snapshot();
+            let total: u64 = s.buckets.iter().sum();
+            prop_assert(total == s.count, "bucket counts sum to count")
+        });
+    }
+}

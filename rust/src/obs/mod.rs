@@ -1,0 +1,46 @@
+//! Serving telemetry plane: a lock-free metrics registry, a step-trace
+//! flight recorder, and two readout surfaces.
+//!
+//! The serving stack computes queue depths, span splits, stage timings,
+//! pool occupancy, and recovery counts at every step — and, before this
+//! module, threw all of it away after stamping a few fields onto each
+//! [`GenResponse`]. The telemetry plane keeps those numbers, under the
+//! same discipline the fault plane ([`crate::util::fault`]) set for
+//! process-global infrastructure touching the hot path:
+//!
+//! * **Atomics only where the scheduler steps.** Recording a counter, a
+//!   gauge delta, a histogram observation, or a trace event is a handful
+//!   of relaxed `fetch_add`s on `static` storage — no locks, no
+//!   allocation, no syscalls. The cost is priced by the
+//!   `decode.packed_int2_metrics_tokens_per_s` bench row next to the
+//!   fault plane's `fault_{unarmed,armed}` rows.
+//! * **One registry per process.** [`registry()`] returns the singleton
+//!   every layer records into: the scheduler (steps, admissions,
+//!   preemptions, latency histograms), the KV pool (page gauges), the
+//!   shard workers (stage times, rebuilds), and the server front door
+//!   (connections, request outcomes).
+//! * **Reads are scrape-consistent.** Snapshots are relaxed loads:
+//!   per-metric monotonic, not cross-metric atomic — exactly what a
+//!   Prometheus scrape of a live process gives you.
+//!
+//! Readout surfaces:
+//!
+//! * `{"stats": true}` on the serve protocol → [`snapshot_json`] (see
+//!   `docs/SERVE_API.md` for the schema and the metric reference table);
+//!   `tsgo stats HOST:PORT` pretty-prints it client-side.
+//! * `tsgo serve --metrics-addr HOST:PORT` → [`serve_metrics`], Prometheus
+//!   text exposition on a dedicated listener thread.
+//!
+//! [`GenResponse`]: crate::serve::GenResponse
+
+pub mod export;
+pub mod hist;
+pub mod registry;
+pub mod trace;
+
+pub use export::{
+    prometheus_text, registry_snapshot_json, render_prometheus, serve_metrics, snapshot_json,
+};
+pub use hist::{Hist, HistSnapshot, BUCKET_BOUNDS_US, NUM_BUCKETS};
+pub use registry::{registry, Counter, Gauge, Registry};
+pub use trace::{Ring, StepEvent, RING_CAPACITY, SOURCE_SCHED};

@@ -1,0 +1,298 @@
+//! The process-wide metric registry: every counter, gauge, histogram, and
+//! the trace ring, as one `static` struct of atomics.
+//!
+//! Design rules, in order:
+//!
+//! 1. **No locks, no allocation on the hot path.** Every mutation is a
+//!    relaxed atomic RMW on a field that exists at compile time. The
+//!    scheduler's `step()` loop, the KV pool's `alloc`/`release`, and the
+//!    shard workers all record through this registry, so the unarmed cost
+//!    must stay at "a handful of uncontended `fetch_add`s" — priced by the
+//!    `decode.packed_int2_metrics_tokens_per_s` bench row the same way the
+//!    fault plane's unarmed cost is priced.
+//! 2. **Process scope, delta discipline.** The registry is global (one per
+//!    process, like [`crate::util::fault`]'s plane), so components that are
+//!    created many times per process — KV pools, batchers, test servers —
+//!    must update gauges by *delta* (`add`/`sub`), never by absolute
+//!    `set`, or concurrent instances would clobber each other.
+//! 3. **Snapshots are per-metric monotonic, not cross-metric atomic** —
+//!    the same contract a Prometheus scrape of a live process has.
+
+use super::hist::Hist;
+use super::trace::Ring;
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering::Relaxed};
+
+/// Monotonic event counter.
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub const fn new() -> Self {
+        Counter(AtomicU64::new(0))
+    }
+    /// Add one.
+    #[inline]
+    pub fn inc(&self) {
+        self.add(1);
+    }
+    /// Add `n`.
+    #[inline]
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Relaxed);
+    }
+    /// Current value.
+    pub fn get(&self) -> u64 {
+        self.0.load(Relaxed)
+    }
+}
+
+impl Default for Counter {
+    fn default() -> Self {
+        Counter::new()
+    }
+}
+
+/// Signed instantaneous-level gauge. Multi-instance components update by
+/// delta so concurrent instances compose instead of clobbering.
+pub struct Gauge(AtomicI64);
+
+impl Gauge {
+    pub const fn new() -> Self {
+        Gauge(AtomicI64::new(0))
+    }
+    /// Add `d`, returning the new value (used to feed peak gauges).
+    #[inline]
+    pub fn add(&self, d: i64) -> i64 {
+        self.0.fetch_add(d, Relaxed) + d
+    }
+    /// Subtract `d`.
+    #[inline]
+    pub fn sub(&self, d: i64) {
+        self.0.fetch_sub(d, Relaxed);
+    }
+    /// Overwrite the level. Only for single-writer gauges (e.g. the
+    /// scheduler loop publishing its own batch size).
+    #[inline]
+    pub fn set(&self, v: i64) {
+        self.0.store(v, Relaxed);
+    }
+    /// Ratchet the gauge up to at least `v` (peak tracking).
+    #[inline]
+    pub fn ratchet(&self, v: i64) {
+        self.0.fetch_max(v, Relaxed);
+    }
+    /// Current value.
+    pub fn get(&self) -> i64 {
+        self.0.load(Relaxed)
+    }
+}
+
+impl Default for Gauge {
+    fn default() -> Self {
+        Gauge::new()
+    }
+}
+
+/// Every metric the serving stack records, as one flat struct. Field names
+/// are the wire names: `snake_case` here becomes `tsgo_<name>[_total]` in
+/// the Prometheus exposition and the key under `"counters"`/`"gauges"`/
+/// `"hist"` in the `{"stats": true}` snapshot.
+pub struct Registry {
+    // --- scheduler ---
+    /// Batch steps executed by the scheduler loop.
+    pub steps: Counter,
+    /// Prompt tokens fed through prefill spans.
+    pub prefill_tokens: Counter,
+    /// Generated-token positions fed through decode steps.
+    pub decode_tokens: Counter,
+    /// Admission verdicts: request seated into a slot.
+    pub admit_slot: Counter,
+    /// Admission verdicts: request deferred (no slot / no pool headroom).
+    pub admit_defer: Counter,
+    /// Admission verdicts: request rejected outright.
+    pub admit_reject: Counter,
+    /// Sequences preempted by pool pressure (replayed later).
+    pub preemptions: Counter,
+    /// Decode workers respawned after a panic (process lifetime).
+    pub worker_restarts: Counter,
+    /// Shard chains torn down and rebuilt (process lifetime).
+    pub pipeline_rebuilds: Counter,
+    /// Requests finished with `finish_reason: "length"`.
+    pub finish_length: Counter,
+    /// Requests finished with `finish_reason: "stop"`.
+    pub finish_stop: Counter,
+    /// Requests finished with `finish_reason: "timeout"`.
+    pub finish_timeout: Counter,
+    /// Requests finished with `finish_reason: "error"`.
+    pub finish_error: Counter,
+
+    // --- KV pool ---
+    /// Pages newly minted (vs. recycled from the free list).
+    pub kv_pages_minted: Counter,
+
+    // --- server ---
+    /// Connections accepted over the process lifetime.
+    pub connections_total: Counter,
+    /// Requests answered with a normal generation response.
+    pub requests_ok: Counter,
+    /// Requests answered with an error line.
+    pub requests_error: Counter,
+    /// Requests bounced at enqueue because the queue was full.
+    pub overload_rejected: Counter,
+
+    // --- gauges ---
+    /// Requests waiting in the admission queue.
+    pub queue_depth: Gauge,
+    /// Sequences currently holding a scheduler slot.
+    pub running_sequences: Gauge,
+    /// Live client connections.
+    pub active_connections: Gauge,
+    /// KV pages currently allocated across all pools.
+    pub kv_pages_used: Gauge,
+    /// High-water mark of [`Registry::kv_pages_used`].
+    pub kv_pages_peak: Gauge,
+    /// Page budget of the serving pool (published by the scheduler loop).
+    pub kv_pages_total: Gauge,
+
+    // --- histograms (milliseconds) ---
+    /// Wall time of one scheduler batch step.
+    pub step_ms: Hist,
+    /// Per-request prefill time (admission to first generated token).
+    pub request_prefill_ms: Hist,
+    /// Per-request decode time (first generated token to finish).
+    pub request_decode_ms: Hist,
+    /// Wall time of one shard worker's span stage.
+    pub shard_stage_ms: Hist,
+
+    /// Flight recorder of recent step / shard-stage events.
+    pub trace: Ring,
+}
+
+impl Registry {
+    pub const fn new() -> Self {
+        Registry {
+            steps: Counter::new(),
+            prefill_tokens: Counter::new(),
+            decode_tokens: Counter::new(),
+            admit_slot: Counter::new(),
+            admit_defer: Counter::new(),
+            admit_reject: Counter::new(),
+            preemptions: Counter::new(),
+            worker_restarts: Counter::new(),
+            pipeline_rebuilds: Counter::new(),
+            finish_length: Counter::new(),
+            finish_stop: Counter::new(),
+            finish_timeout: Counter::new(),
+            finish_error: Counter::new(),
+            kv_pages_minted: Counter::new(),
+            connections_total: Counter::new(),
+            requests_ok: Counter::new(),
+            requests_error: Counter::new(),
+            overload_rejected: Counter::new(),
+            queue_depth: Gauge::new(),
+            running_sequences: Gauge::new(),
+            active_connections: Gauge::new(),
+            kv_pages_used: Gauge::new(),
+            kv_pages_peak: Gauge::new(),
+            kv_pages_total: Gauge::new(),
+            step_ms: Hist::new(),
+            request_prefill_ms: Hist::new(),
+            request_decode_ms: Hist::new(),
+            shard_stage_ms: Hist::new(),
+            trace: Ring::new(),
+        }
+    }
+
+    /// Count one finished request under its [`FinishReason`] label.
+    ///
+    /// [`FinishReason`]: crate::serve::FinishReason
+    pub fn count_finish(&self, reason: crate::serve::FinishReason) {
+        use crate::serve::FinishReason::*;
+        match reason {
+            Length => self.finish_length.inc(),
+            Stop => self.finish_stop.inc(),
+            Timeout => self.finish_timeout.inc(),
+            Error => self.finish_error.inc(),
+        }
+    }
+}
+
+impl Default for Registry {
+    fn default() -> Self {
+        Registry::new()
+    }
+}
+
+/// The process-wide registry. Like the fault plane, there is exactly one
+/// per process: tests that assert on its counters must either take deltas
+/// around the work they provoke or assert `>=`.
+pub fn registry() -> &'static Registry {
+    static REGISTRY: Registry = Registry::new();
+    &REGISTRY
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_and_gauges_do_arithmetic() {
+        let c = Counter::new();
+        c.inc();
+        c.add(4);
+        assert_eq!(c.get(), 5);
+
+        let g = Gauge::new();
+        assert_eq!(g.add(3), 3);
+        g.sub(1);
+        assert_eq!(g.get(), 2);
+        g.ratchet(10);
+        g.ratchet(7); // no-op: ratchet never lowers
+        assert_eq!(g.get(), 10);
+        g.set(-1);
+        assert_eq!(g.get(), -1);
+    }
+
+    #[test]
+    fn registry_is_a_process_singleton() {
+        assert!(std::ptr::eq(registry(), registry()));
+    }
+
+    #[test]
+    fn snapshots_are_monotone_under_concurrent_writers() {
+        // A local registry so the test owns every write to it.
+        let reg = Box::leak(Box::new(Registry::new()));
+        let writers: Vec<_> = (0..4)
+            .map(|_| {
+                std::thread::spawn(move || {
+                    for i in 0..2_000u64 {
+                        reg.steps.inc();
+                        reg.decode_tokens.add(3);
+                        reg.step_ms.observe_us(i % 700);
+                    }
+                })
+            })
+            .collect();
+        let (mut steps, mut toks, mut hist_count) = (0u64, 0u64, 0u64);
+        for _ in 0..500 {
+            let s = reg.steps.get();
+            let t = reg.decode_tokens.get();
+            let h = reg.step_ms.snapshot();
+            assert!(s >= steps, "steps went backwards: {s} < {steps}");
+            assert!(t >= toks, "tokens went backwards");
+            assert!(h.count >= hist_count, "hist count went backwards");
+            assert!(
+                h.buckets.iter().sum::<u64>() >= hist_count,
+                "bucket sum fell behind a previously seen count"
+            );
+            steps = s;
+            toks = t;
+            hist_count = h.count;
+        }
+        for w in writers {
+            w.join().unwrap();
+        }
+        assert_eq!(reg.steps.get(), 8_000);
+        assert_eq!(reg.decode_tokens.get(), 24_000);
+        assert_eq!(reg.step_ms.snapshot().count, 8_000);
+    }
+}

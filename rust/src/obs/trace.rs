@@ -1,0 +1,253 @@
+//! Step-level tracing: a fixed-capacity, lock-free ring of recent events.
+//!
+//! Every scheduler step and every shard stage records one [`StepEvent`].
+//! The ring is a per-slot seqlock: the writer claims a slot with one
+//! `fetch_add` on the cursor, tags the slot odd while the fields are being
+//! stored, then tags it even with the sequence number encoded. Readers
+//! ([`Ring::recent`]) re-check the tag around the field loads and simply
+//! drop torn or overwritten slots — a reader can never block a writer, and
+//! the writer never allocates or spins.
+//!
+//! Capacity is deliberately small ([`RING_CAPACITY`]): this is a flight
+//! recorder for "what were the last few steps shaped like", not an event
+//! log. Long-horizon aggregates belong to the counters and histograms in
+//! [`super::registry`].
+
+use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
+
+/// Number of events retained; older events are overwritten.
+pub const RING_CAPACITY: usize = 64;
+
+/// Sentinel `source` value for events recorded by the scheduler step loop
+/// (shard workers record their shard index instead).
+pub const SOURCE_SCHED: u32 = u32::MAX;
+
+/// One recorded event: a scheduler step or a shard stage.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct StepEvent {
+    /// Monotonic sequence number (process-wide, shared by all sources).
+    pub seq: u64,
+    /// [`SOURCE_SCHED`] for scheduler steps, else the shard index.
+    pub source: u32,
+    /// Sequences in the batch (scheduler) or spans in the stage (shard).
+    pub batch: u32,
+    /// Prompt tokens fed this step (prefill side of the span split).
+    pub prefill_tokens: u32,
+    /// Generated-token positions fed this step (decode side).
+    pub decode_tokens: u32,
+    /// Wall time of the step / stage, microseconds.
+    pub dur_us: u64,
+    /// Sequences preempted by pool pressure immediately before this step.
+    pub preempted: u32,
+    /// Worker restarts + pipeline rebuilds that surfaced during this step.
+    pub restarts: u32,
+}
+
+/// One ring slot. `tag` is `2*seq + 1` while the writer is mid-store and
+/// `2*seq + 2` once the fields are consistent; readers accept only even
+/// tags that match before and after the field loads.
+struct Slot {
+    tag: AtomicU64,
+    source: AtomicU32,
+    batch: AtomicU32,
+    prefill_tokens: AtomicU32,
+    decode_tokens: AtomicU32,
+    dur_us: AtomicU64,
+    preempted: AtomicU32,
+    restarts: AtomicU32,
+}
+
+impl Slot {
+    const fn new() -> Self {
+        Slot {
+            tag: AtomicU64::new(0),
+            source: AtomicU32::new(0),
+            batch: AtomicU32::new(0),
+            prefill_tokens: AtomicU32::new(0),
+            decode_tokens: AtomicU32::new(0),
+            dur_us: AtomicU64::new(0),
+            preempted: AtomicU32::new(0),
+            restarts: AtomicU32::new(0),
+        }
+    }
+}
+
+/// Lock-free flight recorder of the last [`RING_CAPACITY`] events.
+pub struct Ring {
+    cursor: AtomicU64,
+    slots: [Slot; RING_CAPACITY],
+}
+
+impl Ring {
+    /// An empty ring, usable in `static` position.
+    pub const fn new() -> Self {
+        #[allow(clippy::declare_interior_mutable_const)]
+        const S: Slot = Slot::new();
+        Ring {
+            cursor: AtomicU64::new(0),
+            slots: [S; RING_CAPACITY],
+        }
+    }
+
+    /// Number of events ever recorded (not capped by capacity).
+    pub fn recorded(&self) -> u64 {
+        self.cursor.load(Ordering::Relaxed)
+    }
+
+    /// Record one event. The `seq` field of `ev` is ignored; the ring
+    /// assigns the next sequence number. Lock-free and allocation-free.
+    pub fn record(&self, ev: &StepEvent) {
+        let seq = self.cursor.fetch_add(1, Ordering::Relaxed);
+        let slot = &self.slots[(seq % RING_CAPACITY as u64) as usize];
+        // Odd tag: readers that land mid-write will discard the slot.
+        slot.tag.store(2 * seq + 1, Ordering::Release);
+        slot.source.store(ev.source, Ordering::Relaxed);
+        slot.batch.store(ev.batch, Ordering::Relaxed);
+        slot.prefill_tokens
+            .store(ev.prefill_tokens, Ordering::Relaxed);
+        slot.decode_tokens.store(ev.decode_tokens, Ordering::Relaxed);
+        slot.dur_us.store(ev.dur_us, Ordering::Relaxed);
+        slot.preempted.store(ev.preempted, Ordering::Relaxed);
+        slot.restarts.store(ev.restarts, Ordering::Relaxed);
+        // Even tag encoding seq: the slot is now consistent.
+        slot.tag.store(2 * seq + 2, Ordering::Release);
+    }
+
+    /// The most recent `n` events, newest first. Slots that are mid-write
+    /// or already overwritten are skipped, so the result may be shorter
+    /// than `n` under heavy concurrent recording.
+    pub fn recent(&self, n: usize) -> Vec<StepEvent> {
+        let cursor = self.cursor.load(Ordering::Acquire);
+        let mut out = Vec::with_capacity(n.min(RING_CAPACITY));
+        let span = (n as u64).min(RING_CAPACITY as u64).min(cursor);
+        for back in 0..span {
+            let seq = cursor - 1 - back;
+            if let Some(ev) = self.read_slot(seq) {
+                out.push(ev);
+            }
+        }
+        out
+    }
+
+    /// Seqlock read of the slot that should hold `seq`; `None` if torn or
+    /// overwritten.
+    fn read_slot(&self, seq: u64) -> Option<StepEvent> {
+        let slot = &self.slots[(seq % RING_CAPACITY as u64) as usize];
+        let want = 2 * seq + 2;
+        let before = slot.tag.load(Ordering::Acquire);
+        if before != want {
+            return None;
+        }
+        let ev = StepEvent {
+            seq,
+            source: slot.source.load(Ordering::Relaxed),
+            batch: slot.batch.load(Ordering::Relaxed),
+            prefill_tokens: slot.prefill_tokens.load(Ordering::Relaxed),
+            decode_tokens: slot.decode_tokens.load(Ordering::Relaxed),
+            dur_us: slot.dur_us.load(Ordering::Relaxed),
+            preempted: slot.preempted.load(Ordering::Relaxed),
+            restarts: slot.restarts.load(Ordering::Relaxed),
+        };
+        // Keep the field loads above from sinking past the tag re-check.
+        std::sync::atomic::fence(Ordering::Acquire);
+        let after = slot.tag.load(Ordering::Acquire);
+        (after == want).then_some(ev)
+    }
+}
+
+impl Default for Ring {
+    fn default() -> Self {
+        Ring::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(batch: u32, dur_us: u64) -> StepEvent {
+        StepEvent {
+            seq: 0,
+            source: SOURCE_SCHED,
+            batch,
+            prefill_tokens: 0,
+            decode_tokens: batch,
+            dur_us,
+            preempted: 0,
+            restarts: 0,
+        }
+    }
+
+    #[test]
+    fn empty_ring_reads_empty() {
+        let r = Ring::new();
+        assert_eq!(r.recorded(), 0);
+        assert!(r.recent(10).is_empty());
+    }
+
+    #[test]
+    fn recent_is_newest_first_and_capped() {
+        let r = Ring::new();
+        for i in 0..10u32 {
+            r.record(&ev(i, i as u64));
+        }
+        let got = r.recent(3);
+        assert_eq!(got.len(), 3);
+        assert_eq!(got[0].batch, 9);
+        assert_eq!(got[1].batch, 8);
+        assert_eq!(got[2].batch, 7);
+        assert_eq!(got[0].seq, 9);
+    }
+
+    #[test]
+    fn overwrite_keeps_only_the_last_capacity_events() {
+        let r = Ring::new();
+        let total = RING_CAPACITY as u32 + 17;
+        for i in 0..total {
+            r.record(&ev(i, 0));
+        }
+        let got = r.recent(RING_CAPACITY * 2);
+        assert_eq!(got.len(), RING_CAPACITY);
+        assert_eq!(got[0].batch, total - 1);
+        assert_eq!(got.last().unwrap().batch, total - RING_CAPACITY as u32);
+    }
+
+    #[test]
+    fn concurrent_writers_never_tear_a_reader() {
+        use std::sync::Arc;
+        let r = Arc::new(Ring::new());
+        let writers: Vec<_> = (0..4)
+            .map(|w| {
+                let r = Arc::clone(&r);
+                std::thread::spawn(move || {
+                    for i in 0..500u32 {
+                        // every writer stamps batch == dur_us so a torn
+                        // read would be visible as a mismatch
+                        let v = w * 1000 + i;
+                        r.record(&StepEvent {
+                            seq: 0,
+                            source: w,
+                            batch: v,
+                            prefill_tokens: v,
+                            decode_tokens: v,
+                            dur_us: v as u64,
+                            preempted: v,
+                            restarts: v,
+                        });
+                    }
+                })
+            })
+            .collect();
+        for _ in 0..200 {
+            for e in r.recent(RING_CAPACITY) {
+                assert_eq!(e.batch as u64, e.dur_us, "torn event: {e:?}");
+                assert_eq!(e.batch, e.prefill_tokens);
+                assert_eq!(e.batch, e.preempted);
+            }
+        }
+        for w in writers {
+            w.join().unwrap();
+        }
+        assert_eq!(r.recorded(), 4 * 500);
+    }
+}

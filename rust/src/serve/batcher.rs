@@ -260,6 +260,12 @@ pub struct Pending {
 pub struct RequestQueue {
     rx: Receiver<Pending>,
     depth: Arc<AtomicUsize>,
+    /// Whether this queue's depth is mirrored into the process-wide
+    /// [`crate::obs`] `queue_depth` gauge. True for real batchers (enqueue
+    /// adds, settle subtracts — deltas, so concurrent batchers compose);
+    /// false for [`RequestQueue::for_tests`], which bypasses `generate`'s
+    /// increment and would otherwise drive the global gauge negative.
+    tracked: bool,
 }
 
 impl RequestQueue {
@@ -278,6 +284,9 @@ impl RequestQueue {
     /// One request left the queue for good: reopen its `max_queue` slot.
     pub(crate) fn settle(&self) {
         self.depth.fetch_sub(1, Ordering::AcqRel);
+        if self.tracked {
+            crate::obs::registry().queue_depth.sub(1);
+        }
     }
 
     /// Test-only: wrap a raw receiver so tests (in-crate and the
@@ -287,7 +296,11 @@ impl RequestQueue {
     /// still decrements.
     #[doc(hidden)]
     pub fn for_tests(rx: Receiver<Pending>) -> RequestQueue {
-        RequestQueue { rx, depth: Arc::new(AtomicUsize::new(usize::MAX / 2)) }
+        RequestQueue {
+            rx,
+            depth: Arc::new(AtomicUsize::new(usize::MAX / 2)),
+            tracked: false,
+        }
     }
 }
 
@@ -328,7 +341,7 @@ impl DynamicBatcher {
         };
         let (tx, rx) = channel::<Pending>();
         let depth = Arc::new(AtomicUsize::new(0));
-        let queue = RequestQueue { rx, depth: depth.clone() };
+        let queue = RequestQueue { rx, depth: depth.clone(), tracked: true };
         let worker = std::thread::Builder::new()
             .name("tsgo-batcher".into())
             .spawn(move || {
@@ -390,11 +403,15 @@ impl DynamicBatcher {
         let d = self.depth.fetch_add(1, Ordering::AcqRel);
         if d >= self.max_queue {
             self.depth.fetch_sub(1, Ordering::AcqRel);
+            crate::obs::registry().overload_rejected.inc();
             return Err(anyhow!(
                 "server overloaded: {d} requests already queued (max_queue = {})",
                 self.max_queue
             ));
         }
+        // Gauge moves before the send so the scheduler's matching
+        // `settle()` decrement can never land first.
+        crate::obs::registry().queue_depth.add(1);
         let (tx, rx) = channel();
         if self
             .queue
@@ -404,6 +421,7 @@ impl DynamicBatcher {
             .is_err()
         {
             self.depth.fetch_sub(1, Ordering::AcqRel);
+            crate::obs::registry().queue_depth.sub(1);
             return Err(anyhow!("batcher unavailable"));
         }
         Ok(rx)

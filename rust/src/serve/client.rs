@@ -5,7 +5,9 @@
 //! [`request_generation`] covers the plain greedy case;
 //! [`request_generation_with`] exposes sampling/stop knobs via
 //! [`ClientOptions`]; [`request_generation_streaming`] adds a per-token
-//! callback fed from the server's `{"token", "index"}` event lines.
+//! callback fed from the server's `{"token", "index"}` event lines;
+//! [`request_stats`] fetches the server's telemetry snapshot via the
+//! `{"stats": true}` control line (what `tsgo stats HOST:PORT` prints).
 
 use super::sampler::SamplingParams;
 use crate::util::json::Json;
@@ -146,6 +148,27 @@ pub fn request_generation_with(
     reader.read_line(&mut line)?;
     let j = Json::parse(line.trim()).map_err(|e| anyhow::anyhow!("bad response: {e}"))?;
     parse_response(&j)
+}
+
+/// Fetch the server's process-wide telemetry snapshot over the serve
+/// protocol's `{"stats": true}` control line. Returns the raw JSON object
+/// (sections `counters` / `gauges` / `hist` / `trace` — see
+/// `docs/SERVE_API.md` for the schema) so callers pick the fields they
+/// care about; `tsgo stats HOST:PORT` pretty-prints it.
+pub fn request_stats(addr: &str) -> Result<Json> {
+    let mut stream =
+        TcpStream::connect(addr).with_context(|| format!("connect {addr}"))?;
+    stream.write_all(b"{\"stats\": true}\n")?;
+    let mut reader = BufReader::new(stream);
+    let mut line = String::new();
+    if reader.read_line(&mut line)? == 0 {
+        bail!("server closed the connection before answering the stats line");
+    }
+    let j = Json::parse(line.trim()).map_err(|e| anyhow::anyhow!("bad stats line: {e}"))?;
+    if let Some(err) = j.get("error").as_str() {
+        bail!("server error: {err}");
+    }
+    Ok(j)
 }
 
 /// Streaming request: `on_token` fires for every `{"token", "index"}` event

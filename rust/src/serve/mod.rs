@@ -29,7 +29,8 @@ pub use batcher::{
     GenRequest, GenResponse, Pending, RequestQueue, StreamHandle,
 };
 pub use client::{
-    request_generation, request_generation_streaming, request_generation_with, ClientOptions,
+    request_generation, request_generation_streaming, request_generation_with, request_stats,
+    ClientOptions,
 };
 pub use sampler::{Sampler, SamplerChain, SamplingParams, Selector, StopSet};
 pub use sched::{

@@ -93,6 +93,7 @@
 use super::batcher::{BatcherConfig, FinishReason, GenResponse, Pending, RequestQueue};
 use super::sampler::{SamplerChain, StopSet};
 use crate::kvpool::{KvPool, PoolCfg};
+use crate::obs::{self, StepEvent, SOURCE_SCHED};
 use crate::model::{
     decode_head, decode_layer_span, embed_tokens, KvSpec, LayerKv, ModelConfig, ModelExec,
 };
@@ -181,8 +182,10 @@ pub trait StepBackend {
     /// steps have no asynchronous replies.
     fn set_step_timeout(&mut self, _timeout: Duration) {}
     /// `(worker_restarts, pipeline_rebuilds)` this backend has recovered
-    /// from so far — surfaced on every [`GenResponse`] and in the serve
-    /// banner.
+    /// from so far. The scheduler uses the per-step *delta* for trace
+    /// events; the process-lifetime values on [`GenResponse`] come from
+    /// the telemetry registry ([`crate::obs::registry`]), which the
+    /// recovery paths feed directly.
     fn recovery_counts(&self) -> (usize, usize) {
         (0, 0)
     }
@@ -351,6 +354,9 @@ impl StepPool {
             self.workers.push((self.spawn_worker)(id));
             self.restarts += 1;
             spawned += 1;
+        }
+        if spawned > 0 {
+            obs::registry().worker_restarts.add(spawned as u64);
         }
         spawned
     }
@@ -963,13 +969,19 @@ pub fn scheduler_loop(backend: &mut dyn StepBackend, cfg: &BatcherConfig, queue:
                 let need = paused.front().expect("checked non-empty").chain_len();
                 match backend.admit(need) {
                     AdmitVerdict::Slot(slot) => {
+                        obs::registry().admit_slot.inc();
                         let mut r = paused.pop_front().expect("checked non-empty");
                         r.slot = slot;
                         active.push(r);
                     }
-                    AdmitVerdict::Defer => break,
+                    AdmitVerdict::Defer => {
+                        obs::registry().admit_defer.inc();
+                        break;
+                    }
                     AdmitVerdict::Reject(e) => {
                         // The chain outgrew the whole pool while paused.
+                        obs::registry().admit_reject.inc();
+                        obs::registry().finish_error.inc();
                         let r = paused.pop_front().expect("checked non-empty");
                         let _ = r.reply.send(Err(e));
                     }
@@ -1014,7 +1026,6 @@ pub fn scheduler_loop(backend: &mut dyn StepBackend, cfg: &BatcherConfig, queue:
         // `timed_out` set, freeing its slot and pages for the batch.
         if let Some(limit) = cfg.request_timeout {
             let now = Instant::now();
-            let counts = backend.recovery_counts();
             let expired = |enq: Instant| now.saturating_duration_since(enq) >= limit;
             let mut still = Vec::with_capacity(active.len());
             for r in active {
@@ -1027,7 +1038,7 @@ pub fn scheduler_loop(backend: &mut dyn StepBackend, cfg: &BatcherConfig, queue:
                         r.max_new
                     );
                     backend.retire(r.slot);
-                    finish(r, Ok(FinishReason::Timeout), counts);
+                    finish(r, Ok(FinishReason::Timeout));
                 } else {
                     still.push(r);
                 }
@@ -1037,7 +1048,7 @@ pub fn scheduler_loop(backend: &mut dyn StepBackend, cfg: &BatcherConfig, queue:
             for _ in 0..paused.len() {
                 let r = paused.pop_front().expect("iterating current length");
                 if expired(r.enqueued) {
-                    finish(r, Ok(FinishReason::Timeout), counts);
+                    finish(r, Ok(FinishReason::Timeout));
                 } else {
                     paused.push_back(r);
                 }
@@ -1048,6 +1059,7 @@ pub fn scheduler_loop(backend: &mut dyn StepBackend, cfg: &BatcherConfig, queue:
                 let p = waiting.pop_front().expect("iterating current length");
                 if expired(p.enqueued) {
                     queue.settle();
+                    obs::registry().finish_timeout.inc();
                     let _ = p.reply.send(Ok(GenResponse {
                         tokens: Vec::new(),
                         queue_wait: now.saturating_duration_since(p.enqueued),
@@ -1057,8 +1069,8 @@ pub fn scheduler_loop(backend: &mut dyn StepBackend, cfg: &BatcherConfig, queue:
                         kv_pages_used: 0,
                         preemptions: 0,
                         timed_out: true,
-                        worker_restarts: counts.0,
-                        pipeline_rebuilds: counts.1,
+                        worker_restarts: obs::registry().worker_restarts.get() as usize,
+                        pipeline_rebuilds: obs::registry().pipeline_rebuilds.get() as usize,
                         finish_reason: FinishReason::Timeout,
                     }));
                 } else {
@@ -1076,6 +1088,7 @@ pub fn scheduler_loop(backend: &mut dyn StepBackend, cfg: &BatcherConfig, queue:
         }
 
         // -- pool pressure gate: preempt until the step fits ---------------
+        let mut preempted_now = 0u32;
         let jobs = loop {
             let jobs: Vec<StepJob> = active
                 .iter()
@@ -1094,6 +1107,7 @@ pub fn scheduler_loop(backend: &mut dyn StepBackend, cfg: &BatcherConfig, queue:
                 // same wall, so answer it with the error.
                 let r = active.pop().expect("checked non-empty");
                 backend.retire(r.slot);
+                obs::registry().finish_error.inc();
                 let _ = r.reply.send(Err(format!(
                     "kv pool exhausted: this sequence alone needs more pages than \
                      the pool holds ({} tokens cached) — raise --kv-pool-mb",
@@ -1115,6 +1129,8 @@ pub fn scheduler_loop(backend: &mut dyn StepBackend, cfg: &BatcherConfig, queue:
                 );
             }
             backend.preempt(r.slot);
+            obs::registry().preemptions.inc();
+            preempted_now += 1;
             r.pos = 0;
             paused.push_back(r);
         };
@@ -1125,11 +1141,51 @@ pub fn scheduler_loop(backend: &mut dyn StepBackend, cfg: &BatcherConfig, queue:
         // -- one span step for the whole running batch ---------------------
         let bs = active.len();
         let span_lens: Vec<usize> = jobs.iter().map(|j| j.tokens.len()).collect();
+        // Span split for the telemetry plane: a job whose span reaches the
+        // chain end samples one token (decode); every other fed position is
+        // prefill (or post-preemption replay, which is prefill of a longer
+        // chain).
+        let (mut prefill_fed, mut decode_fed) = (0usize, 0usize);
+        for (r, j) in active.iter().zip(&jobs) {
+            if j.end() == r.chain_len() {
+                decode_fed += 1;
+                prefill_fed += j.tokens.len() - 1;
+            } else {
+                prefill_fed += j.tokens.len();
+            }
+        }
+        let recovered_before = backend.recovery_counts();
         let step_start = Instant::now();
         for r in active.iter_mut() {
             r.started.get_or_insert(step_start);
         }
         let results = backend.step(&jobs);
+        // Telemetry for the step just taken: relaxed atomics only — the
+        // registry adds no locks and no allocation to the step hot path
+        // (priced by the `packed_int2_metrics` bench row).
+        let step_dur = step_start.elapsed();
+        let recovered_after = backend.recovery_counts();
+        let reg = obs::registry();
+        reg.steps.inc();
+        reg.prefill_tokens.add(prefill_fed as u64);
+        reg.decode_tokens.add(decode_fed as u64);
+        reg.step_ms.observe(step_dur);
+        reg.running_sequences.set(bs as i64);
+        if let Some((_, total)) = backend.pool_stats() {
+            reg.kv_pages_total.set(total as i64);
+        }
+        reg.trace.record(&StepEvent {
+            seq: 0,
+            source: SOURCE_SCHED,
+            batch: bs as u32,
+            prefill_tokens: prefill_fed as u32,
+            decode_tokens: decode_fed as u32,
+            dur_us: step_dur.as_micros() as u64,
+            preempted: preempted_now,
+            restarts: (recovered_after.0.saturating_sub(recovered_before.0)
+                + recovered_after.1.saturating_sub(recovered_before.1))
+                as u32,
+        });
 
         // -- retire decisions ----------------------------------------------
         let mut still = Vec::with_capacity(bs);
@@ -1145,8 +1201,7 @@ pub fn scheduler_loop(backend: &mut dyn StepBackend, cfg: &BatcherConfig, queue:
                 Advance::Continue => still.push(r),
                 Advance::Done(result) => {
                     backend.retire(r.slot);
-                    let counts = backend.recovery_counts();
-                    finish(r, result, counts);
+                    finish(r, result);
                 }
                 Advance::Cancelled => {
                     println!(
@@ -1221,7 +1276,12 @@ fn admit_request(
     }
     if p.req.max_new == 0 {
         queue.settle();
-        let (worker_restarts, pipeline_rebuilds) = backend.recovery_counts();
+        let reg = obs::registry();
+        reg.finish_length.inc();
+        let (worker_restarts, pipeline_rebuilds) = (
+            reg.worker_restarts.get() as usize,
+            reg.pipeline_rebuilds.get() as usize,
+        );
         let _ = p.reply.send(Ok(GenResponse {
             tokens: Vec::new(),
             queue_wait,
@@ -1250,6 +1310,7 @@ fn admit_request(
     };
     match backend.admit(p.req.prompt.len()) {
         AdmitVerdict::Slot(slot) => {
+            obs::registry().admit_slot.inc();
             queue.settle();
             active.push(Running {
                 slot,
@@ -1273,8 +1334,12 @@ fn admit_request(
         // Deferred requests stay un-settled: they keep occupying their
         // `max_queue` slot, so the front door keeps back-pressuring while
         // the pool is the bottleneck.
-        AdmitVerdict::Defer => Some(p),
+        AdmitVerdict::Defer => {
+            obs::registry().admit_defer.inc();
+            Some(p)
+        }
         AdmitVerdict::Reject(e) => {
+            obs::registry().admit_reject.inc();
             queue.settle();
             let _ = p.reply.send(Err(e));
             None
@@ -1282,7 +1347,7 @@ fn admit_request(
     }
 }
 
-fn finish(r: Running, result: Result<FinishReason, String>, counts: (usize, usize)) {
+fn finish(r: Running, result: Result<FinishReason, String>) {
     // A sequence only finishes after at least one step, so `started` is
     // always stamped by then; the fallbacks are pure defensiveness (and
     // cover a deadline expiry before the first step).
@@ -1291,6 +1356,12 @@ fn finish(r: Running, result: Result<FinishReason, String>, counts: (usize, usiz
     // after (including any post-preemption replay) is decode time. A
     // sequence that errored before its first token has zero decode time.
     let first = r.first_token.unwrap_or_else(Instant::now);
+    // The recovery counters are *process-lifetime* values read off the
+    // telemetry registry at finish time — not per-request deltas, and no
+    // longer per-backend (see docs/SERVE_API.md "counter scope"). The
+    // registry is also where the finish-reason tallies and the per-request
+    // prefill/decode latency histograms accrue.
+    let reg = obs::registry();
     let resp = result.map(|finish_reason| GenResponse {
         tokens: r.out,
         queue_wait: started.saturating_duration_since(r.enqueued),
@@ -1300,10 +1371,18 @@ fn finish(r: Running, result: Result<FinishReason, String>, counts: (usize, usiz
         kv_pages_used: r.kv_pages_peak,
         preemptions: r.preemptions,
         timed_out: finish_reason == FinishReason::Timeout,
-        worker_restarts: counts.0,
-        pipeline_rebuilds: counts.1,
+        worker_restarts: reg.worker_restarts.get() as usize,
+        pipeline_rebuilds: reg.pipeline_rebuilds.get() as usize,
         finish_reason,
     });
+    match &resp {
+        Ok(ok) => {
+            reg.count_finish(ok.finish_reason);
+            reg.request_prefill_ms.observe(ok.prefill_time);
+            reg.request_decode_ms.observe(ok.decode_time);
+        }
+        Err(_) => reg.finish_error.inc(),
+    }
     let _ = r.reply.send(resp);
 }
 

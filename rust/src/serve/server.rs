@@ -19,6 +19,11 @@
 //!             line (whose `tokens` is always the full output, so the
 //!             concatenated events equal it).
 //! Error    : `{"error": "...", "finish_reason": "error"}`
+//! Stats    : `{"stats": true}` → one line with the process-wide telemetry
+//!             snapshot ([`crate::obs::snapshot_json`]): counters, gauges,
+//!             latency histograms (p50/p95/p99) and the recent step trace.
+//!             A control line, not a generation — any other fields on it
+//!             are ignored. `tsgo stats HOST:PORT` pretty-prints it.
 //!
 //! `timed_out` is true when the request hit the server's `--request-timeout`
 //! and returned the tokens generated so far (kept redundantly with
@@ -68,6 +73,15 @@ pub struct ServerConfig {
     /// Server-wide default stop sequences (`tsgo serve --stop`), applied
     /// when a request carries no `stop` field of its own.
     pub default_stop: Vec<Vec<u8>>,
+    /// Prometheus scrape endpoint (`tsgo serve --metrics-addr HOST:PORT`):
+    /// when set, a dedicated listener thread answers `GET /metrics` with
+    /// the text exposition of the process-wide registry
+    /// ([`crate::obs::serve_metrics`]). `None` = no metrics listener; the
+    /// `{"stats": true}` control line works either way. With port 0 the
+    /// kernel picks the port — the banner prints the bound address; callers
+    /// that need it programmatically use [`crate::obs::serve_metrics`]
+    /// directly.
+    pub metrics_addr: Option<String>,
 }
 
 impl Default for ServerConfig {
@@ -78,6 +92,7 @@ impl Default for ServerConfig {
             max_connections: None,
             conn_timeout: Some(Duration::from_secs(120)),
             default_stop: Vec::new(),
+            metrics_addr: None,
         }
     }
 }
@@ -233,6 +248,7 @@ fn handle_stream(
     let handle = match batcher.generate_stream(req) {
         Ok(h) => h,
         Err(e) => {
+            crate::obs::registry().requests_error.inc();
             let line = err_json(&e.to_string());
             return writeln!(writer, "{line}").is_ok();
         }
@@ -253,8 +269,14 @@ fn handle_stream(
     // Events channel closed: the scheduler is done with this request and
     // the final reply is (or is about to be) in flight.
     let line = match handle.wait() {
-        Ok(resp) => response_json(&resp),
-        Err(e) => err_json(&e.to_string()),
+        Ok(resp) => {
+            crate::obs::registry().requests_ok.inc();
+            response_json(&resp)
+        }
+        Err(e) => {
+            crate::obs::registry().requests_error.inc();
+            err_json(&e.to_string())
+        }
     };
     writeln!(writer, "{line}").is_ok()
 }
@@ -278,11 +300,25 @@ fn handle_conn(
         Ok(w) => w,
         Err(_) => return,
     };
+    let reg = crate::obs::registry();
+    reg.connections_total.inc();
+    reg.active_connections.add(1);
     let reader = BufReader::new(stream);
     for line in reader.lines() {
         let Ok(line) = line else { break };
         if line.trim().is_empty() {
             continue;
+        }
+        // `{"stats": true}` is a control line, not a generation: answer
+        // with one telemetry-snapshot line and move on. Checked before
+        // request parsing so it needs no `prompt`.
+        if let Ok(obj) = Json::parse(&line) {
+            if obj.get("stats").as_bool() == Some(true) {
+                if writeln!(writer, "{}", crate::obs::snapshot_json()).is_err() {
+                    break;
+                }
+                continue;
+            }
         }
         // A streaming request takes over the connection until its final
         // response line; everything else stays strict request/response.
@@ -294,20 +330,28 @@ fn handle_conn(
             }
             Ok((req, false)) => {
                 let resp = match batcher.generate(req) {
-                    Ok(r) => response_json(&r),
-                    Err(e) => err_json(&e.to_string()),
+                    Ok(r) => {
+                        reg.requests_ok.inc();
+                        response_json(&r)
+                    }
+                    Err(e) => {
+                        reg.requests_error.inc();
+                        err_json(&e.to_string())
+                    }
                 };
                 if writeln!(writer, "{resp}").is_err() {
                     break;
                 }
             }
             Err(e) => {
+                reg.requests_error.inc();
                 if writeln!(writer, "{}", err_json(&e)).is_err() {
                     break;
                 }
             }
         }
     }
+    reg.active_connections.sub(1);
     let _ = peer; // quiet unused in non-logging builds
 }
 
@@ -322,12 +366,26 @@ pub fn serve<M: ModelExec + Send + Sync + 'static>(
 ) -> Result<()> {
     let listener = TcpListener::bind(&cfg.addr)
         .with_context(|| format!("bind {}", cfg.addr))?;
+    // Metrics listener binds before the batcher spawns so a bad
+    // --metrics-addr fails the whole serve at the door, not after the
+    // worker threads are up.
+    let metrics = match &cfg.metrics_addr {
+        Some(a) => Some(
+            crate::obs::serve_metrics(a)
+                .with_context(|| format!("bind metrics listener {a}"))?,
+        ),
+        None => None,
+    };
     let batcher = Arc::new(DynamicBatcher::spawn(model, cfg.batcher));
     let defaults = ReqDefaults {
         sampling: cfg.batcher.default_sampling,
         stop: cfg.default_stop.clone(),
     };
     println!("tsgo serving on {}", listener.local_addr()?);
+    match metrics {
+        Some(addr) => println!("  metrics: http://{addr}/metrics"),
+        None => println!("  metrics: off"),
+    }
     let mut served = 0usize;
     for stream in listener.incoming() {
         let stream = stream?;
@@ -352,6 +410,10 @@ pub fn serve_in_background<M: ModelExec + Send + Sync + 'static>(
 ) -> Result<(std::net::SocketAddr, std::thread::JoinHandle<()>)> {
     let listener = TcpListener::bind(&cfg.addr)?;
     let addr = listener.local_addr()?;
+    if let Some(a) = &cfg.metrics_addr {
+        crate::obs::serve_metrics(a)
+            .with_context(|| format!("bind metrics listener {a}"))?;
+    }
     let batcher = Arc::new(DynamicBatcher::spawn(model, cfg.batcher));
     let defaults = ReqDefaults {
         sampling: cfg.batcher.default_sampling,

@@ -237,6 +237,7 @@ impl ShardedDecoder {
         self.admitted.clear();
         self.dead = false;
         self.rebuilds += 1;
+        crate::obs::registry().pipeline_rebuilds.inc();
         println!(
             "serve: shard pipeline died — rebuilt the {}-shard chain (rebuild #{}); \
              in-flight sequences on the old chain were errored",
@@ -394,7 +395,7 @@ fn spawn_chain<M: ModelExec + Send + Sync + 'static>(
         let m = model.clone();
         let worker = std::thread::Builder::new()
             .name(format!("tsgo-shard-{s}"))
-            .spawn(move || run_shard(m, lo, hi, kv, sub_pool, this_rx, down))
+            .spawn(move || run_shard(m, s, lo..hi, kv, sub_pool, this_rx, down))
             .expect("spawn shard worker thread");
         workers.push(worker);
     }
@@ -402,17 +403,20 @@ fn spawn_chain<M: ModelExec + Send + Sync + 'static>(
     Chain { input: Some(input_tx), results: res_rx, workers }
 }
 
-/// One shard's worker loop: layers `lo..hi`, plus embedding when `lo == 0`
-/// and the final norm + head when `hi == n_layers`.
+/// One shard's worker loop: layers `layers.start..layers.end`, plus
+/// embedding when the range starts at 0 and the final norm + head when it
+/// ends at `n_layers`. `idx` is the shard's position in the chain, used to
+/// label its telemetry (stage-time histogram + trace events).
 fn run_shard<M: ModelExec>(
     model: Arc<M>,
-    lo: usize,
-    hi: usize,
+    idx: usize,
+    layers: std::ops::Range<usize>,
     kv: KvSpec,
     pool: Option<KvPool>,
     rx: Receiver<Packet>,
     down: Downstream,
 ) {
+    let (lo, hi) = (layers.start, layers.end);
     let cfg = *model.config();
     // slot → the shard-local half of that sequence's KV cache (one LayerKv
     // per layer in `lo..hi`).
@@ -454,6 +458,8 @@ fn run_shard<M: ModelExec>(
         // The unwind drops this shard's channels; the close cascades both
         // ways and the decoder marks itself dead on the next send/recv.
         fault::maybe_panic(FaultPoint::ShardWorkerPanic);
+        let stage_start = std::time::Instant::now();
+        let span_rows = h.rows;
         let Some(kvs) = slots.get_mut(slot).and_then(|s| s.as_mut()) else {
             // A step for an unadmitted/retired slot is a scheduler protocol
             // bug. Dying loudly tears the channel chain down, so the
@@ -473,6 +479,22 @@ fn run_shard<M: ModelExec>(
                 tx.send((slot, decode_head(model.as_ref(), last))).is_ok()
             }
         };
+        // Per-shard stage time: relaxed atomics only, negligible next to
+        // the layer GEMVs it measures. The trace event is labeled with the
+        // shard index so `{"stats": true}` shows where a step's time went.
+        let stage = stage_start.elapsed();
+        let reg = crate::obs::registry();
+        reg.shard_stage_ms.observe(stage);
+        reg.trace.record(&crate::obs::StepEvent {
+            seq: 0,
+            source: idx as u32,
+            batch: 1,
+            prefill_tokens: if span_rows > 1 { span_rows as u32 } else { 0 },
+            decode_tokens: (span_rows == 1) as u32,
+            dur_us: stage.as_micros() as u64,
+            preempted: 0,
+            restarts: 0,
+        });
         if !sent {
             return; // downstream hung up: the pipeline is shutting down
         }

@@ -151,6 +151,91 @@ fn shard_death_rebuilds_the_chain() {
     assert!(r.pipeline_rebuilds >= 1, "rebuild was not counted");
 }
 
+/// Satellite (telemetry): the process-wide registry's recovery counters
+/// move in lockstep with provoked recovery, and the values stamped on
+/// `GenResponse` are readings of that same registry — a worker panic bumps
+/// `worker_restarts`, a shard death bumps `pipeline_rebuilds`, each by the
+/// number of recoveries actually performed. CI's chaos leg runs this
+/// cross-check alongside the containment battery above.
+#[test]
+fn recovery_counters_cross_check_registry() {
+    let _g = serialize();
+    let reg = tsgo::obs::registry();
+
+    // Shard death → pipeline rebuild (works at any pool width).
+    let rebuilds_before = reg.pipeline_rebuilds.get();
+    let m = model(12);
+    let prompt = vec![21u8, 22, 23];
+    let cfg = BatcherConfig {
+        shards: 2,
+        step_timeout: Duration::from_secs(5),
+        faults: Some(FaultPlan::single(FaultPoint::ShardWorkerPanic, 0, 1)),
+        ..Default::default()
+    };
+    let b = DynamicBatcher::spawn(m.clone(), cfg);
+    let _ = b.generate(GenRequest { prompt: prompt.clone(), max_new: 4, ..Default::default() });
+    let r = b
+        .generate(GenRequest { prompt, max_new: 4, ..Default::default() })
+        .expect("rebuilt chain must serve");
+    drop(b);
+    let rebuilds_after = reg.pipeline_rebuilds.get();
+    assert!(
+        rebuilds_after >= rebuilds_before + 1,
+        "provoked shard death did not move the registry ({rebuilds_before} → {rebuilds_after})"
+    );
+    // The response's counter is a registry reading taken at finish time:
+    // it must land inside the window the provoked recovery opened.
+    assert!(
+        (r.pipeline_rebuilds as u64) > rebuilds_before
+            && (r.pipeline_rebuilds as u64) <= rebuilds_after,
+        "GenResponse.pipeline_rebuilds = {} outside registry window ({rebuilds_before}, {rebuilds_after}]",
+        r.pipeline_rebuilds
+    );
+
+    // Worker panic → pool respawn (needs a pool wider than the victim).
+    if !pool_is_wide() {
+        eprintln!("skipping worker-restart leg: step pool would be width 1");
+        return;
+    }
+    let restarts_before = reg.worker_restarts.get();
+    let m = model(13);
+    let cfg = BatcherConfig {
+        max_batch: 2,
+        max_wait: Duration::from_millis(500),
+        step_timeout: Duration::from_secs(5),
+        // 2 jobs/step: evaluations 1-2 prefill, hit 3 panics one worker on
+        // the first decode step.
+        faults: Some(FaultPlan::single(FaultPoint::StepWorkerPanic, 0, 3)),
+        ..Default::default()
+    };
+    let b = Arc::new(DynamicBatcher::spawn(m, cfg));
+    let handles: Vec<_> = [vec![31u8, 32], vec![41u8, 42]]
+        .into_iter()
+        .map(|prompt| {
+            let b = b.clone();
+            std::thread::spawn(move || {
+                b.generate(GenRequest { prompt, max_new: 12, ..Default::default() })
+            })
+        })
+        .collect();
+    let results: Vec<Result<GenResponse, _>> =
+        handles.into_iter().map(|h| h.join().unwrap()).collect();
+    drop(b);
+    let restarts_after = reg.worker_restarts.get();
+    assert!(
+        restarts_after >= restarts_before + 1,
+        "provoked worker panic did not move the registry ({restarts_before} → {restarts_after})"
+    );
+    assert_eq!(results.iter().filter(|r| r.is_err()).count(), 1);
+    for resp in results.into_iter().flatten() {
+        assert!(
+            (resp.worker_restarts as u64) <= restarts_after,
+            "GenResponse.worker_restarts = {} beyond registry value {restarts_after}",
+            resp.worker_restarts
+        );
+    }
+}
+
 /// Satellite: a reply lost in flight (`channel_drop`) must not leak the
 /// sequence's KV-pool pages — the worker releases the bank at the drop
 /// site, the step errors the sequence at the deadline, and after retire

@@ -1,0 +1,209 @@
+//! End-to-end telemetry-plane battery: a live server answers the
+//! `{"stats": true}` control line and a Prometheus scrape, and the
+//! process-wide registry's counters cross-check against the summed
+//! per-request `GenResponse` fields of a multi-client run.
+//!
+//! The registry is process-global (one static per process, like the fault
+//! plane), so every test here serializes on one mutex and asserts *deltas*
+//! (value after minus value before) — exact-equality assertions on the
+//! absolute values would couple the tests to execution order.
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::TcpStream;
+use std::sync::{Arc, Mutex};
+
+use tsgo::model::{ModelWeights, Preset};
+use tsgo::obs::{registry, serve_metrics};
+use tsgo::serve::client::ClientResponse;
+use tsgo::serve::{
+    request_generation, request_stats, server::serve_in_background, ServerConfig,
+};
+use tsgo::util::rng::Rng;
+
+static LOCK: Mutex<()> = Mutex::new(());
+
+fn serialize() -> std::sync::MutexGuard<'static, ()> {
+    LOCK.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+fn model(seed: u64) -> Arc<ModelWeights> {
+    let mut rng = Rng::new(seed);
+    Arc::new(ModelWeights::init(Preset::Tiny.config(), &mut rng))
+}
+
+/// Run `budgets.len()` concurrent clients against a fresh server (one
+/// connection each), plus one `{"stats": true}` connection at the end.
+/// Returns the responses and the parsed stats line.
+fn run_clients(
+    seed: u64,
+    budgets: &[usize],
+) -> (Vec<ClientResponse>, tsgo::util::json::Json) {
+    let cfg = ServerConfig {
+        addr: "127.0.0.1:0".into(),
+        max_connections: Some(budgets.len() + 1),
+        ..Default::default()
+    };
+    let (addr, handle) = serve_in_background(model(seed), cfg).unwrap();
+    let threads: Vec<_> = budgets
+        .iter()
+        .enumerate()
+        .map(|(i, &max_new)| {
+            let addr = addr.to_string();
+            std::thread::spawn(move || {
+                let prompt = [i as u8 + 1, i as u8 + 2, i as u8 + 3];
+                request_generation(&addr, &prompt, max_new).unwrap()
+            })
+        })
+        .collect();
+    let responses: Vec<_> = threads.into_iter().map(|t| t.join().unwrap()).collect();
+    let stats = request_stats(&addr.to_string()).unwrap();
+    handle.join().unwrap();
+    (responses, stats)
+}
+
+/// The spine: counters scraped from the live server equal what the summed
+/// per-request responses imply. `decode_tokens` counts one increment per
+/// emitted token by construction (a span ending at the chain end samples
+/// exactly one token), so its delta must equal the total tokens the
+/// clients received — the invariant that makes the plane trustworthy.
+#[test]
+fn stats_line_cross_checks_summed_responses() {
+    let _g = serialize();
+    let reg = registry();
+    let decode_before = reg.decode_tokens.get();
+    let prefill_before = reg.prefill_tokens.get();
+    let steps_before = reg.steps.get();
+    let length_before = reg.finish_length.get();
+    let ok_before = reg.requests_ok.get();
+    let conns_before = reg.connections_total.get();
+    let step_hist_before = reg.step_ms.snapshot().count;
+    let prefill_hist_before = reg.request_prefill_ms.snapshot().count;
+    let queue_depth_before = reg.queue_depth.get();
+
+    let budgets = [4usize, 5, 6];
+    let (responses, stats) = run_clients(21, &budgets);
+
+    let total_tokens: usize = responses.iter().map(|r| r.tokens.len()).sum();
+    assert_eq!(total_tokens, budgets.iter().sum::<usize>());
+    assert!(responses.iter().all(|r| r.finish_reason == "length"));
+
+    // Counter deltas vs summed responses. Prompts are 3 tokens: the prefill
+    // span's last token is decode-fed (it samples token 1), so each request
+    // contributes prompt_len - 1 = 2 prefill tokens and max_new decode
+    // tokens.
+    assert_eq!(reg.decode_tokens.get() - decode_before, total_tokens as u64);
+    assert_eq!(reg.prefill_tokens.get() - prefill_before, 2 * budgets.len() as u64);
+    assert_eq!(reg.finish_length.get() - length_before, budgets.len() as u64);
+    assert_eq!(reg.requests_ok.get() - ok_before, budgets.len() as u64);
+    // 3 generation connections + 1 stats connection.
+    assert_eq!(reg.connections_total.get() - conns_before, budgets.len() as u64 + 1);
+    // Steps: at best every request shares every step (max budget = 6 steps),
+    // at worst nothing batches (sum of budgets = 15 steps).
+    let steps_delta = reg.steps.get() - steps_before;
+    assert!((6..=15).contains(&steps_delta), "steps delta {steps_delta}");
+    // One histogram observation per step / per finished request.
+    assert_eq!(reg.step_ms.snapshot().count - step_hist_before, steps_delta);
+    assert_eq!(
+        reg.request_prefill_ms.snapshot().count - prefill_hist_before,
+        budgets.len() as u64
+    );
+    // Every request settled: the queue-depth gauge is back where it started.
+    assert_eq!(reg.queue_depth.get(), queue_depth_before);
+
+    // The stats line is a faithful snapshot of the same registry.
+    let counters = stats.get("counters");
+    assert_eq!(
+        counters.get("decode_tokens").as_f64().unwrap() as u64,
+        reg.decode_tokens.get()
+    );
+    assert_eq!(
+        counters.get("requests_ok").as_f64().unwrap() as u64,
+        reg.requests_ok.get()
+    );
+    assert!(stats.get("gauges").get("kv_pages_used").as_f64().is_some());
+    let step_hist = stats.get("hist").get("step_ms");
+    assert!(step_hist.get("count").as_f64().unwrap() >= steps_delta as f64);
+    let (p50, p95, p99) = (
+        step_hist.get("p50_ms").as_f64().unwrap(),
+        step_hist.get("p95_ms").as_f64().unwrap(),
+        step_hist.get("p99_ms").as_f64().unwrap(),
+    );
+    assert!(p50 <= p95 && p95 <= p99, "quantiles out of order: {p50} {p95} {p99}");
+    let trace = stats.get("trace").as_arr().expect("trace array");
+    assert!(!trace.is_empty(), "step trace must have recorded events");
+    // Responses carry the registry's (process-lifetime) recovery counters.
+    for r in &responses {
+        assert!(r.worker_restarts as u64 <= reg.worker_restarts.get());
+        assert!(r.pipeline_rebuilds as u64 <= reg.pipeline_rebuilds.get());
+    }
+}
+
+/// The `--metrics-addr` surface: a raw HTTP GET against the dedicated
+/// listener returns Prometheus text exposition whose counter values match
+/// the registry, with the gauge and histogram families the acceptance
+/// criteria name.
+#[test]
+fn metrics_listener_scrapes_during_serving() {
+    let _g = serialize();
+    // The exact listener `tsgo serve --metrics-addr` spawns (ServerConfig
+    // routes through the same function); port 0 so the test learns the port.
+    let maddr = serve_metrics("127.0.0.1:0").unwrap();
+
+    let budgets = [3usize, 4];
+    let (responses, _) = run_clients(22, &budgets);
+    let total_tokens: usize = responses.iter().map(|r| r.tokens.len()).sum();
+    assert_eq!(total_tokens, 7);
+
+    let mut sock = TcpStream::connect(maddr).unwrap();
+    sock.write_all(b"GET /metrics HTTP/1.0\r\n\r\n").unwrap();
+    let mut raw = String::new();
+    sock.read_to_string(&mut raw).unwrap();
+    assert!(raw.starts_with("HTTP/1.0 200"), "bad status: {}", raw.lines().next().unwrap_or(""));
+    let body = raw.split_once("\r\n\r\n").expect("header/body split").1;
+
+    // Families the acceptance criteria name: queue depth, pool occupancy,
+    // step/prefill/decode histograms, fault-recovery counters.
+    for needle in [
+        "# TYPE tsgo_queue_depth gauge",
+        "# TYPE tsgo_kv_pages_used gauge",
+        "# TYPE tsgo_step_latency_ms histogram",
+        "# TYPE tsgo_request_prefill_ms histogram",
+        "# TYPE tsgo_request_decode_ms histogram",
+        "tsgo_worker_restarts_total",
+        "tsgo_pipeline_rebuilds_total",
+        "tsgo_step_latency_ms_bucket{le=\"+Inf\"}",
+        "tsgo_requests_total{outcome=\"ok\"}",
+    ] {
+        assert!(body.contains(needle), "scrape missing {needle:?}");
+    }
+
+    // Scraped values are the registry's values (nothing steps concurrently
+    // here: the server drained before the scrape, and the lock holds).
+    let reg = registry();
+    let scraped = |name: &str| -> f64 {
+        body.lines()
+            .find(|l| l.starts_with(name) && l.as_bytes().get(name.len()) == Some(&b' '))
+            .unwrap_or_else(|| panic!("no sample line for {name}"))
+            .split_whitespace()
+            .nth(1)
+            .unwrap()
+            .parse()
+            .unwrap()
+    };
+    assert_eq!(scraped("tsgo_steps_total") as u64, reg.steps.get());
+    assert_eq!(scraped("tsgo_decode_tokens_total") as u64, reg.decode_tokens.get());
+    assert_eq!(scraped("tsgo_connections_total") as u64, reg.connections_total.get());
+
+    // Unknown paths 404 without killing the listener.
+    let mut sock = TcpStream::connect(maddr).unwrap();
+    sock.write_all(b"GET /nope HTTP/1.0\r\n\r\n").unwrap();
+    let mut raw = String::new();
+    sock.read_to_string(&mut raw).unwrap();
+    assert!(raw.starts_with("HTTP/1.0 404"), "{raw}");
+    let mut sock = TcpStream::connect(maddr).unwrap();
+    sock.write_all(b"GET /metrics HTTP/1.0\r\n\r\n").unwrap();
+    let mut reader = BufReader::new(sock);
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    assert!(line.starts_with("HTTP/1.0 200"), "listener died after 404: {line}");
+}
